@@ -1,0 +1,95 @@
+//! Regenerates the §VII-C DNN demonstration (MNIST-or-synthetic MLP
+//! 784-72-10): the simulation / uncalibrated / BISC accuracy ladder, plus
+//! ablations the design section motivates:
+//!   * ADC window mapping (calibrated per-layer windows vs default refs)
+//!   * digital residual trim on/off
+//!   * variation-magnitude sweep (where does the paper's 88.7% live?)
+
+use acore_cim::analog::variation::VariationSample;
+use acore_cim::analog::{consts as c, CimAnalogModel};
+use acore_cim::config::SimConfig;
+use acore_cim::coordinator::bisc::{AdcCharacterization, BiscEngine};
+use acore_cim::coordinator::dnn::CimMlp;
+use acore_cim::data::mlp::{train, Mlp, QuantMlp, TrainConfig};
+use acore_cim::util::table::Table;
+
+fn main() {
+    let fast = std::env::var("ACORE_BENCH_FAST").is_ok();
+    let (n_train, n_test, epochs, limit) =
+        if fast { (800, 200, 6, 100) } else { (3000, 600, 12, 300) };
+    let base_cfg = SimConfig::default();
+    let (train_ds, test_ds, source) = acore_cim::data::load_or_synth(n_train, n_test, base_cfg.seed);
+    println!("dataset: {source} ({} train / {} test)", train_ds.len(), test_ds.len());
+
+    let mut mlp = Mlp::new(7);
+    train(&mut mlp, &train_ds, &TrainConfig { epochs, ..Default::default() });
+    let acc_float = mlp.accuracy(&test_ds);
+    let q = QuantMlp::from_float(&mlp, &train_ds, 200);
+
+    // ---- main ladder -----------------------------------------------------
+    let mut cim_mlp = CimMlp::new(q.clone(), &train_ds, 100);
+    let acc_sim = cim_mlp.quant.accuracy_digital(&test_ds);
+    let sample = VariationSample::draw(&base_cfg);
+    let mut die = CimAnalogModel::from_sample(&base_cfg, &sample);
+    let (acc_raw, _) = cim_mlp.accuracy(&mut die, &test_ds, limit);
+    cim_mlp.measure_zero_point(&mut die);
+    let (acc_zp, _) = cim_mlp.accuracy(&mut die, &test_ds, limit);
+    let half = c::V_BIAS - cim_mlp.refs1.0;
+    BiscEngine::calibrate_for_workload(&base_cfg, AdcCharacterization::ideal(), &mut die, half);
+    cim_mlp.clear_corrections();
+    let (acc_bisc_only, _) = cim_mlp.accuracy(&mut die, &test_ds, limit);
+    cim_mlp.measure_digital_trim(&mut die, &base_cfg);
+    let (acc_full, _) = cim_mlp.accuracy(&mut die, &test_ds, limit);
+
+    let mut t = Table::new("§VII-C — DNN accuracy ladder").header(&["configuration", "this repro", "paper"]);
+    t.row_strs(&["float MLP", &pc(acc_float), "-"]);
+    t.row_strs(&["simulation (quantized)", &pc(acc_sim), "94.23%"]);
+    t.row_strs(&["raw uncalibrated", &pc(acc_raw), "-"]);
+    t.row_strs(&["zero-point only ('uncal')", &pc(acc_zp), "88.70%"]);
+    t.row_strs(&["BISC (analog trims only)", &pc(acc_bisc_only), "-"]);
+    t.row_strs(&["BISC + digital residual trim", &pc(acc_full), "92.33%"]);
+    t.print();
+    assert!(acc_full > acc_zp, "calibration must beat the bring-up baseline");
+    assert!(acc_full > acc_sim - 0.08, "calibration recovers to near-sim");
+
+    // ---- ablation: ADC window mapping -----------------------------------
+    let mut naive = CimMlp::new_default_refs(q.clone());
+    let mut die2 = CimAnalogModel::from_sample(&base_cfg, &sample);
+    let (acc_naive_ideal, _) = naive.accuracy(&mut CimAnalogModel::ideal(), &test_ds, limit);
+    naive.measure_zero_point(&mut die2);
+    let (acc_naive, _) = naive.accuracy(&mut die2, &test_ds, limit);
+    let mut t = Table::new("ablation — per-layer ADC windows (dynamic-range management)")
+        .header(&["mapping", "ideal die", "noisy die (zero-point)"]);
+    t.row_strs(&["default full-range refs", &pc(acc_naive_ideal), &pc(acc_naive)]);
+    t.row_strs(&["calibrated windows", &pc(acc_sim), &pc(acc_zp)]);
+    t.print();
+    println!("(full-range refs bury the per-tile MAC in quantization: DESIGN.md §6)\n");
+
+    // ---- ablation: variation magnitude sweep -----------------------------
+    let mut t = Table::new("ablation — accuracy vs variation magnitude").header(&[
+        "sigma scale",
+        "zero-point ('uncal')",
+        "BISC + trim",
+    ]);
+    for scale in [0.25, 0.5, 1.0, 1.5] {
+        let cfg = base_cfg.scaled(scale);
+        let s = VariationSample::draw(&cfg);
+        let mut d = CimAnalogModel::from_sample(&cfg, &s);
+        let mut m = CimMlp::new(q.clone(), &train_ds, 100);
+        m.measure_zero_point(&mut d);
+        let (a_zp, _) = m.accuracy(&mut d, &test_ds, limit);
+        let half = c::V_BIAS - m.refs1.0;
+        BiscEngine::calibrate_for_workload(&cfg, AdcCharacterization::ideal(), &mut d, half);
+        m.clear_corrections();
+        m.measure_digital_trim(&mut d, &cfg);
+        let (a_cal, _) = m.accuracy(&mut d, &test_ds, limit);
+        t.row_strs(&[&format!("{scale:.2}x"), &pc(a_zp), &pc(a_cal)]);
+    }
+    t.print();
+    println!("shape: BISC holds accuracy near simulation across the whole sweep,");
+    println!("while the uncalibrated baseline degrades with variation magnitude.");
+}
+
+fn pc(a: f64) -> String {
+    format!("{:.2}%", a * 100.0)
+}

@@ -1,0 +1,128 @@
+//! Regenerates Fig. 8 (a-e) and Fig. 9:
+//!   (a) uncalibrated MAC outputs across columns,
+//!   (b) extracted per-column gain (g) and offset (eps) errors,
+//!   (c) BISC-calibrated R_SA and V_CAL trim values,
+//!   (d) calibrated MAC outputs,
+//!   (e) residual gain/offset errors after calibration,
+//!   Fig. 9: mean CIM output vs ideal MAC value, uncal vs BISC.
+
+use acore_cim::analog::variation::VariationSample;
+use acore_cim::analog::{consts as c, CimAnalogModel};
+use acore_cim::config::SimConfig;
+use acore_cim::coordinator::bisc::{AdcCharacterization, BiscEngine};
+use acore_cim::util::stats;
+use acore_cim::util::table::{f, Table};
+
+fn mac_outputs(model: &mut CimAnalogModel, x: i32) -> Vec<f64> {
+    model.program(&vec![c::CODE_MAX; c::N_ROWS * c::M_COLS]);
+    model
+        .forward_batch(&vec![x; c::N_ROWS], 1)
+        .iter()
+        .map(|&q| q as f64)
+        .collect()
+}
+
+fn main() {
+    let cfg = SimConfig::default();
+    let sample = VariationSample::draw(&cfg);
+    let mut model = CimAnalogModel::from_sample(&cfg, &sample);
+    let engine = BiscEngine::from_config(&cfg, AdcCharacterization::ideal());
+
+    // (a) uncalibrated MAC outputs at a fixed test MAC value
+    let x_test = 25;
+    let k = c::code_gain_nominal();
+    let mid = c::q_mid_nominal();
+    let nom = mid + k * (x_test as f64 * 63.0 * c::N_ROWS as f64);
+    let uncal_out = mac_outputs(&mut model, x_test);
+
+    // (b) extracted per-column errors (characterization)
+    let before = engine.characterize_only(&mut model);
+
+    // (c) calibration
+    let report = engine.calibrate(&mut model);
+
+    // (d) calibrated outputs, (e) residual errors
+    let cal_out = mac_outputs(&mut model, x_test);
+    let after = engine.characterize_only(&mut model);
+
+    let mut t = Table::new("Fig. 8 — per-column calibration summary").header(&[
+        "col",
+        "(a) uncal Q",
+        "(b) g",
+        "(b) eps",
+        "(c) R_SA' [kOhm]",
+        "(c) V_CAL' [V]",
+        "(d) cal Q",
+        "(e) g resid",
+        "(e) eps resid",
+    ]);
+    for col in 0..c::M_COLS {
+        let g_b = 0.5 * (before[col].0.g_tot + before[col].1.g_tot);
+        let e_b = 0.5 * (before[col].0.eps_tot + before[col].1.eps_tot);
+        let g_a = 0.5 * (after[col].0.g_tot + after[col].1.g_tot);
+        let e_a = 0.5 * (after[col].0.eps_tot + after[col].1.eps_tot);
+        t.row(&[
+            col.to_string(),
+            f(uncal_out[col], 0),
+            f(g_b, 3),
+            f(e_b, 2),
+            f(report.columns[col].rsa_p / 1e3, 2),
+            f(report.columns[col].vcal, 4),
+            f(cal_out[col], 0),
+            f(g_a, 3),
+            f(e_a, 2),
+        ]);
+    }
+    t.print();
+    println!("nominal Q at the test vector: {nom:.1}");
+
+    // summary stats (the figure's visual claim in numbers)
+    let spread = |o: &[f64]| stats::max(o) - stats::min(o);
+    let g_before: Vec<f64> = before.iter().map(|(p, n)| 0.5 * (p.g_tot + n.g_tot)).collect();
+    let g_after: Vec<f64> = after.iter().map(|(p, n)| 0.5 * (p.g_tot + n.g_tot)).collect();
+    let e_before: Vec<f64> = before.iter().map(|(p, n)| 0.5 * (p.eps_tot + n.eps_tot)).collect();
+    let e_after: Vec<f64> = after.iter().map(|(p, n)| 0.5 * (p.eps_tot + n.eps_tot)).collect();
+    println!(
+        "column spread at test vector: {:.1} codes uncal -> {:.1} codes cal",
+        spread(&uncal_out),
+        spread(&cal_out)
+    );
+    println!(
+        "gain errors: {:.3} +/- {:.3} -> {:.3} +/- {:.3}",
+        stats::mean(&g_before),
+        stats::std_dev(&g_before),
+        stats::mean(&g_after),
+        stats::std_dev(&g_after)
+    );
+    println!(
+        "offset errors [LSB]: {:.2} +/- {:.2} -> {:.2} +/- {:.2}",
+        stats::mean(&e_before),
+        stats::std_dev(&e_before),
+        stats::mean(&e_after),
+        stats::std_dev(&e_after)
+    );
+    assert!(spread(&cal_out) < spread(&uncal_out));
+    assert!(stats::std_dev(&g_after) < stats::std_dev(&g_before) * 0.5);
+
+    // ---- Fig. 9: spatial variation across the MAC range -----------------
+    let mut uncal_model = CimAnalogModel::from_sample(&cfg, &sample);
+    let mut t = Table::new("Fig. 9 — mean CIM output vs ideal MAC value").header(&[
+        "x code",
+        "ideal Q",
+        "uncal mean (min..max)",
+        "BISC mean (min..max)",
+    ]);
+    for x in (-48..=48).step_by(16) {
+        let nom = mid + k * (x as f64 * 63.0 * c::N_ROWS as f64);
+        let u = mac_outputs(&mut uncal_model, x);
+        let cal = mac_outputs(&mut model, x);
+        t.row(&[
+            x.to_string(),
+            f(nom, 1),
+            format!("{:.1} ({:.0}..{:.0})", stats::mean(&u), stats::min(&u), stats::max(&u)),
+            format!("{:.1} ({:.0}..{:.0})", stats::mean(&cal), stats::min(&cal), stats::max(&cal)),
+        ]);
+    }
+    t.print();
+    println!("shape: BISC curve hugs the ideal column; uncal shows offset + spread");
+}

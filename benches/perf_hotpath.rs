@@ -1,0 +1,156 @@
+//! Performance benchmarks for the hot paths (EXPERIMENTS.md §Perf):
+//!   L3 golden per-cell path vs folded fast path (analog model),
+//!   PJRT artifact throughput vs batch size (per-sample amortization),
+//!   RV32IM ISS instruction rate,
+//!   BISC calibration wall time,
+//!   batcher request throughput.
+
+use acore_cim::analog::variation::VariationSample;
+use acore_cim::analog::{consts as c, CimAnalogModel};
+use acore_cim::config::SimConfig;
+use acore_cim::coordinator::bisc::{AdcCharacterization, BiscEngine};
+use acore_cim::soc::memmap::{map, Soc};
+use acore_cim::soc::riscv::asm::Asm;
+use acore_cim::util::bench::Bencher;
+use acore_cim::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    let cfg = SimConfig::default();
+    let sample = VariationSample::draw(&cfg);
+    let mut rng = Rng::new(42);
+    let weights: Vec<i32> = (0..c::N_ROWS * c::M_COLS)
+        .map(|_| rng.int_in(-63, 63) as i32)
+        .collect();
+
+    println!("== L3 analog model ==");
+    let mut model = CimAnalogModel::from_sample(&cfg, &sample);
+    model.program(&weights);
+    let x1: Vec<i32> = (0..c::N_ROWS).map(|_| rng.int_in(-63, 63) as i32).collect();
+    b.bench("golden per-cell forward (1 vec)", || model.forward_golden(&x1));
+    let x256: Vec<i32> = (0..256 * c::N_ROWS).map(|_| rng.int_in(-63, 63) as i32).collect();
+    let r256 = b.bench("folded fast path (batch 256)", || model.forward_batch(&x256, 256)).clone();
+    let evals_per_sec = r256.per_sec() * 256.0;
+    println!("   => {:.2} M array-evals/s on the folded path", evals_per_sec / 1e6);
+    let r1 = b.bench("folded fast path (batch 1)", || model.forward_batch(&x1, 1)).clone();
+    println!(
+        "   => batching gain: {:.1}x per-eval",
+        r1.median_ns / (r256.median_ns / 256.0)
+    );
+
+    println!("\n== L1/L2 PJRT artifact (compiled JAX/Pallas) ==");
+    match acore_cim::runtime::Executor::discover() {
+        Ok(exec) => {
+            let mut rt = acore_cim::runtime::CimRuntime::new(exec, sample.clone());
+            rt.program(&weights);
+            // warm the compile caches outside the timed region
+            let _ = rt.forward_batch(&x1, 1).unwrap();
+            let _ = rt.forward_batch(&x256, 256).unwrap();
+            let rb1 =
+                b.bench("pjrt cim_mac (batch 1)", || rt.forward_batch(&x1, 1).unwrap()).clone();
+            let rb256 = b
+                .bench("pjrt cim_mac (batch 256)", || rt.forward_batch(&x256, 256).unwrap())
+                .clone();
+            println!(
+                "   => per-eval: {:.1} us (b1) vs {:.2} us (b256) — batching {:.0}x",
+                rb1.median_ns / 1e3,
+                rb256.median_ns / 1e3 / 256.0,
+                rb1.median_ns / (rb256.median_ns / 256.0)
+            );
+        }
+        Err(e) => println!("skipping PJRT benches: {e}"),
+    }
+
+    println!("\n== DNN inference (tile scheduler) ==");
+    {
+        use acore_cim::coordinator::dnn::CimMlp;
+        use acore_cim::data::mlp::{train, Mlp, QuantMlp, TrainConfig};
+        let (train_ds, test_ds) = acore_cim::data::synth::generate(400, 50, 3);
+        let mut mlp = Mlp::new(1);
+        train(&mut mlp, &train_ds, &TrainConfig { epochs: 3, ..Default::default() });
+        let q = QuantMlp::from_float(&mlp, &train_ds, 50);
+        let cim_mlp = CimMlp::new(q, &train_ds, 30);
+        let mut cfg2 = cfg.clone();
+        cfg2.sigma_noise = 0.0;
+        let mut die = CimAnalogModel::from_sample(&cfg2, &sample);
+        let img = test_ds.image(0).to_vec();
+        let rd = b
+            .bench("infer, direct (program+fold per tile)", || {
+                let mut st = Default::default();
+                cim_mlp.infer(&mut die, &img, &mut st)
+            })
+            .clone();
+        let prepared = cim_mlp.prepare(&mut die);
+        let rp = b
+            .bench("infer, prepared (cached folded tiles)", || {
+                let mut st = Default::default();
+                cim_mlp.infer_prepared(&die, &prepared, &img, &mut st)
+            })
+            .clone();
+        println!(
+            "   => prepared schedule speedup: {:.1}x ({:.0} -> {:.0} inf/s)",
+            rd.median_ns / rp.median_ns,
+            rd.per_sec(),
+            rp.per_sec()
+        );
+    }
+
+    println!("\n== RV32IM ISS ==");
+    // tight arithmetic loop: ~4 instr/iteration
+    let mut soc = Soc::new(CimAnalogModel::ideal());
+    let mut a = Asm::new(map::ENTRY);
+    a.li(5, 2_000_000);
+    a.label("spin");
+    a.addi(6, 6, 1);
+    a.addi(5, 5, -1);
+    a.bne(5, 0, "spin");
+    a.li(10, 0);
+    a.exit();
+    soc.load_program(&a.assemble());
+    let r = b.bench_n("ISS: 6M-instruction loop", 5, || {
+        soc.cpu.pc = map::ENTRY;
+        soc.cpu.regs = [0; 32];
+        soc.cpu.regs[2] = map::STACK_TOP;
+        soc.run(10_000_000)
+    });
+    let mips = 6.0e6 / (r.median_ns / 1e9) / 1e6;
+    println!("   => {mips:.0} MIPS");
+
+    println!("\n== BISC calibration wall time (host engine) ==");
+    let engine = BiscEngine::from_config(&cfg, AdcCharacterization::ideal());
+    let r = b.bench_n("BISC full-array calibrate", 5, || {
+        let mut m = CimAnalogModel::from_sample(&cfg, &sample);
+        engine.calibrate(&mut m)
+    });
+    println!("   => {:.1} ms per full calibration", r.median_ns / 1e6);
+
+    println!("\n== batcher ==");
+    use acore_cim::coordinator::batcher::{Batcher, MacRequest};
+    use std::sync::mpsc::channel;
+    let r = b.bench_n("batched serving: 2000 requests", 5, || {
+        let (tx, rx) = channel::<MacRequest>();
+        let cfg2 = cfg.clone();
+        let s2 = sample.clone();
+        let worker = std::thread::spawn(move || {
+            let mut m = CimAnalogModel::from_sample(&cfg2, &s2);
+            m.program(&vec![40; c::N_ROWS * c::M_COLS]);
+            Batcher::default().run(rx, &mut m)
+        });
+        let mut replies = Vec::new();
+        for i in 0..2000 {
+            let (rtx, rrx) = channel();
+            tx.send(MacRequest { x: vec![(i % 63) as i32 - 31; c::N_ROWS], reply: rtx })
+                .unwrap();
+            replies.push(rrx);
+        }
+        for rr in replies {
+            rr.recv().unwrap();
+        }
+        drop(tx);
+        worker.join().unwrap()
+    });
+    println!(
+        "   => {:.0}k requests/s through the batcher",
+        2000.0 / (r.median_ns / 1e9) / 1e3
+    );
+}

@@ -1,0 +1,53 @@
+//! Regenerates Table I (MWC with polysilicon / MOR / WOx / RRAM) and the
+//! Fig. 2(c) SoC power distribution, with paper-vs-model columns.
+
+use acore_cim::analog::power::{self, technologies, PowerBreakdown};
+use acore_cim::util::table::{eng, f, Table};
+
+fn main() {
+    let techs = technologies();
+    let base = techs[0].clone();
+
+    let mut t = Table::new("Table I — performance with various resistive technologies").header(&[
+        "technology",
+        "R_U",
+        "unit current (model)",
+        "unit current (paper)",
+        "area improv. (model/paper)",
+        "power improv. (model/paper)",
+    ]);
+    let paper_current = ["2.6 uA", "0.15 uA", "0.036 uA", "33 uA"];
+    let paper_area = ["baseline", "14x", "14x", "225x"];
+    let paper_power = ["baseline", "17x", "70x", "0.08x"];
+    for (i, tech) in techs.iter().enumerate() {
+        let ai = tech.area_improvement(&base);
+        let pi = tech.power_improvement(&base);
+        t.row(&[
+            tech.name.to_string(),
+            eng(tech.r_u, "Ohm"),
+            eng(tech.unit_current(), "A"),
+            paper_current[i].to_string(),
+            if i == 0 { "baseline".into() } else { format!("{:.0}x / {}", ai, paper_area[i]) },
+            if i == 0 { "baseline".into() } else { format!("{:.2}x / {}", pi, paper_power[i]) },
+        ]);
+    }
+    t.print();
+
+    let b = PowerBreakdown::prototype();
+    let total = b.total();
+    let mut t = Table::new("Fig. 2(c) — power distribution of the SoC prototype").header(&[
+        "component",
+        "power [mW]",
+        "share [%]",
+    ]);
+    for (name, p) in &b.components {
+        t.row(&[name.to_string(), f(p * 1e3, 2), f(p / total * 100.0, 1)]);
+    }
+    t.print();
+    println!(
+        "macro {:.1} mW / system {:.1} mW; energy per inference {:.1} nJ (paper: 16.9 nJ)",
+        b.macro_power() * 1e3,
+        total * 1e3,
+        power::macro_metrics().energy_per_inference * 1e9
+    );
+}

@@ -1,0 +1,115 @@
+//! Regenerates Table II ("This SoC" column) and the Alg. 1 overhead row:
+//! normalized throughput / energy efficiency / area efficiency at macro and
+//! system level — with the system slowdown MEASURED on the RISC-V ISS
+//! (input writes + MAC + output reads over AXI4-Lite), not assumed.
+
+use acore_cim::analog::variation::VariationSample;
+use acore_cim::analog::{consts as c, power, CimAnalogModel};
+use acore_cim::config::SimConfig;
+use acore_cim::coordinator::bisc::AdcCharacterization;
+use acore_cim::coordinator::cim_core::regs;
+use acore_cim::soc::firmware;
+use acore_cim::soc::memmap::{map, Soc};
+use acore_cim::soc::riscv::asm::Asm;
+use acore_cim::soc::riscv::cpu::Halt;
+use acore_cim::util::table::{f, Table};
+
+/// Measure CPU cycles per complete MAC transaction on the ISS.
+fn measure_system_slowdown() -> f64 {
+    let mut soc = Soc::new(CimAnalogModel::ideal());
+    soc.cim_mut().program_weights(&vec![20; c::N_ROWS * c::M_COLS]);
+    let k_macs = 200;
+    let mut a = Asm::new(map::ENTRY);
+    a.li(5, map::CIM_BASE as i32);
+    a.li(9, k_macs);
+    a.label("mac_loop");
+    a.li(6, 17);
+    a.li(7, 0);
+    a.li(28, (map::CIM_BASE + regs::INPUT) as i32);
+    a.label("in_loop");
+    a.sw(28, 6, 0);
+    a.addi(28, 28, 4);
+    a.addi(7, 7, 1);
+    a.li(31, c::N_ROWS as i32);
+    a.blt(7, 31, "in_loop");
+    a.li(6, 1);
+    a.sw(5, 6, regs::CTRL as i32);
+    a.li(7, 0);
+    a.li(28, (map::CIM_BASE + regs::OUT) as i32);
+    a.label("out_loop");
+    a.lw(6, 28, 0);
+    a.add(29, 29, 6);
+    a.addi(28, 28, 4);
+    a.addi(7, 7, 1);
+    a.li(31, c::M_COLS as i32);
+    a.blt(7, 31, "out_loop");
+    a.addi(9, 9, -1);
+    a.bne(9, 0, "mac_loop");
+    a.li(10, 0);
+    a.exit();
+    soc.load_program(&a.assemble());
+    assert_eq!(soc.run(100_000_000), Halt::Exit(0));
+    // CPU runs at 50 MHz while the array's MAC takes one 1-us S&H period
+    // (50 CPU cycles); slowdown = total cycles per MAC / cycles per bare MAC
+    let cycles_per_mac = soc.cpu.cycles as f64 / k_macs as f64;
+    let sh_in_cpu_cycles = 50.0; // 1 us at 50 MHz
+    (cycles_per_mac + sh_in_cpu_cycles) / sh_in_cpu_cycles
+}
+
+fn main() {
+    let slowdown = measure_system_slowdown();
+    println!("measured system slowdown on the ISS: {slowdown:.1}x (paper implies ~37x)\n");
+
+    let macro_m = power::macro_metrics();
+    let sys_m = power::system_metrics(slowdown);
+
+    let mut t = Table::new("Table II — This SoC").header(&["metric", "macro (model/paper)", "system (model/paper)"]);
+    t.row_strs(&[
+        "norm. throughput [1b-GOPS]",
+        &format!("{} / 113", f(macro_m.norm_throughput_gops, 1)),
+        &format!("{} / 3.05", f(sys_m.norm_throughput_gops, 2)),
+    ]);
+    t.row_strs(&[
+        "norm. energy eff. [1b-TOPS/W]",
+        &format!("{} / 6.65", f(macro_m.norm_energy_eff, 2)),
+        &format!("{} / 0.122", f(sys_m.norm_energy_eff, 3)),
+    ]);
+    t.row_strs(&[
+        "norm. area eff. [1b-TOPS/mm^2]",
+        &format!("{} / 0.155", f(macro_m.norm_area_eff, 3)),
+        &format!("{} / -", f(sys_m.norm_area_eff, 4)),
+    ]);
+    t.row_strs(&[
+        "energy / inference cycle",
+        &format!("{:.1} nJ / 16.9 nJ", macro_m.energy_per_inference * 1e9),
+        "-",
+    ]);
+    t.row_strs(&["precision (I:W:O)", "7:7:6 / 7:7:6", "-"]);
+    t.row_strs(&["inference frequency", "1 MHz / 1 MHz", "-"]);
+    t.print();
+
+    // ---- Alg. 1 overhead (calibration features row of Table II) ---------
+    let mut cfg = SimConfig::default();
+    cfg.sigma_noise = 0.0;
+    let sample = VariationSample::draw(&cfg);
+    let mut soc = Soc::new(CimAnalogModel::from_sample(&cfg, &sample));
+    soc.load_program(&firmware::bisc_program());
+    soc.write_words(
+        map::PARAM_BLOCK,
+        &firmware::bisc_param_block(&cfg, AdcCharacterization::ideal()),
+    );
+    assert_eq!(soc.run(1_000_000_000), Halt::Exit(0));
+    let cycles = soc.cpu.cycles;
+    let sh = soc.cim_mut().busy_sh_periods();
+    let wall_ms = (cycles as f64 / 50e6 + sh as f64 * c::T_SH) * 1e3;
+    let mut t = Table::new("BISC overhead (Alg. 1, on-chip)").header(&["metric", "value"]);
+    t.row_strs(&["RISC-V instructions", &soc.cpu.instret.to_string()]);
+    t.row_strs(&["characterization MAC reads", &sh.to_string()]);
+    t.row_strs(&["latency @ 50 MHz", &format!("{wall_ms:.2} ms")]);
+    t.row_strs(&[
+        "area overhead",
+        "trim DACs + digi-pots only (reuses compute path)",
+    ]);
+    t.print();
+    assert!(wall_ms < 1000.0);
+}

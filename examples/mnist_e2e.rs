@@ -1,0 +1,105 @@
+//! End-to-end DNN driver (paper §VII-C) — the full-system validation run:
+//! train a 784-72-10 MLP (on MNIST if `data/mnist/` exists, else the
+//! synthetic digit set), quantize to 6+1-bit codes, map onto the 36x32
+//! array (22x3 + 2x1 tiles), and measure the accuracy ladder
+//! simulation -> uncalibrated silicon -> BISC-calibrated silicon,
+//! with the hot MAC path OPTIONALLY routed through the AOT-compiled
+//! JAX/Pallas artifact on PJRT (--pjrt) instead of the rust golden model.
+//!
+//! Run: cargo run --release --example mnist_e2e [-- --pjrt]
+//! The results are recorded in EXPERIMENTS.md §VII-C.
+
+use acore_cim::analog::variation::VariationSample;
+use acore_cim::analog::{consts as c, CimAnalogModel};
+use acore_cim::config::SimConfig;
+use acore_cim::coordinator::bisc::{AdcCharacterization, BiscEngine};
+use acore_cim::coordinator::dnn::CimMlp;
+use acore_cim::data::mlp::{train, Mlp, QuantMlp, TrainConfig};
+use acore_cim::util::table::Table;
+
+fn main() {
+    let use_pjrt = std::env::args().any(|a| a == "--pjrt");
+    let cfg = SimConfig::default();
+    let (train_ds, test_ds, source) = acore_cim::data::load_or_synth(4000, 800, cfg.seed);
+    println!("dataset: {source} ({} train / {} test)", train_ds.len(), test_ds.len());
+
+    // train the float MLP (paper baseline ~94%)
+    let mut mlp = Mlp::new(7);
+    let t0 = std::time::Instant::now();
+    train(&mut mlp, &train_ds, &TrainConfig { epochs: 14, ..Default::default() });
+    let acc_float = mlp.accuracy(&test_ds);
+    println!("float MLP trained in {:.1} s, test acc {:.4}", t0.elapsed().as_secs_f64(), acc_float);
+
+    let q = QuantMlp::from_float(&mlp, &train_ds, 300);
+    let mut cim_mlp = CimMlp::new(q, &train_ds, 150);
+    let acc_sim = cim_mlp.quant.accuracy_digital(&test_ds);
+
+    // the silicon
+    let sample = VariationSample::draw(&cfg);
+    let mut die = CimAnalogModel::from_sample(&cfg, &sample);
+    let limit = 400;
+    let (acc_raw, _) = cim_mlp.accuracy(&mut die, &test_ds, limit);
+    cim_mlp.measure_zero_point(&mut die);
+    let (acc_zp, _) = cim_mlp.accuracy(&mut die, &test_ds, limit);
+
+    // BISC + digital residual trim
+    let half = c::V_BIAS - cim_mlp.refs1.0;
+    BiscEngine::calibrate_for_workload(&cfg, AdcCharacterization::ideal(), &mut die, half);
+    cim_mlp.clear_corrections();
+    cim_mlp.measure_digital_trim(&mut die, &cfg);
+    let t1 = std::time::Instant::now();
+    let (acc_cal, stats) = cim_mlp.accuracy(&mut die, &test_ds, limit);
+    let dt = t1.elapsed().as_secs_f64();
+
+    let mut t = Table::new("accuracy ladder (paper §VII-C)")
+        .header(&["configuration", "this repro", "paper"]);
+    t.row_strs(&["float MLP", &format!("{:.2}%", acc_float * 100.0), "-"]);
+    t.row_strs(&["simulation (quantized)", &format!("{:.2}%", acc_sim * 100.0), "94.23%"]);
+    t.row_strs(&["raw uncalibrated", &format!("{:.2}%", acc_raw * 100.0), "-"]);
+    t.row_strs(&["zero-point only ('uncal')", &format!("{:.2}%", acc_zp * 100.0), "88.70%"]);
+    t.row_strs(&["BISC calibrated", &format!("{:.2}%", acc_cal * 100.0), "92.33%"]);
+    t.print();
+    println!(
+        "throughput: {limit} inferences in {dt:.2} s ({:.1} inf/s host wall-clock); \
+         {} MAC pulses ({} per inference)",
+        limit as f64 / dt,
+        stats.mac_ops,
+        stats.mac_ops / limit as u64
+    );
+    println!(
+        "modelled chip time: {} MAC pulses x 1 us = {:.1} ms of S&H time",
+        stats.mac_ops,
+        stats.mac_ops as f64 * c::T_SH * 1e3
+    );
+
+    // optional: run a batch through the PJRT artifact to prove the same
+    // numbers come out of the compiled JAX/Pallas path
+    if use_pjrt {
+        use acore_cim::runtime::{CimRuntime, Executor};
+        println!("\n--pjrt: cross-checking a weight tile on the PJRT artifact ...");
+        let exec = Executor::discover().expect("run `make artifacts`");
+        println!("PJRT platform: {}", exec.platform());
+        let mut rt = CimRuntime::new(exec, sample.clone());
+        // mirror the die's calibrated trim state into the runtime
+        for col in 0..c::M_COLS {
+            let amp = &die.amps[col];
+            rt.trims.pot_p[col] = amp.pot_p;
+            rt.trims.pot_n[col] = amp.pot_n;
+            rt.trims.cal[col] = amp.cal;
+        }
+        let tile = &cim_mlp.layer1.tiles[0][0];
+        rt.program(tile);
+        die.program(tile);
+        die.set_adc_refs(c::V_ADC_L, c::V_ADC_H);
+        let x: Vec<i32> = (0..8 * c::N_ROWS).map(|i| (i % 64) as i32 - 32).collect();
+        let q_rt = rt.forward_batch(&x, 8).unwrap();
+        let q_gold = die.forward_batch(&x, 8);
+        let diffs = q_rt.iter().zip(&q_gold).filter(|(a, b)| a != b).count();
+        println!(
+            "PJRT vs golden model: {}/{} codes differ (<= rounding ties)",
+            diffs,
+            q_rt.len()
+        );
+        assert!(diffs < q_rt.len() / 20);
+    }
+}

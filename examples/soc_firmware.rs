@@ -1,0 +1,86 @@
+//! SoC-level demo: the BISC routine running as RV32IM *firmware* on the
+//! instruction-set simulator, driving the CIM core through memory-mapped
+//! AXI4-Lite registers — the paper's "automated RISC-V controlled
+//! self-calibration" made literal (Section VI / Algorithm 1).
+//!
+//! Run: cargo run --release --example soc_firmware
+
+use acore_cim::analog::variation::VariationSample;
+use acore_cim::analog::{consts as c, CimAnalogModel};
+use acore_cim::config::SimConfig;
+use acore_cim::coordinator::bisc::AdcCharacterization;
+use acore_cim::soc::firmware;
+use acore_cim::soc::memmap::{map, Soc};
+use acore_cim::soc::riscv::cpu::Halt;
+use acore_cim::util::table::{f, Table};
+
+fn mean_abs_error(soc: &mut Soc) -> f64 {
+    let dev = soc.cim_mut();
+    dev.program_weights(&vec![c::CODE_MAX; c::N_ROWS * c::M_COLS]);
+    let k = c::code_gain_nominal();
+    let mid = c::q_mid_nominal();
+    let mut err = 0.0;
+    for x in [-40i32, -20, 0, 20, 40] {
+        let q = dev.model.forward_batch(&vec![x; c::N_ROWS], 1);
+        let nom = mid + k * (x as f64 * 63.0 * c::N_ROWS as f64);
+        for col in 0..c::M_COLS {
+            err += (q[col] as f64 - nom).abs();
+        }
+    }
+    err / (5.0 * c::M_COLS as f64)
+}
+
+fn main() {
+    let mut cfg = SimConfig::default();
+    cfg.sigma_noise = 0.0; // keep the demo deterministic
+    let sample = VariationSample::draw(&cfg);
+    let mut soc = Soc::new(CimAnalogModel::from_sample(&cfg, &sample));
+
+    let img = firmware::bisc_program();
+    println!(
+        "BISC firmware: {} RV32IM instructions ({} bytes)",
+        img.len() / 4,
+        img.len()
+    );
+    let before = mean_abs_error(&mut soc);
+
+    soc.load_program(&img);
+    soc.write_words(
+        map::PARAM_BLOCK,
+        &firmware::bisc_param_block(&cfg, AdcCharacterization::ideal()),
+    );
+    let halt = soc.run(1_000_000_000);
+    assert_eq!(halt, Halt::Exit(0), "firmware crashed: {halt:?}");
+    let after = mean_abs_error(&mut soc);
+
+    let (instret, cycles) = (soc.cpu.instret, soc.cpu.cycles);
+    let (rd, wr) = (soc.bus.reads, soc.bus.writes);
+    let sh = soc.cim_mut().busy_sh_periods();
+
+    let mut t = Table::new("RISC-V controlled BISC (Alg. 1 on the ISS)")
+        .header(&["metric", "value"]);
+    t.row_strs(&["instructions retired", &instret.to_string()]);
+    t.row_strs(&["CPU cycles", &cycles.to_string()]);
+    t.row_strs(&["AXI4-Lite reads / writes", &format!("{rd} / {wr}")]);
+    t.row_strs(&["analog S&H periods", &sh.to_string()]);
+    t.row_strs(&[
+        "SoC latency @50 MHz",
+        &format!("{:.2} ms", (cycles as f64 / 50e6 + sh as f64 * c::T_SH) * 1e3),
+    ]);
+    t.row_strs(&["mean |MAC error| before", &format!("{} codes", f(before, 2))]);
+    t.row_strs(&["mean |MAC error| after", &format!("{} codes", f(after, 2))]);
+    t.print();
+    assert!(after < before * 0.5);
+
+    // show a couple of per-column trims the firmware chose
+    println!("per-column trims chosen by the firmware (first 6 columns):");
+    for col in 0..6 {
+        let amp = &soc.cim_mut().model.amps[col];
+        let (p, n, cal, rsa, vcal) =
+            (amp.pot_p, amp.pot_n, amp.cal, amp.rsa_p(), amp.vcal());
+        println!(
+            "  col {col}: POT_P={p} POT_N={n} CAL={cal} -> R_SA={:.0} Ohm, V_CAL={:.4} V",
+            rsa, vcal
+        );
+    }
+}

@@ -1,0 +1,75 @@
+//! Technology exploration (paper Section IV-B / Table I): evaluate the
+//! MWC computing element with polysilicon (baseline), MOR, WOx HDLR, and
+//! RRAM resistive technologies, and the 128x128-array extension the paper
+//! projects for HDLR post-processing.
+//!
+//! Run: cargo run --release --example technology_explorer
+
+use acore_cim::analog::power::{self, technologies};
+use acore_cim::util::table::{eng, f, Table};
+
+fn main() {
+    let techs = technologies();
+    let base = techs[0].clone();
+
+    let mut t = Table::new("Table I — MWC with various resistive technologies").header(&[
+        "technology",
+        "R_U",
+        "MWC area 1b-6b [um^2]",
+        "unit current",
+        "area improv.",
+        "power improv.",
+    ]);
+    for tech in &techs {
+        let (ai, pi) = (
+            tech.area_improvement(&base),
+            tech.power_improvement(&base),
+        );
+        t.row(&[
+            tech.name.to_string(),
+            eng(tech.r_u, "Ohm"),
+            format!("{} - {}", tech.area_1b_um2, tech.area_6b_um2),
+            eng(tech.unit_current(), "A"),
+            if tech.name == base.name { "baseline".into() } else { format!("{:.0}x", ai) },
+            if tech.name == base.name { "baseline".into() } else { format!("{:.2}x", pi) },
+        ]);
+    }
+    t.print();
+    println!("paper Table I: MOR 14x/17x, WOx 14x/70x, RRAM 225x/0.08x\n");
+
+    // HDLR extension: 128x128 MWC array in the same 0.14 mm^2 footprint
+    let mor = &techs[1];
+    let cells = 128.0 * 128.0;
+    let area_mm2 = cells * mor.area_6b_um2 / 1e6 * 1.1; // 10% routing overhead
+    let power_w = cells * mor.unit_current() * 0.5 * 0.8; // half-scale codes, 0.8 V
+    println!(
+        "HDLR extension (Section IV-B): 128x128 MOR array = {:.3} mm^2 (paper: ~0.14 mm^2), \
+         array power {:.2} mW, {:.0}x more MACs/cycle than the 36x32 prototype",
+        area_mm2,
+        power_w * 1e3,
+        cells / (36.0 * 32.0)
+    );
+
+    // Fig. 2(c): power distribution of the prototype SoC
+    let breakdown = power::PowerBreakdown::prototype();
+    let total = breakdown.total();
+    let mut t = Table::new("Fig. 2(c) — SoC power distribution").header(&[
+        "component",
+        "power [mW]",
+        "share",
+    ]);
+    for (name, p) in &breakdown.components {
+        t.row(&[
+            name.to_string(),
+            f(p * 1e3, 2),
+            format!("{:.1}%", p / total * 100.0),
+        ]);
+    }
+    t.row_strs(&["TOTAL", &format!("{:.2}", total * 1e3), "100%"]);
+    t.print();
+    println!(
+        "macro power {:.1} mW -> {:.1} nJ per 1-us inference cycle (paper: 16.9 nJ)",
+        breakdown.macro_power() * 1e3,
+        breakdown.macro_power() * acore_cim::analog::consts::T_SH * 1e9
+    );
+}

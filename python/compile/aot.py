@@ -1,0 +1,143 @@
+"""AOT lowering: JAX model -> HLO *text* artifacts for the rust runtime.
+
+HLO text (NOT `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the `xla` rust crate v0.1.6) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts (shapes are baked into HLO, so we emit one per batch size):
+
+  cim_mac_b{B}.hlo.txt   — one pass through the 36x32 array, raw physical
+                           parameters as runtime inputs (14 operands).
+  mlp_cim_b{B}.hlo.txt   — full 784-72-10 MLP with every matmul through the
+                           CIM array (22x3 + 2x1 tiles), weights/biases and
+                           the physical parameter bundle as runtime inputs.
+
+Input operand order is the positional order of the python signatures below;
+`rust/src/runtime/signature.rs` mirrors it.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, params as P
+
+CIM_BATCHES = (1, 8, 32, 128, 256, 1024)
+MLP_BATCHES = (1, 64, 256)
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def cim_mac_fn(x, w_pos, w_neg, dac_gain, dac_off, cell_delta,
+               alpha_p, alpha_n, beta, gamma3, rsa_p, rsa_n, vcal,
+               adc_consts, noise_v):
+    return (model.cim_apply(
+        x, w_pos, w_neg, dac_gain, dac_off, cell_delta,
+        alpha_p, alpha_n, beta, gamma3, rsa_p, rsa_n, vcal, adc_consts,
+        noise_v),)
+
+
+def cim_mac_specs(batch):
+    n, m = P.N_ROWS, P.M_COLS
+    return (
+        _spec((batch, n)), _spec((n, m)), _spec((n, m)),
+        _spec((n,)), _spec((n,)), _spec((n, m)),
+        _spec((m,)), _spec((m,)), _spec((m,)), _spec((m,)),
+        _spec((m,)), _spec((m,)), _spec((m,)),
+        _spec((6,)), _spec((batch, m)),
+    )
+
+
+def mlp_fn(x_codes, w1_pos, w1_neg, b1, w2_pos, w2_neg, b2, act_scale1,
+           dac_gain, dac_off, cell_delta, alpha_p, alpha_n, beta, gamma3,
+           rsa_p, rsa_n, vcal, adc_consts, vadc1, vadc2,
+           trim1_g, trim1_eps, trim2_g, trim2_eps):
+    analog = dict(dac_gain=dac_gain, dac_off=dac_off, cell_delta=cell_delta,
+                  alpha_p=alpha_p, alpha_n=alpha_n, beta=beta, gamma3=gamma3,
+                  rsa_p=rsa_p, rsa_n=rsa_n, vcal=vcal, adc_consts=adc_consts)
+    return (model.mlp_cim(x_codes, w1_pos, w1_neg, b1, w2_pos, w2_neg, b2,
+                          act_scale1, analog, vadc1, vadc2,
+                          trim1_g, trim1_eps, trim2_g, trim2_eps),)
+
+
+def mlp_specs(batch):
+    n, m = P.N_ROWS, P.M_COLS
+    return (
+        _spec((batch, 22 * n)),
+        _spec((22, 3, n, m)), _spec((22, 3, n, m)), _spec((72,)),
+        _spec((2, 1, n, m)), _spec((2, 1, n, m)), _spec((10,)),
+        _spec(()),
+        _spec((n,)), _spec((n,)), _spec((n, m)),
+        _spec((m,)), _spec((m,)), _spec((m,)), _spec((m,)),
+        _spec((m,)), _spec((m,)), _spec((m,)),
+        _spec((6,)),
+        _spec((2,)), _spec((2,)),
+        _spec((m,)), _spec((m,)), _spec((m,)), _spec((m,)),
+    )
+
+
+def emit(out_dir: str, name: str, fn, specs) -> dict:
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    entry = {
+        "name": name,
+        "path": os.path.basename(path),
+        "num_inputs": len(specs),
+        "input_shapes": [list(s.shape) for s in specs],
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        "bytes": len(text),
+    }
+    print(f"  {name}: {len(text)} chars, {len(specs)} inputs")
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--skip-mlp", action="store_true",
+                    help="emit only the cim_mac artifacts (fast)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"artifacts": [], "params": {
+        "N": P.N_ROWS, "M": P.M_COLS, "B_D": P.B_D, "B_W": P.B_W,
+        "B_Q": P.B_Q, "R_U": P.R_U, "R_SA_NOM": P.R_SA_NOM,
+        "V_INL": P.V_INL, "V_INH": P.V_INH, "V_BIAS": P.V_BIAS,
+    }}
+    print("emitting cim_mac artifacts:")
+    for b in CIM_BATCHES:
+        manifest["artifacts"].append(
+            emit(args.out_dir, f"cim_mac_b{b}", cim_mac_fn, cim_mac_specs(b)))
+    if not args.skip_mlp:
+        print("emitting mlp_cim artifacts:")
+        for b in MLP_BATCHES:
+            manifest["artifacts"].append(
+                emit(args.out_dir, f"mlp_cim_b{b}", mlp_fn, mlp_specs(b)))
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Pallas kernel for the batched mixed-signal CIM MAC — the compute hot-spot.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's hot path is
+an *analog* resistor crossbar; on TPU the same transfer function folds into
+two MXU matmuls with element-wise pre/post epilogues, all fused in one
+VMEM-resident pass:
+
+    q_lin = (X_eff @ G_pos) * qa - (X_eff @ G_neg) * qb + qc
+    q     = clip(round( q_lin + qd * (q_lin - qm)**3 + q_noise ), 0, 63)
+
+where the *folding* of the physical parameters (DAC gains/offsets, parasitic
+attenuation factors, mismatch, SA trims and errors, ADC transfer) into
+(X_eff, G_pos, G_neg, qa, qb, qc) is done by the surrounding JAX model
+(`model.py::fold_params`), which XLA fuses around the kernel.
+
+BlockSpec schedule: the batch is tiled into TB-row blocks streamed
+HBM->VMEM; the 36x32 conductance matrices (4.6 KiB each in f32) and the
+per-column epilogue vectors stay VMEM-resident across the whole grid —
+this is the analog array being "programmed once, pulsed per sample",
+i.e. the S&H schedule of the paper expressed as a BlockSpec.
+
+interpret=True everywhere: real-TPU lowering emits a Mosaic custom-call the
+CPU PJRT plugin cannot execute (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import params as P
+
+# Batch tile height. 128 aligns with the MXU/VPU lane structure on real
+# TPUs; under interpret=True it simply bounds the working set.
+DEFAULT_TB = 128
+
+
+def _cim_mac_kernel(x_ref, gpos_ref, gneg_ref, qa_ref, qb_ref, qc_ref,
+                    qd_ref, qm_ref, qn_ref, out_ref):
+    """One batch-tile of the folded CIM transfer function.
+
+    x_ref:   [TB, N]  effective input voltages (differential, folded DAC)
+    gpos/gneg_ref: [N, M] folded conductances (+ and - summation lines)
+    qa/qb/qc_ref:  [1, M] per-column epilogue affine coefficients
+    qd/qm_ref:     [1, M] folded cubic-distortion coefficient and center
+    qn_ref:  [TB, M] additive noise, pre-folded into ADC-code units
+    out_ref: [TB, M] quantized ADC codes
+    """
+    x = x_ref[...]
+    # Two MXU matmuls: the positive and negative accumulation lines of the
+    # 2SA stage. f32 accumulation mirrors the analog current summation.
+    i_pos = jnp.dot(x, gpos_ref[...], preferred_element_type=jnp.float32)
+    i_neg = jnp.dot(x, gneg_ref[...], preferred_element_type=jnp.float32)
+    # Per-column affine epilogue: SA trims/errors + ADC transfer, folded.
+    q_lin = i_pos * qa_ref[...] - i_neg * qb_ref[...] + qc_ref[...]
+    # Amplifier cubic distortion, folded into code units.
+    t = q_lin - qm_ref[...]
+    q = q_lin + qd_ref[...] * t * t * t + qn_ref[...]
+    # Flash ADC: mid-tread rounding with clipping at the references.
+    out_ref[...] = jnp.clip(jnp.round(q), 0.0, float(P.ADC_MAX))
+
+
+@functools.partial(jax.jit, static_argnames=("tb",))
+def cim_mac(x_eff, g_pos, g_neg, qa, qb, qc, qd, qm, q_noise, *, tb=DEFAULT_TB):
+    """Batched folded CIM MAC via pallas_call.
+
+    x_eff:   [B, N] f32 — B must be a multiple of `tb` (model.py pads).
+    g_pos/g_neg: [N, M] f32.
+    qa/qb/qc/qd/qm: [M] f32 per-column epilogue coefficients.
+    q_noise: [B, M] f32.
+    Returns  [B, M] f32 ADC codes.
+    """
+    b, n = x_eff.shape
+    m = g_pos.shape[1]
+    assert b % tb == 0, f"batch {b} not a multiple of tile {tb}"
+    grid = (b // tb,)
+    # Per-column vectors as [1, M] so they broadcast against [TB, M] tiles.
+    qa2, qb2, qc2, qd2, qm2 = (v.reshape(1, m) for v in (qa, qb, qc, qd, qm))
+    return pl.pallas_call(
+        _cim_mac_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, n), lambda i: (i, 0)),     # stream batch tiles
+            pl.BlockSpec((n, m), lambda i: (0, 0)),      # weights resident
+            pl.BlockSpec((n, m), lambda i: (0, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),      # epilogue resident
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+            pl.BlockSpec((tb, m), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, m), jnp.float32),
+        interpret=True,
+    )(x_eff, g_pos, g_neg, qa2, qb2, qc2, qd2, qm2, q_noise)

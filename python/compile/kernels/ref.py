@@ -1,0 +1,134 @@
+"""Pure-jnp oracle for the mixed-signal CIM MAC transfer function.
+
+This is the *explicit* (unfolded, per-cell) evaluation of the analog path of
+the Acore-CIM core — Fig. 1 / Eq. (2)-(4) of the paper:
+
+    input codes --(R-2R input DACs, per-row gain/offset)--> V_DAC
+    V_DAC --(row-wire attenuation, per-column)------------> V_IN(r, c)
+    V_IN  --(MWC conductances w/ mismatch + V_REG droop)--> I_MAC+(c), I_MAC-(c)
+    I     --(2SA: trims R_SA, V_CAL; errors alpha, beta)--> V_SA(c)
+    V_SA  --(flash ADC: alpha_D, beta_D, refs, clip)------> Q_hat(c)
+
+The Pallas kernel (`cim_mac.py`) implements the algebraically *folded* form
+of the same function; `tests/test_kernel.py` asserts exact agreement.
+The rust golden model (`rust/src/analog/`) implements this same math and is
+checked bit-exact against the AOT artifact in `rust/tests/parity.rs`.
+"""
+
+import jax.numpy as jnp
+
+from .. import params as P
+
+
+def dac_transfer(x, dac_gain, dac_off):
+    """Input R-2R MDAC: signed code -> differential output voltage (V_DAC - V_BIAS).
+
+    x: [..., N] signed codes in [-2^B_D+1, 2^B_D-1].
+    dac_gain/dac_off: [N] per-row gain error (~1) and additive offset [V].
+    """
+    lsb = P.V_SWING / (1 << P.B_D)
+    return dac_gain * x * lsb + dac_off
+
+
+def conductances(w_pos, w_neg, cell_delta, kappa_reg):
+    """MWC conductance matrices for the positive/negative summation lines.
+
+    w_pos/w_neg: [N, M] weight magnitudes (0..63) routed to I+ / I- lines.
+    cell_delta: [N, M] fractional conductance mismatch.
+    Returns (g_pos, g_neg): effective conductance [S] including the V_REG
+    regulation droop along rows (Fig. 1, effect 5) as a row-dependent factor.
+    """
+    rowfac = 1.0 - kappa_reg * jnp.arange(P.N_ROWS) / (P.N_ROWS - 1)
+    base = (1.0 + cell_delta) * rowfac[:, None] / (P.R_U * (1 << P.B_W))
+    return w_pos * base, w_neg * base
+
+
+def cim_forward(
+    x,
+    w_pos,
+    w_neg,
+    dac_gain,
+    dac_off,
+    cell_delta,
+    alpha_p,
+    alpha_n,
+    beta,
+    gamma3,
+    rsa_p,
+    rsa_n,
+    vcal,
+    adc_consts,
+    noise_v,
+):
+    """Full mixed-signal forward: input codes -> ADC codes.
+
+    x:          [B, N] signed input codes (float32).
+    w_pos/neg:  [N, M] weight magnitudes on the +/- lines.
+    dac_gain/dac_off: [N].
+    cell_delta: [N, M].
+    alpha_p/alpha_n/beta: [M] 2SA gain errors (positive/negative line) and
+                offset [V] (combined SA1+SA2 input-referred).
+    gamma3:     [M] 2SA cubic distortion coefficient [V^-2] — the
+                uncorrectable nonlinearity that sets the post-BISC residual
+                floor (Section II-C "a residual random error floor remains").
+    rsa_p/rsa_n: [M] trimmed transresistances [Ohm] (digital potentiometer).
+    vcal:       [M] trimmed calibration voltage [V] (6-bit cal DAC).
+    adc_consts: [6] = [alpha_d, beta_d, v_adc_l, v_adc_h, kappa_in, kappa_reg].
+    noise_v:    [B, M] additive noise sample at the SA output [V].
+
+    Returns (q_hat, v_sa): quantized codes [B, M] and pre-ADC voltages
+    (post-distortion, pre-noise).
+    """
+    alpha_d, beta_d, v_l, v_h, kappa_in, kappa_reg = (
+        adc_consts[0], adc_consts[1], adc_consts[2],
+        adc_consts[3], adc_consts[4], adc_consts[5],
+    )
+    # 1) input DACs
+    v_dac = dac_transfer(x, dac_gain, dac_off)            # [B, N] (differential)
+    # 2) row-wire attenuation toward far columns (effect 4)
+    colfac = 1.0 - kappa_in * jnp.arange(P.M_COLS) / (P.M_COLS - 1)   # [M]
+    v_in = v_dac[:, :, None] * colfac[None, None, :]      # [B, N, M]
+    # 3) MWC currents and per-line accumulation (Eq. 3)
+    g_pos, g_neg = conductances(w_pos, w_neg, cell_delta, kappa_reg)
+    i_pos = jnp.sum(v_in * g_pos[None], axis=1)           # [B, M]
+    i_neg = jnp.sum(v_in * g_neg[None], axis=1)
+    # 4) 2SA with separate positive/negative line gains (Section VI-D)
+    v_lin = (
+        vcal
+        + alpha_p * rsa_p * i_pos
+        - alpha_n * rsa_n * i_neg
+        + beta
+    )
+    # 4b) amplifier cubic distortion around the analog zero level
+    v_sa = v_lin + gamma3 * (v_lin - P.V_BIAS) ** 3
+    # 5) flash ADC (Eq. 2 with gain/offset errors, Eq. 8)
+    c_adc = P.ADC_MAX / (v_h - v_l)
+    q = alpha_d * c_adc * (v_sa + noise_v - v_l) + beta_d
+    q_hat = jnp.clip(jnp.round(q), 0.0, float(P.ADC_MAX))
+    return q_hat, v_sa
+
+
+def q_nominal(x, w_signed):
+    """Ideal (error-free, unquantized) column output Q_nom of Eq. (7).
+
+    x: [B, N] signed input codes; w_signed: [N, M] signed weight codes.
+    Returns [B, M] ideal output in ADC-code units (continuous).
+    """
+    s = x @ w_signed                                       # code-product sum
+    lsb_in = P.V_SWING / (1 << P.B_D)
+    i_mac = s * lsb_in / (P.R_U * (1 << P.B_W))
+    c_adc = P.ADC_MAX / (P.V_ADC_H - P.V_ADC_L)
+    return c_adc * (P.R_SA_NOM * i_mac + P.V_CAL_NOM - P.V_ADC_L)
+
+
+def code_gain_nominal() -> float:
+    """Nominal ADC codes per unit code-product sum (dQ/dS)."""
+    lsb_in = P.V_SWING / (1 << P.B_D)
+    c_adc = P.ADC_MAX / (P.V_ADC_H - P.V_ADC_L)
+    return float(c_adc * P.R_SA_NOM * lsb_in / (P.R_U * (1 << P.B_W)))
+
+
+def q_mid_nominal() -> float:
+    """Nominal ADC code for zero MAC value."""
+    c_adc = P.ADC_MAX / (P.V_ADC_H - P.V_ADC_L)
+    return float(c_adc * (P.V_CAL_NOM - P.V_ADC_L))

@@ -1,0 +1,204 @@
+"""L2: JAX model of the Acore-CIM core and the MLP-on-CIM inference graph.
+
+Two public entry points, both AOT-lowered by `aot.py`:
+
+  * `cim_apply(...)` — one pass through the physical 36x32 array, taking the
+    *raw* physical parameters (so the rust coordinator feeds exactly what its
+    own golden model uses) and calling the Pallas kernel on the folded form.
+
+  * `mlp_cim(...)` — the paper's MNIST MLP (784-72-10, Section VII-C) where
+    every matmul is tile-scheduled onto the single physical array: row-tiles
+    of 36 and column-tiles of 32, partial sums digitized at B_Q = 6 bits and
+    accumulated digitally (the RISC-V core's job in the paper), bias + ReLU
+    applied digitally, activations re-quantized to input codes per layer.
+
+Parameter conventions match `rust/src/analog/` (see kernels/ref.py docstring).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import params as P
+from .kernels import cim_mac as K
+from .kernels import ref
+
+
+def fold_params(w_pos, w_neg, dac_gain, dac_off, cell_delta,
+                alpha_p, alpha_n, beta, gamma3, rsa_p, rsa_n, vcal,
+                adc_consts):
+    """Fold physical parameters into the kernel's algebraic form.
+
+    Returns (g_pos, g_neg, qa, qb, qc, qd, qm) — see kernels/cim_mac.py.
+    The column attenuation factor (kappa_in, Fig. 1 effect 4) is separable
+    from the row term, so it folds into the per-column epilogue; the row
+    regulation droop (kappa_reg, effect 5) folds into the conductances.
+    The cubic distortion v + gamma3*(v - V_BIAS)^3 folds into code units:
+        q = q_lin + qd*(q_lin - qm)^3,
+        qd = gamma3 / A^2,  qm = A*(V_BIAS - v_l) + beta_d,  A = alpha_d*C_ADC
+    (the linear SA output in code units is q_lin = A*(v_lin - v_l) + beta_d,
+    so v_lin - V_BIAS = (q_lin - qm)/A).
+    """
+    alpha_d, beta_d, v_l, _v_h, kappa_in, kappa_reg = (
+        adc_consts[0], adc_consts[1], adc_consts[2],
+        adc_consts[3], adc_consts[4], adc_consts[5],
+    )
+    c_adc = P.ADC_MAX / (adc_consts[3] - v_l)
+    g_pos, g_neg = ref.conductances(w_pos, w_neg, cell_delta, kappa_reg)
+    colfac = 1.0 - kappa_in * jnp.arange(P.M_COLS) / (P.M_COLS - 1)
+    a = alpha_d * c_adc
+    scale = a * colfac
+    qa = scale * alpha_p * rsa_p
+    qb = scale * alpha_n * rsa_n
+    qc = a * (vcal + beta - v_l) + beta_d
+    qd = gamma3 / (a * a) * jnp.ones(P.M_COLS)
+    qm = (a * (P.V_BIAS - v_l) + beta_d) * jnp.ones(P.M_COLS)
+    return g_pos, g_neg, qa, qb, qc, qd, qm
+
+
+def fold_inputs(x, dac_gain, dac_off):
+    """Fold the input-DAC transfer into effective voltages (X_eff)."""
+    return ref.dac_transfer(x, dac_gain, dac_off)
+
+
+def fold_noise(noise_v, adc_consts):
+    """SA-referred noise [V] -> ADC-code units for the kernel epilogue."""
+    c_adc = P.ADC_MAX / (adc_consts[3] - adc_consts[2])
+    return noise_v * adc_consts[0] * c_adc
+
+
+def _pad_batch(x, tb):
+    b = x.shape[0]
+    pad = (-b) % tb
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], 0)
+    return x, b
+
+
+def cim_apply(x, w_pos, w_neg, dac_gain, dac_off, cell_delta,
+              alpha_p, alpha_n, beta, gamma3, rsa_p, rsa_n, vcal,
+              adc_consts, noise_v, *, tb=K.DEFAULT_TB):
+    """One batched pass through the physical array: raw params -> ADC codes."""
+    g_pos, g_neg, qa, qb, qc, qd, qm = fold_params(
+        w_pos, w_neg, dac_gain, dac_off, cell_delta,
+        alpha_p, alpha_n, beta, gamma3, rsa_p, rsa_n, vcal, adc_consts)
+    x_eff = fold_inputs(x, dac_gain, dac_off)
+    q_noise = fold_noise(noise_v, adc_consts)
+    x_eff, b = _pad_batch(x_eff, tb)
+    q_noise, _ = _pad_batch(q_noise, tb)
+    q = K.cim_mac(x_eff, g_pos, g_neg, qa, qb, qc, qd, qm, q_noise, tb=tb)
+    return q[:b]
+
+
+# ---------------------------------------------------------------------------
+# MLP-on-CIM (paper Section VII-C): 784I - 72H - 10O on MNIST
+# ---------------------------------------------------------------------------
+
+def tile_counts(rows, cols):
+    """Row/column tile counts for mapping a (rows x cols) matmul onto the
+    36x32 physical array."""
+    rt = -(-rows // P.N_ROWS)
+    ct = -(-cols // P.M_COLS)
+    return rt, ct
+
+
+def _layer_on_cim(x_codes, wt_pos, wt_neg, analog, cols, vadc, trim_g,
+                  trim_eps):
+    """One DNN layer executed tile-by-tile on the physical array.
+
+    x_codes: [B, rt*N] zero-padded input codes.
+    wt_pos/wt_neg: [rt, ct, N, M] pre-tiled weight magnitudes.
+    analog: dict of the physical error/trim parameters (shared by every
+            tile — there is ONE physical array, time-multiplexed).
+    cols:   true output width (<= ct*M).
+    vadc:   [2] this layer's ADC reference window (v_l, v_h) — the
+            dynamic-range management of DESIGN.md §6.
+    trim_g/trim_eps: [M] digital residual correction (RISC-V side):
+            q' = (q - eps)/g; pass (ones, zeros) to disable.
+
+    Returns [B, cols] *digitally accumulated* MAC estimate in code-product
+    units: the RISC-V side corrects each 6-bit partial with the digital
+    trims, dequantizes with the NOMINAL transfer constants at this window,
+    and sums across row tiles.
+    """
+    rt, ct = wt_pos.shape[0], wt_pos.shape[1]
+    b = x_codes.shape[0]
+    v_l, v_h = vadc[0], vadc[1]
+    c_adc = P.ADC_MAX / (v_h - v_l)
+    lsb_in = P.V_SWING / (1 << P.B_D)
+    k = c_adc * P.R_SA_NOM * lsb_in / (P.R_U * (1 << P.B_W))
+    mid = c_adc * (P.V_CAL_NOM - v_l)
+    zero_noise = jnp.zeros((b, P.M_COLS), jnp.float32)
+    consts = analog["adc_consts"]
+    adc_consts = jnp.concatenate(
+        [consts[:2], jnp.stack([v_l, v_h]), consts[4:]])
+
+    def per_tile(r, c):
+        xr = jax.lax.dynamic_slice_in_dim(x_codes, r * P.N_ROWS, P.N_ROWS, 1)
+        q = cim_apply(xr, wt_pos[r, c], wt_neg[r, c], analog["dac_gain"],
+                      analog["dac_off"], analog["cell_delta"],
+                      analog["alpha_p"], analog["alpha_n"], analog["beta"],
+                      analog["gamma3"], analog["rsa_p"], analog["rsa_n"],
+                      analog["vcal"], adc_consts, zero_noise)
+        q = (q - trim_eps) / trim_g               # digital residual trim
+        return (q - mid) / k                      # digital dequantization
+
+    col_blocks = []
+    for c in range(ct):
+        acc = jnp.zeros((b, P.M_COLS), jnp.float32)
+        for r in range(rt):
+            acc = acc + per_tile(r, c)
+        col_blocks.append(acc)
+    return jnp.concatenate(col_blocks, axis=1)[:, :cols]
+
+
+def _quantize_acts(a, scale):
+    """Digital re-quantization of activations to input codes (0..63 —
+    post-ReLU activations are non-negative, like MNIST pixels)."""
+    return jnp.clip(jnp.round(a * scale), 0.0, float(P.CODE_MAX))
+
+
+def mlp_cim(x_codes, w1_pos, w1_neg, b1_codes, w2_pos, w2_neg, b2_codes,
+            act_scale1, analog, vadc1, vadc2, trim1_g, trim1_eps, trim2_g,
+            trim2_eps):
+    """784-72-10 MLP forward, every matmul through the CIM array.
+
+    x_codes:   [B, 792] pixel codes 0..63, zero-padded from 784 to 22*36.
+    w1_pos/neg: [22, 3, 36, 32] layer-1 tiled weight magnitudes.
+    b1_codes:  [72] layer-1 bias in code-product units.
+    w2_pos/neg: [2, 1, 36, 32] layer-2 tiles (72 rows padded to 2*36).
+    b2_codes:  [10] layer-2 bias in code-product units.
+    act_scale1: scalar — hidden activation re-quantization scale.
+    analog:    physical parameter dict (see _layer_on_cim).
+    vadc1/vadc2: [2] per-layer ADC reference windows.
+    trim*_g/eps: [32] per-layer digital residual trims (ones/zeros = off).
+
+    Returns logits [B, 10] in layer-2 code-product units.
+    """
+    h = _layer_on_cim(x_codes, w1_pos, w1_neg, analog, 72, vadc1, trim1_g,
+                      trim1_eps)
+    h = jnp.maximum(h + b1_codes, 0.0)            # bias + ReLU, digital
+    h_codes = _quantize_acts(h, act_scale1)
+    h_pad = jnp.pad(h_codes, ((0, 0), (0, 2 * P.N_ROWS - 72)))
+    logits = _layer_on_cim(h_pad, w2_pos, w2_neg, analog, 10, vadc2,
+                           trim2_g, trim2_eps)
+    return logits + b2_codes
+
+
+def ideal_params(batch):
+    """Error-free physical parameters (the 'simulation' row of §VII-C)."""
+    f32 = jnp.float32
+    return dict(
+        dac_gain=jnp.ones(P.N_ROWS, f32),
+        dac_off=jnp.zeros(P.N_ROWS, f32),
+        cell_delta=jnp.zeros((P.N_ROWS, P.M_COLS), f32),
+        alpha_p=jnp.ones(P.M_COLS, f32),
+        alpha_n=jnp.ones(P.M_COLS, f32),
+        beta=jnp.zeros(P.M_COLS, f32),
+        gamma3=jnp.zeros(P.M_COLS, f32),
+        rsa_p=jnp.full((P.M_COLS,), P.R_SA_NOM, f32),
+        rsa_n=jnp.full((P.M_COLS,), P.R_SA_NOM, f32),
+        vcal=jnp.full((P.M_COLS,), P.V_CAL_NOM, f32),
+        adc_consts=jnp.array(
+            [1.0, 0.0, P.V_ADC_L, P.V_ADC_H, 0.0, 0.0], f32),
+        noise_v=jnp.zeros((batch, P.M_COLS), f32),
+    )

@@ -1,0 +1,47 @@
+"""Shared physical/architectural constants of the Acore-CIM core.
+
+These mirror `rust/src/analog/consts.rs` — the two MUST stay in sync; the
+integration test `rust/tests/parity.rs` executes the AOT artifact and the
+rust golden model on identical inputs and asserts bit-exact ADC codes.
+
+All values come from the paper (Sections III-IV, Alg. 1):
+  * 36 x 32 MWC array, B_D = 6(+sign), B_W = 6(+2 sign), B_Q = 6
+  * V_INL = 0.2 V, V_INH = 0.6 V, V_BIAS = 0.4 V
+  * R_U = 385 kOhm (polysilicon baseline, Table I)
+  * R_SA default = R_U / N ~= 10.7 kOhm (Alg. 1 / Fig. 7)
+  * T_S&H = 1 us, ADC at M/T_S&H = 32 MHz
+"""
+
+N_ROWS = 36          # N: input rows
+M_COLS = 32          # M: output columns
+B_D = 6              # input magnitude bits (plus 1 sign bit)
+B_W = 6              # weight magnitude bits (plus 2 sign bits W6/W7)
+B_Q = 6              # ADC output bits
+CODE_MAX = (1 << B_D) - 1          # 63
+ADC_MAX = (1 << B_Q) - 1           # 63
+
+V_INL = 0.2          # low input reference [V]
+V_INH = 0.6          # high input reference [V]
+V_BIAS = 0.4         # analog zero level [V]
+V_SWING = V_INH - V_BIAS           # 0.2 V single-sided DAC swing
+
+R_U = 385.0e3        # unit resistance of the R-2R ladders [Ohm]
+R_SA_NOM = R_U / N_ROWS            # nominal 2SA transresistance ~10.69 kOhm
+V_CAL_NOM = (V_INL + V_INH) / 2.0  # nominal calibration voltage = V_BIAS
+
+V_ADC_L = V_INL      # default ADC references (Section III-B)
+V_ADC_H = V_INH
+T_SH = 1.0e-6        # S&H / inference period [s]
+F_INF = 1.0 / T_SH   # 1 MHz inference frequency
+
+# Structural (deterministic) parasitic knobs of Fig. 1.  kappa_in models the
+# progressive input-voltage attenuation across columns (effect 4); kappa_reg
+# models the summation-node regulation droop across rows (effect 5).  Both
+# are fractional losses at the far end of the wire.
+KAPPA_IN_DEFAULT = 0.02
+KAPPA_REG_DEFAULT = 0.015
+
+
+def adc_conv_factor(v_l: float = V_ADC_L, v_h: float = V_ADC_H) -> float:
+    """C_ADC of Eq. (7): (2^B_Q - 1) / (V_H - V_L)."""
+    return ADC_MAX / (v_h - v_l)

@@ -1,0 +1,147 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+hypothesis sweeps batch sizes, code patterns, and variation magnitudes; the
+folded kernel must agree with the explicit per-cell reference to float32
+tolerance *before* quantization and exactly (codes) after, away from
+rounding boundaries.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import params as P
+from compile.kernels import cim_mac as K
+from compile.kernels import ref
+from tests.util import args_list, rand_inputs, rand_params, rand_weights
+
+
+def run_both(x, w_pos, w_neg, p, tb=8):
+    from compile import model
+    q_kernel = np.asarray(model.cim_apply(*args_list(x, w_pos, w_neg, p), tb=tb))
+    q_ref, v_sa = ref.cim_forward(*args_list(x, w_pos, w_neg, p))
+    return q_kernel, np.asarray(q_ref), np.asarray(v_sa)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    batch=st.integers(1, 33),
+    seed=st.integers(0, 2**31 - 1),
+    sigma=st.floats(0.0, 2.0),
+    density=st.floats(0.1, 1.0),
+)
+def test_kernel_matches_ref(batch, seed, sigma, density):
+    rng = np.random.default_rng(seed)
+    _, w_pos, w_neg = rand_weights(rng, density)
+    p = rand_params(rng, batch, sigma_scale=sigma)
+    x = rand_inputs(rng, batch)
+    q_kernel, q_ref, _ = run_both(x, w_pos, w_neg, p)
+    assert q_kernel.shape == (batch, P.M_COLS)
+    # Rounding at exactly .5 can differ between the two evaluation orders by
+    # one code; everything else must match exactly.
+    assert np.max(np.abs(q_kernel - q_ref)) <= 1.0
+    assert np.mean(q_kernel != q_ref) < 0.02
+
+
+def test_ideal_params_give_nominal_transfer():
+    """With error-free parameters the array must realize Eq. (7) exactly."""
+    from compile import model
+    rng = np.random.default_rng(0)
+    w, w_pos, w_neg = rand_weights(rng, 1.0)
+    batch = 16
+    x = rand_inputs(rng, batch)
+    p = {k: np.asarray(v) for k, v in model.ideal_params(batch).items()}
+    q_kernel, q_ref, _ = run_both(x, w_pos, w_neg, p)
+    q_nom = np.asarray(ref.q_nominal(x, w))
+    expected = np.clip(np.round(q_nom), 0, P.ADC_MAX)
+    np.testing.assert_allclose(q_kernel, expected, atol=1.0)
+    # Almost all codes identical (only .5-boundary ties may differ).
+    assert np.mean(q_kernel != expected) < 0.01
+
+
+def test_zero_input_zero_weight():
+    from compile import model
+    batch = 4
+    p = {k: np.asarray(v) for k, v in model.ideal_params(batch).items()}
+    x = np.zeros((batch, P.N_ROWS), np.float32)
+    z = np.zeros((P.N_ROWS, P.M_COLS), np.float32)
+    q, _, _ = run_both(x, z, z, p)
+    # Zero MAC maps to the mid-code (V_CAL = V_BIAS -> code ~31.5 -> 32 or 31)
+    assert np.all((q >= 31) & (q <= 32))
+
+
+def test_full_scale_reaches_near_rails():
+    """Full-scale MAC uses (almost) the whole ADC range: the design maps
+    S_max = N*63*63 to ~code 62 (31.5 + 30.5), symmetric about mid-code."""
+    from compile import model
+    batch = 2
+    p = {k: np.asarray(v) for k, v in model.ideal_params(batch).items()}
+    w_pos = np.full((P.N_ROWS, P.M_COLS), P.CODE_MAX, np.float32)
+    w_neg = np.zeros_like(w_pos)
+    x = np.full((batch, P.N_ROWS), P.CODE_MAX, np.float32)
+    q, _, _ = run_both(x, w_pos, w_neg, p)
+    assert np.all(q == 62.0)
+    q2, _, _ = run_both(-x, w_pos, w_neg, p)
+    assert np.all(q2 == 1.0)
+
+
+def test_clipping_saturates_at_rails():
+    """A large ADC offset error must drive codes into hard clipping —
+    the scenario BISC's reference-widening (Alg. 1) exists to avoid."""
+    from compile import model
+    batch = 2
+    p = {k: np.asarray(v) for k, v in model.ideal_params(batch).items()}
+    w_pos = np.full((P.N_ROWS, P.M_COLS), P.CODE_MAX, np.float32)
+    w_neg = np.zeros_like(w_pos)
+    x = np.full((batch, P.N_ROWS), P.CODE_MAX, np.float32)
+    p = dict(p)
+    p["adc_consts"] = np.array(
+        [1.0, 40.0, P.V_ADC_L, P.V_ADC_H, 0.0, 0.0], np.float32)
+    q, _, _ = run_both(x, w_pos, w_neg, p)
+    assert np.all(q == P.ADC_MAX)
+    p["adc_consts"] = np.array(
+        [1.0, -40.0, P.V_ADC_L, P.V_ADC_H, 0.0, 0.0], np.float32)
+    q2, _, _ = run_both(-x, w_pos, w_neg, p)
+    assert np.all(q2 == 0.0)
+
+
+def test_sign_symmetry():
+    """x -> -x mirrors the output around the mid code (ideal params)."""
+    from compile import model
+    rng = np.random.default_rng(7)
+    _, w_pos, w_neg = rand_weights(rng)
+    batch = 8
+    p = {k: np.asarray(v) for k, v in model.ideal_params(batch).items()}
+    x = rand_inputs(rng, batch)
+    qp, _, vp = run_both(x, w_pos, w_neg, p)
+    qn, _, vn = run_both(-x, w_pos, w_neg, p)
+    np.testing.assert_allclose(vp - P.V_CAL_NOM, -(vn - P.V_CAL_NOM),
+                               atol=1e-6)
+
+
+def test_noise_moves_output():
+    from compile import model
+    rng = np.random.default_rng(3)
+    _, w_pos, w_neg = rand_weights(rng)
+    batch = 4
+    p = {k: np.asarray(v) for k, v in model.ideal_params(batch).items()}
+    x = rand_inputs(rng, batch)
+    q0, _, _ = run_both(x, w_pos, w_neg, p)
+    p2 = dict(p)
+    p2["noise_v"] = np.full((batch, P.M_COLS), 0.05, np.float32)  # ~8 LSB
+    q1, _, _ = run_both(x, w_pos, w_neg, p2)
+    assert np.mean(q1 - q0) > 5.0
+
+
+@pytest.mark.parametrize("tb", [4, 8, 16, 128])
+def test_tile_size_invariance(tb):
+    """The batch tiling is a schedule, not a semantic: any TB same result."""
+    from compile import model
+    rng = np.random.default_rng(11)
+    _, w_pos, w_neg = rand_weights(rng)
+    batch = 19
+    p = rand_params(rng, batch)
+    x = rand_inputs(rng, batch)
+    q_ref, _, _ = run_both(x, w_pos, w_neg, p, tb=1)
+    q_tb, _, _ = run_both(x, w_pos, w_neg, p, tb=tb)
+    np.testing.assert_array_equal(q_ref, q_tb)

@@ -1,0 +1,164 @@
+"""L2 model tests: parameter folding, tiling helpers, and the MLP-on-CIM
+graph (shape correctness + ideal-parameter accuracy sanity)."""
+
+import numpy as np
+import pytest
+
+from compile import model, params as P
+from compile.kernels import ref
+from tests.util import rand_params, rand_weights
+
+
+def test_fold_matches_ref_voltages():
+    """Folded (g, qa, qb, qc) must reproduce the reference V_SA chain."""
+    rng = np.random.default_rng(42)
+    _, w_pos, w_neg = rand_weights(rng)
+    p = rand_params(rng, 4)
+    x = rng.integers(-63, 64, size=(4, P.N_ROWS)).astype(np.float32)
+    g_pos, g_neg, qa, qb, qc, qd, qm = (np.asarray(a) for a in model.fold_params(
+        w_pos, w_neg, p["dac_gain"], p["dac_off"], p["cell_delta"],
+        p["alpha_p"], p["alpha_n"], p["beta"], p["gamma3"], p["rsa_p"],
+        p["rsa_n"], p["vcal"], p["adc_consts"]))
+    x_eff = np.asarray(model.fold_inputs(x, p["dac_gain"], p["dac_off"]))
+    q_lin = (x_eff @ g_pos) * qa - (x_eff @ g_neg) * qb + qc
+    q_folded = q_lin + qd * (q_lin - qm) ** 3
+    _, v_sa = ref.cim_forward(
+        x, w_pos, w_neg, p["dac_gain"], p["dac_off"], p["cell_delta"],
+        p["alpha_p"], p["alpha_n"], p["beta"], p["gamma3"], p["rsa_p"],
+        p["rsa_n"], p["vcal"], p["adc_consts"], p["noise_v"])
+    c = p["adc_consts"]
+    c_adc = P.ADC_MAX / (c[3] - c[2])
+    q_ref = c[0] * c_adc * (np.asarray(v_sa) - c[2]) + c[1]
+    np.testing.assert_allclose(q_folded, q_ref, rtol=1e-4, atol=1e-3)
+
+
+def test_tile_counts():
+    assert model.tile_counts(784, 72) == (22, 3)
+    assert model.tile_counts(72, 10) == (2, 1)
+    assert model.tile_counts(36, 32) == (1, 1)
+    assert model.tile_counts(37, 33) == (2, 2)
+
+
+def _tiled_weights(w, rt, ct):
+    """Pack a dense [rows, cols] signed code matrix into [rt, ct, N, M]."""
+    rows, cols = w.shape
+    wp = np.zeros((rt, ct, P.N_ROWS, P.M_COLS), np.float32)
+    wn = np.zeros_like(wp)
+    padded = np.zeros((rt * P.N_ROWS, ct * P.M_COLS), np.float32)
+    padded[:rows, :cols] = w
+    for r in range(rt):
+        for c in range(ct):
+            blk = padded[r * P.N_ROWS:(r + 1) * P.N_ROWS,
+                         c * P.M_COLS:(c + 1) * P.M_COLS]
+            wp[r, c] = np.maximum(blk, 0)
+            wn[r, c] = np.maximum(-blk, 0)
+    return wp, wn
+
+
+def _default_refs_trims():
+    """Default ADC windows + disabled digital trims for mlp_cim."""
+    m = P.M_COLS
+    return (
+        np.array([P.V_ADC_L, P.V_ADC_H], np.float32),
+        np.array([P.V_ADC_L, P.V_ADC_H], np.float32),
+        np.ones(m, np.float32), np.zeros(m, np.float32),
+        np.ones(m, np.float32), np.zeros(m, np.float32),
+    )
+
+
+def _nominal_tiled_layer(x, w, cols):
+    """Exact digital reference of the nominal tiled pipeline: per row-tile,
+    the 6-bit ADC quantizes the partial MAC, the RISC-V side dequantizes
+    with the nominal constants and accumulates (model._layer_on_cim with
+    ideal analog parameters)."""
+    k = ref.code_gain_nominal()
+    mid = ref.q_mid_nominal()
+    rt, ct = model.tile_counts(x.shape[1], cols)
+    xp = np.zeros((x.shape[0], rt * P.N_ROWS), np.float32)
+    xp[:, :x.shape[1]] = x
+    wp = np.zeros((rt * P.N_ROWS, ct * P.M_COLS), np.float32)
+    wp[:w.shape[0], :w.shape[1]] = w
+    out = np.zeros((x.shape[0], ct * P.M_COLS), np.float32)
+    for r in range(rt):
+        s = xp[:, r * P.N_ROWS:(r + 1) * P.N_ROWS] @ \
+            wp[r * P.N_ROWS:(r + 1) * P.N_ROWS]
+        q = np.clip(np.round(mid + k * s), 0, P.ADC_MAX)
+        out += (q - mid) / k
+    return out[:, :cols]
+
+
+def test_mlp_ideal_params_matches_nominal_tiled_reference():
+    """With error-free physical params, the CIM MLP must equal the exact
+    per-tile quantized digital reference — the 'simulation' baseline of
+    Section VII-C (which already includes the 6-bit ADC quantization)."""
+    rng = np.random.default_rng(0)
+    batch = 8
+    w1 = rng.integers(-15, 16, size=(784, 72)).astype(np.float32)
+    w2 = rng.integers(-40, 41, size=(72, 10)).astype(np.float32)
+    b1 = np.zeros(72, np.float32)
+    b2 = np.zeros(10, np.float32)
+    x = rng.integers(0, 20, size=(batch, 784)).astype(np.float32)
+    x_pad = np.pad(x, ((0, 0), (0, 22 * P.N_ROWS - 784)))
+
+    w1p, w1n = _tiled_weights(w1, 22, 3)
+    w2p, w2n = _tiled_weights(w2, 2, 1)
+    analog = {k_: np.asarray(v) for k_, v in model.ideal_params(batch).items()}
+    analog.pop("noise_v")
+    act_scale1 = np.float32(0.002)
+
+    logits = np.asarray(model.mlp_cim(
+        x_pad, w1p, w1n, b1, w2p, w2n, b2, act_scale1, analog,
+        *_default_refs_trims()))
+    assert logits.shape == (batch, 10)
+
+    h = _nominal_tiled_layer(x, w1, 72)
+    h = np.maximum(h + b1, 0.0)
+    h_codes = np.clip(np.round(h * act_scale1), 0, P.CODE_MAX)
+    ref_logits = _nominal_tiled_layer(h_codes, w2, 10) + b2
+
+    # identical up to float .5-rounding ties inside the ADC model: a tie
+    # flips one 6-bit code, i.e. 1/k in code-product units, per tile read.
+    k = ref.code_gain_nominal()
+    ties = np.abs(logits - ref_logits) / (1.0 / k)
+    assert np.max(ties) <= 22 * 0.01 + 2.0  # at most a couple of tie flips
+    agree = np.mean(np.argmax(logits, 1) == np.argmax(ref_logits, 1))
+    assert agree >= 0.75
+
+
+def test_mlp_errors_degrade_then_structure_remains():
+    """Non-ideal params must change logits (the silicon gap) but keep them
+    finite and shaped correctly."""
+    rng = np.random.default_rng(5)
+    batch = 4
+    w1 = rng.integers(-15, 16, size=(784, 72)).astype(np.float32)
+    w2 = rng.integers(-40, 41, size=(72, 10)).astype(np.float32)
+    x = rng.integers(0, 20, size=(batch, 784)).astype(np.float32)
+    x_pad = np.pad(x, ((0, 0), (0, 22 * P.N_ROWS - 784)))
+    w1p, w1n = _tiled_weights(w1, 22, 3)
+    w2p, w2n = _tiled_weights(w2, 2, 1)
+
+    ideal = {k: np.asarray(v) for k, v in model.ideal_params(batch).items()}
+    ideal.pop("noise_v")
+    noisy = dict(rand_params(rng, batch, sigma_scale=1.5))
+    noisy.pop("noise_v")
+
+    la = np.asarray(model.mlp_cim(x_pad, w1p, w1n, np.zeros(72, np.float32),
+                                  w2p, w2n, np.zeros(10, np.float32),
+                                  np.float32(0.01), ideal,
+                                  *_default_refs_trims()))
+    lb = np.asarray(model.mlp_cim(x_pad, w1p, w1n, np.zeros(72, np.float32),
+                                  w2p, w2n, np.zeros(10, np.float32),
+                                  np.float32(0.01), noisy,
+                                  *_default_refs_trims()))
+    assert np.all(np.isfinite(lb))
+    assert not np.allclose(la, lb)
+
+
+def test_pad_batch_roundtrip():
+    rng = np.random.default_rng(1)
+    _, w_pos, w_neg = rand_weights(rng)
+    p = rand_params(rng, 5)
+    x = rng.integers(-63, 64, size=(5, P.N_ROWS)).astype(np.float32)
+    from tests.util import args_list
+    q = np.asarray(model.cim_apply(*args_list(x, w_pos, w_neg, p), tb=128))
+    assert q.shape == (5, P.M_COLS)

@@ -1,0 +1,53 @@
+"""Shared helpers for the python test-suite: random physical-parameter
+bundles matching the paper's variation magnitudes (Fig. 8b: g in ~0.8-1.2,
+eps up to a few LSB)."""
+
+import numpy as np
+
+from compile import params as P
+
+
+def rand_params(rng, batch, *, sigma_scale=1.0):
+    n, m = P.N_ROWS, P.M_COLS
+    f = np.float32
+    return dict(
+        dac_gain=(1.0 + 0.01 * sigma_scale * rng.standard_normal(n)).astype(f),
+        dac_off=(0.002 * sigma_scale * rng.standard_normal(n)).astype(f),
+        cell_delta=(0.02 * sigma_scale * rng.standard_normal((n, m))).astype(f),
+        alpha_p=(1.0 + 0.08 * sigma_scale * rng.standard_normal(m)).astype(f),
+        alpha_n=(1.0 + 0.08 * sigma_scale * rng.standard_normal(m)).astype(f),
+        beta=(0.01 * sigma_scale * rng.standard_normal(m)).astype(f),
+        gamma3=(3.0 * sigma_scale * rng.standard_normal(m)).astype(f),
+        rsa_p=np.full(m, P.R_SA_NOM, f),
+        rsa_n=np.full(m, P.R_SA_NOM, f),
+        vcal=np.full(m, P.V_CAL_NOM, f),
+        adc_consts=np.array(
+            [1.0 + 0.02 * sigma_scale * rng.standard_normal(),
+             0.5 * sigma_scale * rng.standard_normal(),
+             P.V_ADC_L, P.V_ADC_H,
+             P.KAPPA_IN_DEFAULT * sigma_scale,
+             P.KAPPA_REG_DEFAULT * sigma_scale], f),
+        noise_v=np.zeros((batch, m), f),
+    )
+
+
+def rand_weights(rng, density=0.9):
+    """Signed weight codes split into +/- line magnitudes."""
+    n, m = P.N_ROWS, P.M_COLS
+    w = rng.integers(-P.CODE_MAX, P.CODE_MAX + 1, size=(n, m))
+    w *= (rng.random((n, m)) < density)
+    w_pos = np.maximum(w, 0).astype(np.float32)
+    w_neg = np.maximum(-w, 0).astype(np.float32)
+    return w.astype(np.float32), w_pos, w_neg
+
+
+def rand_inputs(rng, batch, signed=True):
+    lo = -P.CODE_MAX if signed else 0
+    return rng.integers(lo, P.CODE_MAX + 1,
+                        size=(batch, P.N_ROWS)).astype(np.float32)
+
+
+def args_list(x, w_pos, w_neg, p):
+    return [x, w_pos, w_neg, p["dac_gain"], p["dac_off"], p["cell_delta"],
+            p["alpha_p"], p["alpha_n"], p["beta"], p["gamma3"], p["rsa_p"],
+            p["rsa_n"], p["vcal"], p["adc_consts"], p["noise_v"]]

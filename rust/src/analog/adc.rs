@@ -1,0 +1,131 @@
+//! Time-multiplexed 6-bit flash ADC (Section III-B, Eq. 2 / Eq. 8).
+//!
+//! The M = 32 column voltages are multiplexed into one flash ADC running at
+//! M / T_S&H = 32 MHz. Behaviourally: a linear quantizer with programmable
+//! references, a gain error alpha_D and an offset error beta_D (in codes),
+//! hard-clipping at the rails.
+
+use super::consts as c;
+
+#[derive(Debug, Clone)]
+pub struct FlashAdc {
+    /// digital gain error, ideally 1.0
+    pub alpha_d: f64,
+    /// digital offset error [codes]
+    pub beta_d: f64,
+    /// programmable references [V] (BISC widens these, Alg. 1)
+    pub v_l: f64,
+    pub v_h: f64,
+}
+
+impl Default for FlashAdc {
+    fn default() -> Self {
+        Self { alpha_d: 1.0, beta_d: 0.0, v_l: c::V_ADC_L, v_h: c::V_ADC_H }
+    }
+}
+
+impl FlashAdc {
+    /// C_ADC of Eq. (7) at the current references.
+    pub fn conv_factor(&self) -> f64 {
+        c::adc_conv_factor(self.v_l, self.v_h)
+    }
+
+    /// Continuous (pre-round) transfer, Eq. (8) inner part.
+    pub fn transfer(&self, v: f64) -> f64 {
+        self.alpha_d * self.conv_factor() * (v - self.v_l) + self.beta_d
+    }
+
+    /// Quantize one voltage to a 6-bit code.
+    pub fn quantize(&self, v: f64) -> u32 {
+        self.transfer(v).round().clamp(0.0, c::ADC_MAX as f64) as u32
+    }
+
+    /// True if the voltage would clip (Alg. 1 widens references to avoid
+    /// exactly this during characterization).
+    pub fn clips(&self, v: f64) -> bool {
+        let t = self.transfer(v);
+        t < 0.0 || t > c::ADC_MAX as f64
+    }
+
+    /// Widen references symmetrically by `margin` (e.g. 0.05 for the
+    /// paper's +/-5%): V_L *= (1-margin-ish) — per Alg. 1,
+    /// V_L <- 0.95 V_L and V_H <- 1.05 V_H.
+    pub fn widen_refs(&mut self, margin: f64) {
+        self.v_l *= 1.0 - margin;
+        self.v_h *= 1.0 + margin;
+    }
+
+    /// Restore the default (inference) references.
+    pub fn default_refs(&mut self) {
+        self.v_l = c::V_ADC_L;
+        self.v_h = c::V_ADC_H;
+    }
+
+    /// Sample conversion time at the multiplexed rate.
+    pub fn conversion_time(&self) -> f64 {
+        c::T_SH / c::M_COLS as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn midscale_maps_to_mid_code() {
+        let adc = FlashAdc::default();
+        // V_BIAS = 0.4 V -> (0.4-0.2)*157.5 = 31.5 -> rounds to 32
+        assert_eq!(adc.quantize(c::V_BIAS), 32);
+        assert!((adc.transfer(c::V_BIAS) - 31.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rails_clip() {
+        let adc = FlashAdc::default();
+        assert_eq!(adc.quantize(0.0), 0);
+        assert_eq!(adc.quantize(1.0), 63);
+        assert!(adc.clips(0.19));
+        assert!(adc.clips(0.61));
+        assert!(!adc.clips(0.4));
+    }
+
+    #[test]
+    fn code_boundaries() {
+        let adc = FlashAdc::default();
+        let lsb = (c::V_ADC_H - c::V_ADC_L) / 63.0;
+        assert_eq!(adc.quantize(c::V_ADC_L), 0);
+        assert_eq!(adc.quantize(c::V_ADC_L + lsb), 1);
+        assert_eq!(adc.quantize(c::V_ADC_H), 63);
+        // half-LSB rounds away from zero-code
+        assert_eq!(adc.quantize(c::V_ADC_L + 0.51 * lsb), 1);
+    }
+
+    #[test]
+    fn gain_offset_errors() {
+        let adc = FlashAdc { alpha_d: 1.1, beta_d: 2.0, ..Default::default() };
+        let ideal = FlashAdc::default();
+        let v = 0.45;
+        assert!(
+            (adc.transfer(v) - (1.1 * ideal.transfer(v) + 2.0)).abs() < 1e-12
+        );
+    }
+
+    #[test]
+    fn widened_refs_prevent_clipping() {
+        let mut adc = FlashAdc::default();
+        let v = 0.61; // would clip at default refs
+        assert!(adc.clips(v));
+        adc.widen_refs(0.05);
+        assert!((adc.v_l - 0.19).abs() < 1e-12);
+        assert!((adc.v_h - 0.63).abs() < 1e-12);
+        assert!(!adc.clips(v));
+        adc.default_refs();
+        assert!(adc.clips(v));
+    }
+
+    #[test]
+    fn conversion_rate_is_32mhz() {
+        let adc = FlashAdc::default();
+        assert!((1.0 / adc.conversion_time() - 32.0e6).abs() < 1.0);
+    }
+}

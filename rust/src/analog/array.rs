@@ -1,0 +1,212 @@
+//! The 36x32 MWC crossbar with the interconnect parasitics of Fig. 1.
+//!
+//! Golden (explicit per-cell) evaluation path. The structural parasitics
+//! are modelled first-order, matching the JAX model exactly:
+//!   * `kappa_in`  — input-voltage attenuation across columns (effect 4):
+//!                   the differential seen by column c is scaled by
+//!                   (1 - kappa_in * c/(M-1)).
+//!   * `kappa_reg` — summation-node regulation droop across rows (effect
+//!                   5): cell conductance at row r is scaled by
+//!                   (1 - kappa_reg * r/(N-1)).
+//! Cell-level mismatch (effect 6) lives in each `Mwc::delta`.
+
+use super::consts as c;
+use super::mwc::{Line, Mwc};
+
+#[derive(Debug, Clone)]
+pub struct CrossbarArray {
+    /// row-major cells\[r * M + c\]
+    cells: Vec<Mwc>,
+    pub kappa_in: f64,
+    pub kappa_reg: f64,
+}
+
+impl CrossbarArray {
+    pub fn new(kappa_in: f64, kappa_reg: f64) -> Self {
+        Self {
+            cells: vec![Mwc::default(); c::N_ROWS * c::M_COLS],
+            kappa_in,
+            kappa_reg,
+        }
+    }
+
+    pub fn ideal() -> Self {
+        Self::new(0.0, 0.0)
+    }
+
+    pub fn cell(&self, row: usize, col: usize) -> &Mwc {
+        &self.cells[row * c::M_COLS + col]
+    }
+
+    pub fn cell_mut(&mut self, row: usize, col: usize) -> &mut Mwc {
+        &mut self.cells[row * c::M_COLS + col]
+    }
+
+    /// Program the whole array from signed codes, preserving each cell's
+    /// mismatch delta (weights change, silicon doesn't).
+    pub fn program(&mut self, weights: &[i32]) {
+        assert_eq!(weights.len(), c::N_ROWS * c::M_COLS);
+        for (cell, &w) in self.cells.iter_mut().zip(weights) {
+            let delta = cell.delta;
+            *cell = Mwc::program(w).with_delta(delta);
+        }
+    }
+
+    /// Program a single column (used by the BISC characterization, which
+    /// writes W_max into the column under test).
+    pub fn program_column(&mut self, col: usize, weights: &[i32]) {
+        assert_eq!(weights.len(), c::N_ROWS);
+        for (r, &w) in weights.iter().enumerate() {
+            let delta = self.cell(r, col).delta;
+            *self.cell_mut(r, col) = Mwc::program(w).with_delta(delta);
+        }
+    }
+
+    /// Install per-cell mismatch deltas (row-major N*M).
+    pub fn set_deltas(&mut self, deltas: &[f64]) {
+        assert_eq!(deltas.len(), c::N_ROWS * c::M_COLS);
+        for (cell, &d) in self.cells.iter_mut().zip(deltas) {
+            cell.delta = d;
+        }
+    }
+
+    /// Read back the signed codes (SRAM read path).
+    pub fn read_weights(&self) -> Vec<i32> {
+        self.cells.iter().map(|m| m.signed_code()).collect()
+    }
+
+    /// Attenuation of the input differential at column `col` (effect 4).
+    pub fn col_factor(&self, col: usize) -> f64 {
+        1.0 - self.kappa_in * col as f64 / (c::M_COLS - 1) as f64
+    }
+
+    /// Regulation droop factor at row `row` (effect 5).
+    pub fn row_factor(&self, row: usize) -> f64 {
+        1.0 - self.kappa_reg * row as f64 / (c::N_ROWS - 1) as f64
+    }
+
+    /// Accumulated (I_MAC+, I_MAC-) per column for the given per-row input
+    /// differentials — the explicit Eq. (3) evaluation.
+    pub fn column_currents(&self, v_diff: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        assert_eq!(v_diff.len(), c::N_ROWS);
+        let mut i_pos = vec![0.0; c::M_COLS];
+        let mut i_neg = vec![0.0; c::M_COLS];
+        for r in 0..c::N_ROWS {
+            let rowfac = self.row_factor(r);
+            for col in 0..c::M_COLS {
+                let cell = self.cell(r, col);
+                if cell.line == Line::Idle {
+                    continue;
+                }
+                let v = v_diff[r] * self.col_factor(col);
+                let i = v * cell.conductance() * rowfac;
+                match cell.line {
+                    Line::Positive => i_pos[col] += i,
+                    Line::Negative => i_neg[col] += i,
+                    Line::Idle => unreachable!(),
+                }
+            }
+        }
+        (i_pos, i_neg)
+    }
+
+    /// Effective summation-node voltage drop along one column — the
+    /// "Summation Node Voltage Drop" series of Fig. 1: V_REG as seen at row
+    /// r is reduced by the droop factor.
+    pub fn vreg_profile(&self, v_reg: f64) -> Vec<f64> {
+        (0..c::N_ROWS).map(|r| v_reg * self.row_factor(r)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analog::rdac::{InputArray, InputCode, InputDac};
+
+    fn full_input() -> Vec<f64> {
+        let arr = InputArray::ideal();
+        let _ = arr; // silence
+        (0..c::N_ROWS)
+            .map(|_| InputDac::default().differential(InputCode(63)))
+            .collect()
+    }
+
+    #[test]
+    fn ideal_grid_equals_matmul() {
+        // With kappa = 0 and delta = 0, column currents must equal the
+        // dense matmul of Eq. (3).
+        let mut arr = CrossbarArray::ideal();
+        let mut weights = vec![0i32; c::N_ROWS * c::M_COLS];
+        for (i, w) in weights.iter_mut().enumerate() {
+            *w = ((i as i32 * 7) % 127) - 63;
+        }
+        arr.program(&weights);
+        let v: Vec<f64> = (0..c::N_ROWS)
+            .map(|r| InputDac::default().differential(InputCode((r as i32 % 63) - 31)))
+            .collect();
+        let (ip, in_) = arr.column_currents(&v);
+        for col in 0..c::M_COLS {
+            let mut expect = 0.0;
+            for r in 0..c::N_ROWS {
+                let w = weights[r * c::M_COLS + col] as f64;
+                expect += v[r] * w / 64.0 / c::R_U;
+            }
+            let got = ip[col] - in_[col];
+            assert!((got - expect).abs() < 1e-15, "col {col}: {got} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn parasitic_attenuation_monotone_across_columns() {
+        let mut arr = CrossbarArray::new(0.05, 0.0);
+        arr.program(&vec![63; c::N_ROWS * c::M_COLS]);
+        let (ip, _) = arr.column_currents(&full_input());
+        for col in 1..c::M_COLS {
+            assert!(ip[col] < ip[col - 1], "col {col} not attenuated");
+        }
+    }
+
+    #[test]
+    fn regulation_droop_reduces_total_current() {
+        let mut a = CrossbarArray::new(0.0, 0.0);
+        let mut b = CrossbarArray::new(0.0, 0.05);
+        let w = vec![63; c::N_ROWS * c::M_COLS];
+        a.program(&w);
+        b.program(&w);
+        let (ia, _) = a.column_currents(&full_input());
+        let (ib, _) = b.column_currents(&full_input());
+        assert!(ib[0] < ia[0]);
+        // droop profile decreases across rows
+        let prof = b.vreg_profile(c::V_BIAS);
+        assert!(prof.windows(2).all(|w| w[1] < w[0]));
+    }
+
+    #[test]
+    fn program_preserves_deltas() {
+        let mut arr = CrossbarArray::ideal();
+        let deltas: Vec<f64> = (0..c::N_ROWS * c::M_COLS).map(|i| i as f64 * 1e-4).collect();
+        arr.set_deltas(&deltas);
+        arr.program(&vec![5; c::N_ROWS * c::M_COLS]);
+        assert_eq!(arr.cell(3, 4).delta, deltas[3 * c::M_COLS + 4]);
+    }
+
+    #[test]
+    fn program_column_only_touches_column() {
+        let mut arr = CrossbarArray::ideal();
+        arr.program(&vec![7; c::N_ROWS * c::M_COLS]);
+        arr.program_column(5, &vec![-63; c::N_ROWS]);
+        assert_eq!(arr.cell(0, 5).signed_code(), -63);
+        assert_eq!(arr.cell(0, 4).signed_code(), 7);
+        assert_eq!(arr.cell(c::N_ROWS - 1, 6).signed_code(), 7);
+    }
+
+    #[test]
+    fn read_weights_roundtrip() {
+        let mut arr = CrossbarArray::ideal();
+        let w: Vec<i32> = (0..c::N_ROWS * c::M_COLS)
+            .map(|i| ((i as i32 * 13) % 127) - 63)
+            .collect();
+        arr.program(&w);
+        assert_eq!(arr.read_weights(), w);
+    }
+}

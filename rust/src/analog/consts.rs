@@ -1,0 +1,111 @@
+//! Physical/architectural constants of the Acore-CIM core.
+//!
+//! Mirrors `python/compile/params.py` — the two MUST stay in sync; the
+//! parity integration test executes the AOT artifact and this golden model
+//! on identical inputs and asserts the ADC codes agree.
+
+/// N: input rows of the MWC array.
+pub const N_ROWS: usize = 36;
+/// M: output columns of the MWC array.
+pub const M_COLS: usize = 32;
+/// Input magnitude bits (plus one sign bit), B_D.
+pub const B_D: u32 = 6;
+/// Weight magnitude bits (plus two sign bits W6/W7), B_W.
+pub const B_W: u32 = 6;
+/// ADC output bits, B_Q.
+pub const B_Q: u32 = 6;
+/// Maximum input/weight magnitude code (63).
+pub const CODE_MAX: i32 = (1 << B_D) - 1;
+/// Maximum ADC code (63).
+pub const ADC_MAX: i32 = (1 << B_Q) - 1;
+
+/// Low input reference [V].
+pub const V_INL: f64 = 0.2;
+/// High input reference [V].
+pub const V_INH: f64 = 0.6;
+/// Analog zero level [V].
+pub const V_BIAS: f64 = 0.4;
+/// Single-sided DAC swing [V].
+pub const V_SWING: f64 = V_INH - V_BIAS;
+
+/// Unit resistance of the R-2R ladders [Ohm] (polysilicon baseline, Table I).
+pub const R_U: f64 = 385.0e3;
+/// Nominal 2SA transresistance R_SA = R_U / N (Alg. 1; ~10.7 kOhm, Fig. 7).
+pub const R_SA_NOM: f64 = R_U / N_ROWS as f64;
+/// Nominal calibration voltage = (V_INL + V_INH)/2 = V_BIAS.
+pub const V_CAL_NOM: f64 = (V_INL + V_INH) / 2.0;
+
+/// Default ADC references (Section III-B).
+pub const V_ADC_L: f64 = V_INL;
+pub const V_ADC_H: f64 = V_INH;
+
+/// S&H / inference period [s] and inference frequency [Hz].
+pub const T_SH: f64 = 1.0e-6;
+pub const F_INF: f64 = 1.0 / T_SH;
+
+/// Structural parasitic defaults (Fig. 1 effects 4 and 5).
+pub const KAPPA_IN_DEFAULT: f64 = 0.02;
+pub const KAPPA_REG_DEFAULT: f64 = 0.015;
+
+/// C_ADC of Eq. (7): (2^B_Q - 1) / (V_H - V_L).
+pub fn adc_conv_factor(v_l: f64, v_h: f64) -> f64 {
+    ADC_MAX as f64 / (v_h - v_l)
+}
+
+/// Nominal ADC codes per unit code-product sum (dQ/dS) — the digital-side
+/// dequantization constant used by the RISC-V accumulation.
+pub fn code_gain_nominal() -> f64 {
+    let lsb_in = V_SWING / (1 << B_D) as f64;
+    adc_conv_factor(V_ADC_L, V_ADC_H) * R_SA_NOM * lsb_in / (R_U * (1 << B_W) as f64)
+}
+
+/// Nominal ADC code for a zero MAC value (mid-code, 31.5).
+pub fn q_mid_nominal() -> f64 {
+    adc_conv_factor(V_ADC_L, V_ADC_H) * (V_CAL_NOM - V_ADC_L)
+}
+
+/// SA output volts per unit code-product sum (dV_SA/dS) — reference-
+/// independent; used to choose per-layer ADC windows for the DNN mapping.
+pub fn volts_per_cp() -> f64 {
+    let lsb_in = V_SWING / (1 << B_D) as f64;
+    R_SA_NOM * lsb_in / (R_U * (1 << B_W) as f64)
+}
+
+/// Code gain (dQ/dS) at arbitrary ADC references.
+pub fn code_gain_at(v_l: f64, v_h: f64) -> f64 {
+    adc_conv_factor(v_l, v_h) * volts_per_cp()
+}
+
+/// Mid code (Q at S = 0) at arbitrary ADC references.
+pub fn q_mid_at(v_l: f64, v_h: f64) -> f64 {
+    adc_conv_factor(v_l, v_h) * (V_CAL_NOM - v_l)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rsa_matches_paper_fig7() {
+        // Fig. 7: default R_SA = 10.7 kOhm
+        assert!((R_SA_NOM - 10694.4).abs() < 1.0);
+    }
+
+    #[test]
+    fn full_scale_uses_adc_range() {
+        // S_max = N * 63 * 63 must map near (not beyond) the top code.
+        let s_max = (N_ROWS as f64) * 63.0 * 63.0;
+        let q = q_mid_nominal() + code_gain_nominal() * s_max;
+        assert!(q > 60.0 && q < 63.0, "q_fullscale={q}");
+    }
+
+    #[test]
+    fn c_adc_default() {
+        assert!((adc_conv_factor(V_ADC_L, V_ADC_H) - 157.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mid_code() {
+        assert!((q_mid_nominal() - 31.5).abs() < 1e-9);
+    }
+}

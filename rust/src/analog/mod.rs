@@ -1,0 +1,450 @@
+//! Circuit-level behavioural model of the mixed-signal CIM core — the rust
+//! "golden" reference that mirrors the JAX/Pallas artifact math exactly
+//! (see python/compile/kernels/ref.py).
+//!
+//! Two evaluation paths:
+//!   * `forward_golden` — explicit per-cell walk through every component
+//!     (DAC -> parasitics -> MWC -> 2SA -> ADC). Slow, maximally checkable.
+//!   * `forward_batch`  — the algebraically folded form (two GEMMs + affine
+//!     epilogue), identical math, used on the hot path. `tests` +
+//!     `fast_matches_golden` keep the two in lock-step.
+
+pub mod adc;
+pub mod array;
+pub mod consts;
+pub mod mwc;
+pub mod noise;
+pub mod power;
+pub mod rdac;
+pub mod samp;
+pub mod variation;
+
+use adc::FlashAdc;
+use array::CrossbarArray;
+use consts as c;
+use noise::NoiseModel;
+use rdac::{InputCode, InputDac};
+use samp::SummingAmp;
+use variation::VariationSample;
+
+use crate::config::SimConfig;
+
+/// The complete mixed-signal CIM core of one die.
+pub struct CimAnalogModel {
+    pub dacs: Vec<InputDac>,
+    pub array: CrossbarArray,
+    pub amps: Vec<SummingAmp>,
+    pub adc: FlashAdc,
+    pub noise: NoiseModel,
+    /// folded fast-path state (rebuilt lazily after programming/trimming)
+    folded: Option<Folded>,
+}
+
+/// Folded coefficients:
+///   q_lin = xe·G + qc,  G = Gp·diag(qa) - Gn·diag(qb)   (single GEMM —
+///   the per-column epilogue scalars fold into the conductance matrix,
+///   §Perf optimization 1)
+///   q     = clip(round(q_lin + qd*(q_lin - qm)^3 + noise))
+///
+/// `Folded` is also the unit of the DNN scheduler's tile cache (§Perf
+/// optimization 2): a weight tile folded once under fixed trims/refs can
+/// be replayed on every inference without re-programming the array model.
+#[derive(Clone)]
+pub struct Folded {
+    /// combined, column-scaled conductances, N*M row-major
+    g_comb: Vec<f32>,
+    qc: Vec<f32>, // M
+    qd: Vec<f32>,
+    qm: Vec<f32>,
+}
+
+impl CimAnalogModel {
+    /// Build a die from a variation sample + config (noise seeded from the
+    /// die seed so the whole experiment replays from one number).
+    pub fn from_sample(cfg: &SimConfig, s: &VariationSample) -> Self {
+        let dacs = (0..c::N_ROWS)
+            .map(|r| InputDac { gain: s.dac_gain[r], offset: s.dac_off[r], r_out: 0.0 })
+            .collect();
+        let mut array = CrossbarArray::new(s.kappa_in, s.kappa_reg);
+        array.set_deltas(&s.cell_delta);
+        let amps = (0..c::M_COLS)
+            .map(|col| SummingAmp {
+                alpha_p: s.alpha_p[col],
+                alpha_n: s.alpha_n[col],
+                beta: s.beta[col],
+                gamma3: s.gamma3[col],
+                ..Default::default()
+            })
+            .collect();
+        let adc = FlashAdc { alpha_d: s.adc_alpha, beta_d: s.adc_beta, ..Default::default() };
+        let noise = NoiseModel::new(cfg.sigma_noise, cfg.sigma_noise * 0.3, s.seed);
+        Self { dacs, array, amps, adc, noise, folded: None }
+    }
+
+    /// Error-free die with silent noise.
+    pub fn ideal() -> Self {
+        let cfg = SimConfig { sigma_noise: 0.0, ..SimConfig::default() };
+        Self::from_sample(&cfg, &VariationSample::ideal())
+    }
+
+    pub fn program(&mut self, weights: &[i32]) {
+        self.array.program(weights);
+        self.folded = None;
+    }
+
+    pub fn program_column(&mut self, col: usize, weights: &[i32]) {
+        self.array.program_column(col, weights);
+        self.folded = None;
+    }
+
+    /// Invalidate the folded fast-path state after direct array mutation
+    /// (e.g. the AXI weight write port programming single cells).
+    pub fn invalidate_fold(&mut self) {
+        self.folded = None;
+    }
+
+    /// Apply BISC trim codes to one column.
+    pub fn set_trims(&mut self, col: usize, pot_p: u32, pot_n: u32, cal: u32) {
+        let amp = &mut self.amps[col];
+        amp.pot_p = pot_p;
+        amp.pot_n = pot_n;
+        amp.cal = cal;
+        self.folded = None;
+    }
+
+    /// ADC reference control (BISC clipping avoidance, Alg. 1).
+    pub fn set_adc_refs(&mut self, v_l: f64, v_h: f64) {
+        self.adc.v_l = v_l;
+        self.adc.v_h = v_h;
+        self.folded = None;
+    }
+
+    /// Pre-ADC SA output voltages for one input vector (noise-free) —
+    /// used by Fig. 7's error-distribution reproduction.
+    pub fn sa_outputs(&self, x: &[i32]) -> Vec<f64> {
+        let v: Vec<f64> = self
+            .dacs
+            .iter()
+            .zip(x)
+            .map(|(d, &code)| d.differential(InputCode::clamp(code)))
+            .collect();
+        let (i_pos, i_neg) = self.array.column_currents(&v);
+        (0..c::M_COLS)
+            .map(|col| self.amps[col].output(i_pos[col], i_neg[col]))
+            .collect()
+    }
+
+    /// Golden path: one input vector -> M ADC codes, with noise.
+    pub fn forward_golden(&mut self, x: &[i32]) -> Vec<u32> {
+        let mut v_sa = self.sa_outputs(x);
+        for v in v_sa.iter_mut() {
+            *v += self.noise.sample();
+        }
+        v_sa.iter().map(|&v| self.adc.quantize(v)).collect()
+    }
+
+    /// Golden path with per-read averaging (BISC characterization reads).
+    pub fn forward_averaged(&mut self, x: &[i32], reads: usize) -> Vec<f64> {
+        assert!(reads > 0);
+        let mut acc = vec![0.0; c::M_COLS];
+        for _ in 0..reads {
+            let q = self.forward_golden(x);
+            for (a, &qi) in acc.iter_mut().zip(&q) {
+                *a += qi as f64;
+            }
+        }
+        acc.iter_mut().for_each(|a| *a /= reads as f64);
+        acc
+    }
+
+    fn fold(&mut self) {
+        let c_adc = self.adc.conv_factor();
+        let a = self.adc.alpha_d * c_adc;
+        let mut qa = vec![0f64; c::M_COLS];
+        let mut qb = vec![0f64; c::M_COLS];
+        let mut qc = vec![0f32; c::M_COLS];
+        let mut qd = vec![0f32; c::M_COLS];
+        let mut qm = vec![0f32; c::M_COLS];
+        for col in 0..c::M_COLS {
+            let amp = &self.amps[col];
+            let colfac = self.array.col_factor(col);
+            let scale = a * colfac;
+            qa[col] = scale * amp.alpha_p * amp.rsa_p();
+            qb[col] = scale * amp.alpha_n * amp.rsa_n();
+            qc[col] = (a * (amp.vcal() + amp.beta - self.adc.v_l) + self.adc.beta_d) as f32;
+            // cubic distortion in code units (see python model.fold_params)
+            qd[col] = (amp.gamma3 / (a * a)) as f32;
+            qm[col] = (a * (c::V_BIAS - self.adc.v_l) + self.adc.beta_d) as f32;
+        }
+        // single-GEMM fold: the positive/negative line split collapses
+        // because qa/qb are per-column constants
+        let mut g_comb = vec![0f32; c::N_ROWS * c::M_COLS];
+        for r in 0..c::N_ROWS {
+            let rowfac = self.array.row_factor(r);
+            for col in 0..c::M_COLS {
+                let cell = self.array.cell(r, col);
+                let g = cell.conductance() * rowfac;
+                g_comb[r * c::M_COLS + col] = match cell.line {
+                    mwc::Line::Positive => (g * qa[col]) as f32,
+                    mwc::Line::Negative => (-g * qb[col]) as f32,
+                    mwc::Line::Idle => 0.0,
+                };
+            }
+        }
+        self.folded = Some(Folded { g_comb, qc, qd, qm });
+    }
+
+    /// Folded fast path: batch of input vectors (row-major B x N) -> ADC
+    /// codes (B x M). Noise-free (deterministic hot path; callers needing
+    /// noise add it explicitly like the HLO artifact's noise operand).
+    pub fn forward_batch(&mut self, x: &[i32], batch: usize) -> Vec<u32> {
+        assert_eq!(x.len(), batch * c::N_ROWS);
+        if self.folded.is_none() {
+            self.fold();
+        }
+        // fold input DAC transfer: xe = gain*x*lsb + off
+        let lsb = InputDac::lsb();
+        let mut xe = vec![0f32; batch * c::N_ROWS];
+        for b in 0..batch {
+            for r in 0..c::N_ROWS {
+                let d = &self.dacs[r];
+                xe[b * c::N_ROWS + r] =
+                    (d.gain * x[b * c::N_ROWS + r] as f64 * lsb + d.offset) as f32;
+            }
+        }
+        let f = self.folded.as_ref().unwrap();
+        let mut out = vec![0u32; batch * c::M_COLS];
+        // single GEMM: out[b,c] = sum_r xe[b,r] * G[r,c]; N=36 M=32 —
+        // the 32-wide column loop auto-vectorizes (§Perf optimization 1)
+        for b in 0..batch {
+            let xrow = &xe[b * c::N_ROWS..(b + 1) * c::N_ROWS];
+            let mut acc = [0f32; c::M_COLS];
+            for r in 0..c::N_ROWS {
+                let xv = xrow[r];
+                if xv == 0.0 {
+                    continue;
+                }
+                let g = &f.g_comb[r * c::M_COLS..(r + 1) * c::M_COLS];
+                for col in 0..c::M_COLS {
+                    acc[col] += xv * g[col];
+                }
+            }
+            for col in 0..c::M_COLS {
+                let q_lin = acc[col] + f.qc[col];
+                let t = q_lin - f.qm[col];
+                let q = q_lin + f.qd[col] * t * t * t;
+                out[b * c::M_COLS + col] =
+                    q.round().clamp(0.0, c::ADC_MAX as f32) as u32;
+            }
+        }
+        out
+    }
+
+    /// Fold a weight tile under the CURRENT trims/ADC refs and hand the
+    /// result to the caller (the DNN scheduler caches these per tile).
+    pub fn fold_tile(&mut self, weights: &[i32]) -> Folded {
+        self.program(weights);
+        self.fold();
+        self.folded.as_ref().unwrap().clone()
+    }
+
+    /// Evaluate a previously folded tile — identical math to
+    /// `forward_batch` but without touching the array state.
+    pub fn forward_folded(&self, tile: &Folded, x: &[i32], batch: usize) -> Vec<u32> {
+        assert_eq!(x.len(), batch * c::N_ROWS);
+        let lsb = InputDac::lsb();
+        let mut out = vec![0u32; batch * c::M_COLS];
+        let mut xe = [0f32; c::N_ROWS];
+        for b in 0..batch {
+            for r in 0..c::N_ROWS {
+                let d = &self.dacs[r];
+                xe[r] = (d.gain * x[b * c::N_ROWS + r] as f64 * lsb + d.offset) as f32;
+            }
+            let mut acc = [0f32; c::M_COLS];
+            for r in 0..c::N_ROWS {
+                let xv = xe[r];
+                if xv == 0.0 {
+                    continue;
+                }
+                let g = &tile.g_comb[r * c::M_COLS..(r + 1) * c::M_COLS];
+                for col in 0..c::M_COLS {
+                    acc[col] += xv * g[col];
+                }
+            }
+            for col in 0..c::M_COLS {
+                let q_lin = acc[col] + tile.qc[col];
+                let t = q_lin - tile.qm[col];
+                let q = q_lin + tile.qd[col] * t * t * t;
+                out[b * c::M_COLS + col] = q.round().clamp(0.0, c::ADC_MAX as f32) as u32;
+            }
+        }
+        out
+    }
+
+    /// Ideal output of Eq. (7) in continuous code units for a batch —
+    /// the Q_nom used by BISC and the compute-SNR evaluation.
+    pub fn q_nominal(x: &[i32], weights: &[i32], batch: usize) -> Vec<f64> {
+        assert_eq!(x.len(), batch * c::N_ROWS);
+        assert_eq!(weights.len(), c::N_ROWS * c::M_COLS);
+        let k = c::code_gain_nominal();
+        let mid = c::q_mid_nominal();
+        let mut out = vec![0.0; batch * c::M_COLS];
+        for b in 0..batch {
+            for col in 0..c::M_COLS {
+                let mut s = 0i64;
+                for r in 0..c::N_ROWS {
+                    s += x[b * c::N_ROWS + r] as i64 * weights[r * c::M_COLS + col] as i64;
+                }
+                out[b * c::M_COLS + col] = mid + k * s as f64;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_weights(rng: &mut Rng) -> Vec<i32> {
+        (0..c::N_ROWS * c::M_COLS)
+            .map(|_| rng.int_in(-63, 63) as i32)
+            .collect()
+    }
+
+    fn random_inputs(rng: &mut Rng, batch: usize) -> Vec<i32> {
+        (0..batch * c::N_ROWS)
+            .map(|_| rng.int_in(-63, 63) as i32)
+            .collect()
+    }
+
+    #[test]
+    fn fast_matches_golden_noise_free() {
+        let mut cfg = SimConfig::default();
+        cfg.sigma_noise = 0.0;
+        let sample = VariationSample::draw(&cfg);
+        let mut m = CimAnalogModel::from_sample(&cfg, &sample);
+        let mut rng = Rng::new(11);
+        let w = random_weights(&mut rng);
+        m.program(&w);
+        let batch = 16;
+        let x = random_inputs(&mut rng, batch);
+        let fast = m.forward_batch(&x, batch);
+        let mut mismatches = 0;
+        for b in 0..batch {
+            let golden = m.forward_golden(&x[b * c::N_ROWS..(b + 1) * c::N_ROWS]);
+            for col in 0..c::M_COLS {
+                let f = fast[b * c::M_COLS + col] as i64;
+                let g = golden[col] as i64;
+                assert!((f - g).abs() <= 1, "b={b} col={col}: {f} vs {g}");
+                if f != g {
+                    mismatches += 1;
+                }
+            }
+        }
+        // f32 vs f64 rounding ties must be rare
+        assert!(mismatches < batch * c::M_COLS / 50, "{mismatches} ties");
+    }
+
+    #[test]
+    fn ideal_die_matches_q_nominal() {
+        let mut m = CimAnalogModel::ideal();
+        let mut rng = Rng::new(5);
+        let w = random_weights(&mut rng);
+        m.program(&w);
+        let batch = 8;
+        let x = random_inputs(&mut rng, batch);
+        let q = m.forward_batch(&x, batch);
+        let nom = CimAnalogModel::q_nominal(&x, &w, batch);
+        for i in 0..batch * c::M_COLS {
+            let expect = nom[i].round().clamp(0.0, 63.0);
+            assert!(
+                (q[i] as f64 - expect).abs() <= 1.0,
+                "i={i}: {} vs {expect}",
+                q[i]
+            );
+        }
+    }
+
+    #[test]
+    fn errors_shift_outputs_away_from_nominal() {
+        let cfg = SimConfig::default().scaled(1.0);
+        let sample = VariationSample::draw(&cfg);
+        let mut m = CimAnalogModel::from_sample(&cfg, &sample);
+        let mut rng = Rng::new(9);
+        let w = random_weights(&mut rng);
+        m.program(&w);
+        let batch = 32;
+        let x = random_inputs(&mut rng, batch);
+        let q = m.forward_batch(&x, batch);
+        let nom = CimAnalogModel::q_nominal(&x, &w, batch);
+        let mean_err: f64 = q
+            .iter()
+            .zip(&nom)
+            .map(|(&a, &n)| (a as f64 - n).abs())
+            .sum::<f64>()
+            / q.len() as f64;
+        assert!(mean_err > 0.5, "errors too small: {mean_err}");
+    }
+
+    #[test]
+    fn trims_change_transfer() {
+        let mut m = CimAnalogModel::ideal();
+        let w = vec![40i32; c::N_ROWS * c::M_COLS];
+        m.program(&w);
+        let x = vec![30i32; c::N_ROWS];
+        let q0 = m.forward_batch(&x, 1);
+        m.set_trims(0, samp::POT_MAX, samp::POT_MAX, samp::CAL_MAX);
+        let q1 = m.forward_batch(&x, 1);
+        assert_ne!(q0[0], q1[0]);
+        assert_eq!(q0[1], q1[1], "other columns untouched");
+    }
+
+    #[test]
+    fn adc_refs_rescale_codes() {
+        let mut m = CimAnalogModel::ideal();
+        m.program(&vec![63; c::N_ROWS * c::M_COLS]);
+        let x = vec![63i32; c::N_ROWS];
+        let q_tight = m.forward_batch(&x, 1)[0];
+        m.set_adc_refs(0.19, 0.63);
+        let q_wide = m.forward_batch(&x, 1)[0];
+        assert!(q_wide < q_tight, "wider range => smaller code for same V");
+    }
+
+    #[test]
+    fn noise_perturbs_golden_path() {
+        let mut cfg = SimConfig::default();
+        cfg.sigma_noise = 0.01; // huge: ~1.6 codes rms
+        let sample = VariationSample::draw(&cfg);
+        let mut m = CimAnalogModel::from_sample(&cfg, &sample);
+        m.program(&vec![20; c::N_ROWS * c::M_COLS]);
+        let x = vec![20i32; c::N_ROWS];
+        let a = m.forward_golden(&x);
+        let b = m.forward_golden(&x);
+        assert_ne!(a, b, "independent noise draws should differ");
+    }
+
+    #[test]
+    fn averaging_converges_to_noise_free() {
+        let mut cfg = SimConfig::default();
+        cfg.sigma_noise = 0.005;
+        let sample = VariationSample::draw(&cfg);
+        let mut m = CimAnalogModel::from_sample(&cfg, &sample);
+        m.program(&vec![30; c::N_ROWS * c::M_COLS]);
+        let x = vec![25i32; c::N_ROWS];
+        let avg = m.forward_averaged(&x, 64);
+        cfg.sigma_noise = 0.0;
+        let mut m2 = CimAnalogModel::from_sample(&cfg, &sample);
+        m2.program(&vec![30; c::N_ROWS * c::M_COLS]);
+        let clean = m2.forward_batch(&x, 1);
+        for col in 0..c::M_COLS {
+            assert!(
+                (avg[col] - clean[col] as f64).abs() < 1.5,
+                "col {col}: {} vs {}",
+                avg[col],
+                clean[col]
+            );
+        }
+    }
+}

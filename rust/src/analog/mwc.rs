@@ -1,0 +1,145 @@
+//! MDAC Weight Cell (MWC) — paper Fig. 5 / Section IV.
+//!
+//! Each cell stores a 6-bit weight magnitude W5:0 in 6T-SRAM plus two sign
+//! bits (W6, W7) that route the cell current to the positive or negative
+//! summation line (or leave the cell idle when both are 0 — reducing
+//! off-state leakage, Section IV-A). Multiplication is performed by an
+//! R-2R ladder whose effective conductance is W/2^B_W * 1/R_U.
+
+use super::consts as c;
+
+/// Polarity routing of a cell (one-hot sign bits W6/W7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Line {
+    /// W6 = 1: current onto the positive summation line (I_MAC+).
+    Positive,
+    /// W7 = 1: current onto the negative summation line (I_MAC-).
+    Negative,
+    /// W6 = W7 = 0: idle cell (both switches off).
+    Idle,
+}
+
+/// One MWC: stored weight code + sampled conductance mismatch.
+#[derive(Debug, Clone, Copy)]
+pub struct Mwc {
+    /// magnitude code 0..=63 (W5:0)
+    pub magnitude: u8,
+    pub line: Line,
+    /// fractional conductance mismatch (Fig. 1 effect 6)
+    pub delta: f64,
+}
+
+impl Default for Mwc {
+    fn default() -> Self {
+        Self { magnitude: 0, line: Line::Idle, delta: 0.0 }
+    }
+}
+
+impl Mwc {
+    /// Program from a signed weight code in [-63, 63]; 0 idles the cell.
+    pub fn program(w: i32) -> Self {
+        let w = w.clamp(-c::CODE_MAX, c::CODE_MAX);
+        let line = match w.signum() {
+            1 => Line::Positive,
+            -1 => Line::Negative,
+            _ => Line::Idle,
+        };
+        Self { magnitude: w.unsigned_abs() as u8, line, delta: 0.0 }
+    }
+
+    pub fn with_delta(mut self, delta: f64) -> Self {
+        self.delta = delta;
+        self
+    }
+
+    /// Signed view of the stored code.
+    pub fn signed_code(&self) -> i32 {
+        match self.line {
+            Line::Positive => self.magnitude as i32,
+            Line::Negative => -(self.magnitude as i32),
+            Line::Idle => 0,
+        }
+    }
+
+    /// Effective conductance [S] including mismatch: W/2^B_W / R_U * (1+δ).
+    /// Idle cells contribute nothing.
+    pub fn conductance(&self) -> f64 {
+        if self.line == Line::Idle {
+            return 0.0;
+        }
+        self.magnitude as f64 / (1u64 << c::B_W) as f64 / c::R_U * (1.0 + self.delta)
+    }
+
+    /// Cell current [A] for a differential input voltage, split onto the
+    /// (positive, negative) lines per the sign-bit routing (Eq. 3).
+    pub fn current(&self, v_diff: f64) -> (f64, f64) {
+        let i = v_diff * self.conductance();
+        match self.line {
+            Line::Positive => (i, 0.0),
+            Line::Negative => (0.0, i),
+            Line::Idle => (0.0, 0.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn program_routes_sign_bits() {
+        assert_eq!(Mwc::program(17).line, Line::Positive);
+        assert_eq!(Mwc::program(-17).line, Line::Negative);
+        assert_eq!(Mwc::program(0).line, Line::Idle);
+        assert_eq!(Mwc::program(17).signed_code(), 17);
+        assert_eq!(Mwc::program(-17).signed_code(), -17);
+    }
+
+    #[test]
+    fn program_clamps() {
+        assert_eq!(Mwc::program(1000).magnitude, 63);
+        assert_eq!(Mwc::program(-1000).signed_code(), -63);
+    }
+
+    #[test]
+    fn idle_cell_draws_nothing() {
+        let cell = Mwc::program(0);
+        assert_eq!(cell.conductance(), 0.0);
+        assert_eq!(cell.current(0.2), (0.0, 0.0));
+    }
+
+    #[test]
+    fn conductance_scales_with_code() {
+        let g1 = Mwc::program(1).conductance();
+        let g63 = Mwc::program(63).conductance();
+        assert!((g63 / g1 - 63.0).abs() < 1e-9);
+        // full code: 63/64 / R_U
+        assert!((g63 - 63.0 / 64.0 / c::R_U).abs() < 1e-15);
+    }
+
+    #[test]
+    fn current_splits_by_line() {
+        let v = 0.1;
+        let (ip, in_) = Mwc::program(32).current(v);
+        assert!(ip > 0.0 && in_ == 0.0);
+        let (ip2, in2) = Mwc::program(-32).current(v);
+        assert!(ip2 == 0.0 && in2 > 0.0);
+        // same magnitude => same current on its line
+        assert!((ip - in2).abs() < 1e-18);
+    }
+
+    #[test]
+    fn mismatch_shifts_conductance() {
+        let base = Mwc::program(40).conductance();
+        let hi = Mwc::program(40).with_delta(0.05).conductance();
+        assert!((hi / base - 1.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unit_current_matches_table1() {
+        // Table I footnote: ~2.6 uA per MWC at 1 V across full-scale poly R_U?
+        // Sanity: full-code cell at 1 V -> (63/64)/385k ~ 2.56 uA.
+        let i = Mwc::program(63).conductance() * 1.0;
+        assert!((i - 2.56e-6).abs() < 0.05e-6, "i={i}");
+    }
+}

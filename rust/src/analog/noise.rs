@@ -1,0 +1,116 @@
+//! Random noise sources (Section II-C: thermal noise, flicker noise,
+//! residual random errors that calibration cannot remove).
+//!
+//! The SA-referred noise is modelled as white Gaussian with rms
+//! `sigma_v` plus an optional 1/f (pink) component synthesized by the
+//! Voss-McCartney algorithm. BISC averages repeated reads to suppress it
+//! (Section VI-C); the residual floor after calibration in Figs. 7/10 comes
+//! from here.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct NoiseModel {
+    /// white (thermal) rms [V]
+    pub sigma_white: f64,
+    /// pink (flicker) rms [V]
+    pub sigma_pink: f64,
+    rng: Rng,
+    /// Voss-McCartney rows for pink noise
+    pink_rows: [f64; 16],
+    pink_counter: u64,
+}
+
+impl NoiseModel {
+    pub fn new(sigma_white: f64, sigma_pink: f64, seed: u64) -> Self {
+        Self {
+            sigma_white,
+            sigma_pink,
+            rng: Rng::new(seed ^ 0x4E01_5E00),
+            pink_rows: [0.0; 16],
+            pink_counter: 0,
+        }
+    }
+
+    pub fn silent() -> Self {
+        Self::new(0.0, 0.0, 0)
+    }
+
+    /// One SA-referred noise sample [V].
+    pub fn sample(&mut self) -> f64 {
+        let white = self.rng.normal() * self.sigma_white;
+        let pink = if self.sigma_pink > 0.0 { self.pink_sample() } else { 0.0 };
+        white + pink
+    }
+
+    /// Voss-McCartney: update the row selected by the trailing zeros of the
+    /// counter, sum all rows; normalized by sqrt(rows) to keep rms ~ sigma.
+    fn pink_sample(&mut self) -> f64 {
+        self.pink_counter = self.pink_counter.wrapping_add(1);
+        let row = (self.pink_counter.trailing_zeros() as usize).min(self.pink_rows.len() - 1);
+        self.pink_rows[row] = self.rng.normal();
+        let sum: f64 = self.pink_rows.iter().sum();
+        sum * self.sigma_pink / (self.pink_rows.len() as f64).sqrt()
+    }
+
+    /// Average of `n` samples — models BISC's repeated-read averaging.
+    pub fn averaged(&mut self, n: usize) -> f64 {
+        assert!(n > 0);
+        (0..n).map(|_| self.sample()).sum::<f64>() / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn silent_is_zero() {
+        let mut nm = NoiseModel::silent();
+        for _ in 0..10 {
+            assert_eq!(nm.sample(), 0.0);
+        }
+    }
+
+    #[test]
+    fn white_rms_matches_sigma() {
+        let mut nm = NoiseModel::new(1.5e-3, 0.0, 7);
+        let xs: Vec<f64> = (0..40_000).map(|_| nm.sample()).collect();
+        let rms = stats::rms(&xs);
+        assert!((rms - 1.5e-3).abs() < 0.1e-3, "rms={rms}");
+    }
+
+    #[test]
+    fn averaging_reduces_variance() {
+        let mut nm = NoiseModel::new(1.0e-3, 0.0, 9);
+        let raw: Vec<f64> = (0..4_000).map(|_| nm.sample()).collect();
+        let avg: Vec<f64> = (0..4_000).map(|_| nm.averaged(16)).collect();
+        let r = stats::variance(&avg) / stats::variance(&raw);
+        // 16x averaging => ~1/16 variance
+        assert!(r < 0.12, "ratio={r}");
+    }
+
+    #[test]
+    fn pink_noise_has_low_frequency_energy() {
+        // crude check: adjacent-sample correlation of pink > white
+        let mut white = NoiseModel::new(1e-3, 0.0, 3);
+        let mut pink = NoiseModel::new(0.0, 1e-3, 3);
+        let corr = |nm: &mut NoiseModel| {
+            let xs: Vec<f64> = (0..20_000).map(|_| nm.sample()).collect();
+            let m = stats::mean(&xs);
+            let num: f64 = xs.windows(2).map(|w| (w[0] - m) * (w[1] - m)).sum();
+            num / stats::variance(&xs) / (xs.len() - 1) as f64
+        };
+        assert!(corr(&mut pink) > corr(&mut white) + 0.1);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = NoiseModel::new(1e-3, 1e-4, 42);
+        let mut b = NoiseModel::new(1e-3, 1e-4, 42);
+        for _ in 0..100 {
+            assert_eq!(a.sample(), b.sample());
+        }
+    }
+}

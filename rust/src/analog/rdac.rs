@@ -1,0 +1,181 @@
+//! Input R-2R MDAC cell (paper Fig. 3): a 6-bit magnitude + sign-bit DAC
+//! with dual references (V_INL for positive codes, V_INH for negative),
+//! biased so the analog zero sits at V_BIAS = (V_INL + V_INH)/2.
+//!
+//! The behavioural transfer is
+//!     V_DAC(d) = V_BIAS + gain * d * LSB + offset,   LSB = V_SWING / 2^B_D
+//! where `gain`/`offset` carry the per-row non-idealities of Fig. 1 effect 1
+//! (finite output impedance, load dependency, process variation). The
+//! structural load-dependency model used by the Fig. 1 reproduction is in
+//! `loaded_output`.
+
+use super::consts as c;
+
+/// Signed sign-magnitude input code: sign bit D6 plus magnitude D5:0.
+/// Stored as i32 in [-63, 63] for ergonomics; `InputCode::clamp` saturates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InputCode(pub i32);
+
+impl InputCode {
+    pub fn clamp(v: i32) -> Self {
+        Self(v.clamp(-c::CODE_MAX, c::CODE_MAX))
+    }
+
+    pub fn magnitude(self) -> u32 {
+        self.0.unsigned_abs()
+    }
+
+    pub fn sign_bit(self) -> bool {
+        self.0 < 0
+    }
+}
+
+/// One input DAC channel with its sampled per-row non-idealities.
+#[derive(Debug, Clone)]
+pub struct InputDac {
+    /// multiplicative gain error (~1.0)
+    pub gain: f64,
+    /// additive output offset [V]
+    pub offset: f64,
+    /// output resistance R_D [Ohm] (driver, Fig. 1 effect 2)
+    pub r_out: f64,
+}
+
+impl Default for InputDac {
+    fn default() -> Self {
+        Self { gain: 1.0, offset: 0.0, r_out: 0.0 }
+    }
+}
+
+impl InputDac {
+    /// Ideal unloaded LSB size [V].
+    pub fn lsb() -> f64 {
+        c::V_SWING / (1 << c::B_D) as f64
+    }
+
+    /// Differential output (V_DAC - V_BIAS) for a signed code — this is the
+    /// quantity the MWC array multiplies (Eq. 3).
+    pub fn differential(&self, code: InputCode) -> f64 {
+        self.gain * code.0 as f64 * Self::lsb() + self.offset
+    }
+
+    /// Absolute output voltage.
+    pub fn output(&self, code: InputCode) -> f64 {
+        c::V_BIAS + self.differential(code)
+    }
+
+    /// Output under a finite load resistance R_L to the bias rail —
+    /// reproduces the "DAC Non-Idealities" plot of Fig. 1: the differential
+    /// is attenuated by the R_out / R_L divider.
+    pub fn loaded_output(&self, code: InputCode, r_load: f64) -> f64 {
+        let att = r_load / (r_load + self.r_out);
+        c::V_BIAS + self.differential(code) * att
+    }
+
+    /// Transfer error in LSBs versus the ideal DAC at a given load.
+    pub fn error_lsb(&self, code: InputCode, r_load: f64) -> f64 {
+        let ideal = code.0 as f64 * Self::lsb();
+        (self.loaded_output(code, r_load) - c::V_BIAS - ideal) / Self::lsb()
+    }
+}
+
+/// The input array: N DACs + S&H chain (Section III-B-1). The S&H is
+/// behaviourally transparent here (it holds the DAC value for T_S&H); its
+/// droop/feedthrough can be lumped into `offset`.
+#[derive(Debug, Clone)]
+pub struct InputArray {
+    pub dacs: Vec<InputDac>,
+}
+
+impl InputArray {
+    pub fn ideal() -> Self {
+        Self { dacs: vec![InputDac::default(); c::N_ROWS] }
+    }
+
+    /// Differential voltages for a full input vector.
+    pub fn differentials(&self, codes: &[i32]) -> Vec<f64> {
+        assert_eq!(codes.len(), c::N_ROWS);
+        self.dacs
+            .iter()
+            .zip(codes)
+            .map(|(d, &x)| d.differential(InputCode::clamp(x)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_transfer_is_symmetric_and_monotone() {
+        let d = InputDac::default();
+        let mut prev = f64::NEG_INFINITY;
+        for code in -63..=63 {
+            let v = d.output(InputCode(code));
+            assert!(v > prev, "not monotone at {code}");
+            prev = v;
+            let vm = d.output(InputCode(-code));
+            assert!(
+                ((v - c::V_BIAS) + (vm - c::V_BIAS)).abs() < 1e-12,
+                "not symmetric at {code}"
+            );
+        }
+    }
+
+    #[test]
+    fn full_scale_hits_references() {
+        let d = InputDac::default();
+        // +63 approaches V_INH - 1 LSB; -63 approaches V_INL + 1 LSB
+        let top = d.output(InputCode(63));
+        let bot = d.output(InputCode(-63));
+        assert!((top - (c::V_INH - InputDac::lsb())).abs() < 1e-12);
+        assert!((bot - (c::V_INL + InputDac::lsb())).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clamp_saturates() {
+        assert_eq!(InputCode::clamp(100).0, 63);
+        assert_eq!(InputCode::clamp(-100).0, -63);
+        assert_eq!(InputCode::clamp(5).0, 5);
+    }
+
+    #[test]
+    fn sign_magnitude_fields() {
+        let code = InputCode(-42);
+        assert!(code.sign_bit());
+        assert_eq!(code.magnitude(), 42);
+    }
+
+    #[test]
+    fn loading_attenuates_differential() {
+        let d = InputDac { r_out: 1000.0, ..Default::default() };
+        let unloaded = d.output(InputCode(40));
+        let loaded = d.loaded_output(InputCode(40), 5_000.0);
+        let heavier = d.loaded_output(InputCode(40), 11_000.0);
+        assert!(loaded < unloaded);
+        // heavier R_L (larger) means lighter loading => closer to ideal
+        assert!((heavier - c::V_BIAS).abs() > (loaded - c::V_BIAS).abs());
+        // error grows with code magnitude (Fig. 1 top-left plot shape)
+        assert!(d.error_lsb(InputCode(63), 5_000.0).abs() > d.error_lsb(InputCode(3), 5_000.0).abs());
+    }
+
+    #[test]
+    fn gain_offset_errors_apply() {
+        let d = InputDac { gain: 1.05, offset: 0.001, r_out: 0.0 };
+        let v = d.differential(InputCode(10));
+        let ideal = 10.0 * InputDac::lsb();
+        assert!((v - (1.05 * ideal + 0.001)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn input_array_vectorizes() {
+        let arr = InputArray::ideal();
+        let mut codes = vec![0i32; c::N_ROWS];
+        codes[0] = 63;
+        codes[1] = -63;
+        let v = arr.differentials(&codes);
+        assert_eq!(v.len(), c::N_ROWS);
+        assert!(v[0] > 0.0 && v[1] < 0.0 && v[2] == 0.0);
+    }
+}

@@ -1,0 +1,190 @@
+//! Two-stage Summation Amplifier (2SA) — paper Fig. 4 / Section VI.
+//!
+//! SA1 sums the positive line currents; SA2 sums the negative line and
+//! inverts SA1's output, producing
+//!     V_SA = V_CAL + R_SA_p * I+ - R_SA_n * I-   (nominal)
+//! Non-idealities: per-line gain errors alpha_p / alpha_n (finite open-loop
+//! gain, feedback mismatch) and a combined input-referred offset beta.
+//!
+//! BISC trim hardware (Section VI-A): a digital potentiometer in the
+//! negative feedback path tunes R_SA (per line), and a 6-bit voltage-mode
+//! R-2R calibration DAC in the positive feedback loop tunes V_CAL.
+
+use super::consts as c;
+
+/// Digital potentiometer trimming R_SA: `POT_BITS`-bit code over
+/// [R_SA_MIN, R_SA_MAX]. Default mid-scale lands on R_SA_NOM.
+pub const POT_BITS: u32 = 8;
+pub const POT_MAX: u32 = (1 << POT_BITS) - 1;
+/// Trim range: +/-40% around nominal — wide enough to correct the paper's
+/// g in ~[0.8, 1.25] (Fig. 8b) with margin.
+pub const R_SA_MIN: f64 = c::R_SA_NOM * 0.6;
+pub const R_SA_MAX: f64 = c::R_SA_NOM * 1.4;
+
+/// Calibration DAC: 6-bit over [V_CAL_MIN, V_CAL_MAX].
+pub const CAL_BITS: u32 = 6;
+pub const CAL_MAX: u32 = (1 << CAL_BITS) - 1;
+pub const V_CAL_MIN: f64 = c::V_CAL_NOM - 0.1;
+pub const V_CAL_MAX: f64 = c::V_CAL_NOM + 0.1;
+
+/// Convert a potentiometer code to a transresistance [Ohm].
+pub fn pot_to_rsa(code: u32) -> f64 {
+    let code = code.min(POT_MAX);
+    R_SA_MIN + (R_SA_MAX - R_SA_MIN) * code as f64 / POT_MAX as f64
+}
+
+/// Nearest potentiometer code for a target transresistance.
+pub fn rsa_to_pot(rsa: f64) -> u32 {
+    let t = (rsa - R_SA_MIN) / (R_SA_MAX - R_SA_MIN);
+    (t * POT_MAX as f64).round().clamp(0.0, POT_MAX as f64) as u32
+}
+
+/// Convert a calibration-DAC code to a voltage [V].
+pub fn cal_to_vcal(code: u32) -> f64 {
+    let code = code.min(CAL_MAX);
+    V_CAL_MIN + (V_CAL_MAX - V_CAL_MIN) * code as f64 / CAL_MAX as f64
+}
+
+/// Nearest calibration-DAC code for a target voltage.
+pub fn vcal_to_cal(v: f64) -> u32 {
+    let t = (v - V_CAL_MIN) / (V_CAL_MAX - V_CAL_MIN);
+    (t * CAL_MAX as f64).round().clamp(0.0, CAL_MAX as f64) as u32
+}
+
+/// One column's 2SA with its silicon errors and current trim codes.
+#[derive(Debug, Clone)]
+pub struct SummingAmp {
+    /// positive-line gain error (SA1 path), ideally 1.0
+    pub alpha_p: f64,
+    /// negative-line gain error (SA2 path), ideally 1.0
+    pub alpha_n: f64,
+    /// combined input-referred offset [V]
+    pub beta: f64,
+    /// cubic distortion coefficient [V^-2]: the output is distorted as
+    /// v + gamma3*(v - V_BIAS)^3 — the systematic *nonlinear* error BISC's
+    /// linear correction cannot remove (the residual floor of Fig. 10)
+    pub gamma3: f64,
+    /// trim codes
+    pub pot_p: u32,
+    pub pot_n: u32,
+    pub cal: u32,
+}
+
+impl Default for SummingAmp {
+    fn default() -> Self {
+        Self {
+            alpha_p: 1.0,
+            alpha_n: 1.0,
+            beta: 0.0,
+            gamma3: 0.0,
+            pot_p: rsa_to_pot(c::R_SA_NOM),
+            pot_n: rsa_to_pot(c::R_SA_NOM),
+            cal: vcal_to_cal(c::V_CAL_NOM),
+        }
+    }
+}
+
+impl SummingAmp {
+    pub fn rsa_p(&self) -> f64 {
+        pot_to_rsa(self.pot_p)
+    }
+
+    pub fn rsa_n(&self) -> f64 {
+        pot_to_rsa(self.pot_n)
+    }
+
+    pub fn vcal(&self) -> f64 {
+        cal_to_vcal(self.cal)
+    }
+
+    /// Eq. (4) with per-line gains plus cubic distortion: the actual SA
+    /// output voltage.
+    pub fn output(&self, i_pos: f64, i_neg: f64) -> f64 {
+        let v_lin = self.vcal() + self.alpha_p * self.rsa_p() * i_pos
+            - self.alpha_n * self.rsa_n() * i_neg
+            + self.beta;
+        let d = v_lin - c::V_BIAS;
+        v_lin + self.gamma3 * d * d * d
+    }
+
+    /// The output fully settles within T_S&H (Fig. 4) for the behavioural
+    /// model; exposed as a check against the inference period.
+    pub fn settles_within(&self, period: f64) -> bool {
+        period >= c::T_SH * 0.99
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_trims_hit_nominal() {
+        let sa = SummingAmp::default();
+        assert!((sa.rsa_p() - c::R_SA_NOM).abs() < (R_SA_MAX - R_SA_MIN) / POT_MAX as f64);
+        assert!((sa.vcal() - c::V_CAL_NOM).abs() < (V_CAL_MAX - V_CAL_MIN) / CAL_MAX as f64 / 2.0 + 1e-12);
+    }
+
+    #[test]
+    fn pot_roundtrip_within_one_lsb() {
+        for code in [0u32, 1, 77, 128, 200, POT_MAX] {
+            let r = pot_to_rsa(code);
+            assert_eq!(rsa_to_pot(r), code);
+        }
+        // out-of-range clamps
+        assert_eq!(rsa_to_pot(0.0), 0);
+        assert_eq!(rsa_to_pot(1e9), POT_MAX);
+    }
+
+    #[test]
+    fn cal_roundtrip() {
+        for code in [0u32, 5, 31, 32, CAL_MAX] {
+            assert_eq!(vcal_to_cal(cal_to_vcal(code)), code);
+        }
+    }
+
+    #[test]
+    fn nominal_output_matches_eq1() {
+        let sa = SummingAmp::default();
+        let i = 5.0e-6;
+        let v = sa.output(i, 0.0);
+        let expect = sa.vcal() + sa.rsa_p() * i;
+        assert!((v - expect).abs() < 1e-15);
+    }
+
+    #[test]
+    fn errors_shift_output() {
+        let mut sa = SummingAmp::default();
+        let base = sa.output(4e-6, 2e-6);
+        sa.alpha_p = 1.1;
+        sa.beta = 0.005;
+        let v = sa.output(4e-6, 2e-6);
+        assert!(v > base);
+        // offset moves output even with zero current
+        assert!((sa.output(0.0, 0.0) - (sa.vcal() + 0.005)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn net_current_polarity() {
+        let sa = SummingAmp::default();
+        let above = sa.output(1e-6, 0.0);
+        let below = sa.output(0.0, 1e-6);
+        assert!(above > sa.vcal() && below < sa.vcal());
+        // symmetric for equal currents with ideal gains
+        assert!(((above - sa.vcal()) + (below - sa.vcal())).abs() < 1e-15);
+    }
+
+    #[test]
+    fn trim_range_covers_paper_gain_errors() {
+        // need R_SA/alpha for alpha in [0.8, 1.25] representable
+        assert!(R_SA_MIN <= c::R_SA_NOM / 1.25);
+        assert!(R_SA_MAX >= c::R_SA_NOM / 0.8);
+    }
+
+    #[test]
+    fn settling_flag() {
+        let sa = SummingAmp::default();
+        assert!(sa.settles_within(c::T_SH));
+        assert!(!sa.settles_within(c::T_SH / 2.0));
+    }
+}

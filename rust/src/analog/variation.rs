@@ -1,0 +1,162 @@
+//! Monte-Carlo process-variation sampling — one `VariationSample` is "one
+//! die": every per-row, per-column and per-cell parameter drawn from the
+//! configured sigmas (DESIGN.md §2 maps each field to a Fig. 1 effect).
+//!
+//! The same sample is fed to BOTH the rust golden model and the AOT HLO
+//! artifact, which is what makes the parity test meaningful.
+
+use super::consts as c;
+use crate::config::SimConfig;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct VariationSample {
+    /// per-row input-DAC gain errors (~1.0)
+    pub dac_gain: Vec<f64>,
+    /// per-row input-DAC offsets [V]
+    pub dac_off: Vec<f64>,
+    /// per-cell conductance mismatch, row-major N*M
+    pub cell_delta: Vec<f64>,
+    /// per-column SA positive-line gain errors
+    pub alpha_p: Vec<f64>,
+    /// per-column SA negative-line gain errors
+    pub alpha_n: Vec<f64>,
+    /// per-column SA input-referred offsets [V]
+    pub beta: Vec<f64>,
+    /// per-column SA cubic distortion coefficients [V^-2]
+    pub gamma3: Vec<f64>,
+    /// ADC gain error
+    pub adc_alpha: f64,
+    /// ADC offset error [codes]
+    pub adc_beta: f64,
+    /// structural parasitics
+    pub kappa_in: f64,
+    pub kappa_reg: f64,
+    /// the seed this die was drawn from
+    pub seed: u64,
+}
+
+impl VariationSample {
+    /// Draw one die from the config's sigmas.
+    pub fn draw(cfg: &SimConfig) -> Self {
+        let mut rng = Rng::new(cfg.seed);
+        let mut row_rng = rng.split(1);
+        let mut cell_rng = rng.split(2);
+        let mut col_rng = rng.split(3);
+        let mut adc_rng = rng.split(4);
+        Self {
+            dac_gain: (0..c::N_ROWS)
+                .map(|_| row_rng.normal_ms(1.0, cfg.sigma_dac_gain))
+                .collect(),
+            dac_off: (0..c::N_ROWS)
+                .map(|_| row_rng.normal_ms(0.0, cfg.sigma_dac_off))
+                .collect(),
+            cell_delta: (0..c::N_ROWS * c::M_COLS)
+                .map(|_| cell_rng.normal_ms(0.0, cfg.sigma_cell))
+                .collect(),
+            alpha_p: (0..c::M_COLS)
+                .map(|_| col_rng.normal_ms(1.0, cfg.sigma_sa_gain))
+                .collect(),
+            alpha_n: (0..c::M_COLS)
+                .map(|_| col_rng.normal_ms(1.0, cfg.sigma_sa_gain))
+                .collect(),
+            beta: (0..c::M_COLS)
+                .map(|_| col_rng.normal_ms(0.0, cfg.sigma_sa_off))
+                .collect(),
+            // truncated at +/-1.5 sigma: amplifiers are designed so the
+            // cubic stays within spec — unbounded tails would create
+            // columns no linear calibration could ever serve (the paper's
+            // Fig. 10 shows every column reaching the 18-24 dB band)
+            gamma3: (0..c::M_COLS)
+                .map(|_| {
+                    let lim = 1.5 * cfg.sigma_sa_nonlin;
+                    col_rng.normal_ms(0.0, cfg.sigma_sa_nonlin).clamp(-lim, lim)
+                })
+                .collect(),
+            adc_alpha: adc_rng.normal_ms(1.0, cfg.sigma_adc_gain),
+            adc_beta: adc_rng.normal_ms(0.0, cfg.sigma_adc_off),
+            kappa_in: cfg.kappa_in,
+            kappa_reg: cfg.kappa_reg,
+            seed: cfg.seed,
+        }
+    }
+
+    /// The error-free die ("simulation" baseline of §VII-C).
+    pub fn ideal() -> Self {
+        Self {
+            dac_gain: vec![1.0; c::N_ROWS],
+            dac_off: vec![0.0; c::N_ROWS],
+            cell_delta: vec![0.0; c::N_ROWS * c::M_COLS],
+            alpha_p: vec![1.0; c::M_COLS],
+            alpha_n: vec![1.0; c::M_COLS],
+            beta: vec![0.0; c::M_COLS],
+            gamma3: vec![0.0; c::M_COLS],
+            adc_alpha: 1.0,
+            adc_beta: 0.0,
+            kappa_in: 0.0,
+            kappa_reg: 0.0,
+            seed: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn draw_is_deterministic() {
+        let cfg = SimConfig::default();
+        let a = VariationSample::draw(&cfg);
+        let b = VariationSample::draw(&cfg);
+        assert_eq!(a.dac_gain, b.dac_gain);
+        assert_eq!(a.cell_delta, b.cell_delta);
+        assert_eq!(a.adc_beta, b.adc_beta);
+    }
+
+    #[test]
+    fn different_seed_different_die() {
+        let cfg = SimConfig::default();
+        let mut cfg2 = cfg.clone();
+        cfg2.seed ^= 0xDEAD;
+        let a = VariationSample::draw(&cfg);
+        let b = VariationSample::draw(&cfg2);
+        assert_ne!(a.alpha_p, b.alpha_p);
+    }
+
+    #[test]
+    fn sigma_zero_is_ideal() {
+        let mut cfg = SimConfig::default().scaled(0.0);
+        cfg.sigma_noise = 0.0;
+        let s = VariationSample::draw(&cfg);
+        let i = VariationSample::ideal();
+        assert_eq!(s.dac_gain, i.dac_gain);
+        assert_eq!(s.cell_delta, i.cell_delta);
+        assert_eq!(s.adc_alpha, 1.0);
+        assert_eq!(s.kappa_in, 0.0);
+    }
+
+    #[test]
+    fn sampled_sigmas_roughly_match_config() {
+        let mut cfg = SimConfig::default();
+        cfg.seed = 123;
+        // need many draws: aggregate cell deltas (N*M = 1152 per die)
+        let s = VariationSample::draw(&cfg);
+        let sd = stats::std_dev(&s.cell_delta);
+        assert!((sd - cfg.sigma_cell).abs() < cfg.sigma_cell * 0.2, "sd={sd}");
+    }
+
+    #[test]
+    fn gain_errors_land_in_paper_range() {
+        // Fig. 8b: per-column total gains roughly within [0.75, 1.3]
+        let cfg = SimConfig::default();
+        let s = VariationSample::draw(&cfg);
+        for (&ap, &an) in s.alpha_p.iter().zip(&s.alpha_n) {
+            let g = ap * s.adc_alpha;
+            assert!(g > 0.6 && g < 1.45, "g={g}");
+            let g = an * s.adc_alpha;
+            assert!(g > 0.6 && g < 1.45, "g={g}");
+        }
+    }
+}

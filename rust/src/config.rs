@@ -1,0 +1,223 @@
+//! Configuration system: a TOML-subset parser (serde/toml are not vendored)
+//! plus the typed `SimConfig` consumed across the stack.
+//!
+//! Grammar supported: `[section]` headers, `key = value` with string,
+//! float, integer, and boolean values, `#` comments. This covers every
+//! config shipped in `configs/`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Debug, Default, Clone)]
+pub struct RawConfig {
+    /// "section.key" -> value string
+    values: BTreeMap<String, String>,
+}
+
+impl RawConfig {
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw_line) in text.lines().enumerate() {
+            let line = raw_line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected `key = value`: {raw_line}", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let mut val = v.trim().to_string();
+            if val.starts_with('"') && val.ends_with('"') && val.len() >= 2 {
+                val = val[1..val.len() - 1].to_string();
+            }
+            values.insert(key, val);
+        }
+        Ok(Self { values })
+    }
+
+    pub fn load(path: &Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.values
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("config key {key}: not a number: {v}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.values
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("config key {key}: not an integer: {v}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.values.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        self.values
+            .get(key)
+            .map(|v| v == "true" || v == "1")
+            .unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.values.keys()
+    }
+}
+
+/// Variation / noise magnitudes of the Monte-Carlo silicon sample plus the
+/// structural parasitic knobs. Units are fractions (gains), volts
+/// (offsets), or ADC codes (beta_d). Defaults are tuned so the uncalibrated
+/// per-column errors land in the paper's measured ranges (Fig. 8b:
+/// g ~ 0.8-1.2, eps up to ~6 LSB) — see EXPERIMENTS.md.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub seed: u64,
+    /// input DAC per-row gain sigma (fractional)
+    pub sigma_dac_gain: f64,
+    /// input DAC per-row offset sigma [V]
+    pub sigma_dac_off: f64,
+    /// MWC conductance mismatch sigma (fractional)
+    pub sigma_cell: f64,
+    /// 2SA per-line gain-error sigma (fractional)
+    pub sigma_sa_gain: f64,
+    /// 2SA input-referred offset sigma [V]
+    pub sigma_sa_off: f64,
+    /// 2SA cubic distortion coefficient sigma [V^-2] — the uncorrectable
+    /// nonlinearity setting the post-BISC residual floor (Fig. 10's 18-24 dB)
+    pub sigma_sa_nonlin: f64,
+    /// ADC gain-error sigma (fractional)
+    pub sigma_adc_gain: f64,
+    /// ADC offset sigma [codes]
+    pub sigma_adc_off: f64,
+    /// row-wire input attenuation at the far column (Fig. 1 effect 4)
+    pub kappa_in: f64,
+    /// summation-node regulation droop at the far row (effect 5)
+    pub kappa_reg: f64,
+    /// SA-referred rms noise per read [V] (thermal + flicker lump)
+    pub sigma_noise: f64,
+    /// BISC: number of characterization test vectors (Z, Section VI-C)
+    pub bisc_test_points: usize,
+    /// BISC: averaging reads per test point
+    pub bisc_averages: usize,
+    /// ADC reference widening margin used during BISC (Alg. 1: 5%)
+    pub bisc_ref_margin: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0xAC0_CE11, // "acore-cell" default silicon sample
+            sigma_dac_gain: 0.010,
+            sigma_dac_off: 0.002,
+            sigma_cell: 0.020,
+            sigma_sa_gain: 0.100,
+            sigma_sa_off: 0.014,
+            sigma_sa_nonlin: 6.5,
+            sigma_adc_gain: 0.020,
+            sigma_adc_off: 1.200,
+            kappa_in: crate::analog::consts::KAPPA_IN_DEFAULT,
+            kappa_reg: crate::analog::consts::KAPPA_REG_DEFAULT,
+            sigma_noise: 0.0005,
+            bisc_test_points: 8,
+            bisc_averages: 4,
+            bisc_ref_margin: 0.08,
+        }
+    }
+}
+
+impl SimConfig {
+    pub fn from_raw(raw: &RawConfig) -> Self {
+        let d = Self::default();
+        Self {
+            seed: raw.get_u64("sim.seed", d.seed),
+            sigma_dac_gain: raw.get_f64("variation.sigma_dac_gain", d.sigma_dac_gain),
+            sigma_dac_off: raw.get_f64("variation.sigma_dac_off", d.sigma_dac_off),
+            sigma_cell: raw.get_f64("variation.sigma_cell", d.sigma_cell),
+            sigma_sa_gain: raw.get_f64("variation.sigma_sa_gain", d.sigma_sa_gain),
+            sigma_sa_off: raw.get_f64("variation.sigma_sa_off", d.sigma_sa_off),
+            sigma_sa_nonlin: raw.get_f64("variation.sigma_sa_nonlin", d.sigma_sa_nonlin),
+            sigma_adc_gain: raw.get_f64("variation.sigma_adc_gain", d.sigma_adc_gain),
+            sigma_adc_off: raw.get_f64("variation.sigma_adc_off", d.sigma_adc_off),
+            kappa_in: raw.get_f64("parasitics.kappa_in", d.kappa_in),
+            kappa_reg: raw.get_f64("parasitics.kappa_reg", d.kappa_reg),
+            sigma_noise: raw.get_f64("noise.sigma_v", d.sigma_noise),
+            bisc_test_points: raw.get_u64("bisc.test_points", d.bisc_test_points as u64) as usize,
+            bisc_averages: raw.get_u64("bisc.averages", d.bisc_averages as u64) as usize,
+            bisc_ref_margin: raw.get_f64("bisc.ref_margin", d.bisc_ref_margin),
+        }
+    }
+
+    pub fn load(path: &Path) -> Result<Self, String> {
+        Ok(Self::from_raw(&RawConfig::load(path)?))
+    }
+
+    /// Scale all variation sigmas (ablation knob).
+    pub fn scaled(&self, s: f64) -> Self {
+        Self {
+            sigma_dac_gain: self.sigma_dac_gain * s,
+            sigma_dac_off: self.sigma_dac_off * s,
+            sigma_cell: self.sigma_cell * s,
+            sigma_sa_gain: self.sigma_sa_gain * s,
+            sigma_sa_off: self.sigma_sa_off * s,
+            sigma_sa_nonlin: self.sigma_sa_nonlin * s,
+            sigma_adc_gain: self.sigma_adc_gain * s,
+            sigma_adc_off: self.sigma_adc_off * s,
+            kappa_in: self.kappa_in * s,
+            kappa_reg: self.kappa_reg * s,
+            ..self.clone()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let raw = RawConfig::parse(
+            "# comment\n[sim]\nseed = 99\n[variation]\nsigma_cell = 0.5 # inline\n[x]\nname = \"abc\"\nflag = true\n",
+        )
+        .unwrap();
+        assert_eq!(raw.get_u64("sim.seed", 0), 99);
+        assert_eq!(raw.get_f64("variation.sigma_cell", 0.0), 0.5);
+        assert_eq!(raw.get_str("x.name", ""), "abc");
+        assert!(raw.get_bool("x.flag", false));
+    }
+
+    #[test]
+    fn defaults_flow_through() {
+        let raw = RawConfig::parse("").unwrap();
+        let cfg = SimConfig::from_raw(&raw);
+        let d = SimConfig::default();
+        assert_eq!(cfg.sigma_cell, d.sigma_cell);
+        assert_eq!(cfg.bisc_test_points, d.bisc_test_points);
+    }
+
+    #[test]
+    fn bad_line_is_error() {
+        assert!(RawConfig::parse("just words\n").is_err());
+    }
+
+    #[test]
+    fn scaled_halves_sigmas() {
+        let c = SimConfig::default().scaled(0.5);
+        assert!((c.sigma_cell - SimConfig::default().sigma_cell * 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,224 @@
+//! Request batcher: aggregates MAC requests from concurrent clients into
+//! array-sized batches for the PJRT (or golden-model) backend — the
+//! serving-layer role of the coordinator (cf. vllm-style routers, scaled
+//! to this accelerator: one physical array, batched pulses).
+//!
+//! Design: submitters push `MacRequest`s over an mpsc channel; the worker
+//! drains up to `max_batch` requests (waiting up to `max_wait` for the
+//! first), executes them as one batched forward, and answers each client
+//! over its own return channel. std threads + channels (tokio is not
+//! vendored; the workload is CPU-bound anyway).
+
+use crate::analog::consts as c;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
+
+pub struct MacRequest {
+    pub x: Vec<i32>,
+    pub reply: Sender<Vec<u32>>,
+}
+
+/// Statistics from a batcher run.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct BatcherStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub max_batch_seen: usize,
+}
+
+impl BatcherStats {
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+/// A backend that evaluates batches of MAC requests.
+pub trait MacBackend {
+    fn forward_batch(&mut self, x: &[i32], batch: usize) -> Vec<u32>;
+}
+
+impl MacBackend for crate::analog::CimAnalogModel {
+    fn forward_batch(&mut self, x: &[i32], batch: usize) -> Vec<u32> {
+        crate::analog::CimAnalogModel::forward_batch(self, x, batch)
+    }
+}
+
+impl MacBackend for crate::runtime::CimRuntime {
+    fn forward_batch(&mut self, x: &[i32], batch: usize) -> Vec<u32> {
+        crate::runtime::CimRuntime::forward_batch(self, x, batch)
+            .expect("runtime backend failed")
+    }
+}
+
+pub struct Batcher {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for Batcher {
+    fn default() -> Self {
+        Self { max_batch: 256, max_wait: Duration::from_micros(200) }
+    }
+}
+
+impl Batcher {
+    /// Serve until the request channel closes. Returns run statistics.
+    pub fn run<B: MacBackend>(&self, rx: Receiver<MacRequest>, backend: &mut B) -> BatcherStats {
+        let mut stats = BatcherStats::default();
+        loop {
+            // block for the first request of a batch
+            let first = match rx.recv() {
+                Ok(r) => r,
+                Err(_) => return stats,
+            };
+            let mut pending = vec![first];
+            // opportunistically drain more, up to max_batch / max_wait
+            let deadline = std::time::Instant::now() + self.max_wait;
+            while pending.len() < self.max_batch {
+                let now = std::time::Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(r) => pending.push(r),
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            // assemble the batch
+            let batch = pending.len();
+            let mut x = Vec::with_capacity(batch * c::N_ROWS);
+            for r in &pending {
+                assert_eq!(r.x.len(), c::N_ROWS, "request must be N codes");
+                x.extend_from_slice(&r.x);
+            }
+            let q = backend.forward_batch(&x, batch);
+            for (i, r) in pending.into_iter().enumerate() {
+                let out = q[i * c::M_COLS..(i + 1) * c::M_COLS].to_vec();
+                let _ = r.reply.send(out); // client may have gone away
+            }
+            stats.requests += batch as u64;
+            stats.batches += 1;
+            stats.max_batch_seen = stats.max_batch_seen.max(batch);
+        }
+    }
+}
+
+/// Convenience client handle.
+pub struct Client {
+    tx: Sender<MacRequest>,
+}
+
+impl Client {
+    pub fn new(tx: Sender<MacRequest>) -> Self {
+        Self { tx }
+    }
+
+    pub fn mac(&self, x: Vec<i32>) -> Vec<u32> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(MacRequest { x, reply: reply_tx })
+            .expect("batcher gone");
+        reply_rx.recv().expect("batcher dropped reply")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analog::CimAnalogModel;
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    fn spawn_batcher(
+        batcher: Batcher,
+    ) -> (Sender<MacRequest>, std::thread::JoinHandle<BatcherStats>) {
+        let (tx, rx) = channel::<MacRequest>();
+        let handle = std::thread::spawn(move || {
+            let mut model = CimAnalogModel::ideal();
+            model.program(&vec![40; c::N_ROWS * c::M_COLS]);
+            batcher.run(rx, &mut model)
+        });
+        (tx, handle)
+    }
+
+    #[test]
+    fn single_client_roundtrip() {
+        let (tx, handle) = spawn_batcher(Batcher::default());
+        let client = Client::new(tx.clone());
+        let q = client.mac(vec![30; c::N_ROWS]);
+        assert_eq!(q.len(), c::M_COLS);
+        // matches a direct evaluation
+        let mut model = CimAnalogModel::ideal();
+        model.program(&vec![40; c::N_ROWS * c::M_COLS]);
+        let direct = model.forward_batch(&vec![30; c::N_ROWS], 1);
+        assert_eq!(q, direct);
+        drop(client);
+        drop(tx);
+        let stats = handle.join().unwrap();
+        assert_eq!(stats.requests, 1);
+    }
+
+    #[test]
+    fn concurrent_clients_all_answered_correctly() {
+        let (tx, handle) = spawn_batcher(Batcher {
+            max_batch: 16,
+            max_wait: Duration::from_millis(2),
+        });
+        let tx = Arc::new(tx);
+        let mut joins = Vec::new();
+        for t in 0..8 {
+            let tx = Sender::clone(&tx);
+            joins.push(std::thread::spawn(move || {
+                let client = Client::new(tx);
+                let mut rng = Rng::new(t as u64);
+                for _ in 0..20 {
+                    let x: Vec<i32> =
+                        (0..c::N_ROWS).map(|_| rng.int_in(-63, 63) as i32).collect();
+                    let q = client.mac(x.clone());
+                    // verify against an independent model
+                    let mut model = CimAnalogModel::ideal();
+                    model.program(&vec![40; c::N_ROWS * c::M_COLS]);
+                    assert_eq!(q, model.forward_batch(&x, 1));
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        drop(tx);
+        let stats = handle.join().unwrap();
+        assert_eq!(stats.requests, 8 * 20);
+        assert!(stats.batches <= stats.requests);
+    }
+
+    #[test]
+    fn batching_actually_batches_under_load() {
+        let (tx, handle) = spawn_batcher(Batcher {
+            max_batch: 64,
+            max_wait: Duration::from_millis(20),
+        });
+        // pre-queue many requests before the worker can drain them
+        let mut replies = Vec::new();
+        for _ in 0..50 {
+            let (rtx, rrx) = channel();
+            tx.send(MacRequest { x: vec![10; c::N_ROWS], reply: rtx }).unwrap();
+            replies.push(rrx);
+        }
+        for r in replies {
+            assert_eq!(r.recv().unwrap().len(), c::M_COLS);
+        }
+        drop(tx);
+        let stats = handle.join().unwrap();
+        assert!(
+            stats.mean_batch() > 2.0,
+            "expected batching, mean batch {}",
+            stats.mean_batch()
+        );
+        assert!(stats.max_batch_seen > 4);
+    }
+}

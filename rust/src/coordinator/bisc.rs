@@ -1,0 +1,534 @@
+//! Built-In Self-Calibration engine — paper Section VI / Algorithm 1.
+//!
+//! Host-side reference implementation of the BISC routine. The same
+//! algorithm also ships as RV32IM firmware (`soc::firmware::bisc_program`)
+//! running on the ISS against the memory-mapped CIM device; an integration
+//! test asserts the firmware's trims match this engine within one LSB.
+//!
+//! Per column (Section VI-D: SA1 and SA2 calibrated separately):
+//!   1. *Online characterization*: program W_max on the line under test,
+//!      apply Z stepped inputs spanning the dynamic range, read the ADC
+//!      output averaged over `averages` reads, and least-squares fit
+//!      Q_act = g_tot * Q_nom + eps_tot   (Eq. 13-14).
+//!   2. *Online correction*: R_SA' = alpha_D * R_SA / g_tot and
+//!      V_CAL' = V_CAL - (eps_tot - beta_D) / (alpha_D * C_ADC)  (Eq. 12),
+//!      quantized to the digital-potentiometer / cal-DAC trim codes.
+//!
+//! ADC clipping (Section VI-D-a): references are widened by `ref_margin`
+//! during characterization and restored afterwards.
+
+use crate::analog::{consts as c, samp, CimAnalogModel};
+use crate::config::SimConfig;
+use crate::util::stats;
+
+/// Characterization result for one column, one line.
+#[derive(Debug, Clone, Copy)]
+pub struct LineFit {
+    /// total gain error g_tot (Eq. 13)
+    pub g_tot: f64,
+    /// total offset error eps_tot [codes] (Eq. 14)
+    pub eps_tot: f64,
+}
+
+/// Per-column calibration outcome.
+#[derive(Debug, Clone)]
+pub struct ColumnCalibration {
+    pub col: usize,
+    pub pos: LineFit,
+    pub neg: LineFit,
+    /// trim codes chosen
+    pub pot_p: u32,
+    pub pot_n: u32,
+    pub cal: u32,
+    /// trim values realized by those codes
+    pub rsa_p: f64,
+    pub rsa_n: f64,
+    pub vcal: f64,
+}
+
+/// Full-array calibration report (feeds Fig. 8).
+#[derive(Debug, Clone)]
+pub struct BiscReport {
+    pub columns: Vec<ColumnCalibration>,
+    /// total characterization MAC reads issued
+    pub reads: u64,
+}
+
+/// The ADC characterization assumed known (Eq. 11: "assuming that the ADC
+/// has been characterized independently").
+#[derive(Debug, Clone, Copy)]
+pub struct AdcCharacterization {
+    pub alpha_d: f64,
+    pub beta_d: f64,
+}
+
+impl AdcCharacterization {
+    pub fn ideal() -> Self {
+        Self { alpha_d: 1.0, beta_d: 0.0 }
+    }
+
+    /// Read the true values off the model (a perfect external ADC test).
+    pub fn from_model(m: &CimAnalogModel) -> Self {
+        Self { alpha_d: m.adc.alpha_d, beta_d: m.adc.beta_d }
+    }
+}
+
+pub struct BiscEngine {
+    /// number of test vectors Z (4-8 per Section VI-C)
+    pub test_points: usize,
+    /// averaging reads per test point
+    pub averages: usize,
+    /// ADC reference widening during characterization (Alg. 1; we use 8%
+    /// because this die's gain errors are larger than the paper's +/-5%)
+    pub ref_margin: f64,
+    /// sweep amplitude in input codes (slightly inside full scale so the
+    /// widened-reference window never clips even at g ~ 1.25)
+    pub sweep_max_code: i32,
+    /// custom characterization ADC window; None = Alg. 1's widened default
+    /// references. Operating-point calibration (DESIGN.md §6) sets this to
+    /// the DNN layer window so the corrected gain matches the small-signal
+    /// gain the workload actually sees (amplifier nonlinearity makes the
+    /// full-range secant differ from the small-signal slope).
+    pub char_refs: Option<(f64, f64)>,
+    pub adc_char: AdcCharacterization,
+}
+
+impl BiscEngine {
+    pub fn from_config(cfg: &SimConfig, adc_char: AdcCharacterization) -> Self {
+        Self {
+            test_points: cfg.bisc_test_points,
+            averages: cfg.bisc_averages,
+            ref_margin: cfg.bisc_ref_margin,
+            sweep_max_code: 48,
+            char_refs: None,
+            adc_char,
+        }
+    }
+
+    /// Operating-point calibration: characterize inside a +/- `half_v`
+    /// window around V_BIAS with a sweep amplitude that fills (most of) it.
+    pub fn for_operating_point(cfg: &SimConfig, adc_char: AdcCharacterization, half_v: f64) -> Self {
+        let win = half_v * 1.5; // headroom for residual gain + offset errors
+        let v_per_x = c::volts_per_cp() * (c::CODE_MAX as f64) * c::N_ROWS as f64;
+        let sweep = (half_v / v_per_x).floor().max(2.0) as i32;
+        Self {
+            test_points: cfg.bisc_test_points,
+            averages: cfg.bisc_averages.max(4),
+            ref_margin: cfg.bisc_ref_margin,
+            sweep_max_code: sweep.min(c::CODE_MAX),
+            char_refs: Some((c::V_BIAS - win, c::V_BIAS + win)),
+            adc_char,
+        }
+    }
+
+    /// ADC references used during characterization: the custom operating-
+    /// point window if set, else Alg. 1's widened defaults
+    /// (V_L <- (1-m) V_L, V_H <- (1+m) V_H).
+    pub fn widened_refs(&self) -> (f64, f64) {
+        if let Some(refs) = self.char_refs {
+            return refs;
+        }
+        (
+            c::V_ADC_L * (1.0 - self.ref_margin),
+            c::V_ADC_H * (1.0 + self.ref_margin),
+        )
+    }
+
+    /// The stepped input codes of the characterization sweep: Z equally
+    /// spaced magnitudes across the dynamic range (the line under
+    /// test sees only one polarity; Section VI-D separates SA1/SA2).
+    pub fn test_codes(&self) -> Vec<i32> {
+        let z = self.test_points.max(2);
+        (0..z)
+            .map(|i| {
+                let t = i as f64 / (z - 1) as f64;
+                (t * 2.0 - 1.0) // -1..1
+            })
+            .map(|t| (t * self.sweep_max_code as f64).round() as i32)
+            .collect()
+    }
+
+    /// Nominal (expected) output codes for the sweep with W_max programmed,
+    /// evaluated at the *widened* ADC references: Q_nom per Eq. (7) with
+    /// S = x * 63 * N on the line under test.
+    pub fn nominal_codes(&self, positive_line: bool) -> Vec<f64> {
+        let (v_l, v_h) = self.widened_refs();
+        let c_adc = c::adc_conv_factor(v_l, v_h);
+        let lsb_in = c::V_SWING / (1u64 << c::B_D) as f64;
+        let k = c_adc * c::R_SA_NOM * lsb_in / (c::R_U * (1u64 << c::B_W) as f64);
+        let mid = c_adc * (c::V_CAL_NOM - v_l);
+        let sign = if positive_line { 1.0 } else { -1.0 };
+        self.test_codes()
+            .iter()
+            .map(|&x| {
+                let s = x as f64 * c::CODE_MAX as f64 * c::N_ROWS as f64 * sign;
+                mid + k * s
+            })
+            .collect()
+    }
+
+    /// Characterize one line of one column: program the weights, sweep,
+    /// fit. Assumes the ADC references are already widened. Leaves the
+    /// column weights programmed (caller restores).
+    fn characterize_line(
+        &self,
+        model: &mut CimAnalogModel,
+        col: usize,
+        positive_line: bool,
+        reads: &mut u64,
+    ) -> LineFit {
+        let wmax = if positive_line { c::CODE_MAX } else { -c::CODE_MAX };
+        model.program_column(col, &vec![wmax; c::N_ROWS]);
+        let q_nom = self.nominal_codes(positive_line);
+        let mut q_act = Vec::with_capacity(q_nom.len());
+        for &x in &self.test_codes() {
+            let xv = vec![x; c::N_ROWS];
+            let avg = model.forward_averaged(&xv, self.averages);
+            *reads += self.averages as u64;
+            q_act.push(avg[col]);
+        }
+        let (g, e) = stats::linfit(&q_nom, &q_act);
+        LineFit { g_tot: g, eps_tot: e }
+    }
+
+    /// Run the full BISC routine (Alg. 1) over every column of the array.
+    ///
+    /// The array's weights are clobbered by characterization; callers
+    /// re-program their workload weights afterwards (on silicon the same
+    /// is true — calibration happens between workloads).
+    pub fn calibrate(&self, model: &mut CimAnalogModel) -> BiscReport {
+        // Alg. 1 initialization: widen ADC references so characterization
+        // never clips even with worst-case gain/offset errors
+        let (vl_w, vh_w) = self.widened_refs();
+        model.set_adc_refs(vl_w, vh_w);
+
+        let mut reads = 0u64;
+        let mut columns = Vec::with_capacity(c::M_COLS);
+        for col in 0..c::M_COLS {
+            let pos = self.characterize_line(model, col, true, &mut reads);
+            let neg = self.characterize_line(model, col, false, &mut reads);
+            // Eq. (12) gain correction, per line
+            let a_d = self.adc_char.alpha_d;
+            let b_d = self.adc_char.beta_d;
+            let rsa_p = (a_d * c::R_SA_NOM / pos.g_tot)
+                .clamp(samp::R_SA_MIN, samp::R_SA_MAX);
+            let rsa_n = (a_d * c::R_SA_NOM / neg.g_tot)
+                .clamp(samp::R_SA_MIN, samp::R_SA_MAX);
+            // Offset correction. The paper sets V_CAL = V_ADC^L during
+            // characterization so the fit intercept is the pure offset
+            // (Section VI-B); our cal-DAC range cannot reach the widened
+            // V_L', so the intercept contains a gain-pivot term
+            // Q_mid' * (alpha_D - g_tot) that must be removed first
+            // (DESIGN.md §6). With the pivot removed, beta_A follows
+            // Eq. (11) and the corrected V_CAL makes the end-to-end
+            // transfer nominal.
+            let c_adc = c::adc_conv_factor(vl_w, vh_w);
+            let q_mid_w = c_adc * (c::V_CAL_NOM - vl_w);
+            let eps = 0.5 * (pos.eps_tot + neg.eps_tot);
+            let g_avg = 0.5 * (pos.g_tot + neg.g_tot);
+            let beta_a = (eps - b_d - q_mid_w * (a_d - g_avg)) / (c_adc * a_d);
+            let vcal_target =
+                vl_w + ((c::V_CAL_NOM - vl_w) - b_d / c_adc) / a_d - beta_a;
+            let vcal = vcal_target.clamp(samp::V_CAL_MIN, samp::V_CAL_MAX);
+            // quantize to trim codes and apply
+            let pot_p = samp::rsa_to_pot(rsa_p);
+            let pot_n = samp::rsa_to_pot(rsa_n);
+            let cal = samp::vcal_to_cal(vcal);
+            model.set_trims(col, pot_p, pot_n, cal);
+            columns.push(ColumnCalibration {
+                col,
+                pos,
+                neg,
+                pot_p,
+                pot_n,
+                cal,
+                rsa_p: samp::pot_to_rsa(pot_p),
+                rsa_n: samp::pot_to_rsa(pot_n),
+                vcal: samp::cal_to_vcal(cal),
+            });
+        }
+        // restore the inference references (Alg. 1 epilogue)
+        model.set_adc_refs(c::V_ADC_L, c::V_ADC_H);
+        BiscReport { columns, reads }
+    }
+
+    /// One refinement pass: re-characterize at this engine's window with
+    /// the previous trims applied and update them multiplicatively.
+    pub fn refine(&self, model: &mut CimAnalogModel, report: &mut BiscReport) {
+        let (vl_w, vh_w) = self.widened_refs();
+        model.set_adc_refs(vl_w, vh_w);
+        let c_adc = c::adc_conv_factor(vl_w, vh_w);
+        let mut reads = 0u64;
+        let a_d = self.adc_char.alpha_d;
+        let b_d = self.adc_char.beta_d;
+        for col in 0..c::M_COLS {
+            let pos = self.characterize_line(model, col, true, &mut reads);
+            let neg = self.characterize_line(model, col, false, &mut reads);
+            let prev = &report.columns[col];
+            // residual gain error g' scales the already-trimmed R_SA
+            let rsa_p = (a_d * prev.rsa_p / pos.g_tot)
+                .clamp(samp::R_SA_MIN, samp::R_SA_MAX);
+            let rsa_n = (a_d * prev.rsa_n / neg.g_tot)
+                .clamp(samp::R_SA_MIN, samp::R_SA_MAX);
+            let q_mid_w = c_adc * (c::V_CAL_NOM - vl_w);
+            let eps = 0.5 * (pos.eps_tot + neg.eps_tot);
+            let g_avg = 0.5 * (pos.g_tot + neg.g_tot);
+            let beta_res = (eps - b_d - q_mid_w * (a_d - g_avg)) / (c_adc * a_d);
+            let vcal = (prev.vcal - beta_res).clamp(samp::V_CAL_MIN, samp::V_CAL_MAX);
+            let pot_p = samp::rsa_to_pot(rsa_p);
+            let pot_n = samp::rsa_to_pot(rsa_n);
+            let cal = samp::vcal_to_cal(vcal);
+            model.set_trims(col, pot_p, pot_n, cal);
+            report.columns[col] = ColumnCalibration {
+                col,
+                pos,
+                neg,
+                pot_p,
+                pot_n,
+                cal,
+                rsa_p: samp::pot_to_rsa(pot_p),
+                rsa_n: samp::pot_to_rsa(pot_n),
+                vcal: samp::cal_to_vcal(cal),
+            };
+        }
+        report.reads += reads;
+        model.set_adc_refs(c::V_ADC_L, c::V_ADC_H);
+    }
+
+    /// Iterative calibration: re-run characterization with the previous
+    /// trims applied and refine them. The paper runs BISC "periodically at
+    /// predefined intervals"; a second pass removes the second-order bias
+    /// that amplifier nonlinearity induces in the first pass's offset
+    /// estimate (the sweep is asymmetric until the gains are corrected).
+    pub fn calibrate_iterative(&self, model: &mut CimAnalogModel, passes: usize) -> BiscReport {
+        let mut report = self.calibrate(model);
+        for _ in 1..passes {
+            self.refine(model, &mut report);
+        }
+        report
+    }
+
+    /// Cascaded calibration for a small-signal workload (the DNN mapping):
+    /// a full-range pass removes the large offset/gain errors, then an
+    /// operating-point pass re-trims at the workload's own amplitude so the
+    /// corrected gain matches the small-signal slope (the amplifier cubic
+    /// makes the full-range secant differ from it).
+    pub fn calibrate_for_workload(
+        cfg: &SimConfig,
+        adc_char: AdcCharacterization,
+        model: &mut CimAnalogModel,
+        op_half_v: f64,
+    ) -> BiscReport {
+        let full = Self::from_config(cfg, adc_char);
+        let mut report = full.calibrate(model);
+        let op = Self::for_operating_point(cfg, adc_char, op_half_v);
+        op.refine(model, &mut report);
+        report
+    }
+
+    /// Re-characterize (no correction) — used to measure residual errors
+    /// after calibration (Fig. 8(e)). Uses the widened references like the
+    /// calibration pass and restores the defaults afterwards.
+    pub fn characterize_only(&self, model: &mut CimAnalogModel) -> Vec<(LineFit, LineFit)> {
+        let (vl_w, vh_w) = self.widened_refs();
+        model.set_adc_refs(vl_w, vh_w);
+        let mut reads = 0u64;
+        let fits = (0..c::M_COLS)
+            .map(|col| {
+                let p = self.characterize_line(model, col, true, &mut reads);
+                let n = self.characterize_line(model, col, false, &mut reads);
+                (p, n)
+            })
+            .collect();
+        model.set_adc_refs(c::V_ADC_L, c::V_ADC_H);
+        fits
+    }
+
+    /// Total latency of one calibration pass in S&H periods: Z test points
+    /// x averages x 2 lines x M columns (Alg. 1's loop structure).
+    pub fn latency_sh_periods(&self) -> u64 {
+        (self.test_points * self.averages * 2 * c::M_COLS) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analog::variation::VariationSample;
+
+    fn noisy_model(seed: u64) -> CimAnalogModel {
+        let mut cfg = SimConfig::default();
+        cfg.seed = seed;
+        let s = VariationSample::draw(&cfg);
+        CimAnalogModel::from_sample(&cfg, &s)
+    }
+
+    fn engine() -> BiscEngine {
+        BiscEngine {
+            test_points: 8,
+            averages: 4,
+            ref_margin: 0.08,
+            sweep_max_code: 48,
+            char_refs: None,
+            adc_char: AdcCharacterization::ideal(),
+        }
+    }
+
+    #[test]
+    fn test_codes_span_range() {
+        let e = engine();
+        let codes = e.test_codes();
+        assert_eq!(codes.len(), 8);
+        assert_eq!(codes[0], -48);
+        assert_eq!(*codes.last().unwrap(), 48);
+    }
+
+    #[test]
+    fn sweep_never_clips_at_worst_case_gain() {
+        // worst-case die: g = 1.3, beta = +15 mV — the widened window must
+        // keep every test point in the ADC's linear region
+        let mut cfg = SimConfig::default().scaled(0.0);
+        cfg.sigma_noise = 0.0;
+        let mut s = VariationSample::ideal();
+        s.alpha_p = vec![1.3; c::M_COLS];
+        s.alpha_n = vec![1.3; c::M_COLS];
+        s.beta = vec![0.015; c::M_COLS];
+        let mut m = CimAnalogModel::from_sample(&cfg, &s);
+        let e = engine();
+        let (vl_w, vh_w) = e.widened_refs();
+        m.set_adc_refs(vl_w, vh_w);
+        m.program(&vec![c::CODE_MAX; c::N_ROWS * c::M_COLS]);
+        for &x in &e.test_codes() {
+            let v_sa = m.sa_outputs(&vec![x; c::N_ROWS]);
+            for &v in &v_sa {
+                assert!(!m.adc.clips(v), "clipped at x={x}, v={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn characterization_recovers_known_gain_offset() {
+        // construct a die whose only error is a known SA gain + ADC offset
+        let mut cfg = SimConfig::default().scaled(0.0);
+        cfg.sigma_noise = 0.0;
+        let mut s = VariationSample::ideal();
+        s.alpha_p = vec![1.15; c::M_COLS];
+        s.adc_beta = 2.0;
+        let mut m = CimAnalogModel::from_sample(&cfg, &s);
+        let e = engine();
+        let (vl_w, vh_w) = e.widened_refs();
+        m.set_adc_refs(vl_w, vh_w); // characterization runs at widened refs
+        let mut reads = 0;
+        let fit = e.characterize_line(&mut m, 5, true, &mut reads);
+        // Z = 8 integer-code reads carry a deterministic quantization bias
+        // of up to ~2% on the slope (no noise to dither it here)
+        assert!((fit.g_tot - 1.15).abs() < 0.03, "g={}", fit.g_tot);
+        // intercept = offset + gain-pivot Q_mid'*(1-g) (see calibrate())
+        let q_mid_w = c::adc_conv_factor(e.widened_refs().0, e.widened_refs().1)
+            * (c::V_CAL_NOM - e.widened_refs().0);
+        let expect_eps = 2.0 + q_mid_w * (1.0 - 1.15);
+        assert!((fit.eps_tot - expect_eps).abs() < 0.8, "e={}", fit.eps_tot);
+    }
+
+    #[test]
+    fn calibration_reduces_residual_errors() {
+        let mut m = noisy_model(0xBEEF);
+        let e = engine();
+        // before: residual = characterization at default trims
+        let before = e.characterize_only(&mut m);
+        let report = e.calibrate(&mut m);
+        assert_eq!(report.columns.len(), c::M_COLS);
+        let after = e.characterize_only(&mut m);
+        let gain_err = |fits: &Vec<(LineFit, LineFit)>| -> f64 {
+            fits.iter()
+                .map(|(p, n)| (p.g_tot - 1.0).abs() + (n.g_tot - 1.0).abs())
+                .sum::<f64>()
+                / (2.0 * fits.len() as f64)
+        };
+        let off_err = |fits: &Vec<(LineFit, LineFit)>| -> f64 {
+            fits.iter()
+                .map(|(p, n)| (p.eps_tot.abs() + n.eps_tot.abs()) / 2.0)
+                .sum::<f64>()
+                / fits.len() as f64
+        };
+        assert!(
+            gain_err(&after) < gain_err(&before) * 0.35,
+            "gain {} -> {}",
+            gain_err(&before),
+            gain_err(&after)
+        );
+        assert!(
+            off_err(&after) < off_err(&before) * 0.75,
+            "offset {} -> {}",
+            off_err(&before),
+            off_err(&after)
+        );
+    }
+
+    #[test]
+    fn every_column_improves() {
+        let mut m = noisy_model(0xACE);
+        let e = engine();
+        let before = e.characterize_only(&mut m);
+        e.calibrate(&mut m);
+        let after = e.characterize_only(&mut m);
+        for col in 0..c::M_COLS {
+            let b = (before[col].0.g_tot - 1.0).abs() + (before[col].1.g_tot - 1.0).abs();
+            let a = (after[col].0.g_tot - 1.0).abs() + (after[col].1.g_tot - 1.0).abs();
+            assert!(a < b + 0.02, "col {col}: gain {b} -> {a}");
+        }
+    }
+
+    #[test]
+    fn known_adc_characterization_improves_correction() {
+        // with a strong ADC gain error, knowing (alpha_D, beta_D) lets BISC
+        // split analog vs digital (Eq. 11) — but either way the end-to-end
+        // transfer must be linearized
+        let mut cfg = SimConfig::default().scaled(0.0);
+        cfg.sigma_noise = 0.0;
+        let mut s = VariationSample::ideal();
+        s.adc_alpha = 1.12;
+        s.alpha_p = vec![0.9; c::M_COLS];
+        s.alpha_n = vec![0.9; c::M_COLS];
+        let mut m = CimAnalogModel::from_sample(&cfg, &s);
+        let mut e = engine();
+        e.adc_char = AdcCharacterization::from_model(&m);
+        e.calibrate(&mut m);
+        let after = e.characterize_only(&mut m);
+        // Eq. (12) corrects the *analog* gain to 1/alpha_A exactly, so the
+        // residual end-to-end gain equals the known digital gain alpha_D
+        // (which the digital side compensates numerically, Eq. 11)
+        for (p, _) in &after {
+            assert!((p.g_tot - 1.12).abs() < 0.04, "g={}", p.g_tot);
+        }
+        // whereas assuming an ideal ADC absorbs alpha_D into the trims,
+        // linearizing end-to-end:
+        let mut m2 = CimAnalogModel::from_sample(&cfg, &s);
+        let mut e2 = engine();
+        e2.adc_char = AdcCharacterization::ideal();
+        e2.calibrate(&mut m2);
+        let after2 = e2.characterize_only(&mut m2);
+        for (p, _) in &after2 {
+            assert!((p.g_tot - 1.0).abs() < 0.04, "g={}", p.g_tot);
+        }
+    }
+
+    #[test]
+    fn latency_accounting() {
+        let e = engine();
+        assert_eq!(e.latency_sh_periods(), 8 * 4 * 2 * 32);
+    }
+
+    #[test]
+    fn report_trims_within_hardware_range() {
+        let mut m = noisy_model(7);
+        let e = engine();
+        let r = e.calibrate(&mut m);
+        for cc in &r.columns {
+            assert!(cc.pot_p <= samp::POT_MAX);
+            assert!(cc.pot_n <= samp::POT_MAX);
+            assert!(cc.cal <= samp::CAL_MAX);
+            assert!(cc.rsa_p >= samp::R_SA_MIN && cc.rsa_p <= samp::R_SA_MAX);
+        }
+    }
+}

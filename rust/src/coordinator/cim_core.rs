@@ -1,0 +1,321 @@
+//! The CIM accelerator as an AXI4-Lite device: control/status registers,
+//! input-code registers, weight-SRAM write port, ADC output registers, and
+//! the BISC trim registers (paper Fig. 2(a) "CIM control registers ...
+//! interfaced via AXI4-Lite").
+//!
+//! The same register map is driven by (a) the host-side coordinator (rust
+//! API) and (b) the BISC firmware running on the RV32IM ISS — the paper's
+//! "RISC-V controlled" property is literal here.
+
+use crate::analog::{consts as c, samp, CimAnalogModel};
+use crate::soc::bus::{BusDevice, BusResp};
+
+/// Register map (byte offsets). All registers are 32-bit.
+pub mod regs {
+    /// write 1 = single MAC; write 2 = averaged MAC (AVG_CNT reads)
+    pub const CTRL: u32 = 0x000;
+    /// bit0: done (always 1 — the model computes synchronously)
+    pub const STATUS: u32 = 0x004;
+    /// averaging count for CTRL=2 (default 4)
+    pub const AVG_CNT: u32 = 0x008;
+    /// number of MAC operations performed (read-only)
+    pub const MAC_COUNT: u32 = 0x00C;
+    /// accumulated analog busy time, in S&H periods (read-only)
+    pub const BUSY_SH: u32 = 0x010;
+    /// input code registers, signed i32, INPUT[0..36]
+    pub const INPUT: u32 = 0x020;
+    /// latched ADC output codes, OUT[0..32]
+    pub const OUT: u32 = 0x100;
+    /// averaged outputs in Q8.8 fixed point, OUT_AVG[0..32]
+    pub const OUT_AVG_Q8: u32 = 0x180;
+    /// digital potentiometer codes, positive line, POT_P[0..32]
+    pub const POT_P: u32 = 0x200;
+    /// negative line, POT_N[0..32]
+    pub const POT_N: u32 = 0x280;
+    /// calibration DAC codes, CAL[0..32]
+    pub const CAL: u32 = 0x300;
+    /// ADC reference voltages in microvolts
+    pub const VADC_L_UV: u32 = 0x380;
+    pub const VADC_H_UV: u32 = 0x384;
+    /// weight write port: address (row-major cell index, auto-increment)
+    pub const WADDR: u32 = 0x400;
+    /// weight write port: signed code; writing programs cell at WADDR
+    pub const WDATA: u32 = 0x404;
+    /// size of the register window
+    pub const SIZE: u32 = 0x1000;
+}
+
+pub struct CimDevice {
+    pub model: CimAnalogModel,
+    inputs: [i32; c::N_ROWS],
+    out: [u32; c::M_COLS],
+    out_avg_q8: [u32; c::M_COLS],
+    avg_cnt: u32,
+    waddr: u32,
+    mac_count: u32,
+    /// analog busy time in S&H periods (1 us each)
+    busy_sh: u64,
+}
+
+impl CimDevice {
+    pub fn new(model: CimAnalogModel) -> Self {
+        Self {
+            model,
+            inputs: [0; c::N_ROWS],
+            out: [0; c::M_COLS],
+            out_avg_q8: [0; c::M_COLS],
+            avg_cnt: 4,
+            waddr: 0,
+            mac_count: 0,
+            busy_sh: 0,
+        }
+    }
+
+    /// Host-side convenience: program full weight matrix.
+    pub fn program_weights(&mut self, weights: &[i32]) {
+        self.model.program(weights);
+    }
+
+    pub fn mac_count(&self) -> u32 {
+        self.mac_count
+    }
+
+    pub fn busy_sh_periods(&self) -> u64 {
+        self.busy_sh
+    }
+
+    fn do_mac(&mut self) {
+        let q = self.model.forward_golden(&self.inputs);
+        self.out.copy_from_slice(&q);
+        self.mac_count = self.mac_count.wrapping_add(1);
+        self.busy_sh += 1;
+    }
+
+    fn do_mac_averaged(&mut self) {
+        let reads = self.avg_cnt.max(1) as usize;
+        let avg = self.model.forward_averaged(&self.inputs, reads);
+        for (dst, &a) in self.out_avg_q8.iter_mut().zip(&avg) {
+            *dst = (a * 256.0).round() as u32;
+        }
+        // also latch the last single read approximation (rounded average)
+        for (dst, &a) in self.out.iter_mut().zip(&avg) {
+            *dst = a.round().clamp(0.0, c::ADC_MAX as f64) as u32;
+        }
+        self.mac_count = self.mac_count.wrapping_add(reads as u32);
+        self.busy_sh += reads as u64;
+    }
+
+    fn idx(offset: u32, base: u32) -> usize {
+        ((offset - base) / 4) as usize
+    }
+}
+
+impl BusDevice for CimDevice {
+    fn read32(&mut self, offset: u32) -> Result<u32, BusResp> {
+        use regs::*;
+        Ok(match offset {
+            STATUS => 1,
+            AVG_CNT => self.avg_cnt,
+            MAC_COUNT => self.mac_count,
+            BUSY_SH => self.busy_sh as u32,
+            o if (INPUT..INPUT + 4 * c::N_ROWS as u32).contains(&o) => {
+                self.inputs[Self::idx(o, INPUT)] as u32
+            }
+            o if (OUT..OUT + 4 * c::M_COLS as u32).contains(&o) => {
+                self.out[Self::idx(o, OUT)]
+            }
+            o if (OUT_AVG_Q8..OUT_AVG_Q8 + 4 * c::M_COLS as u32).contains(&o) => {
+                self.out_avg_q8[Self::idx(o, OUT_AVG_Q8)]
+            }
+            o if (POT_P..POT_P + 4 * c::M_COLS as u32).contains(&o) => {
+                self.model.amps[Self::idx(o, POT_P)].pot_p
+            }
+            o if (POT_N..POT_N + 4 * c::M_COLS as u32).contains(&o) => {
+                self.model.amps[Self::idx(o, POT_N)].pot_n
+            }
+            o if (CAL..CAL + 4 * c::M_COLS as u32).contains(&o) => {
+                self.model.amps[Self::idx(o, CAL)].cal
+            }
+            VADC_L_UV => (self.model.adc.v_l * 1e6).round() as u32,
+            VADC_H_UV => (self.model.adc.v_h * 1e6).round() as u32,
+            WADDR => self.waddr,
+            _ => return Err(BusResp::SlvErr),
+        })
+    }
+
+    fn write32(&mut self, offset: u32, value: u32) -> Result<(), BusResp> {
+        use regs::*;
+        match offset {
+            CTRL => match value {
+                1 => self.do_mac(),
+                2 => self.do_mac_averaged(),
+                _ => return Err(BusResp::SlvErr),
+            },
+            AVG_CNT => self.avg_cnt = value.max(1),
+            o if (INPUT..INPUT + 4 * c::N_ROWS as u32).contains(&o) => {
+                self.inputs[Self::idx(o, INPUT)] =
+                    (value as i32).clamp(-c::CODE_MAX, c::CODE_MAX);
+            }
+            o if (POT_P..POT_P + 4 * c::M_COLS as u32).contains(&o) => {
+                let col = Self::idx(o, POT_P);
+                let amp = &self.model.amps[col];
+                let (pn, cal) = (amp.pot_n, amp.cal);
+                self.model.set_trims(col, value.min(samp::POT_MAX), pn, cal);
+            }
+            o if (POT_N..POT_N + 4 * c::M_COLS as u32).contains(&o) => {
+                let col = Self::idx(o, POT_N);
+                let amp = &self.model.amps[col];
+                let (pp, cal) = (amp.pot_p, amp.cal);
+                self.model.set_trims(col, pp, value.min(samp::POT_MAX), cal);
+            }
+            o if (CAL..CAL + 4 * c::M_COLS as u32).contains(&o) => {
+                let col = Self::idx(o, CAL);
+                let amp = &self.model.amps[col];
+                let (pp, pn) = (amp.pot_p, amp.pot_n);
+                self.model.set_trims(col, pp, pn, value.min(samp::CAL_MAX));
+            }
+            VADC_L_UV => {
+                let v_h = self.model.adc.v_h;
+                self.model.set_adc_refs(value as f64 * 1e-6, v_h);
+            }
+            VADC_H_UV => {
+                let v_l = self.model.adc.v_l;
+                self.model.set_adc_refs(v_l, value as f64 * 1e-6);
+            }
+            WADDR => self.waddr = value % (c::N_ROWS * c::M_COLS) as u32,
+            WDATA => {
+                let idx = self.waddr as usize;
+                let (row, col) = (idx / c::M_COLS, idx % c::M_COLS);
+                let delta = self.model.array.cell(row, col).delta;
+                *self.model.array.cell_mut(row, col) =
+                    crate::analog::mwc::Mwc::program(value as i32).with_delta(delta);
+                self.model.invalidate_fold();
+                self.waddr = (self.waddr + 1) % (c::N_ROWS * c::M_COLS) as u32;
+            }
+            _ => return Err(BusResp::SlvErr),
+        }
+        Ok(())
+    }
+
+    fn size(&self) -> u32 {
+        regs::SIZE
+    }
+
+    fn name(&self) -> &str {
+        "cim"
+    }
+
+    fn as_any(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analog::CimAnalogModel;
+
+    fn ideal_device() -> CimDevice {
+        CimDevice::new(CimAnalogModel::ideal())
+    }
+
+    #[test]
+    fn mac_through_registers_matches_direct_model() {
+        let mut dev = ideal_device();
+        let weights: Vec<i32> = (0..c::N_ROWS * c::M_COLS)
+            .map(|i| ((i as i32 * 11) % 127) - 63)
+            .collect();
+        // program through the write port
+        dev.write32(regs::WADDR, 0).unwrap();
+        for &w in &weights {
+            dev.write32(regs::WDATA, w as u32).unwrap();
+        }
+        // inputs
+        for r in 0..c::N_ROWS {
+            dev.write32(regs::INPUT + 4 * r as u32, ((r as i32 % 40) - 20) as u32).unwrap();
+        }
+        dev.write32(regs::CTRL, 1).unwrap();
+        let via_regs: Vec<u32> = (0..c::M_COLS)
+            .map(|col| dev.read32(regs::OUT + 4 * col as u32).unwrap())
+            .collect();
+        // direct model path
+        let mut m = CimAnalogModel::ideal();
+        m.program(&weights);
+        let x: Vec<i32> = (0..c::N_ROWS).map(|r| (r as i32 % 40) - 20).collect();
+        let direct = m.forward_batch(&x, 1);
+        assert_eq!(via_regs, direct);
+        assert_eq!(dev.mac_count(), 1);
+    }
+
+    #[test]
+    fn waddr_autoincrements_and_wraps() {
+        let mut dev = ideal_device();
+        dev.write32(regs::WADDR, (c::N_ROWS * c::M_COLS - 1) as u32).unwrap();
+        dev.write32(regs::WDATA, 5).unwrap();
+        assert_eq!(dev.read32(regs::WADDR).unwrap(), 0);
+    }
+
+    #[test]
+    fn trim_registers_reach_the_amps() {
+        let mut dev = ideal_device();
+        dev.write32(regs::POT_P + 4 * 3, 200).unwrap();
+        dev.write32(regs::POT_N + 4 * 3, 100).unwrap();
+        dev.write32(regs::CAL + 4 * 3, 50).unwrap();
+        assert_eq!(dev.model.amps[3].pot_p, 200);
+        assert_eq!(dev.model.amps[3].pot_n, 100);
+        assert_eq!(dev.model.amps[3].cal, 50);
+        // readback
+        assert_eq!(dev.read32(regs::POT_P + 12).unwrap(), 200);
+    }
+
+    #[test]
+    fn trim_codes_clamped_to_width() {
+        let mut dev = ideal_device();
+        dev.write32(regs::POT_P, 9999).unwrap();
+        dev.write32(regs::CAL, 9999).unwrap();
+        assert_eq!(dev.model.amps[0].pot_p, samp::POT_MAX);
+        assert_eq!(dev.model.amps[0].cal, samp::CAL_MAX);
+    }
+
+    #[test]
+    fn adc_refs_in_microvolts() {
+        let mut dev = ideal_device();
+        dev.write32(regs::VADC_L_UV, 190_000).unwrap();
+        dev.write32(regs::VADC_H_UV, 630_000).unwrap();
+        assert!((dev.model.adc.v_l - 0.19).abs() < 1e-9);
+        assert!((dev.model.adc.v_h - 0.63).abs() < 1e-9);
+        assert_eq!(dev.read32(regs::VADC_L_UV).unwrap(), 190_000);
+    }
+
+    #[test]
+    fn averaged_read_q8_fixed_point() {
+        let mut dev = ideal_device();
+        dev.program_weights(&vec![63; c::N_ROWS * c::M_COLS]);
+        for r in 0..c::N_ROWS {
+            dev.write32(regs::INPUT + 4 * r as u32, 40).unwrap();
+        }
+        dev.write32(regs::AVG_CNT, 8).unwrap();
+        dev.write32(regs::CTRL, 2).unwrap();
+        let q8 = dev.read32(regs::OUT_AVG_Q8).unwrap();
+        let single = dev.read32(regs::OUT).unwrap();
+        // noise-free ideal die: average == single read exactly
+        assert_eq!(q8, single * 256);
+        assert_eq!(dev.mac_count(), 8);
+    }
+
+    #[test]
+    fn invalid_register_is_slverr() {
+        let mut dev = ideal_device();
+        assert_eq!(dev.read32(0xFFC).unwrap_err(), BusResp::SlvErr);
+        assert_eq!(dev.write32(regs::CTRL, 99).unwrap_err(), BusResp::SlvErr);
+    }
+
+    #[test]
+    fn input_codes_clamped() {
+        let mut dev = ideal_device();
+        dev.write32(regs::INPUT, 1000).unwrap();
+        assert_eq!(dev.read32(regs::INPUT).unwrap() as i32, 63);
+        dev.write32(regs::INPUT, (-1000i32) as u32).unwrap();
+        assert_eq!(dev.read32(regs::INPUT).unwrap() as i32, -63);
+    }
+}

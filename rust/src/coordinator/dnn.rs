@@ -1,0 +1,559 @@
+//! DNN tile scheduler: executes the quantized MLP on the physical 36x32
+//! CIM array (paper §VII-C). Mirrors the L2 JAX graph (`model.mlp_cim`)
+//! exactly: row-tiles of N=36, column-tiles of M=32, 6-bit partial sums
+//! dequantized with the NOMINAL constants and accumulated digitally (the
+//! RISC-V core's role), bias + ReLU + re-quantization between layers.
+
+use crate::analog::{consts as c, CimAnalogModel};
+use crate::data::mlp::{argmax, QuantMlp, HIDDEN};
+use crate::data::synth::{Dataset, IMG_PIXELS, NUM_CLASSES};
+
+/// Tile counts for mapping (rows x cols) onto the array.
+pub fn tile_counts(rows: usize, cols: usize) -> (usize, usize) {
+    (rows.div_ceil(c::N_ROWS), cols.div_ceil(c::M_COLS))
+}
+
+/// Pre-tiled weights for one layer: `tiles[rt][ct]` is an N*M row-major
+/// signed-code block (zero padded).
+#[derive(Debug, Clone)]
+pub struct TiledLayer {
+    pub tiles: Vec<Vec<Vec<i32>>>,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl TiledLayer {
+    pub fn new(weights: &[i32], rows: usize, cols: usize) -> Self {
+        assert_eq!(weights.len(), rows * cols);
+        let (rt, ct) = tile_counts(rows, cols);
+        let mut tiles = vec![vec![vec![0i32; c::N_ROWS * c::M_COLS]; ct]; rt];
+        for r in 0..rows {
+            for col in 0..cols {
+                let (tr, tc) = (r / c::N_ROWS, col / c::M_COLS);
+                let (ir, ic) = (r % c::N_ROWS, col % c::M_COLS);
+                tiles[tr][tc][ir * c::M_COLS + ic] = weights[r * cols + col];
+            }
+        }
+        Self { tiles, rows, cols }
+    }
+
+    pub fn row_tiles(&self) -> usize {
+        self.tiles.len()
+    }
+
+    pub fn col_tiles(&self) -> usize {
+        self.tiles[0].len()
+    }
+}
+
+/// The MLP mapped onto CIM tiles.
+///
+/// Dynamic-range management (DESIGN.md §6): a single 36-row tile of DNN
+/// weights produces MAC sums spanning only a fraction of the full-scale
+/// S_max = N*63*63, so at the default ADC references the 6-bit output
+/// would bury the signal in quantization. The ADC references are
+/// programmable (the BISC clipping-avoidance hardware, Section VI-D-a),
+/// so the scheduler calibrates a per-layer reference window to the
+/// observed tile output swing — an output-side PGA, purely digital
+/// bookkeeping on the RISC-V side.
+pub struct CimMlp {
+    pub quant: QuantMlp,
+    pub layer1: TiledLayer,
+    pub layer2: TiledLayer,
+    /// per-layer ADC reference windows (v_l, v_h)
+    pub refs1: (f64, f64),
+    pub refs2: (f64, f64),
+    /// digital residual compensation (RISC-V side), measured post-BISC
+    pub trim1: Option<LayerTrim>,
+    pub trim2: Option<LayerTrim>,
+    /// zero-point subtraction (bring-up baseline): measured q at x = 0,
+    /// subtracted digitally. Cheaper than BISC (no analog trimming, no
+    /// gain correction) — the minimal thing any deployment does.
+    pub zp1: Option<Vec<f64>>,
+    pub zp2: Option<Vec<f64>>,
+}
+
+/// Per-column digital residual correction at one layer's ADC window:
+/// Q_nom_est = (Q_act - eps) / g (the digital use of Eq. 9-11 on whatever
+/// the analog trims could not express — cal-DAC/pot quantization, the
+/// small-signal-vs-secant gain difference).
+#[derive(Debug, Clone)]
+pub struct LayerTrim {
+    pub g: Vec<f64>,
+    pub eps: Vec<f64>,
+}
+
+/// Execution statistics of one inference.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct InferenceStats {
+    /// array activations (MAC pulses)
+    pub mac_ops: u64,
+    /// weight reprogram operations (tile switches)
+    pub reprograms: u64,
+}
+
+/// Per-tile MAC sums (digital emulation) used for window calibration.
+fn tile_sums(layer: &TiledLayer, x_codes: &[i32]) -> Vec<i64> {
+    let (rt, ct) = (layer.row_tiles(), layer.col_tiles());
+    let mut sums = Vec::with_capacity(rt * ct * c::M_COLS);
+    for tr in 0..rt {
+        for tc in 0..ct {
+            let tile = &layer.tiles[tr][tc];
+            for col in 0..c::M_COLS {
+                let mut s = 0i64;
+                for r in 0..c::N_ROWS {
+                    let x = x_codes.get(tr * c::N_ROWS + r).copied().unwrap_or(0) as i64;
+                    s += x * tile[r * c::M_COLS + col] as i64;
+                }
+                sums.push(s);
+            }
+        }
+    }
+    sums
+}
+
+/// Choose an ADC window covering the tile-sum swing plus headroom for the
+/// analog gain/offset error budget (so an *uncalibrated* die degrades
+/// rather than hard-clips, matching §VII-C's 88.7% uncal behaviour).
+fn window_for(p995_abs_cp: f64) -> (f64, f64) {
+    let v_per_cp = c::volts_per_cp();
+    // multiplicative headroom for gain errors + additive for offsets
+    let half = p995_abs_cp * v_per_cp * 1.15 + 0.012;
+    let half = half.min(c::V_BIAS - c::V_INL); // never wider than default
+    (c::V_BIAS - half, c::V_BIAS + half)
+}
+
+/// 99.5th percentile of |sums| (clipping a handful of outlier tiles is
+/// cheaper than wasting ADC range on them).
+fn p995(mut v: Vec<f64>) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[((v.len() - 1) as f64 * 0.995) as usize]
+}
+
+impl CimMlp {
+    /// Build the tiled MLP, calibrating the per-layer ADC windows on a
+    /// sample of `calib` images (digital emulation, no array needed).
+    pub fn new(quant: QuantMlp, calib: &Dataset, calib_n: usize) -> Self {
+        let layer1 = TiledLayer::new(&quant.w1_codes, IMG_PIXELS, HIDDEN);
+        let layer2 = TiledLayer::new(&quant.w2_codes, HIDDEN, NUM_CLASSES);
+        let mut abs1: Vec<f64> = Vec::new();
+        let mut abs2: Vec<f64> = Vec::new();
+        for i in 0..calib.len().min(calib_n) {
+            let x = quant.quantize_input(calib.image(i));
+            for s in tile_sums(&layer1, &x) {
+                abs1.push(s.unsigned_abs() as f64);
+            }
+            // hidden codes from the digital reference path
+            let mut h = quant.b1_cp.clone();
+            for (px, &xi) in x.iter().enumerate() {
+                if xi == 0 {
+                    continue;
+                }
+                let row = &quant.w1_codes[px * HIDDEN..(px + 1) * HIDDEN];
+                for (hj, &w) in h.iter_mut().zip(row) {
+                    *hj += (xi * w) as f32;
+                }
+            }
+            let h_codes: Vec<i32> = h
+                .iter()
+                .map(|&v| (v.max(0.0) * quant.act_scale1).round().min(63.0) as i32)
+                .collect();
+            for s in tile_sums(&layer2, &h_codes) {
+                abs2.push(s.unsigned_abs() as f64);
+            }
+        }
+        let refs1 = window_for(p995(abs1));
+        let refs2 = window_for(p995(abs2));
+        Self { quant, layer1, layer2, refs1, refs2, trim1: None, trim2: None, zp1: None, zp2: None }
+    }
+
+    /// Build with the default (full-range) ADC windows — the naive mapping,
+    /// kept as an ablation (bench `dnn_accuracy --ablation`).
+    pub fn new_default_refs(quant: QuantMlp) -> Self {
+        let layer1 = TiledLayer::new(&quant.w1_codes, IMG_PIXELS, HIDDEN);
+        let layer2 = TiledLayer::new(&quant.w2_codes, HIDDEN, NUM_CLASSES);
+        Self {
+            quant,
+            layer1,
+            layer2,
+            refs1: (c::V_ADC_L, c::V_ADC_H),
+            refs2: (c::V_ADC_L, c::V_ADC_H),
+            trim1: None,
+            trim2: None,
+            zp1: None,
+            zp2: None,
+        }
+    }
+
+    /// Measure per-column zero points (q at x = 0) at each layer's window —
+    /// the minimal bring-up correction: one extra read per layer, no analog
+    /// trimming, no gain correction. This is the "uncalibrated" baseline a
+    /// real deployment would actually ship (raw offsets accumulate
+    /// coherently over the 22 row tiles and destroy the network otherwise).
+    pub fn measure_zero_point(&mut self, model: &mut CimAnalogModel) {
+        let zero = [0i32; c::N_ROWS];
+        let mut zp_at = |refs: (f64, f64), tile: &[i32]| -> Vec<f64> {
+            model.set_adc_refs(refs.0, refs.1);
+            model.program(tile);
+            model.forward_averaged(&zero, 8)
+        };
+        self.zp1 = Some(zp_at(self.refs1, &self.layer1.tiles[0][0]));
+        self.zp2 = Some(zp_at(self.refs2, &self.layer2.tiles[0][0]));
+        model.set_adc_refs(c::V_ADC_L, c::V_ADC_H);
+    }
+
+    /// Drop all digital corrections (raw-uncalibrated ablation).
+    pub fn clear_corrections(&mut self) {
+        self.trim1 = None;
+        self.trim2 = None;
+        self.zp1 = None;
+        self.zp2 = None;
+    }
+
+    /// Measure the digital residual trims on a (typically BISC-calibrated)
+    /// die: characterize each column at each layer's window and store the
+    /// per-column (g, eps) for inverse correction during inference.
+    pub fn measure_digital_trim(&mut self, model: &mut CimAnalogModel, cfg: &crate::config::SimConfig) {
+        use crate::coordinator::bisc::{AdcCharacterization, BiscEngine};
+        let mut trim_at = |refs: (f64, f64)| -> LayerTrim {
+            let half = c::V_BIAS - refs.0;
+            let v_per_x = c::volts_per_cp() * c::CODE_MAX as f64 * c::N_ROWS as f64;
+            let sweep = ((half * 0.75) / v_per_x).floor().max(2.0) as i32;
+            let mut engine = BiscEngine::from_config(cfg, AdcCharacterization::ideal());
+            engine.char_refs = Some(refs);
+            engine.sweep_max_code = sweep.min(c::CODE_MAX);
+            engine.averages = engine.averages.max(8);
+            let fits = engine.characterize_only(model);
+            LayerTrim {
+                g: fits.iter().map(|(p, n)| 0.5 * (p.g_tot + n.g_tot)).collect(),
+                eps: fits.iter().map(|(p, n)| 0.5 * (p.eps_tot + n.eps_tot)).collect(),
+            }
+        };
+        self.trim1 = Some(trim_at(self.refs1));
+        self.trim2 = Some(trim_at(self.refs2));
+    }
+
+    /// One layer on the array: x_codes (len >= rows, zero-padded) ->
+    /// accumulated MAC estimates in code-product units (len cols).
+    fn layer_forward(
+        &self,
+        model: &mut CimAnalogModel,
+        layer: &TiledLayer,
+        refs: (f64, f64),
+        trim: &Option<LayerTrim>,
+        zp: &Option<Vec<f64>>,
+        x_codes: &[i32],
+        stats: &mut InferenceStats,
+    ) -> Vec<f32> {
+        model.set_adc_refs(refs.0, refs.1);
+        let k = c::code_gain_at(refs.0, refs.1) as f32;
+        let mid = c::q_mid_at(refs.0, refs.1) as f32;
+        let (rt, ct) = (layer.row_tiles(), layer.col_tiles());
+        let mut out = vec![0f32; ct * c::M_COLS];
+        for tc in 0..ct {
+            for tr in 0..rt {
+                model.program(&layer.tiles[tr][tc]);
+                stats.reprograms += 1;
+                let start = tr * c::N_ROWS;
+                let mut xr = [0i32; c::N_ROWS];
+                for (i, x) in xr.iter_mut().enumerate() {
+                    *x = x_codes.get(start + i).copied().unwrap_or(0);
+                }
+                let q = model.forward_batch(&xr, 1);
+                stats.mac_ops += 1;
+                for col in 0..c::M_COLS {
+                    let mut qc = q[col] as f32;
+                    if let Some(t) = trim {
+                        // full digital residual correction (gain + offset)
+                        qc = (qc - t.eps[col] as f32) / t.g[col] as f32;
+                        out[tc * c::M_COLS + col] += (qc - mid) / k;
+                    } else if let Some(z) = zp {
+                        // zero-point subtraction only (bring-up baseline)
+                        out[tc * c::M_COLS + col] += (qc - z[col] as f32) / k;
+                    } else {
+                        out[tc * c::M_COLS + col] += (qc - mid) / k;
+                    }
+                }
+            }
+        }
+        out.truncate(layer.cols);
+        out
+    }
+
+    /// Full inference of one image through the CIM array.
+    pub fn infer(
+        &self,
+        model: &mut CimAnalogModel,
+        img: &[f32],
+        stats: &mut InferenceStats,
+    ) -> Vec<f32> {
+        let x = self.quant.quantize_input(img);
+        let h_cp = self.layer_forward(model, &self.layer1, self.refs1, &self.trim1, &self.zp1, &x, stats);
+        // digital bias + ReLU + requantize (RISC-V side)
+        let h_codes: Vec<i32> = h_cp
+            .iter()
+            .zip(&self.quant.b1_cp)
+            .map(|(&v, &b)| {
+                ((v + b).max(0.0) * self.quant.act_scale1)
+                    .round()
+                    .clamp(0.0, 63.0) as i32
+            })
+            .collect();
+        let logits_cp = self.layer_forward(model, &self.layer2, self.refs2, &self.trim2, &self.zp2, &h_codes, stats);
+        logits_cp
+            .iter()
+            .zip(&self.quant.b2_cp)
+            .map(|(&v, &b)| v + b)
+            .collect()
+    }
+
+    /// Classify a whole dataset; returns (accuracy, stats).
+    pub fn accuracy(
+        &self,
+        model: &mut CimAnalogModel,
+        ds: &Dataset,
+        limit: usize,
+    ) -> (f64, InferenceStats) {
+        let n = ds.len().min(limit);
+        let mut stats = InferenceStats::default();
+        let mut correct = 0;
+        for i in 0..n {
+            let logits = self.infer(model, ds.image(i), &mut stats);
+            if argmax(&logits) == ds.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        (correct as f64 / n as f64, stats)
+    }
+
+    /// Nominal tiled reference (ideal-array digital emulation) — the
+    /// "simulation" row of §VII-C including the 6-bit ADC quantization.
+    pub fn infer_nominal(&self, img: &[f32]) -> Vec<f32> {
+        let mut model = CimAnalogModel::ideal();
+        let mut stats = InferenceStats::default();
+        self.infer(&mut model, img, &mut stats)
+    }
+
+    /// Pre-fold every tile under the die's current trims (§Perf
+    /// optimization 2): inference then replays cached folded tiles instead
+    /// of re-programming + re-folding the array model 68 times per image.
+    /// Must be re-run after any trim/refs change (BISC, zero-point).
+    pub fn prepare(&self, model: &mut CimAnalogModel) -> PreparedMlp {
+        let mut fold_layer = |layer: &TiledLayer, refs: (f64, f64)| {
+            model.set_adc_refs(refs.0, refs.1);
+            layer
+                .tiles
+                .iter()
+                .map(|row| row.iter().map(|t| model.fold_tile(t)).collect())
+                .collect()
+        };
+        let tiles1 = fold_layer(&self.layer1, self.refs1);
+        let tiles2 = fold_layer(&self.layer2, self.refs2);
+        model.set_adc_refs(c::V_ADC_L, c::V_ADC_H);
+        PreparedMlp { tiles1, tiles2 }
+    }
+
+    fn layer_forward_prepared(
+        &self,
+        model: &CimAnalogModel,
+        layer: &TiledLayer,
+        folded: &[Vec<crate::analog::Folded>],
+        refs: (f64, f64),
+        trim: &Option<LayerTrim>,
+        zp: &Option<Vec<f64>>,
+        x_codes: &[i32],
+        stats: &mut InferenceStats,
+    ) -> Vec<f32> {
+        let k = c::code_gain_at(refs.0, refs.1) as f32;
+        let mid = c::q_mid_at(refs.0, refs.1) as f32;
+        let (rt, ct) = (layer.row_tiles(), layer.col_tiles());
+        let mut out = vec![0f32; ct * c::M_COLS];
+        let mut xr = [0i32; c::N_ROWS];
+        for tc in 0..ct {
+            for tr in 0..rt {
+                let start = tr * c::N_ROWS;
+                for (i, x) in xr.iter_mut().enumerate() {
+                    *x = x_codes.get(start + i).copied().unwrap_or(0);
+                }
+                let q = model.forward_folded(&folded[tr][tc], &xr, 1);
+                stats.mac_ops += 1;
+                for col in 0..c::M_COLS {
+                    let mut qc = q[col] as f32;
+                    if let Some(t) = trim {
+                        qc = (qc - t.eps[col] as f32) / t.g[col] as f32;
+                        out[tc * c::M_COLS + col] += (qc - mid) / k;
+                    } else if let Some(z) = zp {
+                        out[tc * c::M_COLS + col] += (qc - z[col] as f32) / k;
+                    } else {
+                        out[tc * c::M_COLS + col] += (qc - mid) / k;
+                    }
+                }
+            }
+        }
+        out.truncate(layer.cols);
+        out
+    }
+
+    /// Inference over the prepared (pre-folded) schedule — the production
+    /// hot path; numerically identical to `infer` (noise-free path).
+    pub fn infer_prepared(
+        &self,
+        model: &CimAnalogModel,
+        prepared: &PreparedMlp,
+        img: &[f32],
+        stats: &mut InferenceStats,
+    ) -> Vec<f32> {
+        let x = self.quant.quantize_input(img);
+        let h_cp = self.layer_forward_prepared(
+            model, &self.layer1, &prepared.tiles1, self.refs1, &self.trim1, &self.zp1, &x,
+            stats,
+        );
+        let h_codes: Vec<i32> = h_cp
+            .iter()
+            .zip(&self.quant.b1_cp)
+            .map(|(&v, &b)| {
+                ((v + b).max(0.0) * self.quant.act_scale1).round().clamp(0.0, 63.0) as i32
+            })
+            .collect();
+        let logits_cp = self.layer_forward_prepared(
+            model, &self.layer2, &prepared.tiles2, self.refs2, &self.trim2, &self.zp2,
+            &h_codes, stats,
+        );
+        logits_cp
+            .iter()
+            .zip(&self.quant.b2_cp)
+            .map(|(&v, &b)| v + b)
+            .collect()
+    }
+
+    /// Dataset accuracy over the prepared schedule.
+    pub fn accuracy_prepared(
+        &self,
+        model: &CimAnalogModel,
+        prepared: &PreparedMlp,
+        ds: &Dataset,
+        limit: usize,
+    ) -> (f64, InferenceStats) {
+        let n = ds.len().min(limit);
+        let mut stats = InferenceStats::default();
+        let mut correct = 0;
+        for i in 0..n {
+            let logits = self.infer_prepared(model, prepared, ds.image(i), &mut stats);
+            if argmax(&logits) == ds.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        (correct as f64 / n as f64, stats)
+    }
+}
+
+/// Pre-folded tile schedule (see `CimMlp::prepare`).
+pub struct PreparedMlp {
+    tiles1: Vec<Vec<crate::analog::Folded>>,
+    tiles2: Vec<Vec<crate::analog::Folded>>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analog::variation::VariationSample;
+    use crate::config::SimConfig;
+    use crate::coordinator::bisc::{AdcCharacterization, BiscEngine};
+    use crate::data::mlp::{train, Mlp, TrainConfig};
+    use crate::data::synth;
+
+    fn pipeline() -> (CimMlp, synth::Dataset) {
+        let (train_ds, test_ds) = synth::generate(600, 120, 17);
+        let mut mlp = Mlp::new(4);
+        train(&mut mlp, &train_ds, &TrainConfig { epochs: 6, ..Default::default() });
+        let q = QuantMlp::from_float(&mlp, &train_ds, 100);
+        (CimMlp::new(q, &train_ds, 50), test_ds)
+    }
+
+    #[test]
+    fn tile_counts_match_paper_mapping() {
+        assert_eq!(tile_counts(784, 72), (22, 3));
+        assert_eq!(tile_counts(72, 10), (2, 1));
+    }
+
+    #[test]
+    fn tiled_layer_roundtrip() {
+        let rows = 40;
+        let cols = 33;
+        let w: Vec<i32> = (0..rows * cols).map(|i| (i as i32 % 127) - 63).collect();
+        let t = TiledLayer::new(&w, rows, cols);
+        assert_eq!(t.row_tiles(), 2);
+        assert_eq!(t.col_tiles(), 2);
+        // element (37, 32) lives in tile (1,1) at (1, 0)
+        assert_eq!(t.tiles[1][1][c::M_COLS + 0], w[37 * cols + 32]);
+        // padding is zero
+        assert_eq!(t.tiles[1][1][35 * c::M_COLS + 31], 0);
+    }
+
+    #[test]
+    fn ideal_array_tracks_digital_reference() {
+        let (cim_mlp, test_ds) = pipeline();
+        let mut model = CimAnalogModel::ideal();
+        let (acc_cim, stats) = cim_mlp.accuracy(&mut model, &test_ds, 40);
+        let acc_dig = {
+            let correct = (0..40)
+                .filter(|&i| {
+                    argmax(&cim_mlp.quant.infer_digital(test_ds.image(i)))
+                        == test_ds.labels[i] as usize
+                })
+                .count();
+            correct as f64 / 40.0
+        };
+        // ADC quantization costs a little accuracy but not a collapse
+        assert!(acc_cim > acc_dig - 0.15, "cim {acc_cim} vs digital {acc_dig}");
+        assert_eq!(stats.mac_ops, 40 * (22 * 3 + 2));
+    }
+
+    #[test]
+    fn prepared_schedule_matches_direct_path() {
+        let (cim_mlp, test_ds) = pipeline();
+        let cfg = SimConfig::default();
+        let mut cfg2 = cfg.clone();
+        cfg2.sigma_noise = 0.0; // the prepared path is the noise-free fast path
+        let s = VariationSample::draw(&cfg2);
+        let mut die = CimAnalogModel::from_sample(&cfg2, &s);
+        let prepared = cim_mlp.prepare(&mut die);
+        let mut st1 = InferenceStats::default();
+        let mut st2 = InferenceStats::default();
+        for i in 0..10 {
+            let a = cim_mlp.infer(&mut die, test_ds.image(i), &mut st1);
+            let b = cim_mlp.infer_prepared(&die, &prepared, test_ds.image(i), &mut st2);
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-3, "prepared mismatch: {x} vs {y}");
+            }
+        }
+        assert_eq!(st1.mac_ops, st2.mac_ops);
+    }
+
+    #[test]
+    fn errors_degrade_then_bisc_recovers() {
+        let (cim_mlp, test_ds) = pipeline();
+        let n = 60;
+        let mut ideal = CimAnalogModel::ideal();
+        let (acc_sim, _) = cim_mlp.accuracy(&mut ideal, &test_ds, n);
+
+        let cfg = SimConfig::default();
+        let s = VariationSample::draw(&cfg);
+        let mut die = CimAnalogModel::from_sample(&cfg, &s);
+        let (acc_uncal, _) = cim_mlp.accuracy(&mut die, &test_ds, n);
+
+        let engine = BiscEngine::from_config(&cfg, AdcCharacterization::ideal());
+        engine.calibrate(&mut die);
+        let (acc_cal, _) = cim_mlp.accuracy(&mut die, &test_ds, n);
+
+        // paper §VII-C shape: sim > cal > uncal
+        assert!(acc_uncal < acc_sim + 0.01, "uncal {acc_uncal} sim {acc_sim}");
+        assert!(
+            acc_cal >= acc_uncal,
+            "BISC should not hurt: uncal {acc_uncal} cal {acc_cal}"
+        );
+    }
+}

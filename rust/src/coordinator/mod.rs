@@ -1,0 +1,9 @@
+//! L3 coordinator: the CIM device register file, the BISC calibration
+//! engine, compute-SNR evaluation, the DNN tile scheduler, and the batching
+//! request loop (paper Sections III, VI, VII).
+
+pub mod bisc;
+pub mod cim_core;
+pub mod snr;
+pub mod dnn;
+pub mod batcher;

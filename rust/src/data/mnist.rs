@@ -1,0 +1,113 @@
+//! MNIST IDX loader. If the canonical ubyte files are present (pointed to
+//! by `ACORE_MNIST_DIR` or `./data/mnist`), the DNN demo uses real MNIST
+//! (paper §VII-C); otherwise callers fall back to `data::synth`.
+
+use super::synth::{Dataset, IMG_PIXELS};
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+fn read_u32be(b: &[u8], off: usize) -> u32 {
+    u32::from_be_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
+}
+
+fn read_file(path: &Path) -> Result<Vec<u8>, String> {
+    let mut f = std::fs::File::open(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf).map_err(|e| format!("{}: {e}", path.display()))?;
+    Ok(buf)
+}
+
+/// Parse an IDX3 image file + IDX1 label file pair.
+pub fn load_pair(images: &Path, labels: &Path) -> Result<Dataset, String> {
+    let ib = read_file(images)?;
+    let lb = read_file(labels)?;
+    if read_u32be(&ib, 0) != 0x0000_0803 {
+        return Err(format!("{}: not an IDX3 image file", images.display()));
+    }
+    if read_u32be(&lb, 0) != 0x0000_0801 {
+        return Err(format!("{}: not an IDX1 label file", labels.display()));
+    }
+    let n = read_u32be(&ib, 4) as usize;
+    let rows = read_u32be(&ib, 8) as usize;
+    let cols = read_u32be(&ib, 12) as usize;
+    if rows * cols != IMG_PIXELS {
+        return Err(format!("unexpected image size {rows}x{cols}"));
+    }
+    if read_u32be(&lb, 4) as usize != n {
+        return Err("image/label count mismatch".to_string());
+    }
+    let pixels = &ib[16..16 + n * IMG_PIXELS];
+    let images = pixels.iter().map(|&p| p as f32 / 255.0).collect();
+    let labels = lb[8..8 + n].to_vec();
+    Ok(Dataset { images, labels })
+}
+
+/// Search for MNIST in ACORE_MNIST_DIR or ./data/mnist.
+pub fn find_dir() -> Option<PathBuf> {
+    let candidates = [
+        std::env::var("ACORE_MNIST_DIR").ok().map(PathBuf::from),
+        Some(PathBuf::from("data/mnist")),
+    ];
+    candidates
+        .into_iter()
+        .flatten()
+        .find(|d| d.join("train-images-idx3-ubyte").exists())
+}
+
+/// Load (train, test) if available.
+pub fn load() -> Option<(Dataset, Dataset)> {
+    let dir = find_dir()?;
+    let train = load_pair(
+        &dir.join("train-images-idx3-ubyte"),
+        &dir.join("train-labels-idx1-ubyte"),
+    )
+    .ok()?;
+    let test = load_pair(
+        &dir.join("t10k-images-idx3-ubyte"),
+        &dir.join("t10k-labels-idx1-ubyte"),
+    )
+    .ok()?;
+    Some((train, test))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_idx(dir: &Path, n: usize) -> (PathBuf, PathBuf) {
+        let img_path = dir.join("imgs");
+        let lbl_path = dir.join("lbls");
+        let mut f = std::fs::File::create(&img_path).unwrap();
+        f.write_all(&0x0803u32.to_be_bytes()).unwrap();
+        f.write_all(&(n as u32).to_be_bytes()).unwrap();
+        f.write_all(&28u32.to_be_bytes()).unwrap();
+        f.write_all(&28u32.to_be_bytes()).unwrap();
+        f.write_all(&vec![128u8; n * IMG_PIXELS]).unwrap();
+        let mut f = std::fs::File::create(&lbl_path).unwrap();
+        f.write_all(&0x0801u32.to_be_bytes()).unwrap();
+        f.write_all(&(n as u32).to_be_bytes()).unwrap();
+        f.write_all(&(0..n).map(|i| (i % 10) as u8).collect::<Vec<_>>()).unwrap();
+        (img_path, lbl_path)
+    }
+
+    #[test]
+    fn parses_valid_idx() {
+        let dir = std::env::temp_dir().join("acore_mnist_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let (ip, lp) = write_idx(&dir, 5);
+        let ds = load_pair(&ip, &lp).unwrap();
+        assert_eq!(ds.len(), 5);
+        assert!((ds.images[0] - 128.0 / 255.0).abs() < 1e-6);
+        assert_eq!(ds.labels, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("acore_mnist_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let (ip, lp) = write_idx(&dir, 2);
+        // swap: labels file as images
+        assert!(load_pair(&lp, &ip).is_err());
+    }
+}

@@ -1,0 +1,22 @@
+//! Datasets and model training for the DNN demonstration (paper §VII-C):
+//! MNIST IDX loading (when available), a deterministic synthetic fallback,
+//! float MLP training, and quantization to the CIM code domain.
+
+pub mod mlp;
+pub mod mnist;
+pub mod synth;
+
+/// Load MNIST if present, else generate the synthetic dataset
+/// (DESIGN.md §2 substitution). Returns (train, test, name).
+pub fn load_or_synth(n_train: usize, n_test: usize, seed: u64) -> (synth::Dataset, synth::Dataset, &'static str) {
+    if let Some((mut train, mut test)) = mnist::load() {
+        train.images.truncate(n_train * synth::IMG_PIXELS);
+        train.labels.truncate(n_train);
+        test.images.truncate(n_test * synth::IMG_PIXELS);
+        test.labels.truncate(n_test);
+        (train, test, "mnist")
+    } else {
+        let (train, test) = synth::generate(n_train, n_test, seed);
+        (train, test, "synthetic")
+    }
+}

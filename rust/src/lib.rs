@@ -1,0 +1,27 @@
+//! # acore-cim
+//!
+//! Full-system simulation reproduction of *Acore-CIM: build accurate and
+//! reliable mixed-signal CIM cores with RISC-V controlled self-calibration*
+//! (CS.AR 2025) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the SoC: a circuit-level analog model of the
+//!   36x32 MDAC-weight-cell CIM core ([`analog`]), a RISC-V RV32IM
+//!   instruction-set simulator with an AXI4-Lite interconnect ([`soc`]),
+//!   the Built-In Self-Calibration engine, DNN tile scheduler and compute
+//!   SNR evaluation ([`coordinator`]), dataset + MLP training utilities
+//!   ([`data`]), and a PJRT runtime that executes the AOT-compiled JAX/
+//!   Pallas artifacts on the hot path ([`runtime`]).
+//! * **L2/L1 (python/, build-time only)** — the JAX model of the same
+//!   analog transfer function and the Pallas MAC kernel, lowered once to
+//!   HLO text (`make artifacts`) and never imported at runtime.
+//!
+//! See DESIGN.md for the paper -> module map and EXPERIMENTS.md for the
+//! reproduced tables/figures.
+
+pub mod analog;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod runtime;
+pub mod soc;
+pub mod util;

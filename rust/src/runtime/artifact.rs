@@ -1,0 +1,156 @@
+//! Artifact registry: parses `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`) and locates the HLO-text files the PJRT
+//! executor loads. Python never runs at inference time — these files are
+//! the entire L2/L1 hand-off.
+
+use crate::util::json::{self, Json};
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub path: PathBuf,
+    pub num_inputs: usize,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub sha256: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactMeta>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load from a directory containing manifest.json + *.hlo.txt.
+    pub fn load(dir: &Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| format!("cannot read manifest in {}: {e} (run `make artifacts`)", dir.display()))?;
+        let j = json::parse(&text).map_err(|e| e.to_string())?;
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or("manifest missing `artifacts`")?;
+        let mut artifacts = Vec::new();
+        for a in arts {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or("artifact missing name")?
+                .to_string();
+            let rel = a
+                .get("path")
+                .and_then(Json::as_str)
+                .ok_or("artifact missing path")?;
+            let num_inputs = a
+                .get("num_inputs")
+                .and_then(Json::as_usize)
+                .ok_or("artifact missing num_inputs")?;
+            let input_shapes = a
+                .get("input_shapes")
+                .and_then(Json::as_arr)
+                .map(|shapes| {
+                    shapes
+                        .iter()
+                        .map(|s| {
+                            s.as_arr()
+                                .unwrap_or(&[])
+                                .iter()
+                                .filter_map(Json::as_usize)
+                                .collect()
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+            let sha256 = a
+                .get("sha256")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string();
+            artifacts.push(ArtifactMeta {
+                name,
+                path: dir.join(rel),
+                num_inputs,
+                input_shapes,
+                sha256,
+            });
+        }
+        Ok(Self { artifacts, dir: dir.to_path_buf() })
+    }
+
+    /// Default search: $ACORE_ARTIFACTS, ./artifacts, ../artifacts.
+    pub fn discover() -> Result<Self, String> {
+        let candidates = [
+            std::env::var("ACORE_ARTIFACTS").ok().map(PathBuf::from),
+            Some(PathBuf::from("artifacts")),
+            Some(PathBuf::from("../artifacts")),
+        ];
+        for dir in candidates.into_iter().flatten() {
+            if dir.join("manifest.json").exists() {
+                return Self::load(&dir);
+            }
+        }
+        Err("no artifacts directory found; run `make artifacts`".to_string())
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Smallest cim_mac artifact whose batch is >= `batch` (shape-
+    /// specialized HLO requires padding up to the next emitted size).
+    pub fn cim_mac_for_batch(&self, batch: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.name.starts_with("cim_mac_b"))
+            .filter_map(|a| {
+                a.name
+                    .trim_start_matches("cim_mac_b")
+                    .parse::<usize>()
+                    .ok()
+                    .map(|b| (b, a))
+            })
+            .filter(|(b, _)| *b >= batch)
+            .min_by_key(|(b, _)| *b)
+            .map(|(_, a)| a)
+    }
+
+    pub fn batch_of(meta: &ArtifactMeta) -> usize {
+        meta.input_shapes.first().map(|s| s[0]).unwrap_or(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_artifacts() -> Option<Manifest> {
+        for dir in ["artifacts", "../artifacts"] {
+            let p = Path::new(dir);
+            if p.join("manifest.json").exists() {
+                return Some(Manifest::load(p).unwrap());
+            }
+        }
+        None
+    }
+
+    #[test]
+    fn loads_repo_manifest() {
+        let m = repo_artifacts().expect("run `make artifacts` first");
+        assert!(m.find("cim_mac_b1").is_some());
+        let b1 = m.find("cim_mac_b1").unwrap();
+        assert_eq!(b1.num_inputs, 15);
+        assert_eq!(b1.input_shapes[0], vec![1, 36]);
+        assert!(b1.path.exists());
+    }
+
+    #[test]
+    fn batch_selection_picks_smallest_fit() {
+        let m = repo_artifacts().expect("run `make artifacts` first");
+        assert_eq!(m.cim_mac_for_batch(1).unwrap().name, "cim_mac_b1");
+        assert_eq!(m.cim_mac_for_batch(2).unwrap().name, "cim_mac_b8");
+        assert_eq!(m.cim_mac_for_batch(100).unwrap().name, "cim_mac_b128");
+        assert_eq!(m.cim_mac_for_batch(1024).unwrap().name, "cim_mac_b1024");
+        assert!(m.cim_mac_for_batch(100_000).is_none());
+    }
+}

@@ -1,0 +1,129 @@
+//! PJRT executor: loads the HLO-text artifacts and runs them on the PJRT
+//! CPU client (the `xla` crate wraps xla_extension's PJRT C API). One
+//! compiled executable per artifact, cached — compile once, execute on the
+//! hot path.
+//!
+//! Interchange is HLO *text*: jax >= 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use super::artifact::{ArtifactMeta, Manifest};
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+
+/// A host tensor handed to / returned from an executable.
+#[derive(Debug, Clone)]
+pub struct TensorF32 {
+    pub data: Vec<f32>,
+    pub shape: Vec<i64>,
+}
+
+impl TensorF32 {
+    pub fn new(data: Vec<f32>, shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(data.len(), n, "shape/data mismatch");
+        Self { data, shape: shape.iter().map(|&d| d as i64).collect() }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { data: vec![v], shape: vec![] }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.shape.is_empty() {
+            // rank-0: reshape to scalar
+            Ok(lit.reshape(&[])?)
+        } else {
+            Ok(lit.reshape(&self.shape)?)
+        }
+    }
+}
+
+pub struct Executor {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// executions performed (for perf accounting)
+    pub executions: u64,
+}
+
+impl Executor {
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, manifest, cache: HashMap::new(), executions: 0 })
+    }
+
+    pub fn discover() -> Result<Self> {
+        let manifest = Manifest::discover().map_err(|e| anyhow!(e))?;
+        Self::new(manifest)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn meta(&self, name: &str) -> Result<ArtifactMeta> {
+        self.manifest
+            .find(name)
+            .cloned()
+            .ok_or_else(|| anyhow!("artifact `{name}` not in manifest"))
+    }
+
+    /// Compile (or fetch the cached executable for) an artifact.
+    pub fn prepare(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self.meta(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            meta.path
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing {}", meta.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact; returns the first element of the result tuple
+    /// as a flat f32 vector (aot.py lowers with return_tuple=True).
+    pub fn run(&mut self, name: &str, inputs: &[TensorF32]) -> Result<Vec<f32>> {
+        let meta = self.meta(name)?;
+        if inputs.len() != meta.num_inputs {
+            return Err(anyhow!(
+                "artifact `{name}` expects {} inputs, got {}",
+                meta.num_inputs,
+                inputs.len()
+            ));
+        }
+        // shape check against the manifest
+        for (i, (t, want)) in inputs.iter().zip(&meta.input_shapes).enumerate() {
+            let got: Vec<usize> = t.shape.iter().map(|&d| d as usize).collect();
+            if &got != want {
+                return Err(anyhow!(
+                    "artifact `{name}` input {i}: shape {got:?}, manifest says {want:?}"
+                ));
+            }
+        }
+        self.prepare(name)?;
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let exe = self.cache.get(name).unwrap();
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        self.executions += 1;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}

@@ -1,0 +1,11 @@
+//! Runtime layer: PJRT execution of the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) from the rust hot path. Python is never
+//! imported at runtime — `make artifacts` is the only compile-path step.
+
+pub mod artifact;
+pub mod executor;
+pub mod signature;
+
+pub use artifact::Manifest;
+pub use executor::{Executor, TensorF32};
+pub use signature::CimRuntime;

@@ -1,0 +1,190 @@
+//! Input-signature builders for the AOT artifacts — the positional operand
+//! order mirrors the python signatures in `python/compile/aot.py` exactly.
+//!
+//! `CimRuntime` is the hardware-accelerated counterpart of
+//! `analog::CimAnalogModel::forward_batch`: same die parameters, same trim
+//! state, but the evaluation runs through the compiled JAX/Pallas kernel
+//! on PJRT. The parity integration test (`rust/tests/parity.rs`) holds the
+//! two implementations to <= 1 ADC code of each other.
+
+use super::executor::{Executor, TensorF32};
+use crate::analog::variation::VariationSample;
+use crate::analog::{consts as c, samp};
+use anyhow::{anyhow, Result};
+
+/// Trim state fed to the artifact (mirrors the per-column 2SA registers).
+#[derive(Debug, Clone)]
+pub struct TrimState {
+    pub pot_p: Vec<u32>,
+    pub pot_n: Vec<u32>,
+    pub cal: Vec<u32>,
+}
+
+impl TrimState {
+    pub fn nominal() -> Self {
+        Self {
+            pot_p: vec![samp::rsa_to_pot(c::R_SA_NOM); c::M_COLS],
+            pot_n: vec![samp::rsa_to_pot(c::R_SA_NOM); c::M_COLS],
+            cal: vec![samp::vcal_to_cal(c::V_CAL_NOM); c::M_COLS],
+        }
+    }
+
+    pub fn rsa_p(&self) -> Vec<f32> {
+        self.pot_p.iter().map(|&p| samp::pot_to_rsa(p) as f32).collect()
+    }
+
+    pub fn rsa_n(&self) -> Vec<f32> {
+        self.pot_n.iter().map(|&p| samp::pot_to_rsa(p) as f32).collect()
+    }
+
+    pub fn vcal(&self) -> Vec<f32> {
+        self.cal.iter().map(|&p| samp::cal_to_vcal(p) as f32).collect()
+    }
+}
+
+fn f32s(v: &[f64]) -> Vec<f32> {
+    v.iter().map(|&x| x as f32).collect()
+}
+
+/// The CIM array executed through the PJRT artifact.
+pub struct CimRuntime {
+    exec: Executor,
+    sample: VariationSample,
+    pub trims: TrimState,
+    /// ADC references (v_l, v_h)
+    pub adc_refs: (f64, f64),
+    /// weight split: magnitudes on the +/- lines, row-major N*M
+    w_pos: Vec<f32>,
+    w_neg: Vec<f32>,
+}
+
+impl CimRuntime {
+    pub fn new(exec: Executor, sample: VariationSample) -> Self {
+        Self {
+            exec,
+            sample,
+            trims: TrimState::nominal(),
+            adc_refs: (c::V_ADC_L, c::V_ADC_H),
+            w_pos: vec![0.0; c::N_ROWS * c::M_COLS],
+            w_neg: vec![0.0; c::N_ROWS * c::M_COLS],
+        }
+    }
+
+    pub fn executor(&self) -> &Executor {
+        &self.exec
+    }
+
+    pub fn program(&mut self, weights: &[i32]) {
+        assert_eq!(weights.len(), c::N_ROWS * c::M_COLS);
+        for (i, &w) in weights.iter().enumerate() {
+            let w = w.clamp(-c::CODE_MAX, c::CODE_MAX);
+            self.w_pos[i] = w.max(0) as f32;
+            self.w_neg[i] = (-w).max(0) as f32;
+        }
+    }
+
+    fn adc_consts(&self) -> TensorF32 {
+        TensorF32::new(
+            vec![
+                self.sample.adc_alpha as f32,
+                self.sample.adc_beta as f32,
+                self.adc_refs.0 as f32,
+                self.adc_refs.1 as f32,
+                self.sample.kappa_in as f32,
+                self.sample.kappa_reg as f32,
+            ],
+            &[6],
+        )
+    }
+
+    /// Batched forward through the `cim_mac_b*` artifact. `x` is row-major
+    /// `batch x N` signed codes; returns `batch x M` ADC codes. The batch
+    /// is padded up to the nearest emitted artifact size.
+    pub fn forward_batch(&mut self, x: &[i32], batch: usize) -> Result<Vec<u32>> {
+        assert_eq!(x.len(), batch * c::N_ROWS);
+        let meta = self
+            .exec
+            .manifest()
+            .cim_mac_for_batch(batch)
+            .ok_or_else(|| anyhow!("no cim_mac artifact fits batch {batch}"))?;
+        let padded = super::artifact::Manifest::batch_of(meta);
+        let name = meta.name.clone();
+        let mut xf = vec![0f32; padded * c::N_ROWS];
+        for (dst, &src) in xf.iter_mut().zip(x) {
+            *dst = src as f32;
+        }
+        let s = &self.sample;
+        let n = c::N_ROWS;
+        let m = c::M_COLS;
+        let inputs = vec![
+            TensorF32::new(xf, &[padded, n]),
+            TensorF32::new(self.w_pos.clone(), &[n, m]),
+            TensorF32::new(self.w_neg.clone(), &[n, m]),
+            TensorF32::new(f32s(&s.dac_gain), &[n]),
+            TensorF32::new(f32s(&s.dac_off), &[n]),
+            TensorF32::new(f32s(&s.cell_delta), &[n, m]),
+            TensorF32::new(f32s(&s.alpha_p), &[m]),
+            TensorF32::new(f32s(&s.alpha_n), &[m]),
+            TensorF32::new(f32s(&s.beta), &[m]),
+            TensorF32::new(f32s(&s.gamma3), &[m]),
+            TensorF32::new(self.trims.rsa_p(), &[m]),
+            TensorF32::new(self.trims.rsa_n(), &[m]),
+            TensorF32::new(self.trims.vcal(), &[m]),
+            self.adc_consts(),
+            TensorF32::new(vec![0.0; padded * m], &[padded, m]),
+        ];
+        let out = self.exec.run(&name, &inputs)?;
+        Ok(out[..batch * m].iter().map(|&q| q as u32).collect())
+    }
+
+    /// Run the fused whole-network `mlp_cim_b*` artifact.
+    #[allow(clippy::too_many_arguments)]
+    pub fn mlp_forward(
+        &mut self,
+        name: &str,
+        x_codes: &[f32],
+        batch: usize,
+        w1: (&[f32], &[f32]),
+        b1: &[f32],
+        w2: (&[f32], &[f32]),
+        b2: &[f32],
+        act_scale1: f32,
+        vadc1: (f64, f64),
+        vadc2: (f64, f64),
+        trim1: (&[f32], &[f32]),
+        trim2: (&[f32], &[f32]),
+    ) -> Result<Vec<f32>> {
+        let s = &self.sample;
+        let n = c::N_ROWS;
+        let m = c::M_COLS;
+        assert_eq!(x_codes.len(), batch * 22 * n);
+        let inputs = vec![
+            TensorF32::new(x_codes.to_vec(), &[batch, 22 * n]),
+            TensorF32::new(w1.0.to_vec(), &[22, 3, n, m]),
+            TensorF32::new(w1.1.to_vec(), &[22, 3, n, m]),
+            TensorF32::new(b1.to_vec(), &[72]),
+            TensorF32::new(w2.0.to_vec(), &[2, 1, n, m]),
+            TensorF32::new(w2.1.to_vec(), &[2, 1, n, m]),
+            TensorF32::new(b2.to_vec(), &[10]),
+            TensorF32::scalar(act_scale1),
+            TensorF32::new(f32s(&s.dac_gain), &[n]),
+            TensorF32::new(f32s(&s.dac_off), &[n]),
+            TensorF32::new(f32s(&s.cell_delta), &[n, m]),
+            TensorF32::new(f32s(&s.alpha_p), &[m]),
+            TensorF32::new(f32s(&s.alpha_n), &[m]),
+            TensorF32::new(f32s(&s.beta), &[m]),
+            TensorF32::new(f32s(&s.gamma3), &[m]),
+            TensorF32::new(self.trims.rsa_p(), &[m]),
+            TensorF32::new(self.trims.rsa_n(), &[m]),
+            TensorF32::new(self.trims.vcal(), &[m]),
+            self.adc_consts(),
+            TensorF32::new(vec![vadc1.0 as f32, vadc1.1 as f32], &[2]),
+            TensorF32::new(vec![vadc2.0 as f32, vadc2.1 as f32], &[2]),
+            TensorF32::new(trim1.0.to_vec(), &[m]),
+            TensorF32::new(trim1.1.to_vec(), &[m]),
+            TensorF32::new(trim2.0.to_vec(), &[m]),
+            TensorF32::new(trim2.1.to_vec(), &[m]),
+        ];
+        self.exec.run(name, &inputs)
+    }
+}

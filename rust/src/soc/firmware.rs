@@ -1,0 +1,449 @@
+//! Firmware programs for the RV32IM core — most importantly the BISC
+//! routine of Algorithm 1, expressed as actual RISC-V instructions driving
+//! the CIM device over AXI4-Lite. This is the paper's headline property
+//! ("fully controlled by the RISC-V core") made literal.
+//!
+//! The firmware works in integer fixed point:
+//!   * ADC codes in Q4.4 ("q4" = code * 16) for the least-squares sums,
+//!   * gains in Q12 ("q12" = gain * 4096),
+//!   * voltages in microvolts.
+//! The host prepares a parameter block (test vectors, nominal outputs,
+//! ADC characterization, trim-DAC constants) at `map::PARAM_BLOCK`; the
+//! firmware writes its per-column fits to a results block for inspection.
+//! `coordinator::bisc::BiscEngine` is the f64 reference; the integration
+//! test in `rust/tests/soc_bisc.rs` asserts trim agreement within 1 LSB.
+
+use crate::analog::{consts as c, samp};
+use crate::config::SimConfig;
+use crate::coordinator::cim_core::regs;
+use crate::coordinator::bisc::{AdcCharacterization, BiscEngine};
+use crate::soc::memmap::map;
+use crate::soc::riscv::asm::Asm;
+
+/// Parameter-block layout (word offsets from map::PARAM_BLOCK).
+pub mod pblk {
+    /// number of test vectors Z (<= 16)
+    pub const Z: u32 = 0x00;
+    /// hardware averaging count per test point
+    pub const AVG: u32 = 0x04;
+    /// ADC gain alpha_D in Q12
+    pub const ALPHA_Q12: u32 = 0x08;
+    /// ADC offset beta_D in Q4.4 codes (signed)
+    pub const BETA_D_Q4: u32 = 0x0C;
+    /// microvolts per ADC code through the ADC gain, Q8.8:
+    /// round(1e6 / (alpha_D * C_ADC) * 256)
+    pub const UV_PER_CODE_Q8: u32 = 0x10;
+    /// digital-pot ratio constants in Q12 (R_SA_MIN/R_SA_NOM, span)
+    pub const POT_OFF_Q12: u32 = 0x14;
+    pub const POT_SPAN_Q12: u32 = 0x18;
+    /// widened ADC references for characterization [uV] (Alg. 1)
+    pub const VADC_L_W_UV: u32 = 0x1C;
+    pub const VADC_H_W_UV: u32 = 0x20;
+    /// default (inference) ADC references [uV], restored at the end
+    pub const VADC_L_UV: u32 = 0x24;
+    pub const VADC_H_UV: u32 = 0x28;
+    /// mid code at the widened references, Q4.4: C' * (V_CAL_NOM - V_L')
+    pub const QMID_Q4: u32 = 0x2C;
+    /// offset-correction base voltage [uV]:
+    /// V_L' + ((V_CAL_NOM - V_L') - beta_D/C') / alpha_D
+    pub const VCAL_BASE_UV: u32 = 0x30;
+    /// cal-DAC range constants [uV]
+    pub const VCAL_MIN_UV: u32 = 0x34;
+    pub const VCAL_SPAN_UV: u32 = 0x38;
+    /// test input codes, signed i32, X[0..16]
+    pub const X: u32 = 0x40;
+    /// nominal output codes for the positive line, Q4.4, QPOS[0..16]
+    pub const QPOS_Q4: u32 = 0x80;
+    /// nominal output codes for the negative line, Q4.4, QNEG[0..16]
+    pub const QNEG_Q4: u32 = 0xC0;
+    /// results block: per column {g_pos_q12, eps_pos_q4, g_neg_q12,
+    /// eps_neg_q4}, 4 words per column
+    pub const RESULTS: u32 = 0x1000;
+}
+
+/// Maximum Z the fixed-point sums support without overflow.
+pub const Z_MAX: usize = 16;
+
+/// Build the parameter block for the BISC firmware.
+pub fn bisc_param_block(cfg: &SimConfig, adc_char: AdcCharacterization) -> Vec<u32> {
+    let engine = BiscEngine::from_config(cfg, adc_char);
+    let z = engine.test_points.min(Z_MAX);
+    assert!(z >= 2, "need at least two test points");
+    let (vl_w, vh_w) = engine.widened_refs();
+    let c_adc_w = c::adc_conv_factor(vl_w, vh_w);
+    let mut words = vec![0u32; (pblk::QNEG_Q4 / 4) as usize + Z_MAX];
+    let set = |words: &mut Vec<u32>, off: u32, v: u32| words[(off / 4) as usize] = v;
+    set(&mut words, pblk::Z, z as u32);
+    set(&mut words, pblk::AVG, engine.averages as u32);
+    set(&mut words, pblk::ALPHA_Q12, (adc_char.alpha_d * 4096.0).round() as u32);
+    set(&mut words, pblk::BETA_D_Q4, (adc_char.beta_d * 16.0).round() as i32 as u32);
+    set(
+        &mut words,
+        pblk::UV_PER_CODE_Q8,
+        (1e6 / (adc_char.alpha_d * c_adc_w) * 256.0).round() as u32,
+    );
+    set(&mut words, pblk::VADC_L_W_UV, (vl_w * 1e6).round() as u32);
+    set(&mut words, pblk::VADC_H_W_UV, (vh_w * 1e6).round() as u32);
+    set(&mut words, pblk::VADC_L_UV, (c::V_ADC_L * 1e6).round() as u32);
+    set(&mut words, pblk::VADC_H_UV, (c::V_ADC_H * 1e6).round() as u32);
+    let q_mid_w = c_adc_w * (c::V_CAL_NOM - vl_w);
+    set(&mut words, pblk::QMID_Q4, (q_mid_w * 16.0).round() as u32);
+    let vcal_base =
+        vl_w + ((c::V_CAL_NOM - vl_w) - adc_char.beta_d / c_adc_w) / adc_char.alpha_d;
+    set(&mut words, pblk::VCAL_BASE_UV, (vcal_base * 1e6).round() as u32);
+    set(&mut words, pblk::VCAL_MIN_UV, (samp::V_CAL_MIN * 1e6).round() as u32);
+    set(
+        &mut words,
+        pblk::VCAL_SPAN_UV,
+        ((samp::V_CAL_MAX - samp::V_CAL_MIN) * 1e6).round() as u32,
+    );
+    set(
+        &mut words,
+        pblk::POT_OFF_Q12,
+        (samp::R_SA_MIN / c::R_SA_NOM * 4096.0).round() as u32,
+    );
+    set(
+        &mut words,
+        pblk::POT_SPAN_Q12,
+        ((samp::R_SA_MAX - samp::R_SA_MIN) / c::R_SA_NOM * 4096.0).round() as u32,
+    );
+    let codes = engine.test_codes();
+    let qpos = engine.nominal_codes(true);
+    let qneg = engine.nominal_codes(false);
+    for t in 0..z {
+        set(&mut words, pblk::X + 4 * t as u32, codes[t] as u32);
+        set(&mut words, pblk::QPOS_Q4 + 4 * t as u32, (qpos[t] * 16.0).round() as i32 as u32);
+        set(&mut words, pblk::QNEG_Q4 + 4 * t as u32, (qneg[t] * 16.0).round() as i32 as u32);
+    }
+    words
+}
+
+/// Assemble the BISC firmware (Algorithm 1).
+///
+/// Register allocation:
+///   x5  CIM base          x8  param base       x9  column index
+///   x18 weight code (+/-63)  x19..x22 LSQ sums Sx Sy Sxy Sxx
+///   x23 t loop            x24 Z                x25 addr scratch
+///   x26 g_q12             x27 eps_q4           x29 eps_pos_q4 save
+///   x30 line (0 pos / 1 neg)  x6, x7, x28, x31 scratch
+pub fn bisc_program() -> Vec<u8> {
+    let mut a = Asm::new(map::ENTRY);
+    let cim = map::CIM_BASE as i32;
+    let _ = cim;
+    a.li(5, map::CIM_BASE as i32);
+    a.li(8, map::PARAM_BLOCK as i32);
+    // AVG_CNT <- param
+    a.lw(6, 8, pblk::AVG as i32);
+    a.sw(5, 6, regs::AVG_CNT as i32);
+    // widen the ADC references for characterization (Alg. 1)
+    a.lw(6, 8, pblk::VADC_L_W_UV as i32);
+    a.sw(5, 6, regs::VADC_L_UV as i32);
+    a.lw(6, 8, pblk::VADC_H_W_UV as i32);
+    a.sw(5, 6, regs::VADC_H_UV as i32);
+    a.lw(24, 8, pblk::Z as i32); // x24 = Z
+    a.li(9, 0); // col = 0
+
+    a.label("col_loop");
+    a.li(30, 0); // line = 0 (positive)
+
+    a.label("line_loop");
+    // x18 = +63 or -63
+    a.li(18, 63);
+    a.beq(30, 0, "wsign_done");
+    a.li(18, -63);
+    a.label("wsign_done");
+
+    // ---- program column: cells at row*M + col, row = 0..N ----
+    a.li(7, 0); // row
+    a.label("prog_loop");
+    a.slli(6, 7, 5); // row * 32
+    a.add(6, 6, 9); // + col
+    a.sw(5, 6, regs::WADDR as i32);
+    a.sw(5, 18, regs::WDATA as i32);
+    a.addi(7, 7, 1);
+    a.li(6, c::N_ROWS as i32);
+    a.blt(7, 6, "prog_loop");
+
+    // ---- zero LSQ sums ----
+    a.li(19, 0); // Sx
+    a.li(20, 0); // Sy
+    a.li(21, 0); // Sxy
+    a.li(22, 0); // Sxx
+    a.li(23, 0); // t
+
+    a.label("t_loop");
+    // x6 = X[t]
+    a.slli(25, 23, 2);
+    a.add(25, 25, 8);
+    a.lw(6, 25, pblk::X as i32);
+    // write all N input registers
+    a.li(7, 0);
+    a.li(28, (map::CIM_BASE + regs::INPUT) as i32);
+    a.label("in_loop");
+    a.sw(28, 6, 0);
+    a.addi(28, 28, 4);
+    a.addi(7, 7, 1);
+    a.li(31, c::N_ROWS as i32);
+    a.blt(7, 31, "in_loop");
+    // CTRL = 2 (averaged MAC)
+    a.li(6, 2);
+    a.sw(5, 6, regs::CTRL as i32);
+    // y_q4 = OUT_AVG_Q8[col] >> 4
+    a.slli(6, 9, 2);
+    a.add(6, 6, 5);
+    a.lw(7, 6, regs::OUT_AVG_Q8 as i32);
+    a.srli(7, 7, 4); // Q8.8 -> Q4.4 (y >= 0)
+    // a_q4 = QPOS_Q4[t] or QNEG_Q4[t] (x30 selects)
+    a.slli(6, 23, 2);
+    a.add(6, 6, 8);
+    a.beq(30, 0, "use_pos_table");
+    a.lw(28, 6, pblk::QNEG_Q4 as i32);
+    a.j("table_done");
+    a.label("use_pos_table");
+    a.lw(28, 6, pblk::QPOS_Q4 as i32);
+    a.label("table_done");
+    // accumulate sums
+    a.add(19, 19, 28); // Sx += a
+    a.add(20, 20, 7); // Sy += y
+    a.mul(6, 28, 7);
+    a.add(21, 21, 6); // Sxy += a*y
+    a.mul(6, 28, 28);
+    a.add(22, 22, 6); // Sxx += a*a
+    a.addi(23, 23, 1);
+    a.blt(23, 24, "t_loop");
+
+    // ---- least-squares fit (Eq. 13-14) ----
+    // num = Z*Sxy - Sx*Sy ; den = Z*Sxx - Sx*Sx
+    a.mul(6, 24, 21);
+    a.mul(7, 19, 20);
+    a.sub(6, 6, 7); // num
+    a.mul(7, 24, 22);
+    a.mul(28, 19, 19);
+    a.sub(7, 7, 28); // den
+    // normalize so num << 12 cannot overflow: while |num| >= 2^17 shift both
+    a.label("norm_loop");
+    a.bge(6, 0, "norm_abs_done");
+    a.sub(31, 0, 6);
+    a.j("norm_cmp");
+    a.label("norm_abs_done");
+    a.mv(31, 6);
+    a.label("norm_cmp");
+    a.li(28, 1 << 17);
+    a.blt(31, 28, "norm_done");
+    a.srai(6, 6, 1);
+    a.srai(7, 7, 1);
+    a.j("norm_loop");
+    a.label("norm_done");
+    // g_q12 = (num << 12) / den
+    a.slli(6, 6, 12);
+    a.div(26, 6, 7); // x26 = g_q12
+    // eps_q4 = (Sy - (g_q12 * Sx >> 12)) / Z
+    a.mul(6, 26, 19);
+    a.srai(6, 6, 12);
+    a.sub(6, 20, 6);
+    a.div(27, 6, 24); // x27 = eps_q4
+
+    // store results: RESULTS + col*16 + line*8 -> {g_q12, eps_q4}
+    a.slli(6, 9, 4);
+    a.slli(7, 30, 3);
+    a.add(6, 6, 7);
+    a.add(6, 6, 8);
+    a.li(31, pblk::RESULTS as i32); // offset exceeds the 12-bit S-imm
+    a.add(6, 6, 31);
+    a.sw(6, 26, 0);
+    a.sw(6, 27, 4);
+
+    // ---- gain correction (Eq. 12): pot = ((alpha<<12)/g - off)*255/span
+    a.lw(6, 8, pblk::ALPHA_Q12 as i32);
+    a.slli(6, 6, 12);
+    a.div(6, 6, 26); // ratio_q12
+    a.lw(7, 8, pblk::POT_OFF_Q12 as i32);
+    a.sub(6, 6, 7);
+    a.li(7, 255);
+    a.mul(6, 6, 7);
+    a.lw(7, 8, pblk::POT_SPAN_Q12 as i32);
+    a.div(6, 6, 7); // pot code
+    // clamp 0..255
+    a.bge(6, 0, "pot_not_neg");
+    a.li(6, 0);
+    a.label("pot_not_neg");
+    a.li(7, 255);
+    a.bge(7, 6, "pot_not_big");
+    a.mv(6, 7);
+    a.label("pot_not_big");
+    // write POT_P[col] or POT_N[col]
+    a.slli(7, 9, 2);
+    a.add(7, 7, 5);
+    a.beq(30, 0, "write_pot_p");
+    a.sw(7, 6, regs::POT_N as i32);
+    a.j("pot_written");
+    a.label("write_pot_p");
+    a.sw(7, 6, regs::POT_P as i32);
+    a.label("pot_written");
+
+    // line bookkeeping: save eps_pos + g_pos, loop to negative line
+    a.beq(30, 0, "save_pos_fit");
+    a.j("lines_done");
+    a.label("save_pos_fit");
+    a.mv(29, 27); // x29 = eps_pos_q4
+    a.mv(15, 26); // x15 = g_pos_q12
+    a.li(30, 1);
+    a.j("line_loop");
+    a.label("lines_done");
+
+    // ---- offset correction: pivot-corrected (see bisc.rs::calibrate) ----
+    // eps_avg_q4 = (eps_pos + eps_neg) >> 1  (arithmetic)
+    a.add(6, 29, 27);
+    a.srai(6, 6, 1);
+    // g_avg_q12 = (g_pos + g_neg) >> 1
+    a.add(7, 15, 26);
+    a.srai(7, 7, 1);
+    // pivot_q4 = (qmid_q4 * (alpha_q12 - g_avg_q12)) >> 12
+    a.lw(28, 8, pblk::ALPHA_Q12 as i32);
+    a.sub(7, 28, 7);
+    a.lw(28, 8, pblk::QMID_Q4 as i32);
+    a.mul(7, 7, 28);
+    a.srai(7, 7, 12);
+    a.sub(6, 6, 7); // eps - pivot
+    // beta_num_q4 = eps - pivot - beta_d_q4
+    a.lw(7, 8, pblk::BETA_D_Q4 as i32);
+    a.sub(6, 6, 7);
+    // beta_a_uv = (beta_num_q4 * uv_per_code_q8) >> 12
+    a.lw(7, 8, pblk::UV_PER_CODE_Q8 as i32);
+    a.mul(6, 6, 7);
+    a.srai(6, 6, 12);
+    // vtarget_uv = VCAL_BASE_UV - beta_a_uv
+    a.lw(7, 8, pblk::VCAL_BASE_UV as i32);
+    a.sub(6, 7, 6);
+    // cal = (vtarget_uv - VCAL_MIN_UV) * 63 / VCAL_SPAN_UV
+    a.lw(7, 8, pblk::VCAL_MIN_UV as i32);
+    a.sub(6, 6, 7);
+    a.li(7, 63);
+    a.mul(6, 6, 7);
+    a.lw(7, 8, pblk::VCAL_SPAN_UV as i32);
+    a.div(6, 6, 7);
+    // clamp 0..63
+    a.bge(6, 0, "cal_not_neg");
+    a.li(6, 0);
+    a.label("cal_not_neg");
+    a.li(7, 63);
+    a.bge(7, 6, "cal_not_big");
+    a.mv(6, 7);
+    a.label("cal_not_big");
+    a.slli(7, 9, 2);
+    a.add(7, 7, 5);
+    a.sw(7, 6, regs::CAL as i32);
+
+    // next column
+    a.addi(9, 9, 1);
+    a.li(6, c::M_COLS as i32);
+    a.blt(9, 6, "col_loop");
+
+    // restore the inference ADC references (Alg. 1 epilogue)
+    a.lw(6, 8, pblk::VADC_L_UV as i32);
+    a.sw(5, 6, regs::VADC_L_UV as i32);
+    a.lw(6, 8, pblk::VADC_H_UV as i32);
+    a.sw(5, 6, regs::VADC_H_UV as i32);
+
+    a.li(10, 0);
+    a.exit();
+    a.assemble()
+}
+
+/// A small self-test firmware: runs one MAC with the given input code on
+/// all rows and returns OUT[0] (used by examples and SoC smoke tests).
+pub fn mac_probe_program(input_code: i32) -> Vec<u8> {
+    let mut a = Asm::new(map::ENTRY);
+    a.li(5, map::CIM_BASE as i32);
+    a.li(6, input_code);
+    a.li(7, 0);
+    a.li(28, (map::CIM_BASE + regs::INPUT) as i32);
+    a.label("in_loop");
+    a.sw(28, 6, 0);
+    a.addi(28, 28, 4);
+    a.addi(7, 7, 1);
+    a.li(31, c::N_ROWS as i32);
+    a.blt(7, 31, "in_loop");
+    a.li(6, 1);
+    a.sw(5, 6, regs::CTRL as i32);
+    a.lw(10, 5, regs::OUT as i32);
+    a.exit();
+    a.assemble()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analog::variation::VariationSample;
+    use crate::analog::CimAnalogModel;
+    use crate::soc::memmap::Soc;
+    use crate::soc::riscv::cpu::Halt;
+
+    #[test]
+    fn param_block_layout_sane() {
+        let cfg = SimConfig::default();
+        let blk = bisc_param_block(&cfg, AdcCharacterization::ideal());
+        assert_eq!(blk[(pblk::Z / 4) as usize], cfg.bisc_test_points as u32);
+        assert_eq!(blk[(pblk::ALPHA_Q12 / 4) as usize], 4096);
+        // uv per code at alpha=1 and widened refs:
+        // C' = 63/(0.6*1.08 - 0.2*0.92), uv = 1e6/C' * 256
+        let engine = BiscEngine::from_config(&cfg, AdcCharacterization::ideal());
+        let (vl_w, vh_w) = engine.widened_refs();
+        let c_adc_w = crate::analog::consts::adc_conv_factor(vl_w, vh_w);
+        let uv = blk[(pblk::UV_PER_CODE_Q8 / 4) as usize];
+        assert!((uv as f64 - 1e6 / c_adc_w * 256.0).abs() < 2.0, "uv={uv}");
+    }
+
+    #[test]
+    fn firmware_assembles() {
+        let img = bisc_program();
+        assert!(img.len() > 400, "suspiciously small: {}", img.len());
+        assert_eq!(img.len() % 4, 0);
+    }
+
+    #[test]
+    fn bisc_firmware_calibrates_a_noisy_die() {
+        let mut cfg = SimConfig::default();
+        cfg.seed = 0xF1A5;
+        cfg.sigma_noise = 0.0; // determinism for the comparison below
+        let sample = VariationSample::draw(&cfg);
+        let model = CimAnalogModel::from_sample(&cfg, &sample);
+        let mut soc = Soc::new(model);
+        soc.load_program(&bisc_program());
+        soc.write_words(
+            map::PARAM_BLOCK,
+            &bisc_param_block(&cfg, AdcCharacterization::ideal()),
+        );
+        let halt = soc.run(500_000_000);
+        assert_eq!(halt, Halt::Exit(0), "firmware crashed: {halt:?}");
+
+        // compare firmware trims against the host BISC engine on an
+        // identical die
+        let mut host_model = CimAnalogModel::from_sample(&cfg, &sample);
+        let engine = BiscEngine::from_config(&cfg, AdcCharacterization::ideal());
+        let report = engine.calibrate(&mut host_model);
+        let dev = soc.cim_mut();
+        let mut pot_diffs = Vec::new();
+        let mut cal_diffs = Vec::new();
+        for cc in &report.columns {
+            let fw_pot_p = dev.model.amps[cc.col].pot_p as i64;
+            let fw_pot_n = dev.model.amps[cc.col].pot_n as i64;
+            let fw_cal = dev.model.amps[cc.col].cal as i64;
+            pot_diffs.push((fw_pot_p - cc.pot_p as i64).abs());
+            pot_diffs.push((fw_pot_n - cc.pot_n as i64).abs());
+            cal_diffs.push((fw_cal - cc.cal as i64).abs());
+        }
+        let max_pot = *pot_diffs.iter().max().unwrap();
+        let max_cal = *cal_diffs.iter().max().unwrap();
+        assert!(max_pot <= 2, "pot code mismatch up to {max_pot}");
+        assert!(max_cal <= 1, "cal code mismatch up to {max_cal}");
+    }
+
+    #[test]
+    fn mac_probe_runs() {
+        let mut soc = Soc::new(CimAnalogModel::ideal());
+        soc.cim_mut().program_weights(&vec![63; c::N_ROWS * c::M_COLS]);
+        soc.load_program(&mac_probe_program(63));
+        assert_eq!(soc.run(100_000), Halt::Exit(62));
+    }
+}

@@ -1,0 +1,180 @@
+//! SoC memory map and top-level assembly (paper Fig. 2(a)): RISC-V core +
+//! AXI4-Lite interconnect + RAM + CIM core + UART + GPIO.
+
+use crate::analog::CimAnalogModel;
+use crate::coordinator::cim_core::CimDevice;
+use crate::soc::bus::{Axi4LiteBus, BusDevice, Ram};
+use crate::soc::periph::{Gpio, Uart};
+use crate::soc::riscv::cpu::{Cpu, Halt};
+
+/// Address map of the prototype SoC.
+pub mod map {
+    pub const RAM_BASE: u32 = 0x0000_0000;
+    pub const RAM_SIZE: u32 = 0x0010_0000; // 1 MiB
+    pub const CIM_BASE: u32 = 0x4000_0000;
+    pub const UART_BASE: u32 = 0x5000_0000;
+    pub const GPIO_BASE: u32 = 0x6000_0000;
+    /// firmware entry point
+    pub const ENTRY: u32 = RAM_BASE;
+    /// initial stack pointer (top of RAM, 16-byte aligned)
+    pub const STACK_TOP: u32 = RAM_BASE + RAM_SIZE - 16;
+    /// conventional parameter-block location for firmware inputs
+    pub const PARAM_BLOCK: u32 = 0x0008_0000;
+}
+
+/// The assembled SoC: CPU + interconnect with all devices mapped.
+pub struct Soc {
+    pub cpu: Cpu,
+    pub bus: Axi4LiteBus,
+}
+
+impl Soc {
+    /// Build the SoC around a CIM analog model (one die).
+    pub fn new(model: CimAnalogModel) -> Self {
+        let mut bus = Axi4LiteBus::new();
+        bus.map(map::RAM_BASE, Box::new(Ram::new(map::RAM_SIZE, "ram")));
+        bus.map(map::CIM_BASE, Box::new(CimDevice::new(model)));
+        bus.map(map::UART_BASE, Box::new(Uart::new()));
+        bus.map(map::GPIO_BASE, Box::new(Gpio::new()));
+        let mut cpu = Cpu::new(map::ENTRY);
+        cpu.regs[2] = map::STACK_TOP; // sp
+        Self { cpu, bus }
+    }
+
+    /// Load a program image at the entry point.
+    pub fn load_program(&mut self, image: &[u8]) {
+        let ram = self.ram_mut();
+        ram.load(map::ENTRY - map::RAM_BASE, image);
+    }
+
+    /// Write a little-endian word array into RAM (parameter blocks).
+    pub fn write_words(&mut self, addr: u32, words: &[u32]) {
+        let ram = self.ram_mut();
+        for (i, &w) in words.iter().enumerate() {
+            ram.write32(addr - map::RAM_BASE + 4 * i as u32, w)
+                .expect("param block within RAM");
+        }
+    }
+
+    pub fn read_word(&mut self, addr: u32) -> u32 {
+        self.ram_mut()
+            .read32(addr - map::RAM_BASE)
+            .expect("address within RAM")
+    }
+
+    pub fn ram_mut(&mut self) -> &mut Ram {
+        self.bus
+            .device_mut("ram")
+            .expect("ram mapped")
+            .as_any()
+            .downcast_mut::<Ram>()
+            .expect("ram type")
+    }
+
+    pub fn cim_mut(&mut self) -> &mut CimDevice {
+        self.bus
+            .device_mut("cim")
+            .expect("cim mapped")
+            .as_any()
+            .downcast_mut::<CimDevice>()
+            .expect("cim type")
+    }
+
+    pub fn uart_mut(&mut self) -> &mut Uart {
+        self.bus
+            .device_mut("uart")
+            .expect("uart mapped")
+            .as_any()
+            .downcast_mut::<Uart>()
+            .expect("uart type")
+    }
+
+    /// Run to halt; returns the halt reason.
+    pub fn run(&mut self, max_steps: u64) -> Halt {
+        self.cpu.run(&mut self.bus, max_steps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::riscv::asm::Asm;
+
+    #[test]
+    fn soc_boots_and_exits() {
+        let mut soc = Soc::new(CimAnalogModel::ideal());
+        let mut a = Asm::new(map::ENTRY);
+        a.li(10, 7);
+        a.exit();
+        soc.load_program(&a.assemble());
+        assert_eq!(soc.run(1000), Halt::Exit(7));
+    }
+
+    #[test]
+    fn firmware_reaches_cim_registers() {
+        use crate::coordinator::cim_core::regs;
+        let mut soc = Soc::new(CimAnalogModel::ideal());
+        // program all weights to +63 through the write port, set all
+        // inputs to +63, fire a MAC, return OUT[0]
+        let mut a = Asm::new(map::ENTRY);
+        a.li(5, map::CIM_BASE as i32);
+        // WADDR = 0
+        a.sw(5, 0, regs::WADDR as i32);
+        // loop 1152 cells: WDATA = 63
+        a.li(6, 63);
+        a.li(7, (crate::analog::consts::N_ROWS * crate::analog::consts::M_COLS) as i32);
+        a.label("wloop");
+        a.sw(5, 6, regs::WDATA as i32);
+        a.addi(7, 7, -1);
+        a.bne(7, 0, "wloop");
+        // inputs: 36 regs = 63
+        a.li(7, crate::analog::consts::N_ROWS as i32);
+        a.li(28, (map::CIM_BASE + regs::INPUT) as i32);
+        a.label("iloop");
+        a.sw(28, 6, 0);
+        a.addi(28, 28, 4);
+        a.addi(7, 7, -1);
+        a.bne(7, 0, "iloop");
+        // CTRL = 1 (single MAC)
+        a.li(6, 1);
+        a.sw(5, 6, regs::CTRL as i32);
+        // a0 = OUT[0]
+        a.lw(10, 5, regs::OUT as i32);
+        a.exit();
+        soc.load_program(&a.assemble());
+        let halt = soc.run(100_000);
+        // full-scale MAC on ideal die = code 62 (see analog::consts tests)
+        assert_eq!(halt, Halt::Exit(62));
+        assert_eq!(soc.cim_mut().mac_count(), 1);
+    }
+
+    #[test]
+    fn uart_output_from_firmware() {
+        let mut soc = Soc::new(CimAnalogModel::ideal());
+        let mut a = Asm::new(map::ENTRY);
+        a.li(5, map::UART_BASE as i32);
+        for ch in b"ok" {
+            a.li(6, *ch as i32);
+            a.sw(5, 6, 0);
+        }
+        a.li(10, 0);
+        a.exit();
+        soc.load_program(&a.assemble());
+        soc.run(1000);
+        assert_eq!(soc.uart_mut().tx_string(), "ok");
+    }
+
+    #[test]
+    fn param_block_roundtrip() {
+        let mut soc = Soc::new(CimAnalogModel::ideal());
+        soc.write_words(map::PARAM_BLOCK, &[1, 2, 0xFFFF_FFFF]);
+        assert_eq!(soc.read_word(map::PARAM_BLOCK + 8), 0xFFFF_FFFF);
+        // firmware reads it back
+        let mut a = Asm::new(map::ENTRY);
+        a.li(5, map::PARAM_BLOCK as i32);
+        a.lw(10, 5, 4);
+        a.exit();
+        soc.load_program(&a.assemble());
+        assert_eq!(soc.run(1000), Halt::Exit(2));
+    }
+}

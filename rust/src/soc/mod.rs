@@ -1,0 +1,8 @@
+//! SoC integration layer: the AXI4-Lite interconnect, the RISC-V core, the
+//! memory map, peripherals, and the firmware builders (paper Section III).
+
+pub mod bus;
+pub mod firmware;
+pub mod memmap;
+pub mod periph;
+pub mod riscv;

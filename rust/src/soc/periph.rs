@@ -1,0 +1,148 @@
+//! Peripherals on the interconnect (paper Fig. 2(a)): UART and GPIO.
+//! Behavioural endpoints — the UART captures bytes written to TX so
+//! firmware can report results; GPIO latches a 32-bit output word and
+//! exposes a host-settable input word.
+
+use crate::soc::bus::{BusDevice, BusResp};
+
+/// UART register map (word offsets): 0x0 TX (write), 0x4 STATUS (read:
+/// bit0 tx-ready, always 1 in the model), 0x8 RX (read, 0 if empty).
+pub struct Uart {
+    pub tx_log: Vec<u8>,
+    pub rx_fifo: Vec<u8>,
+}
+
+impl Uart {
+    pub fn new() -> Self {
+        Self { tx_log: Vec::new(), rx_fifo: Vec::new() }
+    }
+
+    pub fn tx_string(&self) -> String {
+        String::from_utf8_lossy(&self.tx_log).to_string()
+    }
+}
+
+impl Default for Uart {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BusDevice for Uart {
+    fn read32(&mut self, offset: u32) -> Result<u32, BusResp> {
+        match offset {
+            0x4 => Ok(1), // tx always ready
+            0x8 => Ok(if self.rx_fifo.is_empty() {
+                0
+            } else {
+                self.rx_fifo.remove(0) as u32 | 0x100 // bit8 = valid
+            }),
+            _ => Err(BusResp::SlvErr),
+        }
+    }
+
+    fn write32(&mut self, offset: u32, value: u32) -> Result<(), BusResp> {
+        match offset {
+            0x0 => {
+                self.tx_log.push(value as u8);
+                Ok(())
+            }
+            _ => Err(BusResp::SlvErr),
+        }
+    }
+
+    fn size(&self) -> u32 {
+        0x10
+    }
+
+    fn name(&self) -> &str {
+        "uart"
+    }
+
+    fn as_any(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+/// GPIO: 0x0 OUT (r/w latch), 0x4 IN (read; host sets via `input`).
+pub struct Gpio {
+    pub out: u32,
+    pub input: u32,
+}
+
+impl Gpio {
+    pub fn new() -> Self {
+        Self { out: 0, input: 0 }
+    }
+}
+
+impl Default for Gpio {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BusDevice for Gpio {
+    fn read32(&mut self, offset: u32) -> Result<u32, BusResp> {
+        match offset {
+            0x0 => Ok(self.out),
+            0x4 => Ok(self.input),
+            _ => Err(BusResp::SlvErr),
+        }
+    }
+
+    fn write32(&mut self, offset: u32, value: u32) -> Result<(), BusResp> {
+        match offset {
+            0x0 => {
+                self.out = value;
+                Ok(())
+            }
+            _ => Err(BusResp::SlvErr),
+        }
+    }
+
+    fn size(&self) -> u32 {
+        0x8
+    }
+
+    fn name(&self) -> &str {
+        "gpio"
+    }
+
+    fn as_any(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uart_captures_tx() {
+        let mut u = Uart::new();
+        for b in b"hi" {
+            u.write32(0, *b as u32).unwrap();
+        }
+        assert_eq!(u.tx_string(), "hi");
+        assert_eq!(u.read32(4).unwrap(), 1);
+    }
+
+    #[test]
+    fn uart_rx_fifo_drains() {
+        let mut u = Uart::new();
+        u.rx_fifo.extend_from_slice(b"A");
+        assert_eq!(u.read32(8).unwrap(), 'A' as u32 | 0x100);
+        assert_eq!(u.read32(8).unwrap(), 0);
+    }
+
+    #[test]
+    fn gpio_out_latch_and_input() {
+        let mut g = Gpio::new();
+        g.write32(0, 0xFACE).unwrap();
+        assert_eq!(g.read32(0).unwrap(), 0xFACE);
+        g.input = 0x55;
+        assert_eq!(g.read32(4).unwrap(), 0x55);
+        assert!(g.write32(4, 1).is_err());
+    }
+}

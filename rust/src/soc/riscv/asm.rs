@@ -1,0 +1,492 @@
+//! Programmatic RV32IM macro-assembler.
+//!
+//! Firmware in this repository (the BISC routine, SoC self-tests, the DNN
+//! driver) is written against this builder: each method emits one
+//! instruction (or a short canonical sequence for pseudo-ops like `li` and
+//! `call`), labels are resolved in a second pass. The encoder is the exact
+//! inverse of `decode.rs`, and a round-trip property test keeps them honest.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+enum Emit {
+    Word(u32),
+    /// branch to label: (opcode template without imm, label)
+    Branch(u32, String),
+    /// jal rd, label
+    Jal(u8, String),
+    /// auipc+addi pair target (la rd, label) — resolved as pc-relative
+    La(u8, String),
+}
+
+pub struct Asm {
+    base: u32,
+    items: Vec<Emit>,
+    labels: HashMap<String, u32>,
+}
+
+fn enc_r(opcode: u32, f3: u32, f7: u32, rd: u8, rs1: u8, rs2: u8) -> u32 {
+    (f7 << 25)
+        | ((rs2 as u32) << 20)
+        | ((rs1 as u32) << 15)
+        | (f3 << 12)
+        | ((rd as u32) << 7)
+        | opcode
+}
+
+fn enc_i(opcode: u32, f3: u32, rd: u8, rs1: u8, imm: i32) -> u32 {
+    assert!((-2048..=2047).contains(&imm), "I-imm out of range: {imm}");
+    ((imm as u32 & 0xfff) << 20) | ((rs1 as u32) << 15) | (f3 << 12) | ((rd as u32) << 7) | opcode
+}
+
+fn enc_s(opcode: u32, f3: u32, rs1: u8, rs2: u8, imm: i32) -> u32 {
+    assert!((-2048..=2047).contains(&imm), "S-imm out of range: {imm}");
+    let ui = imm as u32 & 0xfff;
+    ((ui >> 5) << 25)
+        | ((rs2 as u32) << 20)
+        | ((rs1 as u32) << 15)
+        | (f3 << 12)
+        | ((ui & 0x1f) << 7)
+        | opcode
+}
+
+fn enc_b(opcode: u32, f3: u32, rs1: u8, rs2: u8, imm: i32) -> u32 {
+    assert!(imm % 2 == 0 && (-4096..=4094).contains(&imm), "B-imm out of range: {imm}");
+    let ui = imm as u32;
+    (((ui >> 12) & 1) << 31)
+        | (((ui >> 5) & 0x3f) << 25)
+        | ((rs2 as u32) << 20)
+        | ((rs1 as u32) << 15)
+        | (f3 << 12)
+        | (((ui >> 1) & 0xf) << 8)
+        | (((ui >> 11) & 1) << 7)
+        | opcode
+}
+
+fn enc_u(opcode: u32, rd: u8, imm: i32) -> u32 {
+    (imm as u32 & 0xFFFF_F000) | ((rd as u32) << 7) | opcode
+}
+
+fn enc_j(opcode: u32, rd: u8, imm: i32) -> u32 {
+    assert!(imm % 2 == 0 && (-(1 << 20)..(1 << 20)).contains(&imm), "J-imm out of range: {imm}");
+    let ui = imm as u32;
+    (((ui >> 20) & 1) << 31)
+        | (((ui >> 1) & 0x3ff) << 21)
+        | (((ui >> 11) & 1) << 20)
+        | (((ui >> 12) & 0xff) << 12)
+        | ((rd as u32) << 7)
+        | opcode
+}
+
+impl Asm {
+    pub fn new(base: u32) -> Self {
+        Self { base, items: Vec::new(), labels: HashMap::new() }
+    }
+
+    fn pc(&self) -> u32 {
+        // each Emit except La is one word; La is two
+        let mut pc = self.base;
+        for it in &self.items {
+            pc += match it {
+                Emit::La(..) => 8,
+                _ => 4,
+            };
+        }
+        pc
+    }
+
+    pub fn label(&mut self, name: &str) {
+        let pc = self.pc();
+        assert!(
+            self.labels.insert(name.to_string(), pc).is_none(),
+            "duplicate label {name}"
+        );
+    }
+
+    fn word(&mut self, w: u32) {
+        self.items.push(Emit::Word(w));
+    }
+
+    // ---- RV32I register/imm ops ----------------------------------------
+    pub fn addi(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.word(enc_i(0b0010011, 0b000, rd, rs1, imm));
+    }
+    pub fn slti(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.word(enc_i(0b0010011, 0b010, rd, rs1, imm));
+    }
+    pub fn sltiu(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.word(enc_i(0b0010011, 0b011, rd, rs1, imm));
+    }
+    pub fn xori(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.word(enc_i(0b0010011, 0b100, rd, rs1, imm));
+    }
+    pub fn ori(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.word(enc_i(0b0010011, 0b110, rd, rs1, imm));
+    }
+    pub fn andi(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.word(enc_i(0b0010011, 0b111, rd, rs1, imm));
+    }
+    pub fn slli(&mut self, rd: u8, rs1: u8, shamt: u32) {
+        self.word(enc_i(0b0010011, 0b001, rd, rs1, shamt as i32));
+    }
+    pub fn srli(&mut self, rd: u8, rs1: u8, shamt: u32) {
+        self.word(enc_i(0b0010011, 0b101, rd, rs1, shamt as i32));
+    }
+    pub fn srai(&mut self, rd: u8, rs1: u8, shamt: u32) {
+        self.word(enc_i(0b0010011, 0b101, rd, rs1, (shamt | 0x400) as i32));
+    }
+
+    pub fn add(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.word(enc_r(0b0110011, 0b000, 0, rd, rs1, rs2));
+    }
+    pub fn sub(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.word(enc_r(0b0110011, 0b000, 0b0100000, rd, rs1, rs2));
+    }
+    pub fn sll(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.word(enc_r(0b0110011, 0b001, 0, rd, rs1, rs2));
+    }
+    pub fn slt(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.word(enc_r(0b0110011, 0b010, 0, rd, rs1, rs2));
+    }
+    pub fn sltu(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.word(enc_r(0b0110011, 0b011, 0, rd, rs1, rs2));
+    }
+    pub fn xor(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.word(enc_r(0b0110011, 0b100, 0, rd, rs1, rs2));
+    }
+    pub fn srl(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.word(enc_r(0b0110011, 0b101, 0, rd, rs1, rs2));
+    }
+    pub fn sra(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.word(enc_r(0b0110011, 0b101, 0b0100000, rd, rs1, rs2));
+    }
+    pub fn or(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.word(enc_r(0b0110011, 0b110, 0, rd, rs1, rs2));
+    }
+    pub fn and(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.word(enc_r(0b0110011, 0b111, 0, rd, rs1, rs2));
+    }
+
+    // ---- M extension ----------------------------------------------------
+    pub fn mul(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.word(enc_r(0b0110011, 0b000, 1, rd, rs1, rs2));
+    }
+    pub fn mulh(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.word(enc_r(0b0110011, 0b001, 1, rd, rs1, rs2));
+    }
+    pub fn mulhu(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.word(enc_r(0b0110011, 0b011, 1, rd, rs1, rs2));
+    }
+    pub fn div(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.word(enc_r(0b0110011, 0b100, 1, rd, rs1, rs2));
+    }
+    pub fn divu(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.word(enc_r(0b0110011, 0b101, 1, rd, rs1, rs2));
+    }
+    pub fn rem(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.word(enc_r(0b0110011, 0b110, 1, rd, rs1, rs2));
+    }
+    pub fn remu(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.word(enc_r(0b0110011, 0b111, 1, rd, rs1, rs2));
+    }
+
+    // ---- memory ----------------------------------------------------------
+    pub fn lw(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.word(enc_i(0b0000011, 0b010, rd, rs1, imm));
+    }
+    pub fn lh(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.word(enc_i(0b0000011, 0b001, rd, rs1, imm));
+    }
+    pub fn lhu(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.word(enc_i(0b0000011, 0b101, rd, rs1, imm));
+    }
+    pub fn lb(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.word(enc_i(0b0000011, 0b000, rd, rs1, imm));
+    }
+    pub fn lbu(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.word(enc_i(0b0000011, 0b100, rd, rs1, imm));
+    }
+    pub fn sw(&mut self, rs1: u8, rs2: u8, imm: i32) {
+        self.word(enc_s(0b0100011, 0b010, rs1, rs2, imm));
+    }
+    pub fn sh(&mut self, rs1: u8, rs2: u8, imm: i32) {
+        self.word(enc_s(0b0100011, 0b001, rs1, rs2, imm));
+    }
+    pub fn sb(&mut self, rs1: u8, rs2: u8, imm: i32) {
+        self.word(enc_s(0b0100011, 0b000, rs1, rs2, imm));
+    }
+
+    // ---- control flow -----------------------------------------------------
+    pub fn lui(&mut self, rd: u8, imm: i32) {
+        self.word(enc_u(0b0110111, rd, imm));
+    }
+    pub fn auipc(&mut self, rd: u8, imm: i32) {
+        self.word(enc_u(0b0010111, rd, imm));
+    }
+    pub fn jalr(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.word(enc_i(0b1100111, 0b000, rd, rs1, imm));
+    }
+    pub fn jal_label(&mut self, rd: u8, label: &str) {
+        self.items.push(Emit::Jal(rd, label.to_string()));
+    }
+
+    fn branch(&mut self, f3: u32, rs1: u8, rs2: u8, label: &str) {
+        let template = enc_b(0b1100011, f3, rs1, rs2, 0);
+        self.items.push(Emit::Branch(template, label.to_string()));
+    }
+    pub fn beq(&mut self, rs1: u8, rs2: u8, label: &str) {
+        self.branch(0b000, rs1, rs2, label);
+    }
+    pub fn bne(&mut self, rs1: u8, rs2: u8, label: &str) {
+        self.branch(0b001, rs1, rs2, label);
+    }
+    pub fn blt(&mut self, rs1: u8, rs2: u8, label: &str) {
+        self.branch(0b100, rs1, rs2, label);
+    }
+    pub fn bge(&mut self, rs1: u8, rs2: u8, label: &str) {
+        self.branch(0b101, rs1, rs2, label);
+    }
+    pub fn bltu(&mut self, rs1: u8, rs2: u8, label: &str) {
+        self.branch(0b110, rs1, rs2, label);
+    }
+    pub fn bgeu(&mut self, rs1: u8, rs2: u8, label: &str) {
+        self.branch(0b111, rs1, rs2, label);
+    }
+
+    pub fn ecall(&mut self) {
+        self.word(0x0000_0073);
+    }
+    pub fn ebreak(&mut self) {
+        self.word(0x0010_0073);
+    }
+    pub fn nop(&mut self) {
+        self.addi(0, 0, 0);
+    }
+
+    // ---- pseudo-instructions ----------------------------------------------
+    /// Load 32-bit immediate (lui+addi, or single addi when it fits).
+    pub fn li(&mut self, rd: u8, value: i32) {
+        if (-2048..=2047).contains(&value) {
+            self.addi(rd, 0, value);
+            // keep a fixed 2-word footprint so pc() stays simple? No —
+            // pc() recomputes per item, single word is fine.
+        } else {
+            let lo = (value << 20) >> 20; // low 12, sign-extended
+            let hi = value.wrapping_sub(lo);
+            self.lui(rd, hi);
+            if lo != 0 {
+                self.addi(rd, rd, lo);
+            }
+        }
+    }
+
+    /// mv rd, rs
+    pub fn mv(&mut self, rd: u8, rs: u8) {
+        self.addi(rd, rs, 0);
+    }
+
+    /// j label
+    pub fn j(&mut self, label: &str) {
+        self.jal_label(0, label);
+    }
+
+    /// call label (ra = x1)
+    pub fn call(&mut self, label: &str) {
+        self.jal_label(1, label);
+    }
+
+    /// ret
+    pub fn ret(&mut self) {
+        self.jalr(0, 1, 0);
+    }
+
+    /// la rd, label (auipc + addi, pc-relative)
+    pub fn la(&mut self, rd: u8, label: &str) {
+        self.items.push(Emit::La(rd, label.to_string()));
+    }
+
+    /// exit with code already in a0 (x10): a7 = 93; ecall
+    pub fn exit(&mut self) {
+        self.li(17, 93);
+        self.ecall();
+    }
+
+    /// Resolve labels and produce the little-endian byte image.
+    pub fn assemble(&self) -> Vec<u8> {
+        // first pass: compute pc of every item
+        let mut pcs = Vec::with_capacity(self.items.len());
+        let mut pc = self.base;
+        for it in &self.items {
+            pcs.push(pc);
+            pc += match it {
+                Emit::La(..) => 8,
+                _ => 4,
+            };
+        }
+        let resolve = |label: &str| -> u32 {
+            *self
+                .labels
+                .get(label)
+                .unwrap_or_else(|| panic!("undefined label `{label}`"))
+        };
+        let mut out: Vec<u8> = Vec::with_capacity(pc as usize - self.base as usize);
+        for (it, &at) in self.items.iter().zip(&pcs) {
+            match it {
+                Emit::Word(w) => out.extend_from_slice(&w.to_le_bytes()),
+                Emit::Branch(template, label) => {
+                    let off = resolve(label) as i64 - at as i64;
+                    let f3 = (template >> 12) & 7;
+                    let rs1 = ((template >> 15) & 0x1f) as u8;
+                    let rs2 = ((template >> 20) & 0x1f) as u8;
+                    let w = enc_b(0b1100011, f3, rs1, rs2, off as i32);
+                    out.extend_from_slice(&w.to_le_bytes());
+                }
+                Emit::Jal(rd, label) => {
+                    let off = resolve(label) as i64 - at as i64;
+                    let w = enc_j(0b1101111, *rd, off as i32);
+                    out.extend_from_slice(&w.to_le_bytes());
+                }
+                Emit::La(rd, label) => {
+                    let target = resolve(label) as i64;
+                    let off = target - at as i64;
+                    let lo = ((off << 52) >> 52) as i32; // low 12 sign-extended
+                    let hi = (off as i32).wrapping_sub(lo);
+                    out.extend_from_slice(&enc_u(0b0010111, *rd, hi).to_le_bytes());
+                    out.extend_from_slice(
+                        &enc_i(0b0010011, 0b000, *rd, *rd, lo).to_le_bytes(),
+                    );
+                }
+            }
+        }
+        out
+    }
+
+    /// Number of bytes the program will occupy.
+    pub fn len_bytes(&self) -> u32 {
+        self.pc() - self.base
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::riscv::decode::{decode, Instr};
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn encode_decode_roundtrip_alu() {
+        let mut a = Asm::new(0);
+        a.add(1, 2, 3);
+        a.sub(4, 5, 6);
+        a.xori(7, 8, -100);
+        a.srai(9, 10, 7);
+        let img = a.assemble();
+        let words: Vec<u32> = img
+            .chunks(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        assert!(matches!(decode(words[0]).unwrap(), Instr::Op { .. }));
+        assert!(matches!(decode(words[2]).unwrap(), Instr::OpImm { imm: -100, .. }));
+    }
+
+    #[test]
+    fn li_small_and_large() {
+        for val in [0i32, 5, -5, 2047, -2048, 2048, 0x1234_5678, -1, i32::MIN, i32::MAX] {
+            let mut a = Asm::new(0);
+            a.li(5, val);
+            let img = a.assemble();
+            // emulate
+            let mut reg5 = 0i64;
+            for c in img.chunks(4) {
+                let w = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                match decode(w).unwrap() {
+                    Instr::Lui { imm, .. } => reg5 = imm as i64,
+                    Instr::OpImm { imm, .. } => reg5 = (reg5 as i32).wrapping_add(imm) as i64,
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
+            assert_eq!(reg5 as i32, val, "li {val}");
+        }
+    }
+
+    #[test]
+    fn branch_offsets_resolve_forward_and_back() {
+        let mut a = Asm::new(0x100);
+        a.label("top");
+        a.nop();
+        a.beq(0, 0, "end"); // forward
+        a.bne(1, 2, "top"); // backward
+        a.label("end");
+        a.nop();
+        let img = a.assemble();
+        let w1 = u32::from_le_bytes(img[4..8].try_into().unwrap());
+        let w2 = u32::from_le_bytes(img[8..12].try_into().unwrap());
+        match decode(w1).unwrap() {
+            Instr::Branch { imm, .. } => assert_eq!(imm, 8),
+            o => panic!("{o:?}"),
+        }
+        match decode(w2).unwrap() {
+            Instr::Branch { imm, .. } => assert_eq!(imm, -8),
+            o => panic!("{o:?}"),
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "undefined label")]
+    fn undefined_label_panics() {
+        let mut a = Asm::new(0);
+        a.j("nowhere");
+        a.assemble();
+    }
+
+    #[test]
+    fn roundtrip_property_random_rtype() {
+        forall("rtype-roundtrip", 200, |rng| {
+            let rd = rng.int_in(0, 31) as u8;
+            let rs1 = rng.int_in(0, 31) as u8;
+            let rs2 = rng.int_in(0, 31) as u8;
+            let mut a = Asm::new(0);
+            a.and(rd, rs1, rs2);
+            let img = a.assemble();
+            let w = u32::from_le_bytes(img[0..4].try_into().unwrap());
+            match decode(w).unwrap() {
+                Instr::Op { rd: d, rs1: s1, rs2: s2, .. } => {
+                    crate::prop_assert!(d == rd && s1 == rs1 && s2 == rs2, "field mismatch");
+                    Ok(())
+                }
+                other => Err(format!("decoded {other:?}")),
+            }
+        });
+    }
+
+    #[test]
+    fn roundtrip_property_random_imm() {
+        forall("imm-roundtrip", 200, |rng| {
+            let rd = rng.int_in(1, 31) as u8;
+            let rs1 = rng.int_in(0, 31) as u8;
+            let imm = rng.int_in(-2048, 2047) as i32;
+            let mut a = Asm::new(0);
+            a.addi(rd, rs1, imm);
+            a.lw(rd, rs1, imm);
+            a.sw(rs1, rd, imm);
+            let img = a.assemble();
+            let words: Vec<u32> = img
+                .chunks(4)
+                .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            match decode(words[0]).unwrap() {
+                Instr::OpImm { imm: i, .. } => crate::prop_assert!(i == imm, "addi {i}!={imm}"),
+                o => return Err(format!("{o:?}")),
+            }
+            match decode(words[1]).unwrap() {
+                Instr::Load { imm: i, .. } => crate::prop_assert!(i == imm, "lw {i}!={imm}"),
+                o => return Err(format!("{o:?}")),
+            }
+            match decode(words[2]).unwrap() {
+                Instr::Store { imm: i, .. } => crate::prop_assert!(i == imm, "sw {i}!={imm}"),
+                o => return Err(format!("{o:?}")),
+            }
+            Ok(())
+        });
+    }
+}

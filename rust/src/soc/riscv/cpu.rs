@@ -1,0 +1,482 @@
+//! RV32IM instruction-set simulator — the A-core stand-in that executes the
+//! BISC firmware against the memory-mapped CIM device (paper Section III-A
+//! / VI). Single hart, in-order, with cycle accounting per instruction
+//! class so firmware latency (Alg. 1 overhead) can be reported.
+
+use super::decode::{decode, AluOp, BranchOp, Instr, LoadOp, MulDivOp, StoreOp};
+use crate::soc::bus::{Axi4LiteBus, BusResp};
+
+/// Why the CPU stopped.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Halt {
+    /// ECALL with a7 = 93 (exit), a0 = exit code — Linux-style convention.
+    Exit(u32),
+    /// EBREAK hit.
+    Break,
+    /// Instruction limit reached (runaway guard).
+    StepLimit,
+    /// Decode or bus fault.
+    Fault(String),
+}
+
+/// Per-class cycle costs (simple in-order model: base 1 cycle, memory adds
+/// bus latency, mul/div multi-cycle as in small embedded cores).
+#[derive(Debug, Clone, Copy)]
+pub struct CycleModel {
+    pub base: u64,
+    pub mul: u64,
+    pub div: u64,
+    pub branch_taken_penalty: u64,
+}
+
+impl Default for CycleModel {
+    fn default() -> Self {
+        Self { base: 1, mul: 3, div: 19, branch_taken_penalty: 1 }
+    }
+}
+
+pub struct Cpu {
+    pub regs: [u32; 32],
+    pub pc: u32,
+    pub cycles: u64,
+    pub instret: u64,
+    pub cycle_model: CycleModel,
+    /// ECALL log: (a7, a0) pairs for non-exit syscalls (e.g. putchar)
+    pub ecalls: Vec<(u32, u32)>,
+}
+
+impl Cpu {
+    pub fn new(pc: u32) -> Self {
+        Self {
+            regs: [0; 32],
+            pc,
+            cycles: 0,
+            instret: 0,
+            cycle_model: CycleModel::default(),
+            ecalls: Vec::new(),
+        }
+    }
+
+    #[inline]
+    fn rg(&self, r: u8) -> u32 {
+        self.regs[r as usize]
+    }
+
+    #[inline]
+    fn wg(&mut self, r: u8, v: u32) {
+        if r != 0 {
+            self.regs[r as usize] = v;
+        }
+    }
+
+    fn load(&mut self, bus: &mut Axi4LiteBus, op: LoadOp, addr: u32) -> Result<u32, String> {
+        let word_addr = addr & !3;
+        let word = bus
+            .read32(word_addr)
+            .map_err(|e| format!("load fault at {addr:#010x}: {e:?}"))?;
+        let shift = (addr & 3) * 8;
+        Ok(match op {
+            LoadOp::Lw => {
+                if addr & 3 != 0 {
+                    return Err(format!("misaligned LW at {addr:#010x}"));
+                }
+                word
+            }
+            LoadOp::Lh | LoadOp::Lhu => {
+                if addr & 1 != 0 {
+                    return Err(format!("misaligned LH at {addr:#010x}"));
+                }
+                let half = (word >> shift) & 0xffff;
+                if op == LoadOp::Lh {
+                    (half as u16 as i16 as i32) as u32
+                } else {
+                    half
+                }
+            }
+            LoadOp::Lb | LoadOp::Lbu => {
+                let byte = (word >> shift) & 0xff;
+                if op == LoadOp::Lb {
+                    (byte as u8 as i8 as i32) as u32
+                } else {
+                    byte
+                }
+            }
+        })
+    }
+
+    fn store(
+        &mut self,
+        bus: &mut Axi4LiteBus,
+        op: StoreOp,
+        addr: u32,
+        value: u32,
+    ) -> Result<(), String> {
+        let word_addr = addr & !3;
+        let err = |e: BusResp| format!("store fault at {addr:#010x}: {e:?}");
+        match op {
+            StoreOp::Sw => {
+                if addr & 3 != 0 {
+                    return Err(format!("misaligned SW at {addr:#010x}"));
+                }
+                bus.write32(word_addr, value).map_err(err)
+            }
+            StoreOp::Sh => {
+                if addr & 1 != 0 {
+                    return Err(format!("misaligned SH at {addr:#010x}"));
+                }
+                let old = bus.read32(word_addr).map_err(err)?;
+                let shift = (addr & 2) * 8;
+                let mask = 0xffffu32 << shift;
+                let new = (old & !mask) | ((value & 0xffff) << shift);
+                bus.write32(word_addr, new).map_err(err)
+            }
+            StoreOp::Sb => {
+                let old = bus.read32(word_addr).map_err(err)?;
+                let shift = (addr & 3) * 8;
+                let mask = 0xffu32 << shift;
+                let new = (old & !mask) | ((value & 0xff) << shift);
+                bus.write32(word_addr, new).map_err(err)
+            }
+        }
+    }
+
+    fn alu(op: AluOp, a: u32, b: u32) -> u32 {
+        match op {
+            AluOp::Add => a.wrapping_add(b),
+            AluOp::Sub => a.wrapping_sub(b),
+            AluOp::Sll => a.wrapping_shl(b & 0x1f),
+            AluOp::Slt => ((a as i32) < (b as i32)) as u32,
+            AluOp::Sltu => (a < b) as u32,
+            AluOp::Xor => a ^ b,
+            AluOp::Srl => a.wrapping_shr(b & 0x1f),
+            AluOp::Sra => ((a as i32).wrapping_shr(b & 0x1f)) as u32,
+            AluOp::Or => a | b,
+            AluOp::And => a & b,
+        }
+    }
+
+    fn muldiv(op: MulDivOp, a: u32, b: u32) -> u32 {
+        let (sa, sb) = (a as i32, b as i32);
+        match op {
+            MulDivOp::Mul => a.wrapping_mul(b),
+            MulDivOp::Mulh => (((sa as i64) * (sb as i64)) >> 32) as u32,
+            MulDivOp::Mulhsu => (((sa as i64) * (b as u64 as i64)) >> 32) as u32,
+            MulDivOp::Mulhu => (((a as u64) * (b as u64)) >> 32) as u32,
+            MulDivOp::Div => {
+                if b == 0 {
+                    u32::MAX
+                } else if sa == i32::MIN && sb == -1 {
+                    sa as u32
+                } else {
+                    (sa / sb) as u32
+                }
+            }
+            MulDivOp::Divu => {
+                if b == 0 {
+                    u32::MAX
+                } else {
+                    a / b
+                }
+            }
+            MulDivOp::Rem => {
+                if b == 0 {
+                    a
+                } else if sa == i32::MIN && sb == -1 {
+                    0
+                } else {
+                    (sa % sb) as u32
+                }
+            }
+            MulDivOp::Remu => {
+                if b == 0 {
+                    a
+                } else {
+                    a % b
+                }
+            }
+        }
+    }
+
+    /// Execute one instruction; returns Some(halt) when stopped.
+    pub fn step(&mut self, bus: &mut Axi4LiteBus) -> Option<Halt> {
+        let word = match bus.read32(self.pc) {
+            Ok(w) => w,
+            Err(e) => return Some(Halt::Fault(format!("fetch fault at {:#010x}: {e:?}", self.pc))),
+        };
+        // instruction fetch in a real core is on a separate port/ICache —
+        // don't double-count it in the AXI data-transaction stats
+        bus.cycles -= bus.timing.per_transaction();
+        bus.reads -= 1;
+
+        let instr = match decode(word) {
+            Ok(i) => i,
+            Err(e) => {
+                return Some(Halt::Fault(format!(
+                    "illegal instruction {:#010x} at {:#010x}",
+                    e.word, self.pc
+                )))
+            }
+        };
+        let mut next_pc = self.pc.wrapping_add(4);
+        let cm = self.cycle_model;
+        self.cycles += cm.base;
+        self.instret += 1;
+
+        match instr {
+            Instr::Lui { rd, imm } => self.wg(rd, imm as u32),
+            Instr::Auipc { rd, imm } => self.wg(rd, self.pc.wrapping_add(imm as u32)),
+            Instr::Jal { rd, imm } => {
+                self.wg(rd, next_pc);
+                next_pc = self.pc.wrapping_add(imm as u32);
+                self.cycles += cm.branch_taken_penalty;
+            }
+            Instr::Jalr { rd, rs1, imm } => {
+                let target = self.rg(rs1).wrapping_add(imm as u32) & !1;
+                self.wg(rd, next_pc);
+                next_pc = target;
+                self.cycles += cm.branch_taken_penalty;
+            }
+            Instr::Branch { op, rs1, rs2, imm } => {
+                let (a, b) = (self.rg(rs1), self.rg(rs2));
+                let taken = match op {
+                    BranchOp::Beq => a == b,
+                    BranchOp::Bne => a != b,
+                    BranchOp::Blt => (a as i32) < (b as i32),
+                    BranchOp::Bge => (a as i32) >= (b as i32),
+                    BranchOp::Bltu => a < b,
+                    BranchOp::Bgeu => a >= b,
+                };
+                if taken {
+                    next_pc = self.pc.wrapping_add(imm as u32);
+                    self.cycles += cm.branch_taken_penalty;
+                }
+            }
+            Instr::Load { op, rd, rs1, imm } => {
+                let addr = self.rg(rs1).wrapping_add(imm as u32);
+                match self.load(bus, op, addr) {
+                    Ok(v) => self.wg(rd, v),
+                    Err(e) => return Some(Halt::Fault(e)),
+                }
+            }
+            Instr::Store { op, rs1, rs2, imm } => {
+                let addr = self.rg(rs1).wrapping_add(imm as u32);
+                let v = self.rg(rs2);
+                if let Err(e) = self.store(bus, op, addr, v) {
+                    return Some(Halt::Fault(e));
+                }
+            }
+            Instr::OpImm { op, rd, rs1, imm } => {
+                let v = Self::alu(op, self.rg(rs1), imm as u32);
+                self.wg(rd, v);
+            }
+            Instr::Op { op, rd, rs1, rs2 } => {
+                let v = Self::alu(op, self.rg(rs1), self.rg(rs2));
+                self.wg(rd, v);
+            }
+            Instr::MulDiv { op, rd, rs1, rs2 } => {
+                self.cycles += match op {
+                    MulDivOp::Mul | MulDivOp::Mulh | MulDivOp::Mulhsu | MulDivOp::Mulhu => cm.mul,
+                    _ => cm.div,
+                };
+                let v = Self::muldiv(op, self.rg(rs1), self.rg(rs2));
+                self.wg(rd, v);
+            }
+            Instr::Fence => {}
+            Instr::Ecall => {
+                let a7 = self.rg(17);
+                let a0 = self.rg(10);
+                if a7 == 93 {
+                    return Some(Halt::Exit(a0));
+                }
+                self.ecalls.push((a7, a0));
+            }
+            Instr::Ebreak => return Some(Halt::Break),
+        }
+        self.pc = next_pc;
+        None
+    }
+
+    /// Run until halt or `max_steps`.
+    pub fn run(&mut self, bus: &mut Axi4LiteBus, max_steps: u64) -> Halt {
+        for _ in 0..max_steps {
+            if let Some(h) = self.step(bus) {
+                return h;
+            }
+        }
+        Halt::StepLimit
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::bus::Ram;
+    use crate::soc::riscv::asm::Asm;
+
+    fn run_asm(build: impl FnOnce(&mut Asm)) -> (Cpu, Axi4LiteBus, Halt) {
+        let mut a = Asm::new(0);
+        build(&mut a);
+        let code = a.assemble();
+        let mut bus = Axi4LiteBus::new();
+        let mut ram = Ram::new(0x1_0000, "ram");
+        ram.load(0, &code);
+        bus.map(0, Box::new(ram));
+        let mut cpu = Cpu::new(0);
+        let halt = cpu.run(&mut bus, 100_000);
+        (cpu, bus, halt)
+    }
+
+    #[test]
+    fn arithmetic_and_exit() {
+        let (cpu, _, halt) = run_asm(|a| {
+            a.li(10, 0); // a0
+            a.li(5, 20);
+            a.li(6, 22);
+            a.add(10, 5, 6);
+            a.exit();
+        });
+        assert_eq!(halt, Halt::Exit(42));
+        assert_eq!(cpu.regs[10], 42);
+    }
+
+    #[test]
+    fn x0_is_hardwired_zero() {
+        let (cpu, _, _) = run_asm(|a| {
+            a.li(0, 1234);
+            a.li(10, 0);
+            a.add(10, 0, 0);
+            a.exit();
+        });
+        assert_eq!(cpu.regs[0], 0);
+        assert_eq!(cpu.regs[10], 0);
+    }
+
+    #[test]
+    fn loop_with_branch() {
+        // sum 1..=10 into a0
+        let (_, _, halt) = run_asm(|a| {
+            a.li(10, 0);
+            a.li(5, 1);
+            a.li(6, 11);
+            a.label("loop");
+            a.add(10, 10, 5);
+            a.addi(5, 5, 1);
+            a.blt(5, 6, "loop");
+            a.exit();
+        });
+        assert_eq!(halt, Halt::Exit(55));
+    }
+
+    #[test]
+    fn memory_roundtrip_word_half_byte() {
+        let (cpu, _, halt) = run_asm(|a| {
+            a.li(5, 0x8000); // scratch address
+            a.li(6, 0x1234_5678u32 as i32);
+            a.sw(5, 6, 0);
+            a.lw(7, 5, 0);
+            a.lhu(8, 5, 0); // 0x5678
+            a.lbu(9, 5, 1); // 0x56
+            a.lb(28, 5, 3); // 0x12 sign-pos
+            a.li(10, 0);
+            a.add(10, 0, 8);
+            a.exit();
+        });
+        assert_eq!(halt, Halt::Exit(0x5678));
+        assert_eq!(cpu.regs[7], 0x1234_5678);
+        assert_eq!(cpu.regs[9], 0x56);
+        assert_eq!(cpu.regs[28], 0x12);
+    }
+
+    #[test]
+    fn sb_sh_merge_into_word() {
+        let (cpu, _, _) = run_asm(|a| {
+            a.li(5, 0x8000);
+            a.li(6, -1); // 0xFFFFFFFF
+            a.sw(5, 6, 0);
+            a.li(7, 0xAB);
+            a.sb(5, 7, 2);
+            a.lw(10, 5, 0);
+            a.exit();
+        });
+        assert_eq!(cpu.regs[10], 0xFFAB_FFFF);
+    }
+
+    #[test]
+    fn muldiv_semantics() {
+        let (cpu, _, _) = run_asm(|a| {
+            a.li(5, -7);
+            a.li(6, 2);
+            a.mul(7, 5, 6); // -14
+            a.div(8, 5, 6); // -3 (trunc toward zero)
+            a.rem(9, 5, 6); // -1
+            a.li(28, 0);
+            a.div(29, 5, 28); // div by zero -> -1 (all ones)
+            a.exit();
+        });
+        assert_eq!(cpu.regs[7] as i32, -14);
+        assert_eq!(cpu.regs[8] as i32, -3);
+        assert_eq!(cpu.regs[9] as i32, -1);
+        assert_eq!(cpu.regs[29], u32::MAX);
+    }
+
+    #[test]
+    fn function_call_and_return() {
+        let (_, _, halt) = run_asm(|a| {
+            a.li(10, 5);
+            a.call("double");
+            a.call("double");
+            a.exit(); // 20
+            a.label("double");
+            a.add(10, 10, 10);
+            a.ret();
+        });
+        assert_eq!(halt, Halt::Exit(20));
+    }
+
+    #[test]
+    fn shifts_signed_unsigned() {
+        let (cpu, _, _) = run_asm(|a| {
+            a.li(5, -16);
+            a.srai(6, 5, 2); // -4
+            a.srli(7, 5, 28); // 0xF
+            a.slli(8, 5, 1); // -32
+            a.exit();
+        });
+        assert_eq!(cpu.regs[6] as i32, -4);
+        assert_eq!(cpu.regs[7], 0xF);
+        assert_eq!(cpu.regs[8] as i32, -32);
+    }
+
+    #[test]
+    fn fault_on_illegal_instruction() {
+        let mut bus = Axi4LiteBus::new();
+        let mut ram = Ram::new(0x100, "ram");
+        ram.load(0, &[0xFF, 0xFF, 0xFF, 0xFF]);
+        bus.map(0, Box::new(ram));
+        let mut cpu = Cpu::new(0);
+        match cpu.run(&mut bus, 10) {
+            Halt::Fault(msg) => assert!(msg.contains("illegal instruction")),
+            other => panic!("expected fault, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn step_limit_guard() {
+        let (_, _, halt) = run_asm(|a| {
+            a.label("spin");
+            a.jal_label(0, "spin");
+        });
+        assert_eq!(halt, Halt::StepLimit);
+    }
+
+    #[test]
+    fn cycle_counting_progresses() {
+        let (cpu, _, _) = run_asm(|a| {
+            a.li(5, 3);
+            a.li(6, 4);
+            a.mul(7, 5, 6);
+            a.exit();
+        });
+        assert!(cpu.cycles > cpu.instret, "mul must cost extra cycles");
+    }
+}

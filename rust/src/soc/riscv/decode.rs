@@ -1,0 +1,335 @@
+//! RV32IM instruction decoder.
+//!
+//! The paper's A-core is RV32IMFC; the BISC routine and all SoC control
+//! firmware shipped here use integer fixed-point only, so the ISS
+//! implements the I and M extensions (DESIGN.md §2 documents the
+//! substitution). Decoding is table-free: opcode/funct3/funct7 matching,
+//! returning a typed `Instr`.
+
+/// Decoded instruction. Registers are indices 0..=31; immediates are
+/// sign-extended where the ISA says so.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Instr {
+    Lui { rd: u8, imm: i32 },
+    Auipc { rd: u8, imm: i32 },
+    Jal { rd: u8, imm: i32 },
+    Jalr { rd: u8, rs1: u8, imm: i32 },
+    Branch { op: BranchOp, rs1: u8, rs2: u8, imm: i32 },
+    Load { op: LoadOp, rd: u8, rs1: u8, imm: i32 },
+    Store { op: StoreOp, rs1: u8, rs2: u8, imm: i32 },
+    OpImm { op: AluOp, rd: u8, rs1: u8, imm: i32 },
+    Op { op: AluOp, rd: u8, rs1: u8, rs2: u8 },
+    MulDiv { op: MulDivOp, rd: u8, rs1: u8, rs2: u8 },
+    /// FENCE / FENCE.I — no-ops in this single-hart model
+    Fence,
+    Ecall,
+    Ebreak,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BranchOp {
+    Beq,
+    Bne,
+    Blt,
+    Bge,
+    Bltu,
+    Bgeu,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoadOp {
+    Lb,
+    Lh,
+    Lw,
+    Lbu,
+    Lhu,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreOp {
+    Sb,
+    Sh,
+    Sw,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AluOp {
+    Add,
+    Sub,
+    Sll,
+    Slt,
+    Sltu,
+    Xor,
+    Srl,
+    Sra,
+    Or,
+    And,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MulDivOp {
+    Mul,
+    Mulh,
+    Mulhsu,
+    Mulhu,
+    Div,
+    Divu,
+    Rem,
+    Remu,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DecodeError {
+    pub word: u32,
+}
+
+#[inline]
+fn rd(w: u32) -> u8 {
+    ((w >> 7) & 0x1f) as u8
+}
+
+#[inline]
+fn rs1(w: u32) -> u8 {
+    ((w >> 15) & 0x1f) as u8
+}
+
+#[inline]
+fn rs2(w: u32) -> u8 {
+    ((w >> 20) & 0x1f) as u8
+}
+
+#[inline]
+fn funct3(w: u32) -> u32 {
+    (w >> 12) & 0x7
+}
+
+#[inline]
+fn funct7(w: u32) -> u32 {
+    w >> 25
+}
+
+/// I-type immediate: bits 31:20, sign-extended.
+#[inline]
+fn imm_i(w: u32) -> i32 {
+    (w as i32) >> 20
+}
+
+/// B-type immediate (branch offset, even).
+#[inline]
+fn imm_b(w: u32) -> i32 {
+    let imm = ((w >> 31) << 12)
+        | (((w >> 7) & 1) << 11)
+        | (((w >> 25) & 0x3f) << 5)
+        | (((w >> 8) & 0xf) << 1);
+    ((imm << 19) as i32) >> 19
+}
+
+/// U-type immediate (upper 20 bits).
+#[inline]
+fn imm_u(w: u32) -> i32 {
+    (w & 0xFFFF_F000) as i32
+}
+
+/// J-type immediate (JAL offset).
+#[inline]
+fn imm_j(w: u32) -> i32 {
+    let imm = ((w >> 31) << 20)
+        | (((w >> 12) & 0xff) << 12)
+        | (((w >> 20) & 1) << 11)
+        | (((w >> 21) & 0x3ff) << 1);
+    ((imm << 11) as i32) >> 11
+}
+
+pub fn decode(w: u32) -> Result<Instr, DecodeError> {
+    let err = DecodeError { word: w };
+    let opcode = w & 0x7f;
+    Ok(match opcode {
+        0b0110111 => Instr::Lui { rd: rd(w), imm: imm_u(w) },
+        0b0010111 => Instr::Auipc { rd: rd(w), imm: imm_u(w) },
+        0b1101111 => Instr::Jal { rd: rd(w), imm: imm_j(w) },
+        0b1100111 => {
+            if funct3(w) != 0 {
+                return Err(err);
+            }
+            Instr::Jalr { rd: rd(w), rs1: rs1(w), imm: imm_i(w) }
+        }
+        0b1100011 => {
+            let op = match funct3(w) {
+                0b000 => BranchOp::Beq,
+                0b001 => BranchOp::Bne,
+                0b100 => BranchOp::Blt,
+                0b101 => BranchOp::Bge,
+                0b110 => BranchOp::Bltu,
+                0b111 => BranchOp::Bgeu,
+                _ => return Err(err),
+            };
+            Instr::Branch { op, rs1: rs1(w), rs2: rs2(w), imm: imm_b(w) }
+        }
+        0b0000011 => {
+            let op = match funct3(w) {
+                0b000 => LoadOp::Lb,
+                0b001 => LoadOp::Lh,
+                0b010 => LoadOp::Lw,
+                0b100 => LoadOp::Lbu,
+                0b101 => LoadOp::Lhu,
+                _ => return Err(err),
+            };
+            Instr::Load { op, rd: rd(w), rs1: rs1(w), imm: imm_i(w) }
+        }
+        0b0100011 => {
+            let op = match funct3(w) {
+                0b000 => StoreOp::Sb,
+                0b001 => StoreOp::Sh,
+                0b010 => StoreOp::Sw,
+                _ => return Err(err),
+            };
+            let imm = {
+                let raw = ((w >> 25) << 5) | ((w >> 7) & 0x1f);
+                ((raw << 20) as i32) >> 20
+            };
+            Instr::Store { op, rs1: rs1(w), rs2: rs2(w), imm }
+        }
+        0b0010011 => {
+            let f3 = funct3(w);
+            let op = match f3 {
+                0b000 => AluOp::Add,
+                0b010 => AluOp::Slt,
+                0b011 => AluOp::Sltu,
+                0b100 => AluOp::Xor,
+                0b110 => AluOp::Or,
+                0b111 => AluOp::And,
+                0b001 => {
+                    if funct7(w) != 0 {
+                        return Err(err);
+                    }
+                    AluOp::Sll
+                }
+                0b101 => match funct7(w) {
+                    0b0000000 => AluOp::Srl,
+                    0b0100000 => AluOp::Sra,
+                    _ => return Err(err),
+                },
+                _ => unreachable!(),
+            };
+            // shifts take shamt (5 bits), others the full I-imm
+            let imm = if matches!(op, AluOp::Sll | AluOp::Srl | AluOp::Sra) {
+                ((w >> 20) & 0x1f) as i32
+            } else {
+                imm_i(w)
+            };
+            Instr::OpImm { op, rd: rd(w), rs1: rs1(w), imm }
+        }
+        0b0110011 => {
+            let f3 = funct3(w);
+            let f7 = funct7(w);
+            if f7 == 0b0000001 {
+                let op = match f3 {
+                    0b000 => MulDivOp::Mul,
+                    0b001 => MulDivOp::Mulh,
+                    0b010 => MulDivOp::Mulhsu,
+                    0b011 => MulDivOp::Mulhu,
+                    0b100 => MulDivOp::Div,
+                    0b101 => MulDivOp::Divu,
+                    0b110 => MulDivOp::Rem,
+                    0b111 => MulDivOp::Remu,
+                    _ => unreachable!(),
+                };
+                return Ok(Instr::MulDiv { op, rd: rd(w), rs1: rs1(w), rs2: rs2(w) });
+            }
+            let op = match (f3, f7) {
+                (0b000, 0b0000000) => AluOp::Add,
+                (0b000, 0b0100000) => AluOp::Sub,
+                (0b001, 0b0000000) => AluOp::Sll,
+                (0b010, 0b0000000) => AluOp::Slt,
+                (0b011, 0b0000000) => AluOp::Sltu,
+                (0b100, 0b0000000) => AluOp::Xor,
+                (0b101, 0b0000000) => AluOp::Srl,
+                (0b101, 0b0100000) => AluOp::Sra,
+                (0b110, 0b0000000) => AluOp::Or,
+                (0b111, 0b0000000) => AluOp::And,
+                _ => return Err(err),
+            };
+            Instr::Op { op, rd: rd(w), rs1: rs1(w), rs2: rs2(w) }
+        }
+        0b0001111 => Instr::Fence,
+        0b1110011 => match w >> 20 {
+            0 => Instr::Ecall,
+            1 => Instr::Ebreak,
+            _ => return Err(err),
+        },
+        _ => return Err(err),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_addi() {
+        // addi x1, x2, -5  => imm=0xFFB rs1=2 f3=0 rd=1 op=0010011
+        let w = ((-5i32 as u32 & 0xfff) << 20) | (2 << 15) | (1 << 7) | 0b0010011;
+        assert_eq!(
+            decode(w).unwrap(),
+            Instr::OpImm { op: AluOp::Add, rd: 1, rs1: 2, imm: -5 }
+        );
+    }
+
+    #[test]
+    fn decode_lui_auipc() {
+        let w = (0xABCDE << 12) | (5 << 7) | 0b0110111;
+        assert_eq!(decode(w).unwrap(), Instr::Lui { rd: 5, imm: (0xABCDEu32 << 12) as i32 });
+        let w = (0x1 << 12) | (6 << 7) | 0b0010111;
+        assert_eq!(decode(w).unwrap(), Instr::Auipc { rd: 6, imm: 0x1000 });
+    }
+
+    #[test]
+    fn decode_branch_negative_offset() {
+        // beq x1, x2, -4
+        let imm = -4i32;
+        let ui = imm as u32;
+        let w = (((ui >> 12) & 1) << 31)
+            | (((ui >> 5) & 0x3f) << 25)
+            | (2 << 20)
+            | (1 << 15)
+            | (0b000 << 12)
+            | (((ui >> 1) & 0xf) << 8)
+            | (((ui >> 11) & 1) << 7)
+            | 0b1100011;
+        assert_eq!(
+            decode(w).unwrap(),
+            Instr::Branch { op: BranchOp::Beq, rs1: 1, rs2: 2, imm: -4 }
+        );
+    }
+
+    #[test]
+    fn decode_muldiv() {
+        let w = (0b0000001 << 25) | (3 << 20) | (4 << 15) | (0b100 << 12) | (5 << 7) | 0b0110011;
+        assert_eq!(
+            decode(w).unwrap(),
+            Instr::MulDiv { op: MulDivOp::Div, rd: 5, rs1: 4, rs2: 3 }
+        );
+    }
+
+    #[test]
+    fn decode_shift_imm() {
+        // srai x1, x1, 7
+        let w = (0b0100000 << 25) | (7 << 20) | (1 << 15) | (0b101 << 12) | (1 << 7) | 0b0010011;
+        assert_eq!(
+            decode(w).unwrap(),
+            Instr::OpImm { op: AluOp::Sra, rd: 1, rs1: 1, imm: 7 }
+        );
+    }
+
+    #[test]
+    fn invalid_opcode_errors() {
+        assert!(decode(0x0000_0000).is_err());
+        assert!(decode(0xFFFF_FFFF).is_err());
+    }
+
+    #[test]
+    fn ecall_ebreak() {
+        assert_eq!(decode(0x0000_0073).unwrap(), Instr::Ecall);
+        assert_eq!(decode(0x0010_0073).unwrap(), Instr::Ebreak);
+    }
+}

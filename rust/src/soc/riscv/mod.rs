@@ -1,0 +1,9 @@
+//! RISC-V RV32IM instruction-set simulator, macro-assembler, and the
+//! firmware that runs on it — the stand-in for the paper's A-core
+//! (RV32IMFC; the F/C extensions are unused by the control firmware,
+//! DESIGN.md §2).
+
+pub mod asm;
+pub mod cpu;
+pub mod decode;
+pub mod selftest;

@@ -1,0 +1,152 @@
+//! Micro-benchmark harness (criterion is not vendored). Used by every
+//! `benches/*.rs` target (built with `harness = false`).
+//!
+//! Methodology: warm-up iterations, then fixed-duration sampling; reports
+//! median / p10 / p90 of per-iteration wall time plus derived throughput.
+//! `black_box` prevents the optimizer from deleting the measured work.
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub mean_ns: f64,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        1e9 / self.median_ns
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12} iters  median {:>12}  p10 {:>12}  p90 {:>12}  ({:.1}/s)",
+            self.name,
+            self.iters,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p10_ns),
+            fmt_ns(self.p90_ns),
+            self.per_sec()
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} us", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+pub struct Bencher {
+    /// target measurement duration per benchmark
+    pub measure: Duration,
+    pub warmup: Duration,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // Honor the quick mode used in CI: ACORE_BENCH_FAST=1
+        let fast = std::env::var("ACORE_BENCH_FAST").is_ok();
+        Self {
+            measure: Duration::from_millis(if fast { 200 } else { 1500 }),
+            warmup: Duration::from_millis(if fast { 50 } else { 300 }),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Measure `f` repeatedly; the closure's return value is black-boxed.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // warm-up
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            bb(f());
+        }
+        // sample
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.measure {
+            let t0 = Instant::now();
+            bb(f());
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pick = |p: f64| samples_ns[((samples_ns.len() - 1) as f64 * p) as usize];
+        let mean = samples_ns.iter().sum::<f64>() / samples_ns.len() as f64;
+        let r = BenchResult {
+            name: name.to_string(),
+            iters: samples_ns.len() as u64,
+            median_ns: pick(0.5),
+            p10_ns: pick(0.1),
+            p90_ns: pick(0.9),
+            mean_ns: mean,
+        };
+        println!("{}", r.report());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    /// Fixed iteration count variant for expensive bodies.
+    pub fn bench_n<T, F: FnMut() -> T>(&mut self, name: &str, n: u64, mut f: F) -> &BenchResult {
+        let mut samples_ns = Vec::with_capacity(n as usize);
+        bb(f()); // single warmup
+        for _ in 0..n {
+            let t0 = Instant::now();
+            bb(f());
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pick = |p: f64| samples_ns[((samples_ns.len() - 1) as f64 * p) as usize];
+        let mean = samples_ns.iter().sum::<f64>() / samples_ns.len() as f64;
+        let r = BenchResult {
+            name: name.to_string(),
+            iters: n,
+            median_ns: pick(0.5),
+            p10_ns: pick(0.1),
+            p90_ns: pick(0.9),
+            mean_ns: mean,
+        };
+        println!("{}", r.report());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("ACORE_BENCH_FAST", "1");
+        let mut b = Bencher::new();
+        let r = b.bench("noop-ish", || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(r.median_ns > 0.0);
+        assert!(r.iters > 10);
+    }
+}

@@ -1,0 +1,170 @@
+//! Minimal command-line parser (clap is not vendored in this environment).
+//!
+//! Supports `program <subcommand> [--flag] [--key value] [positional...]`.
+//! Unknown flags are an error; every flag a subcommand reads must be
+//! registered by the caller via the accessors, which also drive `--help`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+    /// (name, default, help) of every option read, for --help rendering.
+    seen: std::cell::RefCell<Vec<(String, String, String)>>,
+    help_requested: bool,
+}
+
+impl Args {
+    pub fn parse_env() -> Self {
+        Self::parse(std::env::args().skip(1).collect())
+    }
+
+    pub fn parse(raw: Vec<String>) -> Self {
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut subcommand = None;
+        let mut help = false;
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                help = true;
+            } else if let Some(name) = tok.strip_prefix("--") {
+                // `--key=value`, `--key value`, or bare boolean `--key`
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    flags.insert(name.to_string(), "true".to_string());
+                }
+            } else if subcommand.is_none() && positional.is_empty() {
+                subcommand = Some(tok);
+            } else {
+                positional.push(tok);
+            }
+        }
+        Self {
+            subcommand,
+            flags,
+            positional,
+            seen: Default::default(),
+            help_requested: help,
+        }
+    }
+
+    fn record(&self, name: &str, default: &str, help: &str) {
+        self.seen
+            .borrow_mut()
+            .push((name.to_string(), default.to_string(), help.to_string()));
+    }
+
+    pub fn get_str(&self, name: &str, default: &str, help: &str) -> String {
+        self.record(name, default, help);
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64, help: &str) -> u64 {
+        self.record(name, &default.to_string(), help);
+        self.flags
+            .get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got `{v}`")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize, help: &str) -> usize {
+        self.get_u64(name, default as u64, help) as usize
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64, help: &str) -> f64 {
+        self.record(name, &default.to_string(), help);
+        self.flags
+            .get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got `{v}`")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, name: &str, help: &str) -> bool {
+        self.record(name, "false", help);
+        matches!(self.flags.get(name).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn help_requested(&self) -> bool {
+        self.help_requested
+    }
+
+    /// Render collected options; call after all get_* calls of a subcommand.
+    pub fn render_help(&self, usage: &str) -> String {
+        let mut out = format!("usage: {usage}\n\noptions:\n");
+        for (name, default, help) in self.seen.borrow().iter() {
+            out.push_str(&format!("  --{name:<18} {help} [default: {default}]\n"));
+        }
+        out
+    }
+
+    /// Error on any flag that was never read by the subcommand.
+    pub fn check_unknown(&self) -> Result<(), String> {
+        let seen = self.seen.borrow();
+        for k in self.flags.keys() {
+            if !seen.iter().any(|(n, _, _)| n == k) {
+                return Err(format!("unknown option --{k}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()).collect())
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = args(&["run", "--batch", "32", "--fast", "--name=x"]);
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get_u64("batch", 1, ""), 32);
+        assert!(a.get_bool("fast", ""));
+        assert_eq!(a.get_str("name", "", ""), "x");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args(&["run"]);
+        assert_eq!(a.get_u64("batch", 7, ""), 7);
+        assert!(!a.get_bool("fast", ""));
+        assert_eq!(a.get_f64("sigma", 1.5, ""), 1.5);
+    }
+
+    #[test]
+    fn positional_after_subcommand() {
+        let a = args(&["calibrate", "path/to/file", "--z", "8"]);
+        assert_eq!(a.positional(), &["path/to/file".to_string()]);
+        assert_eq!(a.get_u64("z", 4, ""), 8);
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let a = args(&["run", "--bogus", "1"]);
+        let _ = a.get_u64("batch", 1, "");
+        assert!(a.check_unknown().is_err());
+    }
+
+    #[test]
+    fn help_flag() {
+        let a = args(&["run", "--help"]);
+        assert!(a.help_requested());
+    }
+}

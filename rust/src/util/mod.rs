@@ -1,0 +1,10 @@
+//! Infrastructure utilities built in-repo (the usual crates — rand, clap,
+//! criterion, proptest, serde — are not available offline; DESIGN.md §2).
+
+pub mod bench;
+pub mod cli;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod json;

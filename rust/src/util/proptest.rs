@@ -1,0 +1,77 @@
+//! Miniature property-based testing helper (proptest/quickcheck are not
+//! vendored). `forall` runs a closure over many seeded random cases and, on
+//! failure, reports the failing seed so the case can be replayed with
+//! `forall_seeded`.
+
+use super::rng::Rng;
+
+pub const DEFAULT_CASES: usize = 128;
+
+/// Run `prop` for `cases` random seeds; panic with the failing seed on the
+/// first counterexample. The closure receives a fresh deterministic `Rng`.
+pub fn forall<F: FnMut(&mut Rng) -> Result<(), String>>(name: &str, cases: usize, mut prop: F) {
+    for case in 0..cases {
+        let seed = 0xACE0_0000 + case as u64;
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property `{name}` failed at seed {seed:#x} (case {case}): {msg}");
+        }
+    }
+}
+
+/// Replay a single case.
+pub fn forall_seeded<F: FnMut(&mut Rng) -> Result<(), String>>(name: &str, seed: u64, mut prop: F) {
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property `{name}` failed at seed {seed:#x}: {msg}");
+    }
+}
+
+/// Assertion helpers returning Result for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!("{:?} != {:?}", a, b));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        forall("count", 16, |_rng| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails`")]
+    fn failing_property_reports_seed() {
+        forall("fails", 8, |rng| {
+            let v = rng.int_in(0, 10);
+            prop_assert!(v < 100, "v={v}");
+            if v >= 0 {
+                Err("always".to_string())
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

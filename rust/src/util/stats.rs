@@ -1,0 +1,180 @@
+//! Small statistics toolkit: moments, percentiles, histograms, linear
+//! least-squares (the BISC fit of Eq. 13-14 reuses `linfit`), and dB helpers.
+
+/// Arithmetic mean. Returns 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// p-th percentile (0..=100), linear interpolation, sorts a copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile of empty slice");
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Ordinary least-squares fit y = g*x + e over paired samples.
+///
+/// This is exactly the BISC estimator of Eq. (13)-(14):
+///   g = (Z*sum(xy) - sum(x)*sum(y)) / (Z*sum(x^2) - sum(x)^2)
+///   e = (sum(y) - g*sum(x)) / Z
+pub fn linfit(x: &[f64], y: &[f64]) -> (f64, f64) {
+    assert_eq!(x.len(), y.len());
+    assert!(x.len() >= 2, "linfit needs >= 2 points");
+    let z = x.len() as f64;
+    let sx: f64 = x.iter().sum();
+    let sy: f64 = y.iter().sum();
+    let sxy: f64 = x.iter().zip(y).map(|(a, b)| a * b).sum();
+    let sxx: f64 = x.iter().map(|a| a * a).sum();
+    let denom = z * sxx - sx * sx;
+    assert!(denom.abs() > 1e-12, "degenerate linfit (all x equal)");
+    let g = (z * sxy - sx * sy) / denom;
+    let e = (sy - g * sx) / z;
+    (g, e)
+}
+
+/// Power ratio to decibels.
+pub fn db10(ratio: f64) -> f64 {
+    10.0 * ratio.log10()
+}
+
+/// Compute-SNR of Eq. (15): var(nominal) / var(nominal - actual), in dB.
+pub fn compute_snr_db(nominal: &[f64], actual: &[f64]) -> f64 {
+    assert_eq!(nominal.len(), actual.len());
+    let err: Vec<f64> = nominal.iter().zip(actual).map(|(n, a)| n - a).collect();
+    let ve = variance(&err);
+    if ve == 0.0 {
+        return f64::INFINITY;
+    }
+    db10(variance(nominal) / ve)
+}
+
+/// SNR (dB) -> effective number of bits, ENOB = (SNR - 1.76) / 6.02.
+pub fn enob(snr_db: f64) -> f64 {
+    (snr_db - 1.76) / 6.02
+}
+
+/// Fixed-width histogram over [lo, hi) with `bins` buckets.
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
+    let mut h = vec![0usize; bins];
+    let w = (hi - lo) / bins as f64;
+    for &x in xs {
+        if x >= lo && x < hi {
+            let b = ((x - lo) / w) as usize;
+            h[b.min(bins - 1)] += 1;
+        }
+    }
+    h
+}
+
+/// Root-mean-square of a slice.
+pub fn rms(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x * x).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_var_basic() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((variance(&xs) - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linfit_exact_line() {
+        let x = [0.0, 1.0, 2.0, 3.0];
+        let y: Vec<f64> = x.iter().map(|v| 2.5 * v - 1.0).collect();
+        let (g, e) = linfit(&x, &y);
+        assert!((g - 2.5).abs() < 1e-12);
+        assert!((e + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linfit_recovers_under_noise() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        let x: Vec<f64> = (0..200).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| 0.9 * v + 5.0 + rng.normal() * 0.1).collect();
+        let (g, e) = linfit(&x, &y);
+        assert!((g - 0.9).abs() < 1e-3, "g={g}");
+        assert!((e - 5.0).abs() < 0.1, "e={e}");
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 25.0), 2.0);
+    }
+
+    #[test]
+    fn snr_of_identical_is_inf() {
+        let a = [1.0, 2.0, 3.0];
+        assert!(compute_snr_db(&a, &a).is_infinite());
+    }
+
+    #[test]
+    fn snr_known_value() {
+        // signal variance 1.0 (approximately), error variance 0.01 -> 20 dB
+        let n: Vec<f64> = (0..1000).map(|i| ((i % 100) as f64 - 49.5) / 28.866).collect();
+        let a: Vec<f64> = n
+            .iter()
+            .enumerate()
+            .map(|(i, v)| v + if i % 2 == 0 { 0.1 } else { -0.1 })
+            .collect();
+        let snr = compute_snr_db(&n, &a);
+        assert!((snr - db10(variance(&n) / 0.01)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn enob_anchor() {
+        // 6-bit ideal quantizer ~ 37.9 dB
+        assert!((enob(37.88) - 6.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let xs = [0.1, 0.2, 0.55, 0.9, 1.5];
+        let h = histogram(&xs, 0.0, 1.0, 2);
+        assert_eq!(h, vec![2, 2]);
+    }
+}

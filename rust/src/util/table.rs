@@ -1,0 +1,132 @@
+//! ASCII table rendering for benchmark/report output — every regenerated
+//! paper table/figure prints through this so `EXPERIMENTS.md` rows can be
+//! pasted directly from program output.
+
+#[derive(Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str) -> Self {
+        Self { title: title.to_string(), ..Default::default() }
+    }
+
+    pub fn header(mut self, cols: &[&str]) -> Self {
+        self.header = cols.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                s.push_str(&format!(" {:<width$} |", cells[i], width = widths[i]));
+            }
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format helper: fixed decimals.
+pub fn f(v: f64, decimals: usize) -> String {
+    format!("{v:.decimals$}")
+}
+
+/// Format helper: engineering style with unit suffix.
+pub fn eng(v: f64, unit: &str) -> String {
+    let (scaled, prefix) = if v.abs() >= 1e9 {
+        (v / 1e9, "G")
+    } else if v.abs() >= 1e6 {
+        (v / 1e6, "M")
+    } else if v.abs() >= 1e3 {
+        (v / 1e3, "k")
+    } else if v.abs() >= 1.0 || v == 0.0 {
+        (v, "")
+    } else if v.abs() >= 1e-3 {
+        (v * 1e3, "m")
+    } else if v.abs() >= 1e-6 {
+        (v * 1e6, "u")
+    } else {
+        (v * 1e9, "n")
+    };
+    format!("{scaled:.3} {prefix}{unit}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo").header(&["col", "value"]);
+        t.row_strs(&["a", "1"]);
+        t.row_strs(&["long-name", "2.5"]);
+        let r = t.render();
+        assert!(r.contains("| long-name | 2.5   |"));
+        assert!(r.contains("== demo =="));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn arity_checked() {
+        let mut t = Table::new("x").header(&["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn eng_prefixes() {
+        assert_eq!(eng(2_600_000.0, "Ohm"), "2.600 MOhm");
+        assert_eq!(eng(0.0000026, "A"), "2.600 uA");
+        assert_eq!(eng(385_000.0, "Ohm"), "385.000 kOhm");
+    }
+}

@@ -1,0 +1,104 @@
+//! End-to-end DNN integration (paper §VII-C): train -> quantize -> map to
+//! CIM tiles -> run on an errorful die -> calibrate -> accuracy ladder.
+//! Small sizes keep this under test-time budgets; the full-size run lives
+//! in `examples/mnist_e2e.rs` and benches/dnn_accuracy.
+
+use acore_cim::analog::variation::VariationSample;
+use acore_cim::analog::{consts as c, CimAnalogModel};
+use acore_cim::config::SimConfig;
+use acore_cim::coordinator::bisc::{AdcCharacterization, BiscEngine};
+use acore_cim::coordinator::dnn::CimMlp;
+use acore_cim::data::mlp::{train, Mlp, QuantMlp, TrainConfig};
+use acore_cim::data::synth;
+
+fn trained_pipeline() -> (CimMlp, synth::Dataset) {
+    let (train_ds, test_ds) = synth::generate(800, 200, 23);
+    let mut mlp = Mlp::new(2);
+    train(&mut mlp, &train_ds, &TrainConfig { epochs: 8, ..Default::default() });
+    let q = QuantMlp::from_float(&mlp, &train_ds, 100);
+    (CimMlp::new(q, &train_ds, 60), test_ds)
+}
+
+#[test]
+fn accuracy_ladder_reproduces_paper_shape() {
+    let (mut cim_mlp, test_ds) = trained_pipeline();
+    let n = 100;
+
+    // "simulation" row: the digital quantized reference
+    let acc_sim = cim_mlp.quant.accuracy_digital(&test_ds);
+
+    // uncalibrated silicon
+    let cfg = SimConfig::default();
+    let sample = VariationSample::draw(&cfg);
+    let mut die = CimAnalogModel::from_sample(&cfg, &sample);
+    let (acc_uncal, _) = cim_mlp.accuracy(&mut die, &test_ds, n);
+
+    // BISC (cascaded full-range + operating point) + digital residual trim
+    let half = c::V_BIAS - cim_mlp.refs1.0;
+    BiscEngine::calibrate_for_workload(
+        &cfg,
+        AdcCharacterization::ideal(),
+        &mut die,
+        half,
+    );
+    let (acc_bisc, _) = cim_mlp.accuracy(&mut die, &test_ds, n);
+    cim_mlp.measure_digital_trim(&mut die, &cfg);
+    let (acc_full, _) = cim_mlp.accuracy(&mut die, &test_ds, n);
+
+    println!(
+        "accuracy ladder: sim {acc_sim:.3} | uncal {acc_uncal:.3} | \
+         BISC {acc_bisc:.3} | BISC+trim {acc_full:.3}"
+    );
+    // paper shape: sim >= cal > uncal, calibration recovers most of the gap
+    assert!(acc_sim > 0.8, "sim {acc_sim}");
+    assert!(acc_uncal < acc_sim - 0.05, "errors should degrade: {acc_uncal}");
+    assert!(acc_bisc >= acc_uncal, "BISC must not hurt");
+    assert!(
+        acc_full > acc_sim - 0.07,
+        "calibration should recover to near-sim: {acc_full} vs {acc_sim}"
+    );
+    assert!(acc_full > acc_uncal + 0.1, "recovery too small");
+}
+
+#[test]
+fn zero_point_baseline_then_bisc_matches_paper_shape() {
+    // The paper's "uncalibrated" chip still runs at 88.7% — our equivalent
+    // bring-up baseline is zero-point subtraction (offsets removed
+    // digitally, gains untouched). BISC then also fixes the gains — in the
+    // *analog* domain — closing most of the remaining gap (92.33%).
+    let (mut cim_mlp, test_ds) = trained_pipeline();
+    let n = 100;
+    let acc_sim = cim_mlp.quant.accuracy_digital(&test_ds);
+
+    let cfg = SimConfig::default();
+    let sample = VariationSample::draw(&cfg);
+    let mut die = CimAnalogModel::from_sample(&cfg, &sample);
+    let (acc_raw, _) = cim_mlp.accuracy(&mut die, &test_ds, n);
+
+    cim_mlp.measure_zero_point(&mut die);
+    let (acc_zp, _) = cim_mlp.accuracy(&mut die, &test_ds, n);
+
+    let half = c::V_BIAS - cim_mlp.refs1.0;
+    BiscEngine::calibrate_for_workload(&cfg, AdcCharacterization::ideal(), &mut die, half);
+    cim_mlp.clear_corrections();
+    cim_mlp.measure_digital_trim(&mut die, &cfg);
+    let (acc_cal, _) = cim_mlp.accuracy(&mut die, &test_ds, n);
+
+    println!(
+        "ladder: sim {acc_sim:.3} | raw {acc_raw:.3} | zero-point {acc_zp:.3} | BISC {acc_cal:.3}"
+    );
+    assert!(acc_zp > acc_raw, "zero-point should rescue the collapse");
+    assert!(acc_zp > 0.3, "zero-point baseline functional: {acc_zp}");
+    assert!(acc_cal > acc_zp - 0.02, "BISC at least as good as zero-point");
+    assert!(acc_cal > acc_sim - 0.08, "BISC recovers to near-sim");
+}
+
+#[test]
+fn stats_track_tile_schedule() {
+    let (cim_mlp, test_ds) = trained_pipeline();
+    let mut die = CimAnalogModel::ideal();
+    let (_, stats) = cim_mlp.accuracy(&mut die, &test_ds, 5);
+    // 22*3 layer-1 tiles + 2*1 layer-2 tiles per image
+    assert_eq!(stats.mac_ops, 5 * (22 * 3 + 2));
+    assert_eq!(stats.reprograms, stats.mac_ops);
+}

@@ -1,0 +1,143 @@
+//! Cross-layer parity: the rust golden analog model (L3) and the AOT
+//! JAX/Pallas artifact executed via PJRT (L1/L2) must realize the SAME
+//! transfer function for identical die parameters, weights, trims, and
+//! ADC references. Tolerance is one ADC code on a small fraction of
+//! entries (f32 vs f64 rounding exactly at .5 boundaries).
+//!
+//! Requires `make artifacts` to have run (skips with a message otherwise).
+
+use acore_cim::analog::variation::VariationSample;
+use acore_cim::analog::{consts as c, CimAnalogModel};
+use acore_cim::config::SimConfig;
+use acore_cim::runtime::{CimRuntime, Executor, Manifest};
+use acore_cim::util::rng::Rng;
+
+fn manifest() -> Option<Manifest> {
+    Manifest::discover().ok()
+}
+
+fn random_weights(rng: &mut Rng) -> Vec<i32> {
+    (0..c::N_ROWS * c::M_COLS).map(|_| rng.int_in(-63, 63) as i32).collect()
+}
+
+fn random_inputs(rng: &mut Rng, batch: usize) -> Vec<i32> {
+    (0..batch * c::N_ROWS).map(|_| rng.int_in(-63, 63) as i32).collect()
+}
+
+fn compare(model_q: &[u32], runtime_q: &[u32]) -> (i64, f64) {
+    let max_diff = model_q
+        .iter()
+        .zip(runtime_q)
+        .map(|(&a, &b)| (a as i64 - b as i64).abs())
+        .max()
+        .unwrap();
+    let frac_diff = model_q
+        .iter()
+        .zip(runtime_q)
+        .filter(|(a, b)| a != b)
+        .count() as f64
+        / model_q.len() as f64;
+    (max_diff, frac_diff)
+}
+
+#[test]
+fn artifact_matches_golden_model_ideal_die() {
+    let Some(m) = manifest() else {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return;
+    };
+    let exec = Executor::new(m).unwrap();
+    let sample = VariationSample::ideal();
+    let mut rt = CimRuntime::new(exec, sample.clone());
+    let mut cfg = SimConfig::default().scaled(0.0);
+    cfg.sigma_noise = 0.0;
+    let mut golden = CimAnalogModel::from_sample(&cfg, &sample);
+
+    let mut rng = Rng::new(101);
+    let w = random_weights(&mut rng);
+    rt.program(&w);
+    golden.program(&w);
+    let batch = 32;
+    let x = random_inputs(&mut rng, batch);
+    let q_rt = rt.forward_batch(&x, batch).unwrap();
+    let q_gold = golden.forward_batch(&x, batch);
+    let (max_diff, frac) = compare(&q_gold, &q_rt);
+    assert!(max_diff <= 1, "max code diff {max_diff}");
+    assert!(frac < 0.02, "fraction differing {frac}");
+}
+
+#[test]
+fn artifact_matches_golden_model_noisy_die_with_trims() {
+    let Some(m) = manifest() else {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return;
+    };
+    let mut cfg = SimConfig::default();
+    cfg.seed = 0xD1E;
+    cfg.sigma_noise = 0.0;
+    let sample = VariationSample::draw(&cfg);
+    let exec = Executor::new(m).unwrap();
+    let mut rt = CimRuntime::new(exec, sample.clone());
+    let mut golden = CimAnalogModel::from_sample(&cfg, &sample);
+
+    let mut rng = Rng::new(77);
+    let w = random_weights(&mut rng);
+    rt.program(&w);
+    golden.program(&w);
+
+    // non-trivial trims + widened refs on BOTH sides
+    for col in 0..c::M_COLS {
+        let pot_p = 100 + (col as u32 * 3) % 100;
+        let pot_n = 90 + (col as u32 * 5) % 120;
+        let cal = (col as u32) % 64;
+        golden.set_trims(col, pot_p, pot_n, cal);
+        rt.trims.pot_p[col] = pot_p;
+        rt.trims.pot_n[col] = pot_n;
+        rt.trims.cal[col] = cal;
+    }
+    golden.set_adc_refs(0.184, 0.648);
+    rt.adc_refs = (0.184, 0.648);
+
+    let batch = 64;
+    let x = random_inputs(&mut rng, batch);
+    let q_rt = rt.forward_batch(&x, batch).unwrap();
+    let q_gold = golden.forward_batch(&x, batch);
+    let (max_diff, frac) = compare(&q_gold, &q_rt);
+    assert!(max_diff <= 1, "max code diff {max_diff}");
+    assert!(frac < 0.03, "fraction differing {frac}");
+}
+
+#[test]
+fn batch_padding_is_transparent() {
+    let Some(m) = manifest() else {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return;
+    };
+    let exec = Executor::new(m).unwrap();
+    let mut rt = CimRuntime::new(exec, VariationSample::ideal());
+    let mut rng = Rng::new(5);
+    let w = random_weights(&mut rng);
+    rt.program(&w);
+    // batch 3 pads to the b8 artifact; results must match per-sample runs
+    let x = random_inputs(&mut rng, 3);
+    let q3 = rt.forward_batch(&x, 3).unwrap();
+    for b in 0..3 {
+        let q1 = rt
+            .forward_batch(&x[b * c::N_ROWS..(b + 1) * c::N_ROWS], 1)
+            .unwrap();
+        assert_eq!(&q3[b * c::M_COLS..(b + 1) * c::M_COLS], &q1[..]);
+    }
+}
+
+#[test]
+fn executor_rejects_bad_shapes() {
+    let Some(m) = manifest() else {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return;
+    };
+    let mut exec = Executor::new(m).unwrap();
+    use acore_cim::runtime::TensorF32;
+    let bad = vec![TensorF32::new(vec![0.0; 4], &[2, 2])];
+    assert!(exec.run("cim_mac_b1", &bad).is_err());
+    assert!(exec.run("no_such_artifact", &[]).is_err());
+}

@@ -1,0 +1,163 @@
+//! SoC-level integration: the RV32IM core driving the CIM device over
+//! AXI4-Lite — firmware-controlled MAC, the full BISC routine, cycle
+//! accounting for the Table II system-throughput ratio.
+
+use acore_cim::analog::variation::VariationSample;
+use acore_cim::analog::{consts as c, CimAnalogModel};
+use acore_cim::config::SimConfig;
+use acore_cim::coordinator::bisc::{AdcCharacterization, BiscEngine};
+use acore_cim::coordinator::cim_core::regs;
+use acore_cim::soc::firmware;
+use acore_cim::soc::memmap::{map, Soc};
+use acore_cim::soc::riscv::asm::Asm;
+use acore_cim::soc::riscv::cpu::Halt;
+
+#[test]
+fn firmware_mac_loop_throughput_accounting() {
+    // firmware: feed inputs, run K MACs, read outputs — measures the
+    // paper's "full system" path (input generation + weight updates +
+    // output reading via the RISC-V core), Table II's 113 -> 3.05 1b-GOPS
+    let mut soc = Soc::new(CimAnalogModel::ideal());
+    soc.cim_mut().program_weights(&vec![21; c::N_ROWS * c::M_COLS]);
+    let k_macs = 50;
+    let mut a = Asm::new(map::ENTRY);
+    a.li(5, map::CIM_BASE as i32);
+    a.li(9, k_macs); // loop counter
+    a.label("mac_loop");
+    // write 36 inputs
+    a.li(6, 17);
+    a.li(7, 0);
+    a.li(28, (map::CIM_BASE + regs::INPUT) as i32);
+    a.label("in_loop");
+    a.sw(28, 6, 0);
+    a.addi(28, 28, 4);
+    a.addi(7, 7, 1);
+    a.li(31, c::N_ROWS as i32);
+    a.blt(7, 31, "in_loop");
+    // fire MAC
+    a.li(6, 1);
+    a.sw(5, 6, regs::CTRL as i32);
+    // read all 32 outputs (accumulate into x29 so reads aren't dead)
+    a.li(7, 0);
+    a.li(28, (map::CIM_BASE + regs::OUT) as i32);
+    a.label("out_loop");
+    a.lw(6, 28, 0);
+    a.add(29, 29, 6);
+    a.addi(28, 28, 4);
+    a.addi(7, 7, 1);
+    a.li(31, c::M_COLS as i32);
+    a.blt(7, 31, "out_loop");
+    a.addi(9, 9, -1);
+    a.bne(9, 0, "mac_loop");
+    a.li(10, 0);
+    a.exit();
+    soc.load_program(&a.assemble());
+    let halt = soc.run(10_000_000);
+    assert_eq!(halt, Halt::Exit(0));
+    assert_eq!(soc.cim_mut().mac_count(), k_macs as u32);
+
+    // system slowdown: CPU cycles per MAC vs the 1-cycle analog MAC —
+    // this ratio feeds power::system_metrics (paper: ~37x)
+    let cycles_per_mac = soc.cpu.cycles as f64 / k_macs as f64;
+    assert!(
+        cycles_per_mac > 20.0 && cycles_per_mac < 2000.0,
+        "cycles/MAC = {cycles_per_mac}"
+    );
+    println!("system slowdown: {cycles_per_mac:.1} CPU cycles per CIM MAC");
+}
+
+#[test]
+fn bisc_firmware_end_to_end_improves_accuracy_of_device() {
+    // run the BISC firmware on a noisy die, then verify the device's
+    // transfer is closer to nominal than before
+    let mut cfg = SimConfig::default();
+    cfg.seed = 0x50C;
+    cfg.sigma_noise = 0.0;
+    let sample = VariationSample::draw(&cfg);
+
+    let residual = |soc: &mut Soc| -> f64 {
+        let dev = soc.cim_mut();
+        dev.program_weights(&vec![c::CODE_MAX; c::N_ROWS * c::M_COLS]);
+        let mut err = 0.0;
+        let k = c::code_gain_nominal();
+        let mid = c::q_mid_nominal();
+        for x in [-40i32, -20, 0, 20, 40] {
+            let q = dev.model.forward_batch(&vec![x; c::N_ROWS], 1);
+            let nom = mid + k * (x as f64 * 63.0 * c::N_ROWS as f64);
+            for col in 0..c::M_COLS {
+                err += (q[col] as f64 - nom).abs();
+            }
+        }
+        err / (5.0 * c::M_COLS as f64)
+    };
+
+    let mut soc = Soc::new(CimAnalogModel::from_sample(&cfg, &sample));
+    let before = residual(&mut soc);
+    soc.load_program(&firmware::bisc_program());
+    soc.write_words(
+        map::PARAM_BLOCK,
+        &firmware::bisc_param_block(&cfg, AdcCharacterization::ideal()),
+    );
+    let halt = soc.run(1_000_000_000);
+    assert_eq!(halt, Halt::Exit(0), "BISC firmware failed: {halt:?}");
+    let after = residual(&mut soc);
+    assert!(
+        after < before * 0.5,
+        "BISC firmware: residual {before:.2} -> {after:.2} codes"
+    );
+    println!("BISC firmware: mean |error| {before:.2} -> {after:.2} codes");
+    let (instret, cycles) = (soc.cpu.instret, soc.cpu.cycles);
+    println!(
+        "BISC firmware: {} instructions, {} cycles, {} MAC reads",
+        instret,
+        cycles,
+        soc.cim_mut().mac_count()
+    );
+}
+
+#[test]
+fn bisc_firmware_latency_budget() {
+    // Alg. 1 overhead: the calibration must complete within a practical
+    // budget (paper: "real-time", run between workloads). At 50 MHz the
+    // firmware must finish in well under a second of SoC time.
+    let mut cfg = SimConfig::default();
+    cfg.sigma_noise = 0.0;
+    let sample = VariationSample::draw(&cfg);
+    let mut soc = Soc::new(CimAnalogModel::from_sample(&cfg, &sample));
+    soc.load_program(&firmware::bisc_program());
+    soc.write_words(
+        map::PARAM_BLOCK,
+        &firmware::bisc_param_block(&cfg, AdcCharacterization::ideal()),
+    );
+    assert_eq!(soc.run(1_000_000_000), Halt::Exit(0));
+    let cpu_cycles = soc.cpu.cycles;
+    let analog_sh = soc.cim_mut().busy_sh_periods();
+    // SoC wall time at 50 MHz CPU + 1 us per analog S&H period
+    let wall_s = cpu_cycles as f64 / 50e6 + analog_sh as f64 * c::T_SH;
+    println!(
+        "BISC latency: {cpu_cycles} CPU cycles + {analog_sh} S&H periods = {:.1} ms @50MHz",
+        wall_s * 1e3
+    );
+    assert!(wall_s < 1.0, "calibration too slow: {wall_s} s");
+
+    // host engine predicts the analog read count
+    let engine = BiscEngine::from_config(&cfg, AdcCharacterization::ideal());
+    assert_eq!(analog_sh, engine.latency_sh_periods());
+}
+
+#[test]
+fn gpio_and_uart_coexist_with_cim() {
+    let mut soc = Soc::new(CimAnalogModel::ideal());
+    let mut a = Asm::new(map::ENTRY);
+    a.li(5, map::GPIO_BASE as i32);
+    a.li(6, 0x5A);
+    a.sw(5, 6, 0);
+    a.li(5, map::UART_BASE as i32);
+    a.li(6, 'B' as i32);
+    a.sw(5, 6, 0);
+    a.li(10, 0);
+    a.exit();
+    soc.load_program(&a.assemble());
+    assert_eq!(soc.run(1000), Halt::Exit(0));
+    assert_eq!(soc.uart_mut().tx_string(), "B");
+}
