@@ -1,20 +1,93 @@
 //! Performance benchmarks for the hot paths (EXPERIMENTS.md §Perf):
 //!   L3 golden per-cell path vs folded fast path (analog model),
-//!   PJRT artifact throughput vs batch size (per-sample amortization),
+//!   runtime backend throughput (PJRT artifact with `--features pjrt`,
+//!     golden-model fallback otherwise),
 //!   RV32IM ISS instruction rate,
-//!   BISC calibration wall time,
-//!   batcher request throughput.
+//!   BISC calibration wall time (single die + parallel cluster),
+//!   batcher request throughput,
+//!   multi-core cluster serving throughput at K = 1, 2, 4, 8.
 
 use acore_cim::analog::variation::VariationSample;
 use acore_cim::analog::{consts as c, CimAnalogModel};
 use acore_cim::config::SimConfig;
 use acore_cim::coordinator::bisc::{AdcCharacterization, BiscEngine};
+use acore_cim::coordinator::cluster::CimCluster;
 use acore_cim::soc::memmap::{map, Soc};
 use acore_cim::soc::riscv::asm::Asm;
 use acore_cim::util::bench::Bencher;
 use acore_cim::util::rng::Rng;
 
+/// Drive `n_requests` through a K-core cluster with `k` pipelined
+/// producer threads; returns requests/second.
+fn cluster_throughput(cfg: &SimConfig, k: usize, n_requests: usize) -> f64 {
+    use acore_cim::coordinator::batcher::Batcher;
+    let mut cluster = CimCluster::new(cfg, k);
+    cluster.program_all(&vec![40; c::N_ROWS * c::M_COLS]);
+    let server = cluster.serve(Batcher::default());
+    let t0 = std::time::Instant::now();
+    let producers = k;
+    let per_producer = n_requests / producers;
+    let mut joins = Vec::new();
+    for p in 0..producers {
+        let client = server.client();
+        joins.push(std::thread::spawn(move || {
+            client
+                .mac_pipelined(per_producer, 512, |i| {
+                    vec![((p + i) % 63) as i32 - 31; c::N_ROWS]
+                })
+                .expect("serving failed");
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let (_cluster, stats) = server.join();
+    let dt = t0.elapsed().as_secs_f64();
+    let total: u64 = stats.iter().map(|s| s.requests).sum();
+    assert_eq!(total as usize, per_producer * producers, "lost requests");
+    total as f64 / dt
+}
+
+/// PJRT artifact throughput (only with `--features pjrt` + artifacts).
+#[cfg(feature = "pjrt")]
+fn pjrt_bench(
+    b: &mut Bencher,
+    sample: &VariationSample,
+    weights: &[i32],
+    x1: &[i32],
+    x256: &[i32],
+) {
+    match acore_cim::runtime::Executor::discover() {
+        Ok(exec) => {
+            let mut rt = acore_cim::runtime::CimRuntime::new(exec, sample.clone());
+            rt.program(weights);
+            // warm the compile caches outside the timed region
+            let _ = rt.forward_batch(x1, 1).unwrap();
+            let _ = rt.forward_batch(x256, 256).unwrap();
+            let rb1 =
+                b.bench("pjrt cim_mac (batch 1)", || rt.forward_batch(x1, 1).unwrap()).clone();
+            let rb256 = b
+                .bench("pjrt cim_mac (batch 256)", || rt.forward_batch(x256, 256).unwrap())
+                .clone();
+            println!(
+                "   => per-eval: {:.1} us (b1) vs {:.2} us (b256) — batching {:.0}x",
+                rb1.median_ns / 1e3,
+                rb256.median_ns / 1e3 / 256.0,
+                rb1.median_ns / (rb256.median_ns / 256.0)
+            );
+        }
+        Err(e) => println!("skipping PJRT benches: {e}"),
+    }
+}
+
+/// Default build: the fallback-runtime bench above already covers it.
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_bench(_b: &mut Bencher, _s: &VariationSample, _w: &[i32], _x1: &[i32], _x256: &[i32]) {
+    println!("   (pjrt benches skipped: build with --features pjrt + artifacts)");
+}
+
 fn main() {
+    let fast = std::env::var("ACORE_BENCH_FAST").is_ok();
     let mut b = Bencher::new();
     let cfg = SimConfig::default();
     let sample = VariationSample::draw(&cfg);
@@ -38,28 +111,25 @@ fn main() {
         r1.median_ns / (r256.median_ns / 256.0)
     );
 
-    println!("\n== L1/L2 PJRT artifact (compiled JAX/Pallas) ==");
-    match acore_cim::runtime::Executor::discover() {
-        Ok(exec) => {
-            let mut rt = acore_cim::runtime::CimRuntime::new(exec, sample.clone());
-            rt.program(&weights);
-            // warm the compile caches outside the timed region
-            let _ = rt.forward_batch(&x1, 1).unwrap();
-            let _ = rt.forward_batch(&x256, 256).unwrap();
-            let rb1 =
-                b.bench("pjrt cim_mac (batch 1)", || rt.forward_batch(&x1, 1).unwrap()).clone();
-            let rb256 = b
-                .bench("pjrt cim_mac (batch 256)", || rt.forward_batch(&x256, 256).unwrap())
-                .clone();
-            println!(
-                "   => per-eval: {:.1} us (b1) vs {:.2} us (b256) — batching {:.0}x",
-                rb1.median_ns / 1e3,
-                rb256.median_ns / 1e3 / 256.0,
-                rb1.median_ns / (rb256.median_ns / 256.0)
-            );
-        }
-        Err(e) => println!("skipping PJRT benches: {e}"),
+    println!("\n== runtime backend (CimRuntime) ==");
+    {
+        // golden-model fallback: always available, measures the register-
+        // sync + refold overhead the fallback pays per call
+        let mut rt = acore_cim::runtime::CimRuntime::golden(sample.clone());
+        rt.program(&weights);
+        let rb1 = b
+            .bench("fallback runtime (batch 1)", || rt.forward_batch(&x1, 1).unwrap())
+            .clone();
+        let rb256 = b
+            .bench("fallback runtime (batch 256)", || rt.forward_batch(&x256, 256).unwrap())
+            .clone();
+        println!(
+            "   => per-eval: {:.2} us (b1) vs {:.3} us (b256); backend: golden fallback",
+            rb1.median_ns / 1e3,
+            rb256.median_ns / 1e3 / 256.0
+        );
     }
+    pjrt_bench(&mut b, &sample, &weights, &x1, &x256);
 
     println!("\n== DNN inference (tile scheduler) ==");
     {
@@ -116,15 +186,27 @@ fn main() {
     let mips = 6.0e6 / (r.median_ns / 1e9) / 1e6;
     println!("   => {mips:.0} MIPS");
 
-    println!("\n== BISC calibration wall time (host engine) ==");
+    println!("\n== BISC calibration wall time ==");
     let engine = BiscEngine::from_config(&cfg, AdcCharacterization::ideal());
-    let r = b.bench_n("BISC full-array calibrate", 5, || {
-        let mut m = CimAnalogModel::from_sample(&cfg, &sample);
-        engine.calibrate(&mut m)
-    });
+    let r = b
+        .bench_n("BISC full-array calibrate (1 die)", 5, || {
+            let mut m = CimAnalogModel::from_sample(&cfg, &sample);
+            engine.calibrate(&mut m)
+        })
+        .clone();
     println!("   => {:.1} ms per full calibration", r.median_ns / 1e6);
+    let rc = b.bench_n("parallel BISC (4-core cluster)", 3, || {
+        let mut cluster = CimCluster::new(&cfg, 4);
+        cluster.calibrate_parallel(&engine);
+        cluster.total_calibration_reads()
+    });
+    println!(
+        "   => {:.1} ms wall for 4 dies ({:.1}x the single-die time, ideal 1.0x)",
+        rc.median_ns / 1e6,
+        rc.median_ns / r.median_ns
+    );
 
-    println!("\n== batcher ==");
+    println!("\n== batcher (single worker) ==");
     use acore_cim::coordinator::batcher::{Batcher, MacRequest};
     use std::sync::mpsc::channel;
     let r = b.bench_n("batched serving: 2000 requests", 5, || {
@@ -144,7 +226,7 @@ fn main() {
             replies.push(rrx);
         }
         for rr in replies {
-            rr.recv().unwrap();
+            rr.recv().unwrap().expect("request failed");
         }
         drop(tx);
         worker.join().unwrap()
@@ -152,5 +234,29 @@ fn main() {
     println!(
         "   => {:.0}k requests/s through the batcher",
         2000.0 / (r.median_ns / 1e9) / 1e3
+    );
+
+    println!("\n== multi-core cluster serving (scatter-gather) ==");
+    let n_requests = if fast { 20_000 } else { 80_000 };
+    let mut rps1 = 0.0;
+    for k in [1usize, 2, 4, 8] {
+        // one warmup + median of 3 runs
+        let _ = cluster_throughput(&cfg, k, n_requests / 4);
+        let mut runs: Vec<f64> =
+            (0..3).map(|_| cluster_throughput(&cfg, k, n_requests)).collect();
+        runs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rps = runs[1];
+        if k == 1 {
+            rps1 = rps;
+        }
+        println!(
+            "K = {k}: {:>10.0} MAC-requests/s  ({:.2}x vs K=1)",
+            rps,
+            rps / rps1
+        );
+    }
+    println!(
+        "   (host has {} CPUs; scaling saturates at the physical core count)",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     );
 }

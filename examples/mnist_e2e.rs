@@ -73,33 +73,46 @@ fn main() {
     );
 
     // optional: run a batch through the PJRT artifact to prove the same
-    // numbers come out of the compiled JAX/Pallas path
+    // numbers come out of the compiled JAX/Pallas path (requires building
+    // with `--features pjrt`; the default build only has the fallback)
     if use_pjrt {
-        use acore_cim::runtime::{CimRuntime, Executor};
-        println!("\n--pjrt: cross-checking a weight tile on the PJRT artifact ...");
-        let exec = Executor::discover().expect("run `make artifacts`");
-        println!("PJRT platform: {}", exec.platform());
-        let mut rt = CimRuntime::new(exec, sample.clone());
-        // mirror the die's calibrated trim state into the runtime
-        for col in 0..c::M_COLS {
-            let amp = &die.amps[col];
-            rt.trims.pot_p[col] = amp.pot_p;
-            rt.trims.pot_n[col] = amp.pot_n;
-            rt.trims.cal[col] = amp.cal;
-        }
-        let tile = &cim_mlp.layer1.tiles[0][0];
-        rt.program(tile);
-        die.program(tile);
-        die.set_adc_refs(c::V_ADC_L, c::V_ADC_H);
-        let x: Vec<i32> = (0..8 * c::N_ROWS).map(|i| (i % 64) as i32 - 32).collect();
-        let q_rt = rt.forward_batch(&x, 8).unwrap();
-        let q_gold = die.forward_batch(&x, 8);
-        let diffs = q_rt.iter().zip(&q_gold).filter(|(a, b)| a != b).count();
-        println!(
-            "PJRT vs golden model: {}/{} codes differ (<= rounding ties)",
-            diffs,
-            q_rt.len()
-        );
-        assert!(diffs < q_rt.len() / 20);
+        pjrt_crosscheck(&sample, &mut die, &cim_mlp);
     }
+}
+
+/// Cross-check one calibrated weight tile on the compiled artifact.
+#[cfg(feature = "pjrt")]
+fn pjrt_crosscheck(sample: &VariationSample, die: &mut CimAnalogModel, cim_mlp: &CimMlp) {
+    use acore_cim::runtime::{CimRuntime, Executor};
+    println!("\n--pjrt: cross-checking a weight tile on the PJRT artifact ...");
+    let exec = Executor::discover().expect("run `make artifacts`");
+    println!("PJRT platform: {}", exec.platform());
+    let mut rt = CimRuntime::new(exec, sample.clone());
+    // mirror the die's calibrated trim state into the runtime
+    for col in 0..c::M_COLS {
+        let amp = &die.amps[col];
+        rt.trims.pot_p[col] = amp.pot_p;
+        rt.trims.pot_n[col] = amp.pot_n;
+        rt.trims.cal[col] = amp.cal;
+    }
+    let tile = &cim_mlp.layer1.tiles[0][0];
+    rt.program(tile);
+    die.program(tile);
+    die.set_adc_refs(c::V_ADC_L, c::V_ADC_H);
+    let x: Vec<i32> = (0..8 * c::N_ROWS).map(|i| (i % 64) as i32 - 32).collect();
+    let q_rt = rt.forward_batch(&x, 8).unwrap();
+    let q_gold = die.forward_batch(&x, 8);
+    let diffs = q_rt.iter().zip(&q_gold).filter(|(a, b)| a != b).count();
+    println!(
+        "PJRT vs golden model: {}/{} codes differ (<= rounding ties)",
+        diffs,
+        q_rt.len()
+    );
+    assert!(diffs < q_rt.len() / 20);
+}
+
+/// Default-build stand-in: explain how to enable the PJRT cross-check.
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_crosscheck(_sample: &VariationSample, _die: &mut CimAnalogModel, _cim_mlp: &CimMlp) {
+    println!("\n--pjrt ignored: rebuild with --features pjrt (needs xla_extension)");
 }

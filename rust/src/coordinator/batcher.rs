@@ -1,21 +1,57 @@
 //! Request batcher: aggregates MAC requests from concurrent clients into
-//! array-sized batches for the PJRT (or golden-model) backend — the
-//! serving-layer role of the coordinator (cf. vllm-style routers, scaled
-//! to this accelerator: one physical array, batched pulses).
+//! array-sized batches for the backend — the serving-layer role of the
+//! coordinator (cf. vllm-style routers, scaled to this accelerator:
+//! batched pulses on a physical array). The multi-array scatter-gather
+//! layer on top of this lives in [`crate::coordinator::cluster`].
 //!
 //! Design: submitters push `MacRequest`s over an mpsc channel; the worker
 //! drains up to `max_batch` requests (waiting up to `max_wait` for the
 //! first), executes them as one batched forward, and answers each client
 //! over its own return channel. std threads + channels (tokio is not
 //! vendored; the workload is CPU-bound anyway).
+//!
+//! Failure handling: a malformed request (wrong input length) is rejected
+//! with [`ServeError::BadRequest`] on its own reply channel — it must
+//! never kill the worker and strand every other queued client. A client
+//! whose worker has shut down gets [`ServeError::Disconnected`] instead
+//! of a panic.
 
 use crate::analog::consts as c;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::time::Duration;
 
+/// Serving-layer errors surfaced to clients.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The request was rejected before evaluation (e.g. wrong input size).
+    BadRequest { expected: usize, got: usize },
+    /// The backend failed to evaluate the batch (worker stays alive; the
+    /// whole batch is answered with this error).
+    Backend(String),
+    /// The serving worker has shut down (channel closed mid-flight).
+    Disconnected,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::BadRequest { expected, got } => {
+                write!(f, "bad MAC request: expected {expected} input codes, got {got}")
+            }
+            ServeError::Backend(msg) => write!(f, "backend failed: {msg}"),
+            ServeError::Disconnected => write!(f, "serving worker disconnected"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// What a client receives back for one MAC request.
+pub type MacReply = Result<Vec<u32>, ServeError>;
+
 pub struct MacRequest {
     pub x: Vec<i32>,
-    pub reply: Sender<Vec<u32>>,
+    pub reply: Sender<MacReply>,
 }
 
 /// Statistics from a batcher run.
@@ -24,6 +60,9 @@ pub struct BatcherStats {
     pub requests: u64,
     pub batches: u64,
     pub max_batch_seen: usize,
+    /// requests answered with an error instead of a result — malformed
+    /// requests and members of a failed batch (not counted in `requests`)
+    pub rejected: u64,
 }
 
 impl BatcherStats {
@@ -34,26 +73,36 @@ impl BatcherStats {
             self.requests as f64 / self.batches as f64
         }
     }
+
+    /// Fold another worker's statistics into this one (cluster gather).
+    pub fn merge(&mut self, other: &BatcherStats) {
+        self.requests += other.requests;
+        self.batches += other.batches;
+        self.max_batch_seen = self.max_batch_seen.max(other.max_batch_seen);
+        self.rejected += other.rejected;
+    }
 }
 
-/// A backend that evaluates batches of MAC requests.
+/// A backend that evaluates batches of MAC requests. A failed batch is an
+/// `Err` — the batcher answers every request in it with
+/// [`ServeError::Backend`] and keeps serving.
 pub trait MacBackend {
-    fn forward_batch(&mut self, x: &[i32], batch: usize) -> Vec<u32>;
+    fn forward_batch(&mut self, x: &[i32], batch: usize) -> Result<Vec<u32>, String>;
 }
 
 impl MacBackend for crate::analog::CimAnalogModel {
-    fn forward_batch(&mut self, x: &[i32], batch: usize) -> Vec<u32> {
-        crate::analog::CimAnalogModel::forward_batch(self, x, batch)
+    fn forward_batch(&mut self, x: &[i32], batch: usize) -> Result<Vec<u32>, String> {
+        Ok(crate::analog::CimAnalogModel::forward_batch(self, x, batch))
     }
 }
 
 impl MacBackend for crate::runtime::CimRuntime {
-    fn forward_batch(&mut self, x: &[i32], batch: usize) -> Vec<u32> {
-        crate::runtime::CimRuntime::forward_batch(self, x, batch)
-            .expect("runtime backend failed")
+    fn forward_batch(&mut self, x: &[i32], batch: usize) -> Result<Vec<u32>, String> {
+        crate::runtime::CimRuntime::forward_batch(self, x, batch).map_err(|e| e.0)
     }
 }
 
+#[derive(Debug, Clone, Copy)]
 pub struct Batcher {
     pub max_batch: usize,
     pub max_wait: Duration,
@@ -66,6 +115,20 @@ impl Default for Batcher {
 }
 
 impl Batcher {
+    /// Validate a request; reject it on its own reply channel if malformed.
+    /// Returns the request back when it is well-formed.
+    fn admit(r: MacRequest, stats: &mut BatcherStats) -> Option<MacRequest> {
+        if r.x.len() == c::N_ROWS {
+            Some(r)
+        } else {
+            stats.rejected += 1;
+            let _ = r
+                .reply
+                .send(Err(ServeError::BadRequest { expected: c::N_ROWS, got: r.x.len() }));
+            None
+        }
+    }
+
     /// Serve until the request channel closes. Returns run statistics.
     pub fn run<B: MacBackend>(&self, rx: Receiver<MacRequest>, backend: &mut B) -> BatcherStats {
         let mut stats = BatcherStats::default();
@@ -75,7 +138,10 @@ impl Batcher {
                 Ok(r) => r,
                 Err(_) => return stats,
             };
-            let mut pending = vec![first];
+            let mut pending = Vec::with_capacity(self.max_batch.min(64));
+            if let Some(r) = Self::admit(first, &mut stats) {
+                pending.push(r);
+            }
             // opportunistically drain more, up to max_batch / max_wait
             let deadline = std::time::Instant::now() + self.max_wait;
             while pending.len() < self.max_batch {
@@ -84,31 +150,48 @@ impl Batcher {
                     break;
                 }
                 match rx.recv_timeout(deadline - now) {
-                    Ok(r) => pending.push(r),
+                    Ok(r) => {
+                        if let Some(r) = Self::admit(r, &mut stats) {
+                            pending.push(r);
+                        }
+                    }
                     Err(RecvTimeoutError::Timeout) => break,
                     Err(RecvTimeoutError::Disconnected) => break,
                 }
+            }
+            if pending.is_empty() {
+                continue; // everything in this round was rejected
             }
             // assemble the batch
             let batch = pending.len();
             let mut x = Vec::with_capacity(batch * c::N_ROWS);
             for r in &pending {
-                assert_eq!(r.x.len(), c::N_ROWS, "request must be N codes");
                 x.extend_from_slice(&r.x);
             }
-            let q = backend.forward_batch(&x, batch);
-            for (i, r) in pending.into_iter().enumerate() {
-                let out = q[i * c::M_COLS..(i + 1) * c::M_COLS].to_vec();
-                let _ = r.reply.send(out); // client may have gone away
+            match backend.forward_batch(&x, batch) {
+                Ok(q) => {
+                    for (i, r) in pending.into_iter().enumerate() {
+                        let out = q[i * c::M_COLS..(i + 1) * c::M_COLS].to_vec();
+                        let _ = r.reply.send(Ok(out)); // client may have gone away
+                    }
+                    stats.requests += batch as u64;
+                    stats.batches += 1;
+                    stats.max_batch_seen = stats.max_batch_seen.max(batch);
+                }
+                Err(msg) => {
+                    // the batch failed, the worker survives: answer every
+                    // request with the backend error and keep serving
+                    for r in pending {
+                        let _ = r.reply.send(Err(ServeError::Backend(msg.clone())));
+                    }
+                    stats.rejected += batch as u64;
+                }
             }
-            stats.requests += batch as u64;
-            stats.batches += 1;
-            stats.max_batch_seen = stats.max_batch_seen.max(batch);
         }
     }
 }
 
-/// Convenience client handle.
+/// Convenience client handle for a single worker channel.
 pub struct Client {
     tx: Sender<MacRequest>,
 }
@@ -118,12 +201,14 @@ impl Client {
         Self { tx }
     }
 
-    pub fn mac(&self, x: Vec<i32>) -> Vec<u32> {
+    /// Submit one MAC and wait for the reply. Never panics: a shut-down
+    /// worker surfaces as `Err(ServeError::Disconnected)`.
+    pub fn mac(&self, x: Vec<i32>) -> Result<Vec<u32>, ServeError> {
         let (reply_tx, reply_rx) = channel();
         self.tx
             .send(MacRequest { x, reply: reply_tx })
-            .expect("batcher gone");
-        reply_rx.recv().expect("batcher dropped reply")
+            .map_err(|_| ServeError::Disconnected)?;
+        reply_rx.recv().map_err(|_| ServeError::Disconnected)?
     }
 }
 
@@ -150,7 +235,7 @@ mod tests {
     fn single_client_roundtrip() {
         let (tx, handle) = spawn_batcher(Batcher::default());
         let client = Client::new(tx.clone());
-        let q = client.mac(vec![30; c::N_ROWS]);
+        let q = client.mac(vec![30; c::N_ROWS]).unwrap();
         assert_eq!(q.len(), c::M_COLS);
         // matches a direct evaluation
         let mut model = CimAnalogModel::ideal();
@@ -179,7 +264,7 @@ mod tests {
                 for _ in 0..20 {
                     let x: Vec<i32> =
                         (0..c::N_ROWS).map(|_| rng.int_in(-63, 63) as i32).collect();
-                    let q = client.mac(x.clone());
+                    let q = client.mac(x.clone()).unwrap();
                     // verify against an independent model
                     let mut model = CimAnalogModel::ideal();
                     model.program(&vec![40; c::N_ROWS * c::M_COLS]);
@@ -210,7 +295,7 @@ mod tests {
             replies.push(rrx);
         }
         for r in replies {
-            assert_eq!(r.recv().unwrap().len(), c::M_COLS);
+            assert_eq!(r.recv().unwrap().unwrap().len(), c::M_COLS);
         }
         drop(tx);
         let stats = handle.join().unwrap();
@@ -220,5 +305,104 @@ mod tests {
             stats.mean_batch()
         );
         assert!(stats.max_batch_seen > 4);
+    }
+
+    #[test]
+    fn malformed_request_rejected_without_killing_worker() {
+        let (tx, handle) = spawn_batcher(Batcher::default());
+        let client = Client::new(tx.clone());
+        // wrong input length: must come back as BadRequest, not a panic
+        let err = client.mac(vec![1; 3]).unwrap_err();
+        assert_eq!(err, ServeError::BadRequest { expected: c::N_ROWS, got: 3 });
+        // the worker must still be alive and serving
+        let q = client.mac(vec![30; c::N_ROWS]).unwrap();
+        assert_eq!(q.len(), c::M_COLS);
+        drop(client);
+        drop(tx);
+        let stats = handle.join().unwrap();
+        assert_eq!(stats.requests, 1);
+        assert_eq!(stats.rejected, 1);
+    }
+
+    #[test]
+    fn bad_request_inside_a_batch_spares_the_others() {
+        let (tx, handle) = spawn_batcher(Batcher {
+            max_batch: 64,
+            max_wait: Duration::from_millis(20),
+        });
+        let mut replies = Vec::new();
+        for i in 0..10 {
+            let (rtx, rrx) = channel();
+            let x = if i == 4 { vec![0; 7] } else { vec![10; c::N_ROWS] };
+            tx.send(MacRequest { x, reply: rtx }).unwrap();
+            replies.push(rrx);
+        }
+        for (i, r) in replies.into_iter().enumerate() {
+            let reply = r.recv().unwrap();
+            if i == 4 {
+                assert!(matches!(reply, Err(ServeError::BadRequest { .. })));
+            } else {
+                assert_eq!(reply.unwrap().len(), c::M_COLS);
+            }
+        }
+        drop(tx);
+        let stats = handle.join().unwrap();
+        assert_eq!(stats.requests, 9);
+        assert_eq!(stats.rejected, 1);
+    }
+
+    /// Backend that fails its first batch, then recovers.
+    struct FlakyBackend {
+        fail: bool,
+    }
+
+    impl MacBackend for FlakyBackend {
+        fn forward_batch(&mut self, _x: &[i32], batch: usize) -> Result<Vec<u32>, String> {
+            if self.fail {
+                self.fail = false;
+                Err("transient backend failure".to_string())
+            } else {
+                Ok(vec![0; batch * c::M_COLS])
+            }
+        }
+    }
+
+    #[test]
+    fn backend_failure_answers_batch_and_keeps_serving() {
+        let (tx, rx) = channel::<MacRequest>();
+        let handle = std::thread::spawn(move || {
+            let mut backend = FlakyBackend { fail: true };
+            Batcher::default().run(rx, &mut backend)
+        });
+        let client = Client::new(tx.clone());
+        let err = client.mac(vec![0; c::N_ROWS]).unwrap_err();
+        assert_eq!(err, ServeError::Backend("transient backend failure".to_string()));
+        // the worker must survive a backend failure and serve the next batch
+        let q = client.mac(vec![0; c::N_ROWS]).unwrap();
+        assert_eq!(q.len(), c::M_COLS);
+        drop(client);
+        drop(tx);
+        let stats = handle.join().unwrap();
+        assert_eq!(stats.requests, 1);
+        assert_eq!(stats.rejected, 1);
+    }
+
+    #[test]
+    fn client_survives_worker_shutdown() {
+        let (tx, handle) = spawn_batcher(Batcher::default());
+        let client = Client::new(tx.clone());
+        drop(tx);
+        // answer one request, then shut the worker down by dropping the
+        // last sender (the client's own); a subsequent call must error.
+        let q = client.mac(vec![5; c::N_ROWS]).unwrap();
+        assert_eq!(q.len(), c::M_COLS);
+        drop(client);
+        let stats = handle.join().unwrap();
+        assert_eq!(stats.requests, 1);
+        // a client whose channel is already closed gets Disconnected
+        let (dead_tx, dead_rx) = channel::<MacRequest>();
+        drop(dead_rx);
+        let dead = Client::new(dead_tx);
+        assert_eq!(dead.mac(vec![5; c::N_ROWS]).unwrap_err(), ServeError::Disconnected);
     }
 }

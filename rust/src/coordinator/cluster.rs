@@ -1,0 +1,367 @@
+//! Multi-core sharded serving engine: a `CimCluster` owns K independent
+//! CIM arrays ("cores"), each a full [`CimAnalogModel`] with its own
+//! Monte-Carlo variation draw and its own BISC trims — the multi-tile CIM
+//! fabric the paper projects when extending the proof-of-concept SoC to
+//! high-density linear-resistor arrays (cf. NeuroSim-style multi-tile
+//! modelling, where throughput AND calibration cost scale with the number
+//! of physical arrays).
+//!
+//! Layers:
+//! * construction — per-core seed derivation (`core_seed`) so every core
+//!   is a distinct reproducible die;
+//! * calibration — [`CimCluster::calibrate_parallel`] runs the per-column
+//!   BISC characterization of all cores concurrently (scoped threads; on
+//!   silicon each tile has its own RISC-V sequencer, so calibration time
+//!   is per-core, not per-cluster);
+//! * serving — [`CimCluster::serve`] converts the cluster into a worker
+//!   pool (one [`Batcher`] loop per core, std threads + channels) and
+//!   hands out [`ClusterClient`]s that scatter `MacRequest`s round-robin
+//!   across the cores and gather replies per-request.
+//!
+//! The DNN tile scheduler side (tiles mapped across cores instead of
+//! serialized on one array) lives in [`crate::coordinator::dnn`].
+
+use crate::analog::variation::VariationSample;
+use crate::analog::CimAnalogModel;
+use crate::config::SimConfig;
+use crate::coordinator::batcher::{
+    Batcher, BatcherStats, MacReply, MacRequest, ServeError,
+};
+use crate::coordinator::bisc::{AdcCharacterization, BiscEngine, BiscReport};
+use crate::util::rng::SplitMix64;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Derive the die seed of core `core` from the cluster's base seed.
+/// Core 0 keeps the base seed so a K=1 cluster reproduces the single-array
+/// experiments bit-for-bit; the rest are SplitMix64-mixed.
+pub fn core_seed(base: u64, core: usize) -> u64 {
+    if core == 0 {
+        base
+    } else {
+        let mut sm = SplitMix64::new(base ^ (core as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        sm.next_u64()
+    }
+}
+
+/// One physical array of the cluster: its own die, its own trims.
+pub struct ClusterCore {
+    pub id: usize,
+    pub seed: u64,
+    pub sample: VariationSample,
+    pub model: CimAnalogModel,
+    /// BISC outcome of the most recent cluster calibration, if any
+    pub report: Option<BiscReport>,
+}
+
+/// K independent CIM cores behind one coordinator.
+pub struct CimCluster {
+    pub cores: Vec<ClusterCore>,
+}
+
+impl CimCluster {
+    /// Draw `k` distinct dies from the config (per-core seeds derived via
+    /// [`core_seed`]). Panics on `k == 0`.
+    pub fn new(cfg: &SimConfig, k: usize) -> Self {
+        assert!(k > 0, "a cluster needs at least one core");
+        let cores = (0..k)
+            .map(|id| {
+                let mut core_cfg = cfg.clone();
+                core_cfg.seed = core_seed(cfg.seed, id);
+                let sample = VariationSample::draw(&core_cfg);
+                let model = CimAnalogModel::from_sample(&core_cfg, &sample);
+                ClusterCore { id, seed: core_cfg.seed, sample, model, report: None }
+            })
+            .collect();
+        Self { cores }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cores.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cores.is_empty()
+    }
+
+    /// Program the same weight matrix on every core.
+    pub fn program_all(&mut self, weights: &[i32]) {
+        for core in &mut self.cores {
+            core.model.program(weights);
+        }
+    }
+
+    /// Program one core (per-core weights: tile sharding, A/B testing).
+    pub fn program_core(&mut self, core: usize, weights: &[i32]) {
+        self.cores[core].model.program(weights);
+    }
+
+    /// Run `f` once per core, all cores in parallel on scoped threads —
+    /// the shared scaffold under every per-core cluster operation.
+    pub fn for_each_core_parallel<F>(&mut self, f: F)
+    where
+        F: Fn(&mut ClusterCore) + Sync,
+    {
+        std::thread::scope(|s| {
+            let f = &f;
+            let handles: Vec<_> = self
+                .cores
+                .iter_mut()
+                .map(|core| s.spawn(move || f(core)))
+                .collect();
+            for h in handles {
+                h.join().expect("cluster core worker panicked");
+            }
+        });
+    }
+
+    /// Run the full per-column BISC routine on every core IN PARALLEL
+    /// (one scoped thread per core). Each core keeps its own trims and
+    /// its own report; total wall time is one core's calibration, not K.
+    pub fn calibrate_parallel(&mut self, engine: &BiscEngine) {
+        self.for_each_core_parallel(|core| {
+            core.report = Some(engine.calibrate(&mut core.model));
+        });
+    }
+
+    /// Iterative variant (`passes` >= 1), still one thread per core.
+    pub fn calibrate_parallel_iterative(&mut self, engine: &BiscEngine, passes: usize) {
+        self.for_each_core_parallel(|core| {
+            core.report = Some(engine.calibrate_iterative(&mut core.model, passes));
+        });
+    }
+
+    /// Cascaded workload calibration (full-range pass + operating-point
+    /// refine, see [`BiscEngine::calibrate_for_workload`]) on every core
+    /// in parallel.
+    pub fn calibrate_for_workload_parallel(
+        &mut self,
+        cfg: &SimConfig,
+        adc_char: AdcCharacterization,
+        op_half_v: f64,
+    ) {
+        self.for_each_core_parallel(|core| {
+            core.report = Some(BiscEngine::calibrate_for_workload(
+                cfg,
+                adc_char,
+                &mut core.model,
+                op_half_v,
+            ));
+        });
+    }
+
+    /// Total characterization reads issued by the last calibration.
+    pub fn total_calibration_reads(&self) -> u64 {
+        self.cores
+            .iter()
+            .filter_map(|c| c.report.as_ref().map(|r| r.reads))
+            .sum()
+    }
+
+    /// Convert the cluster into a serving worker pool: one batcher loop
+    /// per core. The cores move into their worker threads and come back
+    /// through [`ClusterServer::join`].
+    pub fn serve(self, batcher: Batcher) -> ClusterServer {
+        let mut txs = Vec::with_capacity(self.cores.len());
+        let mut handles = Vec::with_capacity(self.cores.len());
+        for mut core in self.cores {
+            let (tx, rx) = channel::<MacRequest>();
+            handles.push(std::thread::spawn(move || {
+                let stats = batcher.run(rx, &mut core.model);
+                (core, stats)
+            }));
+            txs.push(tx);
+        }
+        ClusterServer { txs, handles, rr: Arc::new(AtomicUsize::new(0)) }
+    }
+}
+
+/// The running worker pool: K batcher threads, one per core.
+pub struct ClusterServer {
+    txs: Vec<Sender<MacRequest>>,
+    handles: Vec<JoinHandle<(ClusterCore, BatcherStats)>>,
+    rr: Arc<AtomicUsize>,
+}
+
+impl ClusterServer {
+    pub fn cores(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// A cloneable client that scatters requests across all cores.
+    pub fn client(&self) -> ClusterClient {
+        ClusterClient { txs: self.txs.clone(), rr: Arc::clone(&self.rr) }
+    }
+
+    /// Shut down: drop this server's senders and wait for the workers.
+    /// Outstanding `ClusterClient`s keep their own senders — drop them
+    /// first or the workers keep serving. Returns the cluster (cores with
+    /// their final state) and per-core run statistics.
+    pub fn join(self) -> (CimCluster, Vec<BatcherStats>) {
+        drop(self.txs);
+        let mut cores = Vec::with_capacity(self.handles.len());
+        let mut stats = Vec::with_capacity(self.handles.len());
+        for h in self.handles {
+            let (core, st) = h.join().expect("cluster worker panicked");
+            cores.push(core);
+            stats.push(st);
+        }
+        cores.sort_by_key(|c| c.id);
+        (CimCluster { cores }, stats)
+    }
+}
+
+/// Scatter-gather client handle over the cluster's request channels.
+#[derive(Clone)]
+pub struct ClusterClient {
+    txs: Vec<Sender<MacRequest>>,
+    /// shared round-robin cursor (all clones cooperate)
+    rr: Arc<AtomicUsize>,
+}
+
+impl ClusterClient {
+    pub fn cores(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Submit one MAC to the next core (round-robin) and wait.
+    pub fn mac(&self, x: Vec<i32>) -> Result<Vec<u32>, ServeError> {
+        let core = self.rr.fetch_add(1, Ordering::Relaxed) % self.txs.len();
+        self.mac_on(core, x)
+    }
+
+    /// Submit one MAC to a specific core and wait.
+    pub fn mac_on(&self, core: usize, x: Vec<i32>) -> Result<Vec<u32>, ServeError> {
+        self.submit_on(core, x)?.recv().map_err(|_| ServeError::Disconnected)?
+    }
+
+    /// Fire-and-gather-later: submit to the next core (round-robin) and
+    /// return the reply channel (pipelined scatter-gather).
+    pub fn submit(&self, x: Vec<i32>) -> Result<Receiver<MacReply>, ServeError> {
+        let core = self.rr.fetch_add(1, Ordering::Relaxed) % self.txs.len();
+        self.submit_on(core, x)
+    }
+
+    /// Fire-and-gather-later on a specific core.
+    pub fn submit_on(&self, core: usize, x: Vec<i32>) -> Result<Receiver<MacReply>, ServeError> {
+        let (reply_tx, reply_rx) = channel();
+        self.txs[core]
+            .send(MacRequest { x, reply: reply_tx })
+            .map_err(|_| ServeError::Disconnected)?;
+        Ok(reply_rx)
+    }
+
+    /// Scatter `n` requests round-robin with up to `window` in flight,
+    /// gathering every reply — the throughput-oriented submission loop
+    /// shared by `acore-cim serve` and the perf bench. `make(i)` builds
+    /// the i-th input vector. Stops on the first error.
+    pub fn mac_pipelined<F>(&self, n: usize, window: usize, mut make: F) -> Result<(), ServeError>
+    where
+        F: FnMut(usize) -> Vec<i32>,
+    {
+        let mut inflight: std::collections::VecDeque<Receiver<MacReply>> =
+            std::collections::VecDeque::new();
+        for i in 0..n {
+            inflight.push_back(self.submit(make(i))?);
+            if inflight.len() >= window.max(1) {
+                let rx = inflight.pop_front().unwrap();
+                rx.recv().map_err(|_| ServeError::Disconnected)??;
+            }
+        }
+        for rx in inflight {
+            rx.recv().map_err(|_| ServeError::Disconnected)??;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analog::consts as c;
+
+    fn ideal_cfg() -> SimConfig {
+        let mut cfg = SimConfig::default().scaled(0.0);
+        cfg.sigma_noise = 0.0;
+        cfg
+    }
+
+    #[test]
+    fn core_seeds_are_distinct_and_stable() {
+        let base = 0xAC0_CE11;
+        assert_eq!(core_seed(base, 0), base);
+        let seeds: Vec<u64> = (0..8).map(|k| core_seed(base, k)).collect();
+        for i in 0..seeds.len() {
+            for j in i + 1..seeds.len() {
+                assert_ne!(seeds[i], seeds[j], "cores {i}/{j} share a seed");
+            }
+        }
+        assert_eq!(seeds, (0..8).map(|k| core_seed(base, k)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn cluster_cores_are_distinct_dies() {
+        let cfg = SimConfig::default();
+        let cluster = CimCluster::new(&cfg, 3);
+        assert_eq!(cluster.len(), 3);
+        assert_ne!(cluster.cores[0].sample.alpha_p, cluster.cores[1].sample.alpha_p);
+        assert_ne!(cluster.cores[1].sample.alpha_p, cluster.cores[2].sample.alpha_p);
+        // core 0 reproduces the single-array experiment
+        let single = VariationSample::draw(&cfg);
+        assert_eq!(cluster.cores[0].sample.alpha_p, single.alpha_p);
+    }
+
+    #[test]
+    fn parallel_calibration_trims_every_core() {
+        let cfg = SimConfig::default();
+        let mut cluster = CimCluster::new(&cfg, 3);
+        let engine = BiscEngine::from_config(&cfg, crate::coordinator::bisc::AdcCharacterization::ideal());
+        cluster.calibrate_parallel(&engine);
+        for core in &cluster.cores {
+            let report = core.report.as_ref().expect("core not calibrated");
+            assert_eq!(report.columns.len(), c::M_COLS);
+        }
+        assert_eq!(cluster.total_calibration_reads(), 3 * 2048);
+        // different dies => different trims (overwhelmingly likely)
+        let trims = |k: usize| {
+            cluster.cores[k]
+                .report
+                .as_ref()
+                .unwrap()
+                .columns
+                .iter()
+                .map(|cc| cc.pot_p)
+                .collect::<Vec<_>>()
+        };
+        assert_ne!(trims(0), trims(1));
+    }
+
+    #[test]
+    fn serve_round_robin_answers_everything() {
+        let cfg = ideal_cfg();
+        let mut cluster = CimCluster::new(&cfg, 4);
+        cluster.program_all(&vec![40; c::N_ROWS * c::M_COLS]);
+        let server = cluster.serve(Batcher::default());
+        let client = server.client();
+        // ideal dies, same weights: every core returns the same answer
+        let mut reference = CimAnalogModel::ideal();
+        reference.program(&vec![40; c::N_ROWS * c::M_COLS]);
+        let expect = reference.forward_batch(&vec![30; c::N_ROWS], 1);
+        let n = 64;
+        let replies: Vec<_> =
+            (0..n).map(|_| client.submit(vec![30; c::N_ROWS]).unwrap()).collect();
+        for r in replies {
+            assert_eq!(r.recv().unwrap().unwrap(), expect);
+        }
+        drop(client);
+        let (_cluster, stats) = server.join();
+        let total: u64 = stats.iter().map(|s| s.requests).sum();
+        assert_eq!(total, n as u64);
+        // round robin spreads the load over every core
+        for (k, s) in stats.iter().enumerate() {
+            assert!(s.requests > 0, "core {k} served nothing");
+        }
+    }
+}

@@ -194,15 +194,26 @@ impl CimMlp {
     /// real deployment would actually ship (raw offsets accumulate
     /// coherently over the 22 row tiles and destroy the network otherwise).
     pub fn measure_zero_point(&mut self, model: &mut CimAnalogModel) {
-        let zero = [0i32; c::N_ROWS];
-        let mut zp_at = |refs: (f64, f64), tile: &[i32]| -> Vec<f64> {
-            model.set_adc_refs(refs.0, refs.1);
-            model.program(tile);
-            model.forward_averaged(&zero, 8)
-        };
-        self.zp1 = Some(zp_at(self.refs1, &self.layer1.tiles[0][0]));
-        self.zp2 = Some(zp_at(self.refs2, &self.layer2.tiles[0][0]));
+        self.zp1 = Some(self.zero_point_at(model, self.refs1, 1));
+        self.zp2 = Some(self.zero_point_at(model, self.refs2, 2));
         model.set_adc_refs(c::V_ADC_L, c::V_ADC_H);
+    }
+
+    /// Per-column q at x = 0 for one layer's window on one die (shared by
+    /// the single-array and cluster schedulers). Leaves the ADC refs at
+    /// the layer window and tile (0,0) programmed — callers restore.
+    fn zero_point_at(
+        &self,
+        model: &mut CimAnalogModel,
+        refs: (f64, f64),
+        which: usize,
+    ) -> Vec<f64> {
+        let tile =
+            if which == 1 { &self.layer1.tiles[0][0] } else { &self.layer2.tiles[0][0] };
+        let zero = [0i32; c::N_ROWS];
+        model.set_adc_refs(refs.0, refs.1);
+        model.program(tile);
+        model.forward_averaged(&zero, 8)
     }
 
     /// Drop all digital corrections (raw-uncalibrated ablation).
@@ -213,27 +224,36 @@ impl CimMlp {
         self.zp2 = None;
     }
 
+    /// Characterize one die at one layer window and return the per-column
+    /// digital residual correction (shared by the single-array and the
+    /// cluster schedulers).
+    fn digital_trim_at(
+        &self,
+        model: &mut CimAnalogModel,
+        cfg: &crate::config::SimConfig,
+        refs: (f64, f64),
+    ) -> LayerTrim {
+        use crate::coordinator::bisc::{AdcCharacterization, BiscEngine};
+        let half = c::V_BIAS - refs.0;
+        let v_per_x = c::volts_per_cp() * c::CODE_MAX as f64 * c::N_ROWS as f64;
+        let sweep = ((half * 0.75) / v_per_x).floor().max(2.0) as i32;
+        let mut engine = BiscEngine::from_config(cfg, AdcCharacterization::ideal());
+        engine.char_refs = Some(refs);
+        engine.sweep_max_code = sweep.min(c::CODE_MAX);
+        engine.averages = engine.averages.max(8);
+        let fits = engine.characterize_only(model);
+        LayerTrim {
+            g: fits.iter().map(|(p, n)| 0.5 * (p.g_tot + n.g_tot)).collect(),
+            eps: fits.iter().map(|(p, n)| 0.5 * (p.eps_tot + n.eps_tot)).collect(),
+        }
+    }
+
     /// Measure the digital residual trims on a (typically BISC-calibrated)
     /// die: characterize each column at each layer's window and store the
     /// per-column (g, eps) for inverse correction during inference.
     pub fn measure_digital_trim(&mut self, model: &mut CimAnalogModel, cfg: &crate::config::SimConfig) {
-        use crate::coordinator::bisc::{AdcCharacterization, BiscEngine};
-        let mut trim_at = |refs: (f64, f64)| -> LayerTrim {
-            let half = c::V_BIAS - refs.0;
-            let v_per_x = c::volts_per_cp() * c::CODE_MAX as f64 * c::N_ROWS as f64;
-            let sweep = ((half * 0.75) / v_per_x).floor().max(2.0) as i32;
-            let mut engine = BiscEngine::from_config(cfg, AdcCharacterization::ideal());
-            engine.char_refs = Some(refs);
-            engine.sweep_max_code = sweep.min(c::CODE_MAX);
-            engine.averages = engine.averages.max(8);
-            let fits = engine.characterize_only(model);
-            LayerTrim {
-                g: fits.iter().map(|(p, n)| 0.5 * (p.g_tot + n.g_tot)).collect(),
-                eps: fits.iter().map(|(p, n)| 0.5 * (p.eps_tot + n.eps_tot)).collect(),
-            }
-        };
-        self.trim1 = Some(trim_at(self.refs1));
-        self.trim2 = Some(trim_at(self.refs2));
+        self.trim1 = Some(self.digital_trim_at(model, cfg, self.refs1));
+        self.trim2 = Some(self.digital_trim_at(model, cfg, self.refs2));
     }
 
     /// One layer on the array: x_codes (len >= rows, zero-padded) ->
@@ -456,6 +476,229 @@ pub struct PreparedMlp {
     tiles2: Vec<Vec<crate::analog::Folded>>,
 }
 
+/// Per-cluster tile schedule: every core's pre-folded tiles plus its own
+/// per-layer digital corrections (each core is a distinct die, so both the
+/// residual trims and the zero points are per-core).
+pub struct ClusterSchedule {
+    prepared: Vec<PreparedMlp>,
+    trims: Vec<(Option<LayerTrim>, Option<LayerTrim>)>,
+    /// per-core zero points (measured when the CimMlp itself carries a
+    /// zero-point correction, mirroring the single-array bring-up rung)
+    zps: Vec<(Option<Vec<f64>>, Option<Vec<f64>>)>,
+}
+
+impl ClusterSchedule {
+    pub fn cores(&self) -> usize {
+        self.prepared.len()
+    }
+}
+
+impl CimMlp {
+    /// Fold the full tile schedule on every core of the cluster IN
+    /// PARALLEL, optionally measuring per-core digital residual trims
+    /// first (pass the config to enable). Tiles are later mapped across
+    /// cores by `infer_cluster_batch` instead of serializing on one array.
+    pub fn prepare_cluster(
+        &self,
+        cluster: &mut crate::coordinator::cluster::CimCluster,
+        cfg: Option<&crate::config::SimConfig>,
+    ) -> ClusterSchedule {
+        type CoreResult = (
+            usize,
+            PreparedMlp,
+            Option<(LayerTrim, LayerTrim)>,
+            Option<(Vec<f64>, Vec<f64>)>,
+        );
+        let want_zp = self.zp1.is_some() || self.zp2.is_some();
+        let mut results: Vec<CoreResult> = std::thread::scope(|s| {
+            let handles: Vec<_> = cluster
+                .cores
+                .iter_mut()
+                .map(|core| {
+                    s.spawn(move || {
+                        let trims = cfg.map(|cc| {
+                            (
+                                self.digital_trim_at(&mut core.model, cc, self.refs1),
+                                self.digital_trim_at(&mut core.model, cc, self.refs2),
+                            )
+                        });
+                        // the CimMlp carries a zero-point correction: this
+                        // core is a different die, re-measure its own
+                        let zps = want_zp.then(|| {
+                            (
+                                self.zero_point_at(&mut core.model, self.refs1, 1),
+                                self.zero_point_at(&mut core.model, self.refs2, 2),
+                            )
+                        });
+                        let prepared = self.prepare(&mut core.model);
+                        (core.id, prepared, trims, zps)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("prepare worker panicked"))
+                .collect()
+        });
+        results.sort_by_key(|r| r.0);
+        let mut prepared = Vec::with_capacity(results.len());
+        let mut trims = Vec::with_capacity(results.len());
+        let mut zps = Vec::with_capacity(results.len());
+        for (_, p, t, z) in results {
+            prepared.push(p);
+            match t {
+                Some((t1, t2)) => trims.push((Some(t1), Some(t2))),
+                None => trims.push((None, None)),
+            }
+            match z {
+                Some((z1, z2)) => zps.push((Some(z1), Some(z2))),
+                None => zps.push((None, None)),
+            }
+        }
+        ClusterSchedule { prepared, trims, zps }
+    }
+
+    /// One layer over the cluster: tile `t = tr * ct + tc` runs on core
+    /// `t % K` (round-robin tile-to-core map), all cores in parallel over
+    /// the whole image batch; per-tile partial sums are gathered by
+    /// addition (they are linear in code-product units).
+    fn layer_forward_cluster(
+        &self,
+        cluster: &crate::coordinator::cluster::CimCluster,
+        sched: &ClusterSchedule,
+        layer: &TiledLayer,
+        which: usize,
+        xs: &[Vec<i32>],
+    ) -> Vec<Vec<f32>> {
+        let refs = if which == 1 { self.refs1 } else { self.refs2 };
+        let gain = c::code_gain_at(refs.0, refs.1) as f32;
+        let mid = c::q_mid_at(refs.0, refs.1) as f32;
+        let (rt, ct) = (layer.row_tiles(), layer.col_tiles());
+        let n_tiles = rt * ct;
+        let k_cores = cluster.cores.len();
+        let partials: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let handles: Vec<_> = cluster
+                .cores
+                .iter()
+                .enumerate()
+                .map(|(ci, core)| {
+                    let prepared = &sched.prepared[ci];
+                    let trim =
+                        if which == 1 { &sched.trims[ci].0 } else { &sched.trims[ci].1 };
+                    let zp = if which == 1 { &sched.zps[ci].0 } else { &sched.zps[ci].1 };
+                    s.spawn(move || {
+                        let folded =
+                            if which == 1 { &prepared.tiles1 } else { &prepared.tiles2 };
+                        let mut part = vec![0f32; xs.len() * ct * c::M_COLS];
+                        let mut xr = [0i32; c::N_ROWS];
+                        for ti in (ci..n_tiles).step_by(k_cores) {
+                            let (tr, tc) = (ti / ct, ti % ct);
+                            let start = tr * c::N_ROWS;
+                            for (i, x_codes) in xs.iter().enumerate() {
+                                for (j, x) in xr.iter_mut().enumerate() {
+                                    *x = x_codes.get(start + j).copied().unwrap_or(0);
+                                }
+                                let q = core.model.forward_folded(&folded[tr][tc], &xr, 1);
+                                let out = &mut part[i * ct * c::M_COLS..];
+                                for col in 0..c::M_COLS {
+                                    // same correction precedence as the
+                                    // single-array paths: trim > zp > nominal
+                                    let qc = q[col] as f32;
+                                    let corrected = if let Some(t) = trim {
+                                        ((qc - t.eps[col] as f32) / t.g[col] as f32 - mid)
+                                            / gain
+                                    } else if let Some(z) = zp {
+                                        (qc - z[col] as f32) / gain
+                                    } else {
+                                        (qc - mid) / gain
+                                    };
+                                    out[tc * c::M_COLS + col] += corrected;
+                                }
+                            }
+                        }
+                        part
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("tile worker panicked"))
+                .collect()
+        });
+        // gather: partial accumulations add linearly; truncate the zero-
+        // padded tail columns of the last column tile
+        let mut out = vec![vec![0f32; layer.cols]; xs.len()];
+        for part in &partials {
+            for (i, o) in out.iter_mut().enumerate() {
+                let row = &part[i * ct * c::M_COLS..(i + 1) * ct * c::M_COLS];
+                for (col, v) in o.iter_mut().enumerate() {
+                    *v += row[col];
+                }
+            }
+        }
+        out
+    }
+
+    /// Batched inference over the cluster: both layers' tiles are mapped
+    /// across the K cores (scatter), digital accumulation + bias + ReLU +
+    /// requantization happen on the gather side — the multi-array version
+    /// of `infer_prepared`.
+    pub fn infer_cluster_batch(
+        &self,
+        cluster: &crate::coordinator::cluster::CimCluster,
+        sched: &ClusterSchedule,
+        imgs: &[&[f32]],
+        stats: &mut InferenceStats,
+    ) -> Vec<Vec<f32>> {
+        assert_eq!(sched.cores(), cluster.cores.len(), "schedule/cluster mismatch");
+        let xs: Vec<Vec<i32>> =
+            imgs.iter().map(|im| self.quant.quantize_input(im)).collect();
+        let h_cp = self.layer_forward_cluster(cluster, sched, &self.layer1, 1, &xs);
+        let h_codes: Vec<Vec<i32>> = h_cp
+            .iter()
+            .map(|h| {
+                h.iter()
+                    .zip(&self.quant.b1_cp)
+                    .map(|(&v, &b)| {
+                        ((v + b).max(0.0) * self.quant.act_scale1)
+                            .round()
+                            .clamp(0.0, 63.0) as i32
+                    })
+                    .collect()
+            })
+            .collect();
+        let logits_cp =
+            self.layer_forward_cluster(cluster, sched, &self.layer2, 2, &h_codes);
+        let tiles_per_img = self.layer1.row_tiles() * self.layer1.col_tiles()
+            + self.layer2.row_tiles() * self.layer2.col_tiles();
+        stats.mac_ops += (imgs.len() * tiles_per_img) as u64;
+        logits_cp
+            .into_iter()
+            .map(|l| l.iter().zip(&self.quant.b2_cp).map(|(&v, &b)| v + b).collect())
+            .collect()
+    }
+
+    /// Dataset accuracy over the cluster schedule.
+    pub fn accuracy_cluster(
+        &self,
+        cluster: &crate::coordinator::cluster::CimCluster,
+        sched: &ClusterSchedule,
+        ds: &Dataset,
+        limit: usize,
+    ) -> (f64, InferenceStats) {
+        let n = ds.len().min(limit);
+        let mut stats = InferenceStats::default();
+        let imgs: Vec<&[f32]> = (0..n).map(|i| ds.image(i)).collect();
+        let logits = self.infer_cluster_batch(cluster, sched, &imgs, &mut stats);
+        let correct = logits
+            .iter()
+            .enumerate()
+            .filter(|(i, l)| argmax(l) == ds.labels[*i] as usize)
+            .count();
+        (correct as f64 / n as f64, stats)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -531,6 +774,78 @@ mod tests {
             }
         }
         assert_eq!(st1.mac_ops, st2.mac_ops);
+    }
+
+    #[test]
+    fn single_core_cluster_matches_prepared_path() {
+        let (mut cim_mlp, test_ds) = pipeline();
+        let mut cfg = SimConfig::default();
+        cfg.sigma_noise = 0.0; // cluster path is the noise-free fast path
+        // K=1 cluster: core 0 keeps the base seed, so the die is identical
+        let mut cluster = crate::coordinator::cluster::CimCluster::new(&cfg, 1);
+        let sched = cim_mlp.prepare_cluster(&mut cluster, None);
+        let s = VariationSample::draw(&cfg);
+        let mut die = CimAnalogModel::from_sample(&cfg, &s);
+        let prepared = cim_mlp.prepare(&mut die);
+        let imgs: Vec<&[f32]> = (0..8).map(|i| test_ds.image(i)).collect();
+        let mut st_c = InferenceStats::default();
+        let logits_c = cim_mlp.infer_cluster_batch(&cluster, &sched, &imgs, &mut st_c);
+        let mut st_p = InferenceStats::default();
+        for (i, img) in imgs.iter().enumerate() {
+            let direct = cim_mlp.infer_prepared(&die, &prepared, img, &mut st_p);
+            for (a, b) in logits_c[i].iter().zip(&direct) {
+                assert!((a - b).abs() < 1e-3, "cluster mismatch: {a} vs {b}");
+            }
+        }
+        assert_eq!(st_c.mac_ops, st_p.mac_ops);
+
+        // zero-point rung: the schedule re-measures per-core zps, which on
+        // the identical noise-free die must equal the single-array ones
+        cim_mlp.measure_zero_point(&mut die);
+        let sched_zp = cim_mlp.prepare_cluster(&mut cluster, None);
+        let mut st_z = InferenceStats::default();
+        let logits_z = cim_mlp.infer_cluster_batch(&cluster, &sched_zp, &imgs, &mut st_z);
+        for (i, img) in imgs.iter().enumerate() {
+            let mut st = InferenceStats::default();
+            let direct = cim_mlp.infer_prepared(&die, &prepared, img, &mut st);
+            for (a, b) in logits_z[i].iter().zip(&direct) {
+                assert!((a - b).abs() < 1e-3, "zp cluster mismatch: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn multi_core_cluster_spreads_tiles_and_stays_accurate() {
+        let (cim_mlp, test_ds) = pipeline();
+        // ideal dies: sharding across cores must be numerically identical
+        // to running every tile on one ideal array
+        let mut cfg = SimConfig::default().scaled(0.0);
+        cfg.sigma_noise = 0.0;
+        let mut cluster = crate::coordinator::cluster::CimCluster::new(&cfg, 3);
+        let sched = cim_mlp.prepare_cluster(&mut cluster, None);
+        let n = 30;
+        let (acc_cluster, st) = cim_mlp.accuracy_cluster(&cluster, &sched, &test_ds, n);
+        let mut ideal = CimAnalogModel::ideal();
+        let prepared = cim_mlp.prepare(&mut ideal);
+        let (acc_single, _) = cim_mlp.accuracy_prepared(&ideal, &prepared, &test_ds, n);
+        // same ideal dies, tiles merely sharded: logits agree to f32
+        // gather-order rounding, so accuracy stays put (tolerate one
+        // image flipping on an exact tie)
+        assert!(
+            (acc_cluster - acc_single).abs() <= 1.0 / n as f64 + 1e-9,
+            "ideal-die sharding changed accuracy: {acc_cluster} vs {acc_single}"
+        );
+        let imgs: Vec<&[f32]> = (0..5).map(|i| test_ds.image(i)).collect();
+        let mut st2 = InferenceStats::default();
+        let logits_c = cim_mlp.infer_cluster_batch(&cluster, &sched, &imgs, &mut st2);
+        for (i, img) in imgs.iter().enumerate() {
+            let mut stp = InferenceStats::default();
+            let direct = cim_mlp.infer_prepared(&ideal, &prepared, img, &mut stp);
+            for (a, b) in logits_c[i].iter().zip(&direct) {
+                assert!((a - b).abs() < 1e-2, "sharded logit drifted: {a} vs {b}");
+            }
+        }
+        assert_eq!(st.mac_ops, n as u64 * (22 * 3 + 2));
     }
 
     #[test]

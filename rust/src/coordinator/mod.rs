@@ -1,9 +1,11 @@
 //! L3 coordinator: the CIM device register file, the BISC calibration
-//! engine, compute-SNR evaluation, the DNN tile scheduler, and the batching
-//! request loop (paper Sections III, VI, VII).
+//! engine, compute-SNR evaluation, the DNN tile scheduler, the batching
+//! request loop, and the multi-core sharded serving cluster (paper
+//! Sections III, VI, VII + the multi-array scaling direction).
 
 pub mod bisc;
 pub mod cim_core;
 pub mod snr;
 pub mod dnn;
 pub mod batcher;
+pub mod cluster;

@@ -7,10 +7,12 @@
 //! * **L3 (this crate)** — the SoC: a circuit-level analog model of the
 //!   36x32 MDAC-weight-cell CIM core ([`analog`]), a RISC-V RV32IM
 //!   instruction-set simulator with an AXI4-Lite interconnect ([`soc`]),
-//!   the Built-In Self-Calibration engine, DNN tile scheduler and compute
-//!   SNR evaluation ([`coordinator`]), dataset + MLP training utilities
-//!   ([`data`]), and a PJRT runtime that executes the AOT-compiled JAX/
-//!   Pallas artifacts on the hot path ([`runtime`]).
+//!   the Built-In Self-Calibration engine, DNN tile scheduler, compute
+//!   SNR evaluation, and the multi-core sharded serving cluster
+//!   ([`coordinator`]), dataset + MLP training utilities ([`data`]), and
+//!   a runtime that executes the AOT-compiled JAX/Pallas artifacts on
+//!   the hot path ([`runtime`]) — through PJRT with the `pjrt` feature,
+//!   or the bit-faithful golden-model fallback by default.
 //! * **L2/L1 (python/, build-time only)** — the JAX model of the same
 //!   analog transfer function and the Pallas MAC kernel, lowered once to
 //!   HLO text (`make artifacts`) and never imported at runtime.

@@ -1,14 +1,16 @@
 //! PJRT executor: loads the HLO-text artifacts and runs them on the PJRT
 //! CPU client (the `xla` crate wraps xla_extension's PJRT C API). One
 //! compiled executable per artifact, cached — compile once, execute on the
-//! hot path.
+//! hot path. Only built with the `pjrt` feature (the crate has no
+//! vendored deps; see rust/Cargo.toml for how to supply `xla`).
 //!
 //! Interchange is HLO *text*: jax >= 0.5 serializes HloModuleProto with
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
 
 use super::artifact::{ArtifactMeta, Manifest};
-use anyhow::{anyhow, Context, Result};
+use super::{RtError, RtResult};
+use crate::rt_err;
 use std::collections::HashMap;
 
 /// A host tensor handed to / returned from an executable.
@@ -29,14 +31,15 @@ impl TensorF32 {
         Self { data: vec![v], shape: vec![] }
     }
 
-    fn to_literal(&self) -> Result<xla::Literal> {
+    fn to_literal(&self) -> RtResult<xla::Literal> {
         let lit = xla::Literal::vec1(&self.data);
-        if self.shape.is_empty() {
+        let shaped = if self.shape.is_empty() {
             // rank-0: reshape to scalar
-            Ok(lit.reshape(&[])?)
+            lit.reshape(&[])
         } else {
-            Ok(lit.reshape(&self.shape)?)
-        }
+            lit.reshape(&self.shape)
+        };
+        shaped.map_err(|e| rt_err!("reshaping literal: {e:?}"))
     }
 }
 
@@ -49,13 +52,14 @@ pub struct Executor {
 }
 
 impl Executor {
-    pub fn new(manifest: Manifest) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+    pub fn new(manifest: Manifest) -> RtResult<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| rt_err!("creating PJRT CPU client: {e:?}"))?;
         Ok(Self { client, manifest, cache: HashMap::new(), executions: 0 })
     }
 
-    pub fn discover() -> Result<Self> {
-        let manifest = Manifest::discover().map_err(|e| anyhow!(e))?;
+    pub fn discover() -> RtResult<Self> {
+        let manifest = Manifest::discover().map_err(RtError)?;
         Self::new(manifest)
     }
 
@@ -67,40 +71,40 @@ impl Executor {
         self.client.platform_name()
     }
 
-    fn meta(&self, name: &str) -> Result<ArtifactMeta> {
+    fn meta(&self, name: &str) -> RtResult<ArtifactMeta> {
         self.manifest
             .find(name)
             .cloned()
-            .ok_or_else(|| anyhow!("artifact `{name}` not in manifest"))
+            .ok_or_else(|| rt_err!("artifact `{name}` not in manifest"))
     }
 
     /// Compile (or fetch the cached executable for) an artifact.
-    pub fn prepare(&mut self, name: &str) -> Result<()> {
+    pub fn prepare(&mut self, name: &str) -> RtResult<()> {
         if self.cache.contains_key(name) {
             return Ok(());
         }
         let meta = self.meta(name)?;
-        let proto = xla::HloModuleProto::from_text_file(
-            meta.path
-                .to_str()
-                .ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .with_context(|| format!("parsing {}", meta.path.display()))?;
+        let path = meta
+            .path
+            .to_str()
+            .ok_or_else(|| rt_err!("non-utf8 path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| rt_err!("parsing {}: {e:?}", meta.path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
             .client
             .compile(&comp)
-            .with_context(|| format!("compiling {name}"))?;
+            .map_err(|e| rt_err!("compiling {name}: {e:?}"))?;
         self.cache.insert(name.to_string(), exe);
         Ok(())
     }
 
     /// Execute an artifact; returns the first element of the result tuple
     /// as a flat f32 vector (aot.py lowers with return_tuple=True).
-    pub fn run(&mut self, name: &str, inputs: &[TensorF32]) -> Result<Vec<f32>> {
+    pub fn run(&mut self, name: &str, inputs: &[TensorF32]) -> RtResult<Vec<f32>> {
         let meta = self.meta(name)?;
         if inputs.len() != meta.num_inputs {
-            return Err(anyhow!(
+            return Err(rt_err!(
                 "artifact `{name}` expects {} inputs, got {}",
                 meta.num_inputs,
                 inputs.len()
@@ -110,7 +114,7 @@ impl Executor {
         for (i, (t, want)) in inputs.iter().zip(&meta.input_shapes).enumerate() {
             let got: Vec<usize> = t.shape.iter().map(|&d| d as usize).collect();
             if &got != want {
-                return Err(anyhow!(
+                return Err(rt_err!(
                     "artifact `{name}` input {i}: shape {got:?}, manifest says {want:?}"
                 ));
             }
@@ -119,11 +123,17 @@ impl Executor {
         let lits: Vec<xla::Literal> = inputs
             .iter()
             .map(|t| t.to_literal())
-            .collect::<Result<_>>()?;
+            .collect::<RtResult<_>>()?;
         let exe = self.cache.get(name).unwrap();
-        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| rt_err!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| rt_err!("fetching {name} result: {e:?}"))?;
         self.executions += 1;
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
+        let out = result
+            .to_tuple1()
+            .map_err(|e| rt_err!("untupling {name} result: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| rt_err!("reading {name} result: {e:?}"))
     }
 }

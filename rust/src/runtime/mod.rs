@@ -1,11 +1,57 @@
-//! Runtime layer: PJRT execution of the AOT-compiled JAX/Pallas artifacts
+//! Runtime layer: execution of the AOT-compiled JAX/Pallas artifacts
 //! (`artifacts/*.hlo.txt`) from the rust hot path. Python is never
 //! imported at runtime — `make artifacts` is the only compile-path step.
+//!
+//! Two backends, selected at build time:
+//! * **`pjrt` feature** — the xla-backed PJRT executor ([`executor`])
+//!   compiles the HLO text once and runs it on the PJRT CPU client.
+//!   Requires a local `xla_extension` install (see rust/Cargo.toml).
+//! * **default** — the golden-model fallback: [`CimRuntime`] evaluates
+//!   the identical transfer function through the folded analog model, so
+//!   the serving stack (batcher, cluster, CLI) builds and runs offline
+//!   with zero external dependencies.
 
 pub mod artifact;
+#[cfg(feature = "pjrt")]
 pub mod executor;
 pub mod signature;
 
 pub use artifact::Manifest;
+#[cfg(feature = "pjrt")]
 pub use executor::{Executor, TensorF32};
 pub use signature::CimRuntime;
+
+/// Runtime-layer error (anyhow is not vendored; see DESIGN.md §2).
+#[derive(Debug, Clone)]
+pub struct RtError(pub String);
+
+impl std::fmt::Display for RtError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RtError {}
+
+impl From<String> for RtError {
+    fn from(s: String) -> Self {
+        Self(s)
+    }
+}
+
+impl From<&str> for RtError {
+    fn from(s: &str) -> Self {
+        Self(s.to_string())
+    }
+}
+
+pub type RtResult<T> = Result<T, RtError>;
+
+/// Build an [`RtError`] from format arguments (local stand-in for
+/// `anyhow::anyhow!`).
+#[macro_export]
+macro_rules! rt_err {
+    ($($fmt:tt)*) => {
+        $crate::runtime::RtError(format!($($fmt)*))
+    };
+}

@@ -4,13 +4,19 @@
 //! `CimRuntime` is the hardware-accelerated counterpart of
 //! `analog::CimAnalogModel::forward_batch`: same die parameters, same trim
 //! state, but the evaluation runs through the compiled JAX/Pallas kernel
-//! on PJRT. The parity integration test (`rust/tests/parity.rs`) holds the
-//! two implementations to <= 1 ADC code of each other.
+//! on PJRT when built with the `pjrt` feature. The default (offline)
+//! build uses the golden-model fallback backend — the identical transfer
+//! function evaluated through the folded analog model — so the serving
+//! stack works without `xla_extension`. The parity integration test
+//! (`rust/tests/parity.rs`, pjrt-only) holds the two implementations to
+//! <= 1 ADC code of each other.
 
+#[cfg(feature = "pjrt")]
 use super::executor::{Executor, TensorF32};
+use super::RtResult;
 use crate::analog::variation::VariationSample;
-use crate::analog::{consts as c, samp};
-use anyhow::{anyhow, Result};
+use crate::analog::{consts as c, samp, CimAnalogModel};
+use crate::config::SimConfig;
 
 /// Trim state fed to the artifact (mirrors the per-column 2SA registers).
 #[derive(Debug, Clone)]
@@ -42,47 +48,125 @@ impl TrimState {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn f32s(v: &[f64]) -> Vec<f32> {
     v.iter().map(|&x| x as f32).collect()
 }
 
-/// The CIM array executed through the PJRT artifact.
+/// The evaluation backend behind `CimRuntime`.
+enum Backend {
+    /// Golden-model fallback (default build): the folded analog fast path,
+    /// noise-free, bit-faithful to the artifact math.
+    Golden(Box<CimAnalogModel>),
+    /// The compiled JAX/Pallas artifact on the PJRT CPU client.
+    #[cfg(feature = "pjrt")]
+    Pjrt(Executor),
+}
+
+/// The CIM array executed through the runtime backend.
 pub struct CimRuntime {
-    exec: Executor,
+    backend: Backend,
     sample: VariationSample,
     pub trims: TrimState,
     /// ADC references (v_l, v_h)
     pub adc_refs: (f64, f64),
-    /// weight split: magnitudes on the +/- lines, row-major N*M
-    w_pos: Vec<f32>,
-    w_neg: Vec<f32>,
+    /// programmed signed weight codes, row-major N*M
+    weights: Vec<i32>,
 }
 
 impl CimRuntime {
+    /// PJRT-backed runtime (requires the `pjrt` feature + artifacts).
+    #[cfg(feature = "pjrt")]
     pub fn new(exec: Executor, sample: VariationSample) -> Self {
         Self {
-            exec,
+            backend: Backend::Pjrt(exec),
             sample,
             trims: TrimState::nominal(),
             adc_refs: (c::V_ADC_L, c::V_ADC_H),
-            w_pos: vec![0.0; c::N_ROWS * c::M_COLS],
-            w_neg: vec![0.0; c::N_ROWS * c::M_COLS],
+            weights: vec![0; c::N_ROWS * c::M_COLS],
         }
     }
 
-    pub fn executor(&self) -> &Executor {
-        &self.exec
+    /// Golden-model fallback backend: always available, no artifacts
+    /// needed. Evaluates the same die (same `VariationSample`) through the
+    /// folded analog fast path.
+    pub fn golden(sample: VariationSample) -> Self {
+        let cfg = SimConfig { sigma_noise: 0.0, ..SimConfig::default() };
+        let model = CimAnalogModel::from_sample(&cfg, &sample);
+        Self {
+            backend: Backend::Golden(Box::new(model)),
+            sample,
+            trims: TrimState::nominal(),
+            adc_refs: (c::V_ADC_L, c::V_ADC_H),
+            weights: vec![0; c::N_ROWS * c::M_COLS],
+        }
+    }
+
+    /// True when this runtime executes through PJRT (vs the fallback).
+    pub fn is_pjrt(&self) -> bool {
+        match &self.backend {
+            Backend::Golden(_) => false,
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => true,
+        }
+    }
+
+    pub fn sample(&self) -> &VariationSample {
+        &self.sample
+    }
+
+    pub fn weights(&self) -> &[i32] {
+        &self.weights
+    }
+
+    #[cfg(feature = "pjrt")]
+    pub fn executor(&self) -> Option<&Executor> {
+        match &self.backend {
+            Backend::Pjrt(exec) => Some(exec),
+            _ => None,
+        }
     }
 
     pub fn program(&mut self, weights: &[i32]) {
         assert_eq!(weights.len(), c::N_ROWS * c::M_COLS);
-        for (i, &w) in weights.iter().enumerate() {
-            let w = w.clamp(-c::CODE_MAX, c::CODE_MAX);
-            self.w_pos[i] = w.max(0) as f32;
-            self.w_neg[i] = (-w).max(0) as f32;
+        for (dst, &w) in self.weights.iter_mut().zip(weights) {
+            *dst = w.clamp(-c::CODE_MAX, c::CODE_MAX);
+        }
+        if let Backend::Golden(model) = &mut self.backend {
+            model.program(&self.weights);
         }
     }
 
+    /// Mirror the register state (trims + ADC references) into the golden
+    /// model before an evaluation.
+    fn sync_golden(model: &mut CimAnalogModel, trims: &TrimState, adc_refs: (f64, f64)) {
+        for col in 0..c::M_COLS {
+            model.set_trims(
+                col,
+                trims.pot_p[col].min(samp::POT_MAX),
+                trims.pot_n[col].min(samp::POT_MAX),
+                trims.cal[col].min(samp::CAL_MAX),
+            );
+        }
+        model.set_adc_refs(adc_refs.0, adc_refs.1);
+    }
+
+    /// Batched forward. `x` is row-major `batch x N` signed codes; returns
+    /// `batch x M` ADC codes. On the PJRT backend the batch is padded up
+    /// to the nearest emitted artifact size.
+    pub fn forward_batch(&mut self, x: &[i32], batch: usize) -> RtResult<Vec<u32>> {
+        assert_eq!(x.len(), batch * c::N_ROWS);
+        match &mut self.backend {
+            Backend::Golden(model) => {
+                Self::sync_golden(model, &self.trims, self.adc_refs);
+                Ok(model.forward_batch(x, batch))
+            }
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => self.forward_batch_pjrt(x, batch),
+        }
+    }
+
+    #[cfg(feature = "pjrt")]
     fn adc_consts(&self) -> TensorF32 {
         TensorF32::new(
             vec![
@@ -97,29 +181,43 @@ impl CimRuntime {
         )
     }
 
-    /// Batched forward through the `cim_mac_b*` artifact. `x` is row-major
-    /// `batch x N` signed codes; returns `batch x M` ADC codes. The batch
-    /// is padded up to the nearest emitted artifact size.
-    pub fn forward_batch(&mut self, x: &[i32], batch: usize) -> Result<Vec<u32>> {
-        assert_eq!(x.len(), batch * c::N_ROWS);
-        let meta = self
-            .exec
-            .manifest()
-            .cim_mac_for_batch(batch)
-            .ok_or_else(|| anyhow!("no cim_mac artifact fits batch {batch}"))?;
-        let padded = super::artifact::Manifest::batch_of(meta);
-        let name = meta.name.clone();
+    /// Weight split fed to the artifact: magnitudes on the +/- lines.
+    #[cfg(feature = "pjrt")]
+    fn weight_split(&self) -> (Vec<f32>, Vec<f32>) {
+        let mut w_pos = vec![0.0f32; c::N_ROWS * c::M_COLS];
+        let mut w_neg = vec![0.0f32; c::N_ROWS * c::M_COLS];
+        for (i, &w) in self.weights.iter().enumerate() {
+            w_pos[i] = w.max(0) as f32;
+            w_neg[i] = (-w).max(0) as f32;
+        }
+        (w_pos, w_neg)
+    }
+
+    /// Batched forward through the `cim_mac_b*` artifact.
+    #[cfg(feature = "pjrt")]
+    fn forward_batch_pjrt(&mut self, x: &[i32], batch: usize) -> RtResult<Vec<u32>> {
+        let (name, padded) = {
+            let Backend::Pjrt(exec) = &self.backend else {
+                unreachable!("pjrt forward on non-pjrt backend")
+            };
+            let meta = exec
+                .manifest()
+                .cim_mac_for_batch(batch)
+                .ok_or_else(|| crate::rt_err!("no cim_mac artifact fits batch {batch}"))?;
+            (meta.name.clone(), super::artifact::Manifest::batch_of(meta))
+        };
         let mut xf = vec![0f32; padded * c::N_ROWS];
         for (dst, &src) in xf.iter_mut().zip(x) {
             *dst = src as f32;
         }
+        let (w_pos, w_neg) = self.weight_split();
         let s = &self.sample;
         let n = c::N_ROWS;
         let m = c::M_COLS;
         let inputs = vec![
             TensorF32::new(xf, &[padded, n]),
-            TensorF32::new(self.w_pos.clone(), &[n, m]),
-            TensorF32::new(self.w_neg.clone(), &[n, m]),
+            TensorF32::new(w_pos, &[n, m]),
+            TensorF32::new(w_neg, &[n, m]),
             TensorF32::new(f32s(&s.dac_gain), &[n]),
             TensorF32::new(f32s(&s.dac_off), &[n]),
             TensorF32::new(f32s(&s.cell_delta), &[n, m]),
@@ -133,11 +231,16 @@ impl CimRuntime {
             self.adc_consts(),
             TensorF32::new(vec![0.0; padded * m], &[padded, m]),
         ];
-        let out = self.exec.run(&name, &inputs)?;
+        let Backend::Pjrt(exec) = &mut self.backend else {
+            unreachable!("pjrt forward on non-pjrt backend")
+        };
+        let out = exec.run(&name, &inputs)?;
         Ok(out[..batch * m].iter().map(|&q| q as u32).collect())
     }
 
-    /// Run the fused whole-network `mlp_cim_b*` artifact.
+    /// Run the fused whole-network `mlp_cim_b*` artifact (PJRT only — the
+    /// fallback path runs the tile scheduler on the analog model instead).
+    #[cfg(feature = "pjrt")]
     #[allow(clippy::too_many_arguments)]
     pub fn mlp_forward(
         &mut self,
@@ -153,7 +256,11 @@ impl CimRuntime {
         vadc2: (f64, f64),
         trim1: (&[f32], &[f32]),
         trim2: (&[f32], &[f32]),
-    ) -> Result<Vec<f32>> {
+    ) -> RtResult<Vec<f32>> {
+        let adc_consts = self.adc_consts();
+        let rsa_p = self.trims.rsa_p();
+        let rsa_n = self.trims.rsa_n();
+        let vcal = self.trims.vcal();
         let s = &self.sample;
         let n = c::N_ROWS;
         let m = c::M_COLS;
@@ -174,10 +281,10 @@ impl CimRuntime {
             TensorF32::new(f32s(&s.alpha_n), &[m]),
             TensorF32::new(f32s(&s.beta), &[m]),
             TensorF32::new(f32s(&s.gamma3), &[m]),
-            TensorF32::new(self.trims.rsa_p(), &[m]),
-            TensorF32::new(self.trims.rsa_n(), &[m]),
-            TensorF32::new(self.trims.vcal(), &[m]),
-            self.adc_consts(),
+            TensorF32::new(rsa_p, &[m]),
+            TensorF32::new(rsa_n, &[m]),
+            TensorF32::new(vcal, &[m]),
+            adc_consts,
             TensorF32::new(vec![vadc1.0 as f32, vadc1.1 as f32], &[2]),
             TensorF32::new(vec![vadc2.0 as f32, vadc2.1 as f32], &[2]),
             TensorF32::new(trim1.0.to_vec(), &[m]),
@@ -185,6 +292,50 @@ impl CimRuntime {
             TensorF32::new(trim2.0.to_vec(), &[m]),
             TensorF32::new(trim2.1.to_vec(), &[m]),
         ];
-        self.exec.run(name, &inputs)
+        let Backend::Pjrt(exec) = &mut self.backend else {
+            return Err(crate::rt_err!("mlp_forward requires the PJRT backend"));
+        };
+        exec.run(name, &inputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_backend_matches_analog_model() {
+        let cfg = SimConfig { sigma_noise: 0.0, ..SimConfig::default() };
+        let sample = VariationSample::draw(&cfg);
+        let mut rt = CimRuntime::golden(sample.clone());
+        let mut model = CimAnalogModel::from_sample(&cfg, &sample);
+        let weights: Vec<i32> =
+            (0..c::N_ROWS * c::M_COLS).map(|i| ((i as i32 * 13) % 127) - 63).collect();
+        rt.program(&weights);
+        model.program(&weights);
+        let x: Vec<i32> = (0..4 * c::N_ROWS).map(|i| (i as i32 % 100) - 50).collect();
+        // input codes outside the DAC range are clamped identically by
+        // forward_batch on both sides (same code path), so compare raw
+        let q_rt = rt.forward_batch(&x, 4).unwrap();
+        let q_model = model.forward_batch(&x, 4);
+        assert_eq!(q_rt, q_model);
+        assert!(!rt.is_pjrt());
+    }
+
+    #[test]
+    fn golden_backend_tracks_trims_and_refs() {
+        let mut rt = CimRuntime::golden(VariationSample::ideal());
+        let weights = vec![40i32; c::N_ROWS * c::M_COLS];
+        rt.program(&weights);
+        let x = vec![30i32; c::N_ROWS];
+        let q0 = rt.forward_batch(&x, 1).unwrap();
+        rt.trims.pot_p[0] = samp::POT_MAX;
+        rt.trims.cal[0] = samp::CAL_MAX;
+        let q1 = rt.forward_batch(&x, 1).unwrap();
+        assert_ne!(q0[0], q1[0], "trims must reach the backend");
+        assert_eq!(q0[1], q1[1], "other columns untouched");
+        rt.adc_refs = (0.19, 0.63);
+        let q2 = rt.forward_batch(&x, 1).unwrap();
+        assert!(q2[1] < q1[1], "wider ADC range => smaller code");
     }
 }

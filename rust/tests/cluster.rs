@@ -1,0 +1,191 @@
+//! Multi-core cluster integration: concurrent scatter-gather serving
+//! (every reply delivered, no cross-core mixing) and a property test
+//! holding `forward_batch` / `forward_folded` / `forward_golden` to
+//! parity on every core after BISC calibration.
+
+use acore_cim::analog::{consts as c, CimAnalogModel};
+use acore_cim::config::SimConfig;
+use acore_cim::coordinator::batcher::{Batcher, ServeError};
+use acore_cim::coordinator::bisc::{AdcCharacterization, BiscEngine};
+use acore_cim::coordinator::cluster::CimCluster;
+use acore_cim::util::proptest::forall;
+use acore_cim::util::rng::Rng;
+
+fn ideal_cfg() -> SimConfig {
+    let mut cfg = SimConfig::default().scaled(0.0);
+    cfg.sigma_noise = 0.0;
+    cfg
+}
+
+/// Reference evaluation: an ideal die with the given uniform weight code.
+fn reference(weight: i32, x: &[i32]) -> Vec<u32> {
+    let mut m = CimAnalogModel::ideal();
+    m.program(&vec![weight; c::N_ROWS * c::M_COLS]);
+    m.forward_batch(x, 1)
+}
+
+#[test]
+fn concurrent_clients_no_cross_core_mixing() {
+    // each core gets DIFFERENT weights; pinned requests must always be
+    // answered by the right core's array
+    let k = 3;
+    let mut cluster = CimCluster::new(&ideal_cfg(), k);
+    for core in 0..k {
+        cluster.program_core(core, &vec![(core as i32 + 1) * 15; c::N_ROWS * c::M_COLS]);
+    }
+    let server = cluster.serve(Batcher {
+        max_batch: 32,
+        max_wait: std::time::Duration::from_millis(1),
+    });
+    let expected: Vec<Vec<Vec<u32>>> = (0..k)
+        .map(|core| {
+            (0..4)
+                .map(|t| reference((core as i32 + 1) * 15, &vec![10 + t as i32; c::N_ROWS]))
+                .collect()
+        })
+        .collect();
+    let mut joins = Vec::new();
+    for t in 0..8usize {
+        let client = server.client();
+        let expected = expected.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(t as u64 + 99);
+            for _ in 0..25 {
+                let core = (rng.next_u64() % 3) as usize;
+                let variant = (rng.next_u64() % 4) as usize;
+                let x = vec![10 + variant as i32; c::N_ROWS];
+                let q = client.mac_on(core, x).expect("request failed");
+                assert_eq!(
+                    q, expected[core][variant],
+                    "core {core} variant {variant}: reply from the wrong array"
+                );
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let (_cluster, stats) = server.join();
+    let total: u64 = stats.iter().map(|s| s.requests).sum();
+    assert_eq!(total, 8 * 25, "every request must be answered exactly once");
+    assert_eq!(stats.iter().map(|s| s.rejected).sum::<u64>(), 0);
+}
+
+#[test]
+fn round_robin_scatter_delivers_every_reply() {
+    let k = 4;
+    let n = 500;
+    let mut cluster = CimCluster::new(&ideal_cfg(), k);
+    cluster.program_all(&vec![40; c::N_ROWS * c::M_COLS]);
+    let server = cluster.serve(Batcher::default());
+    let client = server.client();
+    let expect = reference(40, &vec![30; c::N_ROWS]);
+    // pipelined scatter: all in flight at once, then gather
+    let replies: Vec<_> = (0..n)
+        .map(|_| client.submit(vec![30; c::N_ROWS]).expect("cluster gone"))
+        .collect();
+    for r in replies {
+        assert_eq!(r.recv().unwrap().unwrap(), expect);
+    }
+    drop(client);
+    let (_cluster, stats) = server.join();
+    assert_eq!(stats.len(), k);
+    let total: u64 = stats.iter().map(|s| s.requests).sum();
+    assert_eq!(total, n as u64);
+    for (core, s) in stats.iter().enumerate() {
+        // shared round-robin cursor: the load lands on every core
+        assert!(
+            s.requests >= (n / k / 2) as u64,
+            "core {core} starved: {} of {n} requests",
+            s.requests
+        );
+    }
+}
+
+#[test]
+fn cluster_rejects_bad_requests_per_request() {
+    let mut cluster = CimCluster::new(&ideal_cfg(), 2);
+    cluster.program_all(&vec![40; c::N_ROWS * c::M_COLS]);
+    let server = cluster.serve(Batcher::default());
+    let client = server.client();
+    let err = client.mac(vec![1; 5]).unwrap_err();
+    assert_eq!(err, ServeError::BadRequest { expected: c::N_ROWS, got: 5 });
+    // both workers still alive after the rejection
+    for core in 0..2 {
+        assert!(client.mac_on(core, vec![30; c::N_ROWS]).is_ok());
+    }
+    drop(client);
+    let (_cluster, stats) = server.join();
+    assert_eq!(stats.iter().map(|s| s.rejected).sum::<u64>(), 1);
+    assert_eq!(stats.iter().map(|s| s.requests).sum::<u64>(), 2);
+}
+
+#[test]
+fn per_core_path_parity_after_calibration() {
+    // K dies with distinct variation draws, all BISC-calibrated; on every
+    // core the three evaluation paths must agree:
+    //   forward_folded == forward_batch (same folded math, cached tile)
+    //   |forward_batch - forward_golden| <= 1 code (f32 vs f64 rounding)
+    let mut cfg = SimConfig::default();
+    cfg.sigma_noise = 0.0; // golden is noisy otherwise
+    let mut cluster = CimCluster::new(&cfg, 3);
+    let engine = BiscEngine::from_config(&cfg, AdcCharacterization::ideal());
+    cluster.calibrate_parallel(&engine);
+    forall("per-core path parity", 24, |rng| {
+        let core = (rng.next_u64() % 3) as usize;
+        let weights: Vec<i32> =
+            (0..c::N_ROWS * c::M_COLS).map(|_| rng.int_in(-63, 63) as i32).collect();
+        let batch = 1 + (rng.next_u64() % 6) as usize;
+        let x: Vec<i32> =
+            (0..batch * c::N_ROWS).map(|_| rng.int_in(-63, 63) as i32).collect();
+        let model = &mut cluster.cores[core].model;
+        let folded_tile = model.fold_tile(&weights);
+        let q_folded = model.forward_folded(&folded_tile, &x, batch);
+        model.program(&weights);
+        let q_batch = model.forward_batch(&x, batch);
+        if q_folded != q_batch {
+            return Err(format!("core {core}: folded != batch path"));
+        }
+        for b in 0..batch {
+            let q_gold = model.forward_golden(&x[b * c::N_ROWS..(b + 1) * c::N_ROWS]);
+            for col in 0..c::M_COLS {
+                let f = q_batch[b * c::M_COLS + col] as i64;
+                let g = q_gold[col] as i64;
+                if (f - g).abs() > 1 {
+                    return Err(format!(
+                        "core {core} b={b} col={col}: batch {f} vs golden {g}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn calibration_improves_every_core() {
+    let cfg = SimConfig::default();
+    let mut cluster = CimCluster::new(&cfg, 3);
+    let engine = BiscEngine::from_config(&cfg, AdcCharacterization::ideal());
+    // residual gain error before vs after, per core
+    let residual = |model: &mut CimAnalogModel| -> f64 {
+        engine
+            .characterize_only(model)
+            .iter()
+            .map(|(p, n)| (p.g_tot - 1.0).abs() + (n.g_tot - 1.0).abs())
+            .sum::<f64>()
+            / (2.0 * c::M_COLS as f64)
+    };
+    let before: Vec<f64> =
+        cluster.cores.iter_mut().map(|core| residual(&mut core.model)).collect();
+    cluster.calibrate_parallel(&engine);
+    for (k, core) in cluster.cores.iter_mut().enumerate() {
+        let after = residual(&mut core.model);
+        assert!(
+            after < before[k] * 0.5,
+            "core {k}: residual gain error {} -> {after}",
+            before[k]
+        );
+        assert!(core.report.is_some());
+    }
+}
