@@ -4,8 +4,9 @@
 //!     golden-model fallback otherwise),
 //!   RV32IM ISS instruction rate,
 //!   BISC calibration wall time (single die + parallel cluster),
-//!   batcher request throughput,
-//!   multi-core cluster serving throughput at K = 1, 2, 4, 8.
+//!   batcher request throughput (unified submit path),
+//!   multi-core cluster serving throughput at K = 1, 2, 4, 8, per-request
+//!     Mac + round-robin vs native MacBatch + least-loaded placement.
 
 use acore_cim::analog::variation::VariationSample;
 use acore_cim::analog::{consts as c, CimAnalogModel};
@@ -18,9 +19,19 @@ use acore_cim::util::bench::Bencher;
 use acore_cim::util::rng::Rng;
 
 /// Drive `n_requests` through a K-core cluster with `k` pipelined
-/// producer threads; returns requests/second.
-fn cluster_throughput(cfg: &SimConfig, k: usize, n_requests: usize) -> f64 {
+/// producer threads; returns requests/second. `batch == 1` submits
+/// per-request `Job::Mac`s; `batch > 1` submits native `Job::MacBatch`
+/// jobs of that size. `least_loaded` switches the placement policy from
+/// the shared round-robin cursor to the in-flight depth gauges.
+fn cluster_throughput(
+    cfg: &SimConfig,
+    k: usize,
+    n_requests: usize,
+    batch: usize,
+    least_loaded: bool,
+) -> f64 {
     use acore_cim::coordinator::batcher::Batcher;
+    use acore_cim::coordinator::service::{CimService, SubmitOpts};
     let mut cluster = CimCluster::new(cfg, k);
     cluster.program_all(&vec![40; c::N_ROWS * c::M_COLS]);
     let server = cluster.serve(Batcher::default());
@@ -31,11 +42,22 @@ fn cluster_throughput(cfg: &SimConfig, k: usize, n_requests: usize) -> f64 {
     for p in 0..producers {
         let client = server.client();
         joins.push(std::thread::spawn(move || {
-            client
-                .mac_pipelined(per_producer, 512, |i| {
-                    vec![((p + i) % 63) as i32 - 31; c::N_ROWS]
-                })
-                .expect("serving failed");
+            let opts =
+                if least_loaded { SubmitOpts::least_loaded() } else { SubmitOpts::default() };
+            let make = |i: usize| vec![((p + i) % 63) as i32 - 31; c::N_ROWS];
+            if batch > 1 {
+                client
+                    .mac_batch_pipelined(
+                        per_producer / batch,
+                        batch,
+                        (512 / batch).max(1),
+                        opts,
+                        make,
+                    )
+                    .expect("serving failed");
+            } else {
+                client.mac_pipelined_with(per_producer, 512, opts, make).expect("serving failed");
+            }
         }));
     }
     for j in joins {
@@ -44,7 +66,12 @@ fn cluster_throughput(cfg: &SimConfig, k: usize, n_requests: usize) -> f64 {
     let (_cluster, stats) = server.join();
     let dt = t0.elapsed().as_secs_f64();
     let total: u64 = stats.iter().map(|s| s.requests).sum();
-    assert_eq!(total as usize, per_producer * producers, "lost requests");
+    let expect = if batch > 1 {
+        (per_producer / batch) * batch * producers
+    } else {
+        per_producer * producers
+    };
+    assert_eq!(total as usize, expect, "lost requests");
     total as f64 / dt
 }
 
@@ -207,52 +234,63 @@ fn main() {
     );
 
     println!("\n== batcher (single worker) ==");
-    use acore_cim::coordinator::batcher::{Batcher, MacRequest};
-    use std::sync::mpsc::channel;
+    use acore_cim::coordinator::batcher::Batcher;
+    use acore_cim::coordinator::service::{CimService, Job, SubmitOpts, Ticket};
     let r = b.bench_n("batched serving: 2000 requests", 5, || {
-        let (tx, rx) = channel::<MacRequest>();
-        let cfg2 = cfg.clone();
-        let s2 = sample.clone();
-        let worker = std::thread::spawn(move || {
-            let mut m = CimAnalogModel::from_sample(&cfg2, &s2);
-            m.program(&vec![40; c::N_ROWS * c::M_COLS]);
-            Batcher::default().run(rx, &mut m)
-        });
-        let mut replies = Vec::new();
-        for i in 0..2000 {
-            let (rtx, rrx) = channel();
-            tx.send(MacRequest { x: vec![(i % 63) as i32 - 31; c::N_ROWS], reply: rtx })
-                .unwrap();
-            replies.push(rrx);
+        let mut m = CimAnalogModel::from_sample(&cfg, &sample);
+        m.program(&vec![40; c::N_ROWS * c::M_COLS]);
+        let (client, worker) = Batcher::default().spawn_solo(m);
+        let tickets: Vec<Ticket<Vec<u32>>> = (0..2000)
+            .map(|i| {
+                client
+                    .submit(
+                        Job::Mac(vec![(i % 63) as i32 - 31; c::N_ROWS]),
+                        SubmitOpts::default(),
+                    )
+                    .unwrap()
+                    .typed()
+            })
+            .collect();
+        for t in tickets {
+            t.wait().expect("request failed");
         }
-        for rr in replies {
-            rr.recv().unwrap().expect("request failed");
-        }
-        drop(tx);
-        worker.join().unwrap()
+        drop(client);
+        worker.join().unwrap().1
     });
     println!(
         "   => {:.0}k requests/s through the batcher",
         2000.0 / (r.median_ns / 1e9) / 1e3
     );
 
-    println!("\n== multi-core cluster serving (scatter-gather) ==");
+    println!("\n== multi-core cluster serving (unified submit path) ==");
     let n_requests = if fast { 20_000 } else { 80_000 };
-    let mut rps1 = 0.0;
+    let mut rr1 = 0.0;
+    let mut ll1 = 0.0;
     for k in [1usize, 2, 4, 8] {
-        // one warmup + median of 3 runs
-        let _ = cluster_throughput(&cfg, k, n_requests / 4);
-        let mut runs: Vec<f64> =
-            (0..3).map(|_| cluster_throughput(&cfg, k, n_requests)).collect();
-        runs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let rps = runs[1];
+        // one warmup + median of 3 runs per mode
+        let _ = cluster_throughput(&cfg, k, n_requests / 4, 1, false);
+        let median = |batch: usize, least_loaded: bool| {
+            let mut runs: Vec<f64> = (0..3)
+                .map(|_| cluster_throughput(&cfg, k, n_requests, batch, least_loaded))
+                .collect();
+            runs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            runs[1]
+        };
+        // the pre-redesign configuration: per-request Mac jobs, round-robin
+        let rps_rr = median(1, false);
+        // the redesigned hot path: native 64-wide MacBatch jobs, least-loaded
+        let rps_ll = median(64, true);
         if k == 1 {
-            rps1 = rps;
+            rr1 = rps_rr;
+            ll1 = rps_ll;
         }
         println!(
-            "K = {k}: {:>10.0} MAC-requests/s  ({:.2}x vs K=1)",
-            rps,
-            rps / rps1
+            "K = {k}: {:>10.0} req/s Mac+round-robin ({:.2}x vs K=1) | \
+             {:>10.0} req/s MacBatch(64)+least-loaded ({:.2}x vs K=1)",
+            rps_rr,
+            rps_rr / rr1,
+            rps_ll,
+            rps_ll / ll1
         );
     }
     println!(

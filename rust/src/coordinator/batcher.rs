@@ -1,35 +1,52 @@
-//! Request batcher: aggregates MAC requests from concurrent clients into
-//! array-sized batches for the backend — the serving-layer role of the
-//! coordinator (cf. vllm-style routers, scaled to this accelerator:
-//! batched pulses on a physical array). The multi-array scatter-gather
-//! layer on top of this lives in [`crate::coordinator::cluster`].
+//! Request batcher: the per-core serving worker behind the unified
+//! [`crate::coordinator::service`] job API (cf. vllm-style routers,
+//! scaled to this accelerator: batched pulses on a physical array). The
+//! multi-array placement/fencing layer on top of this lives in
+//! [`crate::coordinator::cluster`].
 //!
-//! Design: submitters push `MacRequest`s over an mpsc channel; the worker
-//! drains up to `max_batch` requests (waiting up to `max_wait` for the
-//! first), executes them as one batched forward, and answers each client
-//! over its own return channel. std threads + channels (tokio is not
-//! vendored; the workload is CPU-bound anyway).
+//! Design: submitters push [`JobEnvelope`]s over an mpsc channel; the
+//! worker drains them into a local priority queue (priority descending,
+//! submission order within a priority), expires jobs whose deadline has
+//! passed, coalesces adjacent `Mac` jobs into array-sized batches,
+//! executes `MacBatch` jobs natively (one backend call for the whole
+//! batch), and runs `Drain`/`Health` lifecycle jobs against the shared
+//! [`crate::coordinator::service::CoreBoard`]. std threads + channels
+//! (tokio is not vendored; the workload is CPU-bound anyway).
 //!
-//! Failure handling: a malformed request (wrong input length) is rejected
-//! with [`ServeError::BadRequest`] on its own reply channel — it must
-//! never kill the worker and strand every other queued client. A client
-//! whose worker has shut down gets [`ServeError::Disconnected`] instead
-//! of a panic.
+//! Failure handling: a malformed request (wrong input length for the
+//! backend's geometry) is rejected with [`ServeError::BadRequest`] on its
+//! own reply channel — it must never kill the worker and strand every
+//! other queued client. A job still queued past its deadline is answered
+//! with [`ServeError::DeadlineExceeded`] (never silently dropped). A
+//! client whose worker has shut down gets [`ServeError::Disconnected`]
+//! instead of a panic.
 
 use crate::analog::consts as c;
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::time::Duration;
+use crate::coordinator::bisc::BiscEngine;
+use crate::coordinator::service::{
+    CoreContext, CoreHealth, Job, JobEnvelope, JobReply, TileRef,
+};
+use std::collections::BinaryHeap;
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// Serving-layer errors surfaced to clients.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ServeError {
-    /// The request was rejected before evaluation (e.g. wrong input size).
+    /// The request was rejected before evaluation (e.g. wrong input size
+    /// for the backend's array geometry).
     BadRequest { expected: usize, got: usize },
     /// The backend failed to evaluate the batch (worker stays alive; the
     /// whole batch is answered with this error).
     Backend(String),
     /// The serving worker has shut down (channel closed mid-flight).
     Disconnected,
+    /// The job was still queued when its deadline passed; it was never
+    /// executed.
+    DeadlineExceeded,
+    /// Every core eligible under the placement policy is fenced.
+    NoHealthyCore,
 }
 
 impl std::fmt::Display for ServeError {
@@ -40,29 +57,33 @@ impl std::fmt::Display for ServeError {
             }
             ServeError::Backend(msg) => write!(f, "backend failed: {msg}"),
             ServeError::Disconnected => write!(f, "serving worker disconnected"),
+            ServeError::DeadlineExceeded => {
+                write!(f, "deadline exceeded before the job was executed")
+            }
+            ServeError::NoHealthyCore => {
+                write!(f, "no healthy core available under the placement policy")
+            }
         }
     }
 }
 
 impl std::error::Error for ServeError {}
 
-/// What a client receives back for one MAC request.
-pub type MacReply = Result<Vec<u32>, ServeError>;
-
-pub struct MacRequest {
-    pub x: Vec<i32>,
-    pub reply: Sender<MacReply>,
-}
-
 /// Statistics from a batcher run.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct BatcherStats {
+    /// MAC evaluations answered successfully (batch members count
+    /// individually; `Drain`/`Health` control jobs are not counted)
     pub requests: u64,
+    /// backend invocations
     pub batches: u64,
     pub max_batch_seen: usize,
     /// requests answered with an error instead of a result — malformed
     /// requests and members of a failed batch (not counted in `requests`)
     pub rejected: u64,
+    /// requests answered with [`ServeError::DeadlineExceeded`] because
+    /// they were still queued when their deadline passed
+    pub expired: u64,
 }
 
 impl BatcherStats {
@@ -80,16 +101,62 @@ impl BatcherStats {
         self.batches += other.batches;
         self.max_batch_seen = self.max_batch_seen.max(other.max_batch_seen);
         self.rejected += other.rejected;
+        self.expired += other.expired;
     }
 }
 
 /// A backend that evaluates batches of MAC requests. A failed batch is an
 /// `Err` — the batcher answers every request in it with
-/// [`ServeError::Backend`] and keeps serving.
+/// [`ServeError::Backend`] and keeps serving. The geometry methods drive
+/// request admission, so a backend with a non-default array shape rejects
+/// wrong-sized inputs correctly; the lifecycle methods give `Drain` and
+/// `Health` jobs their meaning (backends that cannot characterize
+/// themselves return `None` and the jobs degrade to state reports).
 pub trait MacBackend {
     fn forward_batch(&mut self, x: &[i32], batch: usize) -> Result<Vec<u32>, String>;
+
+    /// Input codes expected per request (admission checks against this,
+    /// not a hard-coded constant).
+    fn rows(&self) -> usize {
+        c::N_ROWS
+    }
+
+    /// Output codes produced per request.
+    fn cols(&self) -> usize {
+        c::M_COLS
+    }
+
+    /// Evaluate a batch against one pre-folded tile of the backend's
+    /// tile bank (DNN serving path); backends without a bank reject.
+    fn forward_tile(
+        &mut self,
+        tile: &TileRef,
+        _x: &[i32],
+        _batch: usize,
+    ) -> Result<Vec<u32>, String> {
+        Err(format!(
+            "backend has no tile bank (requested layer {} tile ({}, {}))",
+            tile.layer, tile.tr, tile.tc
+        ))
+    }
+
+    /// Recalibrate the die and return the post-calibration residual
+    /// (mean per-line |g_tot - 1|), or `None` if unsupported.
+    fn recalibrate(&mut self, _engine: &BiscEngine) -> Option<f64> {
+        None
+    }
+
+    /// Measure the BISC residual without correcting anything, or `None`
+    /// if unsupported.
+    fn health_residual(&mut self, _engine: &BiscEngine) -> Option<f64> {
+        None
+    }
 }
 
+// NOTE: the lifecycle methods stay at their `None` defaults here — BISC
+// characterization clobbers the array's programmed weights, and a bare
+// model cannot restore them. [`crate::coordinator::cluster::ClusterCore`]
+// tracks its workload weights and implements the full lifecycle.
 impl MacBackend for crate::analog::CimAnalogModel {
     fn forward_batch(&mut self, x: &[i32], batch: usize) -> Result<Vec<u32>, String> {
         Ok(crate::analog::CimAnalogModel::forward_batch(self, x, batch))
@@ -99,6 +166,61 @@ impl MacBackend for crate::analog::CimAnalogModel {
 impl MacBackend for crate::runtime::CimRuntime {
     fn forward_batch(&mut self, x: &[i32], batch: usize) -> Result<Vec<u32>, String> {
         crate::runtime::CimRuntime::forward_batch(self, x, batch).map_err(|e| e.0)
+    }
+}
+
+/// A queued job: submission order breaks priority ties (FIFO within a
+/// priority class).
+struct Pending {
+    seq: u64,
+    env: JobEnvelope,
+}
+
+impl Pending {
+    fn key(&self) -> (u8, std::cmp::Reverse<u64>) {
+        (self.env.priority, std::cmp::Reverse(self.seq))
+    }
+
+    fn expired(&self) -> bool {
+        self.env.deadline.is_some_and(|d| Instant::now() >= d)
+    }
+}
+
+impl PartialEq for Pending {
+    fn eq(&self, other: &Self) -> bool {
+        self.key() == other.key()
+    }
+}
+
+impl Eq for Pending {}
+
+impl PartialOrd for Pending {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Pending {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.key().cmp(&other.key())
+    }
+}
+
+/// Copyable discriminant so the dispatch loop can move the envelope.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum JobKind {
+    Mac,
+    MacBatch,
+    Drain,
+    Health,
+}
+
+fn kind_of(job: &Job) -> JobKind {
+    match job {
+        Job::Mac(_) => JobKind::Mac,
+        Job::MacBatch { .. } => JobKind::MacBatch,
+        Job::Drain => JobKind::Drain,
+        Job::Health => JobKind::Health,
     }
 }
 
@@ -115,159 +237,529 @@ impl Default for Batcher {
 }
 
 impl Batcher {
-    /// Validate a request; reject it on its own reply channel if malformed.
-    /// Returns the request back when it is well-formed.
-    fn admit(r: MacRequest, stats: &mut BatcherStats) -> Option<MacRequest> {
-        if r.x.len() == c::N_ROWS {
-            Some(r)
-        } else {
-            stats.rejected += 1;
-            let _ = r
-                .reply
-                .send(Err(ServeError::BadRequest { expected: c::N_ROWS, got: r.x.len() }));
-            None
+    /// Validate a job against the backend geometry; push it on the local
+    /// priority queue or reject it on its own reply channel. Tracks the
+    /// earliest live deadline so the dispatch loop can sweep buried
+    /// expired jobs (a low-priority job must still be ANSWERED
+    /// `DeadlineExceeded` while higher-priority traffic keeps the heap
+    /// top occupied — never left blocking its client).
+    fn admit<B: MacBackend>(
+        env: JobEnvelope,
+        queue: &mut BinaryHeap<Pending>,
+        seq: &mut u64,
+        earliest: &mut Option<Instant>,
+        gate: &mut Option<u64>,
+        backend: &B,
+        ctx: &CoreContext,
+        stats: &mut BatcherStats,
+    ) {
+        let rows = backend.rows();
+        let bad = match &env.job {
+            Job::Mac(x) => {
+                if x.len() == rows {
+                    None
+                } else {
+                    Some(x.len())
+                }
+            }
+            Job::MacBatch { xs, .. } => {
+                if xs.is_empty() {
+                    Some(0)
+                } else {
+                    xs.iter().find(|x| x.len() != rows).map(|x| x.len())
+                }
+            }
+            Job::Drain | Job::Health => None,
+        };
+        if let Some(got) = bad {
+            stats.rejected += env.weight as u64;
+            // release the depth reservation BEFORE replying so a client
+            // that has gathered every reply observes settled gauges
+            ctx.board.sub_in_flight(ctx.core, env.weight);
+            let _ = env.reply.send(Err(ServeError::BadRequest { expected: rows, got }));
+            return;
         }
+        if let Some(d) = env.deadline {
+            *earliest = Some(earliest.map_or(d, |e| e.min(d)));
+        }
+        // a Drain becomes a barrier the moment it is ADMITTED: jobs with
+        // a later seq must not run before it, whatever their priority
+        if kind_of(&env.job) == JobKind::Drain && gate.is_none() {
+            *gate = Some(*seq);
+        }
+        queue.push(Pending { seq: *seq, env });
+        *seq += 1;
+    }
+
+    /// Earliest drain-barrier seq among the queued jobs, if any.
+    fn min_drain_seq(queue: &BinaryHeap<Pending>) -> Option<u64> {
+        queue
+            .iter()
+            .filter(|p| kind_of(&p.env.job) == JobKind::Drain)
+            .map(|p| p.seq)
+            .min()
+    }
+
+    /// Expire every waiting job whose deadline has passed — in the heap
+    /// AND in the barrier-deferred set — and recompute the earliest live
+    /// deadline (and the drain barrier, in case an expired job WAS the
+    /// barrier). Runs only when a tracked deadline has actually passed,
+    /// so the O(n) rebuild is amortized over jobs that carried
+    /// deadlines. The parked drain itself is answered by the caller's
+    /// stash-expiry check.
+    fn sweep_expired(
+        queue: &mut BinaryHeap<Pending>,
+        deferred: &mut Vec<Pending>,
+        earliest: &mut Option<Instant>,
+        gate: &mut Option<u64>,
+        stash: &Option<Pending>,
+        ctx: &CoreContext,
+        stats: &mut BatcherStats,
+    ) {
+        let now = Instant::now();
+        if !earliest.is_some_and(|e| now >= e) {
+            return;
+        }
+        let mut next: Option<Instant> = None;
+        let mut expired_drain = false;
+        let mut retain = |p: Pending, kept: &mut Vec<Pending>| {
+            if p.env.deadline.is_some_and(|d| now >= d) {
+                expired_drain |= kind_of(&p.env.job) == JobKind::Drain;
+                Self::expire(p, ctx, stats);
+            } else {
+                if let Some(d) = p.env.deadline {
+                    next = Some(next.map_or(d, |e| e.min(d)));
+                }
+                kept.push(p);
+            }
+        };
+        let mut kept = Vec::with_capacity(queue.len());
+        for p in std::mem::take(queue).into_vec() {
+            retain(p, &mut kept);
+        }
+        let mut kept_deferred = Vec::with_capacity(deferred.len());
+        for p in std::mem::take(deferred) {
+            retain(p, &mut kept_deferred);
+        }
+        drop(retain);
+        *queue = BinaryHeap::from(kept);
+        *deferred = kept_deferred;
+        // the parked drain's deadline stays tracked so the next pass
+        // (and the caller's stash-expiry check) stays armed
+        if let Some(s) = stash {
+            if let Some(d) = s.env.deadline {
+                next = Some(next.map_or(d, |e| e.min(d)));
+            }
+        }
+        *earliest = next;
+        if expired_drain {
+            *gate = Self::min_drain_seq(queue);
+        }
+    }
+
+    /// Shared mis-shaped-output message so the Mac and MacBatch
+    /// execution paths cannot drift apart.
+    fn shape_error(got: usize, want: usize) -> String {
+        format!("backend returned {got} outputs, expected {want}")
+    }
+
+    /// Answer an expired job and release its depth reservation.
+    fn expire(p: Pending, ctx: &CoreContext, stats: &mut BatcherStats) {
+        stats.expired += p.env.weight as u64;
+        ctx.board.sub_in_flight(ctx.core, p.env.weight);
+        let _ = p.env.reply.send(Err(ServeError::DeadlineExceeded));
+    }
+
+    /// Coalesce the popped `Mac` job with further queued `Mac` jobs (in
+    /// priority order) and execute them as one backend batch. With a
+    /// drain barrier active (`gate_seq`), jobs admitted after the drain
+    /// are left on the queue — they run after the recalibration.
+    fn exec_macs<B: MacBackend>(
+        &self,
+        first: Pending,
+        queue: &mut BinaryHeap<Pending>,
+        gate_seq: Option<u64>,
+        backend: &mut B,
+        ctx: &CoreContext,
+        stats: &mut BatcherStats,
+    ) {
+        let rows = backend.rows();
+        let cols = backend.cols();
+        let mut pendings = vec![first];
+        while pendings.len() < self.max_batch {
+            match queue.peek() {
+                Some(p)
+                    if kind_of(&p.env.job) == JobKind::Mac
+                        && gate_seq.map_or(true, |g| p.seq < g) =>
+                {
+                    let p = queue.pop().expect("peeked element");
+                    if p.expired() {
+                        Self::expire(p, ctx, stats);
+                    } else {
+                        pendings.push(p);
+                    }
+                }
+                _ => break,
+            }
+        }
+        let batch = pendings.len();
+        let mut x = Vec::with_capacity(batch * rows);
+        for p in &pendings {
+            if let Job::Mac(xi) = &p.env.job {
+                x.extend_from_slice(xi);
+            }
+        }
+        match backend.forward_batch(&x, batch) {
+            // a mis-shaped output is a backend failure, never a panic —
+            // the worker must survive backend misbehavior
+            Ok(q) if q.len() == batch * cols => {
+                for (i, p) in pendings.into_iter().enumerate() {
+                    let out = q[i * cols..(i + 1) * cols].to_vec();
+                    ctx.board.sub_in_flight(ctx.core, p.env.weight);
+                    let _ = p.env.reply.send(Ok(JobReply::Mac(out)));
+                }
+                stats.requests += batch as u64;
+                stats.batches += 1;
+                stats.max_batch_seen = stats.max_batch_seen.max(batch);
+            }
+            res => {
+                // the batch failed, the worker survives: answer every
+                // request with the backend error and keep serving
+                let msg = match res {
+                    Ok(q) => Self::shape_error(q.len(), batch * cols),
+                    Err(msg) => msg,
+                };
+                for p in pendings {
+                    ctx.board.sub_in_flight(ctx.core, p.env.weight);
+                    let _ = p.env.reply.send(Err(ServeError::Backend(msg.clone())));
+                }
+                stats.rejected += batch as u64;
+            }
+        }
+    }
+
+    /// Execute a client-built batch natively: one backend call, one reply.
+    fn exec_batch<B: MacBackend>(
+        p: Pending,
+        backend: &mut B,
+        ctx: &CoreContext,
+        stats: &mut BatcherStats,
+    ) {
+        let rows = backend.rows();
+        let cols = backend.cols();
+        let env = p.env;
+        let (weight, reply) = (env.weight, env.reply);
+        let Job::MacBatch { xs, tile } = env.job else {
+            unreachable!("exec_batch dispatched on a non-batch job")
+        };
+        let n = xs.len();
+        let mut x = Vec::with_capacity(n * rows);
+        for xi in &xs {
+            x.extend_from_slice(xi);
+        }
+        let res = match tile {
+            Some(t) => backend.forward_tile(&t, &x, n),
+            None => backend.forward_batch(&x, n),
+        };
+        ctx.board.sub_in_flight(ctx.core, weight);
+        match res {
+            // see exec_macs: mis-shaped outputs are backend failures
+            Ok(q) if q.len() == n * cols => {
+                let outs: Vec<Vec<u32>> =
+                    (0..n).map(|i| q[i * cols..(i + 1) * cols].to_vec()).collect();
+                let _ = reply.send(Ok(JobReply::MacBatch(outs)));
+                stats.requests += n as u64;
+                stats.batches += 1;
+                stats.max_batch_seen = stats.max_batch_seen.max(n);
+            }
+            res => {
+                let msg = match res {
+                    Ok(q) => Self::shape_error(q.len(), n * cols),
+                    Err(msg) => msg,
+                };
+                let _ = reply.send(Err(ServeError::Backend(msg)));
+                stats.rejected += n as u64;
+            }
+        }
+    }
+
+    /// Drain lifecycle step: recalibrate the die and rejoin the scheduler
+    /// if the residual is back inside the band. Control jobs are not
+    /// counted in request statistics.
+    fn exec_drain<B: MacBackend>(p: Pending, backend: &mut B, ctx: &CoreContext) {
+        let residual = ctx.engine.as_ref().and_then(|e| backend.recalibrate(e));
+        let recalibrated = residual.is_some();
+        if let Some(r) = residual {
+            // the die's trims changed: gather-side schedules holding
+            // corrections measured against the old trims can detect it
+            ctx.board.bump_recal_epoch(ctx.core);
+            if r <= ctx.health_band {
+                ctx.board.unfence(ctx.core);
+            } else {
+                ctx.board.fence(ctx.core);
+            }
+        }
+        let health = CoreHealth {
+            core: ctx.core,
+            residual,
+            fenced: ctx.board.is_fenced(ctx.core),
+            recalibrated,
+        };
+        ctx.board.sub_in_flight(ctx.core, p.env.weight);
+        let _ = p.env.reply.send(Ok(JobReply::Health(health)));
+    }
+
+    /// Health probe: measure the residual and fence the core if it is
+    /// out of band (rejoin happens only through `Drain`).
+    fn exec_health<B: MacBackend>(p: Pending, backend: &mut B, ctx: &CoreContext) {
+        let residual = ctx.engine.as_ref().and_then(|e| backend.health_residual(e));
+        if let Some(r) = residual {
+            if r > ctx.health_band {
+                ctx.board.fence(ctx.core);
+            }
+        }
+        let health = CoreHealth {
+            core: ctx.core,
+            residual,
+            fenced: ctx.board.is_fenced(ctx.core),
+            recalibrated: false,
+        };
+        ctx.board.sub_in_flight(ctx.core, p.env.weight);
+        let _ = p.env.reply.send(Ok(JobReply::Health(health)));
     }
 
     /// Serve until the request channel closes. Returns run statistics.
-    pub fn run<B: MacBackend>(&self, rx: Receiver<MacRequest>, backend: &mut B) -> BatcherStats {
+    pub fn run<B: MacBackend>(
+        &self,
+        rx: Receiver<JobEnvelope>,
+        backend: &mut B,
+        ctx: &CoreContext,
+    ) -> BatcherStats {
         let mut stats = BatcherStats::default();
+        let mut queue: BinaryHeap<Pending> = BinaryHeap::new();
+        let mut seq: u64 = 0;
+        let mut earliest: Option<Instant> = None;
+        // drain barrier: from the moment a Drain is ADMITTED (`gate` =
+        // its seq), jobs admitted after it are set aside in `deferred`
+        // whatever their priority; once every earlier-admitted job has
+        // completed, the drain (parked in `stash` when popped early)
+        // executes and the deferred work resumes. A seq barrier, not a
+        // priority: earlier work of ANY priority finishes first, later
+        // arrivals can neither starve the drain nor run on the
+        // not-yet-recalibrated die.
+        let mut gate: Option<u64> = None;
+        let mut stash: Option<Pending> = None;
+        let mut deferred: Vec<Pending> = Vec::new();
         loop {
-            // block for the first request of a batch
-            let first = match rx.recv() {
-                Ok(r) => r,
-                Err(_) => return stats,
-            };
-            let mut pending = Vec::with_capacity(self.max_batch.min(64));
-            if let Some(r) = Self::admit(first, &mut stats) {
-                pending.push(r);
-            }
-            // opportunistically drain more, up to max_batch / max_wait
-            let deadline = std::time::Instant::now() + self.max_wait;
-            while pending.len() < self.max_batch {
-                let now = std::time::Instant::now();
-                if now >= deadline {
-                    break;
+            // release the barrier once no pre-drain work remains
+            let release = stash
+                .as_ref()
+                .map_or(false, |s| !queue.iter().any(|p| p.seq < s.seq));
+            if release {
+                let drain = stash.take().expect("release implies a parked drain");
+                if drain.expired() {
+                    Self::expire(drain, ctx, &mut stats);
+                } else {
+                    Self::exec_drain(drain, backend, ctx);
                 }
-                match rx.recv_timeout(deadline - now) {
-                    Ok(r) => {
-                        if let Some(r) = Self::admit(r, &mut stats) {
-                            pending.push(r);
-                        }
+                queue.extend(deferred.drain(..));
+                gate = Self::min_drain_seq(&queue);
+            }
+            if queue.is_empty() && stash.is_none() && deferred.is_empty() {
+                // block for the first job of a round
+                match rx.recv() {
+                    Ok(env) => Self::admit(
+                        env,
+                        &mut queue,
+                        &mut seq,
+                        &mut earliest,
+                        &mut gate,
+                        backend,
+                        ctx,
+                        &mut stats,
+                    ),
+                    Err(_) => return stats,
+                }
+                // opportunistically wait for more, up to max_batch /
+                // max_wait — lets batches (and higher-priority arrivals)
+                // form before execution starts
+                let until = Instant::now() + self.max_wait;
+                while queue.len() < self.max_batch {
+                    let now = Instant::now();
+                    if now >= until {
+                        break;
                     }
-                    Err(RecvTimeoutError::Timeout) => break,
-                    Err(RecvTimeoutError::Disconnected) => break,
-                }
-            }
-            if pending.is_empty() {
-                continue; // everything in this round was rejected
-            }
-            // assemble the batch
-            let batch = pending.len();
-            let mut x = Vec::with_capacity(batch * c::N_ROWS);
-            for r in &pending {
-                x.extend_from_slice(&r.x);
-            }
-            match backend.forward_batch(&x, batch) {
-                Ok(q) => {
-                    for (i, r) in pending.into_iter().enumerate() {
-                        let out = q[i * c::M_COLS..(i + 1) * c::M_COLS].to_vec();
-                        let _ = r.reply.send(Ok(out)); // client may have gone away
+                    match rx.recv_timeout(until - now) {
+                        Ok(env) => Self::admit(
+                            env,
+                            &mut queue,
+                            &mut seq,
+                            &mut earliest,
+                            &mut gate,
+                            backend,
+                            ctx,
+                            &mut stats,
+                        ),
+                        Err(_) => break,
                     }
-                    stats.requests += batch as u64;
-                    stats.batches += 1;
-                    stats.max_batch_seen = stats.max_batch_seen.max(batch);
                 }
-                Err(msg) => {
-                    // the batch failed, the worker survives: answer every
-                    // request with the backend error and keep serving
-                    for r in pending {
-                        let _ = r.reply.send(Err(ServeError::Backend(msg.clone())));
+            }
+            // keep the priority queue current before every dispatch, and
+            // answer any queued job whose deadline has passed — even one
+            // buried under higher-priority traffic
+            while let Ok(env) = rx.try_recv() {
+                Self::admit(
+                    env,
+                    &mut queue,
+                    &mut seq,
+                    &mut earliest,
+                    &mut gate,
+                    backend,
+                    ctx,
+                    &mut stats,
+                );
+            }
+            let gate_before = gate;
+            Self::sweep_expired(
+                &mut queue,
+                &mut deferred,
+                &mut earliest,
+                &mut gate,
+                &stash,
+                ctx,
+                &mut stats,
+            );
+            // a parked drain whose own deadline has passed is answered
+            // immediately and its barrier dissolves
+            if stash.as_ref().is_some_and(|s| s.expired()) {
+                let drain = stash.take().expect("checked above");
+                Self::expire(drain, ctx, &mut stats);
+                queue.extend(deferred.drain(..));
+                gate = Self::min_drain_seq(&queue);
+            } else if let Some(s) = &stash {
+                // a parked drain is always the earliest barrier
+                gate = Some(s.seq);
+            }
+            if gate != gate_before && !deferred.is_empty() {
+                // the barrier moved (its drain expired mid-queue):
+                // requeue deferred work — it may itself contain the next
+                // drain — and recompute the barrier over the whole queue
+                queue.extend(deferred.drain(..));
+                gate = Self::min_drain_seq(&queue);
+                if let Some(s) = &stash {
+                    gate = Some(s.seq);
+                }
+            }
+            let Some(top) = queue.pop() else { continue };
+            // work admitted after an active drain barrier waits until
+            // the recalibration has run
+            if gate.is_some_and(|g| top.seq > g) {
+                deferred.push(top);
+                continue;
+            }
+            if top.expired() {
+                let was_drain = kind_of(&top.env.job) == JobKind::Drain;
+                Self::expire(top, ctx, &mut stats);
+                if was_drain {
+                    // requeue deferred work FIRST: it may contain a later
+                    // drain that must become the new barrier
+                    queue.extend(deferred.drain(..));
+                    gate = Self::min_drain_seq(&queue);
+                }
+                continue;
+            }
+            match kind_of(&top.env.job) {
+                JobKind::Mac => self.exec_macs(top, &mut queue, gate, backend, ctx, &mut stats),
+                JobKind::MacBatch => Self::exec_batch(top, backend, ctx, &mut stats),
+                JobKind::Drain => {
+                    if queue.iter().any(|p| p.seq < top.seq) {
+                        // earlier-admitted work still queued: park the
+                        // drain until it has all completed
+                        stash = Some(top);
+                    } else {
+                        Self::exec_drain(top, backend, ctx);
+                        // requeue deferred work FIRST: it may contain a
+                        // later drain that must become the new barrier
+                        queue.extend(deferred.drain(..));
+                        gate = Self::min_drain_seq(&queue);
                     }
-                    stats.rejected += batch as u64;
                 }
+                JobKind::Health => Self::exec_health(top, backend, ctx),
             }
         }
     }
-}
 
-/// Convenience client handle for a single worker channel.
-pub struct Client {
-    tx: Sender<MacRequest>,
-}
-
-impl Client {
-    pub fn new(tx: Sender<MacRequest>) -> Self {
-        Self { tx }
-    }
-
-    /// Submit one MAC and wait for the reply. Never panics: a shut-down
-    /// worker surfaces as `Err(ServeError::Disconnected)`.
-    pub fn mac(&self, x: Vec<i32>) -> Result<Vec<u32>, ServeError> {
-        let (reply_tx, reply_rx) = channel();
-        self.tx
-            .send(MacRequest { x, reply: reply_tx })
-            .map_err(|_| ServeError::Disconnected)?;
-        reply_rx.recv().map_err(|_| ServeError::Disconnected)?
+    /// Spawn a stand-alone single-core service worker around `backend`:
+    /// returns the client handle and the worker thread (which yields the
+    /// backend and its run statistics once every client clone is
+    /// dropped).
+    pub fn spawn_solo<B: MacBackend + Send + 'static>(
+        self,
+        mut backend: B,
+    ) -> (Client, std::thread::JoinHandle<(B, BatcherStats)>) {
+        let (tx, rx) = channel::<JobEnvelope>();
+        let ctx = CoreContext::solo();
+        let board = Arc::clone(&ctx.board);
+        let handle = std::thread::spawn(move || {
+            let stats = self.run(rx, &mut backend, &ctx);
+            (backend, stats)
+        });
+        (Client::new(vec![tx], board), handle)
     }
 }
+
+/// Client handle for a single worker channel — the one-core case of the
+/// shared [`crate::coordinator::service::ServiceClient`] (placement
+/// policies degenerate to core 0).
+pub use crate::coordinator::service::ServiceClient as Client;
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::analog::CimAnalogModel;
+    use crate::coordinator::service::{CimService, CoreBoard, SubmitOpts, Ticket, PRI_HIGH};
     use crate::util::rng::Rng;
-    use std::sync::Arc;
+    use std::sync::mpsc::channel;
+    use std::sync::{Condvar, Mutex};
 
-    fn spawn_batcher(
-        batcher: Batcher,
-    ) -> (Sender<MacRequest>, std::thread::JoinHandle<BatcherStats>) {
-        let (tx, rx) = channel::<MacRequest>();
-        let handle = std::thread::spawn(move || {
-            let mut model = CimAnalogModel::ideal();
-            model.program(&vec![40; c::N_ROWS * c::M_COLS]);
-            batcher.run(rx, &mut model)
-        });
-        (tx, handle)
+    fn programmed_model() -> CimAnalogModel {
+        let mut model = CimAnalogModel::ideal();
+        model.program(&vec![40; c::N_ROWS * c::M_COLS]);
+        model
     }
 
     #[test]
     fn single_client_roundtrip() {
-        let (tx, handle) = spawn_batcher(Batcher::default());
-        let client = Client::new(tx.clone());
+        let (client, handle) = Batcher::default().spawn_solo(programmed_model());
         let q = client.mac(vec![30; c::N_ROWS]).unwrap();
         assert_eq!(q.len(), c::M_COLS);
         // matches a direct evaluation
-        let mut model = CimAnalogModel::ideal();
-        model.program(&vec![40; c::N_ROWS * c::M_COLS]);
+        let mut model = programmed_model();
         let direct = model.forward_batch(&vec![30; c::N_ROWS], 1);
         assert_eq!(q, direct);
         drop(client);
-        drop(tx);
-        let stats = handle.join().unwrap();
+        let (_backend, stats) = handle.join().unwrap();
         assert_eq!(stats.requests, 1);
     }
 
     #[test]
     fn concurrent_clients_all_answered_correctly() {
-        let (tx, handle) = spawn_batcher(Batcher {
+        let (client, handle) = Batcher {
             max_batch: 16,
             max_wait: Duration::from_millis(2),
-        });
-        let tx = Arc::new(tx);
+        }
+        .spawn_solo(programmed_model());
         let mut joins = Vec::new();
         for t in 0..8 {
-            let tx = Sender::clone(&tx);
+            let client = client.clone();
             joins.push(std::thread::spawn(move || {
-                let client = Client::new(tx);
                 let mut rng = Rng::new(t as u64);
                 for _ in 0..20 {
                     let x: Vec<i32> =
                         (0..c::N_ROWS).map(|_| rng.int_in(-63, 63) as i32).collect();
                     let q = client.mac(x.clone()).unwrap();
                     // verify against an independent model
-                    let mut model = CimAnalogModel::ideal();
-                    model.program(&vec![40; c::N_ROWS * c::M_COLS]);
+                    let mut model = programmed_model();
                     assert_eq!(q, model.forward_batch(&x, 1));
                 }
             }));
@@ -275,30 +767,33 @@ mod tests {
         for j in joins {
             j.join().unwrap();
         }
-        drop(tx);
-        let stats = handle.join().unwrap();
+        drop(client);
+        let (_backend, stats) = handle.join().unwrap();
         assert_eq!(stats.requests, 8 * 20);
         assert!(stats.batches <= stats.requests);
     }
 
     #[test]
     fn batching_actually_batches_under_load() {
-        let (tx, handle) = spawn_batcher(Batcher {
+        let (client, handle) = Batcher {
             max_batch: 64,
             max_wait: Duration::from_millis(20),
-        });
+        }
+        .spawn_solo(programmed_model());
         // pre-queue many requests before the worker can drain them
-        let mut replies = Vec::new();
-        for _ in 0..50 {
-            let (rtx, rrx) = channel();
-            tx.send(MacRequest { x: vec![10; c::N_ROWS], reply: rtx }).unwrap();
-            replies.push(rrx);
+        let tickets: Vec<Ticket<Vec<u32>>> = (0..50)
+            .map(|_| {
+                client
+                    .submit(Job::Mac(vec![10; c::N_ROWS]), SubmitOpts::default())
+                    .unwrap()
+                    .typed()
+            })
+            .collect();
+        for t in tickets {
+            assert_eq!(t.wait().unwrap().len(), c::M_COLS);
         }
-        for r in replies {
-            assert_eq!(r.recv().unwrap().unwrap().len(), c::M_COLS);
-        }
-        drop(tx);
-        let stats = handle.join().unwrap();
+        drop(client);
+        let (_backend, stats) = handle.join().unwrap();
         assert!(
             stats.mean_batch() > 2.0,
             "expected batching, mean batch {}",
@@ -309,8 +804,7 @@ mod tests {
 
     #[test]
     fn malformed_request_rejected_without_killing_worker() {
-        let (tx, handle) = spawn_batcher(Batcher::default());
-        let client = Client::new(tx.clone());
+        let (client, handle) = Batcher::default().spawn_solo(programmed_model());
         // wrong input length: must come back as BadRequest, not a panic
         let err = client.mac(vec![1; 3]).unwrap_err();
         assert_eq!(err, ServeError::BadRequest { expected: c::N_ROWS, got: 3 });
@@ -318,35 +812,38 @@ mod tests {
         let q = client.mac(vec![30; c::N_ROWS]).unwrap();
         assert_eq!(q.len(), c::M_COLS);
         drop(client);
-        drop(tx);
-        let stats = handle.join().unwrap();
+        let (_backend, stats) = handle.join().unwrap();
         assert_eq!(stats.requests, 1);
         assert_eq!(stats.rejected, 1);
     }
 
     #[test]
     fn bad_request_inside_a_batch_spares_the_others() {
-        let (tx, handle) = spawn_batcher(Batcher {
+        let (client, handle) = Batcher {
             max_batch: 64,
             max_wait: Duration::from_millis(20),
-        });
-        let mut replies = Vec::new();
-        for i in 0..10 {
-            let (rtx, rrx) = channel();
-            let x = if i == 4 { vec![0; 7] } else { vec![10; c::N_ROWS] };
-            tx.send(MacRequest { x, reply: rtx }).unwrap();
-            replies.push(rrx);
         }
-        for (i, r) in replies.into_iter().enumerate() {
-            let reply = r.recv().unwrap();
+        .spawn_solo(programmed_model());
+        let mut tickets = Vec::new();
+        for i in 0..10 {
+            let x = if i == 4 { vec![0; 7] } else { vec![10; c::N_ROWS] };
+            tickets.push(
+                client
+                    .submit(Job::Mac(x), SubmitOpts::default())
+                    .unwrap()
+                    .typed::<Vec<u32>>(),
+            );
+        }
+        for (i, t) in tickets.into_iter().enumerate() {
+            let reply = t.wait();
             if i == 4 {
                 assert!(matches!(reply, Err(ServeError::BadRequest { .. })));
             } else {
                 assert_eq!(reply.unwrap().len(), c::M_COLS);
             }
         }
-        drop(tx);
-        let stats = handle.join().unwrap();
+        drop(client);
+        let (_backend, stats) = handle.join().unwrap();
         assert_eq!(stats.requests, 9);
         assert_eq!(stats.rejected, 1);
     }
@@ -369,40 +866,236 @@ mod tests {
 
     #[test]
     fn backend_failure_answers_batch_and_keeps_serving() {
-        let (tx, rx) = channel::<MacRequest>();
-        let handle = std::thread::spawn(move || {
-            let mut backend = FlakyBackend { fail: true };
-            Batcher::default().run(rx, &mut backend)
-        });
-        let client = Client::new(tx.clone());
+        let (client, handle) = Batcher::default().spawn_solo(FlakyBackend { fail: true });
         let err = client.mac(vec![0; c::N_ROWS]).unwrap_err();
         assert_eq!(err, ServeError::Backend("transient backend failure".to_string()));
         // the worker must survive a backend failure and serve the next batch
         let q = client.mac(vec![0; c::N_ROWS]).unwrap();
         assert_eq!(q.len(), c::M_COLS);
         drop(client);
-        drop(tx);
-        let stats = handle.join().unwrap();
+        let (_backend, stats) = handle.join().unwrap();
         assert_eq!(stats.requests, 1);
         assert_eq!(stats.rejected, 1);
     }
 
     #[test]
     fn client_survives_worker_shutdown() {
-        let (tx, handle) = spawn_batcher(Batcher::default());
-        let client = Client::new(tx.clone());
-        drop(tx);
-        // answer one request, then shut the worker down by dropping the
-        // last sender (the client's own); a subsequent call must error.
+        let (client, handle) = Batcher::default().spawn_solo(programmed_model());
         let q = client.mac(vec![5; c::N_ROWS]).unwrap();
         assert_eq!(q.len(), c::M_COLS);
         drop(client);
-        let stats = handle.join().unwrap();
+        let (_backend, stats) = handle.join().unwrap();
         assert_eq!(stats.requests, 1);
-        // a client whose channel is already closed gets Disconnected
-        let (dead_tx, dead_rx) = channel::<MacRequest>();
+        // a client whose worker is already gone gets Disconnected
+        let (dead_tx, dead_rx) = channel::<JobEnvelope>();
         drop(dead_rx);
-        let dead = Client::new(dead_tx);
+        let dead = Client::new(vec![dead_tx], Arc::new(CoreBoard::new(1)));
         assert_eq!(dead.mac(vec![5; c::N_ROWS]).unwrap_err(), ServeError::Disconnected);
+    }
+
+    /// Backend with a non-default geometry: admission must follow it.
+    struct SmallBackend;
+
+    impl MacBackend for SmallBackend {
+        fn forward_batch(&mut self, _x: &[i32], batch: usize) -> Result<Vec<u32>, String> {
+            Ok(vec![0; batch * 3])
+        }
+
+        fn rows(&self) -> usize {
+            7
+        }
+
+        fn cols(&self) -> usize {
+            3
+        }
+    }
+
+    #[test]
+    fn admission_follows_backend_geometry_not_constants() {
+        let (client, handle) = Batcher::default().spawn_solo(SmallBackend);
+        // the default array size is WRONG for this backend
+        let err = client.mac(vec![0; c::N_ROWS]).unwrap_err();
+        assert_eq!(err, ServeError::BadRequest { expected: 7, got: c::N_ROWS });
+        // the backend's own geometry is right
+        let q = client.mac(vec![0; 7]).unwrap();
+        assert_eq!(q.len(), 3);
+        drop(client);
+        let (_backend, stats) = handle.join().unwrap();
+        assert_eq!(stats.requests, 1);
+        assert_eq!(stats.rejected, 1);
+    }
+
+    #[test]
+    fn mac_batch_executes_natively_in_one_round_trip() {
+        let (client, handle) = Batcher::default().spawn_solo(programmed_model());
+        let xs: Vec<Vec<i32>> = (0..5).map(|i| vec![5 * (i as i32 + 1); c::N_ROWS]).collect();
+        let replies = client.mac_batch(xs.clone()).unwrap();
+        assert_eq!(replies.len(), 5);
+        let mut model = programmed_model();
+        for (x, q) in xs.iter().zip(&replies) {
+            assert_eq!(q, &model.forward_batch(x, 1));
+        }
+        // an empty batch is malformed, not a panic
+        let err = client.mac_batch(Vec::new()).unwrap_err();
+        assert_eq!(err, ServeError::BadRequest { expected: c::N_ROWS, got: 0 });
+        drop(client);
+        let (_backend, stats) = handle.join().unwrap();
+        assert_eq!(stats.requests, 5);
+        assert_eq!(stats.batches, 1, "a MacBatch is one backend invocation");
+        assert_eq!(stats.max_batch_seen, 5);
+    }
+
+    /// Backend whose first evaluations block on a gate — lets tests
+    /// saturate the worker deterministically.
+    struct GateBackend {
+        gate: Arc<(Mutex<bool>, Condvar)>,
+        seen: Arc<Mutex<Vec<i32>>>,
+    }
+
+    fn closed_gate() -> Arc<(Mutex<bool>, Condvar)> {
+        Arc::new((Mutex::new(true), Condvar::new()))
+    }
+
+    fn open_gate(gate: &Arc<(Mutex<bool>, Condvar)>) {
+        let (lock, cv) = &**gate;
+        *lock.lock().unwrap() = false;
+        cv.notify_all();
+    }
+
+    impl MacBackend for GateBackend {
+        fn forward_batch(&mut self, x: &[i32], batch: usize) -> Result<Vec<u32>, String> {
+            {
+                let (lock, cv) = &*self.gate;
+                let mut closed = lock.lock().unwrap();
+                while *closed {
+                    closed = cv.wait(closed).unwrap();
+                }
+            }
+            self.seen.lock().unwrap().push(x[0]);
+            Ok(vec![0; batch * c::M_COLS])
+        }
+    }
+
+    #[test]
+    fn priority_orders_jobs_under_a_saturated_worker() {
+        let gate = closed_gate();
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let backend = GateBackend { gate: Arc::clone(&gate), seen: Arc::clone(&seen) };
+        // max_batch = 1 so every Mac is its own backend call and the
+        // execution order is observable
+        let (client, handle) =
+            Batcher { max_batch: 1, max_wait: Duration::from_millis(2) }.spawn_solo(backend);
+        let blocker = client
+            .submit(Job::Mac(vec![9; c::N_ROWS]), SubmitOpts::default().with_priority(PRI_HIGH))
+            .unwrap()
+            .typed::<Vec<u32>>();
+        // wait until the worker is stuck inside the backend on the blocker
+        std::thread::sleep(Duration::from_millis(50));
+        let t_a = client
+            .submit(Job::Mac(vec![1; c::N_ROWS]), SubmitOpts::default())
+            .unwrap()
+            .typed::<Vec<u32>>();
+        let t_b = client
+            .submit(Job::Mac(vec![2; c::N_ROWS]), SubmitOpts::default())
+            .unwrap()
+            .typed::<Vec<u32>>();
+        let t_c = client
+            .submit(Job::Mac(vec![3; c::N_ROWS]), SubmitOpts::default().with_priority(PRI_HIGH))
+            .unwrap()
+            .typed::<Vec<u32>>();
+        std::thread::sleep(Duration::from_millis(20));
+        open_gate(&gate);
+        for t in [blocker, t_a, t_b, t_c] {
+            t.wait().unwrap();
+        }
+        drop(client);
+        let (backend, stats) = handle.join().unwrap();
+        let order = backend.seen.lock().unwrap().clone();
+        assert_eq!(
+            order,
+            vec![9, 3, 1, 2],
+            "the high-priority job must jump the saturated queue"
+        );
+        assert_eq!(stats.requests, 4);
+    }
+
+    #[test]
+    fn drain_is_a_seq_barrier_not_a_priority() {
+        let gate = closed_gate();
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let backend = GateBackend { gate: Arc::clone(&gate), seen: Arc::clone(&seen) };
+        let (client, handle) =
+            Batcher { max_batch: 1, max_wait: Duration::from_millis(2) }.spawn_solo(backend);
+        let blocker = client
+            .submit(Job::Mac(vec![9; c::N_ROWS]), SubmitOpts::default().with_priority(PRI_HIGH))
+            .unwrap()
+            .typed::<Vec<u32>>();
+        std::thread::sleep(Duration::from_millis(50));
+        // A: LOW priority but admitted BEFORE the drain — runs first
+        let t_a = client
+            .submit(Job::Mac(vec![1; c::N_ROWS]), SubmitOpts::default().with_priority(0))
+            .unwrap()
+            .typed::<Vec<u32>>();
+        let t_drain = client
+            .submit(Job::Drain, SubmitOpts::pinned(0))
+            .unwrap()
+            .typed::<CoreHealth>();
+        // B: HIGH priority but admitted AFTER the drain — waits behind it
+        let t_b = client
+            .submit(Job::Mac(vec![2; c::N_ROWS]), SubmitOpts::default().with_priority(PRI_HIGH))
+            .unwrap()
+            .typed::<Vec<u32>>();
+        std::thread::sleep(Duration::from_millis(20));
+        open_gate(&gate);
+        blocker.wait().unwrap();
+        t_a.wait().unwrap();
+        let h = t_drain.wait().unwrap();
+        assert!(!h.recalibrated, "solo worker has no engine");
+        t_b.wait().unwrap();
+        drop(client);
+        let (backend, stats) = handle.join().unwrap();
+        let order = backend.seen.lock().unwrap().clone();
+        assert_eq!(
+            order,
+            vec![9, 1, 2],
+            "drain barrier: pre-drain LOW job first, post-drain HIGH job after"
+        );
+        assert_eq!(stats.requests, 3);
+    }
+
+    #[test]
+    fn expired_jobs_answered_deadline_exceeded_not_dropped() {
+        let gate = closed_gate();
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let backend = GateBackend { gate: Arc::clone(&gate), seen: Arc::clone(&seen) };
+        let (client, handle) = Batcher {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+        }
+        .spawn_solo(backend);
+        let blocker = client
+            .submit(Job::Mac(vec![9; c::N_ROWS]), SubmitOpts::default().with_priority(PRI_HIGH))
+            .unwrap()
+            .typed::<Vec<u32>>();
+        std::thread::sleep(Duration::from_millis(50));
+        // queued behind the blocker with a 10 ms budget the gate outlives
+        let doomed = client
+            .submit(
+                Job::Mac(vec![1; c::N_ROWS]),
+                SubmitOpts::default().with_deadline(Duration::from_millis(10)),
+            )
+            .unwrap()
+            .typed::<Vec<u32>>();
+        std::thread::sleep(Duration::from_millis(40));
+        open_gate(&gate);
+        blocker.wait().unwrap();
+        assert_eq!(doomed.wait().unwrap_err(), ServeError::DeadlineExceeded);
+        // the worker survives and keeps serving
+        let q = client.mac(vec![5; c::N_ROWS]).unwrap();
+        assert_eq!(q.len(), c::M_COLS);
+        drop(client);
+        let (_backend, stats) = handle.join().unwrap();
+        assert_eq!(stats.expired, 1);
+        assert_eq!(stats.requests, 2);
     }
 }

@@ -73,6 +73,7 @@ impl AdcCharacterization {
     }
 }
 
+#[derive(Debug, Clone)]
 pub struct BiscEngine {
     /// number of test vectors Z (4-8 per Section VI-C)
     pub test_points: usize,
@@ -348,6 +349,19 @@ impl BiscEngine {
     /// x averages x 2 lines x M columns (Alg. 1's loop structure).
     pub fn latency_sh_periods(&self) -> u64 {
         (self.test_points * self.averages * 2 * c::M_COLS) as u64
+    }
+
+    /// Scalar health metric for the serving layer: mean per-line
+    /// |g_tot - 1| over a fresh characterization. A freshly calibrated
+    /// die sits well under the serving health band; an uncalibrated or
+    /// drifted die sits far above it (see
+    /// [`crate::coordinator::service::CoreContext::health_band`]).
+    pub fn residual_gain_error(&self, model: &mut CimAnalogModel) -> f64 {
+        let fits = self.characterize_only(model);
+        fits.iter()
+            .map(|(p, n)| 0.5 * ((p.g_tot - 1.0).abs() + (n.g_tot - 1.0).abs()))
+            .sum::<f64>()
+            / fits.len() as f64
     }
 }
 

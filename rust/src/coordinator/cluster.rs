@@ -13,24 +13,37 @@
 //!   BISC characterization of all cores concurrently (scoped threads; on
 //!   silicon each tile has its own RISC-V sequencer, so calibration time
 //!   is per-core, not per-cluster);
-//! * serving — [`CimCluster::serve`] converts the cluster into a worker
-//!   pool (one [`Batcher`] loop per core, std threads + channels) and
-//!   hands out [`ClusterClient`]s that scatter `MacRequest`s round-robin
-//!   across the cores and gather replies per-request.
+//! * serving — [`CimCluster::serve_with`] converts the cluster into a
+//!   worker pool (one [`Batcher`] loop per core, std threads + channels)
+//!   and hands out [`ClusterClient`]s. A `ClusterClient` is a
+//!   [`crate::coordinator::service::CimService`]: every request —
+//!   single MACs, native batches, DNN
+//!   tile batches, drain/health lifecycle jobs — goes through the one
+//!   `submit(Job, SubmitOpts) -> Ticket` entry point, with priorities,
+//!   deadlines, and a placement policy (round-robin, least-loaded via
+//!   the shared [`CoreBoard`] depth gauges, or pinned);
+//! * reliability — a core whose BISC residual is out of band is *fenced*
+//!   (the scheduler stops placing jobs on it) and rejoins through the
+//!   [`crate::coordinator::service::Job::Drain`] drain → recalibrate →
+//!   rejoin lifecycle, the serving
+//!   form of the paper's periodic BISC.
 //!
 //! The DNN tile scheduler side (tiles mapped across cores instead of
-//! serialized on one array) lives in [`crate::coordinator::dnn`].
+//! serialized on one array) lives in [`crate::coordinator::dnn`]; it
+//! ships each core a pre-folded [`TileBank`] so tile MACs are served as
+//! native `MacBatch` jobs.
 
 use crate::analog::variation::VariationSample;
-use crate::analog::CimAnalogModel;
+use crate::analog::{consts as c, CimAnalogModel, Folded};
 use crate::config::SimConfig;
-use crate::coordinator::batcher::{
-    Batcher, BatcherStats, MacReply, MacRequest, ServeError,
-};
+use crate::coordinator::batcher::{Batcher, BatcherStats, MacBackend};
 use crate::coordinator::bisc::{AdcCharacterization, BiscEngine, BiscReport};
+use crate::coordinator::service::{
+    CoreBoard, CoreContext, JobEnvelope, TileRef, DEFAULT_HEALTH_BAND,
+};
 use crate::util::rng::SplitMix64;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::AtomicUsize;
+use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
@@ -46,14 +59,148 @@ pub fn core_seed(base: u64, core: usize) -> u64 {
     }
 }
 
+/// Pre-folded tile schedule installed on one core: the serving-side data
+/// a [`crate::coordinator::service::Job::MacBatch`] with a [`TileRef`]
+/// runs against. Keeps the raw
+/// signed-code tiles plus each layer's ADC window so the bank can be
+/// re-folded after a recalibration changes the die's trims.
+pub struct TileBank {
+    layers: Vec<BankLayer>,
+}
+
+/// One bank layer spec: the layer's ADC window plus its row-major
+/// `[tr][tc]` grid of N*M signed-code tiles. The grid is `Arc`-shared:
+/// every core of a cluster folds the SAME immutable raw tiles, so the
+/// per-core retained state is the folded coefficients only.
+pub type BankLayerSpec = ((f64, f64), Arc<Vec<Vec<Vec<i32>>>>);
+
+struct BankLayer {
+    refs: (f64, f64),
+    raw: Arc<Vec<Vec<Vec<i32>>>>,
+    folded: Vec<Vec<Folded>>,
+}
+
+impl TileBank {
+    /// Fold `layers` (see [`BankLayerSpec`]) on `model`. Leaves the
+    /// model's ADC refs at the defaults; the array holds the last folded
+    /// tile's weights.
+    pub fn build(model: &mut CimAnalogModel, layers: Vec<BankLayerSpec>) -> Self {
+        let mut bank = Self {
+            layers: layers
+                .into_iter()
+                .map(|(refs, raw)| BankLayer { refs, raw, folded: Vec::new() })
+                .collect(),
+        };
+        bank.refold(model);
+        bank
+    }
+
+    /// Re-fold every tile under the model's CURRENT trims (required after
+    /// recalibration — folded coefficients bake the trims in).
+    pub fn refold(&mut self, model: &mut CimAnalogModel) {
+        for layer in &mut self.layers {
+            model.set_adc_refs(layer.refs.0, layer.refs.1);
+            layer.folded = layer
+                .raw
+                .iter()
+                .map(|row| row.iter().map(|t| model.fold_tile(t)).collect())
+                .collect();
+        }
+        model.set_adc_refs(c::V_ADC_L, c::V_ADC_H);
+    }
+
+    fn get(&self, tile: &TileRef) -> Option<&Folded> {
+        self.layers.get(tile.layer)?.folded.get(tile.tr)?.get(tile.tc)
+    }
+}
+
 /// One physical array of the cluster: its own die, its own trims.
 pub struct ClusterCore {
     pub id: usize,
     pub seed: u64,
     pub sample: VariationSample,
     pub model: CimAnalogModel,
-    /// BISC outcome of the most recent cluster calibration, if any
+    /// BISC outcome of the most recent calibration (cluster-parallel or
+    /// in-service `Drain`), if any
     pub report: Option<BiscReport>,
+    /// workload weights last programmed through the cluster API; restored
+    /// after `Drain`/`Health` jobs (BISC characterization clobbers the
+    /// array)
+    pub weights: Option<Vec<i32>>,
+    /// pre-folded DNN tile schedule served via
+    /// [`crate::coordinator::service::Job::MacBatch`] +
+    /// [`TileRef`] (installed by `CimMlp::prepare_cluster`)
+    pub bank: Option<TileBank>,
+}
+
+impl ClusterCore {
+    /// Program workload weights, remembering them for post-lifecycle
+    /// restoration.
+    pub fn program(&mut self, weights: &[i32]) {
+        self.model.program(weights);
+        self.weights = Some(weights.to_vec());
+    }
+
+    pub fn install_bank(&mut self, bank: TileBank) {
+        self.bank = Some(bank);
+    }
+
+    /// Restore the serving state (workload weights) after an operation
+    /// that clobbered the array — lifecycle jobs and schedule preparation
+    /// both program characterization/tile weights over the workload.
+    pub(crate) fn restore_weights(&mut self) {
+        if let Some(w) = &self.weights {
+            self.model.program(w);
+        }
+    }
+}
+
+/// The cluster core is the serving backend: MACs run on the programmed
+/// array, tile batches on the installed [`TileBank`], and the lifecycle
+/// jobs calibrate/characterize the die and then restore the serving state
+/// (re-fold the bank, re-program the workload weights).
+impl MacBackend for ClusterCore {
+    fn forward_batch(&mut self, x: &[i32], batch: usize) -> Result<Vec<u32>, String> {
+        Ok(self.model.forward_batch(x, batch))
+    }
+
+    fn forward_tile(
+        &mut self,
+        tile: &TileRef,
+        x: &[i32],
+        batch: usize,
+    ) -> Result<Vec<u32>, String> {
+        let bank = self
+            .bank
+            .as_ref()
+            .ok_or_else(|| format!("core {} has no tile bank installed", self.id))?;
+        let folded = bank.get(tile).ok_or_else(|| {
+            format!(
+                "core {}: tile (layer {}, {}, {}) outside the installed bank",
+                self.id, tile.layer, tile.tr, tile.tc
+            )
+        })?;
+        Ok(self.model.forward_folded(folded, x, batch))
+    }
+
+    fn recalibrate(&mut self, engine: &BiscEngine) -> Option<f64> {
+        self.report = Some(engine.calibrate(&mut self.model));
+        let residual = engine.residual_gain_error(&mut self.model);
+        // the trims changed: folded tiles bake trims in, so re-fold, then
+        // restore the workload weights characterization clobbered
+        if let Some(mut bank) = self.bank.take() {
+            bank.refold(&mut self.model);
+            self.bank = Some(bank);
+        }
+        self.restore_weights();
+        Some(residual)
+    }
+
+    fn health_residual(&mut self, engine: &BiscEngine) -> Option<f64> {
+        let residual = engine.residual_gain_error(&mut self.model);
+        self.restore_weights();
+        Some(residual)
+    }
 }
 
 /// K independent CIM cores behind one coordinator.
@@ -72,7 +219,15 @@ impl CimCluster {
                 core_cfg.seed = core_seed(cfg.seed, id);
                 let sample = VariationSample::draw(&core_cfg);
                 let model = CimAnalogModel::from_sample(&core_cfg, &sample);
-                ClusterCore { id, seed: core_cfg.seed, sample, model, report: None }
+                ClusterCore {
+                    id,
+                    seed: core_cfg.seed,
+                    sample,
+                    model,
+                    report: None,
+                    weights: None,
+                    bank: None,
+                }
             })
             .collect();
         Self { cores }
@@ -89,13 +244,13 @@ impl CimCluster {
     /// Program the same weight matrix on every core.
     pub fn program_all(&mut self, weights: &[i32]) {
         for core in &mut self.cores {
-            core.model.program(weights);
+            core.program(weights);
         }
     }
 
     /// Program one core (per-core weights: tile sharding, A/B testing).
     pub fn program_core(&mut self, core: usize, weights: &[i32]) {
-        self.cores[core].model.program(weights);
+        self.cores[core].program(weights);
     }
 
     /// Run `f` once per core, all cores in parallel on scoped threads —
@@ -160,28 +315,64 @@ impl CimCluster {
             .sum()
     }
 
-    /// Convert the cluster into a serving worker pool: one batcher loop
-    /// per core. The cores move into their worker threads and come back
-    /// through [`ClusterServer::join`].
+    /// Convert the cluster into a serving worker pool with the default
+    /// service configuration (no lifecycle engine — `Drain`/`Health`
+    /// degrade to state reports). See [`CimCluster::serve_with`].
     pub fn serve(self, batcher: Batcher) -> ClusterServer {
+        self.serve_with(ServiceConfig { batcher, ..ServiceConfig::default() })
+    }
+
+    /// Convert the cluster into a serving worker pool: one batcher loop
+    /// per core, all sharing one [`CoreBoard`] (depth gauges + fences).
+    /// The cores move into their worker threads and come back through
+    /// [`ClusterServer::join`].
+    pub fn serve_with(self, svc: ServiceConfig) -> ClusterServer {
+        let board = Arc::new(CoreBoard::new(self.cores.len()));
         let mut txs = Vec::with_capacity(self.cores.len());
         let mut handles = Vec::with_capacity(self.cores.len());
         for mut core in self.cores {
-            let (tx, rx) = channel::<MacRequest>();
+            let (tx, rx) = channel::<JobEnvelope>();
+            let ctx = CoreContext {
+                core: core.id,
+                board: Arc::clone(&board),
+                engine: svc.engine.clone(),
+                health_band: svc.health_band,
+            };
+            let batcher = svc.batcher;
             handles.push(std::thread::spawn(move || {
-                let stats = batcher.run(rx, &mut core.model);
+                let stats = batcher.run(rx, &mut core, &ctx);
                 (core, stats)
             }));
             txs.push(tx);
         }
-        ClusterServer { txs, handles, rr: Arc::new(AtomicUsize::new(0)) }
+        ClusterServer { txs, handles, board, rr: Arc::new(AtomicUsize::new(0)) }
+    }
+}
+
+/// How a cluster serves: the per-core batcher shape plus the lifecycle
+/// configuration (`Drain`/`Health` need a calibration engine and a
+/// residual band to act on).
+#[derive(Clone)]
+pub struct ServiceConfig {
+    pub batcher: Batcher,
+    /// Engine used by in-service `Drain` recalibration and `Health`
+    /// characterization; `None` turns both into state reports.
+    pub engine: Option<BiscEngine>,
+    /// Fence a core when its mean per-line |g_tot - 1| exceeds this.
+    pub health_band: f64,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self { batcher: Batcher::default(), engine: None, health_band: DEFAULT_HEALTH_BAND }
     }
 }
 
 /// The running worker pool: K batcher threads, one per core.
 pub struct ClusterServer {
-    txs: Vec<Sender<MacRequest>>,
+    txs: Vec<Sender<JobEnvelope>>,
     handles: Vec<JoinHandle<(ClusterCore, BatcherStats)>>,
+    board: Arc<CoreBoard>,
     rr: Arc<AtomicUsize>,
 }
 
@@ -190,9 +381,19 @@ impl ClusterServer {
         self.txs.len()
     }
 
-    /// A cloneable client that scatters requests across all cores.
+    /// Shared scheduler state (in-flight depth gauges, fences).
+    pub fn board(&self) -> &Arc<CoreBoard> {
+        &self.board
+    }
+
+    /// A cloneable service handle over all cores (every client from this
+    /// server shares the same round-robin cursor and board).
     pub fn client(&self) -> ClusterClient {
-        ClusterClient { txs: self.txs.clone(), rr: Arc::clone(&self.rr) }
+        ClusterClient::with_cursor(
+            self.txs.clone(),
+            Arc::clone(&self.board),
+            Arc::clone(&self.rr),
+        )
     }
 
     /// Shut down: drop this server's senders and wait for the workers.
@@ -213,74 +414,17 @@ impl ClusterServer {
     }
 }
 
-/// Scatter-gather client handle over the cluster's request channels.
-#[derive(Clone)]
-pub struct ClusterClient {
-    txs: Vec<Sender<MacRequest>>,
-    /// shared round-robin cursor (all clones cooperate)
-    rr: Arc<AtomicUsize>,
-}
-
-impl ClusterClient {
-    pub fn cores(&self) -> usize {
-        self.txs.len()
-    }
-
-    /// Submit one MAC to the next core (round-robin) and wait.
-    pub fn mac(&self, x: Vec<i32>) -> Result<Vec<u32>, ServeError> {
-        let core = self.rr.fetch_add(1, Ordering::Relaxed) % self.txs.len();
-        self.mac_on(core, x)
-    }
-
-    /// Submit one MAC to a specific core and wait.
-    pub fn mac_on(&self, core: usize, x: Vec<i32>) -> Result<Vec<u32>, ServeError> {
-        self.submit_on(core, x)?.recv().map_err(|_| ServeError::Disconnected)?
-    }
-
-    /// Fire-and-gather-later: submit to the next core (round-robin) and
-    /// return the reply channel (pipelined scatter-gather).
-    pub fn submit(&self, x: Vec<i32>) -> Result<Receiver<MacReply>, ServeError> {
-        let core = self.rr.fetch_add(1, Ordering::Relaxed) % self.txs.len();
-        self.submit_on(core, x)
-    }
-
-    /// Fire-and-gather-later on a specific core.
-    pub fn submit_on(&self, core: usize, x: Vec<i32>) -> Result<Receiver<MacReply>, ServeError> {
-        let (reply_tx, reply_rx) = channel();
-        self.txs[core]
-            .send(MacRequest { x, reply: reply_tx })
-            .map_err(|_| ServeError::Disconnected)?;
-        Ok(reply_rx)
-    }
-
-    /// Scatter `n` requests round-robin with up to `window` in flight,
-    /// gathering every reply — the throughput-oriented submission loop
-    /// shared by `acore-cim serve` and the perf bench. `make(i)` builds
-    /// the i-th input vector. Stops on the first error.
-    pub fn mac_pipelined<F>(&self, n: usize, window: usize, mut make: F) -> Result<(), ServeError>
-    where
-        F: FnMut(usize) -> Vec<i32>,
-    {
-        let mut inflight: std::collections::VecDeque<Receiver<MacReply>> =
-            std::collections::VecDeque::new();
-        for i in 0..n {
-            inflight.push_back(self.submit(make(i))?);
-            if inflight.len() >= window.max(1) {
-                let rx = inflight.pop_front().unwrap();
-                rx.recv().map_err(|_| ServeError::Disconnected)??;
-            }
-        }
-        for rx in inflight {
-            rx.recv().map_err(|_| ServeError::Disconnected)??;
-        }
-        Ok(())
-    }
-}
+/// Cloneable service handle over the cluster's request channels — the
+/// shared [`crate::coordinator::service::ServiceClient`] over K worker
+/// channels. All clones (and all clients from one server) cooperate
+/// through the shared round-robin cursor and
+/// [`crate::coordinator::service::CoreBoard`].
+pub use crate::coordinator::service::ServiceClient as ClusterClient;
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::analog::consts as c;
+    use crate::coordinator::service::{CimService, Job, SubmitOpts, Ticket};
 
     fn ideal_cfg() -> SimConfig {
         let mut cfg = SimConfig::default().scaled(0.0);
@@ -350,10 +494,16 @@ mod tests {
         reference.program(&vec![40; c::N_ROWS * c::M_COLS]);
         let expect = reference.forward_batch(&vec![30; c::N_ROWS], 1);
         let n = 64;
-        let replies: Vec<_> =
-            (0..n).map(|_| client.submit(vec![30; c::N_ROWS]).unwrap()).collect();
-        for r in replies {
-            assert_eq!(r.recv().unwrap().unwrap(), expect);
+        let tickets: Vec<Ticket<Vec<u32>>> = (0..n)
+            .map(|_| {
+                client
+                    .submit(Job::Mac(vec![30; c::N_ROWS]), SubmitOpts::default())
+                    .unwrap()
+                    .typed()
+            })
+            .collect();
+        for t in tickets {
+            assert_eq!(t.wait().unwrap(), expect);
         }
         drop(client);
         let (_cluster, stats) = server.join();
@@ -363,5 +513,47 @@ mod tests {
         for (k, s) in stats.iter().enumerate() {
             assert!(s.requests > 0, "core {k} served nothing");
         }
+    }
+
+    #[test]
+    fn tile_bank_serves_folded_tiles_and_survives_recalibration() {
+        let cfg = ideal_cfg();
+        let mut cluster = CimCluster::new(&cfg, 1);
+        let weights = vec![17; c::N_ROWS * c::M_COLS];
+        // expected: the folded-tile evaluation on an identical ideal die
+        let mut reference = CimAnalogModel::ideal();
+        let folded = reference.fold_tile(&weights);
+        let x = vec![12; c::N_ROWS];
+        let expect = reference.forward_folded(&folded, &x, 1);
+
+        let core = &mut cluster.cores[0];
+        let bank = TileBank::build(
+            &mut core.model,
+            vec![((c::V_ADC_L, c::V_ADC_H), Arc::new(vec![vec![weights.clone()]]))],
+        );
+        core.install_bank(bank);
+        core.program(&vec![40; c::N_ROWS * c::M_COLS]);
+
+        let tile = TileRef { layer: 0, tr: 0, tc: 0 };
+        let q = core.forward_tile(&tile, &x, 1).unwrap();
+        assert_eq!(q, expect);
+        // an out-of-range tile is an error, not a panic
+        assert!(core
+            .forward_tile(&TileRef { layer: 0, tr: 1, tc: 0 }, &x, 1)
+            .is_err());
+
+        // recalibration re-folds the bank and restores workload weights
+        let engine = BiscEngine::from_config(&cfg, AdcCharacterization::ideal());
+        let residual = core.recalibrate(&engine).expect("cluster cores recalibrate");
+        assert!(residual < 0.05, "ideal die residual {residual}");
+        let q2 = core.forward_tile(&tile, &x, 1).unwrap();
+        assert_eq!(q2.len(), c::M_COLS);
+        // workload weights restored: a plain MAC matches a fresh model
+        // programmed with the same workload weights and trims
+        let q_mac = core.forward_batch(&x, 1).unwrap();
+        let mut check = CimAnalogModel::ideal();
+        engine.calibrate(&mut check);
+        check.program(&vec![40; c::N_ROWS * c::M_COLS]);
+        assert_eq!(q_mac, check.forward_batch(&x, 1));
     }
 }

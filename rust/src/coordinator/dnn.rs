@@ -5,6 +5,9 @@
 //! RISC-V core's role), bias + ReLU + re-quantization between layers.
 
 use crate::analog::{consts as c, CimAnalogModel};
+use crate::coordinator::batcher::ServeError;
+use crate::coordinator::cluster::TileBank;
+use crate::coordinator::service::{gather, CimService, Job, SubmitOpts, Ticket, TileRef};
 use crate::data::mlp::{argmax, QuantMlp, HIDDEN};
 use crate::data::synth::{Dataset, IMG_PIXELS, NUM_CLASSES};
 
@@ -90,6 +93,26 @@ pub struct InferenceStats {
     pub mac_ops: u64,
     /// weight reprogram operations (tile switches)
     pub reprograms: u64,
+}
+
+/// One raw ADC code -> code-product units under the digital correction
+/// precedence shared by EVERY execution path (direct, prepared, served):
+/// full residual trim, else zero-point subtraction, else nominal.
+fn correct_code(
+    qc: f32,
+    col: usize,
+    trim: &Option<LayerTrim>,
+    zp: &Option<Vec<f64>>,
+    mid: f32,
+    gain: f32,
+) -> f32 {
+    if let Some(t) = trim {
+        ((qc - t.eps[col] as f32) / t.g[col] as f32 - mid) / gain
+    } else if let Some(z) = zp {
+        (qc - z[col] as f32) / gain
+    } else {
+        (qc - mid) / gain
+    }
 }
 
 /// Per-tile MAC sums (digital emulation) used for window calibration.
@@ -285,17 +308,8 @@ impl CimMlp {
                 let q = model.forward_batch(&xr, 1);
                 stats.mac_ops += 1;
                 for col in 0..c::M_COLS {
-                    let mut qc = q[col] as f32;
-                    if let Some(t) = trim {
-                        // full digital residual correction (gain + offset)
-                        qc = (qc - t.eps[col] as f32) / t.g[col] as f32;
-                        out[tc * c::M_COLS + col] += (qc - mid) / k;
-                    } else if let Some(z) = zp {
-                        // zero-point subtraction only (bring-up baseline)
-                        out[tc * c::M_COLS + col] += (qc - z[col] as f32) / k;
-                    } else {
-                        out[tc * c::M_COLS + col] += (qc - mid) / k;
-                    }
+                    out[tc * c::M_COLS + col] +=
+                        correct_code(q[col] as f32, col, trim, zp, mid, k);
                 }
             }
         }
@@ -401,15 +415,8 @@ impl CimMlp {
                 let q = model.forward_folded(&folded[tr][tc], &xr, 1);
                 stats.mac_ops += 1;
                 for col in 0..c::M_COLS {
-                    let mut qc = q[col] as f32;
-                    if let Some(t) = trim {
-                        qc = (qc - t.eps[col] as f32) / t.g[col] as f32;
-                        out[tc * c::M_COLS + col] += (qc - mid) / k;
-                    } else if let Some(z) = zp {
-                        out[tc * c::M_COLS + col] += (qc - z[col] as f32) / k;
-                    } else {
-                        out[tc * c::M_COLS + col] += (qc - mid) / k;
-                    }
+                    out[tc * c::M_COLS + col] +=
+                        correct_code(q[col] as f32, col, trim, zp, mid, k);
                 }
             }
         }
@@ -476,11 +483,20 @@ pub struct PreparedMlp {
     tiles2: Vec<Vec<crate::analog::Folded>>,
 }
 
-/// Per-cluster tile schedule: every core's pre-folded tiles plus its own
-/// per-layer digital corrections (each core is a distinct die, so both the
-/// residual trims and the zero points are per-core).
+/// Per-cluster digital correction schedule: every core's per-layer
+/// residual trims and zero points (each core is a distinct die, so both
+/// are per-core). The pre-folded tiles themselves live ON the cores as
+/// [`TileBank`]s — the serving workers evaluate them natively via
+/// [`Job::MacBatch`] + [`TileRef`]; this struct holds only the
+/// gather-side (RISC-V) correction state.
+///
+/// An in-service recalibration ([`Job::Drain`]) re-folds the core's tile
+/// bank but cannot update the trims held here; corrections are measured
+/// at recalibration epoch 0, so [`CimMlp::infer_batch_service`] REFUSES
+/// to apply them once the board reports the core recalibrated (typed
+/// error instead of silently-wrong logits) — re-run `prepare_cluster`
+/// after draining cores when trims are in use.
 pub struct ClusterSchedule {
-    prepared: Vec<PreparedMlp>,
     trims: Vec<(Option<LayerTrim>, Option<LayerTrim>)>,
     /// per-core zero points (measured when the CimMlp itself carries a
     /// zero-point correction, mirroring the single-array bring-up rung)
@@ -489,15 +505,17 @@ pub struct ClusterSchedule {
 
 impl ClusterSchedule {
     pub fn cores(&self) -> usize {
-        self.prepared.len()
+        self.trims.len()
     }
 }
 
 impl CimMlp {
     /// Fold the full tile schedule on every core of the cluster IN
-    /// PARALLEL, optionally measuring per-core digital residual trims
-    /// first (pass the config to enable). Tiles are later mapped across
-    /// cores by `infer_cluster_batch` instead of serializing on one array.
+    /// PARALLEL, installing a [`TileBank`] (layer 0 = MLP layer 1,
+    /// layer 1 = MLP layer 2) on each core and optionally measuring
+    /// per-core digital residual trims first (pass the config to
+    /// enable). Tile jobs are then served through the cluster's
+    /// `submit` path by [`CimMlp::infer_batch_service`].
     pub fn prepare_cluster(
         &self,
         cluster: &mut crate::coordinator::cluster::CimCluster,
@@ -505,16 +523,22 @@ impl CimMlp {
     ) -> ClusterSchedule {
         type CoreResult = (
             usize,
-            PreparedMlp,
             Option<(LayerTrim, LayerTrim)>,
             Option<(Vec<f64>, Vec<f64>)>,
         );
         let want_zp = self.zp1.is_some() || self.zp2.is_some();
+        // one shared copy of each layer's immutable raw tile grid: every
+        // core folds the same tiles, only the folded coefficients are
+        // per-core
+        let raw1 = std::sync::Arc::new(self.layer1.tiles.clone());
+        let raw2 = std::sync::Arc::new(self.layer2.tiles.clone());
         let mut results: Vec<CoreResult> = std::thread::scope(|s| {
             let handles: Vec<_> = cluster
                 .cores
                 .iter_mut()
                 .map(|core| {
+                    let raw1 = std::sync::Arc::clone(&raw1);
+                    let raw2 = std::sync::Arc::clone(&raw2);
                     s.spawn(move || {
                         let trims = cfg.map(|cc| {
                             (
@@ -530,8 +554,16 @@ impl CimMlp {
                                 self.zero_point_at(&mut core.model, self.refs2, 2),
                             )
                         });
-                        let prepared = self.prepare(&mut core.model);
-                        (core.id, prepared, trims, zps)
+                        let bank = TileBank::build(
+                            &mut core.model,
+                            vec![(self.refs1, raw1), (self.refs2, raw2)],
+                        );
+                        core.install_bank(bank);
+                        // trim measurement + folding programmed test and
+                        // tile weights over the array; put the workload
+                        // weights back so plain Mac jobs stay correct
+                        core.restore_weights();
+                        (core.id, trims, zps)
                     })
                 })
                 .collect();
@@ -541,11 +573,9 @@ impl CimMlp {
                 .collect()
         });
         results.sort_by_key(|r| r.0);
-        let mut prepared = Vec::with_capacity(results.len());
         let mut trims = Vec::with_capacity(results.len());
         let mut zps = Vec::with_capacity(results.len());
-        for (_, p, t, z) in results {
-            prepared.push(p);
+        for (_, t, z) in results {
             match t {
                 Some((t1, t2)) => trims.push((Some(t1), Some(t2))),
                 None => trims.push((None, None)),
@@ -555,105 +585,138 @@ impl CimMlp {
                 None => zps.push((None, None)),
             }
         }
-        ClusterSchedule { prepared, trims, zps }
+        ClusterSchedule { trims, zps }
     }
 
-    /// One layer over the cluster: tile `t = tr * ct + tc` runs on core
-    /// `t % K` (round-robin tile-to-core map), all cores in parallel over
-    /// the whole image batch; per-tile partial sums are gathered by
-    /// addition (they are linear in code-product units).
-    fn layer_forward_cluster(
+    /// One layer through the serving engine: each tile becomes one
+    /// [`Job::MacBatch`] over the whole image batch (one channel
+    /// round-trip per tile), pinned to the `ti % H`-th HEALTHY core —
+    /// the deterministic tile-to-core map (exactly `ti % K` when nothing
+    /// is fenced), so the same seed and fence state reproduce the same
+    /// tile→die assignment (and therefore the same corrected logits) on
+    /// every run, while a fenced out-of-band die serves no tiles. Every
+    /// core holds the full folded bank for its own die, so callers that
+    /// prefer load-awareness over reproducibility could place these jobs
+    /// `LeastLoaded` instead. The gather side applies the SERVING core's
+    /// digital corrections (trim > zp > nominal, as in the single-array
+    /// paths) and accumulates partial sums in deterministic tile order.
+    fn layer_forward_service<S: CimService>(
         &self,
-        cluster: &crate::coordinator::cluster::CimCluster,
+        svc: &S,
         sched: &ClusterSchedule,
         layer: &TiledLayer,
         which: usize,
         xs: &[Vec<i32>],
-    ) -> Vec<Vec<f32>> {
+        stats: &mut InferenceStats,
+    ) -> Result<Vec<Vec<f32>>, ServeError> {
         let refs = if which == 1 { self.refs1 } else { self.refs2 };
         let gain = c::code_gain_at(refs.0, refs.1) as f32;
         let mid = c::q_mid_at(refs.0, refs.1) as f32;
         let (rt, ct) = (layer.row_tiles(), layer.col_tiles());
-        let n_tiles = rt * ct;
-        let k_cores = cluster.cores.len();
-        let partials: Vec<Vec<f32>> = std::thread::scope(|s| {
-            let handles: Vec<_> = cluster
-                .cores
+        // deterministic tile-to-core map over the cores accepting work:
+        // a fenced (out-of-band) die serves no tiles, and with nothing
+        // fenced this is exactly ti % K. The fence state is sampled once
+        // per layer — like any placement decision it is advisory for
+        // work already submitted, so a fence landing mid-layer takes
+        // effect from the next layer onward.
+        let healthy: Vec<usize> =
+            (0..svc.cores()).filter(|&core| !svc.board().is_fenced(core)).collect();
+        if healthy.is_empty() {
+            return Err(ServeError::NoHealthyCore);
+        }
+        let mut tickets: Vec<Ticket<Vec<Vec<u32>>>> = Vec::with_capacity(rt * ct);
+        for tr in 0..rt {
+            // the input slice depends only on the row tile: build it once
+            // per tr and memcpy it into each column tile's job
+            let start = tr * c::N_ROWS;
+            let row_xs: Vec<Vec<i32>> = xs
                 .iter()
-                .enumerate()
-                .map(|(ci, core)| {
-                    let prepared = &sched.prepared[ci];
-                    let trim =
-                        if which == 1 { &sched.trims[ci].0 } else { &sched.trims[ci].1 };
-                    let zp = if which == 1 { &sched.zps[ci].0 } else { &sched.zps[ci].1 };
-                    s.spawn(move || {
-                        let folded =
-                            if which == 1 { &prepared.tiles1 } else { &prepared.tiles2 };
-                        let mut part = vec![0f32; xs.len() * ct * c::M_COLS];
-                        let mut xr = [0i32; c::N_ROWS];
-                        for ti in (ci..n_tiles).step_by(k_cores) {
-                            let (tr, tc) = (ti / ct, ti % ct);
-                            let start = tr * c::N_ROWS;
-                            for (i, x_codes) in xs.iter().enumerate() {
-                                for (j, x) in xr.iter_mut().enumerate() {
-                                    *x = x_codes.get(start + j).copied().unwrap_or(0);
-                                }
-                                let q = core.model.forward_folded(&folded[tr][tc], &xr, 1);
-                                let out = &mut part[i * ct * c::M_COLS..];
-                                for col in 0..c::M_COLS {
-                                    // same correction precedence as the
-                                    // single-array paths: trim > zp > nominal
-                                    let qc = q[col] as f32;
-                                    let corrected = if let Some(t) = trim {
-                                        ((qc - t.eps[col] as f32) / t.g[col] as f32 - mid)
-                                            / gain
-                                    } else if let Some(z) = zp {
-                                        (qc - z[col] as f32) / gain
-                                    } else {
-                                        (qc - mid) / gain
-                                    };
-                                    out[tc * c::M_COLS + col] += corrected;
-                                }
-                            }
-                        }
-                        part
-                    })
+                .map(|x_codes| {
+                    (0..c::N_ROWS)
+                        .map(|j| x_codes.get(start + j).copied().unwrap_or(0))
+                        .collect()
                 })
                 .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("tile worker panicked"))
-                .collect()
-        });
-        // gather: partial accumulations add linearly; truncate the zero-
-        // padded tail columns of the last column tile
-        let mut out = vec![vec![0f32; layer.cols]; xs.len()];
-        for part in &partials {
-            for (i, o) in out.iter_mut().enumerate() {
-                let row = &part[i * ct * c::M_COLS..(i + 1) * ct * c::M_COLS];
-                for (col, v) in o.iter_mut().enumerate() {
-                    *v += row[col];
+            for tc in 0..ct {
+                let ti = tr * ct + tc;
+                let opts = SubmitOpts::pinned(healthy[ti % healthy.len()]);
+                let job = Job::MacBatch {
+                    xs: row_xs.clone(),
+                    tile: Some(TileRef { layer: which - 1, tr, tc }),
+                };
+                match svc.submit(job, opts) {
+                    Ok(t) => tickets.push(t.typed()),
+                    Err(e) => {
+                        // settle what is already in flight before surfacing
+                        let _ = gather(tickets);
+                        return Err(e);
+                    }
                 }
             }
         }
-        out
+        stats.mac_ops += (rt * ct * xs.len()) as u64;
+        let gathered = gather(tickets)?;
+        let mut out = vec![vec![0f32; layer.cols]; xs.len()];
+        for (ti, (core, qs)) in gathered.into_iter().enumerate() {
+            let tc = ti % ct;
+            let trim = if which == 1 { &sched.trims[core].0 } else { &sched.trims[core].1 };
+            let zp = if which == 1 { &sched.zps[core].0 } else { &sched.zps[core].1 };
+            for (i, q) in qs.iter().enumerate() {
+                for (col, &qraw) in q.iter().enumerate() {
+                    let gcol = tc * c::M_COLS + col;
+                    if gcol >= layer.cols {
+                        break;
+                    }
+                    out[i][gcol] += correct_code(qraw as f32, col, trim, zp, mid, gain);
+                }
+            }
+        }
+        Ok(out)
     }
 
-    /// Batched inference over the cluster: both layers' tiles are mapped
-    /// across the K cores (scatter), digital accumulation + bias + ReLU +
-    /// requantization happen on the gather side — the multi-array version
-    /// of `infer_prepared`.
-    pub fn infer_cluster_batch(
+    /// Batched inference through the serving engine: both layers' tiles
+    /// are submitted as native batch jobs through the one
+    /// `submit(Job, SubmitOpts)` entry point; digital accumulation +
+    /// bias + ReLU + requantization happen on the gather side — the
+    /// served, multi-array version of `infer_prepared`.
+    pub fn infer_batch_service<S: CimService>(
         &self,
-        cluster: &crate::coordinator::cluster::CimCluster,
+        svc: &S,
         sched: &ClusterSchedule,
         imgs: &[&[f32]],
         stats: &mut InferenceStats,
-    ) -> Vec<Vec<f32>> {
-        assert_eq!(sched.cores(), cluster.cores.len(), "schedule/cluster mismatch");
+    ) -> Result<Vec<Vec<f32>>, ServeError> {
+        assert_eq!(sched.cores(), svc.cores(), "schedule/service core-count mismatch");
+        if imgs.is_empty() {
+            // an empty MacBatch is malformed at admission; an empty image
+            // batch is simply empty results
+            return Ok(Vec::new());
+        }
+        // refuse stale per-core corrections: a core recalibrated in
+        // service (Drain) no longer matches trims/zero-points measured
+        // before serving — surface a typed error instead of silently
+        // applying the wrong correction. Checked on entry AND after the
+        // gather (a drain completing mid-inference is caught too, since
+        // correction-carrying schedules are always measured at epoch 0).
+        let check_fresh = || -> Result<(), ServeError> {
+            for core in 0..sched.cores() {
+                let has_correction = sched.trims[core].0.is_some()
+                    || sched.trims[core].1.is_some()
+                    || sched.zps[core].0.is_some()
+                    || sched.zps[core].1.is_some();
+                if has_correction && svc.board().recal_epoch(core) > 0 {
+                    return Err(ServeError::Backend(format!(
+                        "stale schedule: core {core} was recalibrated in service; \
+                         re-run prepare_cluster to re-measure its corrections"
+                    )));
+                }
+            }
+            Ok(())
+        };
+        check_fresh()?;
         let xs: Vec<Vec<i32>> =
             imgs.iter().map(|im| self.quant.quantize_input(im)).collect();
-        let h_cp = self.layer_forward_cluster(cluster, sched, &self.layer1, 1, &xs);
+        let h_cp = self.layer_forward_service(svc, sched, &self.layer1, 1, &xs, stats)?;
         let h_codes: Vec<Vec<i32>> = h_cp
             .iter()
             .map(|h| {
@@ -668,34 +731,32 @@ impl CimMlp {
             })
             .collect();
         let logits_cp =
-            self.layer_forward_cluster(cluster, sched, &self.layer2, 2, &h_codes);
-        let tiles_per_img = self.layer1.row_tiles() * self.layer1.col_tiles()
-            + self.layer2.row_tiles() * self.layer2.col_tiles();
-        stats.mac_ops += (imgs.len() * tiles_per_img) as u64;
-        logits_cp
+            self.layer_forward_service(svc, sched, &self.layer2, 2, &h_codes, stats)?;
+        check_fresh()?;
+        Ok(logits_cp
             .into_iter()
             .map(|l| l.iter().zip(&self.quant.b2_cp).map(|(&v, &b)| v + b).collect())
-            .collect()
+            .collect())
     }
 
-    /// Dataset accuracy over the cluster schedule.
-    pub fn accuracy_cluster(
+    /// Dataset accuracy through the serving engine.
+    pub fn accuracy_service<S: CimService>(
         &self,
-        cluster: &crate::coordinator::cluster::CimCluster,
+        svc: &S,
         sched: &ClusterSchedule,
         ds: &Dataset,
         limit: usize,
-    ) -> (f64, InferenceStats) {
+    ) -> Result<(f64, InferenceStats), ServeError> {
         let n = ds.len().min(limit);
         let mut stats = InferenceStats::default();
         let imgs: Vec<&[f32]> = (0..n).map(|i| ds.image(i)).collect();
-        let logits = self.infer_cluster_batch(cluster, sched, &imgs, &mut stats);
+        let logits = self.infer_batch_service(svc, sched, &imgs, &mut stats)?;
         let correct = logits
             .iter()
             .enumerate()
             .filter(|(i, l)| argmax(l) == ds.labels[*i] as usize)
             .count();
-        (correct as f64 / n as f64, stats)
+        Ok((correct as f64 / n as f64, stats))
     }
 }
 
@@ -777,7 +838,8 @@ mod tests {
     }
 
     #[test]
-    fn single_core_cluster_matches_prepared_path() {
+    fn single_core_service_matches_prepared_path() {
+        use crate::coordinator::batcher::Batcher;
         let (mut cim_mlp, test_ds) = pipeline();
         let mut cfg = SimConfig::default();
         cfg.sigma_noise = 0.0; // cluster path is the noise-free fast path
@@ -788,8 +850,12 @@ mod tests {
         let mut die = CimAnalogModel::from_sample(&cfg, &s);
         let prepared = cim_mlp.prepare(&mut die);
         let imgs: Vec<&[f32]> = (0..8).map(|i| test_ds.image(i)).collect();
+        let server = cluster.serve(Batcher::default());
+        let client = server.client();
         let mut st_c = InferenceStats::default();
-        let logits_c = cim_mlp.infer_cluster_batch(&cluster, &sched, &imgs, &mut st_c);
+        let logits_c = cim_mlp
+            .infer_batch_service(&client, &sched, &imgs, &mut st_c)
+            .expect("serving failed");
         let mut st_p = InferenceStats::default();
         for (i, img) in imgs.iter().enumerate() {
             let direct = cim_mlp.infer_prepared(&die, &prepared, img, &mut st_p);
@@ -798,13 +864,19 @@ mod tests {
             }
         }
         assert_eq!(st_c.mac_ops, st_p.mac_ops);
+        drop(client);
+        let (mut cluster, _) = server.join();
 
         // zero-point rung: the schedule re-measures per-core zps, which on
         // the identical noise-free die must equal the single-array ones
         cim_mlp.measure_zero_point(&mut die);
         let sched_zp = cim_mlp.prepare_cluster(&mut cluster, None);
+        let server = cluster.serve(Batcher::default());
+        let client = server.client();
         let mut st_z = InferenceStats::default();
-        let logits_z = cim_mlp.infer_cluster_batch(&cluster, &sched_zp, &imgs, &mut st_z);
+        let logits_z = cim_mlp
+            .infer_batch_service(&client, &sched_zp, &imgs, &mut st_z)
+            .expect("serving failed");
         for (i, img) in imgs.iter().enumerate() {
             let mut st = InferenceStats::default();
             let direct = cim_mlp.infer_prepared(&die, &prepared, img, &mut st);
@@ -812,10 +884,13 @@ mod tests {
                 assert!((a - b).abs() < 1e-3, "zp cluster mismatch: {a} vs {b}");
             }
         }
+        drop(client);
+        server.join();
     }
 
     #[test]
-    fn multi_core_cluster_spreads_tiles_and_stays_accurate() {
+    fn multi_core_service_spreads_tiles_and_stays_accurate() {
+        use crate::coordinator::batcher::Batcher;
         let (cim_mlp, test_ds) = pipeline();
         // ideal dies: sharding across cores must be numerically identical
         // to running every tile on one ideal array
@@ -823,8 +898,12 @@ mod tests {
         cfg.sigma_noise = 0.0;
         let mut cluster = crate::coordinator::cluster::CimCluster::new(&cfg, 3);
         let sched = cim_mlp.prepare_cluster(&mut cluster, None);
+        let server = cluster.serve(Batcher::default());
+        let client = server.client();
         let n = 30;
-        let (acc_cluster, st) = cim_mlp.accuracy_cluster(&cluster, &sched, &test_ds, n);
+        let (acc_cluster, st) = cim_mlp
+            .accuracy_service(&client, &sched, &test_ds, n)
+            .expect("serving failed");
         let mut ideal = CimAnalogModel::ideal();
         let prepared = cim_mlp.prepare(&mut ideal);
         let (acc_single, _) = cim_mlp.accuracy_prepared(&ideal, &prepared, &test_ds, n);
@@ -837,7 +916,9 @@ mod tests {
         );
         let imgs: Vec<&[f32]> = (0..5).map(|i| test_ds.image(i)).collect();
         let mut st2 = InferenceStats::default();
-        let logits_c = cim_mlp.infer_cluster_batch(&cluster, &sched, &imgs, &mut st2);
+        let logits_c = cim_mlp
+            .infer_batch_service(&client, &sched, &imgs, &mut st2)
+            .expect("serving failed");
         for (i, img) in imgs.iter().enumerate() {
             let mut stp = InferenceStats::default();
             let direct = cim_mlp.infer_prepared(&ideal, &prepared, img, &mut stp);
@@ -846,6 +927,11 @@ mod tests {
             }
         }
         assert_eq!(st.mac_ops, n as u64 * (22 * 3 + 2));
+        drop(client);
+        let (_cluster, wstats) = server.join();
+        // the tile jobs really went through the serving workers
+        let served: u64 = wstats.iter().map(|s| s.requests).sum();
+        assert!(served > 0, "no tile jobs reached the workers");
     }
 
     #[test]

@@ -8,4 +8,5 @@ pub mod cim_core;
 pub mod snr;
 pub mod dnn;
 pub mod batcher;
+pub mod service;
 pub mod cluster;

@@ -1,0 +1,692 @@
+//! Unified serving API: one typed job envelope and one `submit` entry
+//! point for everything the CIM serving layer does — single MACs, native
+//! batches, core drain/recalibration, and health probes. This replaces
+//! the old `mac`/`mac_on`/`submit`/`submit_on`/`mac_pipelined` method zoo
+//! (see DESIGN.md §8 for the migration table).
+//!
+//! Layers:
+//! * [`Job`] + [`SubmitOpts`] — what to run and how (priority, deadline,
+//!   placement policy);
+//! * [`Ticket`] — the typed handle for one submitted job; `wait` blocks
+//!   for the reply, [`gather`] drains a whole fan-out deterministically
+//!   (every in-flight reply is consumed even when one errors);
+//! * [`CoreBoard`] — shared scheduler state: per-core in-flight depth
+//!   gauges (for [`Placement::LeastLoaded`]) and per-core health fencing
+//!   (a fenced core receives no placed jobs until it rejoins via
+//!   [`Job::Drain`]);
+//! * [`CimService`] — the service trait both the single-core
+//!   [`crate::coordinator::batcher::Client`] and the multi-core
+//!   [`crate::coordinator::cluster::ClusterClient`] implement; all the
+//!   convenience entry points (`mac`, `mac_batch`, `drain`, `health`,
+//!   `mac_pipelined`) are provided methods over `submit`.
+
+use crate::coordinator::batcher::ServeError;
+use crate::coordinator::bisc::BiscEngine;
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Lowest urgency: yields to everything else queued on the core.
+pub const PRI_LOW: u8 = 0;
+/// Default urgency.
+pub const PRI_NORMAL: u8 = 100;
+/// Jumps ahead of normal traffic on the worker's priority queue.
+pub const PRI_HIGH: u8 = 200;
+
+/// Selects one pre-folded tile from a core's installed
+/// [`crate::coordinator::cluster::TileBank`] (DNN serving path).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileRef {
+    /// bank layer index (0-based)
+    pub layer: usize,
+    /// row-tile index
+    pub tr: usize,
+    /// column-tile index
+    pub tc: usize,
+}
+
+/// One typed request to the serving layer.
+#[derive(Debug, Clone)]
+pub enum Job {
+    /// One MAC over the core's currently programmed weights. The worker
+    /// may coalesce adjacent `Mac` jobs of equal standing into one
+    /// backend batch.
+    Mac(Vec<i32>),
+    /// A client-built batch executed natively: one channel round-trip and
+    /// one backend call for the whole batch instead of N. With `tile`
+    /// set, the batch runs against that pre-folded tile of the core's
+    /// tile bank instead of the programmed weights.
+    MacBatch {
+        xs: Vec<Vec<i32>>,
+        tile: Option<TileRef>,
+    },
+    /// Drain-and-recalibrate lifecycle step: queued work ahead of it
+    /// completes, then the worker recalibrates its die (when the service
+    /// was configured with a [`BiscEngine`]) and the core rejoins the
+    /// scheduler if its residual is back in band.
+    Drain,
+    /// Measure the core's BISC residual; a residual out of band fences
+    /// the core (the scheduler stops placing jobs on it).
+    Health,
+}
+
+impl Job {
+    /// Scheduler weight of this job in the in-flight depth gauges
+    /// (batches weigh their member count so `LeastLoaded` sees them).
+    pub fn weight(&self) -> usize {
+        match self {
+            Job::Mac(_) => 1,
+            Job::MacBatch { xs, .. } => xs.len().max(1),
+            Job::Drain | Job::Health => 1,
+        }
+    }
+}
+
+/// Which core a job may be placed on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Placement {
+    /// Next healthy core off the shared rotating cursor.
+    #[default]
+    RoundRobin,
+    /// Healthy core with the smallest in-flight depth gauge.
+    LeastLoaded,
+    /// Exactly this core — the only placement that ignores fencing
+    /// (required so `Drain`/`Health` can reach a fenced core).
+    Pinned(usize),
+}
+
+/// Per-submit options: urgency, latency budget, and placement policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SubmitOpts {
+    /// Higher runs sooner on the worker's priority queue ([`PRI_NORMAL`]
+    /// by default); ties keep submission order.
+    pub priority: u8,
+    /// Relative latency budget. A job still queued when it expires is
+    /// answered with [`ServeError::DeadlineExceeded`] instead of running.
+    pub deadline: Option<Duration>,
+    pub placement: Placement,
+}
+
+impl Default for SubmitOpts {
+    fn default() -> Self {
+        Self { priority: PRI_NORMAL, deadline: None, placement: Placement::RoundRobin }
+    }
+}
+
+impl SubmitOpts {
+    /// Pin to one core (ignores fencing — see [`Placement::Pinned`]).
+    pub fn pinned(core: usize) -> Self {
+        Self { placement: Placement::Pinned(core), ..Self::default() }
+    }
+
+    /// Place on the least-loaded healthy core.
+    pub fn least_loaded() -> Self {
+        Self { placement: Placement::LeastLoaded, ..Self::default() }
+    }
+
+    pub fn with_priority(mut self, priority: u8) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    pub fn with_placement(mut self, placement: Placement) -> Self {
+        self.placement = placement;
+        self
+    }
+}
+
+/// Health snapshot of one core, as reported by `Drain`/`Health` jobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CoreHealth {
+    pub core: usize,
+    /// Mean per-line |g_tot - 1| from a fresh characterization; `None`
+    /// when the service has no [`BiscEngine`] or the backend cannot
+    /// characterize itself.
+    pub residual: Option<f64>,
+    /// Whether the core is fenced after this probe.
+    pub fenced: bool,
+    /// Whether a recalibration actually ran (`Drain` with an engine).
+    pub recalibrated: bool,
+}
+
+/// The typed reply to one [`Job`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobReply {
+    Mac(Vec<u32>),
+    MacBatch(Vec<Vec<u32>>),
+    Health(CoreHealth),
+}
+
+/// Conversion from the untyped reply to the payload a [`Ticket`] carries.
+pub trait FromReply: Sized {
+    fn from_reply(reply: JobReply) -> Result<Self, ServeError>;
+}
+
+impl FromReply for JobReply {
+    fn from_reply(reply: JobReply) -> Result<Self, ServeError> {
+        Ok(reply)
+    }
+}
+
+impl FromReply for Vec<u32> {
+    fn from_reply(reply: JobReply) -> Result<Self, ServeError> {
+        match reply {
+            JobReply::Mac(q) => Ok(q),
+            other => Err(reply_type_mismatch("Mac", &other)),
+        }
+    }
+}
+
+impl FromReply for Vec<Vec<u32>> {
+    fn from_reply(reply: JobReply) -> Result<Self, ServeError> {
+        match reply {
+            JobReply::MacBatch(q) => Ok(q),
+            other => Err(reply_type_mismatch("MacBatch", &other)),
+        }
+    }
+}
+
+impl FromReply for CoreHealth {
+    fn from_reply(reply: JobReply) -> Result<Self, ServeError> {
+        match reply {
+            JobReply::Health(h) => Ok(h),
+            other => Err(reply_type_mismatch("Health", &other)),
+        }
+    }
+}
+
+fn reply_type_mismatch(want: &str, got: &JobReply) -> ServeError {
+    let got = match got {
+        JobReply::Mac(_) => "Mac",
+        JobReply::MacBatch(_) => "MacBatch",
+        JobReply::Health(_) => "Health",
+    };
+    ServeError::Backend(format!("reply type mismatch: expected {want}, got {got}"))
+}
+
+/// The wire envelope a worker receives: the job plus its scheduling
+/// metadata and the per-job reply channel.
+pub struct JobEnvelope {
+    pub job: Job,
+    pub priority: u8,
+    /// absolute expiry instant (converted from the relative budget at
+    /// submit time)
+    pub deadline: Option<Instant>,
+    /// depth-gauge weight reserved at submit time ([`Job::weight`])
+    pub weight: usize,
+    pub reply: Sender<Result<JobReply, ServeError>>,
+}
+
+/// Handle for one submitted job. `T` is the typed payload
+/// ([`JobReply`] for the untyped form straight out of `submit`).
+pub struct Ticket<T> {
+    rx: Receiver<Result<JobReply, ServeError>>,
+    core: usize,
+    _t: PhantomData<fn() -> T>,
+}
+
+impl<T: FromReply> Ticket<T> {
+    pub fn new(rx: Receiver<Result<JobReply, ServeError>>, core: usize) -> Self {
+        Self { rx, core, _t: PhantomData }
+    }
+
+    /// The core this job was placed on (fixed at submit time — the DNN
+    /// gather path uses it to pick that core's digital trims).
+    pub fn core(&self) -> usize {
+        self.core
+    }
+
+    /// Re-type the handle (e.g. `Ticket<JobReply>` -> `Ticket<Vec<u32>>`
+    /// after submitting a `Job::Mac`).
+    pub fn typed<U: FromReply>(self) -> Ticket<U> {
+        Ticket { rx: self.rx, core: self.core, _t: PhantomData }
+    }
+
+    /// Block for the reply. A worker that shut down mid-flight surfaces
+    /// as [`ServeError::Disconnected`], never a panic.
+    pub fn wait(self) -> Result<T, ServeError> {
+        let reply = self.rx.recv().map_err(|_| ServeError::Disconnected)?;
+        T::from_reply(reply?)
+    }
+}
+
+/// Gather a whole fan-out: every ticket is drained even when one errors
+/// (so worker stats and reply channels settle deterministically), and the
+/// first error — if any — is returned after the drain. On success the
+/// payloads come back in ticket order, each tagged with its serving core.
+pub fn gather<T: FromReply>(tickets: Vec<Ticket<T>>) -> Result<Vec<(usize, T)>, ServeError> {
+    let mut out = Vec::with_capacity(tickets.len());
+    let mut first_err: Option<ServeError> = None;
+    for t in tickets {
+        let core = t.core();
+        match t.wait() {
+            Ok(v) => out.push((core, v)),
+            Err(e) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+    }
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(out),
+    }
+}
+
+/// Shared scheduler state between clients and workers: per-core in-flight
+/// depth gauges, health fences, and recalibration epochs.
+pub struct CoreBoard {
+    depth: Vec<AtomicUsize>,
+    fenced: Vec<AtomicBool>,
+    recal_epoch: Vec<AtomicU64>,
+}
+
+impl CoreBoard {
+    pub fn new(cores: usize) -> Self {
+        assert!(cores > 0, "a service needs at least one core");
+        Self {
+            depth: (0..cores).map(|_| AtomicUsize::new(0)).collect(),
+            fenced: (0..cores).map(|_| AtomicBool::new(false)).collect(),
+            recal_epoch: (0..cores).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    pub fn cores(&self) -> usize {
+        self.depth.len()
+    }
+
+    /// Jobs (weighted, see [`Job::weight`]) currently placed on `core`
+    /// and not yet answered.
+    pub fn in_flight(&self, core: usize) -> usize {
+        self.depth[core].load(Ordering::Relaxed)
+    }
+
+    pub fn add_in_flight(&self, core: usize, weight: usize) {
+        self.depth[core].fetch_add(weight, Ordering::Relaxed);
+    }
+
+    pub fn sub_in_flight(&self, core: usize, weight: usize) {
+        self.depth[core].fetch_sub(weight, Ordering::Relaxed);
+    }
+
+    /// Stop placing new jobs on `core` (pinned jobs still go through).
+    pub fn fence(&self, core: usize) {
+        self.fenced[core].store(true, Ordering::Relaxed);
+    }
+
+    /// Let `core` rejoin the scheduler.
+    pub fn unfence(&self, core: usize) {
+        self.fenced[core].store(false, Ordering::Relaxed);
+    }
+
+    pub fn is_fenced(&self, core: usize) -> bool {
+        self.fenced[core].load(Ordering::Relaxed)
+    }
+
+    /// Number of cores currently accepting placed jobs.
+    pub fn healthy_cores(&self) -> usize {
+        self.fenced.iter().filter(|f| !f.load(Ordering::Relaxed)).count()
+    }
+
+    /// Number of in-service recalibrations (`Drain`) this core has
+    /// completed since serving started. Gather-side schedules that
+    /// carry per-core digital corrections were measured at epoch 0 —
+    /// a non-zero epoch means those corrections are stale.
+    pub fn recal_epoch(&self, core: usize) -> u64 {
+        self.recal_epoch[core].load(Ordering::Relaxed)
+    }
+
+    /// Record a completed in-service recalibration (worker side).
+    pub fn bump_recal_epoch(&self, core: usize) {
+        self.recal_epoch[core].fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Resolve a placement policy against the board. Fenced cores are skipped
+/// by `RoundRobin`/`LeastLoaded`; `Pinned` always resolves (panics on an
+/// out-of-range core index — a programmer error, not a runtime state).
+pub fn place(
+    board: &CoreBoard,
+    rr: &AtomicUsize,
+    placement: Placement,
+) -> Result<usize, ServeError> {
+    let k = board.cores();
+    match placement {
+        Placement::Pinned(core) => {
+            assert!(core < k, "pinned core {core} out of range (cluster has {k})");
+            Ok(core)
+        }
+        Placement::RoundRobin => {
+            // snapshot the cursor once, then probe k DISTINCT cores from
+            // it — probing fetch_add k times can alias to the same fenced
+            // core under concurrent submitters and spuriously report
+            // NoHealthyCore while healthy cores sit idle
+            let start = rr.fetch_add(1, Ordering::Relaxed);
+            for i in 0..k {
+                let core = start.wrapping_add(i) % k;
+                if !board.is_fenced(core) {
+                    return Ok(core);
+                }
+            }
+            Err(ServeError::NoHealthyCore)
+        }
+        Placement::LeastLoaded => (0..k)
+            .filter(|&c| !board.is_fenced(c))
+            .min_by_key(|&c| board.in_flight(c))
+            .ok_or(ServeError::NoHealthyCore),
+    }
+}
+
+/// Place + reserve depth + send: the one submission path shared by every
+/// [`CimService`] implementation.
+pub fn submit_to(
+    txs: &[Sender<JobEnvelope>],
+    board: &CoreBoard,
+    rr: &AtomicUsize,
+    job: Job,
+    opts: SubmitOpts,
+) -> Result<Ticket<JobReply>, ServeError> {
+    let core = place(board, rr, opts.placement)?;
+    let weight = job.weight();
+    let (reply_tx, reply_rx) = channel();
+    board.add_in_flight(core, weight);
+    let env = JobEnvelope {
+        job,
+        priority: opts.priority,
+        deadline: opts.deadline.map(|d| Instant::now() + d),
+        weight,
+        reply: reply_tx,
+    };
+    if txs[core].send(env).is_err() {
+        board.sub_in_flight(core, weight);
+        return Err(ServeError::Disconnected);
+    }
+    Ok(Ticket::new(reply_rx, core))
+}
+
+/// Cloneable client over a set of worker channels — THE [`CimService`]
+/// implementation, shared by the multi-core cluster (re-exported as
+/// `ClusterClient`) and the stand-alone single-worker case (re-exported
+/// as the batcher's `Client`). Clones cooperate through the shared
+/// round-robin cursor and [`CoreBoard`].
+#[derive(Clone)]
+pub struct ServiceClient {
+    txs: Vec<Sender<JobEnvelope>>,
+    rr: Arc<AtomicUsize>,
+    board: Arc<CoreBoard>,
+}
+
+impl ServiceClient {
+    /// Client with a fresh round-robin cursor (its clones share it).
+    pub fn new(txs: Vec<Sender<JobEnvelope>>, board: Arc<CoreBoard>) -> Self {
+        Self::with_cursor(txs, board, Arc::new(AtomicUsize::new(0)))
+    }
+
+    /// Client sharing an existing cursor — a server handing out many
+    /// clients passes the same cursor so they all cooperate.
+    pub fn with_cursor(
+        txs: Vec<Sender<JobEnvelope>>,
+        board: Arc<CoreBoard>,
+        rr: Arc<AtomicUsize>,
+    ) -> Self {
+        assert_eq!(txs.len(), board.cores(), "one request channel per board core");
+        Self { txs, rr, board }
+    }
+}
+
+impl CimService for ServiceClient {
+    fn board(&self) -> &CoreBoard {
+        &self.board
+    }
+
+    fn submit(&self, job: Job, opts: SubmitOpts) -> Result<Ticket<JobReply>, ServeError> {
+        submit_to(&self.txs, &self.board, &self.rr, job, opts)
+    }
+}
+
+/// Per-worker context: which core this worker is, the shared board it
+/// reports depth/health to, and the calibration engine + residual band
+/// that give `Drain`/`Health` their meaning.
+pub struct CoreContext {
+    pub core: usize,
+    pub board: Arc<CoreBoard>,
+    /// Enables `Drain` recalibration and `Health` characterization; with
+    /// `None` both degrade to state reports.
+    pub engine: Option<BiscEngine>,
+    /// Fence when the mean per-line |g_tot - 1| exceeds this.
+    pub health_band: f64,
+}
+
+/// Default residual band: BISC leaves well under 2% mean gain error on
+/// the default die population; an uncalibrated or drifted die sits far
+/// above it.
+pub const DEFAULT_HEALTH_BAND: f64 = 0.05;
+
+impl CoreContext {
+    /// Context for a stand-alone single-core worker (its own board, no
+    /// calibration engine).
+    pub fn solo() -> Self {
+        Self {
+            core: 0,
+            board: Arc::new(CoreBoard::new(1)),
+            engine: None,
+            health_band: DEFAULT_HEALTH_BAND,
+        }
+    }
+}
+
+/// The unified serving surface. `submit` is the single entry point; all
+/// other methods are provided conveniences over it.
+pub trait CimService {
+    /// Shared scheduler state (depth gauges + fences).
+    fn board(&self) -> &CoreBoard;
+
+    /// Submit one job under the given options; returns the untyped
+    /// ticket (call [`Ticket::typed`] for a typed payload).
+    fn submit(&self, job: Job, opts: SubmitOpts) -> Result<Ticket<JobReply>, ServeError>;
+
+    fn cores(&self) -> usize {
+        self.board().cores()
+    }
+
+    /// Administratively fence a core (no new placed jobs).
+    fn fence(&self, core: usize) {
+        self.board().fence(core);
+    }
+
+    /// Administratively unfence a core.
+    fn unfence(&self, core: usize) {
+        self.board().unfence(core);
+    }
+
+    fn is_fenced(&self, core: usize) -> bool {
+        self.board().is_fenced(core)
+    }
+
+    /// Submit one MAC round-robin and wait.
+    fn mac(&self, x: Vec<i32>) -> Result<Vec<u32>, ServeError> {
+        self.submit(Job::Mac(x), SubmitOpts::default())?.typed::<Vec<u32>>().wait()
+    }
+
+    /// Submit one MAC pinned to `core` and wait.
+    fn mac_on(&self, core: usize, x: Vec<i32>) -> Result<Vec<u32>, ServeError> {
+        self.submit(Job::Mac(x), SubmitOpts::pinned(core))?.typed::<Vec<u32>>().wait()
+    }
+
+    /// Submit a native batch (one channel round-trip, one backend call)
+    /// and wait.
+    fn mac_batch(&self, xs: Vec<Vec<i32>>) -> Result<Vec<Vec<u32>>, ServeError> {
+        self.submit(Job::MacBatch { xs, tile: None }, SubmitOpts::default())?
+            .typed::<Vec<Vec<u32>>>()
+            .wait()
+    }
+
+    /// Probe one core's health (characterize + fence if out of band).
+    fn health(&self, core: usize) -> Result<CoreHealth, ServeError> {
+        self.submit(Job::Health, SubmitOpts::pinned(core))?.typed::<CoreHealth>().wait()
+    }
+
+    /// Drain → recalibrate → rejoin: the core is fenced immediately (no
+    /// new placed jobs), and the worker treats the drain as a seq
+    /// BARRIER — every job admitted to the core before it completes
+    /// first regardless of priority, while jobs admitted after it (only
+    /// pinned ones can arrive, the fence stops placement) wait until
+    /// the recalibration has run. The core rejoins the scheduler if its
+    /// residual lands back inside the band.
+    fn drain(&self, core: usize) -> Result<CoreHealth, ServeError> {
+        self.board().fence(core);
+        self.submit(Job::Drain, SubmitOpts::pinned(core))?.typed::<CoreHealth>().wait()
+    }
+
+    /// Scatter `n` MACs with up to `window` in flight, gathering every
+    /// reply. On error the remaining in-flight tickets are still drained
+    /// before the first error is returned.
+    fn mac_pipelined<F>(&self, n: usize, window: usize, make: F) -> Result<(), ServeError>
+    where
+        F: FnMut(usize) -> Vec<i32>,
+    {
+        self.mac_pipelined_with(n, window, SubmitOpts::default(), make)
+    }
+
+    /// `mac_pipelined` with explicit submit options (placement policy,
+    /// priority, deadline).
+    fn mac_pipelined_with<F>(
+        &self,
+        n: usize,
+        window: usize,
+        opts: SubmitOpts,
+        mut make: F,
+    ) -> Result<(), ServeError>
+    where
+        F: FnMut(usize) -> Vec<i32>,
+    {
+        pipelined_gather(n, window, |i| {
+            Ok(self.submit(Job::Mac(make(i)), opts)?.typed::<Vec<u32>>())
+        })
+    }
+
+    /// Pipelined native batches: `jobs` batches of `batch` MACs each,
+    /// with up to `window` batch jobs in flight. Same drain-on-error
+    /// semantics as [`CimService::mac_pipelined`].
+    fn mac_batch_pipelined<F>(
+        &self,
+        jobs: usize,
+        batch: usize,
+        window: usize,
+        opts: SubmitOpts,
+        mut make: F,
+    ) -> Result<(), ServeError>
+    where
+        F: FnMut(usize) -> Vec<i32>,
+    {
+        pipelined_gather(jobs, window, |j| {
+            let xs: Vec<Vec<i32>> = (0..batch).map(|i| make(j * batch + i)).collect();
+            Ok(self
+                .submit(Job::MacBatch { xs, tile: None }, opts)?
+                .typed::<Vec<Vec<u32>>>())
+        })
+    }
+}
+
+/// Shared windowed submit/gather loop behind the pipelined conveniences:
+/// keeps up to `window` tickets in flight, and on any error stops
+/// submitting but still drains every in-flight reply before returning
+/// the first error (worker stats and reply channels settle
+/// deterministically).
+fn pipelined_gather<T: FromReply>(
+    n: usize,
+    window: usize,
+    mut submit: impl FnMut(usize) -> Result<Ticket<T>, ServeError>,
+) -> Result<(), ServeError> {
+    let mut inflight: std::collections::VecDeque<Ticket<T>> = std::collections::VecDeque::new();
+    let mut first_err: Option<ServeError> = None;
+    for i in 0..n {
+        match submit(i) {
+            Ok(t) => inflight.push_back(t),
+            Err(e) => {
+                first_err = Some(e);
+                break;
+            }
+        }
+        if inflight.len() >= window.max(1) {
+            let t = inflight.pop_front().expect("window bound > 0");
+            if let Err(e) = t.wait() {
+                first_err = Some(e);
+                break;
+            }
+        }
+    }
+    // drain every remaining in-flight reply regardless of errors
+    for t in inflight {
+        if let Err(e) = t.wait() {
+            if first_err.is_none() {
+                first_err = Some(e);
+            }
+        }
+    }
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_skips_fenced_cores() {
+        let board = CoreBoard::new(3);
+        let rr = AtomicUsize::new(0);
+        board.fence(1);
+        for _ in 0..6 {
+            let c = place(&board, &rr, Placement::RoundRobin).unwrap();
+            assert_ne!(c, 1, "round robin placed on a fenced core");
+        }
+        // least-loaded: core 2 busier than core 0
+        board.add_in_flight(2, 5);
+        assert_eq!(place(&board, &rr, Placement::LeastLoaded).unwrap(), 0);
+        // pinned ignores the fence (drain path)
+        assert_eq!(place(&board, &rr, Placement::Pinned(1)).unwrap(), 1);
+        // everything fenced -> NoHealthyCore
+        board.fence(0);
+        board.fence(2);
+        assert_eq!(
+            place(&board, &rr, Placement::RoundRobin).unwrap_err(),
+            ServeError::NoHealthyCore
+        );
+        assert_eq!(
+            place(&board, &rr, Placement::LeastLoaded).unwrap_err(),
+            ServeError::NoHealthyCore
+        );
+        assert_eq!(board.healthy_cores(), 0);
+    }
+
+    #[test]
+    fn least_loaded_tracks_depth_gauges() {
+        let board = CoreBoard::new(2);
+        let rr = AtomicUsize::new(0);
+        board.add_in_flight(0, 3);
+        assert_eq!(place(&board, &rr, Placement::LeastLoaded).unwrap(), 1);
+        board.add_in_flight(1, 7);
+        assert_eq!(place(&board, &rr, Placement::LeastLoaded).unwrap(), 0);
+        board.sub_in_flight(1, 7);
+        assert_eq!(board.in_flight(1), 0);
+    }
+
+    #[test]
+    fn job_weight_counts_batch_members() {
+        assert_eq!(Job::Mac(vec![0; 4]).weight(), 1);
+        assert_eq!(Job::MacBatch { xs: vec![vec![0; 4]; 7], tile: None }.weight(), 7);
+        assert_eq!(Job::Drain.weight(), 1);
+        assert_eq!(Job::Health.weight(), 1);
+    }
+}

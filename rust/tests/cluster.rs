@@ -8,6 +8,7 @@ use acore_cim::config::SimConfig;
 use acore_cim::coordinator::batcher::{Batcher, ServeError};
 use acore_cim::coordinator::bisc::{AdcCharacterization, BiscEngine};
 use acore_cim::coordinator::cluster::CimCluster;
+use acore_cim::coordinator::service::{CimService, Job, SubmitOpts, Ticket};
 use acore_cim::util::proptest::forall;
 use acore_cim::util::rng::Rng;
 
@@ -81,11 +82,16 @@ fn round_robin_scatter_delivers_every_reply() {
     let client = server.client();
     let expect = reference(40, &vec![30; c::N_ROWS]);
     // pipelined scatter: all in flight at once, then gather
-    let replies: Vec<_> = (0..n)
-        .map(|_| client.submit(vec![30; c::N_ROWS]).expect("cluster gone"))
+    let tickets: Vec<Ticket<Vec<u32>>> = (0..n)
+        .map(|_| {
+            client
+                .submit(Job::Mac(vec![30; c::N_ROWS]), SubmitOpts::default())
+                .expect("cluster gone")
+                .typed()
+        })
         .collect();
-    for r in replies {
-        assert_eq!(r.recv().unwrap().unwrap(), expect);
+    for t in tickets {
+        assert_eq!(t.wait().unwrap(), expect);
     }
     drop(client);
     let (_cluster, stats) = server.join();

@@ -1,0 +1,169 @@
+//! Scheduler semantics of the unified job API over a real cluster:
+//! least-loaded placement via the shared depth gauges, health fencing
+//! (zero jobs placed on an out-of-band die), and the full
+//! drain -> recalibrate -> rejoin lifecycle from the periodic-BISC story.
+
+use acore_cim::analog::{consts as c, CimAnalogModel};
+use acore_cim::config::SimConfig;
+use acore_cim::coordinator::batcher::Batcher;
+use acore_cim::coordinator::bisc::{AdcCharacterization, BiscEngine};
+use acore_cim::coordinator::cluster::{core_seed, CimCluster, ServiceConfig};
+use acore_cim::coordinator::service::{gather, CimService, Job, SubmitOpts, Ticket};
+
+fn ideal_cfg() -> SimConfig {
+    let mut cfg = SimConfig::default().scaled(0.0);
+    cfg.sigma_noise = 0.0;
+    cfg
+}
+
+#[test]
+fn least_loaded_placement_follows_the_depth_gauges() {
+    let mut cluster = CimCluster::new(&ideal_cfg(), 2);
+    cluster.program_all(&vec![40; c::N_ROWS * c::M_COLS]);
+    let server = cluster.serve(Batcher::default());
+    let client = server.client();
+    // pile pinned work onto core 0 without waiting for any reply: four
+    // native 256-wide batches weigh 1024 in the depth gauges and take
+    // far longer to serve than the submissions below take to place
+    let pinned: Vec<Ticket<Vec<Vec<u32>>>> = (0..4)
+        .map(|_| {
+            let xs: Vec<Vec<i32>> = (0..256).map(|_| vec![10; c::N_ROWS]).collect();
+            client
+                .submit(Job::MacBatch { xs, tile: None }, SubmitOpts::pinned(0))
+                .unwrap()
+                .typed()
+        })
+        .collect();
+    // placement is decided at submit time from the gauges: least-loaded
+    // must prefer core 1 while core 0 is deep
+    let mut placed = [0usize; 2];
+    let ll: Vec<Ticket<Vec<u32>>> = (0..20)
+        .map(|_| {
+            let t = client
+                .submit(Job::Mac(vec![10; c::N_ROWS]), SubmitOpts::least_loaded())
+                .unwrap();
+            placed[t.core()] += 1;
+            t.typed()
+        })
+        .collect();
+    assert!(
+        placed[1] >= placed[0],
+        "least-loaded favored the busy core: {placed:?}"
+    );
+    assert!(placed[1] >= 10, "least-loaded barely used the idle core: {placed:?}");
+    gather(pinned).unwrap();
+    gather(ll).unwrap();
+    // every depth reservation must be released once replies are gathered
+    assert_eq!(client.board().in_flight(0), 0);
+    assert_eq!(client.board().in_flight(1), 0);
+    drop(client);
+    let (_cluster, stats) = server.join();
+    assert_eq!(stats.iter().map(|s| s.requests).sum::<u64>(), 4 * 256 + 20);
+    assert!(stats[0].requests >= 4 * 256, "pinned batches must stay on core 0");
+}
+
+#[test]
+fn out_of_band_core_is_fenced_then_rejoins_after_drain() {
+    // noise-free default-sigma dies: deterministic residuals, with the
+    // uncalibrated die far outside any band a calibrated die satisfies
+    let mut cfg = SimConfig::default();
+    cfg.sigma_noise = 0.0;
+    let mut cluster = CimCluster::new(&cfg, 2);
+    cluster.program_all(&vec![40; c::N_ROWS * c::M_COLS]);
+    let engine = BiscEngine::from_config(&cfg, AdcCharacterization::ideal());
+
+    // pre-measure the residuals on a twin of core 1 (same seed, same
+    // sample, noise-free => identical die) so the band provably
+    // separates the uncalibrated and calibrated states
+    let mut cfg1 = cfg.clone();
+    cfg1.seed = core_seed(cfg.seed, 1);
+    let mut twin = CimAnalogModel::from_sample(&cfg1, &cluster.cores[1].sample);
+    let r_uncal = engine.residual_gain_error(&mut twin);
+    engine.calibrate(&mut twin);
+    let r_cal = engine.residual_gain_error(&mut twin);
+    assert!(r_cal < r_uncal, "BISC did not improve the twin: {r_cal} vs {r_uncal}");
+    let band = 0.5 * (r_cal + r_uncal);
+
+    let server = cluster.serve_with(ServiceConfig {
+        batcher: Batcher::default(),
+        engine: Some(engine),
+        health_band: band,
+    });
+    let client = server.client();
+
+    // the health probe finds core 1 out of band and fences it
+    let h = client.health(1).unwrap();
+    assert_eq!(h.core, 1);
+    let measured = h.residual.expect("engine is configured");
+    assert!(measured > band, "uncalibrated residual {measured} inside band {band}");
+    assert!(h.fenced);
+    assert!(client.is_fenced(1));
+
+    // zero jobs placed on the out-of-band die, under both policies
+    let tickets: Vec<Ticket<Vec<u32>>> = (0..40)
+        .map(|i| {
+            let opts = if i % 2 == 0 {
+                SubmitOpts::default() // round-robin
+            } else {
+                SubmitOpts::least_loaded()
+            };
+            let t = client.submit(Job::Mac(vec![30; c::N_ROWS]), opts).unwrap();
+            assert_ne!(t.core(), 1, "job placed on a fenced core");
+            t.typed()
+        })
+        .collect();
+    gather(tickets).unwrap();
+
+    // drain -> recalibrate -> rejoin
+    let h = client.drain(1).unwrap();
+    assert!(h.recalibrated, "drain with an engine must recalibrate");
+    let post = h.residual.expect("engine is configured");
+    assert!(post <= band, "post-BISC residual {post} still outside band {band}");
+    assert!(!h.fenced);
+    assert!(!client.is_fenced(1));
+
+    // the rejoined core serves again (shared round-robin cursor reaches
+    // every healthy core within k submissions)
+    let mut served_core1 = false;
+    let tickets: Vec<Ticket<Vec<u32>>> = (0..8)
+        .map(|_| {
+            let t = client
+                .submit(Job::Mac(vec![30; c::N_ROWS]), SubmitOpts::default())
+                .unwrap();
+            served_core1 |= t.core() == 1;
+            t.typed()
+        })
+        .collect();
+    gather(tickets).unwrap();
+    assert!(served_core1, "rejoined core never placed");
+
+    drop(client);
+    let (cluster, stats) = server.join();
+    // the fenced core answered only post-rejoin traffic
+    assert!(stats[1].requests <= 8, "fenced core served placed jobs: {:?}", stats[1]);
+    // the in-service recalibration left a report on the core
+    assert!(cluster.cores[1].report.is_some());
+}
+
+#[test]
+fn drain_without_engine_reports_without_recalibrating() {
+    let mut cluster = CimCluster::new(&ideal_cfg(), 2);
+    cluster.program_all(&vec![40; c::N_ROWS * c::M_COLS]);
+    // default serve(): no engine, lifecycle jobs degrade to state reports
+    let server = cluster.serve(Batcher::default());
+    let client = server.client();
+    let h = client.health(0).unwrap();
+    assert_eq!(h.residual, None);
+    assert!(!h.recalibrated);
+    assert!(!h.fenced);
+    // drain fences at submit time and, with no engine, cannot rejoin
+    let h = client.drain(1).unwrap();
+    assert!(!h.recalibrated);
+    assert!(h.fenced, "without an engine a drained core stays fenced");
+    assert!(client.is_fenced(1));
+    // manual unfence is the operator's escape hatch
+    client.unfence(1);
+    assert!(!client.is_fenced(1));
+    drop(client);
+    server.join();
+}
