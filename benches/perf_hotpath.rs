@@ -6,7 +6,10 @@
 //!   BISC calibration wall time (single die + parallel cluster),
 //!   batcher request throughput (unified submit path),
 //!   multi-core cluster serving throughput at K = 1, 2, 4, 8, per-request
-//!     Mac + round-robin vs native MacBatch + least-loaded placement.
+//!     Mac + round-robin vs native MacBatch + least-loaded placement,
+//!   wire front-end overhead: the same pipelined workloads through a
+//!     loopback-TCP WireServer/RemoteClient pair vs in-process submits,
+//!     for Mac and MacBatch(64) at K = 1 and 4 (EXPERIMENTS.md §Perf).
 
 use acore_cim::analog::variation::VariationSample;
 use acore_cim::analog::{consts as c, CimAnalogModel};
@@ -63,8 +66,11 @@ fn cluster_throughput(
     for j in joins {
         j.join().unwrap();
     }
-    let (_cluster, stats) = server.join();
+    // clock stops when every reply is gathered — teardown excluded, the
+    // same measurement point as `wire_throughput`, so the printed
+    // in-process-vs-TCP ratio compares equal spans
     let dt = t0.elapsed().as_secs_f64();
+    let (_cluster, stats) = server.join();
     let total: u64 = stats.iter().map(|s| s.requests).sum();
     let expect = if batch > 1 {
         (per_producer / batch) * batch * producers
@@ -72,6 +78,78 @@ fn cluster_throughput(
         per_producer * producers
     };
     assert_eq!(total as usize, expect, "lost requests");
+    total as f64 / dt
+}
+
+/// The same pipelined workload as [`cluster_throughput`], but driven over
+/// a loopback-TCP `WireServer`/`RemoteClient` pair — one connection per
+/// producer, each pure `CimService` calls — so the printed pair isolates
+/// the wire protocol's overhead (framing, syscalls, reply routing).
+fn wire_throughput(
+    cfg: &SimConfig,
+    k: usize,
+    n_requests: usize,
+    batch: usize,
+    least_loaded: bool,
+) -> f64 {
+    use acore_cim::coordinator::batcher::Batcher;
+    use acore_cim::coordinator::service::{CimService, SubmitOpts};
+    use acore_cim::coordinator::wire::{RemoteClient, WireServer};
+    use std::sync::Arc;
+    let mut cluster = CimCluster::new(cfg, k);
+    cluster.program_all(&vec![40; c::N_ROWS * c::M_COLS]);
+    let server = cluster.serve(Batcher::default());
+    let wire = Arc::new(
+        WireServer::bind(("127.0.0.1", 0), server.client(), server.live_handles())
+            .expect("bind ephemeral loopback port"),
+    );
+    let addr = wire.local_addr().expect("bound listener has an address");
+    let acceptor = {
+        let wire = Arc::clone(&wire);
+        std::thread::spawn(move || wire.serve())
+    };
+    let t0 = std::time::Instant::now();
+    let producers = k;
+    let per_producer = n_requests / producers;
+    let mut joins = Vec::new();
+    for p in 0..producers {
+        let client = RemoteClient::connect(addr).expect("connect loopback");
+        joins.push(std::thread::spawn(move || {
+            let opts =
+                if least_loaded { SubmitOpts::least_loaded() } else { SubmitOpts::default() };
+            let make = |i: usize| vec![((p + i) % 63) as i32 - 31; c::N_ROWS];
+            if batch > 1 {
+                client
+                    .mac_batch_pipelined(
+                        per_producer / batch,
+                        batch,
+                        (512 / batch).max(1),
+                        opts,
+                        make,
+                    )
+                    .expect("wire serving failed");
+            } else {
+                client
+                    .mac_pipelined_with(per_producer, 512, opts, make)
+                    .expect("wire serving failed");
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    wire.request_shutdown();
+    acceptor.join().unwrap();
+    drop(wire);
+    let (_cluster, stats) = server.join();
+    let total: u64 = stats.iter().map(|s| s.requests).sum();
+    let expect = if batch > 1 {
+        (per_producer / batch) * batch * producers
+    } else {
+        per_producer * producers
+    };
+    assert_eq!(total as usize, expect, "lost requests over the wire");
     total as f64 / dt
 }
 
@@ -297,4 +375,23 @@ fn main() {
         "   (host has {} CPUs; scaling saturates at the physical core count)",
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     );
+
+    println!("\n== wire front-end: in-process vs loopback TCP ==");
+    // the same two serving modes as above, re-measured through a real
+    // socket: the gap is the wire protocol's whole cost (framing,
+    // syscalls, reply routing) — MacBatch amortizes it ~64x per frame
+    let n_wire = if fast { 8_000 } else { 24_000 };
+    for k in [1usize, 4] {
+        for (label, batch, ll) in
+            [("Mac + round-robin    ", 1usize, false), ("MacBatch(64) + least-loaded", 64, true)]
+        {
+            let inproc = cluster_throughput(&cfg, k, n_wire, batch, ll);
+            let tcp = wire_throughput(&cfg, k, n_wire, batch, ll);
+            println!(
+                "K = {k} {label}: {inproc:>10.0} req/s in-process | {tcp:>10.0} req/s \
+                 loopback TCP ({:.0}% of in-process)",
+                100.0 * tcp / inproc
+            );
+        }
+    }
 }

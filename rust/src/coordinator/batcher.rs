@@ -70,7 +70,7 @@ impl std::fmt::Display for ServeError {
 impl std::error::Error for ServeError {}
 
 /// Statistics from a batcher run.
-#[derive(Debug, Default, Clone, Copy)]
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct BatcherStats {
     /// MAC evaluations answered successfully (batch members count
     /// individually; `Drain`/`Health` control jobs are not counted)
@@ -276,7 +276,7 @@ impl Batcher {
             // release the depth reservation BEFORE replying so a client
             // that has gathered every reply observes settled gauges
             ctx.board.sub_in_flight(ctx.core, env.weight);
-            let _ = env.reply.send(Err(ServeError::BadRequest { expected: rows, got }));
+            env.reply.send(Err(ServeError::BadRequest { expected: rows, got }));
             return;
         }
         if let Some(d) = env.deadline {
@@ -367,7 +367,7 @@ impl Batcher {
     fn expire(p: Pending, ctx: &CoreContext, stats: &mut BatcherStats) {
         stats.expired += p.env.weight as u64;
         ctx.board.sub_in_flight(ctx.core, p.env.weight);
-        let _ = p.env.reply.send(Err(ServeError::DeadlineExceeded));
+        p.env.reply.send(Err(ServeError::DeadlineExceeded));
     }
 
     /// Coalesce the popped `Mac` job with further queued `Mac` jobs (in
@@ -416,7 +416,7 @@ impl Batcher {
                 for (i, p) in pendings.into_iter().enumerate() {
                     let out = q[i * cols..(i + 1) * cols].to_vec();
                     ctx.board.sub_in_flight(ctx.core, p.env.weight);
-                    let _ = p.env.reply.send(Ok(JobReply::Mac(out)));
+                    p.env.reply.send(Ok(JobReply::Mac(out)));
                 }
                 stats.requests += batch as u64;
                 stats.batches += 1;
@@ -431,7 +431,7 @@ impl Batcher {
                 };
                 for p in pendings {
                     ctx.board.sub_in_flight(ctx.core, p.env.weight);
-                    let _ = p.env.reply.send(Err(ServeError::Backend(msg.clone())));
+                    p.env.reply.send(Err(ServeError::Backend(msg.clone())));
                 }
                 stats.rejected += batch as u64;
             }
@@ -467,7 +467,7 @@ impl Batcher {
             Ok(q) if q.len() == n * cols => {
                 let outs: Vec<Vec<u32>> =
                     (0..n).map(|i| q[i * cols..(i + 1) * cols].to_vec()).collect();
-                let _ = reply.send(Ok(JobReply::MacBatch(outs)));
+                reply.send(Ok(JobReply::MacBatch(outs)));
                 stats.requests += n as u64;
                 stats.batches += 1;
                 stats.max_batch_seen = stats.max_batch_seen.max(n);
@@ -477,7 +477,7 @@ impl Batcher {
                     Ok(q) => Self::shape_error(q.len(), n * cols),
                     Err(msg) => msg,
                 };
-                let _ = reply.send(Err(ServeError::Backend(msg)));
+                reply.send(Err(ServeError::Backend(msg)));
                 stats.rejected += n as u64;
             }
         }
@@ -506,7 +506,7 @@ impl Batcher {
             recalibrated,
         };
         ctx.board.sub_in_flight(ctx.core, p.env.weight);
-        let _ = p.env.reply.send(Ok(JobReply::Health(health)));
+        p.env.reply.send(Ok(JobReply::Health(health)));
     }
 
     /// Health probe: measure the residual and fence the core if it is
@@ -525,7 +525,7 @@ impl Batcher {
             recalibrated: false,
         };
         ctx.board.sub_in_flight(ctx.core, p.env.weight);
-        let _ = p.env.reply.send(Ok(JobReply::Health(health)));
+        p.env.reply.send(Ok(JobReply::Health(health)));
     }
 
     /// Serve until the request channel closes. Returns run statistics.
@@ -551,6 +551,9 @@ impl Batcher {
         let mut stash: Option<Pending> = None;
         let mut deferred: Vec<Pending> = Vec::new();
         loop {
+            // republish the live statistics snapshot each dispatch round
+            // (wire Stats frames read it without joining the worker)
+            *ctx.live.lock().unwrap() = stats;
             // release the barrier once no pre-drain work remains
             let release = stash
                 .as_ref()
@@ -578,7 +581,10 @@ impl Batcher {
                         ctx,
                         &mut stats,
                     ),
-                    Err(_) => return stats,
+                    Err(_) => {
+                        *ctx.live.lock().unwrap() = stats;
+                        return stats;
+                    }
                 }
                 // opportunistically wait for more, up to max_batch /
                 // max_wait — lets batches (and higher-priority arrivals)

@@ -44,7 +44,7 @@ use crate::coordinator::service::{
 use crate::util::rng::SplitMix64;
 use std::sync::atomic::AtomicUsize;
 use std::sync::mpsc::{channel, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 /// Derive the die seed of core `core` from the cluster's base seed.
@@ -330,13 +330,16 @@ impl CimCluster {
         let board = Arc::new(CoreBoard::new(self.cores.len()));
         let mut txs = Vec::with_capacity(self.cores.len());
         let mut handles = Vec::with_capacity(self.cores.len());
+        let mut live = Vec::with_capacity(self.cores.len());
         for mut core in self.cores {
             let (tx, rx) = channel::<JobEnvelope>();
+            let slot = Arc::new(Mutex::new(BatcherStats::default()));
             let ctx = CoreContext {
                 core: core.id,
                 board: Arc::clone(&board),
                 engine: svc.engine.clone(),
                 health_band: svc.health_band,
+                live: Arc::clone(&slot),
             };
             let batcher = svc.batcher;
             handles.push(std::thread::spawn(move || {
@@ -344,8 +347,9 @@ impl CimCluster {
                 (core, stats)
             }));
             txs.push(tx);
+            live.push(slot);
         }
-        ClusterServer { txs, handles, board, rr: Arc::new(AtomicUsize::new(0)) }
+        ClusterServer { txs, handles, board, rr: Arc::new(AtomicUsize::new(0)), live }
     }
 }
 
@@ -374,6 +378,7 @@ pub struct ClusterServer {
     handles: Vec<JoinHandle<(ClusterCore, BatcherStats)>>,
     board: Arc<CoreBoard>,
     rr: Arc<AtomicUsize>,
+    live: Vec<Arc<Mutex<BatcherStats>>>,
 }
 
 impl ClusterServer {
@@ -384,6 +389,18 @@ impl ClusterServer {
     /// Shared scheduler state (in-flight depth gauges, fences).
     pub fn board(&self) -> &Arc<CoreBoard> {
         &self.board
+    }
+
+    /// Handles on the per-core live statistics snapshots (each worker
+    /// republishes its [`BatcherStats`] every dispatch round) — what the
+    /// wire front-end's `Stats` frames read without joining the workers.
+    pub fn live_handles(&self) -> Vec<Arc<Mutex<BatcherStats>>> {
+        self.live.clone()
+    }
+
+    /// Current per-core statistics snapshot.
+    pub fn live_stats(&self) -> Vec<BatcherStats> {
+        self.live.iter().map(|s| *s.lock().unwrap()).collect()
     }
 
     /// A cloneable service handle over all cores (every client from this

@@ -1,7 +1,8 @@
 //! L3 coordinator: the CIM device register file, the BISC calibration
 //! engine, compute-SNR evaluation, the DNN tile scheduler, the batching
-//! request loop, and the multi-core sharded serving cluster (paper
-//! Sections III, VI, VII + the multi-array scaling direction).
+//! request loop, the multi-core sharded serving cluster, and the TCP
+//! wire front-end over it (paper Sections III, VI, VII + the multi-array
+//! scaling direction).
 
 pub mod bisc;
 pub mod cim_core;
@@ -10,3 +11,4 @@ pub mod dnn;
 pub mod batcher;
 pub mod service;
 pub mod cluster;
+pub mod wire;

@@ -20,12 +20,12 @@
 //!   convenience entry points (`mac`, `mac_batch`, `drain`, `health`,
 //!   `mac_pipelined`) are provided methods over `submit`.
 
-use crate::coordinator::batcher::ServeError;
+use crate::coordinator::batcher::{BatcherStats, ServeError};
 use crate::coordinator::bisc::BiscEngine;
 use std::marker::PhantomData;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Lowest urgency: yields to everything else queued on the core.
@@ -48,7 +48,7 @@ pub struct TileRef {
 }
 
 /// One typed request to the serving layer.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum Job {
     /// One MAC over the core's currently programmed weights. The worker
     /// may coalesce adjacent `Mac` jobs of equal standing into one
@@ -211,8 +211,45 @@ fn reply_type_mismatch(want: &str, got: &JobReply) -> ServeError {
     ServeError::Backend(format!("reply type mismatch: expected {want}, got {got}"))
 }
 
-/// The wire envelope a worker receives: the job plus its scheduling
-/// metadata and the per-job reply channel.
+/// A reply tagged with its request id and serving core, routed onto a
+/// shared fan-in channel (one per wire connection) instead of a per-job
+/// channel — the delivery form behind [`ReplySink::Routed`].
+pub struct RoutedReply {
+    pub id: u64,
+    pub core: usize,
+    pub result: Result<JobReply, ServeError>,
+}
+
+/// Where a worker delivers one job's reply. `Channel` is the in-process
+/// form ([`Ticket`] holds the other end); `Routed` fans many jobs into
+/// one shared channel with request-id correlation, so a wire connection
+/// can stream out-of-order completions without a waiter thread per job.
+pub enum ReplySink {
+    Channel(Sender<Result<JobReply, ServeError>>),
+    Routed {
+        id: u64,
+        core: usize,
+        tx: Sender<RoutedReply>,
+    },
+}
+
+impl ReplySink {
+    /// Deliver the reply. A receiver that has gone away is not an error
+    /// for the worker — the job was already executed either way.
+    pub fn send(self, result: Result<JobReply, ServeError>) {
+        match self {
+            ReplySink::Channel(tx) => {
+                let _ = tx.send(result);
+            }
+            ReplySink::Routed { id, core, tx } => {
+                let _ = tx.send(RoutedReply { id, core, result });
+            }
+        }
+    }
+}
+
+/// The envelope a worker receives: the job plus its scheduling metadata
+/// and the per-job reply sink.
 pub struct JobEnvelope {
     pub job: Job,
     pub priority: u8,
@@ -221,7 +258,7 @@ pub struct JobEnvelope {
     pub deadline: Option<Instant>,
     /// depth-gauge weight reserved at submit time ([`Job::weight`])
     pub weight: usize,
-    pub reply: Sender<Result<JobReply, ServeError>>,
+    pub reply: ReplySink,
 }
 
 /// Handle for one submitted job. `T` is the typed payload
@@ -385,6 +422,32 @@ pub fn place(
     }
 }
 
+/// Reserve depth + envelope + send to one core's worker: the tail every
+/// submission path shares once placement has been resolved.
+fn dispatch(
+    txs: &[Sender<JobEnvelope>],
+    board: &CoreBoard,
+    core: usize,
+    job: Job,
+    opts: SubmitOpts,
+    reply: ReplySink,
+) -> Result<(), ServeError> {
+    let weight = job.weight();
+    board.add_in_flight(core, weight);
+    let env = JobEnvelope {
+        job,
+        priority: opts.priority,
+        deadline: opts.deadline.map(|d| Instant::now() + d),
+        weight,
+        reply,
+    };
+    if txs[core].send(env).is_err() {
+        board.sub_in_flight(core, weight);
+        return Err(ServeError::Disconnected);
+    }
+    Ok(())
+}
+
 /// Place + reserve depth + send: the one submission path shared by every
 /// [`CimService`] implementation.
 pub fn submit_to(
@@ -395,21 +458,27 @@ pub fn submit_to(
     opts: SubmitOpts,
 ) -> Result<Ticket<JobReply>, ServeError> {
     let core = place(board, rr, opts.placement)?;
-    let weight = job.weight();
     let (reply_tx, reply_rx) = channel();
-    board.add_in_flight(core, weight);
-    let env = JobEnvelope {
-        job,
-        priority: opts.priority,
-        deadline: opts.deadline.map(|d| Instant::now() + d),
-        weight,
-        reply: reply_tx,
-    };
-    if txs[core].send(env).is_err() {
-        board.sub_in_flight(core, weight);
-        return Err(ServeError::Disconnected);
-    }
+    dispatch(txs, board, core, job, opts, ReplySink::Channel(reply_tx))?;
     Ok(Ticket::new(reply_rx, core))
+}
+
+/// `submit_to` with a routed reply sink: the reply lands on `tx` tagged
+/// with `id` and the serving core (returned). The wire front-end's fan-in
+/// path — one shared channel per connection, many jobs in flight, replies
+/// streamed in completion order.
+pub fn submit_routed_to(
+    txs: &[Sender<JobEnvelope>],
+    board: &CoreBoard,
+    rr: &AtomicUsize,
+    job: Job,
+    opts: SubmitOpts,
+    id: u64,
+    tx: &Sender<RoutedReply>,
+) -> Result<usize, ServeError> {
+    let core = place(board, rr, opts.placement)?;
+    dispatch(txs, board, core, job, opts, ReplySink::Routed { id, core, tx: tx.clone() })?;
+    Ok(core)
 }
 
 /// Cloneable client over a set of worker channels — THE [`CimService`]
@@ -452,6 +521,22 @@ impl CimService for ServiceClient {
     }
 }
 
+impl ServiceClient {
+    /// Submit with a routed reply sink instead of a per-job channel: the
+    /// worker's reply lands on `tx` tagged with `id` and the serving core
+    /// (see [`submit_routed_to`]). Used by the TCP front-end so one
+    /// connection can stream many in-flight replies out of order.
+    pub fn submit_routed(
+        &self,
+        job: Job,
+        opts: SubmitOpts,
+        id: u64,
+        tx: &Sender<RoutedReply>,
+    ) -> Result<usize, ServeError> {
+        submit_routed_to(&self.txs, &self.board, &self.rr, job, opts, id, tx)
+    }
+}
+
 /// Per-worker context: which core this worker is, the shared board it
 /// reports depth/health to, and the calibration engine + residual band
 /// that give `Drain`/`Health` their meaning.
@@ -463,6 +548,10 @@ pub struct CoreContext {
     pub engine: Option<BiscEngine>,
     /// Fence when the mean per-line |g_tot - 1| exceeds this.
     pub health_band: f64,
+    /// Live snapshot of the worker's [`BatcherStats`], republished every
+    /// dispatch round — wire `Stats` frames and operator tooling read it
+    /// without joining the worker.
+    pub live: Arc<Mutex<BatcherStats>>,
 }
 
 /// Default residual band: BISC leaves well under 2% mean gain error on
@@ -479,6 +568,7 @@ impl CoreContext {
             board: Arc::new(CoreBoard::new(1)),
             engine: None,
             health_band: DEFAULT_HEALTH_BAND,
+            live: Arc::new(Mutex::new(BatcherStats::default())),
         }
     }
 }

@@ -1,0 +1,269 @@
+//! [`RemoteClient`]: the [`CimService`] trait over a TCP socket, so every
+//! in-process consumer of the serving API — `CimMlp::infer_batch_service`,
+//! the pipelined benches, the CLI — runs unchanged against a remote core
+//! cluster.
+//!
+//! Placement is resolved AT THE EDGE: the connection handshake ships the
+//! cluster's core count, the client keeps its own [`CoreBoard`] mirror
+//! (fences, depth gauges, recalibration epochs), resolves round-robin /
+//! least-loaded / pinned locally, and ships the job pre-pinned. That
+//! keeps the whole `CimService` contract honest over the wire — a
+//! [`Ticket`]'s serving core is exact at submit time (the DNN gather path
+//! picks per-core trims by it), the depth gauges see this client's own
+//! in-flight load, and `drain`'s fence takes effect before the drain job
+//! is on the wire. The mirror's fence and epoch state synchronize from
+//! `Health`/`Drain` replies: a lifecycle probe through THIS client
+//! updates it; probes by other clients are visible only after a local
+//! probe observes them (send `health` first when fence freshness
+//! matters).
+
+use crate::coordinator::batcher::{BatcherStats, ServeError};
+use crate::coordinator::service::{
+    place, CimService, CoreBoard, Job, JobReply, Placement, SubmitOpts, Ticket,
+};
+use crate::coordinator::wire::codec::{
+    encode_frame, read_frame, write_frame, Frame, HEADER_LEN, MAX_BODY,
+};
+use std::collections::HashMap;
+use std::io::{self, Write};
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+
+/// One in-flight job: where its reply goes and what the mirror gauges
+/// reserved for it.
+struct PendingJob {
+    tx: Sender<Result<JobReply, ServeError>>,
+    core: usize,
+    weight: usize,
+    is_drain: bool,
+}
+
+/// State shared with the reader thread.
+struct Shared {
+    board: Arc<CoreBoard>,
+    pending: Mutex<HashMap<u64, PendingJob>>,
+    pending_stats: Mutex<HashMap<u64, Sender<Vec<BatcherStats>>>>,
+    /// Per-core count of this client's in-flight `Drain` jobs. While one
+    /// is pending, a concurrently measured `fenced: false` Health reply
+    /// is stale — honoring it would unfence the mirror out from under
+    /// the fence `drain()` just placed, letting placed jobs pile up
+    /// behind the server-side drain barrier.
+    drains: Vec<AtomicUsize>,
+    alive: AtomicBool,
+}
+
+struct Inner {
+    shared: Arc<Shared>,
+    /// original stream, kept to unblock the reader on drop
+    stream: TcpStream,
+    /// serialized frame writes (submits from any clone)
+    write: Mutex<TcpStream>,
+    rr: AtomicUsize,
+    next_id: AtomicU64,
+    reader: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Drop for Inner {
+    fn drop(&mut self) {
+        let _ = self.stream.shutdown(Shutdown::Both);
+        if let Some(h) = self.reader.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A connection to a [`crate::coordinator::wire::WireServer`]. Cloning is
+/// cheap and clones share the connection, the request-id space, and the
+/// board mirror — clone freely across producer threads, exactly like the
+/// in-process `ServiceClient`.
+pub struct RemoteClient {
+    inner: Arc<Inner>,
+}
+
+impl Clone for RemoteClient {
+    fn clone(&self) -> Self {
+        Self { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl RemoteClient {
+    /// Connect and handshake: the server opens with a `Hello` frame
+    /// carrying its core count, which sizes the local board mirror.
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<Self> {
+        let mut stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let cores = match read_frame(&mut stream) {
+            Ok(Frame::Hello { cores }) if cores > 0 => cores as usize,
+            Ok(_) | Err(_) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    "server did not open with a valid Hello frame",
+                ));
+            }
+        };
+        let shared = Arc::new(Shared {
+            board: Arc::new(CoreBoard::new(cores)),
+            pending: Mutex::new(HashMap::new()),
+            pending_stats: Mutex::new(HashMap::new()),
+            drains: (0..cores).map(|_| AtomicUsize::new(0)).collect(),
+            alive: AtomicBool::new(true),
+        });
+        let write = stream.try_clone()?;
+        let reader_stream = stream.try_clone()?;
+        let reader_shared = Arc::clone(&shared);
+        let reader = std::thread::spawn(move || reader_loop(reader_stream, reader_shared));
+        Ok(Self {
+            inner: Arc::new(Inner {
+                shared,
+                stream,
+                write: Mutex::new(write),
+                rr: AtomicUsize::new(0),
+                next_id: AtomicU64::new(1),
+                reader: Mutex::new(Some(reader)),
+            }),
+        })
+    }
+
+    /// Fetch the server's per-core live [`BatcherStats`] snapshots.
+    pub fn remote_stats(&self) -> Result<Vec<BatcherStats>, ServeError> {
+        let sh = &self.inner.shared;
+        if !sh.alive.load(Ordering::SeqCst) {
+            return Err(ServeError::Disconnected);
+        }
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        sh.pending_stats.lock().unwrap().insert(id, tx);
+        let sent =
+            write_frame(&mut *self.inner.write.lock().unwrap(), &Frame::StatsReq { id }).is_ok();
+        // re-check AFTER the insert: the reader may have disconnected and
+        // cleared the map between our alive check and the insert — if our
+        // entry slipped in after that sweep, remove it ourselves so the
+        // recv below can never block on a sender nobody will ever use
+        if !sent || !sh.alive.load(Ordering::SeqCst) {
+            sh.pending_stats.lock().unwrap().remove(&id);
+            return Err(ServeError::Disconnected);
+        }
+        rx.recv().map_err(|_| ServeError::Disconnected)
+    }
+}
+
+impl CimService for RemoteClient {
+    fn board(&self) -> &CoreBoard {
+        &self.inner.shared.board
+    }
+
+    fn submit(&self, job: Job, opts: SubmitOpts) -> Result<Ticket<JobReply>, ServeError> {
+        let sh = &self.inner.shared;
+        if !sh.alive.load(Ordering::SeqCst) {
+            return Err(ServeError::Disconnected);
+        }
+        let core = place(&sh.board, &self.inner.rr, opts.placement)?;
+        let weight = job.weight();
+        let is_drain = matches!(job, Job::Drain);
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        sh.board.add_in_flight(core, weight);
+        // registered BEFORE the frame is on the wire: the reply cannot
+        // outrun its pending entry
+        sh.pending.lock().unwrap().insert(id, PendingJob { tx, core, weight, is_drain });
+        if is_drain {
+            sh.drains[core].fetch_add(1, Ordering::SeqCst);
+        }
+        // ship the RESOLVED placement so the server's core choice always
+        // matches this ticket's core and the mirror's depth accounting
+        let wire_opts = SubmitOpts { placement: Placement::Pinned(core), ..opts };
+        let bytes = encode_frame(&Frame::Submit { id, job, opts: wire_opts });
+        if bytes.len() - HEADER_LEN > MAX_BODY as usize {
+            // enforce the peer's frame cap locally: shipping it anyway
+            // would kill the whole connection (the server's decoder
+            // rejects oversized bodies), taking every in-flight job with
+            // this one
+            if let Some(p) = sh.pending.lock().unwrap().remove(&id) {
+                sh.board.sub_in_flight(core, weight);
+                if p.is_drain {
+                    sh.drains[core].fetch_sub(1, Ordering::SeqCst);
+                }
+            }
+            return Err(ServeError::Backend(format!(
+                "job encodes to {} body bytes, over the {MAX_BODY}-byte frame cap — \
+                 split the batch",
+                bytes.len() - HEADER_LEN
+            )));
+        }
+        let sent = {
+            let mut w = self.inner.write.lock().unwrap();
+            w.write_all(&bytes).and_then(|_| w.flush()).is_ok()
+        };
+        // re-check AFTER the insert (see remote_stats): if the reader
+        // disconnected and swept the pending map while we were inserting,
+        // our entry would otherwise linger and this ticket's wait() would
+        // block forever instead of reporting Disconnected
+        if !sent || !sh.alive.load(Ordering::SeqCst) {
+            if let Some(p) = sh.pending.lock().unwrap().remove(&id) {
+                // still ours — the reader's sweep did not settle it
+                sh.board.sub_in_flight(core, weight);
+                if p.is_drain {
+                    sh.drains[core].fetch_sub(1, Ordering::SeqCst);
+                }
+            }
+            sh.alive.store(false, Ordering::SeqCst);
+            return Err(ServeError::Disconnected);
+        }
+        Ok(Ticket::new(rx, core))
+    }
+}
+
+/// Receive replies and route them to their waiting tickets; on stream
+/// end, wake every waiter with `Disconnected` (by dropping its sender)
+/// and settle the mirror gauges.
+fn reader_loop(mut stream: TcpStream, sh: Arc<Shared>) {
+    loop {
+        match read_frame(&mut stream) {
+            Ok(Frame::Reply { id, core: _, result }) => {
+                let entry = sh.pending.lock().unwrap().remove(&id);
+                let Some(p) = entry else { continue };
+                sh.board.sub_in_flight(p.core, p.weight);
+                if p.is_drain {
+                    sh.drains[p.core].fetch_sub(1, Ordering::SeqCst);
+                }
+                if let Ok(JobReply::Health(h)) = &result {
+                    // lifecycle replies carry the authoritative fence and
+                    // recalibration state — sync the mirror BEFORE waking
+                    // the ticket, so a drain()'s caller observes the
+                    // rejoined core immediately
+                    if h.core < sh.board.cores() {
+                        if h.recalibrated {
+                            sh.board.bump_recal_epoch(h.core);
+                        }
+                        if h.fenced {
+                            sh.board.fence(h.core);
+                        } else if sh.drains[h.core].load(Ordering::SeqCst) == 0 {
+                            // a `fenced: false` measured before one of OUR
+                            // drains went out is stale — keep the drain's
+                            // fence until its own reply settles it
+                            sh.board.unfence(h.core);
+                        }
+                    }
+                }
+                let _ = p.tx.send(result);
+            }
+            Ok(Frame::StatsReply { id, stats }) => {
+                if let Some(tx) = sh.pending_stats.lock().unwrap().remove(&id) {
+                    let _ = tx.send(stats);
+                }
+            }
+            // the server must not send anything else after Hello
+            Ok(_) => break,
+            Err(_) => break,
+        }
+    }
+    sh.alive.store(false, Ordering::SeqCst);
+    let mut pending = sh.pending.lock().unwrap();
+    for (_, p) in pending.drain() {
+        sh.board.sub_in_flight(p.core, p.weight);
+    }
+    drop(pending);
+    sh.pending_stats.lock().unwrap().clear();
+}

@@ -1,0 +1,678 @@
+//! Versioned, length-prefixed binary codec for the serving wire protocol
+//! (DESIGN.md §9). Hand-rolled little-endian encode/decode — serde is not
+//! vendored, and the frame set is small enough that an explicit codec is
+//! both faster and easier to audit than a generic one.
+//!
+//! Every frame is `header (16 bytes) + body`:
+//!
+//! | offset | size | field                                   |
+//! |--------|------|-----------------------------------------|
+//! | 0      | 2    | magic `0xAC1E` (LE)                     |
+//! | 2      | 1    | protocol version (`WIRE_VERSION`)       |
+//! | 3      | 1    | frame tag                               |
+//! | 4      | 8    | request id (LE; 0 for `Hello`)          |
+//! | 12     | 4    | body length in bytes (LE, `<= MAX_BODY`)|
+//!
+//! Decoding is total: malformed input of any shape — truncated frames,
+//! oversized length prefixes (outer or nested), unknown tags, wrong
+//! versions, non-UTF-8 strings, trailing bytes — surfaces as a typed
+//! [`WireError`], never a panic and never an allocation proportional to
+//! an attacker-chosen length prefix.
+
+use crate::coordinator::batcher::{BatcherStats, ServeError};
+use crate::coordinator::service::{CoreHealth, Job, JobReply, Placement, SubmitOpts, TileRef};
+use std::io::{Read, Write};
+use std::time::Duration;
+
+/// First two bytes of every frame.
+pub const WIRE_MAGIC: u16 = 0xAC1E;
+/// Protocol version this build speaks. Decoders reject every other value
+/// ([`WireError::BadVersion`]): the protocol is versioned as a whole, not
+/// per frame — see DESIGN.md §9 for the compatibility rules.
+pub const WIRE_VERSION: u8 = 1;
+/// Frame body cap: a length prefix beyond this is rejected before any
+/// allocation ([`WireError::Oversized`]).
+pub const MAX_BODY: u32 = 1 << 26;
+/// Fixed frame header size in bytes.
+pub const HEADER_LEN: usize = 16;
+
+const TAG_HELLO: u8 = 1;
+const TAG_SUBMIT: u8 = 2;
+const TAG_REPLY: u8 = 3;
+const TAG_STATS_REQ: u8 = 4;
+const TAG_STATS_REPLY: u8 = 5;
+
+/// Decode-side failures. `Closed` is the one non-error: a connection that
+/// ends exactly on a frame boundary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// The peer closed the connection at a frame boundary (clean EOF).
+    Closed,
+    /// The stream ended inside a frame, or a nested length prefix claims
+    /// more bytes than the frame body holds.
+    Truncated,
+    /// The first two bytes were not [`WIRE_MAGIC`].
+    BadMagic(u16),
+    /// The peer speaks a protocol version this build does not.
+    BadVersion(u8),
+    /// The frame tag is not one this protocol version defines.
+    UnknownTag(u8),
+    /// The body length prefix exceeds [`MAX_BODY`].
+    Oversized { len: u32, max: u32 },
+    /// The body bytes do not decode as the tagged frame.
+    BadPayload(String),
+    /// The underlying transport failed mid-frame.
+    Io(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Closed => write!(f, "connection closed at a frame boundary"),
+            WireError::Truncated => write!(f, "truncated frame"),
+            WireError::BadMagic(m) => write!(f, "bad frame magic {m:#06x}"),
+            WireError::BadVersion(v) => {
+                write!(f, "unsupported protocol version {v} (this build speaks {WIRE_VERSION})")
+            }
+            WireError::UnknownTag(t) => write!(f, "unknown frame tag {t:#04x}"),
+            WireError::Oversized { len, max } => {
+                write!(f, "frame body of {len} bytes exceeds the {max}-byte cap")
+            }
+            WireError::BadPayload(msg) => write!(f, "malformed frame payload: {msg}"),
+            WireError::Io(msg) => write!(f, "wire I/O failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// One decoded protocol frame. `Hello` opens every connection (server →
+/// client); `Submit` carries a job + options under a client-chosen
+/// request id; `Reply` echoes that id with the serving core and the
+/// job's result; `StatsReq`/`StatsReply` fetch the per-core live
+/// [`BatcherStats`] snapshots.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    Hello { cores: u32 },
+    Submit { id: u64, job: Job, opts: SubmitOpts },
+    Reply { id: u64, core: u32, result: Result<JobReply, ServeError> },
+    StatsReq { id: u64 },
+    StatsReply { id: u64, stats: Vec<BatcherStats> },
+}
+
+// ---- encoder ------------------------------------------------------------
+
+struct Enc {
+    b: Vec<u8>,
+}
+
+impl Enc {
+    fn new() -> Self {
+        Self { b: Vec::new() }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.b.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.b.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.b.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn i32(&mut self, v: i32) {
+        self.b.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    fn bool(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.b.extend_from_slice(s.as_bytes());
+    }
+
+    fn vec_i32(&mut self, v: &[i32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.i32(x);
+        }
+    }
+
+    fn vec_u32(&mut self, v: &[u32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.u32(x);
+        }
+    }
+}
+
+// ---- decoder ------------------------------------------------------------
+
+struct Dec<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Self { b, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated);
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+    }
+
+    fn i32(&mut self) -> Result<i32, WireError> {
+        let s = self.take(4)?;
+        Ok(i32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn bool(&mut self) -> Result<bool, WireError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => Err(WireError::BadPayload(format!("bad bool byte {v}"))),
+        }
+    }
+
+    fn str(&mut self) -> Result<String, WireError> {
+        let n = self.len_prefix(1)?;
+        let s = self.take(n)?;
+        String::from_utf8(s.to_vec())
+            .map_err(|_| WireError::BadPayload("non-UTF-8 string".to_string()))
+    }
+
+    /// Read a u32 element-count prefix and reject it BEFORE allocating if
+    /// the remaining body cannot possibly hold that many `elem_size`-byte
+    /// elements — an adversarial length prefix must never drive an
+    /// allocation.
+    fn len_prefix(&mut self, elem_size: usize) -> Result<usize, WireError> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(elem_size.max(1)) > self.remaining() {
+            return Err(WireError::Truncated);
+        }
+        Ok(n)
+    }
+
+    fn vec_i32(&mut self) -> Result<Vec<i32>, WireError> {
+        let n = self.len_prefix(4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.i32()?);
+        }
+        Ok(v)
+    }
+
+    fn vec_u32(&mut self) -> Result<Vec<u32>, WireError> {
+        let n = self.len_prefix(4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.u32()?);
+        }
+        Ok(v)
+    }
+
+    fn finish(self) -> Result<(), WireError> {
+        if self.pos == self.b.len() {
+            Ok(())
+        } else {
+            Err(WireError::BadPayload("trailing bytes after the frame body".to_string()))
+        }
+    }
+}
+
+// ---- payload codecs -----------------------------------------------------
+
+fn put_job(e: &mut Enc, job: &Job) {
+    match job {
+        Job::Mac(x) => {
+            e.u8(0);
+            e.vec_i32(x);
+        }
+        Job::MacBatch { xs, tile } => {
+            e.u8(1);
+            e.u32(xs.len() as u32);
+            for x in xs {
+                e.vec_i32(x);
+            }
+            match tile {
+                None => e.u8(0),
+                Some(t) => {
+                    e.u8(1);
+                    e.u32(t.layer as u32);
+                    e.u32(t.tr as u32);
+                    e.u32(t.tc as u32);
+                }
+            }
+        }
+        Job::Drain => e.u8(2),
+        Job::Health => e.u8(3),
+    }
+}
+
+fn take_job(d: &mut Dec) -> Result<Job, WireError> {
+    match d.u8()? {
+        0 => Ok(Job::Mac(d.vec_i32()?)),
+        1 => {
+            // each batch row costs at least its own 4-byte length prefix
+            let n = d.len_prefix(4)?;
+            let mut xs = Vec::with_capacity(n);
+            for _ in 0..n {
+                xs.push(d.vec_i32()?);
+            }
+            let tile = match d.u8()? {
+                0 => None,
+                1 => Some(TileRef {
+                    layer: d.u32()? as usize,
+                    tr: d.u32()? as usize,
+                    tc: d.u32()? as usize,
+                }),
+                t => return Err(WireError::BadPayload(format!("bad tile option tag {t}"))),
+            };
+            Ok(Job::MacBatch { xs, tile })
+        }
+        2 => Ok(Job::Drain),
+        3 => Ok(Job::Health),
+        t => Err(WireError::BadPayload(format!("unknown job kind {t}"))),
+    }
+}
+
+fn put_opts(e: &mut Enc, opts: &SubmitOpts) {
+    e.u8(opts.priority);
+    match opts.deadline {
+        None => e.u8(0),
+        Some(d) => {
+            e.u8(1);
+            // relative budget in nanoseconds; the server converts to an
+            // absolute expiry at admission, so network latency is not
+            // billed against the job
+            e.u64(d.as_nanos().min(u64::MAX as u128) as u64);
+        }
+    }
+    match opts.placement {
+        Placement::RoundRobin => e.u8(0),
+        Placement::LeastLoaded => e.u8(1),
+        Placement::Pinned(core) => {
+            e.u8(2);
+            e.u32(core as u32);
+        }
+    }
+}
+
+fn take_opts(d: &mut Dec) -> Result<SubmitOpts, WireError> {
+    let priority = d.u8()?;
+    let deadline = match d.u8()? {
+        0 => None,
+        1 => Some(Duration::from_nanos(d.u64()?)),
+        t => return Err(WireError::BadPayload(format!("bad deadline option tag {t}"))),
+    };
+    let placement = match d.u8()? {
+        0 => Placement::RoundRobin,
+        1 => Placement::LeastLoaded,
+        2 => Placement::Pinned(d.u32()? as usize),
+        t => return Err(WireError::BadPayload(format!("bad placement tag {t}"))),
+    };
+    Ok(SubmitOpts { priority, deadline, placement })
+}
+
+fn put_serve_error(e: &mut Enc, err: &ServeError) {
+    match err {
+        ServeError::BadRequest { expected, got } => {
+            e.u8(0);
+            e.u32(*expected as u32);
+            e.u32(*got as u32);
+        }
+        ServeError::Backend(msg) => {
+            e.u8(1);
+            e.str(msg);
+        }
+        ServeError::Disconnected => e.u8(2),
+        ServeError::DeadlineExceeded => e.u8(3),
+        ServeError::NoHealthyCore => e.u8(4),
+    }
+}
+
+fn take_serve_error(d: &mut Dec) -> Result<ServeError, WireError> {
+    match d.u8()? {
+        0 => Ok(ServeError::BadRequest {
+            expected: d.u32()? as usize,
+            got: d.u32()? as usize,
+        }),
+        1 => Ok(ServeError::Backend(d.str()?)),
+        2 => Ok(ServeError::Disconnected),
+        3 => Ok(ServeError::DeadlineExceeded),
+        4 => Ok(ServeError::NoHealthyCore),
+        t => Err(WireError::BadPayload(format!("unknown error kind {t}"))),
+    }
+}
+
+fn put_health(e: &mut Enc, h: &CoreHealth) {
+    e.u32(h.core as u32);
+    match h.residual {
+        None => e.u8(0),
+        Some(r) => {
+            e.u8(1);
+            e.f64(r);
+        }
+    }
+    e.bool(h.fenced);
+    e.bool(h.recalibrated);
+}
+
+fn take_health(d: &mut Dec) -> Result<CoreHealth, WireError> {
+    let core = d.u32()? as usize;
+    let residual = match d.u8()? {
+        0 => None,
+        1 => Some(d.f64()?),
+        t => return Err(WireError::BadPayload(format!("bad residual option tag {t}"))),
+    };
+    Ok(CoreHealth { core, residual, fenced: d.bool()?, recalibrated: d.bool()? })
+}
+
+fn put_reply(e: &mut Enc, reply: &JobReply) {
+    match reply {
+        JobReply::Mac(q) => {
+            e.u8(0);
+            e.vec_u32(q);
+        }
+        JobReply::MacBatch(qs) => {
+            e.u8(1);
+            e.u32(qs.len() as u32);
+            for q in qs {
+                e.vec_u32(q);
+            }
+        }
+        JobReply::Health(h) => {
+            e.u8(2);
+            put_health(e, h);
+        }
+    }
+}
+
+fn take_reply(d: &mut Dec) -> Result<JobReply, WireError> {
+    match d.u8()? {
+        0 => Ok(JobReply::Mac(d.vec_u32()?)),
+        1 => {
+            let n = d.len_prefix(4)?;
+            let mut qs = Vec::with_capacity(n);
+            for _ in 0..n {
+                qs.push(d.vec_u32()?);
+            }
+            Ok(JobReply::MacBatch(qs))
+        }
+        2 => Ok(JobReply::Health(take_health(d)?)),
+        t => Err(WireError::BadPayload(format!("unknown reply kind {t}"))),
+    }
+}
+
+fn put_result(e: &mut Enc, result: &Result<JobReply, ServeError>) {
+    match result {
+        Ok(r) => {
+            e.u8(0);
+            put_reply(e, r);
+        }
+        Err(err) => {
+            e.u8(1);
+            put_serve_error(e, err);
+        }
+    }
+}
+
+fn take_result(d: &mut Dec) -> Result<Result<JobReply, ServeError>, WireError> {
+    match d.u8()? {
+        0 => Ok(Ok(take_reply(d)?)),
+        1 => Ok(Err(take_serve_error(d)?)),
+        t => Err(WireError::BadPayload(format!("bad result tag {t}"))),
+    }
+}
+
+fn put_stats(e: &mut Enc, s: &BatcherStats) {
+    e.u64(s.requests);
+    e.u64(s.batches);
+    e.u64(s.max_batch_seen as u64);
+    e.u64(s.rejected);
+    e.u64(s.expired);
+}
+
+fn take_stats(d: &mut Dec) -> Result<BatcherStats, WireError> {
+    Ok(BatcherStats {
+        requests: d.u64()?,
+        batches: d.u64()?,
+        max_batch_seen: d.u64()? as usize,
+        rejected: d.u64()?,
+        expired: d.u64()?,
+    })
+}
+
+// ---- frame assembly -----------------------------------------------------
+
+/// Encode one frame (header + body) into a fresh byte vector.
+pub fn encode_frame(frame: &Frame) -> Vec<u8> {
+    let mut body = Enc::new();
+    let (tag, id) = match frame {
+        Frame::Hello { cores } => {
+            body.u32(*cores);
+            (TAG_HELLO, 0)
+        }
+        Frame::Submit { id, job, opts } => {
+            put_opts(&mut body, opts);
+            put_job(&mut body, job);
+            (TAG_SUBMIT, *id)
+        }
+        Frame::Reply { id, core, result } => {
+            body.u32(*core);
+            put_result(&mut body, result);
+            (TAG_REPLY, *id)
+        }
+        Frame::StatsReq { id } => (TAG_STATS_REQ, *id),
+        Frame::StatsReply { id, stats } => {
+            body.u32(stats.len() as u32);
+            for s in stats {
+                put_stats(&mut body, s);
+            }
+            (TAG_STATS_REPLY, *id)
+        }
+    };
+    let mut out = Vec::with_capacity(HEADER_LEN + body.b.len());
+    out.extend_from_slice(&WIRE_MAGIC.to_le_bytes());
+    out.push(WIRE_VERSION);
+    out.push(tag);
+    out.extend_from_slice(&id.to_le_bytes());
+    out.extend_from_slice(&(body.b.len() as u32).to_le_bytes());
+    out.extend_from_slice(&body.b);
+    out
+}
+
+fn decode_body(tag: u8, id: u64, body: &[u8]) -> Result<Frame, WireError> {
+    let mut d = Dec::new(body);
+    let frame = match tag {
+        TAG_HELLO => Frame::Hello { cores: d.u32()? },
+        TAG_SUBMIT => {
+            let opts = take_opts(&mut d)?;
+            let job = take_job(&mut d)?;
+            Frame::Submit { id, job, opts }
+        }
+        TAG_REPLY => {
+            let core = d.u32()?;
+            let result = take_result(&mut d)?;
+            Frame::Reply { id, core, result }
+        }
+        TAG_STATS_REQ => Frame::StatsReq { id },
+        TAG_STATS_REPLY => {
+            let n = d.len_prefix(40)?;
+            let mut stats = Vec::with_capacity(n);
+            for _ in 0..n {
+                stats.push(take_stats(&mut d)?);
+            }
+            Frame::StatsReply { id, stats }
+        }
+        t => return Err(WireError::UnknownTag(t)),
+    };
+    d.finish()?;
+    Ok(frame)
+}
+
+/// Fill `buf` from the reader, mapping EOF to [`WireError::Closed`] when
+/// it lands exactly on a frame boundary (`at_boundary` and nothing read
+/// yet) and to [`WireError::Truncated`] otherwise.
+fn read_full<R: Read>(r: &mut R, buf: &mut [u8], at_boundary: bool) -> Result<(), WireError> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return Err(if at_boundary && filled == 0 {
+                    WireError::Closed
+                } else {
+                    WireError::Truncated
+                });
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(WireError::Io(e.to_string())),
+        }
+    }
+    Ok(())
+}
+
+/// Read and decode one frame from a blocking byte stream.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
+    let mut header = [0u8; HEADER_LEN];
+    read_full(r, &mut header, true)?;
+    let magic = u16::from_le_bytes([header[0], header[1]]);
+    if magic != WIRE_MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    let version = header[2];
+    if version != WIRE_VERSION {
+        return Err(WireError::BadVersion(version));
+    }
+    let tag = header[3];
+    let id = u64::from_le_bytes([
+        header[4], header[5], header[6], header[7], header[8], header[9], header[10], header[11],
+    ]);
+    let len = u32::from_le_bytes([header[12], header[13], header[14], header[15]]);
+    if len > MAX_BODY {
+        return Err(WireError::Oversized { len, max: MAX_BODY });
+    }
+    let mut body = vec![0u8; len as usize];
+    read_full(r, &mut body, false)?;
+    decode_body(tag, id, &body)
+}
+
+/// Encode and write one frame, flushing so it hits the socket now.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> std::io::Result<()> {
+    w.write_all(&encode_frame(frame))?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(frame: Frame) {
+        let bytes = encode_frame(&frame);
+        let mut slice: &[u8] = &bytes;
+        let decoded = read_frame(&mut slice).expect("well-formed frame must decode");
+        assert_eq!(decoded, frame);
+        assert!(slice.is_empty(), "decode must consume the whole frame");
+    }
+
+    #[test]
+    fn every_frame_kind_roundtrips() {
+        roundtrip(Frame::Hello { cores: 4 });
+        roundtrip(Frame::Submit {
+            id: 7,
+            job: Job::Mac(vec![-3, 0, 63]),
+            opts: SubmitOpts::default(),
+        });
+        roundtrip(Frame::Submit {
+            id: 8,
+            job: Job::MacBatch {
+                xs: vec![vec![1, 2], vec![-1, -2]],
+                tile: Some(TileRef { layer: 1, tr: 2, tc: 3 }),
+            },
+            opts: SubmitOpts::pinned(3)
+                .with_priority(200)
+                .with_deadline(Duration::from_micros(1500)),
+        });
+        roundtrip(Frame::Submit { id: 9, job: Job::Drain, opts: SubmitOpts::least_loaded() });
+        roundtrip(Frame::Submit { id: 10, job: Job::Health, opts: SubmitOpts::default() });
+        roundtrip(Frame::Reply {
+            id: 11,
+            core: 2,
+            result: Ok(JobReply::Health(CoreHealth {
+                core: 2,
+                residual: Some(0.0123),
+                fenced: true,
+                recalibrated: false,
+            })),
+        });
+        roundtrip(Frame::Reply {
+            id: 12,
+            core: 0,
+            result: Err(ServeError::BadRequest { expected: 64, got: 3 }),
+        });
+        roundtrip(Frame::StatsReq { id: 13 });
+        roundtrip(Frame::StatsReply {
+            id: 14,
+            stats: vec![BatcherStats {
+                requests: 10,
+                batches: 2,
+                max_batch_seen: 8,
+                rejected: 1,
+                expired: 3,
+            }],
+        });
+    }
+
+    #[test]
+    fn empty_mac_and_empty_batch_roundtrip() {
+        roundtrip(Frame::Submit {
+            id: 1,
+            job: Job::Mac(Vec::new()),
+            opts: SubmitOpts::default(),
+        });
+        roundtrip(Frame::Submit {
+            id: 2,
+            job: Job::MacBatch { xs: Vec::new(), tile: None },
+            opts: SubmitOpts::default(),
+        });
+        roundtrip(Frame::StatsReply { id: 3, stats: Vec::new() });
+    }
+}

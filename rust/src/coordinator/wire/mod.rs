@@ -1,0 +1,28 @@
+//! Wire protocol front-end for the serving engine: the typed
+//! [`crate::coordinator::service::Job`] envelope serialized onto TCP, so
+//! a CIM core cluster is driven the way the paper drives its silicon —
+//! from an external host over a standard control interface, not by
+//! in-process calls.
+//!
+//! Three layers, each usable alone:
+//! * [`codec`] — the versioned, length-prefixed binary frame codec
+//!   (DESIGN.md §9 documents the layout); zero dependencies, total
+//!   decoding (`WireError`, never a panic);
+//! * [`server`] — [`WireServer`], the threaded TCP acceptor over a
+//!   running cluster's `ServiceClient`, streaming replies in completion
+//!   order with request-id correlation;
+//! * [`client`] — [`RemoteClient`], the full
+//!   [`crate::coordinator::service::CimService`] trait over one socket:
+//!   DNN serving, pipelined benches, and lifecycle (drain/health) jobs
+//!   run unchanged against a remote cluster.
+
+pub mod client;
+pub mod codec;
+pub mod server;
+
+pub use client::RemoteClient;
+pub use codec::{
+    encode_frame, read_frame, write_frame, Frame, WireError, HEADER_LEN, MAX_BODY, WIRE_MAGIC,
+    WIRE_VERSION,
+};
+pub use server::WireServer;

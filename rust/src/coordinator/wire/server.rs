@@ -1,0 +1,228 @@
+//! Threaded TCP front-end over a [`ServiceClient`]: accepts connections,
+//! decodes [`Frame::Submit`]s, pushes them through the shared
+//! `submit_routed` path, and streams replies back in COMPLETION order
+//! with request-id correlation — one connection can keep hundreds of
+//! jobs in flight without a waiter thread per job.
+//!
+//! Per connection:
+//! * the handler thread owns the read half: it decodes frames and
+//!   submits, so admission control (geometry, placement, fencing) runs
+//!   on the server's own board;
+//! * every submitted job carries a [`ReplySink::Routed`] clone of one
+//!   shared fan-in channel; a writer thread drains that channel onto the
+//!   socket. When the handler stops reading (client EOF, protocol error,
+//!   or shutdown) it drops its sender — the channel then closes exactly
+//!   when the last in-flight job has replied, so the writer drains all
+//!   outstanding work before the socket closes. That is the graceful-
+//!   shutdown path: ctrl-c stops accepts and unblocks readers, but every
+//!   admitted job still gets its reply.
+//!
+//! [`ReplySink::Routed`]: crate::coordinator::service::ReplySink
+
+use crate::coordinator::batcher::{BatcherStats, ServeError};
+use crate::coordinator::service::{CimService, Job, Placement, RoutedReply, ServiceClient};
+use crate::coordinator::wire::codec::{read_frame, write_frame, Frame};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Sentinel `RoutedReply::core` for replies that never reached a worker
+/// (placement failed); encoded as `u32::MAX` on the wire.
+const NO_CORE: usize = usize::MAX;
+
+/// Live-connection registry: one cloned stream per open connection so
+/// [`WireServer::request_shutdown`] can unblock every parked reader.
+/// Handlers remove their own entry on exit — a long-running server must
+/// not leak one descriptor per connection it has ever served.
+type ConnRegistry = Arc<Mutex<Vec<(u64, TcpStream)>>>;
+
+/// The TCP front-end. Bind it over a running cluster's client, then call
+/// [`WireServer::serve`] (blocks until [`WireServer::request_shutdown`]).
+pub struct WireServer {
+    listener: TcpListener,
+    svc: ServiceClient,
+    live: Vec<Arc<Mutex<BatcherStats>>>,
+    stop: Arc<AtomicBool>,
+    conns: ConnRegistry,
+    next_conn: AtomicU64,
+}
+
+impl WireServer {
+    /// Bind a listener over `svc`. `live` are the per-core statistics
+    /// handles ([`crate::coordinator::cluster::ClusterServer::live_handles`])
+    /// answering `Stats` frames; pass an empty vec to serve without them.
+    pub fn bind<A: ToSocketAddrs>(
+        addr: A,
+        svc: ServiceClient,
+        live: Vec<Arc<Mutex<BatcherStats>>>,
+    ) -> std::io::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        // non-blocking accept so the serve loop can poll the stop flag
+        listener.set_nonblocking(true)?;
+        Ok(Self {
+            listener,
+            svc,
+            live,
+            stop: Arc::new(AtomicBool::new(false)),
+            conns: Arc::new(Mutex::new(Vec::new())),
+            next_conn: AtomicU64::new(0),
+        })
+    }
+
+    /// The bound address (port 0 resolves to an ephemeral port).
+    pub fn local_addr(&self) -> std::io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Stop accepting connections and unblock every connection reader;
+    /// [`WireServer::serve`] then drains in-flight replies and returns.
+    /// Safe to call from any thread, any number of times.
+    pub fn request_shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for (_, s) in self.conns.lock().unwrap().iter() {
+            let _ = s.shutdown(Shutdown::Read);
+        }
+    }
+
+    /// Accept and serve connections until shutdown is requested, then
+    /// drain: every connection's in-flight jobs are answered before their
+    /// sockets close, and every handler thread is joined before this
+    /// returns.
+    pub fn serve(&self) {
+        let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+        while !self.stop.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    let cid = self.next_conn.fetch_add(1, Ordering::Relaxed);
+                    // registered so request_shutdown can unblock the
+                    // reader; the handler deregisters itself on exit. A
+                    // connection we cannot register we also cannot
+                    // unblock at shutdown — refuse it outright.
+                    let Ok(clone) = stream.try_clone() else { continue };
+                    self.conns.lock().unwrap().push((cid, clone));
+                    let svc = self.svc.clone();
+                    let live = self.live.clone();
+                    let conns = Arc::clone(&self.conns);
+                    handlers.push(std::thread::spawn(move || {
+                        handle_connection(stream, svc, live);
+                        conns.lock().unwrap().retain(|(id, _)| *id != cid);
+                    }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(10)),
+            }
+            // completed handlers need no join; keep the list short-lived
+            handlers.retain(|h| !h.is_finished());
+        }
+        // idempotent with request_shutdown, and covers any connection
+        // accepted between the flag store and the loop exit
+        for (_, s) in self.conns.lock().unwrap().iter() {
+            let _ = s.shutdown(Shutdown::Read);
+        }
+        for h in handlers {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Serve one connection: read frames until EOF/shutdown, stream replies.
+fn handle_connection(
+    stream: TcpStream,
+    svc: ServiceClient,
+    live: Vec<Arc<Mutex<BatcherStats>>>,
+) {
+    // the listener is non-blocking (its accept loop polls the stop flag)
+    // and some platforms let accepted sockets inherit that — this
+    // connection's frame reads must block
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_nodelay(true);
+    // a peer that stops READING must not park the reply pump forever —
+    // that would wedge the graceful shutdown behind its socket buffer.
+    // After the timeout the write errors, the pump keeps draining (its
+    // writes are best-effort), and shutdown completes. A stream that hit
+    // the timeout may be mid-frame and is useless afterwards, but that
+    // peer was already gone for practical purposes.
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
+    // one write guard shared by the reply pump and control-plane frames,
+    // so concurrent frame writes never interleave
+    let write = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(_) => return,
+    };
+    if write_frame(&mut *write.lock().unwrap(), &Frame::Hello { cores: svc.cores() as u32 })
+        .is_err()
+    {
+        return;
+    }
+    let (rtx, rrx) = channel::<RoutedReply>();
+    let pump = {
+        let write = Arc::clone(&write);
+        std::thread::spawn(move || reply_pump(rrx, write))
+    };
+    let mut reader = stream;
+    loop {
+        match read_frame(&mut reader) {
+            Ok(Frame::Submit { id, job, opts }) => {
+                let cores = svc.cores();
+                if let Placement::Pinned(core) = opts.placement {
+                    if core >= cores {
+                        // a remote peer must not be able to panic the
+                        // handler through an out-of-range pin
+                        let _ = rtx.send(RoutedReply {
+                            id,
+                            core: NO_CORE,
+                            result: Err(ServeError::Backend(format!(
+                                "pinned core {core} out of range (cluster has {cores} cores)"
+                            ))),
+                        });
+                        continue;
+                    }
+                    // mirror CimService::drain: the fence lands before the
+                    // drain job is queued, so no placed work slips in
+                    // behind it
+                    if matches!(job, Job::Drain) {
+                        svc.board().fence(core);
+                    }
+                }
+                if let Err(e) = svc.submit_routed(job, opts, id, &rtx) {
+                    let _ = rtx.send(RoutedReply { id, core: NO_CORE, result: Err(e) });
+                }
+            }
+            Ok(Frame::StatsReq { id }) => {
+                let stats: Vec<BatcherStats> =
+                    live.iter().map(|s| *s.lock().unwrap()).collect();
+                if write_frame(&mut *write.lock().unwrap(), &Frame::StatsReply { id, stats })
+                    .is_err()
+                {
+                    break;
+                }
+            }
+            // clients must not send server-side frames; drop the
+            // connection rather than guess
+            Ok(_) => break,
+            Err(_) => break,
+        }
+    }
+    // the submit path holds sink clones for every in-flight job; dropping
+    // ours closes the channel exactly when the last of them has replied,
+    // so the pump drains all outstanding work before the socket closes
+    drop(rtx);
+    let _ = pump.join();
+    let _ = reader.shutdown(Shutdown::Both);
+}
+
+/// Stream routed replies onto the socket in completion order.
+fn reply_pump(rrx: Receiver<RoutedReply>, write: Arc<Mutex<TcpStream>>) {
+    for r in rrx {
+        let core = if r.core == NO_CORE { u32::MAX } else { r.core as u32 };
+        let frame = Frame::Reply { id: r.id, core, result: r.result };
+        // a client that vanished mid-reply is not an error worth keeping
+        // state for — keep consuming so no worker sink ever backs up
+        let _ = write_frame(&mut *write.lock().unwrap(), &frame);
+    }
+}

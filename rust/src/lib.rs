@@ -8,8 +8,9 @@
 //!   36x32 MDAC-weight-cell CIM core ([`analog`]), a RISC-V RV32IM
 //!   instruction-set simulator with an AXI4-Lite interconnect ([`soc`]),
 //!   the Built-In Self-Calibration engine, DNN tile scheduler, compute
-//!   SNR evaluation, and the multi-core sharded serving cluster
-//!   ([`coordinator`]), dataset + MLP training utilities ([`data`]), and
+//!   SNR evaluation, the multi-core sharded serving cluster, and its TCP
+//!   wire front-end ([`coordinator`]), dataset + MLP training utilities
+//!   ([`data`]), and
 //!   a runtime that executes the AOT-compiled JAX/Pallas artifacts on
 //!   the hot path ([`runtime`]) — through PJRT with the `pjrt` feature,
 //!   or the bit-faithful golden-model fallback by default.

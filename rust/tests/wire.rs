@@ -1,0 +1,492 @@
+//! Wire protocol tests: randomized codec round-trip properties,
+//! adversarial decodes (truncated / oversized / unknown-tag / wrong-
+//! version frames must surface as `WireError`, never a panic), and a
+//! loopback `WireServer`/`RemoteClient` integration run driven through
+//! the `CimService` trait — including a `Drain` that recalibrates and a
+//! post-drain `Health` back in band.
+
+use acore_cim::analog::{consts as c, CimAnalogModel};
+use acore_cim::config::SimConfig;
+use acore_cim::coordinator::batcher::{Batcher, BatcherStats, ServeError};
+use acore_cim::coordinator::bisc::{AdcCharacterization, BiscEngine};
+use acore_cim::coordinator::cluster::{core_seed, CimCluster, ServiceConfig};
+use acore_cim::coordinator::service::{
+    gather, CimService, CoreHealth, Job, JobReply, Placement, SubmitOpts, Ticket, TileRef,
+};
+use acore_cim::coordinator::wire::{
+    encode_frame, read_frame, Frame, RemoteClient, WireError, WireServer, HEADER_LEN, MAX_BODY,
+    WIRE_VERSION,
+};
+use acore_cim::util::proptest::forall;
+use acore_cim::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+// ---- randomized round-trip properties -----------------------------------
+
+fn rand_vec_i32(rng: &mut Rng, max_len: i64) -> Vec<i32> {
+    (0..rng.int_in(0, max_len)).map(|_| rng.int_in(-64, 63) as i32).collect()
+}
+
+fn rand_vec_u32(rng: &mut Rng, max_len: i64) -> Vec<u32> {
+    (0..rng.int_in(0, max_len)).map(|_| rng.next_u64() as u32).collect()
+}
+
+fn rand_job(rng: &mut Rng) -> Job {
+    match rng.int_in(0, 3) {
+        0 => Job::Mac(rand_vec_i32(rng, 40)),
+        1 => {
+            let n = rng.int_in(0, 6);
+            let xs = (0..n).map(|_| rand_vec_i32(rng, 12)).collect();
+            let tile = if rng.int_in(0, 1) == 1 {
+                Some(TileRef {
+                    layer: rng.int_in(0, 3) as usize,
+                    tr: rng.int_in(0, 7) as usize,
+                    tc: rng.int_in(0, 7) as usize,
+                })
+            } else {
+                None
+            };
+            Job::MacBatch { xs, tile }
+        }
+        2 => Job::Drain,
+        _ => Job::Health,
+    }
+}
+
+fn rand_opts(rng: &mut Rng) -> SubmitOpts {
+    let placement = match rng.int_in(0, 2) {
+        0 => Placement::RoundRobin,
+        1 => Placement::LeastLoaded,
+        _ => Placement::Pinned(rng.int_in(0, 15) as usize),
+    };
+    SubmitOpts {
+        priority: rng.int_in(0, 255) as u8,
+        deadline: if rng.int_in(0, 1) == 1 {
+            Some(Duration::from_nanos(rng.next_u64()))
+        } else {
+            None
+        },
+        placement,
+    }
+}
+
+fn rand_serve_error(rng: &mut Rng) -> ServeError {
+    match rng.int_in(0, 4) {
+        0 => ServeError::BadRequest {
+            expected: rng.int_in(0, 1024) as usize,
+            got: rng.int_in(0, 1024) as usize,
+        },
+        1 => ServeError::Backend(format!("backend error #{} — ünïcode", rng.int_in(0, 999))),
+        2 => ServeError::Disconnected,
+        3 => ServeError::DeadlineExceeded,
+        _ => ServeError::NoHealthyCore,
+    }
+}
+
+fn rand_reply(rng: &mut Rng) -> JobReply {
+    match rng.int_in(0, 2) {
+        0 => JobReply::Mac(rand_vec_u32(rng, 40)),
+        1 => {
+            let n = rng.int_in(0, 6);
+            JobReply::MacBatch((0..n).map(|_| rand_vec_u32(rng, 12)).collect())
+        }
+        _ => JobReply::Health(CoreHealth {
+            core: rng.int_in(0, 15) as usize,
+            residual: if rng.int_in(0, 1) == 1 { Some(rng.uniform()) } else { None },
+            fenced: rng.int_in(0, 1) == 1,
+            recalibrated: rng.int_in(0, 1) == 1,
+        }),
+    }
+}
+
+fn rand_stats(rng: &mut Rng) -> BatcherStats {
+    BatcherStats {
+        requests: rng.next_u64(),
+        batches: rng.next_u64(),
+        max_batch_seen: rng.int_in(0, 4096) as usize,
+        rejected: rng.next_u64(),
+        expired: rng.next_u64(),
+    }
+}
+
+fn rand_frame(rng: &mut Rng) -> Frame {
+    match rng.int_in(0, 4) {
+        0 => Frame::Hello { cores: rng.int_in(1, 64) as u32 },
+        1 => Frame::Submit { id: rng.next_u64(), job: rand_job(rng), opts: rand_opts(rng) },
+        2 => {
+            let result = if rng.int_in(0, 1) == 1 {
+                Ok(rand_reply(rng))
+            } else {
+                Err(rand_serve_error(rng))
+            };
+            Frame::Reply { id: rng.next_u64(), core: rng.int_in(0, 64) as u32, result }
+        }
+        3 => Frame::StatsReq { id: rng.next_u64() },
+        _ => {
+            let n = rng.int_in(0, 8);
+            Frame::StatsReply {
+                id: rng.next_u64(),
+                stats: (0..n).map(|_| rand_stats(rng)).collect(),
+            }
+        }
+    }
+}
+
+#[test]
+fn codec_roundtrips_randomized_frames() {
+    forall("wire frame round-trip", 512, |rng| {
+        let frame = rand_frame(rng);
+        let bytes = encode_frame(&frame);
+        let mut slice: &[u8] = &bytes;
+        let decoded = match read_frame(&mut slice) {
+            Ok(f) => f,
+            Err(e) => return Err(format!("decode failed on {frame:?}: {e}")),
+        };
+        if decoded != frame {
+            return Err(format!("round-trip mismatch:\n  sent {frame:?}\n  got  {decoded:?}"));
+        }
+        if !slice.is_empty() {
+            return Err(format!("{} bytes left unconsumed", slice.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn back_to_back_frames_decode_in_order() {
+    // a stream is frames laid end to end; each decode must consume
+    // exactly one frame
+    let frames = vec![
+        Frame::Hello { cores: 3 },
+        Frame::Submit { id: 1, job: Job::Mac(vec![1, 2, 3]), opts: SubmitOpts::default() },
+        Frame::Reply { id: 1, core: 0, result: Ok(JobReply::Mac(vec![9, 8])) },
+        Frame::StatsReq { id: 2 },
+    ];
+    let mut bytes = Vec::new();
+    for f in &frames {
+        bytes.extend_from_slice(&encode_frame(f));
+    }
+    let mut slice: &[u8] = &bytes;
+    for f in &frames {
+        assert_eq!(&read_frame(&mut slice).unwrap(), f);
+    }
+    assert!(matches!(read_frame(&mut slice), Err(WireError::Closed)));
+}
+
+// ---- adversarial decodes -------------------------------------------------
+
+#[test]
+fn truncated_frames_error_at_every_cut_point() {
+    let frame = encode_frame(&Frame::Submit {
+        id: 42,
+        job: Job::MacBatch { xs: vec![vec![1, 2], vec![3, 4]], tile: None },
+        opts: SubmitOpts::default().with_deadline(Duration::from_millis(5)),
+    });
+    for cut in 1..frame.len() {
+        let mut slice = &frame[..cut];
+        match read_frame(&mut slice) {
+            Err(WireError::Truncated) => {}
+            other => {
+                panic!("cut at {cut}/{} bytes: expected Truncated, got {other:?}", frame.len())
+            }
+        }
+    }
+    // a clean EOF exactly at a frame boundary is Closed, not Truncated
+    let mut empty: &[u8] = &[];
+    assert!(matches!(read_frame(&mut empty), Err(WireError::Closed)));
+}
+
+#[test]
+fn bad_magic_version_tag_and_oversized_length_are_typed_errors() {
+    let frame = encode_frame(&Frame::StatsReq { id: 7 });
+    assert_eq!(frame.len(), HEADER_LEN);
+
+    let mut bad = frame.clone();
+    bad[0] ^= 0xFF;
+    let mut slice: &[u8] = &bad;
+    assert!(matches!(read_frame(&mut slice), Err(WireError::BadMagic(_))));
+
+    let mut bad = frame.clone();
+    bad[2] = WIRE_VERSION + 1;
+    let mut slice: &[u8] = &bad;
+    assert_eq!(read_frame(&mut slice), Err(WireError::BadVersion(WIRE_VERSION + 1)));
+
+    let mut bad = frame.clone();
+    bad[3] = 0xEE;
+    let mut slice: &[u8] = &bad;
+    assert_eq!(read_frame(&mut slice), Err(WireError::UnknownTag(0xEE)));
+
+    // an oversized body length prefix is rejected before any allocation
+    let mut bad = frame.clone();
+    bad[12..16].copy_from_slice(&(MAX_BODY + 1).to_le_bytes());
+    let mut slice: &[u8] = &bad;
+    assert_eq!(
+        read_frame(&mut slice),
+        Err(WireError::Oversized { len: MAX_BODY + 1, max: MAX_BODY })
+    );
+}
+
+#[test]
+fn hostile_interior_length_prefix_is_truncated_not_oom() {
+    // a well-framed Submit whose nested vector claims u32::MAX elements:
+    // the decoder must reject it from the remaining byte count instead of
+    // allocating 16 GiB
+    let mut bad = encode_frame(&Frame::Submit {
+        id: 9,
+        job: Job::Mac(Vec::new()),
+        opts: SubmitOpts::default(),
+    });
+    let n = bad.len();
+    // the trailing 4 bytes are Job::Mac's element-count prefix
+    bad[n - 4..].copy_from_slice(&u32::MAX.to_le_bytes());
+    let mut slice: &[u8] = &bad;
+    assert_eq!(read_frame(&mut slice), Err(WireError::Truncated));
+}
+
+#[test]
+fn trailing_bytes_after_the_body_are_rejected() {
+    let mut bad = encode_frame(&Frame::StatsReq { id: 1 });
+    bad.push(0);
+    bad[12..16].copy_from_slice(&1u32.to_le_bytes());
+    let mut slice: &[u8] = &bad;
+    assert!(matches!(read_frame(&mut slice), Err(WireError::BadPayload(_))));
+}
+
+// ---- loopback integration ------------------------------------------------
+
+fn ideal_cfg() -> SimConfig {
+    let mut cfg = SimConfig::default().scaled(0.0);
+    cfg.sigma_noise = 0.0;
+    cfg
+}
+
+/// Bind a `WireServer` on an ephemeral loopback port and run its accept
+/// loop on a background thread.
+fn spawn_wire(
+    server: &acore_cim::coordinator::cluster::ClusterServer,
+) -> (Arc<WireServer>, std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let wire = Arc::new(
+        WireServer::bind(("127.0.0.1", 0), server.client(), server.live_handles())
+            .expect("bind ephemeral loopback port"),
+    );
+    let addr = wire.local_addr().expect("bound listener has an address");
+    let acceptor = {
+        let wire = Arc::clone(&wire);
+        std::thread::spawn(move || wire.serve())
+    };
+    (wire, addr, acceptor)
+}
+
+#[test]
+fn loopback_round_trip_through_the_cim_service_trait() {
+    let cfg = ideal_cfg();
+    let mut cluster = CimCluster::new(&cfg, 2);
+    cluster.program_all(&vec![40; c::N_ROWS * c::M_COLS]);
+    let server = cluster.serve(Batcher::default());
+    let (wire, addr, acceptor) = spawn_wire(&server);
+    let client = RemoteClient::connect(addr).expect("connect loopback");
+    assert_eq!(client.cores(), 2, "handshake must carry the core count");
+
+    // correctness against a direct model evaluation (ideal dies => every
+    // core computes the same answer)
+    let mut reference = CimAnalogModel::ideal();
+    reference.program(&vec![40; c::N_ROWS * c::M_COLS]);
+    let x = vec![30; c::N_ROWS];
+    let expect = reference.forward_batch(&x, 1);
+    assert_eq!(client.mac(x.clone()).unwrap(), expect);
+
+    // many concurrent in-flight jobs on ONE connection, correlated by
+    // request id: interleave Macs and native MacBatches, then gather
+    let macs: Vec<Ticket<Vec<u32>>> = (0..32)
+        .map(|_| client.submit(Job::Mac(x.clone()), SubmitOpts::default()).unwrap().typed())
+        .collect();
+    let batches: Vec<Ticket<Vec<Vec<u32>>>> = (0..4)
+        .map(|_| {
+            let xs: Vec<Vec<i32>> = (0..8).map(|_| x.clone()).collect();
+            client
+                .submit(Job::MacBatch { xs, tile: None }, SubmitOpts::least_loaded())
+                .unwrap()
+                .typed()
+        })
+        .collect();
+    for (_, qs) in gather(batches).unwrap() {
+        assert_eq!(qs.len(), 8);
+        for q in qs {
+            assert_eq!(q, expect);
+        }
+    }
+    for (_, q) in gather(macs).unwrap() {
+        assert_eq!(q, expect);
+    }
+    // every mirror depth reservation settles once replies are gathered
+    assert_eq!(client.board().in_flight(0), 0);
+    assert_eq!(client.board().in_flight(1), 0);
+
+    // serving errors surface typed over the wire, and the connection
+    // keeps serving afterwards
+    let err = client.mac(vec![1; 3]).unwrap_err();
+    assert_eq!(err, ServeError::BadRequest { expected: c::N_ROWS, got: 3 });
+    assert_eq!(client.mac(x.clone()).unwrap(), expect);
+
+    // clones share the connection across producer threads
+    let mut joins = Vec::new();
+    for _ in 0..4 {
+        let cl = client.clone();
+        let x = x.clone();
+        let expect = expect.clone();
+        joins.push(std::thread::spawn(move || {
+            for _ in 0..10 {
+                assert_eq!(cl.mac(x.clone()).unwrap(), expect);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+
+    // the remote live-stats snapshot converges on the served total
+    // (workers republish each dispatch round, so poll briefly)
+    let want = 32 + 4 * 8 + 2 + 40;
+    let mut total = 0;
+    for _ in 0..100 {
+        let stats = client.remote_stats().expect("stats over the wire");
+        assert_eq!(stats.len(), 2);
+        total = stats.iter().map(|s| s.requests).sum::<u64>();
+        if total >= want {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(total >= want, "live stats stuck at {total}, want >= {want}");
+
+    drop(client);
+    wire.request_shutdown();
+    acceptor.join().unwrap();
+    drop(wire);
+    let (_cluster, stats) = server.join();
+    let served: u64 = stats.iter().map(|s| s.requests).sum();
+    assert!(served >= want, "workers served {served}, want >= {want}");
+}
+
+#[test]
+fn remote_drain_recalibrates_and_post_drain_health_is_in_band() {
+    // noise-free default-sigma dies: deterministic residuals, twin trick
+    // for a band that provably separates uncalibrated from calibrated
+    // (same construction as tests/service.rs, here over a real socket)
+    let mut cfg = SimConfig::default();
+    cfg.sigma_noise = 0.0;
+    let mut cluster = CimCluster::new(&cfg, 2);
+    cluster.program_all(&vec![40; c::N_ROWS * c::M_COLS]);
+    let engine = BiscEngine::from_config(&cfg, AdcCharacterization::ideal());
+    let mut cfg1 = cfg.clone();
+    cfg1.seed = core_seed(cfg.seed, 1);
+    let mut twin = CimAnalogModel::from_sample(&cfg1, &cluster.cores[1].sample);
+    let r_uncal = engine.residual_gain_error(&mut twin);
+    engine.calibrate(&mut twin);
+    let r_cal = engine.residual_gain_error(&mut twin);
+    assert!(r_cal < r_uncal, "BISC did not improve the twin: {r_cal} vs {r_uncal}");
+    let band = 0.5 * (r_cal + r_uncal);
+
+    let server = cluster.serve_with(ServiceConfig {
+        batcher: Batcher::default(),
+        engine: Some(engine),
+        health_band: band,
+    });
+    let (wire, addr, acceptor) = spawn_wire(&server);
+    let client = RemoteClient::connect(addr).expect("connect loopback");
+
+    // the remote health probe finds core 1 out of band; the reply syncs
+    // the client's fence mirror
+    let h = client.health(1).unwrap();
+    assert_eq!(h.core, 1);
+    assert!(h.residual.expect("engine is configured") > band);
+    assert!(h.fenced);
+    assert!(client.is_fenced(1), "fence state must mirror over the wire");
+
+    // edge-resolved placement now avoids the fenced core
+    for _ in 0..8 {
+        let t = client.submit(Job::Mac(vec![30; c::N_ROWS]), SubmitOpts::default()).unwrap();
+        assert_ne!(t.core(), 1, "job placed on a fenced core through the wire");
+        t.typed::<Vec<u32>>().wait().unwrap();
+    }
+
+    // drain over the wire: fence -> barrier -> recalibrate -> rejoin
+    let h = client.drain(1).unwrap();
+    assert!(h.recalibrated, "drain with an engine must recalibrate");
+    assert!(h.residual.expect("engine is configured") <= band);
+    assert!(!h.fenced);
+    assert!(!client.is_fenced(1), "rejoin must mirror over the wire");
+
+    // a post-drain health probe is back in band and leaves the core in
+    assert!(client.board().recal_epoch(1) > 0, "mirror must track the recalibration");
+    let h = client.health(1).unwrap();
+    assert!(h.residual.expect("engine is configured") <= band);
+    assert!(!h.fenced);
+
+    // the rejoined core serves remote traffic again
+    let mut served_core1 = false;
+    let tickets: Vec<Ticket<Vec<u32>>> = (0..8)
+        .map(|_| {
+            let t =
+                client.submit(Job::Mac(vec![30; c::N_ROWS]), SubmitOpts::default()).unwrap();
+            served_core1 |= t.core() == 1;
+            t.typed()
+        })
+        .collect();
+    gather(tickets).unwrap();
+    assert!(served_core1, "rejoined core never placed");
+
+    drop(client);
+    wire.request_shutdown();
+    acceptor.join().unwrap();
+    drop(wire);
+    let (cluster, stats) = server.join();
+    assert!(cluster.cores[1].report.is_some(), "in-service recalibration left no report");
+    assert!(stats[1].requests <= 8, "fenced core served placed jobs: {:?}", stats[1]);
+}
+
+#[test]
+fn pinned_core_out_of_range_is_a_wire_error_not_a_crash() {
+    let cfg = ideal_cfg();
+    let mut cluster = CimCluster::new(&cfg, 1);
+    cluster.program_all(&vec![40; c::N_ROWS * c::M_COLS]);
+    let server = cluster.serve(Batcher::default());
+    let (wire, addr, acceptor) = spawn_wire(&server);
+    let client = RemoteClient::connect(addr).expect("connect loopback");
+    // the client's own mirror panics on an out-of-range pin (programmer
+    // error, same as in-process), so craft the frame below the trait:
+    // a hostile peer pinning core 7 on a 1-core cluster must get a typed
+    // error back, and the connection must survive
+    use acore_cim::coordinator::wire::write_frame;
+    use std::net::TcpStream;
+    let mut raw = TcpStream::connect(addr).unwrap();
+    let hello = read_frame(&mut raw).unwrap();
+    assert_eq!(hello, Frame::Hello { cores: 1 });
+    write_frame(
+        &mut raw,
+        &Frame::Submit {
+            id: 77,
+            job: Job::Mac(vec![0; c::N_ROWS]),
+            opts: SubmitOpts::pinned(7),
+        },
+    )
+    .unwrap();
+    match read_frame(&mut raw).unwrap() {
+        Frame::Reply { id, result, .. } => {
+            assert_eq!(id, 77);
+            assert!(matches!(result, Err(ServeError::Backend(_))), "got {result:?}");
+        }
+        other => panic!("expected a Reply frame, got {other:?}"),
+    }
+    drop(raw);
+    // the well-behaved client on the same server still serves
+    let q = client.mac(vec![30; c::N_ROWS]).unwrap();
+    assert_eq!(q.len(), c::M_COLS);
+
+    drop(client);
+    wire.request_shutdown();
+    acceptor.join().unwrap();
+    drop(wire);
+    server.join();
+}
