@@ -125,4 +125,25 @@ fn main() {
     }
     t.print();
     println!("shape: BISC curve hugs the ideal column; uncal shows offset + spread");
+
+    // CI bench artifact: the calibration-quality trajectory in numbers
+    // (no-op unless ACORE_BENCH_JSON_DIR is set)
+    let body = format!(
+        "{{\n  \"bench\": \"fig8_calibration\",\n  \"seed\": {},\n  \
+         \"reads\": {},\n  \"g_mean_uncal\": {:.6},\n  \"g_std_uncal\": {:.6},\n  \
+         \"g_mean_cal\": {:.6},\n  \"g_std_cal\": {:.6},\n  \
+         \"eps_mean_uncal_lsb\": {:.4},\n  \"eps_mean_cal_lsb\": {:.4},\n  \
+         \"spread_uncal_codes\": {:.2},\n  \"spread_cal_codes\": {:.2}\n}}\n",
+        cfg.seed,
+        report.reads,
+        stats::mean(&g_before),
+        stats::std_dev(&g_before),
+        stats::mean(&g_after),
+        stats::std_dev(&g_after),
+        stats::mean(&e_before),
+        stats::mean(&e_after),
+        spread(&uncal_out),
+        spread(&cal_out)
+    );
+    acore_cim::util::bench::write_bench_json("fig8_calibration", &body);
 }

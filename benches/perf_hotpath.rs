@@ -370,6 +370,8 @@ fn main() {
             rps_ll,
             rps_ll / ll1
         );
+        b.note_rate(&format!("cluster K={k} Mac+round-robin req/s"), rps_rr);
+        b.note_rate(&format!("cluster K={k} MacBatch(64)+least-loaded req/s"), rps_ll);
     }
     println!(
         "   (host has {} CPUs; scaling saturates at the physical core count)",
@@ -392,6 +394,11 @@ fn main() {
                  loopback TCP ({:.0}% of in-process)",
                 100.0 * tcp / inproc
             );
+            b.note_rate(&format!("wire K={k} {} in-process req/s", label.trim()), inproc);
+            b.note_rate(&format!("wire K={k} {} loopback-tcp req/s", label.trim()), tcp);
         }
     }
+
+    // CI bench artifact (no-op unless ACORE_BENCH_JSON_DIR is set)
+    b.export_json("perf_hotpath");
 }

@@ -25,7 +25,7 @@ use consts as c;
 use noise::NoiseModel;
 use rdac::{InputCode, InputDac};
 use samp::SummingAmp;
-use variation::VariationSample;
+use variation::{DriftState, VariationSample};
 
 use crate::config::SimConfig;
 
@@ -36,6 +36,9 @@ pub struct CimAnalogModel {
     pub amps: Vec<SummingAmp>,
     pub adc: FlashAdc,
     pub noise: NoiseModel,
+    /// temporal drift of the SA gains/offsets (`None` = frozen die);
+    /// advanced by [`CimAnalogModel::advance_drift`] as traffic ages it
+    drift: Option<DriftState>,
     /// folded fast-path state (rebuilt lazily after programming/trimming)
     folded: Option<Folded>,
 }
@@ -78,7 +81,7 @@ impl CimAnalogModel {
             .collect();
         let adc = FlashAdc { alpha_d: s.adc_alpha, beta_d: s.adc_beta, ..Default::default() };
         let noise = NoiseModel::new(cfg.sigma_noise, cfg.sigma_noise * 0.3, s.seed);
-        Self { dacs, array, amps, adc, noise, folded: None }
+        Self { dacs, array, amps, adc, noise, drift: DriftState::draw(cfg), folded: None }
     }
 
     /// Error-free die with silent noise.
@@ -116,6 +119,45 @@ impl CimAnalogModel {
     pub fn set_adc_refs(&mut self, v_l: f64, v_h: f64) {
         self.adc.v_l = v_l;
         self.adc.v_h = v_h;
+        self.folded = None;
+    }
+
+    /// Whether this die carries a drift model (`sigma_drift > 0`).
+    pub fn has_drift(&self) -> bool {
+        self.drift.is_some()
+    }
+
+    /// Drift units applied so far (the die's simulated age).
+    pub fn drift_age(&self) -> u64 {
+        self.drift.as_ref().map_or(0, |d| d.age)
+    }
+
+    /// Age the die by `units` drift ticks (one unit = one S&H period of
+    /// analog busy time): every SA line gain walks by its per-column
+    /// velocity and the offsets creep alongside, then the folded
+    /// fast-path state is invalidated so the next evaluation sees the
+    /// drifted amplifiers. No-op on a frozen die (`sigma_drift == 0`),
+    /// so the hot path pays nothing when drift is disabled.
+    ///
+    /// Characterization reads issued through the model directly (BISC,
+    /// health probes) do NOT age the die — only served traffic does, via
+    /// the backends in [`crate::coordinator`] — so probing for drift
+    /// never masquerades as drift itself.
+    pub fn advance_drift(&mut self, units: u64) {
+        let Some(d) = self.drift.as_mut() else { return };
+        if units == 0 {
+            return;
+        }
+        d.age += units;
+        // (1 + v)^k applied in closed form so a large batch advances in
+        // O(M) instead of O(M * batch)
+        let k = units.min(i32::MAX as u64) as i32;
+        for col in 0..c::M_COLS {
+            let amp = &mut self.amps[col];
+            amp.alpha_p *= (1.0 + d.vel_p[col]).powi(k);
+            amp.alpha_n *= (1.0 + d.vel_n[col]).powi(k);
+            amp.beta += d.vel_beta[col] * units as f64;
+        }
         self.folded = None;
     }
 
@@ -410,6 +452,31 @@ mod tests {
         m.set_adc_refs(0.19, 0.63);
         let q_wide = m.forward_batch(&x, 1)[0];
         assert!(q_wide < q_tight, "wider range => smaller code for same V");
+    }
+
+    #[test]
+    fn drift_ages_the_die_and_moves_outputs() {
+        let mut cfg = SimConfig::default();
+        cfg.sigma_noise = 0.0;
+        cfg.sigma_drift = 5e-4;
+        let sample = VariationSample::draw(&cfg);
+        let mut m = CimAnalogModel::from_sample(&cfg, &sample);
+        assert!(m.has_drift());
+        let w = vec![40i32; c::N_ROWS * c::M_COLS];
+        m.program(&w);
+        let x = vec![30i32; c::N_ROWS];
+        let q0 = m.forward_batch(&x, 1);
+        m.advance_drift(500);
+        assert_eq!(m.drift_age(), 500);
+        let q1 = m.forward_batch(&x, 1);
+        assert_ne!(q0, q1, "500 drift units must move the transfer");
+        // a frozen die ignores advance_drift entirely
+        let mut frozen = CimAnalogModel::ideal();
+        frozen.program(&w);
+        let f0 = frozen.forward_batch(&x, 1);
+        frozen.advance_drift(10_000);
+        assert_eq!(frozen.drift_age(), 0);
+        assert_eq!(frozen.forward_batch(&x, 1), f0);
     }
 
     #[test]

@@ -100,6 +100,51 @@ impl VariationSample {
     }
 }
 
+/// Deterministic aging/drift model of one die's analog front-end: each
+/// summing-amplifier line gain walks away from its as-calibrated value at
+/// a per-column velocity drawn once per die, and the SA offsets creep
+/// alongside. One *drift unit* is one S&H period of analog busy time (one
+/// MAC read), so the die ages with traffic, not wall-clock — replaying
+/// the same request stream replays the same degradation bit-for-bit.
+///
+/// This is the moving target the paper's periodic self-calibration
+/// exists for: BISC trims compensate the CURRENT gains, drift then pulls
+/// them away again, and the serving-layer calibrator daemon
+/// ([`crate::coordinator::calibrator`]) closes the loop.
+#[derive(Debug, Clone)]
+pub struct DriftState {
+    /// per-column per-unit relative drift velocity, positive SA line
+    pub vel_p: Vec<f64>,
+    /// per-column per-unit relative drift velocity, negative SA line
+    pub vel_n: Vec<f64>,
+    /// per-column additive SA offset drift velocity [V per unit]
+    pub vel_beta: Vec<f64>,
+    /// drift units applied so far (the die's simulated age)
+    pub age: u64,
+}
+
+impl DriftState {
+    /// Drift velocities for one die, or `None` when the config disables
+    /// drift (`sigma_drift == 0`). Velocities are drawn from their own
+    /// seed stream so enabling drift does not re-deal the static
+    /// variation sample of the same seed.
+    pub fn draw(cfg: &SimConfig) -> Option<Self> {
+        if cfg.sigma_drift <= 0.0 {
+            return None;
+        }
+        let mut rng = Rng::new(cfg.seed ^ 0xD21F_7A6E_5EED_C0DE);
+        // offsets creep ~two orders slower than gains drift (in volts the
+        // V_BIAS-relative scale keeps both effects sub-dominant per unit)
+        let beta_sigma = cfg.sigma_drift * 0.01;
+        Some(Self {
+            vel_p: (0..c::M_COLS).map(|_| rng.normal_ms(0.0, cfg.sigma_drift)).collect(),
+            vel_n: (0..c::M_COLS).map(|_| rng.normal_ms(0.0, cfg.sigma_drift)).collect(),
+            vel_beta: (0..c::M_COLS).map(|_| rng.normal_ms(0.0, beta_sigma)).collect(),
+            age: 0,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -145,6 +190,23 @@ mod tests {
         let s = VariationSample::draw(&cfg);
         let sd = stats::std_dev(&s.cell_delta);
         assert!((sd - cfg.sigma_cell).abs() < cfg.sigma_cell * 0.2, "sd={sd}");
+    }
+
+    #[test]
+    fn drift_disabled_by_default_and_deterministic_when_on() {
+        let cfg = SimConfig::default();
+        assert!(DriftState::draw(&cfg).is_none(), "drift must be opt-in");
+        let mut cfg_d = cfg.clone();
+        cfg_d.sigma_drift = 2e-4;
+        let a = DriftState::draw(&cfg_d).expect("drift enabled");
+        let b = DriftState::draw(&cfg_d).expect("drift enabled");
+        assert_eq!(a.vel_p, b.vel_p);
+        assert_eq!(a.vel_beta, b.vel_beta);
+        assert_eq!(a.age, 0);
+        // enabling drift must not re-deal the static variation sample
+        let s0 = VariationSample::draw(&cfg);
+        let s1 = VariationSample::draw(&cfg_d);
+        assert_eq!(s0.alpha_p, s1.alpha_p);
     }
 
     #[test]

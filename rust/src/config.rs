@@ -111,6 +111,12 @@ pub struct SimConfig {
     pub kappa_reg: f64,
     /// SA-referred rms noise per read [V] (thermal + flicker lump)
     pub sigma_noise: f64,
+    /// per-column SA gain drift-velocity sigma, per drift unit (one S&H
+    /// period of analog busy time / one served MAC). 0.0 = no drift. A
+    /// non-zero value makes the die AGE under traffic: analog error
+    /// becomes a moving target and periodic recalibration (the
+    /// calibrator daemon) becomes load-bearing.
+    pub sigma_drift: f64,
     /// BISC: number of characterization test vectors (Z, Section VI-C)
     pub bisc_test_points: usize,
     /// BISC: averaging reads per test point
@@ -134,6 +140,7 @@ impl Default for SimConfig {
             kappa_in: crate::analog::consts::KAPPA_IN_DEFAULT,
             kappa_reg: crate::analog::consts::KAPPA_REG_DEFAULT,
             sigma_noise: 0.0005,
+            sigma_drift: 0.0,
             bisc_test_points: 8,
             bisc_averages: 4,
             bisc_ref_margin: 0.08,
@@ -157,6 +164,7 @@ impl SimConfig {
             kappa_in: raw.get_f64("parasitics.kappa_in", d.kappa_in),
             kappa_reg: raw.get_f64("parasitics.kappa_reg", d.kappa_reg),
             sigma_noise: raw.get_f64("noise.sigma_v", d.sigma_noise),
+            sigma_drift: raw.get_f64("drift.sigma_v", d.sigma_drift),
             bisc_test_points: raw.get_u64("bisc.test_points", d.bisc_test_points as u64) as usize,
             bisc_averages: raw.get_u64("bisc.averages", d.bisc_averages as u64) as usize,
             bisc_ref_margin: raw.get_f64("bisc.ref_margin", d.bisc_ref_margin),

@@ -504,6 +504,7 @@ impl Batcher {
             residual,
             fenced: ctx.board.is_fenced(ctx.core),
             recalibrated,
+            recal_epoch: ctx.board.recal_epoch(ctx.core),
         };
         ctx.board.sub_in_flight(ctx.core, p.env.weight);
         p.env.reply.send(Ok(JobReply::Health(health)));
@@ -523,6 +524,7 @@ impl Batcher {
             residual,
             fenced: ctx.board.is_fenced(ctx.core),
             recalibrated: false,
+            recal_epoch: ctx.board.recal_epoch(ctx.core),
         };
         ctx.board.sub_in_flight(ctx.core, p.env.weight);
         p.env.reply.send(Ok(JobReply::Health(health)));

@@ -1,0 +1,517 @@
+//! Autonomous drift-triggered recalibration: a background daemon that
+//! closes the paper's self-calibration loop in serving form. The paper's
+//! central claim is *automated* RISC-V controlled calibration; until now
+//! the serving layer only recalibrated when an operator submitted a
+//! `Drain` by hand. The [`Calibrator`] watches per-core BISC residuals
+//! through the ordinary [`CimService`] surface (`Health` probes), keeps
+//! an EWMA trend per core, and issues the drain → recalibrate → rejoin
+//! lifecycle on its own when the trend crosses a threshold or a core's
+//! calibration goes stale — reliability work in the spirit of Yan et
+//! al.'s CiM-reliability study: analog error under drift is a moving
+//! target, so calibration must be a control loop, not an event.
+//!
+//! Layers:
+//! * [`CalibratorPolicy`] — the pure decision state machine (no clock,
+//!   no threads: `observe` residuals, `decide` drains against an
+//!   explicit `now`), unit-testable for every trigger and guard;
+//! * [`Calibrator`] — the daemon: one background thread sampling
+//!   `Health` per core each period and executing the policy's drains
+//!   through the same `submit` path every other client uses (the drain
+//!   barrier, fence, bank refold, and trim refresh all come for free);
+//! * [`CalibratorShared`] / [`CoreCalStats`] — live observability: the
+//!   per-core trend, last-recal epoch, and trigger counters, served
+//!   over the wire as `CalStats` frames (`client --op calstats`) and
+//!   printed at `serve` shutdown.
+//!
+//! Policy guards (tested in this file):
+//! * **cool-down** — after any drain *attempt* a core is left alone for
+//!   `cooldown`, so a die whose residual cannot be pulled back in band
+//!   does not trigger a drain storm;
+//! * **last healthy core** — a core still accepting placed work is
+//!   never drained when it is the only one (availability beats
+//!   freshness); a FENCED core is always drainable — it serves nothing,
+//!   so recalibrating it can only help. A K=1 deployment therefore
+//!   still self-heals: the residual grows past the health band, the
+//!   `Health` probe fences the core, and the now-fenced core qualifies
+//!   for the drain that brings it back.
+
+use crate::coordinator::batcher::ServeError;
+use crate::coordinator::service::CimService;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Tuning knobs of the recalibration control loop.
+#[derive(Debug, Clone)]
+pub struct CalibratorConfig {
+    /// Interval between health-sampling sweeps (one `Health` probe per
+    /// core per sweep).
+    pub period: Duration,
+    /// Weight of the newest residual in the per-core EWMA trend
+    /// (0 < alpha <= 1; 1 = track the raw residual).
+    pub ewma_alpha: f64,
+    /// Drain a core when its residual trend exceeds this. Typically set
+    /// BELOW the serving health band: the daemon recalibrates
+    /// proactively before the fence would take the core out.
+    pub threshold: f64,
+    /// Drain a core regardless of trend once its last recalibration is
+    /// this old (periodic BISC as a freshness deadline).
+    pub max_staleness: Duration,
+    /// Minimum spacing between drain attempts on one core (storm guard).
+    pub cooldown: Duration,
+}
+
+impl Default for CalibratorConfig {
+    fn default() -> Self {
+        Self {
+            period: Duration::from_millis(500),
+            ewma_alpha: 0.4,
+            threshold: crate::coordinator::service::DEFAULT_HEALTH_BAND * 0.8,
+            max_staleness: Duration::from_secs(3600),
+            cooldown: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Why the policy wants a core drained.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DrainReason {
+    /// The EWMA residual trend crossed the threshold.
+    Trend,
+    /// The core's last recalibration aged past `max_staleness`.
+    Staleness,
+}
+
+impl std::fmt::Display for DrainReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DrainReason::Trend => write!(f, "trend"),
+            DrainReason::Staleness => write!(f, "staleness"),
+        }
+    }
+}
+
+/// Per-core policy state.
+#[derive(Debug, Clone)]
+struct CoreState {
+    /// EWMA of the observed residuals; `None` until the first sample.
+    ewma: Option<f64>,
+    /// When this core was last known freshly calibrated (daemon start
+    /// counts: serving setups calibrate before serving).
+    last_recal: Instant,
+    /// When a drain was last *attempted* on this core (cool-down clock).
+    last_drain: Option<Instant>,
+}
+
+/// The pure decision state machine: residuals in, drain decisions out.
+/// Holds no clock and spawns nothing — every transition takes an
+/// explicit `now`, so tests can replay any schedule deterministically.
+#[derive(Debug, Clone)]
+pub struct CalibratorPolicy {
+    cfg: CalibratorConfig,
+    cores: Vec<CoreState>,
+}
+
+impl CalibratorPolicy {
+    pub fn new(cfg: CalibratorConfig, cores: usize, now: Instant) -> Self {
+        let state = CoreState { ewma: None, last_recal: now, last_drain: None };
+        Self { cfg, cores: vec![state; cores] }
+    }
+
+    /// Fold one residual sample into the core's trend; returns the
+    /// updated EWMA.
+    pub fn observe(&mut self, core: usize, residual: f64) -> f64 {
+        let st = &mut self.cores[core];
+        let next = match st.ewma {
+            None => residual,
+            Some(e) => self.cfg.ewma_alpha * residual + (1.0 - self.cfg.ewma_alpha) * e,
+        };
+        st.ewma = Some(next);
+        next
+    }
+
+    /// Current trend of one core (`None` before the first sample).
+    pub fn trend(&self, core: usize) -> Option<f64> {
+        self.cores[core].ewma
+    }
+
+    /// Should `core` be drained now? `healthy_cores` is the count of
+    /// cores currently accepting placed work and `fenced` whether THIS
+    /// core is one of the excluded.
+    pub fn decide(
+        &self,
+        core: usize,
+        healthy_cores: usize,
+        fenced: bool,
+        now: Instant,
+    ) -> Option<DrainReason> {
+        let st = &self.cores[core];
+        // cool-down: one drain attempt per window, success or not
+        if let Some(t) = st.last_drain {
+            if now < t + self.cfg.cooldown {
+                return None;
+            }
+        }
+        // availability guard: never drain the last core still serving
+        // placed work; a fenced core serves nothing, so draining it can
+        // only help
+        if !fenced && healthy_cores <= 1 {
+            return None;
+        }
+        if st.ewma.is_some_and(|e| e > self.cfg.threshold) {
+            return Some(DrainReason::Trend);
+        }
+        // staleness only fires on cores whose residual is observable
+        // (at least one Health probe returned a measurement): a service
+        // without a calibration engine cannot recalibrate either, so a
+        // staleness drain there would just fence the core forever and
+        // retry a guaranteed-failing drain every cool-down
+        if st.ewma.is_some() && now >= st.last_recal + self.cfg.max_staleness {
+            return Some(DrainReason::Staleness);
+        }
+        None
+    }
+
+    /// Record a drain attempt on `core`. A successful recalibration
+    /// resets the staleness clock and re-seeds the trend from the
+    /// post-recalibration residual (when the drain reported one).
+    pub fn record_drain(
+        &mut self,
+        core: usize,
+        now: Instant,
+        recalibrated: bool,
+        residual: Option<f64>,
+    ) {
+        let st = &mut self.cores[core];
+        st.last_drain = Some(now);
+        if recalibrated {
+            st.last_recal = now;
+            st.ewma = residual;
+        }
+    }
+}
+
+/// Live statistics of one core, as maintained by the daemon and served
+/// over the wire (`CalStats` frames).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct CoreCalStats {
+    /// `Health` samples folded into the trend so far.
+    pub samples: u64,
+    /// Current EWMA residual trend (`None` before the first sample).
+    pub trend: Option<f64>,
+    /// Last server-observed recalibration epoch of this core.
+    pub last_recal_epoch: u64,
+    /// Drains triggered by the trend threshold.
+    pub trend_triggers: u64,
+    /// Drains triggered by the staleness deadline.
+    pub staleness_triggers: u64,
+    /// Drains that completed with a recalibration.
+    pub drains: u64,
+    /// Drain attempts that failed (serve error or no recalibration ran).
+    pub drain_failures: u64,
+    /// Whether the core was fenced at the last sweep.
+    pub fenced: bool,
+}
+
+/// Snapshot store shared between the daemon, the wire front-end, and
+/// the CLI shutdown report.
+pub struct CalibratorShared {
+    stats: Mutex<Vec<CoreCalStats>>,
+    /// completed sampling sweeps (liveness signal for operators)
+    sweeps: AtomicU64,
+}
+
+impl CalibratorShared {
+    fn new(cores: usize) -> Self {
+        Self { stats: Mutex::new(vec![CoreCalStats::default(); cores]), sweeps: AtomicU64::new(0) }
+    }
+
+    /// Current per-core statistics.
+    pub fn snapshot(&self) -> Vec<CoreCalStats> {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Completed sampling sweeps so far.
+    pub fn sweeps(&self) -> u64 {
+        self.sweeps.load(Ordering::Relaxed)
+    }
+
+    /// Total completed drain→recalibrate cycles across all cores.
+    pub fn total_drains(&self) -> u64 {
+        self.stats.lock().unwrap().iter().map(|s| s.drains).sum()
+    }
+
+    fn update<F: FnOnce(&mut CoreCalStats)>(&self, core: usize, f: F) {
+        f(&mut self.stats.lock().unwrap()[core]);
+    }
+}
+
+/// The background recalibration daemon. Construct with
+/// [`Calibrator::spawn`] over any [`CimService`] (the in-process
+/// cluster client or a [`crate::coordinator::wire::RemoteClient`]) and
+/// stop it with [`Calibrator::stop`]; dropping without `stop` also
+/// shuts the thread down.
+pub struct Calibrator {
+    stop: Arc<AtomicBool>,
+    shared: Arc<CalibratorShared>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Calibrator {
+    /// Start the daemon over `svc`. The calibrator holds its own clone
+    /// of the service — drop/stop it before joining the cluster server,
+    /// like any other client.
+    pub fn spawn<S: CimService + Send + 'static>(svc: S, cfg: CalibratorConfig) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let shared = Arc::new(CalibratorShared::new(svc.cores()));
+        let handle = {
+            let stop = Arc::clone(&stop);
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || run(svc, cfg, &stop, &shared))
+        };
+        Self { stop, shared, handle: Some(handle) }
+    }
+
+    /// Handle on the live statistics (what the wire front-end serves).
+    pub fn shared(&self) -> Arc<CalibratorShared> {
+        Arc::clone(&self.shared)
+    }
+
+    /// Signal the daemon, join its thread, and return the final
+    /// per-core statistics.
+    pub fn stop(mut self) -> Vec<CoreCalStats> {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        self.shared.snapshot()
+    }
+}
+
+impl Drop for Calibrator {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One sampling sweep + policy pass per period until stopped. Health
+/// probes and drains go through the ordinary submit path, so they queue
+/// behind in-flight work exactly like operator-issued lifecycle jobs.
+fn run<S: CimService>(
+    svc: S,
+    cfg: CalibratorConfig,
+    stop: &AtomicBool,
+    shared: &CalibratorShared,
+) {
+    let k = svc.cores();
+    let mut policy = CalibratorPolicy::new(cfg.clone(), k, Instant::now());
+    while !stop.load(Ordering::SeqCst) {
+        let sweep_start = Instant::now();
+        for core in 0..k {
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            let health = match svc.health(core) {
+                Ok(h) => h,
+                // the service is gone: nothing left to calibrate
+                Err(ServeError::Disconnected) => return,
+                Err(_) => continue,
+            };
+            let trend = health.residual.map(|r| policy.observe(core, r));
+            shared.update(core, |s| {
+                if trend.is_some() {
+                    s.samples += 1;
+                    s.trend = trend;
+                }
+                s.fenced = health.fenced;
+                s.last_recal_epoch = health.recal_epoch;
+            });
+            let now = Instant::now();
+            let healthy = svc.board().healthy_cores();
+            let Some(reason) = policy.decide(core, healthy, health.fenced, now) else {
+                continue;
+            };
+            let pre_trend = policy.trend(core).unwrap_or(f64::NAN);
+            println!(
+                "calibrator: core {core} {reason} trigger (trend {pre_trend:.4}, \
+                 threshold {:.4}) — draining",
+                cfg.threshold
+            );
+            shared.update(core, |s| match reason {
+                DrainReason::Trend => s.trend_triggers += 1,
+                DrainReason::Staleness => s.staleness_triggers += 1,
+            });
+            match svc.drain(core) {
+                Ok(h) => {
+                    policy.record_drain(core, Instant::now(), h.recalibrated, h.residual);
+                    shared.update(core, |s| {
+                        if h.recalibrated {
+                            s.drains += 1;
+                        } else {
+                            s.drain_failures += 1;
+                        }
+                        s.trend = h.residual.or(s.trend);
+                        s.fenced = h.fenced;
+                        s.last_recal_epoch = h.recal_epoch;
+                    });
+                    let post = h.residual.unwrap_or(f64::NAN);
+                    if h.recalibrated && !h.fenced {
+                        println!(
+                            "calibrator: core {core} drain -> recalibrate -> rejoin \
+                             complete (residual {pre_trend:.4} -> {post:.4}, epoch {})",
+                            h.recal_epoch
+                        );
+                    } else {
+                        println!(
+                            "calibrator: core {core} drain finished without rejoining \
+                             (residual {pre_trend:.4} -> {post:.4}, fenced {}, \
+                             recalibrated {}, epoch {})",
+                            h.fenced, h.recalibrated, h.recal_epoch
+                        );
+                    }
+                }
+                Err(ServeError::Disconnected) => return,
+                Err(e) => {
+                    policy.record_drain(core, Instant::now(), false, None);
+                    shared.update(core, |s| s.drain_failures += 1);
+                    eprintln!("calibrator: core {core} drain failed: {e}");
+                }
+            }
+        }
+        shared.sweeps.fetch_add(1, Ordering::Relaxed);
+        // sleep out the rest of the period in short slices so stop()
+        // never waits a full period
+        loop {
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            let left = cfg.period.saturating_sub(sweep_start.elapsed());
+            if left.is_zero() {
+                break;
+            }
+            std::thread::sleep(left.min(Duration::from_millis(20)));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> CalibratorConfig {
+        CalibratorConfig {
+            period: Duration::from_millis(10),
+            ewma_alpha: 0.5,
+            threshold: 0.05,
+            max_staleness: Duration::from_secs(60),
+            cooldown: Duration::from_secs(5),
+        }
+    }
+
+    #[test]
+    fn ewma_tracks_toward_the_residual() {
+        let mut p = CalibratorPolicy::new(cfg(), 1, Instant::now());
+        assert_eq!(p.trend(0), None);
+        assert_eq!(p.observe(0, 0.10), 0.10, "first sample seeds the trend");
+        let e = p.observe(0, 0.20);
+        assert!((e - 0.15).abs() < 1e-12, "alpha 0.5 blend, got {e}");
+        // repeated samples converge on the residual
+        let mut e = e;
+        for _ in 0..50 {
+            e = p.observe(0, 0.20);
+        }
+        assert!((e - 0.20).abs() < 1e-6);
+    }
+
+    #[test]
+    fn trend_threshold_triggers_a_drain() {
+        let t0 = Instant::now();
+        let mut p = CalibratorPolicy::new(cfg(), 2, t0);
+        p.observe(0, 0.01);
+        assert_eq!(p.decide(0, 2, false, t0), None, "in-band trend must not drain");
+        // a single borderline spike is damped below the threshold by the
+        // EWMA (0.5 * 0.08 + 0.5 * 0.01 = 0.045 < 0.05)...
+        p.observe(0, 0.08);
+        assert_eq!(p.decide(0, 2, false, t0), None, "EWMA must damp a lone spike");
+        // ...but a sustained excursion pushes the trend across
+        p.observe(0, 0.08);
+        p.observe(0, 0.08);
+        assert_eq!(p.decide(0, 2, false, t0), Some(DrainReason::Trend));
+        // while the untouched core stays quiet
+        assert_eq!(p.decide(1, 2, false, t0), None);
+    }
+
+    #[test]
+    fn staleness_deadline_triggers_when_the_trend_is_quiet() {
+        let t0 = Instant::now();
+        let mut p = CalibratorPolicy::new(cfg(), 2, t0);
+        // with NO residual ever observed the core cannot recalibrate
+        // (no engine) — staleness must never fence it into a drain loop
+        assert_eq!(p.decide(0, 2, false, t0 + Duration::from_secs(61)), None);
+        // an in-band residual arms the deadline without arming the trend
+        p.observe(0, 0.01);
+        assert_eq!(p.decide(0, 2, false, t0 + Duration::from_secs(59)), None);
+        assert_eq!(
+            p.decide(0, 2, false, t0 + Duration::from_secs(61)),
+            Some(DrainReason::Staleness)
+        );
+    }
+
+    #[test]
+    fn cooldown_prevents_drain_storms() {
+        let t0 = Instant::now();
+        let mut p = CalibratorPolicy::new(cfg(), 2, t0);
+        // a die whose residual stays out of band even after recalibration
+        p.observe(0, 0.5);
+        assert_eq!(p.decide(0, 2, false, t0), Some(DrainReason::Trend));
+        p.record_drain(0, t0, true, Some(0.5));
+        // still out of band, but inside the cool-down window: no drain
+        assert_eq!(p.decide(0, 2, false, t0 + Duration::from_secs(1)), None);
+        assert_eq!(p.decide(0, 2, false, t0 + Duration::from_secs(4)), None);
+        // after the window the trigger re-arms
+        assert_eq!(
+            p.decide(0, 2, false, t0 + Duration::from_secs(6)),
+            Some(DrainReason::Trend)
+        );
+        // failed attempts arm the cool-down too
+        p.record_drain(0, t0 + Duration::from_secs(6), false, None);
+        assert_eq!(p.decide(0, 2, false, t0 + Duration::from_secs(7)), None);
+    }
+
+    #[test]
+    fn never_drains_the_last_healthy_core() {
+        let t0 = Instant::now();
+        let mut p = CalibratorPolicy::new(cfg(), 1, t0);
+        p.observe(0, 0.5);
+        // the only core accepting work: neither trigger may drain it
+        assert_eq!(p.decide(0, 1, false, t0), None);
+        assert_eq!(p.decide(0, 1, false, t0 + Duration::from_secs(3600)), None);
+        // once FENCED it serves nothing — draining it can only help
+        assert_eq!(p.decide(0, 0, true, t0), Some(DrainReason::Trend));
+        // and with a second healthy core available the guard releases
+        assert_eq!(p.decide(0, 2, false, t0), Some(DrainReason::Trend));
+    }
+
+    #[test]
+    fn successful_drain_resets_trend_and_staleness() {
+        let t0 = Instant::now();
+        let mut p = CalibratorPolicy::new(cfg(), 1, t0);
+        p.observe(0, 0.5);
+        p.record_drain(0, t0 + Duration::from_secs(10), true, Some(0.01));
+        assert_eq!(p.trend(0), Some(0.01), "trend re-seeds from the post-recal residual");
+        // staleness clock restarts from the drain, not from birth
+        assert_eq!(
+            p.decide(0, 2, false, t0 + Duration::from_secs(65)),
+            None,
+            "staleness must measure from the recalibration"
+        );
+        assert_eq!(
+            p.decide(0, 2, false, t0 + Duration::from_secs(71)),
+            Some(DrainReason::Staleness)
+        );
+    }
+}

@@ -85,6 +85,9 @@ impl CimDevice {
     }
 
     fn do_mac(&mut self) {
+        // the analog busy time is the drift clock: every S&H period of
+        // real reads ages the die (no-op on a frozen die)
+        self.model.advance_drift(1);
         let q = self.model.forward_golden(&self.inputs);
         self.out.copy_from_slice(&q);
         self.mac_count = self.mac_count.wrapping_add(1);
@@ -93,6 +96,7 @@ impl CimDevice {
 
     fn do_mac_averaged(&mut self) {
         let reads = self.avg_cnt.max(1) as usize;
+        self.model.advance_drift(reads as u64);
         let avg = self.model.forward_averaged(&self.inputs, reads);
         for (dst, &a) in self.out_avg_q8.iter_mut().zip(&avg) {
             *dst = (a * 256.0).round() as u32;
@@ -301,6 +305,28 @@ mod tests {
         // noise-free ideal die: average == single read exactly
         assert_eq!(q8, single * 256);
         assert_eq!(dev.mac_count(), 8);
+    }
+
+    #[test]
+    fn mac_reads_advance_the_drift_clock() {
+        use crate::analog::variation::VariationSample;
+        use crate::config::SimConfig;
+        let mut cfg = SimConfig::default();
+        cfg.sigma_noise = 0.0;
+        cfg.sigma_drift = 5e-4;
+        let sample = VariationSample::draw(&cfg);
+        let mut dev = CimDevice::new(CimAnalogModel::from_sample(&cfg, &sample));
+        dev.program_weights(&vec![40; c::N_ROWS * c::M_COLS]);
+        for r in 0..c::N_ROWS {
+            dev.write32(regs::INPUT + 4 * r as u32, 30).unwrap();
+        }
+        dev.write32(regs::CTRL, 1).unwrap();
+        assert_eq!(dev.model.drift_age(), 1, "one MAC = one drift unit");
+        dev.write32(regs::AVG_CNT, 8).unwrap();
+        dev.write32(regs::CTRL, 2).unwrap();
+        // averaged reads age the die by their full analog busy time
+        assert_eq!(dev.model.drift_age(), 9);
+        assert_eq!(dev.model.drift_age(), dev.busy_sh_periods());
     }
 
     #[test]

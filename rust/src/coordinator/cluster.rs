@@ -131,6 +131,19 @@ pub struct ClusterCore {
     /// [`crate::coordinator::service::Job::MacBatch`] +
     /// [`TileRef`] (installed by `CimMlp::prepare_cluster`)
     pub bank: Option<TileBank>,
+    /// the die's monotonic recalibration clock: incremented by every
+    /// `MacBackend::recalibrate` and NEVER reset, so epochs stay
+    /// comparable across serve sessions and schedule generations.
+    /// `CimCluster::serve_with` seeds the board's recal epochs from it,
+    /// and `CimMlp::prepare_cluster` stamps each schedule's corrections
+    /// with it — corrections are valid exactly while their stamp is at
+    /// least the die's clock.
+    pub recal_count: u64,
+    /// worker-side refresher for the gather-side digital corrections
+    /// (installed by `CimMlp::prepare_cluster` when the schedule
+    /// carries trims/zero points): every in-service recalibration
+    /// re-measures this core's corrections on the freshly trimmed die
+    pub refresher: Option<crate::coordinator::dnn::TrimRefresher>,
 }
 
 impl ClusterCore {
@@ -161,6 +174,9 @@ impl ClusterCore {
 /// (re-fold the bank, re-program the workload weights).
 impl MacBackend for ClusterCore {
     fn forward_batch(&mut self, x: &[i32], batch: usize) -> Result<Vec<u32>, String> {
+        // served traffic is the drift clock: every MAC read ages the die
+        // (no-op on a frozen die, so the hot path stays free by default)
+        self.model.advance_drift(batch as u64);
         Ok(self.model.forward_batch(x, batch))
     }
 
@@ -170,6 +186,12 @@ impl MacBackend for ClusterCore {
         x: &[i32],
         batch: usize,
     ) -> Result<Vec<u32>, String> {
+        // tile reads age the die too; the pre-folded tile itself bakes
+        // the coefficients of the trims it was folded under, so a
+        // drifted die serves increasingly stale tile math until the next
+        // drain re-folds the bank — exactly the staleness the
+        // calibrator daemon exists to bound
+        self.model.advance_drift(batch as u64);
         let bank = self
             .bank
             .as_ref()
@@ -186,11 +208,18 @@ impl MacBackend for ClusterCore {
     fn recalibrate(&mut self, engine: &BiscEngine) -> Option<f64> {
         self.report = Some(engine.calibrate(&mut self.model));
         let residual = engine.residual_gain_error(&mut self.model);
-        // the trims changed: folded tiles bake trims in, so re-fold, then
-        // restore the workload weights characterization clobbered
+        // the trims changed: folded tiles bake trims in, so re-fold; the
+        // gather-side digital corrections bake the OLD trims too, so the
+        // refresher (when a schedule is installed) re-measures and
+        // re-publishes them at the new epoch; then restore the workload
+        // weights all that characterization clobbered
         if let Some(mut bank) = self.bank.take() {
             bank.refold(&mut self.model);
             self.bank = Some(bank);
+        }
+        self.recal_count += 1;
+        if let Some(refresher) = &self.refresher {
+            refresher.refresh(self.id, &mut self.model, self.recal_count);
         }
         self.restore_weights();
         Some(residual)
@@ -227,6 +256,8 @@ impl CimCluster {
                     report: None,
                     weights: None,
                     bank: None,
+                    recal_count: 0,
+                    refresher: None,
                 }
             })
             .collect();
@@ -333,6 +364,12 @@ impl CimCluster {
         let mut live = Vec::with_capacity(self.cores.len());
         for mut core in self.cores {
             let (tx, rx) = channel::<JobEnvelope>();
+            // the board's epoch continues the die's own recalibration
+            // clock, so correction stamps measured before this serve
+            // session stay comparable (a schedule from an earlier
+            // generation can neither pass as fresh after a new drain nor
+            // be refused while still matching the die's trims)
+            board.set_recal_epoch(core.id, core.recal_count);
             let slot = Arc::new(Mutex::new(BatcherStats::default()));
             let ctx = CoreContext {
                 core: core.id,

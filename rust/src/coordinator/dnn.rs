@@ -5,11 +5,13 @@
 //! RISC-V core's role), bias + ReLU + re-quantization between layers.
 
 use crate::analog::{consts as c, CimAnalogModel};
+use crate::config::SimConfig;
 use crate::coordinator::batcher::ServeError;
 use crate::coordinator::cluster::TileBank;
 use crate::coordinator::service::{gather, CimService, Job, SubmitOpts, Ticket, TileRef};
 use crate::data::mlp::{argmax, QuantMlp, HIDDEN};
 use crate::data::synth::{Dataset, IMG_PIXELS, NUM_CLASSES};
+use std::sync::{Arc, Mutex};
 
 /// Tile counts for mapping (rows x cols) onto the array.
 pub fn tile_counts(rows: usize, cols: usize) -> (usize, usize) {
@@ -113,6 +115,47 @@ fn correct_code(
     } else {
         (qc - mid) / gain
     }
+}
+
+/// Characterize one die at one layer's ADC window and return the
+/// per-column digital residual correction — the measurement behind
+/// [`CimMlp::measure_digital_trim`], shared with the worker-side
+/// [`TrimRefresher`] so an in-service recalibration can re-measure the
+/// gather-side corrections on the freshly trimmed die.
+fn measure_layer_trim(
+    model: &mut CimAnalogModel,
+    cfg: &SimConfig,
+    refs: (f64, f64),
+) -> LayerTrim {
+    use crate::coordinator::bisc::{AdcCharacterization, BiscEngine};
+    let half = c::V_BIAS - refs.0;
+    let v_per_x = c::volts_per_cp() * c::CODE_MAX as f64 * c::N_ROWS as f64;
+    let sweep = ((half * 0.75) / v_per_x).floor().max(2.0) as i32;
+    let mut engine = BiscEngine::from_config(cfg, AdcCharacterization::ideal());
+    engine.char_refs = Some(refs);
+    engine.sweep_max_code = sweep.min(c::CODE_MAX);
+    engine.averages = engine.averages.max(8);
+    let fits = engine.characterize_only(model);
+    LayerTrim {
+        g: fits.iter().map(|(p, n)| 0.5 * (p.g_tot + n.g_tot)).collect(),
+        eps: fits.iter().map(|(p, n)| 0.5 * (p.eps_tot + n.eps_tot)).collect(),
+    }
+}
+
+/// Per-column q at x = 0 for one layer window with `tile` programmed —
+/// the zero-point measurement shared by the single-array scheduler, the
+/// cluster preparation, and the worker-side [`TrimRefresher`]. Leaves
+/// the ADC refs at the layer window and `tile` on the array; callers
+/// restore both.
+fn measure_zero_point_at(
+    model: &mut CimAnalogModel,
+    refs: (f64, f64),
+    tile: &[i32],
+) -> Vec<f64> {
+    let zero = [0i32; c::N_ROWS];
+    model.set_adc_refs(refs.0, refs.1);
+    model.program(tile);
+    model.forward_averaged(&zero, 8)
 }
 
 /// Per-tile MAC sums (digital emulation) used for window calibration.
@@ -233,10 +276,7 @@ impl CimMlp {
     ) -> Vec<f64> {
         let tile =
             if which == 1 { &self.layer1.tiles[0][0] } else { &self.layer2.tiles[0][0] };
-        let zero = [0i32; c::N_ROWS];
-        model.set_adc_refs(refs.0, refs.1);
-        model.program(tile);
-        model.forward_averaged(&zero, 8)
+        measure_zero_point_at(model, refs, tile)
     }
 
     /// Drop all digital corrections (raw-uncalibrated ablation).
@@ -253,22 +293,10 @@ impl CimMlp {
     fn digital_trim_at(
         &self,
         model: &mut CimAnalogModel,
-        cfg: &crate::config::SimConfig,
+        cfg: &SimConfig,
         refs: (f64, f64),
     ) -> LayerTrim {
-        use crate::coordinator::bisc::{AdcCharacterization, BiscEngine};
-        let half = c::V_BIAS - refs.0;
-        let v_per_x = c::volts_per_cp() * c::CODE_MAX as f64 * c::N_ROWS as f64;
-        let sweep = ((half * 0.75) / v_per_x).floor().max(2.0) as i32;
-        let mut engine = BiscEngine::from_config(cfg, AdcCharacterization::ideal());
-        engine.char_refs = Some(refs);
-        engine.sweep_max_code = sweep.min(c::CODE_MAX);
-        engine.averages = engine.averages.max(8);
-        let fits = engine.characterize_only(model);
-        LayerTrim {
-            g: fits.iter().map(|(p, n)| 0.5 * (p.g_tot + n.g_tot)).collect(),
-            eps: fits.iter().map(|(p, n)| 0.5 * (p.eps_tot + n.eps_tot)).collect(),
-        }
+        measure_layer_trim(model, cfg, refs)
     }
 
     /// Measure the digital residual trims on a (typically BISC-calibrated)
@@ -483,6 +511,35 @@ pub struct PreparedMlp {
     tiles2: Vec<Vec<crate::analog::Folded>>,
 }
 
+/// One core's gather-side digital corrections plus the recalibration
+/// epoch they were measured at. `epoch` pairs with
+/// [`crate::coordinator::service::CoreBoard::recal_epoch`]: corrections
+/// are valid while their epoch is at least the board's (the worker
+/// publishes refreshed corrections BEFORE the board observes the new
+/// epoch, so "ahead of the board" always means "at least as fresh").
+#[derive(Debug, Clone, Default)]
+pub struct CoreCorrections {
+    pub trim1: Option<LayerTrim>,
+    pub trim2: Option<LayerTrim>,
+    pub zp1: Option<Vec<f64>>,
+    pub zp2: Option<Vec<f64>>,
+    /// recalibration epoch these corrections were measured at
+    pub epoch: u64,
+}
+
+impl CoreCorrections {
+    /// Whether this core carries any correction that could go stale.
+    pub fn has_any(&self) -> bool {
+        self.trim1.is_some() || self.trim2.is_some() || self.zp1.is_some() || self.zp2.is_some()
+    }
+}
+
+/// Shared per-core correction slots: read by the gather side of
+/// [`CimMlp::infer_batch_service`], written by [`CimMlp::prepare_cluster`]
+/// and — after every in-service recalibration — by the worker-side
+/// [`TrimRefresher`].
+pub type SharedCorrections = Arc<Vec<Mutex<CoreCorrections>>>;
+
 /// Per-cluster digital correction schedule: every core's per-layer
 /// residual trims and zero points (each core is a distinct die, so both
 /// are per-core). The pre-folded tiles themselves live ON the cores as
@@ -491,21 +548,77 @@ pub struct PreparedMlp {
 /// gather-side (RISC-V) correction state.
 ///
 /// An in-service recalibration ([`Job::Drain`]) re-folds the core's tile
-/// bank but cannot update the trims held here; corrections are measured
-/// at recalibration epoch 0, so [`CimMlp::infer_batch_service`] REFUSES
-/// to apply them once the board reports the core recalibrated (typed
-/// error instead of silently-wrong logits) — re-run `prepare_cluster`
-/// after draining cores when trims are in use.
+/// bank AND — through the [`TrimRefresher`] `prepare_cluster` installs
+/// on every core — re-measures that core's corrections on the freshly
+/// trimmed die, publishing them here at the new epoch. The DNN path
+/// therefore keeps serving across autonomous drains without ever
+/// applying stale trims; [`CimMlp::infer_batch_service`] still refuses
+/// (typed error, never silently-wrong logits) if a core's corrections
+/// lag its recal epoch or a recalibration lands mid-inference.
 pub struct ClusterSchedule {
-    trims: Vec<(Option<LayerTrim>, Option<LayerTrim>)>,
-    /// per-core zero points (measured when the CimMlp itself carries a
-    /// zero-point correction, mirroring the single-array bring-up rung)
-    zps: Vec<(Option<Vec<f64>>, Option<Vec<f64>>)>,
+    corrections: SharedCorrections,
 }
 
 impl ClusterSchedule {
     pub fn cores(&self) -> usize {
-        self.trims.len()
+        self.corrections.len()
+    }
+
+    /// Snapshot one core's current corrections (operator tooling/tests).
+    pub fn core_corrections(&self, core: usize) -> CoreCorrections {
+        self.corrections[core].lock().unwrap().clone()
+    }
+}
+
+/// Worker-side refresher for one core's gather-side digital corrections,
+/// installed by [`CimMlp::prepare_cluster`] on every
+/// [`crate::coordinator::cluster::ClusterCore`] whose schedule carries
+/// corrections. After an in-service `Drain` recalibrates the die (new
+/// analog trims => the old digital residual corrections are wrong), the
+/// worker calls [`TrimRefresher::refresh`] to re-measure them against
+/// the new trims and publish them into the shared schedule at the new
+/// epoch — the serving-side half of "refresh gather-side digital trims
+/// after an in-service drain".
+#[derive(Clone)]
+pub struct TrimRefresher {
+    /// `Some` => re-measure the per-layer residual trims with this config
+    cfg: Option<SimConfig>,
+    refs1: (f64, f64),
+    refs2: (f64, f64),
+    /// `Some` => re-measure the per-layer zero points on these tiles
+    zp_tiles: Option<(Vec<i32>, Vec<i32>)>,
+    corrections: SharedCorrections,
+}
+
+impl TrimRefresher {
+    /// Re-measure this core's corrections on the (just recalibrated)
+    /// die and publish them at `epoch`. Leaves characterization/tile
+    /// weights on the array — the caller restores the workload weights,
+    /// exactly like the other lifecycle steps.
+    pub fn refresh(&self, core: usize, model: &mut CimAnalogModel, epoch: u64) {
+        let trims = self.cfg.as_ref().map(|cfg| {
+            (
+                measure_layer_trim(model, cfg, self.refs1),
+                measure_layer_trim(model, cfg, self.refs2),
+            )
+        });
+        let zps = self.zp_tiles.as_ref().map(|(t1, t2)| {
+            (
+                measure_zero_point_at(model, self.refs1, t1),
+                measure_zero_point_at(model, self.refs2, t2),
+            )
+        });
+        model.set_adc_refs(c::V_ADC_L, c::V_ADC_H);
+        let mut slot = self.corrections[core].lock().unwrap();
+        if let Some((t1, t2)) = trims {
+            slot.trim1 = Some(t1);
+            slot.trim2 = Some(t2);
+        }
+        if let Some((z1, z2)) = zps {
+            slot.zp1 = Some(z1);
+            slot.zp2 = Some(z2);
+        }
+        slot.epoch = epoch;
     }
 }
 
@@ -516,6 +629,17 @@ impl CimMlp {
     /// per-core digital residual trims first (pass the config to
     /// enable). Tile jobs are then served through the cluster's
     /// `submit` path by [`CimMlp::infer_batch_service`].
+    ///
+    /// When the schedule carries corrections (trims and/or zero points),
+    /// every core also gets a [`TrimRefresher`] so in-service drains
+    /// re-measure its corrections on the recalibrated die — the DNN
+    /// path keeps serving across autonomous recalibrations. Corrections
+    /// are stamped with each die's monotonic recalibration clock
+    /// (`ClusterCore::recal_count`, which `serve_with` seeds the board
+    /// epochs from), so schedules from different generations stay
+    /// comparable: an older schedule is accepted exactly while the die's
+    /// trims still match it, and refused once a later recalibration
+    /// outruns it.
     pub fn prepare_cluster(
         &self,
         cluster: &mut crate::coordinator::cluster::CimCluster,
@@ -573,19 +697,53 @@ impl CimMlp {
                 .collect()
         });
         results.sort_by_key(|r| r.0);
-        let mut trims = Vec::with_capacity(results.len());
-        let mut zps = Vec::with_capacity(results.len());
-        for (_, t, z) in results {
-            match t {
-                Some((t1, t2)) => trims.push((Some(t1), Some(t2))),
-                None => trims.push((None, None)),
-            }
-            match z {
-                Some((z1, z2)) => zps.push((Some(z1), Some(z2))),
-                None => zps.push((None, None)),
-            }
+        // corrections were measured NOW, against the die's current
+        // trims: stamp each with the die's recalibration clock
+        // (`ClusterCore::recal_count`, which the serving board's epochs
+        // continue), so a schedule from an older generation can never
+        // pass as fresh once the die recalibrates again
+        let corrections: SharedCorrections = Arc::new(
+            results
+                .into_iter()
+                .zip(&cluster.cores)
+                .map(|((_, t, z), core)| {
+                    let (trim1, trim2) = match t {
+                        Some((t1, t2)) => (Some(t1), Some(t2)),
+                        None => (None, None),
+                    };
+                    let (zp1, zp2) = match z {
+                        Some((z1, z2)) => (Some(z1), Some(z2)),
+                        None => (None, None),
+                    };
+                    Mutex::new(CoreCorrections {
+                        trim1,
+                        trim2,
+                        zp1,
+                        zp2,
+                        epoch: core.recal_count,
+                    })
+                })
+                .collect(),
+        );
+        // arm the worker-side refresher so in-service drains re-measure
+        // THIS schedule's corrections instead of invalidating them; a
+        // later prepare_cluster replaces the refresher, after which this
+        // schedule goes stale on the next drain (refused typed, §10)
+        let has_corrections =
+            corrections.iter().any(|slot| slot.lock().unwrap().has_any());
+        let refresher = has_corrections.then(|| TrimRefresher {
+            cfg: cfg.cloned(),
+            refs1: self.refs1,
+            refs2: self.refs2,
+            zp_tiles: want_zp.then(|| {
+                (self.layer1.tiles[0][0].clone(), self.layer2.tiles[0][0].clone())
+            }),
+            corrections: Arc::clone(&corrections),
+        });
+        for core in cluster.cores.iter_mut() {
+            core.refresher = refresher.clone();
         }
-        ClusterSchedule { trims, zps }
+        ClusterSchedule { corrections }
     }
 
     /// One layer through the serving engine: each tile becomes one
@@ -656,11 +814,18 @@ impl CimMlp {
         }
         stats.mac_ops += (rt * ct * xs.len()) as u64;
         let gathered = gather(tickets)?;
+        // snapshot every core's corrections ONCE per layer (each lock is
+        // held only for the clone, so a worker-side refresh never blocks
+        // behind the gather, and the per-tile loop below stays lock-free)
+        let cors: Vec<CoreCorrections> = (0..sched.cores())
+            .map(|core| sched.corrections[core].lock().unwrap().clone())
+            .collect();
         let mut out = vec![vec![0f32; layer.cols]; xs.len()];
         for (ti, (core, qs)) in gathered.into_iter().enumerate() {
             let tc = ti % ct;
-            let trim = if which == 1 { &sched.trims[core].0 } else { &sched.trims[core].1 };
-            let zp = if which == 1 { &sched.zps[core].0 } else { &sched.zps[core].1 };
+            let cor = &cors[core];
+            let (trim, zp) =
+                if which == 1 { (&cor.trim1, &cor.zp1) } else { (&cor.trim2, &cor.zp2) };
             for (i, q) in qs.iter().enumerate() {
                 for (col, &qraw) in q.iter().enumerate() {
                     let gcol = tc * c::M_COLS + col;
@@ -694,26 +859,33 @@ impl CimMlp {
         }
         // refuse stale per-core corrections: a core recalibrated in
         // service (Drain) no longer matches trims/zero-points measured
-        // before serving — surface a typed error instead of silently
-        // applying the wrong correction. Checked on entry AND after the
-        // gather (a drain completing mid-inference is caught too, since
-        // correction-carrying schedules are always measured at epoch 0).
-        let check_fresh = || -> Result<(), ServeError> {
-            for core in 0..sched.cores() {
-                let has_correction = sched.trims[core].0.is_some()
-                    || sched.trims[core].1.is_some()
-                    || sched.zps[core].0.is_some()
-                    || sched.zps[core].1.is_some();
-                if has_correction && svc.board().recal_epoch(core) > 0 {
-                    return Err(ServeError::Backend(format!(
-                        "stale schedule: core {core} was recalibrated in service; \
-                         re-run prepare_cluster to re-measure its corrections"
-                    )));
-                }
+        // against its OLD analog trims — surface a typed error instead
+        // of silently applying the wrong correction. With the
+        // `TrimRefresher` installed by `prepare_cluster`, the worker
+        // re-measures and re-publishes corrections as part of every
+        // drain, so the epochs stay aligned and serving continues
+        // across autonomous recalibrations; a schedule can only go
+        // stale when corrections lag the board (no refresher) or a
+        // recalibration lands MID-inference — caught after the layers
+        // run by comparing BOTH the board epochs and the corrections'
+        // own stamps against entry (the refresher publishes before the
+        // board observes the bump, so watching the board alone would
+        // miss a drain landing inside that window).
+        let entry_board: Vec<u64> =
+            (0..sched.cores()).map(|core| svc.board().recal_epoch(core)).collect();
+        let mut entry_cor: Vec<(bool, u64)> = Vec::with_capacity(sched.cores());
+        for (core, &epoch) in entry_board.iter().enumerate() {
+            let cor = sched.corrections[core].lock().unwrap();
+            if cor.has_any() && cor.epoch < epoch {
+                return Err(ServeError::Backend(format!(
+                    "stale schedule: core {core} corrections were measured at recal \
+                     epoch {} but the core is at epoch {epoch}; re-run prepare_cluster \
+                     (or serve a refresher-armed schedule) to re-measure them",
+                    cor.epoch
+                )));
             }
-            Ok(())
-        };
-        check_fresh()?;
+            entry_cor.push((cor.has_any(), cor.epoch));
+        }
         let xs: Vec<Vec<i32>> =
             imgs.iter().map(|im| self.quant.quantize_input(im)).collect();
         let h_cp = self.layer_forward_service(svc, sched, &self.layer1, 1, &xs, stats)?;
@@ -732,7 +904,18 @@ impl CimMlp {
             .collect();
         let logits_cp =
             self.layer_forward_service(svc, sched, &self.layer2, 2, &h_codes, stats)?;
-        check_fresh()?;
+        for (core, &epoch) in entry_board.iter().enumerate() {
+            let (had_corrections, cor_epoch) = entry_cor[core];
+            let cor = sched.corrections[core].lock().unwrap();
+            let changed =
+                svc.board().recal_epoch(core) != epoch || cor.epoch != cor_epoch;
+            if changed && (had_corrections || cor.has_any()) {
+                return Err(ServeError::Backend(format!(
+                    "core {core} was recalibrated mid-inference; its tiles mixed pre- \
+                     and post-recalibration corrections — retry the batch"
+                )));
+            }
+        }
         Ok(logits_cp
             .into_iter()
             .map(|l| l.iter().zip(&self.quant.b2_cp).map(|(&v, &b)| v + b).collect())

@@ -1,8 +1,9 @@
 //! L3 coordinator: the CIM device register file, the BISC calibration
 //! engine, compute-SNR evaluation, the DNN tile scheduler, the batching
-//! request loop, the multi-core sharded serving cluster, and the TCP
-//! wire front-end over it (paper Sections III, VI, VII + the multi-array
-//! scaling direction).
+//! request loop, the multi-core sharded serving cluster, the TCP wire
+//! front-end over it, and the autonomous recalibration daemon that
+//! closes the paper's self-calibration loop under drift (paper Sections
+//! III, VI, VII + the multi-array scaling direction).
 
 pub mod bisc;
 pub mod cim_core;
@@ -12,3 +13,4 @@ pub mod batcher;
 pub mod service;
 pub mod cluster;
 pub mod wire;
+pub mod calibrator;

@@ -154,6 +154,11 @@ pub struct CoreHealth {
     pub fenced: bool,
     /// Whether a recalibration actually ran (`Drain` with an engine).
     pub recalibrated: bool,
+    /// The server-observed recalibration epoch ([`CoreBoard::recal_epoch`])
+    /// AFTER this probe. Carrying it in every lifecycle reply lets a
+    /// remote mirror catch up on drains it never requested — e.g. the
+    /// calibrator daemon recalibrating a core behind a client's back.
+    pub recal_epoch: u64,
 }
 
 /// The typed reply to one [`Job`].
@@ -374,9 +379,10 @@ impl CoreBoard {
     }
 
     /// Number of in-service recalibrations (`Drain`) this core has
-    /// completed since serving started. Gather-side schedules that
-    /// carry per-core digital corrections were measured at epoch 0 —
-    /// a non-zero epoch means those corrections are stale.
+    /// completed since serving started. Gather-side schedules carry the
+    /// epoch their per-core digital corrections were measured at
+    /// (`CoreCorrections::epoch` in the DNN scheduler) — corrections
+    /// lagging this value are stale.
     pub fn recal_epoch(&self, core: usize) -> u64 {
         self.recal_epoch[core].load(Ordering::Relaxed)
     }
@@ -384,6 +390,12 @@ impl CoreBoard {
     /// Record a completed in-service recalibration (worker side).
     pub fn bump_recal_epoch(&self, core: usize) {
         self.recal_epoch[core].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Catch a mirror board up to a server-observed epoch (monotonic:
+    /// an older reply arriving late can never roll the epoch back).
+    pub fn set_recal_epoch(&self, core: usize, epoch: u64) {
+        self.recal_epoch[core].fetch_max(epoch, Ordering::Relaxed);
     }
 }
 

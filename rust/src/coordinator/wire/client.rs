@@ -11,13 +11,16 @@
 //! [`Ticket`]'s serving core is exact at submit time (the DNN gather path
 //! picks per-core trims by it), the depth gauges see this client's own
 //! in-flight load, and `drain`'s fence takes effect before the drain job
-//! is on the wire. The mirror's fence and epoch state synchronize from
-//! `Health`/`Drain` replies: a lifecycle probe through THIS client
-//! updates it; probes by other clients are visible only after a local
-//! probe observes them (send `health` first when fence freshness
+//! is on the wire. The mirror's fence state synchronizes from
+//! `Health`/`Drain` replies observed by THIS client; the recalibration
+//! epoch rides in every such reply as the SERVER-observed value, so even
+//! drains this client never requested — another client's, or the
+//! calibrator daemon's autonomous ones — catch the mirror up on the
+//! next local lifecycle probe (send `health` first when freshness
 //! matters).
 
 use crate::coordinator::batcher::{BatcherStats, ServeError};
+use crate::coordinator::calibrator::CoreCalStats;
 use crate::coordinator::service::{
     place, CimService, CoreBoard, Job, JobReply, Placement, SubmitOpts, Ticket,
 };
@@ -45,6 +48,7 @@ struct Shared {
     board: Arc<CoreBoard>,
     pending: Mutex<HashMap<u64, PendingJob>>,
     pending_stats: Mutex<HashMap<u64, Sender<Vec<BatcherStats>>>>,
+    pending_cal: Mutex<HashMap<u64, Sender<Vec<CoreCalStats>>>>,
     /// Per-core count of this client's in-flight `Drain` jobs. While one
     /// is pending, a concurrently measured `fenced: false` Health reply
     /// is stale — honoring it would unfence the mirror out from under
@@ -107,6 +111,7 @@ impl RemoteClient {
             board: Arc::new(CoreBoard::new(cores)),
             pending: Mutex::new(HashMap::new()),
             pending_stats: Mutex::new(HashMap::new()),
+            pending_cal: Mutex::new(HashMap::new()),
             drains: (0..cores).map(|_| AtomicUsize::new(0)).collect(),
             alive: AtomicBool::new(true),
         });
@@ -143,6 +148,27 @@ impl RemoteClient {
         // recv below can never block on a sender nobody will ever use
         if !sent || !sh.alive.load(Ordering::SeqCst) {
             sh.pending_stats.lock().unwrap().remove(&id);
+            return Err(ServeError::Disconnected);
+        }
+        rx.recv().map_err(|_| ServeError::Disconnected)
+    }
+
+    /// Fetch the server-side calibrator daemon's per-core statistics.
+    /// An empty vec means the server runs without `--auto-calibrate`.
+    pub fn calibrator_stats(&self) -> Result<Vec<CoreCalStats>, ServeError> {
+        let sh = &self.inner.shared;
+        if !sh.alive.load(Ordering::SeqCst) {
+            return Err(ServeError::Disconnected);
+        }
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        sh.pending_cal.lock().unwrap().insert(id, tx);
+        let sent = write_frame(&mut *self.inner.write.lock().unwrap(), &Frame::CalStatsReq { id })
+            .is_ok();
+        // same post-insert re-check as remote_stats: never block on a
+        // sender the disconnected reader will never use
+        if !sent || !sh.alive.load(Ordering::SeqCst) {
+            sh.pending_cal.lock().unwrap().remove(&id);
             return Err(ServeError::Disconnected);
         }
         rx.recv().map_err(|_| ServeError::Disconnected)
@@ -234,9 +260,12 @@ fn reader_loop(mut stream: TcpStream, sh: Arc<Shared>) {
                     // the ticket, so a drain()'s caller observes the
                     // rejoined core immediately
                     if h.core < sh.board.cores() {
-                        if h.recalibrated {
-                            sh.board.bump_recal_epoch(h.core);
-                        }
+                        // the SERVER-observed epoch, not a local bump:
+                        // drains this client never requested (another
+                        // client's, or the calibrator daemon's) surface
+                        // in every Health reply, so the mirror cannot go
+                        // silently stale behind autonomous recalibrations
+                        sh.board.set_recal_epoch(h.core, h.recal_epoch);
                         if h.fenced {
                             sh.board.fence(h.core);
                         } else if sh.drains[h.core].load(Ordering::SeqCst) == 0 {
@@ -254,6 +283,11 @@ fn reader_loop(mut stream: TcpStream, sh: Arc<Shared>) {
                     let _ = tx.send(stats);
                 }
             }
+            Ok(Frame::CalStatsReply { id, stats }) => {
+                if let Some(tx) = sh.pending_cal.lock().unwrap().remove(&id) {
+                    let _ = tx.send(stats);
+                }
+            }
             // the server must not send anything else after Hello
             Ok(_) => break,
             Err(_) => break,
@@ -266,4 +300,5 @@ fn reader_loop(mut stream: TcpStream, sh: Arc<Shared>) {
     }
     drop(pending);
     sh.pending_stats.lock().unwrap().clear();
+    sh.pending_cal.lock().unwrap().clear();
 }

@@ -20,6 +20,7 @@
 //! an attacker-chosen length prefix.
 
 use crate::coordinator::batcher::{BatcherStats, ServeError};
+use crate::coordinator::calibrator::CoreCalStats;
 use crate::coordinator::service::{CoreHealth, Job, JobReply, Placement, SubmitOpts, TileRef};
 use std::io::{Read, Write};
 use std::time::Duration;
@@ -29,7 +30,9 @@ pub const WIRE_MAGIC: u16 = 0xAC1E;
 /// Protocol version this build speaks. Decoders reject every other value
 /// ([`WireError::BadVersion`]): the protocol is versioned as a whole, not
 /// per frame — see DESIGN.md §9 for the compatibility rules.
-pub const WIRE_VERSION: u8 = 1;
+/// Version history: 1 = initial frame set; 2 = `CoreHealth` carries the
+/// server-observed recalibration epoch + the `CalStats` frame pair.
+pub const WIRE_VERSION: u8 = 2;
 /// Frame body cap: a length prefix beyond this is rejected before any
 /// allocation ([`WireError::Oversized`]).
 pub const MAX_BODY: u32 = 1 << 26;
@@ -41,6 +44,8 @@ const TAG_SUBMIT: u8 = 2;
 const TAG_REPLY: u8 = 3;
 const TAG_STATS_REQ: u8 = 4;
 const TAG_STATS_REPLY: u8 = 5;
+const TAG_CALSTATS_REQ: u8 = 6;
+const TAG_CALSTATS_REPLY: u8 = 7;
 
 /// Decode-side failures. `Closed` is the one non-error: a connection that
 /// ends exactly on a frame boundary.
@@ -90,7 +95,9 @@ impl std::error::Error for WireError {}
 /// client); `Submit` carries a job + options under a client-chosen
 /// request id; `Reply` echoes that id with the serving core and the
 /// job's result; `StatsReq`/`StatsReply` fetch the per-core live
-/// [`BatcherStats`] snapshots.
+/// [`BatcherStats`] snapshots; `CalStatsReq`/`CalStatsReply` fetch the
+/// calibrator daemon's per-core [`CoreCalStats`] (empty when the server
+/// runs without `--auto-calibrate`).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Frame {
     Hello { cores: u32 },
@@ -98,6 +105,8 @@ pub enum Frame {
     Reply { id: u64, core: u32, result: Result<JobReply, ServeError> },
     StatsReq { id: u64 },
     StatsReply { id: u64, stats: Vec<BatcherStats> },
+    CalStatsReq { id: u64 },
+    CalStatsReply { id: u64, stats: Vec<CoreCalStats> },
 }
 
 // ---- encoder ------------------------------------------------------------
@@ -393,6 +402,7 @@ fn put_health(e: &mut Enc, h: &CoreHealth) {
     }
     e.bool(h.fenced);
     e.bool(h.recalibrated);
+    e.u64(h.recal_epoch);
 }
 
 fn take_health(d: &mut Dec) -> Result<CoreHealth, WireError> {
@@ -402,7 +412,13 @@ fn take_health(d: &mut Dec) -> Result<CoreHealth, WireError> {
         1 => Some(d.f64()?),
         t => return Err(WireError::BadPayload(format!("bad residual option tag {t}"))),
     };
-    Ok(CoreHealth { core, residual, fenced: d.bool()?, recalibrated: d.bool()? })
+    Ok(CoreHealth {
+        core,
+        residual,
+        fenced: d.bool()?,
+        recalibrated: d.bool()?,
+        recal_epoch: d.u64()?,
+    })
 }
 
 fn put_reply(e: &mut Enc, reply: &JobReply) {
@@ -480,6 +496,46 @@ fn take_stats(d: &mut Dec) -> Result<BatcherStats, WireError> {
     })
 }
 
+/// Minimum encoded size of one [`CoreCalStats`] (trend `None`): the
+/// element-size bound `CalStatsReply`'s length prefix is checked against.
+const CALSTATS_MIN_LEN: usize = 50;
+
+fn put_calstats(e: &mut Enc, s: &CoreCalStats) {
+    e.u64(s.samples);
+    match s.trend {
+        None => e.u8(0),
+        Some(t) => {
+            e.u8(1);
+            e.f64(t);
+        }
+    }
+    e.u64(s.last_recal_epoch);
+    e.u64(s.trend_triggers);
+    e.u64(s.staleness_triggers);
+    e.u64(s.drains);
+    e.u64(s.drain_failures);
+    e.bool(s.fenced);
+}
+
+fn take_calstats(d: &mut Dec) -> Result<CoreCalStats, WireError> {
+    let samples = d.u64()?;
+    let trend = match d.u8()? {
+        0 => None,
+        1 => Some(d.f64()?),
+        t => return Err(WireError::BadPayload(format!("bad trend option tag {t}"))),
+    };
+    Ok(CoreCalStats {
+        samples,
+        trend,
+        last_recal_epoch: d.u64()?,
+        trend_triggers: d.u64()?,
+        staleness_triggers: d.u64()?,
+        drains: d.u64()?,
+        drain_failures: d.u64()?,
+        fenced: d.bool()?,
+    })
+}
+
 // ---- frame assembly -----------------------------------------------------
 
 /// Encode one frame (header + body) into a fresh byte vector.
@@ -507,6 +563,14 @@ pub fn encode_frame(frame: &Frame) -> Vec<u8> {
                 put_stats(&mut body, s);
             }
             (TAG_STATS_REPLY, *id)
+        }
+        Frame::CalStatsReq { id } => (TAG_CALSTATS_REQ, *id),
+        Frame::CalStatsReply { id, stats } => {
+            body.u32(stats.len() as u32);
+            for s in stats {
+                put_calstats(&mut body, s);
+            }
+            (TAG_CALSTATS_REPLY, *id)
         }
     };
     let mut out = Vec::with_capacity(HEADER_LEN + body.b.len());
@@ -541,6 +605,15 @@ fn decode_body(tag: u8, id: u64, body: &[u8]) -> Result<Frame, WireError> {
                 stats.push(take_stats(&mut d)?);
             }
             Frame::StatsReply { id, stats }
+        }
+        TAG_CALSTATS_REQ => Frame::CalStatsReq { id },
+        TAG_CALSTATS_REPLY => {
+            let n = d.len_prefix(CALSTATS_MIN_LEN)?;
+            let mut stats = Vec::with_capacity(n);
+            for _ in 0..n {
+                stats.push(take_calstats(&mut d)?);
+            }
+            Frame::CalStatsReply { id, stats }
         }
         t => return Err(WireError::UnknownTag(t)),
     };
@@ -641,6 +714,7 @@ mod tests {
                 residual: Some(0.0123),
                 fenced: true,
                 recalibrated: false,
+                recal_epoch: 3,
             })),
         });
         roundtrip(Frame::Reply {
@@ -659,6 +733,23 @@ mod tests {
                 expired: 3,
             }],
         });
+        roundtrip(Frame::CalStatsReq { id: 15 });
+        roundtrip(Frame::CalStatsReply {
+            id: 16,
+            stats: vec![
+                CoreCalStats {
+                    samples: 12,
+                    trend: Some(0.042),
+                    last_recal_epoch: 2,
+                    trend_triggers: 1,
+                    staleness_triggers: 0,
+                    drains: 1,
+                    drain_failures: 0,
+                    fenced: false,
+                },
+                CoreCalStats::default(),
+            ],
+        });
     }
 
     #[test]
@@ -674,5 +765,6 @@ mod tests {
             opts: SubmitOpts::default(),
         });
         roundtrip(Frame::StatsReply { id: 3, stats: Vec::new() });
+        roundtrip(Frame::CalStatsReply { id: 4, stats: Vec::new() });
     }
 }

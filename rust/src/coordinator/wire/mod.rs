@@ -10,7 +10,9 @@
 //!   decoding (`WireError`, never a panic);
 //! * [`server`] — [`WireServer`], the threaded TCP acceptor over a
 //!   running cluster's `ServiceClient`, streaming replies in completion
-//!   order with request-id correlation;
+//!   order with request-id correlation; optionally serves the
+//!   calibrator daemon's live statistics as `CalStats` frames
+//!   ([`WireServer::with_calibrator`]);
 //! * [`client`] — [`RemoteClient`], the full
 //!   [`crate::coordinator::service::CimService`] trait over one socket:
 //!   DNN serving, pipelined benches, and lifecycle (drain/health) jobs

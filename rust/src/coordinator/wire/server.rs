@@ -20,6 +20,7 @@
 //! [`ReplySink::Routed`]: crate::coordinator::service::ReplySink
 
 use crate::coordinator::batcher::{BatcherStats, ServeError};
+use crate::coordinator::calibrator::CalibratorShared;
 use crate::coordinator::service::{CimService, Job, Placement, RoutedReply, ServiceClient};
 use crate::coordinator::wire::codec::{read_frame, write_frame, Frame};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
@@ -45,6 +46,9 @@ pub struct WireServer {
     listener: TcpListener,
     svc: ServiceClient,
     live: Vec<Arc<Mutex<BatcherStats>>>,
+    /// calibrator-daemon statistics answering `CalStats` frames; `None`
+    /// (serving without `--auto-calibrate`) answers with an empty vec
+    cal: Option<Arc<CalibratorShared>>,
     stop: Arc<AtomicBool>,
     conns: ConnRegistry,
     next_conn: AtomicU64,
@@ -66,10 +70,19 @@ impl WireServer {
             listener,
             svc,
             live,
+            cal: None,
             stop: Arc::new(AtomicBool::new(false)),
             conns: Arc::new(Mutex::new(Vec::new())),
             next_conn: AtomicU64::new(0),
         })
+    }
+
+    /// Serve the calibrator daemon's live statistics as `CalStats`
+    /// frames (`client --op calstats`). Without this, `CalStatsReq` is
+    /// answered with an empty list.
+    pub fn with_calibrator(mut self, shared: Arc<CalibratorShared>) -> Self {
+        self.cal = Some(shared);
+        self
     }
 
     /// The bound address (port 0 resolves to an ephemeral port).
@@ -105,9 +118,10 @@ impl WireServer {
                     self.conns.lock().unwrap().push((cid, clone));
                     let svc = self.svc.clone();
                     let live = self.live.clone();
+                    let cal = self.cal.clone();
                     let conns = Arc::clone(&self.conns);
                     handlers.push(std::thread::spawn(move || {
-                        handle_connection(stream, svc, live);
+                        handle_connection(stream, svc, live, cal);
                         conns.lock().unwrap().retain(|(id, _)| *id != cid);
                     }));
                 }
@@ -135,6 +149,7 @@ fn handle_connection(
     stream: TcpStream,
     svc: ServiceClient,
     live: Vec<Arc<Mutex<BatcherStats>>>,
+    cal: Option<Arc<CalibratorShared>>,
 ) {
     // the listener is non-blocking (its accept loop polls the stop flag)
     // and some platforms let accepted sockets inherit that — this
@@ -198,6 +213,17 @@ fn handle_connection(
                     live.iter().map(|s| *s.lock().unwrap()).collect();
                 if write_frame(&mut *write.lock().unwrap(), &Frame::StatsReply { id, stats })
                     .is_err()
+                {
+                    break;
+                }
+            }
+            Ok(Frame::CalStatsReq { id }) => {
+                let stats = cal.as_ref().map(|c| c.snapshot()).unwrap_or_default();
+                if write_frame(
+                    &mut *write.lock().unwrap(),
+                    &Frame::CalStatsReply { id, stats },
+                )
+                .is_err()
                 {
                     break;
                 }

@@ -38,6 +38,64 @@ impl BenchResult {
     }
 }
 
+impl BenchResult {
+    /// One JSON object for the CI bench-artifact trajectory
+    /// (`BENCH_*.json`, uploaded by the bench-smoke workflow job).
+    pub fn json(&self) -> String {
+        format!(
+            "{{\"name\": {}, \"iters\": {}, \"median_ns\": {:.1}, \"p10_ns\": {:.1}, \
+             \"p90_ns\": {:.1}, \"mean_ns\": {:.1}, \"per_sec\": {:.3}}}",
+            json_str(&self.name),
+            self.iters,
+            self.median_ns,
+            self.p10_ns,
+            self.p90_ns,
+            self.mean_ns,
+            self.per_sec()
+        )
+    }
+}
+
+/// Minimal JSON string escaping (bench names are plain ASCII, but a
+/// stray quote must not corrupt the artifact).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Write `BENCH_<bench>.json` into `$ACORE_BENCH_JSON_DIR` (created if
+/// missing). A no-op returning `None` when the variable is unset — local
+/// bench runs stay file-free; CI sets it and uploads the directory as a
+/// workflow artifact, seeding the bench trajectory.
+pub fn write_bench_json(bench: &str, body: &str) -> Option<std::path::PathBuf> {
+    let dir = std::env::var("ACORE_BENCH_JSON_DIR").ok()?;
+    if let Err(e) = std::fs::create_dir_all(&dir) {
+        eprintln!("bench json: cannot create {dir}: {e}");
+        return None;
+    }
+    let path = std::path::Path::new(&dir).join(format!("BENCH_{bench}.json"));
+    match std::fs::write(&path, body) {
+        Ok(()) => {
+            println!("bench json: wrote {}", path.display());
+            Some(path)
+        }
+        Err(e) => {
+            eprintln!("bench json: cannot write {}: {e}", path.display());
+            None
+        }
+    }
+}
+
 pub fn fmt_ns(ns: f64) -> String {
     if ns >= 1e9 {
         format!("{:.3} s", ns / 1e9)
@@ -105,6 +163,38 @@ impl Bencher {
         self.results.last().unwrap()
     }
 
+    /// Record an externally measured rate (the serving benches compute
+    /// req/s over their own wall clock) so it rides along in the JSON
+    /// export; stored as its per-event period. Non-positive or
+    /// non-finite rates are dropped.
+    pub fn note_rate(&mut self, name: &str, per_sec: f64) {
+        if !per_sec.is_finite() || per_sec <= 0.0 {
+            return;
+        }
+        let ns = 1e9 / per_sec;
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            iters: 1,
+            median_ns: ns,
+            p10_ns: ns,
+            p90_ns: ns,
+            mean_ns: ns,
+        });
+    }
+
+    /// Export every recorded result as `BENCH_<bench>.json` (see
+    /// [`write_bench_json`]; no-op without `ACORE_BENCH_JSON_DIR`).
+    pub fn export_json(&self, bench: &str) {
+        let rows: Vec<String> =
+            self.results.iter().map(|r| format!("    {}", r.json())).collect();
+        let body = format!(
+            "{{\n  \"bench\": {},\n  \"results\": [\n{}\n  ]\n}}\n",
+            json_str(bench),
+            rows.join(",\n")
+        );
+        write_bench_json(bench, &body);
+    }
+
     /// Fixed iteration count variant for expensive bodies.
     pub fn bench_n<T, F: FnMut() -> T>(&mut self, name: &str, n: u64, mut f: F) -> &BenchResult {
         let mut samples_ns = Vec::with_capacity(n as usize);
@@ -148,5 +238,35 @@ mod tests {
         });
         assert!(r.median_ns > 0.0);
         assert!(r.iters > 10);
+    }
+
+    #[test]
+    fn bench_json_is_parseable_and_escaped() {
+        let r = BenchResult {
+            name: "weird \"name\" \\ here".to_string(),
+            iters: 3,
+            median_ns: 10.0,
+            p10_ns: 9.0,
+            p90_ns: 11.0,
+            mean_ns: 10.0,
+        };
+        let j = r.json();
+        let parsed = crate::util::json::parse(&j).expect("bench json must parse");
+        assert_eq!(parsed.get("iters").and_then(|v| v.as_f64()), Some(3.0));
+        assert_eq!(
+            parsed.get("name").and_then(|v| v.as_str()),
+            Some("weird \"name\" \\ here")
+        );
+        assert_eq!(parsed.get("per_sec").and_then(|v| v.as_f64()), Some(1e9 / 10.0));
+    }
+
+    #[test]
+    fn note_rate_drops_degenerate_rates() {
+        let mut b = Bencher::new();
+        b.note_rate("ok", 1e6);
+        b.note_rate("zero", 0.0);
+        b.note_rate("nan", f64::NAN);
+        assert_eq!(b.results.len(), 1);
+        assert!((b.results[0].median_ns - 1e3).abs() < 1e-9);
     }
 }

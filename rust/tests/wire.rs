@@ -9,6 +9,7 @@ use acore_cim::analog::{consts as c, CimAnalogModel};
 use acore_cim::config::SimConfig;
 use acore_cim::coordinator::batcher::{Batcher, BatcherStats, ServeError};
 use acore_cim::coordinator::bisc::{AdcCharacterization, BiscEngine};
+use acore_cim::coordinator::calibrator::CoreCalStats;
 use acore_cim::coordinator::cluster::{core_seed, CimCluster, ServiceConfig};
 use acore_cim::coordinator::service::{
     gather, CimService, CoreHealth, Job, JobReply, Placement, SubmitOpts, Ticket, TileRef,
@@ -96,6 +97,7 @@ fn rand_reply(rng: &mut Rng) -> JobReply {
             residual: if rng.int_in(0, 1) == 1 { Some(rng.uniform()) } else { None },
             fenced: rng.int_in(0, 1) == 1,
             recalibrated: rng.int_in(0, 1) == 1,
+            recal_epoch: rng.next_u64(),
         }),
     }
 }
@@ -110,8 +112,21 @@ fn rand_stats(rng: &mut Rng) -> BatcherStats {
     }
 }
 
+fn rand_calstats(rng: &mut Rng) -> CoreCalStats {
+    CoreCalStats {
+        samples: rng.next_u64(),
+        trend: if rng.int_in(0, 1) == 1 { Some(rng.uniform()) } else { None },
+        last_recal_epoch: rng.next_u64(),
+        trend_triggers: rng.next_u64(),
+        staleness_triggers: rng.next_u64(),
+        drains: rng.next_u64(),
+        drain_failures: rng.next_u64(),
+        fenced: rng.int_in(0, 1) == 1,
+    }
+}
+
 fn rand_frame(rng: &mut Rng) -> Frame {
-    match rng.int_in(0, 4) {
+    match rng.int_in(0, 6) {
         0 => Frame::Hello { cores: rng.int_in(1, 64) as u32 },
         1 => Frame::Submit { id: rng.next_u64(), job: rand_job(rng), opts: rand_opts(rng) },
         2 => {
@@ -123,11 +138,19 @@ fn rand_frame(rng: &mut Rng) -> Frame {
             Frame::Reply { id: rng.next_u64(), core: rng.int_in(0, 64) as u32, result }
         }
         3 => Frame::StatsReq { id: rng.next_u64() },
-        _ => {
+        4 => {
             let n = rng.int_in(0, 8);
             Frame::StatsReply {
                 id: rng.next_u64(),
                 stats: (0..n).map(|_| rand_stats(rng)).collect(),
+            }
+        }
+        5 => Frame::CalStatsReq { id: rng.next_u64() },
+        _ => {
+            let n = rng.int_in(0, 8);
+            Frame::CalStatsReply {
+                id: rng.next_u64(),
+                stats: (0..n).map(|_| rand_calstats(rng)).collect(),
             }
         }
     }
@@ -329,6 +352,9 @@ fn loopback_round_trip_through_the_cim_service_trait() {
     assert_eq!(err, ServeError::BadRequest { expected: c::N_ROWS, got: 3 });
     assert_eq!(client.mac(x.clone()).unwrap(), expect);
 
+    // no calibrator daemon attached: calstats answers empty, not an error
+    assert!(client.calibrator_stats().unwrap().is_empty());
+
     // clones share the connection across producer threads
     let mut joins = Vec::new();
     for _ in 0..4 {
@@ -444,6 +470,112 @@ fn remote_drain_recalibrates_and_post_drain_health_is_in_band() {
     let (cluster, stats) = server.join();
     assert!(cluster.cores[1].report.is_some(), "in-service recalibration left no report");
     assert!(stats[1].requests <= 8, "fenced core served placed jobs: {:?}", stats[1]);
+}
+
+#[test]
+fn remote_mirror_syncs_epochs_from_drains_it_never_requested() {
+    // the stale-mirror fix: client B never drains anything, but client
+    // A's (or the calibrator daemon's) recalibration must reach B's
+    // board mirror through the server-observed epoch in Health replies
+    let mut cfg = SimConfig::default();
+    cfg.sigma_noise = 0.0;
+    let mut cluster = CimCluster::new(&cfg, 2);
+    cluster.program_all(&vec![40; c::N_ROWS * c::M_COLS]);
+    let engine = BiscEngine::from_config(&cfg, AdcCharacterization::ideal());
+    let server = cluster.serve_with(ServiceConfig {
+        batcher: Batcher::default(),
+        engine: Some(engine),
+        ..ServiceConfig::default()
+    });
+    let (wire, addr, acceptor) = spawn_wire(&server);
+    let a = RemoteClient::connect(addr).expect("connect client A");
+    let b = RemoteClient::connect(addr).expect("connect client B");
+    assert_eq!(b.board().recal_epoch(1), 0);
+
+    // A recalibrates core 1; B has observed nothing yet
+    let h = a.drain(1).unwrap();
+    assert!(h.recalibrated);
+    assert!(h.recal_epoch > 0, "drain reply must carry the server epoch");
+    assert_eq!(
+        b.board().recal_epoch(1),
+        0,
+        "replies are not pushed to other connections"
+    );
+
+    // B's next lifecycle probe observes the server epoch and catches up
+    let hb = b.health(1).unwrap();
+    assert_eq!(hb.recal_epoch, h.recal_epoch);
+    assert_eq!(
+        b.board().recal_epoch(1),
+        h.recal_epoch,
+        "mirror must sync from a drain it never requested"
+    );
+
+    drop(a);
+    drop(b);
+    wire.request_shutdown();
+    acceptor.join().unwrap();
+    drop(wire);
+    server.join();
+}
+
+#[test]
+fn calstats_over_the_wire_report_the_daemon() {
+    use acore_cim::coordinator::calibrator::{Calibrator, CalibratorConfig};
+
+    let cfg = ideal_cfg();
+    let mut cluster = CimCluster::new(&cfg, 2);
+    cluster.program_all(&vec![40; c::N_ROWS * c::M_COLS]);
+    let engine = BiscEngine::from_config(&cfg, AdcCharacterization::ideal());
+    let server = cluster.serve_with(ServiceConfig {
+        batcher: Batcher::default(),
+        engine: Some(engine),
+        ..ServiceConfig::default()
+    });
+    // fast-sampling daemon with an unreachable threshold: it observes
+    // residuals but must never drain
+    let daemon = Calibrator::spawn(
+        server.client(),
+        CalibratorConfig {
+            period: Duration::from_millis(5),
+            threshold: f64::INFINITY,
+            max_staleness: Duration::from_secs(3600),
+            cooldown: Duration::from_millis(10),
+            ewma_alpha: 0.5,
+        },
+    );
+    let wire = Arc::new(
+        WireServer::bind(("127.0.0.1", 0), server.client(), server.live_handles())
+            .expect("bind ephemeral loopback port")
+            .with_calibrator(daemon.shared()),
+    );
+    let addr = wire.local_addr().expect("bound listener has an address");
+    let acceptor = {
+        let wire = Arc::clone(&wire);
+        std::thread::spawn(move || wire.serve())
+    };
+    let client = RemoteClient::connect(addr).expect("connect loopback");
+    let mut sampled = false;
+    for _ in 0..500 {
+        let stats = client.calibrator_stats().expect("calstats over the wire");
+        assert_eq!(stats.len(), 2, "one entry per core");
+        if stats.iter().all(|s| s.samples > 0 && s.trend.is_some()) {
+            sampled = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(sampled, "daemon never published residual samples");
+    drop(client);
+    wire.request_shutdown();
+    acceptor.join().unwrap();
+    drop(wire);
+    let stats = daemon.stop();
+    assert!(
+        stats.iter().all(|s| s.drains == 0 && s.trend_triggers == 0),
+        "an infinite threshold must never trigger: {stats:?}"
+    );
+    server.join();
 }
 
 #[test]
