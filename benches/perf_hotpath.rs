@@ -215,6 +215,19 @@ fn main() {
         "   => batching gain: {:.1}x per-eval",
         r1.median_ns / (r256.median_ns / 256.0)
     );
+    // the zero-allocation serving form: caller-owned output buffer,
+    // fold-time DAC coefficients, internal scratch reuse (DESIGN.md §11)
+    let mut out_buf: Vec<u32> = Vec::new();
+    let ri = b
+        .bench("folded fast path (batch 256, into)", || {
+            model.forward_batch_into(&x256, 256, &mut out_buf);
+            out_buf.len()
+        })
+        .clone();
+    println!(
+        "   => _into steady state: {:.2}x vs the allocating wrapper",
+        r256.median_ns / ri.median_ns
+    );
 
     println!("\n== runtime backend (CimRuntime) ==");
     {

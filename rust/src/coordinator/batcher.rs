@@ -115,6 +115,22 @@ impl BatcherStats {
 pub trait MacBackend {
     fn forward_batch(&mut self, x: &[i32], batch: usize) -> Result<Vec<u32>, String>;
 
+    /// `forward_batch` into a caller-owned output buffer (cleared and
+    /// refilled) — the zero-allocation steady-state form the dispatch
+    /// loop drives. The default routes through the allocating method so
+    /// simple backends stay one-method; hot backends override it.
+    fn forward_batch_into(
+        &mut self,
+        x: &[i32],
+        batch: usize,
+        out: &mut Vec<u32>,
+    ) -> Result<(), String> {
+        let q = self.forward_batch(x, batch)?;
+        out.clear();
+        out.extend_from_slice(&q);
+        Ok(())
+    }
+
     /// Input codes expected per request (admission checks against this,
     /// not a hard-coded constant).
     fn rows(&self) -> usize {
@@ -140,6 +156,21 @@ pub trait MacBackend {
         ))
     }
 
+    /// `forward_tile` into a caller-owned output buffer — same contract
+    /// as [`MacBackend::forward_batch_into`].
+    fn forward_tile_into(
+        &mut self,
+        tile: &TileRef,
+        x: &[i32],
+        batch: usize,
+        out: &mut Vec<u32>,
+    ) -> Result<(), String> {
+        let q = self.forward_tile(tile, x, batch)?;
+        out.clear();
+        out.extend_from_slice(&q);
+        Ok(())
+    }
+
     /// Recalibrate the die and return the post-calibration residual
     /// (mean per-line |g_tot - 1|), or `None` if unsupported.
     fn recalibrate(&mut self, _engine: &BiscEngine) -> Option<f64> {
@@ -161,11 +192,30 @@ impl MacBackend for crate::analog::CimAnalogModel {
     fn forward_batch(&mut self, x: &[i32], batch: usize) -> Result<Vec<u32>, String> {
         Ok(crate::analog::CimAnalogModel::forward_batch(self, x, batch))
     }
+
+    fn forward_batch_into(
+        &mut self,
+        x: &[i32],
+        batch: usize,
+        out: &mut Vec<u32>,
+    ) -> Result<(), String> {
+        crate::analog::CimAnalogModel::forward_batch_into(self, x, batch, out);
+        Ok(())
+    }
 }
 
 impl MacBackend for crate::runtime::CimRuntime {
     fn forward_batch(&mut self, x: &[i32], batch: usize) -> Result<Vec<u32>, String> {
         crate::runtime::CimRuntime::forward_batch(self, x, batch).map_err(|e| e.0)
+    }
+
+    fn forward_batch_into(
+        &mut self,
+        x: &[i32],
+        batch: usize,
+        out: &mut Vec<u32>,
+    ) -> Result<(), String> {
+        crate::runtime::CimRuntime::forward_batch_into(self, x, batch, out).map_err(|e| e.0)
     }
 }
 
@@ -222,6 +272,22 @@ fn kind_of(job: &Job) -> JobKind {
         Job::Drain => JobKind::Drain,
         Job::Health => JobKind::Health,
     }
+}
+
+/// Per-worker dispatch scratch, reused across every round so the steady
+/// state runs without per-request heap allocation on the worker side:
+/// the coalesce set, the gathered input codes, and the backend output
+/// staging all grow to the largest batch seen and stay (DESIGN.md §11).
+/// Only the reply payloads still allocate — they are owned by the
+/// client once sent, so they cannot be pooled here.
+#[derive(Default)]
+struct DispatchScratch {
+    /// `Mac` jobs coalesced into the current backend batch
+    pendings: Vec<Pending>,
+    /// gathered input codes for one backend call
+    x: Vec<i32>,
+    /// backend output staging (split into per-request replies after)
+    out: Vec<u32>,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -371,9 +437,10 @@ impl Batcher {
     }
 
     /// Coalesce the popped `Mac` job with further queued `Mac` jobs (in
-    /// priority order) and execute them as one backend batch. With a
-    /// drain barrier active (`gate_seq`), jobs admitted after the drain
-    /// are left on the queue — they run after the recalibration.
+    /// priority order) and execute them as one backend batch through the
+    /// round-shared scratch buffers. With a drain barrier active
+    /// (`gate_seq`), jobs admitted after the drain are left on the queue
+    /// — they run after the recalibration.
     fn exec_macs<B: MacBackend>(
         &self,
         first: Pending,
@@ -382,11 +449,12 @@ impl Batcher {
         backend: &mut B,
         ctx: &CoreContext,
         stats: &mut BatcherStats,
+        scratch: &mut DispatchScratch,
     ) {
-        let rows = backend.rows();
         let cols = backend.cols();
-        let mut pendings = vec![first];
-        while pendings.len() < self.max_batch {
+        scratch.pendings.clear();
+        scratch.pendings.push(first);
+        while scratch.pendings.len() < self.max_batch {
             match queue.peek() {
                 Some(p)
                     if kind_of(&p.env.job) == JobKind::Mac
@@ -396,27 +464,28 @@ impl Batcher {
                     if p.expired() {
                         Self::expire(p, ctx, stats);
                     } else {
-                        pendings.push(p);
+                        scratch.pendings.push(p);
                     }
                 }
                 _ => break,
             }
         }
-        let batch = pendings.len();
-        let mut x = Vec::with_capacity(batch * rows);
-        for p in &pendings {
+        let batch = scratch.pendings.len();
+        scratch.x.clear();
+        for p in &scratch.pendings {
             if let Job::Mac(xi) = &p.env.job {
-                x.extend_from_slice(xi);
+                scratch.x.extend_from_slice(xi);
             }
         }
-        match backend.forward_batch(&x, batch) {
+        let res = backend.forward_batch_into(&scratch.x, batch, &mut scratch.out);
+        match res {
             // a mis-shaped output is a backend failure, never a panic —
             // the worker must survive backend misbehavior
-            Ok(q) if q.len() == batch * cols => {
-                for (i, p) in pendings.into_iter().enumerate() {
-                    let out = q[i * cols..(i + 1) * cols].to_vec();
+            Ok(()) if scratch.out.len() == batch * cols => {
+                for (i, p) in scratch.pendings.drain(..).enumerate() {
+                    let q = scratch.out[i * cols..(i + 1) * cols].to_vec();
                     ctx.board.sub_in_flight(ctx.core, p.env.weight);
-                    p.env.reply.send(Ok(JobReply::Mac(out)));
+                    p.env.reply.send(Ok(JobReply::Mac(q)));
                 }
                 stats.requests += batch as u64;
                 stats.batches += 1;
@@ -426,10 +495,10 @@ impl Batcher {
                 // the batch failed, the worker survives: answer every
                 // request with the backend error and keep serving
                 let msg = match res {
-                    Ok(q) => Self::shape_error(q.len(), batch * cols),
+                    Ok(()) => Self::shape_error(scratch.out.len(), batch * cols),
                     Err(msg) => msg,
                 };
-                for p in pendings {
+                for p in scratch.pendings.drain(..) {
                     ctx.board.sub_in_flight(ctx.core, p.env.weight);
                     p.env.reply.send(Err(ServeError::Backend(msg.clone())));
                 }
@@ -438,14 +507,15 @@ impl Batcher {
         }
     }
 
-    /// Execute a client-built batch natively: one backend call, one reply.
+    /// Execute a client-built batch natively: one backend call through
+    /// the round-shared scratch, one reply.
     fn exec_batch<B: MacBackend>(
         p: Pending,
         backend: &mut B,
         ctx: &CoreContext,
         stats: &mut BatcherStats,
+        scratch: &mut DispatchScratch,
     ) {
-        let rows = backend.rows();
         let cols = backend.cols();
         let env = p.env;
         let (weight, reply) = (env.weight, env.reply);
@@ -453,20 +523,20 @@ impl Batcher {
             unreachable!("exec_batch dispatched on a non-batch job")
         };
         let n = xs.len();
-        let mut x = Vec::with_capacity(n * rows);
+        scratch.x.clear();
         for xi in &xs {
-            x.extend_from_slice(xi);
+            scratch.x.extend_from_slice(xi);
         }
         let res = match tile {
-            Some(t) => backend.forward_tile(&t, &x, n),
-            None => backend.forward_batch(&x, n),
+            Some(t) => backend.forward_tile_into(&t, &scratch.x, n, &mut scratch.out),
+            None => backend.forward_batch_into(&scratch.x, n, &mut scratch.out),
         };
         ctx.board.sub_in_flight(ctx.core, weight);
         match res {
             // see exec_macs: mis-shaped outputs are backend failures
-            Ok(q) if q.len() == n * cols => {
+            Ok(()) if scratch.out.len() == n * cols => {
                 let outs: Vec<Vec<u32>> =
-                    (0..n).map(|i| q[i * cols..(i + 1) * cols].to_vec()).collect();
+                    (0..n).map(|i| scratch.out[i * cols..(i + 1) * cols].to_vec()).collect();
                 reply.send(Ok(JobReply::MacBatch(outs)));
                 stats.requests += n as u64;
                 stats.batches += 1;
@@ -474,7 +544,7 @@ impl Batcher {
             }
             res => {
                 let msg = match res {
-                    Ok(q) => Self::shape_error(q.len(), n * cols),
+                    Ok(()) => Self::shape_error(scratch.out.len(), n * cols),
                     Err(msg) => msg,
                 };
                 reply.send(Err(ServeError::Backend(msg)));
@@ -552,6 +622,9 @@ impl Batcher {
         let mut gate: Option<u64> = None;
         let mut stash: Option<Pending> = None;
         let mut deferred: Vec<Pending> = Vec::new();
+        // round-shared dispatch buffers: after warmup the worker serves
+        // without per-request heap allocation (reply payloads excepted)
+        let mut scratch = DispatchScratch::default();
         loop {
             // republish the live statistics snapshot each dispatch round
             // (wire Stats frames read it without joining the worker)
@@ -677,8 +750,10 @@ impl Batcher {
                 continue;
             }
             match kind_of(&top.env.job) {
-                JobKind::Mac => self.exec_macs(top, &mut queue, gate, backend, ctx, &mut stats),
-                JobKind::MacBatch => Self::exec_batch(top, backend, ctx, &mut stats),
+                JobKind::Mac => {
+                    self.exec_macs(top, &mut queue, gate, backend, ctx, &mut stats, &mut scratch)
+                }
+                JobKind::MacBatch => Self::exec_batch(top, backend, ctx, &mut stats, &mut scratch),
                 JobKind::Drain => {
                     if queue.iter().any(|p| p.seq < top.seq) {
                         // earlier-admitted work still queued: park the

@@ -34,7 +34,7 @@
 //! native `MacBatch` jobs.
 
 use crate::analog::variation::VariationSample;
-use crate::analog::{consts as c, CimAnalogModel, Folded};
+use crate::analog::{consts as c, CimAnalogModel, Folded, MacScratch};
 use crate::config::SimConfig;
 use crate::coordinator::batcher::{Batcher, BatcherStats, MacBackend};
 use crate::coordinator::bisc::{AdcCharacterization, BiscEngine, BiscReport};
@@ -144,6 +144,9 @@ pub struct ClusterCore {
     /// carries trims/zero points): every in-service recalibration
     /// re-measures this core's corrections on the freshly trimmed die
     pub refresher: Option<crate::coordinator::dnn::TrimRefresher>,
+    /// reusable evaluation scratch for the tile fast path — steady-state
+    /// tile serving runs without per-request heap allocation
+    scratch: MacScratch,
 }
 
 impl ClusterCore {
@@ -174,10 +177,22 @@ impl ClusterCore {
 /// (re-fold the bank, re-program the workload weights).
 impl MacBackend for ClusterCore {
     fn forward_batch(&mut self, x: &[i32], batch: usize) -> Result<Vec<u32>, String> {
+        let mut out = Vec::new();
+        self.forward_batch_into(x, batch, &mut out)?;
+        Ok(out)
+    }
+
+    fn forward_batch_into(
+        &mut self,
+        x: &[i32],
+        batch: usize,
+        out: &mut Vec<u32>,
+    ) -> Result<(), String> {
         // served traffic is the drift clock: every MAC read ages the die
         // (no-op on a frozen die, so the hot path stays free by default)
         self.model.advance_drift(batch as u64);
-        Ok(self.model.forward_batch(x, batch))
+        self.model.forward_batch_into(x, batch, out);
+        Ok(())
     }
 
     fn forward_tile(
@@ -186,6 +201,18 @@ impl MacBackend for ClusterCore {
         x: &[i32],
         batch: usize,
     ) -> Result<Vec<u32>, String> {
+        let mut out = Vec::new();
+        self.forward_tile_into(tile, x, batch, &mut out)?;
+        Ok(out)
+    }
+
+    fn forward_tile_into(
+        &mut self,
+        tile: &TileRef,
+        x: &[i32],
+        batch: usize,
+        out: &mut Vec<u32>,
+    ) -> Result<(), String> {
         // tile reads age the die too; the pre-folded tile itself bakes
         // the coefficients of the trims it was folded under, so a
         // drifted die serves increasingly stale tile math until the next
@@ -202,7 +229,8 @@ impl MacBackend for ClusterCore {
                 self.id, tile.layer, tile.tr, tile.tc
             )
         })?;
-        Ok(self.model.forward_folded(folded, x, batch))
+        self.model.forward_folded_into(folded, x, batch, &mut self.scratch, out);
+        Ok(())
     }
 
     fn recalibrate(&mut self, engine: &BiscEngine) -> Option<f64> {
@@ -258,6 +286,7 @@ impl CimCluster {
                     bank: None,
                     recal_count: 0,
                     refresher: None,
+                    scratch: MacScratch::new(),
                 }
             })
             .collect();

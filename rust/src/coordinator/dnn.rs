@@ -4,7 +4,7 @@
 //! dequantized with the NOMINAL constants and accumulated digitally (the
 //! RISC-V core's role), bias + ReLU + re-quantization between layers.
 
-use crate::analog::{consts as c, CimAnalogModel};
+use crate::analog::{consts as c, CimAnalogModel, MacScratch};
 use crate::config::SimConfig;
 use crate::coordinator::batcher::ServeError;
 use crate::coordinator::cluster::TileBank;
@@ -95,6 +95,30 @@ pub struct InferenceStats {
     pub mac_ops: u64,
     /// weight reprogram operations (tile switches)
     pub reprograms: u64,
+}
+
+/// Reusable buffers for the single-model inference paths: the GEMM
+/// scratch, per-tile ADC code staging, the per-layer accumulator, and
+/// the requantized hidden codes. The accuracy drivers allocate ONE and
+/// thread it through every image (steady-state inference then allocates
+/// only its input quantization and the returned logits);
+/// `infer`/`infer_prepared` wrap a fresh one per call.
+#[derive(Default)]
+pub struct InferScratch {
+    mac: MacScratch,
+    /// per-tile ADC codes from the array
+    q: Vec<u32>,
+    /// per-layer accumulator, `col_tiles * M_COLS` wide (the layer's
+    /// logical columns are the leading `layer.cols` entries)
+    acc: Vec<f32>,
+    /// requantized hidden codes between the layers
+    h: Vec<i32>,
+}
+
+impl InferScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
 }
 
 /// One raw ADC code -> code-product units under the digital correction
@@ -308,7 +332,9 @@ impl CimMlp {
     }
 
     /// One layer on the array: x_codes (len >= rows, zero-padded) ->
-    /// accumulated MAC estimates in code-product units (len cols).
+    /// accumulated MAC estimates in code-product units, written into
+    /// `scratch.acc` (the layer's logical output is the leading
+    /// `layer.cols` entries).
     fn layer_forward(
         &self,
         model: &mut CimAnalogModel,
@@ -318,31 +344,51 @@ impl CimMlp {
         zp: &Option<Vec<f64>>,
         x_codes: &[i32],
         stats: &mut InferenceStats,
-    ) -> Vec<f32> {
+        scratch: &mut InferScratch,
+    ) {
         model.set_adc_refs(refs.0, refs.1);
         let k = c::code_gain_at(refs.0, refs.1) as f32;
         let mid = c::q_mid_at(refs.0, refs.1) as f32;
         let (rt, ct) = (layer.row_tiles(), layer.col_tiles());
-        let mut out = vec![0f32; ct * c::M_COLS];
+        scratch.acc.clear();
+        scratch.acc.resize(ct * c::M_COLS, 0.0);
+        let mut xr = [0i32; c::N_ROWS];
         for tc in 0..ct {
             for tr in 0..rt {
                 model.program(&layer.tiles[tr][tc]);
                 stats.reprograms += 1;
                 let start = tr * c::N_ROWS;
-                let mut xr = [0i32; c::N_ROWS];
                 for (i, x) in xr.iter_mut().enumerate() {
                     *x = x_codes.get(start + i).copied().unwrap_or(0);
                 }
-                let q = model.forward_batch(&xr, 1);
+                model.forward_batch_into(&xr, 1, &mut scratch.q);
                 stats.mac_ops += 1;
                 for col in 0..c::M_COLS {
-                    out[tc * c::M_COLS + col] +=
-                        correct_code(q[col] as f32, col, trim, zp, mid, k);
+                    scratch.acc[tc * c::M_COLS + col] +=
+                        correct_code(scratch.q[col] as f32, col, trim, zp, mid, k);
                 }
             }
         }
-        out.truncate(layer.cols);
-        out
+    }
+
+    /// Digital bias + ReLU + requantization between the layers (the
+    /// RISC-V side), shared by every execution path:
+    /// `scratch.acc[..cols1]` -> `scratch.h`.
+    fn requantize_hidden(quant: &QuantMlp, scratch: &mut InferScratch, cols1: usize) {
+        let InferScratch { acc, h, .. } = scratch;
+        h.clear();
+        for (&v, &b) in acc[..cols1].iter().zip(&quant.b1_cp) {
+            h.push(((v + b).max(0.0) * quant.act_scale1).round().clamp(0.0, 63.0) as i32);
+        }
+    }
+
+    /// Final logits from `scratch.acc[..cols2]` + the layer-2 bias.
+    fn logits_from(&self, scratch: &InferScratch) -> Vec<f32> {
+        scratch.acc[..self.layer2.cols]
+            .iter()
+            .zip(&self.quant.b2_cp)
+            .map(|(&v, &b)| v + b)
+            .collect()
     }
 
     /// Full inference of one image through the CIM array.
@@ -352,24 +398,30 @@ impl CimMlp {
         img: &[f32],
         stats: &mut InferenceStats,
     ) -> Vec<f32> {
+        let mut scratch = InferScratch::new();
+        self.infer_with(model, img, stats, &mut scratch)
+    }
+
+    /// `infer` through a caller-owned [`InferScratch`] (the accuracy
+    /// driver reuses one across the whole dataset).
+    pub fn infer_with(
+        &self,
+        model: &mut CimAnalogModel,
+        img: &[f32],
+        stats: &mut InferenceStats,
+        scratch: &mut InferScratch,
+    ) -> Vec<f32> {
         let x = self.quant.quantize_input(img);
-        let h_cp = self.layer_forward(model, &self.layer1, self.refs1, &self.trim1, &self.zp1, &x, stats);
-        // digital bias + ReLU + requantize (RISC-V side)
-        let h_codes: Vec<i32> = h_cp
-            .iter()
-            .zip(&self.quant.b1_cp)
-            .map(|(&v, &b)| {
-                ((v + b).max(0.0) * self.quant.act_scale1)
-                    .round()
-                    .clamp(0.0, 63.0) as i32
-            })
-            .collect();
-        let logits_cp = self.layer_forward(model, &self.layer2, self.refs2, &self.trim2, &self.zp2, &h_codes, stats);
-        logits_cp
-            .iter()
-            .zip(&self.quant.b2_cp)
-            .map(|(&v, &b)| v + b)
-            .collect()
+        self.layer_forward(
+            model, &self.layer1, self.refs1, &self.trim1, &self.zp1, &x, stats, scratch,
+        );
+        Self::requantize_hidden(&self.quant, scratch, self.layer1.cols);
+        let h = std::mem::take(&mut scratch.h);
+        self.layer_forward(
+            model, &self.layer2, self.refs2, &self.trim2, &self.zp2, &h, stats, scratch,
+        );
+        scratch.h = h;
+        self.logits_from(scratch)
     }
 
     /// Classify a whole dataset; returns (accuracy, stats).
@@ -382,8 +434,9 @@ impl CimMlp {
         let n = ds.len().min(limit);
         let mut stats = InferenceStats::default();
         let mut correct = 0;
+        let mut scratch = InferScratch::new();
         for i in 0..n {
-            let logits = self.infer(model, ds.image(i), &mut stats);
+            let logits = self.infer_with(model, ds.image(i), &mut stats, &mut scratch);
             if argmax(&logits) == ds.labels[i] as usize {
                 correct += 1;
             }
@@ -428,11 +481,13 @@ impl CimMlp {
         zp: &Option<Vec<f64>>,
         x_codes: &[i32],
         stats: &mut InferenceStats,
-    ) -> Vec<f32> {
+        scratch: &mut InferScratch,
+    ) {
         let k = c::code_gain_at(refs.0, refs.1) as f32;
         let mid = c::q_mid_at(refs.0, refs.1) as f32;
         let (rt, ct) = (layer.row_tiles(), layer.col_tiles());
-        let mut out = vec![0f32; ct * c::M_COLS];
+        scratch.acc.clear();
+        scratch.acc.resize(ct * c::M_COLS, 0.0);
         let mut xr = [0i32; c::N_ROWS];
         for tc in 0..ct {
             for tr in 0..rt {
@@ -440,16 +495,20 @@ impl CimMlp {
                 for (i, x) in xr.iter_mut().enumerate() {
                     *x = x_codes.get(start + i).copied().unwrap_or(0);
                 }
-                let q = model.forward_folded(&folded[tr][tc], &xr, 1);
+                model.forward_folded_into(
+                    &folded[tr][tc],
+                    &xr,
+                    1,
+                    &mut scratch.mac,
+                    &mut scratch.q,
+                );
                 stats.mac_ops += 1;
                 for col in 0..c::M_COLS {
-                    out[tc * c::M_COLS + col] +=
-                        correct_code(q[col] as f32, col, trim, zp, mid, k);
+                    scratch.acc[tc * c::M_COLS + col] +=
+                        correct_code(scratch.q[col] as f32, col, trim, zp, mid, k);
                 }
             }
         }
-        out.truncate(layer.cols);
-        out
     }
 
     /// Inference over the prepared (pre-folded) schedule — the production
@@ -461,27 +520,34 @@ impl CimMlp {
         img: &[f32],
         stats: &mut InferenceStats,
     ) -> Vec<f32> {
+        let mut scratch = InferScratch::new();
+        self.infer_prepared_with(model, prepared, img, stats, &mut scratch)
+    }
+
+    /// `infer_prepared` through a caller-owned [`InferScratch`] — the
+    /// steady-state form: per image it allocates only the quantized
+    /// input and the returned logits.
+    pub fn infer_prepared_with(
+        &self,
+        model: &CimAnalogModel,
+        prepared: &PreparedMlp,
+        img: &[f32],
+        stats: &mut InferenceStats,
+        scratch: &mut InferScratch,
+    ) -> Vec<f32> {
         let x = self.quant.quantize_input(img);
-        let h_cp = self.layer_forward_prepared(
+        self.layer_forward_prepared(
             model, &self.layer1, &prepared.tiles1, self.refs1, &self.trim1, &self.zp1, &x,
-            stats,
+            stats, scratch,
         );
-        let h_codes: Vec<i32> = h_cp
-            .iter()
-            .zip(&self.quant.b1_cp)
-            .map(|(&v, &b)| {
-                ((v + b).max(0.0) * self.quant.act_scale1).round().clamp(0.0, 63.0) as i32
-            })
-            .collect();
-        let logits_cp = self.layer_forward_prepared(
-            model, &self.layer2, &prepared.tiles2, self.refs2, &self.trim2, &self.zp2,
-            &h_codes, stats,
+        Self::requantize_hidden(&self.quant, scratch, self.layer1.cols);
+        let h = std::mem::take(&mut scratch.h);
+        self.layer_forward_prepared(
+            model, &self.layer2, &prepared.tiles2, self.refs2, &self.trim2, &self.zp2, &h,
+            stats, scratch,
         );
-        logits_cp
-            .iter()
-            .zip(&self.quant.b2_cp)
-            .map(|(&v, &b)| v + b)
-            .collect()
+        scratch.h = h;
+        self.logits_from(scratch)
     }
 
     /// Dataset accuracy over the prepared schedule.
@@ -495,8 +561,10 @@ impl CimMlp {
         let n = ds.len().min(limit);
         let mut stats = InferenceStats::default();
         let mut correct = 0;
+        let mut scratch = InferScratch::new();
         for i in 0..n {
-            let logits = self.infer_prepared(model, prepared, ds.image(i), &mut stats);
+            let logits =
+                self.infer_prepared_with(model, prepared, ds.image(i), &mut stats, &mut scratch);
             if argmax(&logits) == ds.labels[i] as usize {
                 correct += 1;
             }
@@ -557,6 +625,24 @@ pub type SharedCorrections = Arc<Vec<Mutex<CoreCorrections>>>;
 /// lag its recal epoch or a recalibration lands mid-inference.
 pub struct ClusterSchedule {
     corrections: SharedCorrections,
+    /// per-schedule serving scratch pool: gather-side accumulators and
+    /// requantized hidden codes reused across `infer_batch_service`
+    /// invocations (§Perf; DESIGN.md §11). Each batch TAKES the scratch
+    /// and puts it back when done, so concurrent batches on one schedule
+    /// still overlap (a caller finding the pool empty grows a fresh
+    /// scratch; the last finisher's buffers win the parking spot).
+    scratch: Mutex<ServeScratch>,
+}
+
+/// Gather-side buffers of one schedule (the `ClusterSchedule::scratch`
+/// pool).
+#[derive(Default)]
+struct ServeScratch {
+    /// flattened per-image layer accumulator, `n_imgs * layer.cols`
+    acc: Vec<f32>,
+    /// requantized hidden codes, one row per image (outer and inner
+    /// buffers both persist across invocations)
+    h_rows: Vec<Vec<i32>>,
 }
 
 impl ClusterSchedule {
@@ -743,7 +829,7 @@ impl CimMlp {
         for core in cluster.cores.iter_mut() {
             core.refresher = refresher.clone();
         }
-        ClusterSchedule { corrections }
+        ClusterSchedule { corrections, scratch: Mutex::new(ServeScratch::default()) }
     }
 
     /// One layer through the serving engine: each tile becomes one
@@ -766,7 +852,8 @@ impl CimMlp {
         which: usize,
         xs: &[Vec<i32>],
         stats: &mut InferenceStats,
-    ) -> Result<Vec<Vec<f32>>, ServeError> {
+        acc: &mut Vec<f32>,
+    ) -> Result<(), ServeError> {
         let refs = if which == 1 { self.refs1 } else { self.refs2 };
         let gain = c::code_gain_at(refs.0, refs.1) as f32;
         let mid = c::q_mid_at(refs.0, refs.1) as f32;
@@ -820,7 +907,8 @@ impl CimMlp {
         let cors: Vec<CoreCorrections> = (0..sched.cores())
             .map(|core| sched.corrections[core].lock().unwrap().clone())
             .collect();
-        let mut out = vec![vec![0f32; layer.cols]; xs.len()];
+        acc.clear();
+        acc.resize(xs.len() * layer.cols, 0.0);
         for (ti, (core, qs)) in gathered.into_iter().enumerate() {
             let tc = ti % ct;
             let cor = &cors[core];
@@ -832,11 +920,12 @@ impl CimMlp {
                     if gcol >= layer.cols {
                         break;
                     }
-                    out[i][gcol] += correct_code(qraw as f32, col, trim, zp, mid, gain);
+                    acc[i * layer.cols + gcol] +=
+                        correct_code(qraw as f32, col, trim, zp, mid, gain);
                 }
             }
         }
-        Ok(out)
+        Ok(())
     }
 
     /// Batched inference through the serving engine: both layers' tiles
@@ -888,22 +977,58 @@ impl CimMlp {
         }
         let xs: Vec<Vec<i32>> =
             imgs.iter().map(|im| self.quant.quantize_input(im)).collect();
-        let h_cp = self.layer_forward_service(svc, sched, &self.layer1, 1, &xs, stats)?;
-        let h_codes: Vec<Vec<i32>> = h_cp
-            .iter()
-            .map(|h| {
-                h.iter()
-                    .zip(&self.quant.b1_cp)
-                    .map(|(&v, &b)| {
-                        ((v + b).max(0.0) * self.quant.act_scale1)
-                            .round()
-                            .clamp(0.0, 63.0) as i32
-                    })
-                    .collect()
-            })
-            .collect();
-        let logits_cp =
-            self.layer_forward_service(svc, sched, &self.layer2, 2, &h_codes, stats)?;
+        // the per-schedule scratch pool: accumulators + hidden codes
+        // persist across invocations, so the gather side of a warmed
+        // schedule runs allocation-free up to the job payloads and the
+        // returned logits. The scratch is TAKEN out of the pool (not
+        // held locked) so concurrent batches on one schedule still
+        // overlap — a caller finding the pool empty just grows a fresh
+        // scratch, and the last finisher parks its buffers for reuse.
+        let mut s = std::mem::take(&mut *sched.scratch.lock().unwrap());
+        let result =
+            self.infer_layers_service(svc, sched, &xs, stats, &entry_board, &entry_cor, &mut s);
+        *sched.scratch.lock().unwrap() = s;
+        result
+    }
+
+    /// The two served layers + gather-side requantization over a
+    /// borrowed [`ServeScratch`] — split out of `infer_batch_service`
+    /// so the scratch goes back into the pool on every exit path.
+    fn infer_layers_service<S: CimService>(
+        &self,
+        svc: &S,
+        sched: &ClusterSchedule,
+        xs: &[Vec<i32>],
+        stats: &mut InferenceStats,
+        entry_board: &[u64],
+        entry_cor: &[(bool, u64)],
+        s: &mut ServeScratch,
+    ) -> Result<Vec<Vec<f32>>, ServeError> {
+        self.layer_forward_service(svc, sched, &self.layer1, 1, xs, stats, &mut s.acc)?;
+        let cols1 = self.layer1.cols;
+        let n = xs.len();
+        // grow to the high-water batch size but never shrink: the
+        // dropped rows' inner buffers are the reuse this pool exists for
+        while s.h_rows.len() < n {
+            s.h_rows.push(Vec::new());
+        }
+        for (row, acc_row) in s.h_rows.iter_mut().zip(s.acc.chunks_exact(cols1)) {
+            row.clear();
+            for (&v, &b) in acc_row.iter().zip(&self.quant.b1_cp) {
+                row.push(
+                    ((v + b).max(0.0) * self.quant.act_scale1).round().clamp(0.0, 63.0) as i32,
+                );
+            }
+        }
+        self.layer_forward_service(
+            svc,
+            sched,
+            &self.layer2,
+            2,
+            &s.h_rows[..n],
+            stats,
+            &mut s.acc,
+        )?;
         for (core, &epoch) in entry_board.iter().enumerate() {
             let (had_corrections, cor_epoch) = entry_cor[core];
             let cor = sched.corrections[core].lock().unwrap();
@@ -916,8 +1041,9 @@ impl CimMlp {
                 )));
             }
         }
-        Ok(logits_cp
-            .into_iter()
+        Ok(s
+            .acc
+            .chunks_exact(self.layer2.cols)
             .map(|l| l.iter().zip(&self.quant.b2_cp).map(|(&v, &b)| v + b).collect())
             .collect())
     }

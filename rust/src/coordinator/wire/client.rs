@@ -25,7 +25,7 @@ use crate::coordinator::service::{
     place, CimService, CoreBoard, Job, JobReply, Placement, SubmitOpts, Ticket,
 };
 use crate::coordinator::wire::codec::{
-    encode_frame, read_frame, write_frame, Frame, HEADER_LEN, MAX_BODY,
+    encode_frame_into, read_frame, read_frame_buf, write_frame_buf, Frame, HEADER_LEN, MAX_BODY,
 };
 use std::collections::HashMap;
 use std::io::{self, Write};
@@ -58,12 +58,20 @@ struct Shared {
     alive: AtomicBool,
 }
 
+/// The write half of the connection plus its reusable encode buffer —
+/// one mutex guards both, so every frame from any clone encodes into the
+/// same steady-state buffer (no allocation per submit).
+struct WriteHalf {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
 struct Inner {
     shared: Arc<Shared>,
     /// original stream, kept to unblock the reader on drop
     stream: TcpStream,
     /// serialized frame writes (submits from any clone)
-    write: Mutex<TcpStream>,
+    write: Mutex<WriteHalf>,
     rr: AtomicUsize,
     next_id: AtomicU64,
     reader: Mutex<Option<std::thread::JoinHandle<()>>>,
@@ -123,7 +131,7 @@ impl RemoteClient {
             inner: Arc::new(Inner {
                 shared,
                 stream,
-                write: Mutex::new(write),
+                write: Mutex::new(WriteHalf { stream: write, buf: Vec::new() }),
                 rr: AtomicUsize::new(0),
                 next_id: AtomicU64::new(1),
                 reader: Mutex::new(Some(reader)),
@@ -140,8 +148,11 @@ impl RemoteClient {
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = channel();
         sh.pending_stats.lock().unwrap().insert(id, tx);
-        let sent =
-            write_frame(&mut *self.inner.write.lock().unwrap(), &Frame::StatsReq { id }).is_ok();
+        let sent = {
+            let mut guard = self.inner.write.lock().unwrap();
+            let w = &mut *guard;
+            write_frame_buf(&mut w.stream, &Frame::StatsReq { id }, &mut w.buf).is_ok()
+        };
         // re-check AFTER the insert: the reader may have disconnected and
         // cleared the map between our alive check and the insert — if our
         // entry slipped in after that sweep, remove it ourselves so the
@@ -163,8 +174,11 @@ impl RemoteClient {
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = channel();
         sh.pending_cal.lock().unwrap().insert(id, tx);
-        let sent = write_frame(&mut *self.inner.write.lock().unwrap(), &Frame::CalStatsReq { id })
-            .is_ok();
+        let sent = {
+            let mut guard = self.inner.write.lock().unwrap();
+            let w = &mut *guard;
+            write_frame_buf(&mut w.stream, &Frame::CalStatsReq { id }, &mut w.buf).is_ok()
+        };
         // same post-insert re-check as remote_stats: never block on a
         // sender the disconnected reader will never use
         if !sent || !sh.alive.load(Ordering::SeqCst) {
@@ -198,10 +212,35 @@ impl CimService for RemoteClient {
             sh.drains[core].fetch_add(1, Ordering::SeqCst);
         }
         // ship the RESOLVED placement so the server's core choice always
-        // matches this ticket's core and the mirror's depth accounting
+        // matches this ticket's core and the mirror's depth accounting;
+        // the frame encodes into the connection's shared steady-state
+        // buffer under the write lock (no allocation per submit)
         let wire_opts = SubmitOpts { placement: Placement::Pinned(core), ..opts };
-        let bytes = encode_frame(&Frame::Submit { id, job, opts: wire_opts });
-        if bytes.len() - HEADER_LEN > MAX_BODY as usize {
+        let frame = Frame::Submit { id, job, opts: wire_opts };
+        let (sent, oversized_body) = {
+            let mut guard = self.inner.write.lock().unwrap();
+            let w = &mut *guard;
+            w.buf.clear();
+            encode_frame_into(&frame, &mut w.buf);
+            if w.buf.len() - HEADER_LEN > MAX_BODY as usize {
+                let body_len = w.buf.len() - HEADER_LEN;
+                // an over-cap encode must not pin its capacity in the
+                // connection's steady-state buffer for the rest of the
+                // connection's life — drop it and start fresh
+                w.buf = Vec::new();
+                (false, Some(body_len))
+            } else {
+                let ok = w.stream.write_all(&w.buf).and_then(|_| w.stream.flush()).is_ok();
+                // a rare huge (near-cap) submit must not pin tens of MB
+                // in the connection's steady-state buffer; ordinary
+                // traffic stays well under this and keeps its capacity
+                if w.buf.capacity() > (1 << 21) {
+                    w.buf = Vec::new();
+                }
+                (ok, None)
+            }
+        };
+        if let Some(body_len) = oversized_body {
             // enforce the peer's frame cap locally: shipping it anyway
             // would kill the whole connection (the server's decoder
             // rejects oversized bodies), taking every in-flight job with
@@ -213,15 +252,10 @@ impl CimService for RemoteClient {
                 }
             }
             return Err(ServeError::Backend(format!(
-                "job encodes to {} body bytes, over the {MAX_BODY}-byte frame cap — \
-                 split the batch",
-                bytes.len() - HEADER_LEN
+                "job encodes to {body_len} body bytes, over the {MAX_BODY}-byte frame cap — \
+                 split the batch"
             )));
         }
-        let sent = {
-            let mut w = self.inner.write.lock().unwrap();
-            w.write_all(&bytes).and_then(|_| w.flush()).is_ok()
-        };
         // re-check AFTER the insert (see remote_stats): if the reader
         // disconnected and swept the pending map while we were inserting,
         // our entry would otherwise linger and this ticket's wait() would
@@ -245,8 +279,11 @@ impl CimService for RemoteClient {
 /// end, wake every waiter with `Disconnected` (by dropping its sender)
 /// and settle the mirror gauges.
 fn reader_loop(mut stream: TcpStream, sh: Arc<Shared>) {
+    // reusable frame-body buffer: the reply stream stops allocating for
+    // frame transport once the buffer covers the largest reply seen
+    let mut body_buf: Vec<u8> = Vec::new();
     loop {
-        match read_frame(&mut stream) {
+        match read_frame_buf(&mut stream, &mut body_buf) {
             Ok(Frame::Reply { id, core: _, result }) => {
                 let entry = sh.pending.lock().unwrap().remove(&id);
                 let Some(p) = entry else { continue };

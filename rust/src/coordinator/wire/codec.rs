@@ -111,15 +111,14 @@ pub enum Frame {
 
 // ---- encoder ------------------------------------------------------------
 
-struct Enc {
-    b: Vec<u8>,
+/// Body encoder over a borrowed buffer — frames encode straight into the
+/// caller's (reused) output vector, so steady-state connections pay no
+/// allocation per frame.
+struct Enc<'a> {
+    b: &'a mut Vec<u8>,
 }
 
-impl Enc {
-    fn new() -> Self {
-        Self { b: Vec::new() }
-    }
-
+impl Enc<'_> {
     fn u8(&mut self, v: u8) {
         self.b.push(v);
     }
@@ -268,7 +267,7 @@ impl<'a> Dec<'a> {
 
 // ---- payload codecs -----------------------------------------------------
 
-fn put_job(e: &mut Enc, job: &Job) {
+fn put_job(e: &mut Enc<'_>, job: &Job) {
     match job {
         Job::Mac(x) => {
             e.u8(0);
@@ -322,7 +321,7 @@ fn take_job(d: &mut Dec) -> Result<Job, WireError> {
     }
 }
 
-fn put_opts(e: &mut Enc, opts: &SubmitOpts) {
+fn put_opts(e: &mut Enc<'_>, opts: &SubmitOpts) {
     e.u8(opts.priority);
     match opts.deadline {
         None => e.u8(0),
@@ -360,7 +359,7 @@ fn take_opts(d: &mut Dec) -> Result<SubmitOpts, WireError> {
     Ok(SubmitOpts { priority, deadline, placement })
 }
 
-fn put_serve_error(e: &mut Enc, err: &ServeError) {
+fn put_serve_error(e: &mut Enc<'_>, err: &ServeError) {
     match err {
         ServeError::BadRequest { expected, got } => {
             e.u8(0);
@@ -391,7 +390,7 @@ fn take_serve_error(d: &mut Dec) -> Result<ServeError, WireError> {
     }
 }
 
-fn put_health(e: &mut Enc, h: &CoreHealth) {
+fn put_health(e: &mut Enc<'_>, h: &CoreHealth) {
     e.u32(h.core as u32);
     match h.residual {
         None => e.u8(0),
@@ -421,7 +420,7 @@ fn take_health(d: &mut Dec) -> Result<CoreHealth, WireError> {
     })
 }
 
-fn put_reply(e: &mut Enc, reply: &JobReply) {
+fn put_reply(e: &mut Enc<'_>, reply: &JobReply) {
     match reply {
         JobReply::Mac(q) => {
             e.u8(0);
@@ -457,7 +456,7 @@ fn take_reply(d: &mut Dec) -> Result<JobReply, WireError> {
     }
 }
 
-fn put_result(e: &mut Enc, result: &Result<JobReply, ServeError>) {
+fn put_result(e: &mut Enc<'_>, result: &Result<JobReply, ServeError>) {
     match result {
         Ok(r) => {
             e.u8(0);
@@ -478,7 +477,7 @@ fn take_result(d: &mut Dec) -> Result<Result<JobReply, ServeError>, WireError> {
     }
 }
 
-fn put_stats(e: &mut Enc, s: &BatcherStats) {
+fn put_stats(e: &mut Enc<'_>, s: &BatcherStats) {
     e.u64(s.requests);
     e.u64(s.batches);
     e.u64(s.max_batch_seen as u64);
@@ -500,7 +499,7 @@ fn take_stats(d: &mut Dec) -> Result<BatcherStats, WireError> {
 /// element-size bound `CalStatsReply`'s length prefix is checked against.
 const CALSTATS_MIN_LEN: usize = 50;
 
-fn put_calstats(e: &mut Enc, s: &CoreCalStats) {
+fn put_calstats(e: &mut Enc<'_>, s: &CoreCalStats) {
     e.u64(s.samples);
     match s.trend {
         None => e.u8(0),
@@ -538,48 +537,66 @@ fn take_calstats(d: &mut Dec) -> Result<CoreCalStats, WireError> {
 
 // ---- frame assembly -----------------------------------------------------
 
-/// Encode one frame (header + body) into a fresh byte vector.
-pub fn encode_frame(frame: &Frame) -> Vec<u8> {
-    let mut body = Enc::new();
-    let (tag, id) = match frame {
-        Frame::Hello { cores } => {
-            body.u32(*cores);
-            (TAG_HELLO, 0)
-        }
-        Frame::Submit { id, job, opts } => {
-            put_opts(&mut body, opts);
-            put_job(&mut body, job);
-            (TAG_SUBMIT, *id)
-        }
-        Frame::Reply { id, core, result } => {
-            body.u32(*core);
-            put_result(&mut body, result);
-            (TAG_REPLY, *id)
-        }
-        Frame::StatsReq { id } => (TAG_STATS_REQ, *id),
-        Frame::StatsReply { id, stats } => {
-            body.u32(stats.len() as u32);
-            for s in stats {
-                put_stats(&mut body, s);
-            }
-            (TAG_STATS_REPLY, *id)
-        }
-        Frame::CalStatsReq { id } => (TAG_CALSTATS_REQ, *id),
-        Frame::CalStatsReply { id, stats } => {
-            body.u32(stats.len() as u32);
-            for s in stats {
-                put_calstats(&mut body, s);
-            }
-            (TAG_CALSTATS_REPLY, *id)
-        }
-    };
-    let mut out = Vec::with_capacity(HEADER_LEN + body.b.len());
+/// Encode one frame (header + body), APPENDING to `out` — the tag, id,
+/// and body-length header fields are backpatched once the body length is
+/// known, so the whole frame encodes in place with no staging buffer.
+/// Appending (rather than clearing) lets a connection coalesce several
+/// frames into one buffer and flush them with a single `write_all`
+/// (see the server's reply pump); steady-state connections reuse `out`
+/// and pay no allocation per frame.
+pub fn encode_frame_into(frame: &Frame, out: &mut Vec<u8>) {
+    let header_at = out.len();
     out.extend_from_slice(&WIRE_MAGIC.to_le_bytes());
     out.push(WIRE_VERSION);
-    out.push(tag);
-    out.extend_from_slice(&id.to_le_bytes());
-    out.extend_from_slice(&(body.b.len() as u32).to_le_bytes());
-    out.extend_from_slice(&body.b);
+    out.push(0); // tag, backpatched below
+    out.extend_from_slice(&[0u8; 12]); // id + body length, backpatched
+    let body_at = out.len();
+    let (tag, id) = {
+        let mut body = Enc { b: out };
+        match frame {
+            Frame::Hello { cores } => {
+                body.u32(*cores);
+                (TAG_HELLO, 0)
+            }
+            Frame::Submit { id, job, opts } => {
+                put_opts(&mut body, opts);
+                put_job(&mut body, job);
+                (TAG_SUBMIT, *id)
+            }
+            Frame::Reply { id, core, result } => {
+                body.u32(*core);
+                put_result(&mut body, result);
+                (TAG_REPLY, *id)
+            }
+            Frame::StatsReq { id } => (TAG_STATS_REQ, *id),
+            Frame::StatsReply { id, stats } => {
+                body.u32(stats.len() as u32);
+                for s in stats {
+                    put_stats(&mut body, s);
+                }
+                (TAG_STATS_REPLY, *id)
+            }
+            Frame::CalStatsReq { id } => (TAG_CALSTATS_REQ, *id),
+            Frame::CalStatsReply { id, stats } => {
+                body.u32(stats.len() as u32);
+                for s in stats {
+                    put_calstats(&mut body, s);
+                }
+                (TAG_CALSTATS_REPLY, *id)
+            }
+        }
+    };
+    let body_len = (out.len() - body_at) as u32;
+    out[header_at + 3] = tag;
+    out[header_at + 4..header_at + 12].copy_from_slice(&id.to_le_bytes());
+    out[header_at + 12..header_at + 16].copy_from_slice(&body_len.to_le_bytes());
+}
+
+/// Encode one frame (header + body) into a fresh byte vector — thin
+/// allocating wrapper over [`encode_frame_into`].
+pub fn encode_frame(frame: &Frame) -> Vec<u8> {
+    let mut out = Vec::new();
+    encode_frame_into(frame, &mut out);
     out
 }
 
@@ -645,6 +662,16 @@ fn read_full<R: Read>(r: &mut R, buf: &mut [u8], at_boundary: bool) -> Result<()
 
 /// Read and decode one frame from a blocking byte stream.
 pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
+    let mut body = Vec::new();
+    read_frame_buf(r, &mut body)
+}
+
+/// `read_frame` through a caller-owned body buffer, reused across frames
+/// — a long-lived connection's read loop stops allocating once the
+/// buffer has grown to the largest body seen. The [`MAX_BODY`] check
+/// still runs before the buffer is sized, so an adversarial length
+/// prefix can never drive an allocation.
+pub fn read_frame_buf<R: Read>(r: &mut R, body: &mut Vec<u8>) -> Result<Frame, WireError> {
     let mut header = [0u8; HEADER_LEN];
     read_full(r, &mut header, true)?;
     let magic = u16::from_le_bytes([header[0], header[1]]);
@@ -663,14 +690,28 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
     if len > MAX_BODY {
         return Err(WireError::Oversized { len, max: MAX_BODY });
     }
-    let mut body = vec![0u8; len as usize];
-    read_full(r, &mut body, false)?;
-    decode_body(tag, id, &body)
+    body.clear();
+    body.resize(len as usize, 0);
+    read_full(r, body, false)?;
+    decode_body(tag, id, body)
 }
 
 /// Encode and write one frame, flushing so it hits the socket now.
 pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> std::io::Result<()> {
     w.write_all(&encode_frame(frame))?;
+    w.flush()
+}
+
+/// `write_frame` through a caller-owned encode buffer (cleared and
+/// reused) — the steady-state form for long-lived connections.
+pub fn write_frame_buf<W: Write>(
+    w: &mut W,
+    frame: &Frame,
+    buf: &mut Vec<u8>,
+) -> std::io::Result<()> {
+    buf.clear();
+    encode_frame_into(frame, buf);
+    w.write_all(buf)?;
     w.flush()
 }
 
@@ -750,6 +791,39 @@ mod tests {
                 CoreCalStats::default(),
             ],
         });
+    }
+
+    /// `encode_frame_into` appends, so several frames coalesce into one
+    /// buffer and decode back out one by one — the server's reply-pump
+    /// write path. The read side reuses one body buffer throughout.
+    #[test]
+    fn coalesced_frames_roundtrip_through_shared_buffers() {
+        let frames = vec![
+            Frame::Reply { id: 1, core: 0, result: Ok(JobReply::Mac(vec![1, 2, 3])) },
+            Frame::Reply { id: 2, core: 1, result: Err(ServeError::DeadlineExceeded) },
+            Frame::Hello { cores: 8 },
+            Frame::StatsReq { id: 3 },
+        ];
+        let mut buf = Vec::new();
+        for f in &frames {
+            encode_frame_into(f, &mut buf);
+        }
+        // the coalesced buffer is the exact concatenation of the
+        // one-frame encodings
+        let concat: Vec<u8> = frames.iter().flat_map(encode_frame).collect();
+        assert_eq!(buf, concat);
+        let mut slice: &[u8] = &buf;
+        let mut body = Vec::new();
+        for f in &frames {
+            let decoded = read_frame_buf(&mut slice, &mut body).expect("coalesced frame");
+            assert_eq!(&decoded, f);
+        }
+        assert!(slice.is_empty());
+        assert_eq!(
+            read_frame_buf(&mut slice, &mut body).unwrap_err(),
+            WireError::Closed,
+            "exhausted buffer ends on a frame boundary"
+        );
     }
 
     #[test]

@@ -24,7 +24,7 @@ pub mod server;
 
 pub use client::RemoteClient;
 pub use codec::{
-    encode_frame, read_frame, write_frame, Frame, WireError, HEADER_LEN, MAX_BODY, WIRE_MAGIC,
-    WIRE_VERSION,
+    encode_frame, encode_frame_into, read_frame, read_frame_buf, write_frame, write_frame_buf,
+    Frame, WireError, HEADER_LEN, MAX_BODY, WIRE_MAGIC, WIRE_VERSION,
 };
 pub use server::WireServer;

@@ -22,10 +22,13 @@
 use crate::coordinator::batcher::{BatcherStats, ServeError};
 use crate::coordinator::calibrator::CalibratorShared;
 use crate::coordinator::service::{CimService, Job, Placement, RoutedReply, ServiceClient};
-use crate::coordinator::wire::codec::{read_frame, write_frame, Frame};
+use crate::coordinator::wire::codec::{
+    encode_frame_into, read_frame_buf, write_frame, write_frame_buf, Frame,
+};
+use std::io::Write;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver};
+use std::sync::mpsc::{channel, Receiver, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -180,8 +183,12 @@ fn handle_connection(
         std::thread::spawn(move || reply_pump(rrx, write))
     };
     let mut reader = stream;
+    // per-connection reusable buffers: frame bodies in, control-plane
+    // frames out (the submit path's replies reuse the pump's buffer)
+    let mut body_buf: Vec<u8> = Vec::new();
+    let mut ctrl_buf: Vec<u8> = Vec::new();
     loop {
-        match read_frame(&mut reader) {
+        match read_frame_buf(&mut reader, &mut body_buf) {
             Ok(Frame::Submit { id, job, opts }) => {
                 let cores = svc.cores();
                 if let Placement::Pinned(core) = opts.placement {
@@ -211,17 +218,22 @@ fn handle_connection(
             Ok(Frame::StatsReq { id }) => {
                 let stats: Vec<BatcherStats> =
                     live.iter().map(|s| *s.lock().unwrap()).collect();
-                if write_frame(&mut *write.lock().unwrap(), &Frame::StatsReply { id, stats })
-                    .is_err()
+                if write_frame_buf(
+                    &mut *write.lock().unwrap(),
+                    &Frame::StatsReply { id, stats },
+                    &mut ctrl_buf,
+                )
+                .is_err()
                 {
                     break;
                 }
             }
             Ok(Frame::CalStatsReq { id }) => {
                 let stats = cal.as_ref().map(|c| c.snapshot()).unwrap_or_default();
-                if write_frame(
+                if write_frame_buf(
                     &mut *write.lock().unwrap(),
                     &Frame::CalStatsReply { id, stats },
+                    &mut ctrl_buf,
                 )
                 .is_err()
                 {
@@ -242,13 +254,48 @@ fn handle_connection(
     let _ = reader.shutdown(Shutdown::Both);
 }
 
-/// Stream routed replies onto the socket in completion order.
+/// Stream routed replies onto the socket in completion order, coalescing
+/// every reply already waiting at each wakeup into ONE `write_all` +
+/// `flush` — under load the framing/syscall cost amortizes across the
+/// whole dispatch round instead of being paid per reply. The coalesce
+/// run is bounded so a slow reader caps the buffer, not the heap.
 fn reply_pump(rrx: Receiver<RoutedReply>, write: Arc<Mutex<TcpStream>>) {
-    for r in rrx {
-        let core = if r.core == NO_CORE { u32::MAX } else { r.core as u32 };
-        let frame = Frame::Reply { id: r.id, core, result: r.result };
+    /// Replies coalesced into one socket write, at most.
+    const MAX_COALESCED: usize = 256;
+    /// Byte budget per coalesced write: stop coalescing once the buffer
+    /// passes this, so many large `MacBatch` replies cannot pile into
+    /// one multi-gigabyte write (a single reply can still exceed it —
+    /// one frame must be contiguous — but never several together).
+    const MAX_COALESCED_BYTES: usize = 1 << 20;
+    let mut buf: Vec<u8> = Vec::new();
+    while let Ok(first) = rrx.recv() {
+        buf.clear();
+        encode_reply(first, &mut buf);
+        let mut coalesced = 1;
+        while coalesced < MAX_COALESCED && buf.len() < MAX_COALESCED_BYTES {
+            match rrx.try_recv() {
+                Ok(r) => {
+                    encode_reply(r, &mut buf);
+                    coalesced += 1;
+                }
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
         // a client that vanished mid-reply is not an error worth keeping
         // state for — keep consuming so no worker sink ever backs up
-        let _ = write_frame(&mut *write.lock().unwrap(), &frame);
+        let mut w = write.lock().unwrap();
+        let _ = w.write_all(&buf).and_then(|_| w.flush());
+        drop(w);
+        // an outsized round (giant single reply) must not pin its
+        // capacity for the connection's remaining lifetime
+        if buf.capacity() > 2 * MAX_COALESCED_BYTES {
+            buf = Vec::new();
+        }
     }
+}
+
+/// Append one routed reply to the coalesce buffer as a `Reply` frame.
+fn encode_reply(r: RoutedReply, buf: &mut Vec<u8>) {
+    let core = if r.core == NO_CORE { u32::MAX } else { r.core as u32 };
+    encode_frame_into(&Frame::Reply { id: r.id, core, result: r.result }, buf);
 }

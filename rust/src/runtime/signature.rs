@@ -166,6 +166,34 @@ impl CimRuntime {
         }
     }
 
+    /// `forward_batch` into a caller-owned output buffer. On the golden
+    /// backend this is the zero-copy serving form (the register sync
+    /// still refolds per call — that is the fallback's documented
+    /// overhead); the PJRT backend routes through the allocating path,
+    /// since the artifact owns its output tensors.
+    pub fn forward_batch_into(
+        &mut self,
+        x: &[i32],
+        batch: usize,
+        out: &mut Vec<u32>,
+    ) -> RtResult<()> {
+        assert_eq!(x.len(), batch * c::N_ROWS);
+        match &mut self.backend {
+            Backend::Golden(model) => {
+                Self::sync_golden(model, &self.trims, self.adc_refs);
+                model.forward_batch_into(x, batch, out);
+                Ok(())
+            }
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => {
+                let q = self.forward_batch_pjrt(x, batch)?;
+                out.clear();
+                out.extend_from_slice(&q);
+                Ok(())
+            }
+        }
+    }
+
     #[cfg(feature = "pjrt")]
     fn adc_consts(&self) -> TensorF32 {
         TensorF32::new(

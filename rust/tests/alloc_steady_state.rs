@@ -1,0 +1,103 @@
+//! Counting-allocator steady-state gate (deterministic, unlike wall-time
+//! floors): after warmup, the in-process Mac and MacBatch evaluation
+//! paths — the analog GEMM every serving worker drives per request —
+//! run with ZERO heap allocations. This pins the §Perf "zero-allocation
+//! hot path" refactor (DESIGN.md §11): `Folded` carries everything
+//! derivable at fold time, and the `_into` entry points reuse
+//! caller-owned scratch/output buffers.
+//!
+//! The whole gate lives in ONE `#[test]` so no concurrently running test
+//! can touch the global allocation counter mid-measurement.
+
+use acore_cim::analog::{consts as c, CimAnalogModel, MacScratch};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// System allocator wrapped with an allocation-event counter. Frees are
+/// not counted — the gate is about steady-state allocation pressure.
+struct CountingAlloc;
+
+static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn alloc_events() -> u64 {
+    ALLOC_EVENTS.load(Ordering::Relaxed)
+}
+
+/// Run `f` and return how many allocation events it performed.
+fn allocs_during<F: FnMut()>(mut f: F) -> u64 {
+    let before = alloc_events();
+    f();
+    alloc_events() - before
+}
+
+#[test]
+fn steady_state_mac_paths_allocate_nothing() {
+    let mut model = CimAnalogModel::ideal();
+    let weights = vec![40i32; c::N_ROWS * c::M_COLS];
+    model.program(&weights);
+    let x1 = vec![30i32; c::N_ROWS];
+    let x64: Vec<i32> = (0..64 * c::N_ROWS).map(|i| (i % 63) as i32 - 31).collect();
+    let mut out = Vec::new();
+
+    // warmup: the first calls fold the model and grow the scratch/output
+    // buffers to the largest batch used below
+    model.forward_batch_into(&x1, 1, &mut out);
+    model.forward_batch_into(&x64, 64, &mut out);
+
+    // Mac path: one request per call, many calls — zero allocations
+    let macs = allocs_during(|| {
+        for _ in 0..256 {
+            model.forward_batch_into(&x1, 1, &mut out);
+        }
+    });
+    assert_eq!(macs, 0, "Mac path allocated {macs} times in steady state");
+
+    // MacBatch path: 64-wide native batches — zero allocations
+    let batches = allocs_during(|| {
+        for _ in 0..64 {
+            model.forward_batch_into(&x64, 64, &mut out);
+        }
+    });
+    assert_eq!(batches, 0, "MacBatch path allocated {batches} times in steady state");
+
+    // DNN tile path: a pre-folded tile evaluated through caller-owned
+    // scratch — zero allocations after the same warmup
+    let tile = model.fold_tile(&weights);
+    let mut scratch = MacScratch::new();
+    model.forward_folded_into(&tile, &x64, 64, &mut scratch, &mut out);
+    let tiles = allocs_during(|| {
+        for _ in 0..64 {
+            model.forward_folded_into(&tile, &x1, 1, &mut scratch, &mut out);
+            model.forward_folded_into(&tile, &x64, 64, &mut scratch, &mut out);
+        }
+    });
+    assert_eq!(tiles, 0, "tile path allocated {tiles} times in steady state");
+
+    // the outputs are still real: same codes as the allocating wrappers
+    model.forward_batch_into(&x1, 1, &mut out);
+    assert_eq!(out, model.forward_batch(&x1, 1));
+}
