@@ -1,0 +1,318 @@
+//! Per-file index over the lexed token stream: `#[cfg(test)]` spans
+//! (exempt from the rules — test code may panic freely), function items
+//! with their body token ranges (rule scoping for the `_into` kernel
+//! set), and parsed `// lint: allow(...)` suppression comments.
+
+use super::lexer::{lex, Kind, Token};
+
+/// A function item: `name` plus the raw-token index range of its body
+/// (inclusive of both braces). Trait method declarations without a body
+/// are not recorded.
+#[derive(Debug, Clone)]
+pub struct FnItem {
+    pub name: String,
+    /// Raw token indices `[open_brace, close_brace]` of the body.
+    pub body: (usize, usize),
+    pub line: usize,
+}
+
+/// One parsed `// lint: allow(<rule>) — <justification>` comment.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    pub rule: String,
+    pub line: usize,
+    /// False when no justification text follows the `)` — itself a
+    /// violation (`lint_allow_justification`).
+    pub justified: bool,
+}
+
+/// Everything the rules need to know about one source file.
+pub struct FileIndex<'a> {
+    /// Path exactly as handed to the linter.
+    pub path: String,
+    /// Path portion after the last `src/` separator (or the whole path)
+    /// — what rule scoping matches against, so real paths
+    /// (`rust/src/coordinator/batcher.rs`) and fixture virtual paths
+    /// (`coordinator/batcher.rs`) behave identically.
+    pub rel: String,
+    pub tokens: Vec<Token<'a>>,
+    /// Raw-token index ranges (inclusive) of `#[cfg(test)] mod` items.
+    pub test_spans: Vec<(usize, usize)>,
+    pub fns: Vec<FnItem>,
+    pub allows: Vec<Allow>,
+}
+
+impl<'a> FileIndex<'a> {
+    pub fn build(path: &str, text: &'a str) -> Self {
+        let tokens = lex(text);
+        let rel = match path.rfind("src/") {
+            Some(at) => path[at + 4..].to_string(),
+            None => path.to_string(),
+        };
+        let test_spans = find_test_spans(&tokens);
+        let fns = find_fns(&tokens);
+        let allows = find_allows(&tokens);
+        Self { path: path.to_string(), rel, tokens, test_spans, fns, allows }
+    }
+
+    /// True when raw token index `i` lies inside a `#[cfg(test)] mod`.
+    pub fn in_test(&self, i: usize) -> bool {
+        self.test_spans.iter().any(|&(lo, hi)| lo <= i && i <= hi)
+    }
+
+    /// Index of the previous non-trivia token before raw index `i`.
+    pub fn prev_significant(&self, i: usize) -> Option<usize> {
+        (0..i).rev().find(|&j| !self.tokens[j].is_trivia())
+    }
+
+    /// Index of the next non-trivia token after raw index `i`.
+    pub fn next_significant(&self, i: usize) -> Option<usize> {
+        (i + 1..self.tokens.len()).find(|&j| !self.tokens[j].is_trivia())
+    }
+
+    /// A justified allow for `rule` on `line` or the line directly above.
+    pub fn allowed(&self, rule: &str, line: usize) -> bool {
+        self.allows.iter().any(|a| {
+            a.justified && a.rule == rule && (a.line == line || a.line + 1 == line)
+        })
+    }
+}
+
+/// Match the raw-token suffix `# [ cfg ( test ) ]` ending at `close`,
+/// i.e. decide whether the attribute list just closed is `#[cfg(test)]`.
+fn is_cfg_test_attr(tokens: &[Token<'_>], open: usize, close: usize) -> bool {
+    let inner: Vec<&str> = tokens[open + 1..close]
+        .iter()
+        .filter(|t| !t.is_trivia())
+        .map(|t| t.text)
+        .collect();
+    inner == ["cfg", "(", "test", ")"]
+}
+
+/// Find `#[cfg(test)] mod <name> { … }` spans; the span covers the `#`
+/// through the matching close brace.
+fn find_test_spans(tokens: &[Token<'_>]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let mut i = 0;
+    while i < tokens.len() {
+        if tokens[i].kind == Kind::Punct && tokens[i].text == "#" {
+            if let Some((attr_open, attr_close)) = attr_brackets(tokens, i) {
+                if is_cfg_test_attr(tokens, attr_open, attr_close) {
+                    // skip any further attributes between cfg(test) and the item
+                    let mut j = attr_close + 1;
+                    while j < tokens.len()
+                        && tokens[j].kind == Kind::Punct
+                        && tokens[j].text == "#"
+                    {
+                        match attr_brackets(tokens, j) {
+                            Some((_, c)) => j = c + 1,
+                            None => break,
+                        }
+                    }
+                    j = skip_trivia(tokens, j);
+                    if j < tokens.len() && tokens[j].text == "mod" {
+                        if let Some(open) =
+                            (j..tokens.len()).find(|&k| tokens[k].text == "{")
+                        {
+                            if let Some(close) = match_brace(tokens, open) {
+                                spans.push((i, close));
+                                i = close + 1;
+                                continue;
+                            }
+                        }
+                    }
+                }
+                i = attr_close + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    spans
+}
+
+/// For a `#` at `at`, return the `[`/`]` raw indices of its attribute
+/// bracket list.
+fn attr_brackets(tokens: &[Token<'_>], at: usize) -> Option<(usize, usize)> {
+    let open = skip_trivia(tokens, at + 1);
+    if open >= tokens.len() || tokens[open].text != "[" {
+        return None;
+    }
+    let mut depth = 0usize;
+    for (k, t) in tokens.iter().enumerate().skip(open) {
+        if t.kind != Kind::Punct {
+            continue;
+        }
+        match t.text {
+            "[" => depth += 1,
+            "]" => {
+                depth = depth.saturating_sub(1);
+                if depth == 0 {
+                    return Some((open, k));
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+fn skip_trivia(tokens: &[Token<'_>], mut i: usize) -> usize {
+    while i < tokens.len() && tokens[i].is_trivia() {
+        i += 1;
+    }
+    i
+}
+
+/// Given the raw index of a `{`, return the raw index of its matching
+/// `}` (None when unbalanced).
+pub fn match_brace(tokens: &[Token<'_>], open: usize) -> Option<usize> {
+    let mut depth = 0usize;
+    for (k, t) in tokens.iter().enumerate().skip(open) {
+        if t.kind != Kind::Punct {
+            continue;
+        }
+        match t.text {
+            "{" => depth += 1,
+            "}" => {
+                depth = depth.saturating_sub(1);
+                if depth == 0 {
+                    return Some(k);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Find every `fn <name> … { … }` item and its body token range. The
+/// body opener is the first `{` after the name at parenthesis depth 0;
+/// a `;` at depth 0 first means a bodyless trait declaration.
+fn find_fns(tokens: &[Token<'_>]) -> Vec<FnItem> {
+    let mut fns = Vec::new();
+    let mut i = 0;
+    while i < tokens.len() {
+        if tokens[i].kind == Kind::Ident && tokens[i].text == "fn" {
+            let name_at = skip_trivia(tokens, i + 1);
+            if name_at < tokens.len() && tokens[name_at].kind == Kind::Ident {
+                let mut paren = 0isize;
+                let mut k = name_at + 1;
+                let mut body = None;
+                while k < tokens.len() {
+                    let t = &tokens[k];
+                    if t.kind == Kind::Punct {
+                        match t.text {
+                            "(" => paren += 1,
+                            ")" => paren -= 1,
+                            ";" if paren == 0 => break,
+                            "{" if paren == 0 => {
+                                body = match_brace(tokens, k).map(|close| (k, close));
+                                break;
+                            }
+                            _ => {}
+                        }
+                    }
+                    k += 1;
+                }
+                if let Some(range) = body {
+                    fns.push(FnItem {
+                        name: tokens[name_at].text.to_string(),
+                        body: range,
+                        line: tokens[i].line,
+                    });
+                    // do not skip past the body: nested fns are indexed too
+                }
+            }
+            i = name_at + 1;
+            continue;
+        }
+        i += 1;
+    }
+    fns
+}
+
+/// Parse `lint: allow(<rule>)` suppressions out of line comments. The
+/// justification is whatever non-separator text follows the `)`.
+fn find_allows(tokens: &[Token<'_>]) -> Vec<Allow> {
+    let mut allows = Vec::new();
+    for t in tokens {
+        if t.kind != Kind::LineComment {
+            continue;
+        }
+        let Some(lint_at) = t.text.find("lint:") else { continue };
+        let rest = &t.text[lint_at + 5..];
+        let Some(allow_at) = rest.find("allow(") else { continue };
+        let after_open = &rest[allow_at + 6..];
+        let Some(close) = after_open.find(')') else { continue };
+        let rule = after_open[..close].trim().to_string();
+        // Only well-formed rule names count as suppressions; prose like
+        // `allow(<rule>)` in doc comments must not parse as one.
+        if rule.is_empty()
+            || !rule.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+        {
+            continue;
+        }
+        let tail = after_open[close + 1..]
+            .trim_start_matches(|c: char| {
+                c.is_whitespace() || matches!(c, '—' | '–' | '-' | ':' | ',')
+            })
+            .trim();
+        allows.push(Allow { rule, line: t.line, justified: !tail.is_empty() });
+    }
+    allows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cfg_test_mod_span_is_exempt() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\nfn after() {}\n";
+        let idx = FileIndex::build("coordinator/batcher.rs", src);
+        assert_eq!(idx.test_spans.len(), 1);
+        let unwrap_at = idx
+            .tokens
+            .iter()
+            .position(|t| t.text == "unwrap")
+            .expect("unwrap token present");
+        assert!(idx.in_test(unwrap_at));
+        let after_at = idx.tokens.iter().position(|t| t.text == "after").unwrap();
+        assert!(!idx.in_test(after_at));
+    }
+
+    #[test]
+    fn fn_bodies_are_ranged_and_declarations_skipped() {
+        let src = "trait T { fn rows(&self) -> usize; fn go(&self) { work(); } }\n\
+                   pub fn forward_batch_into(x: &[i32], out: &mut Vec<u32>) { out.clear(); }\n";
+        let idx = FileIndex::build("analog/mod.rs", src);
+        let names: Vec<&str> = idx.fns.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["go", "forward_batch_into"]);
+        let f = &idx.fns[1];
+        assert_eq!(idx.tokens[f.body.0].text, "{");
+        assert_eq!(idx.tokens[f.body.1].text, "}");
+    }
+
+    #[test]
+    fn allow_comments_parse_with_and_without_justification() {
+        let src = "a(); // lint: allow(panic_free) — startup-only, before serving\n\
+                   b(); // lint: allow(lock_across_io)\n";
+        let idx = FileIndex::build("x.rs", src);
+        assert_eq!(idx.allows.len(), 2);
+        assert!(idx.allows[0].justified);
+        assert_eq!(idx.allows[0].rule, "panic_free");
+        assert!(!idx.allows[1].justified);
+        assert!(idx.allowed("panic_free", 1));
+        assert!(idx.allowed("panic_free", 2), "allow reaches the next line");
+        assert!(!idx.allowed("lock_across_io", 2), "unjustified allow suppresses nothing");
+    }
+
+    #[test]
+    fn rel_path_strips_through_src() {
+        let idx = FileIndex::build("rust/src/coordinator/wire/server.rs", "");
+        assert_eq!(idx.rel, "coordinator/wire/server.rs");
+        let idx2 = FileIndex::build("coordinator/batcher.rs", "");
+        assert_eq!(idx2.rel, "coordinator/batcher.rs");
+    }
+}

@@ -1,0 +1,436 @@
+//! Minimal Rust lexer for the lint rules (syn/proc-macro2 are not
+//! vendored). Produces a flat token stream with source lines; enough
+//! fidelity that the rules never mistake a string literal, comment, or
+//! lifetime for code. Not a full grammar: shebangs, `c"…"` literals, and
+//! other exotica simply lex as punctuation/unknown, which is safe for
+//! rule matching (rules key on identifiers and bracket structure).
+
+/// Token classes the rules discriminate on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// Identifier or keyword (including raw `r#ident`).
+    Ident,
+    /// `'a`, `'static` — disambiguated from char literals.
+    Lifetime,
+    /// Integer literal (no `.`), e.g. `42`, `0xAC1E`, `1_000u64`.
+    Int,
+    /// Float literal, e.g. `1.5e3`.
+    Float,
+    /// Any string-ish literal: `"…"`, `r#"…"#`, `b"…"`, `'c'`, `b'c'`.
+    Literal,
+    /// `// …` line comment (text includes the `//`).
+    LineComment,
+    /// `/* … */` block comment, nesting handled (text includes markers).
+    BlockComment,
+    /// Single punctuation character: `. ( ) [ ] { } ; : ! # ? & …`.
+    Punct,
+}
+
+/// One lexed token borrowing the source text.
+#[derive(Debug, Clone, Copy)]
+pub struct Token<'a> {
+    pub kind: Kind,
+    pub text: &'a str,
+    /// 1-based line of the token's first byte.
+    pub line: usize,
+}
+
+impl Token<'_> {
+    /// True for tokens the rules should skip when matching code patterns.
+    pub fn is_trivia(&self) -> bool {
+        matches!(self.kind, Kind::LineComment | Kind::BlockComment)
+    }
+}
+
+/// Lex `src` into tokens. Total: any byte sequence produces a token
+/// stream (malformed input degrades to `Punct`/`Literal` tokens rather
+/// than failing — the linter must never refuse to scan a file).
+pub fn lex(src: &str) -> Vec<Token<'_>> {
+    Lexer { b: src.as_bytes(), src, i: 0, line: 1 }.run()
+}
+
+struct Lexer<'a> {
+    b: &'a [u8],
+    src: &'a str,
+    i: usize,
+    line: usize,
+}
+
+impl<'a> Lexer<'a> {
+    fn run(mut self) -> Vec<Token<'a>> {
+        let mut out = Vec::new();
+        while let Some(c) = self.peek() {
+            let start = self.i;
+            let line = self.line;
+            let kind = match c {
+                b' ' | b'\t' | b'\r' | b'\n' => {
+                    self.bump();
+                    continue;
+                }
+                b'/' if self.peek_at(1) == Some(b'/') => self.line_comment(),
+                b'/' if self.peek_at(1) == Some(b'*') => self.block_comment(),
+                b'"' => self.string(),
+                b'\'' => self.quote(),
+                b'b' | b'r' if self.literal_prefix() => self.prefixed_literal(),
+                c if c == b'_' || c.is_ascii_alphabetic() => self.ident(),
+                c if c.is_ascii_digit() => self.number(),
+                _ => {
+                    self.bump();
+                    Kind::Punct
+                }
+            };
+            out.push(Token { kind, text: &self.src[start..self.i], line });
+        }
+        out
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn peek_at(&self, off: usize) -> Option<u8> {
+        self.b.get(self.i + off).copied()
+    }
+
+    fn bump(&mut self) {
+        if self.peek() == Some(b'\n') {
+            self.line += 1;
+        }
+        self.i += 1;
+    }
+
+    fn line_comment(&mut self) -> Kind {
+        while let Some(c) = self.peek() {
+            if c == b'\n' {
+                break;
+            }
+            self.bump();
+        }
+        Kind::LineComment
+    }
+
+    fn block_comment(&mut self) -> Kind {
+        self.bump(); // /
+        self.bump(); // *
+        let mut depth = 1usize;
+        while depth > 0 {
+            match (self.peek(), self.peek_at(1)) {
+                (Some(b'/'), Some(b'*')) => {
+                    depth += 1;
+                    self.bump();
+                    self.bump();
+                }
+                (Some(b'*'), Some(b'/')) => {
+                    depth -= 1;
+                    self.bump();
+                    self.bump();
+                }
+                (Some(_), _) => self.bump(),
+                (None, _) => break, // unterminated: scan to EOF
+            }
+        }
+        Kind::BlockComment
+    }
+
+    /// Double-quoted string with escapes.
+    fn string(&mut self) -> Kind {
+        self.bump(); // opening "
+        while let Some(c) = self.peek() {
+            match c {
+                b'\\' => {
+                    self.bump();
+                    if self.peek().is_some() {
+                        self.bump();
+                    }
+                }
+                b'"' => {
+                    self.bump();
+                    break;
+                }
+                _ => self.bump(),
+            }
+        }
+        Kind::Literal
+    }
+
+    /// `'` starts either a lifetime (`'a`, `'static`) or a char literal
+    /// (`'x'`, `'\n'`, `'\u{1F600}'`). Lifetime iff the next char starts
+    /// an identifier and the char after it does not close a quote —
+    /// `'a'` is a char, `'a` followed by anything else is a lifetime.
+    fn quote(&mut self) -> Kind {
+        self.bump(); // '
+        match self.peek() {
+            Some(c) if c == b'_' || c.is_ascii_alphabetic() => {
+                if self.peek_at(1) == Some(b'\'') {
+                    self.bump(); // the char
+                    self.bump(); // closing '
+                    Kind::Literal
+                } else {
+                    while let Some(c) = self.peek() {
+                        if c == b'_' || c.is_ascii_alphanumeric() {
+                            self.bump();
+                        } else {
+                            break;
+                        }
+                    }
+                    Kind::Lifetime
+                }
+            }
+            Some(b'\\') => {
+                self.bump();
+                if self.peek().is_some() {
+                    self.bump(); // escape head (n, t, u, ', \, …)
+                }
+                // consume up to the closing quote (covers \u{…})
+                while let Some(c) = self.peek() {
+                    self.bump();
+                    if c == b'\'' {
+                        break;
+                    }
+                }
+                Kind::Literal
+            }
+            Some(_) => {
+                self.bump(); // the char (possibly multi-byte; close below)
+                while let Some(c) = self.peek() {
+                    let done = c == b'\'';
+                    self.bump();
+                    if done {
+                        break;
+                    }
+                }
+                Kind::Literal
+            }
+            None => Kind::Punct,
+        }
+    }
+
+    /// True when the `b`/`r` at the cursor starts a literal
+    /// (`b"`, `b'`, `br`, `r"`, `r#"`) rather than an identifier. Raw
+    /// identifiers (`r#match`) are NOT literals and return false.
+    fn literal_prefix(&self) -> bool {
+        let c0 = self.peek();
+        match (c0, self.peek_at(1)) {
+            (Some(b'b'), Some(b'"')) | (Some(b'b'), Some(b'\'')) => true,
+            (Some(b'b'), Some(b'r')) => {
+                matches!(self.peek_at(2), Some(b'"') | Some(b'#'))
+            }
+            (Some(b'r'), Some(b'"')) => true,
+            (Some(b'r'), Some(b'#')) => {
+                // r#"…"# raw string vs r#ident raw identifier: a raw
+                // string's hashes are followed by `"`.
+                let mut j = 1;
+                while self.peek_at(j) == Some(b'#') {
+                    j += 1;
+                }
+                self.peek_at(j) == Some(b'"')
+            }
+            _ => false,
+        }
+    }
+
+    /// Lex `b"…"`, `b'…'`, `r"…"`, `r#"…"#`, `br#"…"#`.
+    fn prefixed_literal(&mut self) -> Kind {
+        if self.peek() == Some(b'b') {
+            self.bump();
+        }
+        match self.peek() {
+            Some(b'\'') => self.quote_char_only(),
+            Some(b'"') => self.string(),
+            Some(b'r') => {
+                self.bump();
+                self.raw_string()
+            }
+            Some(b'#') => self.raw_string(),
+            _ => Kind::Literal,
+        }
+    }
+
+    /// Byte-char body after `b` (always a char literal, never a lifetime).
+    fn quote_char_only(&mut self) -> Kind {
+        self.bump(); // '
+        while let Some(c) = self.peek() {
+            if c == b'\\' {
+                self.bump();
+                if self.peek().is_some() {
+                    self.bump();
+                }
+            } else {
+                let done = c == b'\'';
+                self.bump();
+                if done {
+                    break;
+                }
+            }
+        }
+        Kind::Literal
+    }
+
+    /// Raw string body starting at the `#`s or `"` (the `r` is consumed).
+    fn raw_string(&mut self) -> Kind {
+        let mut hashes = 0usize;
+        while self.peek() == Some(b'#') {
+            hashes += 1;
+            self.bump();
+        }
+        if self.peek() != Some(b'"') {
+            return Kind::Literal; // malformed; degrade gracefully
+        }
+        self.bump(); // opening "
+        'scan: while let Some(c) = self.peek() {
+            self.bump();
+            if c == b'"' {
+                for j in 0..hashes {
+                    if self.peek_at(j) != Some(b'#') {
+                        continue 'scan;
+                    }
+                }
+                for _ in 0..hashes {
+                    self.bump();
+                }
+                break;
+            }
+        }
+        Kind::Literal
+    }
+
+    fn ident(&mut self) -> Kind {
+        // raw identifier prefix r# (literal_prefix already excluded r#")
+        if self.peek() == Some(b'r') && self.peek_at(1) == Some(b'#') {
+            self.bump();
+            self.bump();
+        }
+        while let Some(c) = self.peek() {
+            if c == b'_' || c.is_ascii_alphanumeric() {
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        Kind::Ident
+    }
+
+    fn number(&mut self) -> Kind {
+        let mut float = false;
+        // digits, underscores, hex/bin/oct bodies, and type suffixes all
+        // continue the token; `1..2` must lex as Int `.` `.` Int.
+        while let Some(c) = self.peek() {
+            if c == b'_' || c.is_ascii_alphanumeric() {
+                self.bump();
+            } else if c == b'.'
+                && self.peek_at(1).is_some_and(|d| d.is_ascii_digit())
+                && !float
+            {
+                float = true;
+                self.bump();
+            } else if (c == b'+' || c == b'-')
+                && matches!(self.b.get(self.i.wrapping_sub(1)), Some(b'e') | Some(b'E'))
+                && float
+            {
+                self.bump(); // exponent sign in 1.5e-3
+            } else {
+                break;
+            }
+        }
+        if float {
+            Kind::Float
+        } else {
+            Kind::Int
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(Kind, &str)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_puncts_and_numbers() {
+        let t = kinds("let x = v[i] + 0xAC1E;");
+        assert_eq!(
+            t,
+            vec![
+                (Kind::Ident, "let"),
+                (Kind::Ident, "x"),
+                (Kind::Punct, "="),
+                (Kind::Ident, "v"),
+                (Kind::Punct, "["),
+                (Kind::Ident, "i"),
+                (Kind::Punct, "]"),
+                (Kind::Punct, "+"),
+                (Kind::Int, "0xAC1E"),
+                (Kind::Punct, ";"),
+            ]
+        );
+    }
+
+    #[test]
+    fn range_is_int_dot_dot_int() {
+        let t = kinds("a[1..20]");
+        assert_eq!(
+            t,
+            vec![
+                (Kind::Ident, "a"),
+                (Kind::Punct, "["),
+                (Kind::Int, "1"),
+                (Kind::Punct, "."),
+                (Kind::Punct, "."),
+                (Kind::Int, "20"),
+                (Kind::Punct, "]"),
+            ]
+        );
+        assert_eq!(kinds("1.5e-3"), vec![(Kind::Float, "1.5e-3")]);
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let t = kinds("fn f<'a>(x: &'a str) { let c = 'x'; let n = '\\n'; }");
+        let lifetimes: Vec<_> =
+            t.iter().filter(|(k, _)| *k == Kind::Lifetime).map(|(_, s)| *s).collect();
+        assert_eq!(lifetimes, vec!["'a", "'a"]);
+        let lits: Vec<_> =
+            t.iter().filter(|(k, _)| *k == Kind::Literal).map(|(_, s)| *s).collect();
+        assert_eq!(lits, vec!["'x'", "'\\n'"]);
+    }
+
+    #[test]
+    fn strings_and_raw_strings_hide_code() {
+        // none of the unwraps inside literals/comments may surface as Ident
+        let src = r####"let s = "x.unwrap()"; let r = r#"y.unwrap()"#; // z.unwrap()
+            /* nested /* block */ a.unwrap() */ let b = b"u.unwrap()";"####;
+        let idents: Vec<_> = lex(src)
+            .into_iter()
+            .filter(|t| t.kind == Kind::Ident)
+            .map(|t| t.text)
+            .collect();
+        assert!(!idents.contains(&"unwrap"), "idents: {idents:?}");
+        assert!(idents.contains(&"let"));
+    }
+
+    #[test]
+    fn raw_ident_is_ident_not_literal() {
+        let t = kinds("let r#match = 1;");
+        assert!(t.contains(&(Kind::Ident, "r#match")));
+    }
+
+    #[test]
+    fn comments_carry_text_and_lines() {
+        let toks = lex("a\n// lint: allow(x) — why\nb /* multi\nline */ c");
+        let comment = toks.iter().find(|t| t.kind == Kind::LineComment).unwrap();
+        assert!(comment.text.contains("lint: allow"));
+        assert_eq!(comment.line, 2);
+        let c_tok = toks.iter().find(|t| t.text == "c").unwrap();
+        assert_eq!(c_tok.line, 4);
+    }
+
+    #[test]
+    fn unterminated_input_still_lexes() {
+        assert!(!lex("let s = \"oops").is_empty());
+        assert!(!lex("/* never closed").is_empty());
+        assert!(!lex("r#\"raw").is_empty());
+    }
+}

@@ -1,0 +1,200 @@
+//! `acore-lint`: an in-repo static invariant checker (DESIGN.md §12).
+//!
+//! The serving stack depends on properties the compiler does not enforce:
+//! a `unwrap()` panic inside a batcher worker silently kills that core's
+//! dispatch loop, a stray allocation in an `_into` kernel undoes the
+//! zero-alloc steady state pinned by `tests/alloc_steady_state.rs`, and a
+//! mutex guard held across blocking wire I/O stalls every connection
+//! sharing the lock. This module enforces those invariants *statically*,
+//! in the repo's hand-rolled zero-dependency idiom (like [`crate::util::json`]):
+//! a lightweight Rust lexer ([`lexer`]), a per-file indexer that maps out
+//! `#[cfg(test)]` spans, function bodies, and suppression comments
+//! ([`index`]), and a rule engine ([`rules`]) with four project-specific
+//! rules:
+//!
+//! | rule                     | invariant pinned                                      |
+//! |--------------------------|-------------------------------------------------------|
+//! | `panic_free`             | serving threads never panic — no `unwrap`/`expect`/`panic!`/`unreachable!`/`todo!`/`unimplemented!`/`[i]`-indexing in non-test code of `coordinator/{batcher,service,cluster,calibrator}.rs` and `coordinator/wire/*`; errors flow through `ServeError`/`WireError` |
+//! | `hot_path_alloc`         | fold-time-specialized `*_into` kernels stay allocation-free — no `Vec::new`/`vec!`/`to_vec`/`clone`/`collect`/`format!`/`Box::new`/`to_string`/`to_owned`/`with_capacity` in their bodies (amortized `reserve`/`resize`/`push` are allowed; the runtime complement is the counting-allocator gate) |
+//! | `lock_across_io`         | no `Mutex`/`RwLock` guard live across `.send(`/`.recv(`/`write_all`/`flush`/`write_frame*` — blocking I/O under a lock serializes every peer |
+//! | `unsafe_block_safety`    | every `unsafe` block carries a `// SAFETY:` comment     |
+//!
+//! Deliberate exceptions are suppressed per site with
+//! `// lint: allow(<rule>) — <justification>` on the violating line or the
+//! line above. The justification text is mandatory: an allow without one
+//! is itself a violation (`lint_allow_justification`), so every
+//! suppression documents *why* the invariant bends there.
+//!
+//! Run it as `acore-cim lint [--json]`; CI runs it as a required job and
+//! additionally proves the gate fires by seeding a violation and
+//! asserting a non-zero exit.
+
+pub mod index;
+pub mod lexer;
+pub mod rules;
+
+use std::fmt;
+use std::path::Path;
+
+pub use index::FileIndex;
+pub use rules::{lint_file, RULE_NAMES};
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    /// Rule identifier (one of [`RULE_NAMES`]).
+    pub rule: &'static str,
+    /// Path as given to the linter (repo-relative in CLI use).
+    pub file: String,
+    /// 1-based source line.
+    pub line: usize,
+    /// Human-readable description of the violating construct.
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Aggregate result of linting a set of files.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    pub violations: Vec<Violation>,
+    pub files_scanned: usize,
+    /// Number of `lint: allow` suppressions that matched a would-be
+    /// violation (reported so dead allows are visible in `--json`).
+    pub allows_used: usize,
+}
+
+impl LintReport {
+    pub fn clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Render as a JSON document (hand-rolled; see `util/json.rs` for the
+    /// matching parser). Stable field order for diffable CI artifacts.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"files_scanned\": {},\n", self.files_scanned));
+        out.push_str(&format!("  \"allows_used\": {},\n", self.allows_used));
+        out.push_str(&format!("  \"violation_count\": {},\n", self.violations.len()));
+        out.push_str("  \"violations\": [\n");
+        for (i, v) in self.violations.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"rule\": {}, \"file\": {}, \"line\": {}, \"msg\": {}}}{}\n",
+                json_str(v.rule),
+                json_str(&v.file),
+                v.line,
+                json_str(&v.msg),
+                if i + 1 < self.violations.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+}
+
+/// Minimal JSON string escaping (mirrors `util::bench::json_str`).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Lint in-memory sources as `(virtual_path, text)` pairs. The virtual
+/// path decides rule scope exactly like a real path would (e.g.
+/// `"coordinator/batcher.rs"` opts into the `panic_free` serving set).
+/// This is the engine entry the fixture tests drive.
+pub fn lint_sources(files: &[(&str, &str)]) -> LintReport {
+    let mut report = LintReport::default();
+    for (path, text) in files {
+        let idx = FileIndex::build(path, text);
+        rules::lint_file(&idx, &mut report);
+        report.files_scanned += 1;
+    }
+    report.violations.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    report
+}
+
+/// Recursively collect `*.rs` files under `root` (sorted for stable
+/// output) and lint them. Returns `Err` on I/O failures — the CLI maps
+/// that to exit code 2, distinct from "violations found" (1).
+pub fn lint_tree(root: &Path) -> Result<LintReport, String> {
+    let mut paths = Vec::new();
+    collect_rs(root, &mut paths)?;
+    paths.sort();
+    let mut files = Vec::with_capacity(paths.len());
+    for p in &paths {
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| format!("cannot read {}: {e}", p.display()))?;
+        files.push((p.to_string_lossy().replace('\\', "/"), text));
+    }
+    let borrowed: Vec<(&str, &str)> =
+        files.iter().map(|(p, t)| (p.as_str(), t.as_str())).collect();
+    Ok(lint_sources(&borrowed))
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<(), String> {
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| format!("cannot read dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("bad dir entry under {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_json_is_parseable() {
+        let report = lint_sources(&[(
+            "coordinator/batcher.rs",
+            "fn f(v: &[u32]) -> u32 { v.first().copied().unwrap() }\n",
+        )]);
+        assert!(!report.clean());
+        let parsed = crate::util::json::parse(&report.to_json()).expect("lint json must parse");
+        let n = parsed.get("violation_count").and_then(|v| v.as_usize());
+        assert_eq!(n, Some(report.violations.len()));
+    }
+
+    #[test]
+    fn lint_tree_walks_this_crate() {
+        // The crate's own source tree must be reachable and lint clean —
+        // this is the same invariant CI enforces via `acore-cim lint`.
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        let report = lint_tree(&root).expect("src tree must be readable");
+        assert!(report.files_scanned > 10);
+        assert!(
+            report.clean(),
+            "lint violations in tree:\n{}",
+            report
+                .violations
+                .iter()
+                .map(|v| v.to_string())
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+}

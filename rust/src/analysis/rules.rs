@@ -1,0 +1,588 @@
+//! The four lint rules plus suppression hygiene (DESIGN.md §12 has the
+//! rule table and rationale). Each check is a conservative token-pattern
+//! match over the [`FileIndex`]: comments, strings, and `#[cfg(test)]`
+//! spans never produce violations, and every rule can be suppressed per
+//! site with `// lint: allow(<rule>) — <justification>`.
+
+use super::index::FileIndex;
+use super::lexer::Kind;
+use super::{LintReport, Violation};
+
+/// Every rule the engine knows, in reporting order.
+pub const RULE_NAMES: [&str; 5] = [
+    "panic_free",
+    "hot_path_alloc",
+    "lock_across_io",
+    "unsafe_block_safety",
+    "lint_allow_justification",
+];
+
+const PANIC_FREE: &str = RULE_NAMES[0];
+const HOT_PATH_ALLOC: &str = RULE_NAMES[1];
+const LOCK_ACROSS_IO: &str = RULE_NAMES[2];
+const UNSAFE_SAFETY: &str = RULE_NAMES[3];
+const ALLOW_JUSTIFICATION: &str = RULE_NAMES[4];
+
+/// Files whose non-test code runs on serving threads, where a panic is a
+/// silent core outage ([`PANIC_FREE`] scope).
+fn serving_scope(rel: &str) -> bool {
+    rel == "coordinator/batcher.rs"
+        || rel == "coordinator/service.rs"
+        || rel == "coordinator/cluster.rs"
+        || rel == "coordinator/calibrator.rs"
+        || rel.starts_with("coordinator/wire/")
+}
+
+/// Run every rule over one indexed file, appending to `report`.
+pub fn lint_file(idx: &FileIndex<'_>, report: &mut LintReport) {
+    if serving_scope(&idx.rel) {
+        panic_free(idx, report);
+    }
+    hot_path_alloc(idx, report);
+    lock_across_io(idx, report);
+    unsafe_block_safety(idx, report);
+    allow_hygiene(idx, report);
+}
+
+/// Emit unless a justified allow covers (rule, line).
+fn emit(idx: &FileIndex<'_>, report: &mut LintReport, rule: &'static str, line: usize, msg: String) {
+    if idx.allowed(rule, line) {
+        report.allows_used += 1;
+    } else {
+        report.violations.push(Violation { rule, file: idx.path.clone(), line, msg });
+    }
+}
+
+// ---- rule 1: panic-freedom in serving threads ---------------------------
+
+const PANIC_MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
+
+/// Keywords that can directly precede `[` without it being postfix
+/// indexing (`let [a, b] = …`, `for x in [..] …`, `= match v { .. }[..]`
+/// does not occur).
+const NON_POSTFIX_KEYWORDS: [&str; 12] = [
+    "let", "in", "return", "if", "else", "match", "mut", "ref", "move", "as", "break", "continue",
+];
+
+fn panic_free(idx: &FileIndex<'_>, report: &mut LintReport) {
+    let toks = &idx.tokens;
+    for (i, t) in toks.iter().enumerate() {
+        if t.is_trivia() || idx.in_test(i) {
+            continue;
+        }
+        match t.kind {
+            Kind::Ident if t.text == "unwrap" || t.text == "expect" => {
+                let prev_dot = idx
+                    .prev_significant(i)
+                    .is_some_and(|p| toks[p].kind == Kind::Punct && toks[p].text == ".");
+                let next_paren = idx
+                    .next_significant(i)
+                    .is_some_and(|n| toks[n].kind == Kind::Punct && toks[n].text == "(");
+                if prev_dot && next_paren {
+                    emit(
+                        idx,
+                        report,
+                        PANIC_FREE,
+                        t.line,
+                        format!(
+                            "`.{}()` can panic a serving thread; route the error through \
+                             ServeError/WireError instead",
+                            t.text
+                        ),
+                    );
+                }
+            }
+            Kind::Ident if PANIC_MACROS.contains(&t.text) => {
+                let next_bang = idx
+                    .next_significant(i)
+                    .is_some_and(|n| toks[n].kind == Kind::Punct && toks[n].text == "!");
+                if next_bang {
+                    emit(
+                        idx,
+                        report,
+                        PANIC_FREE,
+                        t.line,
+                        format!("`{}!` panics a serving thread; return an error instead", t.text),
+                    );
+                }
+            }
+            Kind::Punct if t.text == "[" => {
+                if postfix_index(idx, i) && !const_only_brackets(idx, i) {
+                    emit(
+                        idx,
+                        report,
+                        PANIC_FREE,
+                        t.line,
+                        "slice indexing can panic a serving thread; use .get()/.get_mut() or a \
+                         checked range"
+                            .to_string(),
+                    );
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Is the `[` at raw index `i` postfix indexing (`expr[...]`) rather than
+/// an array/slice literal, type, pattern, or attribute?
+fn postfix_index(idx: &FileIndex<'_>, i: usize) -> bool {
+    let Some(p) = idx.prev_significant(i) else { return false };
+    let prev = &idx.tokens[p];
+    match prev.kind {
+        Kind::Ident => !NON_POSTFIX_KEYWORDS.contains(&prev.text),
+        Kind::Punct => matches!(prev.text, ")" | "]" | "?"),
+        _ => false,
+    }
+}
+
+/// True when every significant token between `[` and its matching `]` is
+/// an integer literal or `.` — constant indices (`b[0]`) and constant
+/// ranges (`b[4..12]`, `b[..]`) cannot be out of bounds by a runtime
+/// value the types did not already pin.
+fn const_only_brackets(idx: &FileIndex<'_>, open: usize) -> bool {
+    let toks = &idx.tokens;
+    let mut depth = 0usize;
+    for t in toks.iter().skip(open) {
+        if t.kind == Kind::Punct {
+            match t.text {
+                "[" => depth += 1,
+                "]" => {
+                    depth = depth.saturating_sub(1);
+                    if depth == 0 {
+                        return true;
+                    }
+                    continue;
+                }
+                "." => continue,
+                _ => return false,
+            }
+            continue;
+        }
+        if t.is_trivia() {
+            continue;
+        }
+        if t.kind != Kind::Int {
+            return false;
+        }
+    }
+    true
+}
+
+// ---- rule 2: no allocation in `_into` kernels ---------------------------
+
+/// Method calls that allocate.
+const ALLOC_METHODS: [&str; 5] = ["to_vec", "clone", "collect", "to_string", "to_owned"];
+/// `Type::ctor` pairs that allocate.
+const ALLOC_CTORS: [(&str, &str); 5] = [
+    ("Vec", "new"),
+    ("Vec", "with_capacity"),
+    ("Box", "new"),
+    ("String", "new"),
+    ("String", "from"),
+];
+/// Macros that allocate.
+const ALLOC_MACROS: [&str; 2] = ["vec", "format"];
+
+fn hot_path_alloc(idx: &FileIndex<'_>, report: &mut LintReport) {
+    let toks = &idx.tokens;
+    for f in &idx.fns {
+        if !f.name.ends_with("_into") || idx.in_test(f.body.0) {
+            continue;
+        }
+        for i in f.body.0..=f.body.1.min(toks.len().saturating_sub(1)) {
+            let t = &toks[i];
+            if t.is_trivia() || t.kind != Kind::Ident {
+                continue;
+            }
+            let next_is = |p: usize, s: &str| {
+                idx.next_significant(p).is_some_and(|n| toks[n].text == s)
+            };
+            let hit: Option<String> = if ALLOC_MACROS.contains(&t.text) && next_is(i, "!") {
+                Some(format!("{}!", t.text))
+            } else if ALLOC_METHODS.contains(&t.text)
+                && idx.prev_significant(i).is_some_and(|p| toks[p].text == ".")
+                && next_is(i, "(")
+            {
+                Some(format!(".{}()", t.text))
+            } else if let Some(&(ty, ctor)) =
+                ALLOC_CTORS.iter().find(|&&(ty, _)| ty == t.text)
+            {
+                // match `Type :: ctor`
+                let c1 = idx.next_significant(i);
+                let c2 = c1.and_then(|n| idx.next_significant(n));
+                let c3 = c2.and_then(|n| idx.next_significant(n));
+                match (c1, c2, c3) {
+                    (Some(a), Some(b), Some(c))
+                        if toks[a].text == ":" && toks[b].text == ":" && toks[c].text == ctor =>
+                    {
+                        Some(format!("{ty}::{ctor}"))
+                    }
+                    _ => None,
+                }
+            } else {
+                None
+            };
+            if let Some(what) = hit {
+                emit(
+                    idx,
+                    report,
+                    HOT_PATH_ALLOC,
+                    t.line,
+                    format!(
+                        "allocating construct `{what}` inside `_into` kernel `{}` — the \
+                         fold-time-specialized set must stay allocation-free (DESIGN.md §11)",
+                        f.name
+                    ),
+                );
+            }
+        }
+    }
+}
+
+// ---- rule 3: no lock guard live across blocking I/O ---------------------
+
+/// Returns the I/O marker at `i` if the token is one: `.send(`,
+/// `.recv(`, `.write_all(`, `.flush(`, or a `write_frame`/
+/// `write_frame_buf` call (the repo's framed-write funnel).
+fn io_marker(idx: &FileIndex<'_>, i: usize) -> Option<&'static str> {
+    let toks = &idx.tokens;
+    let t = &toks[i];
+    if t.kind != Kind::Ident {
+        return None;
+    }
+    let next_paren =
+        idx.next_significant(i).is_some_and(|n| toks[n].kind == Kind::Punct && toks[n].text == "(");
+    if !next_paren {
+        return None;
+    }
+    let prev_dot = idx
+        .prev_significant(i)
+        .is_some_and(|p| toks[p].kind == Kind::Punct && toks[p].text == ".");
+    match t.text {
+        "send" if prev_dot => Some(".send("),
+        "recv" | "recv_timeout" if prev_dot => Some(".recv("),
+        "write_all" if prev_dot => Some(".write_all("),
+        "flush" if prev_dot => Some(".flush("),
+        "write_frame" => Some("write_frame("),
+        "write_frame_buf" => Some("write_frame_buf("),
+        _ => None,
+    }
+}
+
+/// Is token `i` a guard-acquiring call: `.lock(`, the repo's
+/// poison-tolerant `lock_unpoisoned(` helper (`util::sync`), or a
+/// zero-argument `.read()` / `.write()` (the `RwLock` forms — I/O
+/// `read`/`write` always take a buffer argument)?
+fn lock_call(idx: &FileIndex<'_>, i: usize) -> bool {
+    let toks = &idx.tokens;
+    if toks[i].kind != Kind::Ident {
+        return false;
+    }
+    let open = match idx.next_significant(i) {
+        Some(n) if toks[n].text == "(" => n,
+        _ => return false,
+    };
+    if toks[i].text == "lock_unpoisoned" {
+        return true;
+    }
+    let prev_dot = idx
+        .prev_significant(i)
+        .is_some_and(|p| toks[p].kind == Kind::Punct && toks[p].text == ".");
+    if !prev_dot {
+        return false;
+    }
+    match toks[i].text {
+        "lock" => true,
+        "read" | "write" => {
+            // zero-arg call: `(` immediately closed by `)`
+            idx.next_significant(open).is_some_and(|c| toks[c].text == ")")
+        }
+        _ => false,
+    }
+}
+
+struct Guard {
+    name: String,
+    /// Brace depth of the block the guard lives in: the guard dies when
+    /// that block's closing `}` brings the depth below this value.
+    depth: usize,
+    lock_line: usize,
+}
+
+/// Per-statement accumulator for the linear scan in [`lock_across_io`].
+#[derive(Default)]
+struct Stmt {
+    lock_line: Option<usize>,
+    io: Option<(&'static str, usize)>,
+    let_name: Option<String>,
+    /// First significant token was `if`/`while` — a lock bound by the
+    /// statement head scopes to the block it opens, not the enclosing one.
+    conditional: bool,
+    seen_any: bool,
+}
+
+/// Finish the current statement: a lock and an I/O marker in one
+/// statement is a violation; a `let`-bound lock registers a live guard.
+fn flush_stmt(
+    idx: &FileIndex<'_>,
+    report: &mut LintReport,
+    stmt: &mut Stmt,
+    guards: &mut Vec<Guard>,
+    depth: usize,
+    entering_block: bool,
+) {
+    if let (Some(lock_line), Some((what, io_line))) = (stmt.lock_line, stmt.io) {
+        emit(
+            idx,
+            report,
+            LOCK_ACROSS_IO,
+            io_line,
+            format!(
+                "blocking `{what}` in the same statement as a lock acquired on line \
+                 {lock_line} — the guard is held across the I/O"
+            ),
+        );
+    } else if let (Some(lock_line), Some(name)) = (stmt.lock_line, stmt.let_name.take()) {
+        let scope = if entering_block && stmt.conditional { depth + 1 } else { depth };
+        guards.push(Guard { name, depth: scope, lock_line });
+    }
+    *stmt = Stmt::default();
+}
+
+fn lock_across_io(idx: &FileIndex<'_>, report: &mut LintReport) {
+    let toks = &idx.tokens;
+    let mut depth = 0usize;
+    let mut guards: Vec<Guard> = Vec::new();
+    let mut stmt = Stmt::default();
+    let mut pending_let = false; // saw `let`, capturing the bound name
+
+    for (i, t) in toks.iter().enumerate() {
+        if t.is_trivia() || idx.in_test(i) {
+            continue;
+        }
+        if !stmt.seen_any {
+            stmt.seen_any = true;
+            stmt.conditional = t.kind == Kind::Ident && matches!(t.text, "if" | "while");
+        }
+        if pending_let {
+            // `let [mut] <name> = …` — only simple bindings are tracked;
+            // destructuring patterns record their first binder, which is
+            // enough for scope tracking even if `drop()` matching misses.
+            if t.kind == Kind::Ident && t.text == "mut" {
+                continue;
+            }
+            if t.kind == Kind::Ident {
+                stmt.let_name = Some(t.text.to_string());
+            }
+            pending_let = false;
+        }
+        match t.kind {
+            Kind::Punct => match t.text {
+                "{" => {
+                    flush_stmt(idx, report, &mut stmt, &mut guards, depth, true);
+                    depth += 1;
+                }
+                "}" => {
+                    flush_stmt(idx, report, &mut stmt, &mut guards, depth, false);
+                    depth = depth.saturating_sub(1);
+                    guards.retain(|g| g.depth <= depth);
+                }
+                ";" => {
+                    flush_stmt(idx, report, &mut stmt, &mut guards, depth, false);
+                }
+                _ => {}
+            },
+            Kind::Ident => {
+                if t.text == "let" {
+                    pending_let = true;
+                } else if t.text == "drop" {
+                    // `drop(<guard>)` releases early
+                    if let Some(open) = idx.next_significant(i) {
+                        if toks[open].text == "(" {
+                            if let Some(arg) = idx.next_significant(open) {
+                                let name = toks[arg].text;
+                                guards.retain(|g| g.name != name);
+                            }
+                        }
+                    }
+                } else if lock_call(idx, i) {
+                    if stmt.lock_line.is_none() {
+                        stmt.lock_line = Some(t.line);
+                    }
+                } else if let Some(what) = io_marker(idx, i) {
+                    if stmt.io.is_none() {
+                        stmt.io = Some((what, t.line));
+                    }
+                    if stmt.lock_line.is_none() {
+                        if let Some(g) = guards.last() {
+                            emit(
+                                idx,
+                                report,
+                                LOCK_ACROSS_IO,
+                                t.line,
+                                format!(
+                                    "blocking `{what}` while guard `{}` (locked on line {}) is \
+                                     still live — drop it before the I/O",
+                                    g.name, g.lock_line
+                                ),
+                            );
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+// ---- rule 4: unsafe blocks carry SAFETY comments ------------------------
+
+fn unsafe_block_safety(idx: &FileIndex<'_>, report: &mut LintReport) {
+    let toks = &idx.tokens;
+    for (i, t) in toks.iter().enumerate() {
+        if t.is_trivia() || idx.in_test(i) {
+            continue;
+        }
+        if t.kind != Kind::Ident || t.text != "unsafe" {
+            continue;
+        }
+        // `unsafe {` only — `unsafe fn`/`unsafe impl` document at the item
+        let opens_block =
+            idx.next_significant(i).is_some_and(|n| toks[n].text == "{");
+        if !opens_block {
+            continue;
+        }
+        let documented = toks.iter().any(|c| {
+            c.is_trivia()
+                && c.text.contains("SAFETY:")
+                && c.line + 3 >= t.line
+                && c.line <= t.line
+        });
+        if !documented {
+            emit(
+                idx,
+                report,
+                UNSAFE_SAFETY,
+                t.line,
+                "`unsafe` block without a `// SAFETY:` comment on the block or the lines \
+                 directly above"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+// ---- suppression hygiene ------------------------------------------------
+
+fn allow_hygiene(idx: &FileIndex<'_>, report: &mut LintReport) {
+    for a in &idx.allows {
+        if !RULE_NAMES.contains(&a.rule.as_str()) {
+            report.violations.push(Violation {
+                rule: ALLOW_JUSTIFICATION,
+                file: idx.path.clone(),
+                line: a.line,
+                msg: format!("`lint: allow({})` names a rule the engine does not have", a.rule),
+            });
+        } else if !a.justified {
+            report.violations.push(Violation {
+                rule: ALLOW_JUSTIFICATION,
+                file: idx.path.clone(),
+                line: a.line,
+                msg: format!(
+                    "`lint: allow({})` without a justification — every suppression must say why",
+                    a.rule
+                ),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lint_sources;
+
+    fn rules_hit(path: &str, src: &str) -> Vec<&'static str> {
+        lint_sources(&[(path, src)]).violations.iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn unwrap_flagged_only_in_serving_scope() {
+        let src = "fn f(v: &[u32]) -> u32 { v.first().copied().unwrap() }\n";
+        assert_eq!(rules_hit("coordinator/batcher.rs", src), vec![PANIC_FREE]);
+        assert!(rules_hit("analog/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn const_indexing_passes_dynamic_indexing_fails() {
+        let ok = "fn f(h: &[u8; 16]) -> u8 { h[0] ^ h[12] }\n\
+                  fn g(h: &[u8]) -> &[u8] { &h[4..12] }\n";
+        assert!(rules_hit("coordinator/wire/codec.rs", ok).is_empty());
+        let bad = "fn f(h: &[u8], i: usize) -> u8 { h[i] }\n";
+        assert_eq!(rules_hit("coordinator/wire/codec.rs", bad), vec![PANIC_FREE]);
+    }
+
+    #[test]
+    fn justified_allow_suppresses_and_counts() {
+        let src = "fn f(h: &[u8], at: usize) -> u8 {\n    // lint: allow(panic_free) — bounds \
+                   checked by caller\n    h[at]\n}\n";
+        let report = lint_sources(&[("coordinator/wire/codec.rs", src)]);
+        assert!(report.clean(), "{:?}", report.violations);
+        assert_eq!(report.allows_used, 1);
+    }
+
+    #[test]
+    fn alloc_in_into_kernel_flagged_everywhere() {
+        let src = "pub fn forward_batch_into(x: &[i32], out: &mut Vec<u32>) {\n    let tmp: \
+                   Vec<i32> = x.to_vec();\n    out.push(tmp.len() as u32);\n}\n";
+        assert_eq!(rules_hit("analog/mod.rs", src), vec![HOT_PATH_ALLOC]);
+        let ok = "pub fn forward_batch_into(x: &[i32], out: &mut Vec<u32>) {\n    \
+                  out.resize(x.len(), 0);\n    out.clear();\n}\n";
+        assert!(rules_hit("analog/mod.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn lock_across_send_same_statement() {
+        let src = "fn f(m: &std::sync::Mutex<u32>, tx: &Sender<u32>) {\n    \
+                   tx.send(*m.lock().unwrap_or_else(|p| p.into_inner())).ok();\n}\n";
+        assert_eq!(rules_hit("runtime/mod.rs", src), vec![LOCK_ACROSS_IO]);
+    }
+
+    #[test]
+    fn let_guard_live_across_write_all_flagged_drop_clears() {
+        let bad = "fn f(m: &Mutex<W>, out: &mut O) {\n    let g = m.lock();\n    \
+                   out.write_all(b\"x\");\n}\n";
+        assert_eq!(rules_hit("runtime/mod.rs", bad), vec![LOCK_ACROSS_IO]);
+        let ok = "fn f(m: &Mutex<W>, out: &mut O) {\n    let g = m.lock();\n    drop(g);\n    \
+                  out.write_all(b\"x\");\n}\n";
+        assert!(rules_hit("runtime/mod.rs", ok).is_empty());
+        let scoped = "fn f(m: &Mutex<W>, out: &mut O) {\n    { let g = m.lock(); }\n    \
+                      out.write_all(b\"x\");\n}\n";
+        assert!(rules_hit("runtime/mod.rs", scoped).is_empty());
+    }
+
+    #[test]
+    fn unsafe_needs_safety_comment() {
+        let bad = "fn f() { unsafe { core::hint::unreachable_unchecked() } }\n";
+        assert_eq!(rules_hit("soc/mod.rs", bad), vec![UNSAFE_SAFETY]);
+        let ok = "fn f() {\n    // SAFETY: caller guarantees the invariant\n    unsafe { \
+                  core::hint::unreachable_unchecked() }\n}\n";
+        assert!(rules_hit("soc/mod.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn unjustified_or_unknown_allow_is_a_violation() {
+        let src = "fn f() {} // lint: allow(panic_free)\n";
+        assert_eq!(rules_hit("analog/mod.rs", src), vec![ALLOW_JUSTIFICATION]);
+        let unknown = "fn f() {} // lint: allow(panic_freee) — typo\n";
+        assert_eq!(rules_hit("analog/mod.rs", unknown), vec![ALLOW_JUSTIFICATION]);
+    }
+
+    #[test]
+    fn test_mod_code_is_exempt() {
+        let src = "fn live() -> u32 { 1 }\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { \
+                   assert_eq!(super::live(), vec![1][0]); x.unwrap(); }\n}\n";
+        assert!(rules_hit("coordinator/batcher.rs", src).is_empty());
+    }
+}

@@ -20,12 +20,20 @@
 //! with [`ServeError::DeadlineExceeded`] (never silently dropped). A
 //! client whose worker has shut down gets [`ServeError::Disconnected`]
 //! instead of a panic.
+//!
+//! This file is panic-free by policy: a panic here is a silent core
+//! outage, so `acore-cim lint` (rule `panic_free`, DESIGN.md §12) and the
+//! clippy deny below gate every unwrap/expect/panic/index out of non-test
+//! code.
+
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 
 use crate::analog::consts as c;
 use crate::coordinator::bisc::BiscEngine;
 use crate::coordinator::service::{
     CoreContext, CoreHealth, Job, JobEnvelope, JobReply, TileRef,
 };
+use crate::util::sync::lock_unpoisoned;
 use std::collections::BinaryHeap;
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::Arc;
@@ -455,19 +463,17 @@ impl Batcher {
         scratch.pendings.clear();
         scratch.pendings.push(first);
         while scratch.pendings.len() < self.max_batch {
-            match queue.peek() {
-                Some(p)
-                    if kind_of(&p.env.job) == JobKind::Mac
-                        && gate_seq.map_or(true, |g| p.seq < g) =>
-                {
-                    let p = queue.pop().expect("peeked element");
-                    if p.expired() {
-                        Self::expire(p, ctx, stats);
-                    } else {
-                        scratch.pendings.push(p);
-                    }
-                }
-                _ => break,
+            let eligible = queue.peek().is_some_and(|p| {
+                kind_of(&p.env.job) == JobKind::Mac && gate_seq.map_or(true, |g| p.seq < g)
+            });
+            if !eligible {
+                break;
+            }
+            let Some(p) = queue.pop() else { break };
+            if p.expired() {
+                Self::expire(p, ctx, stats);
+            } else {
+                scratch.pendings.push(p);
             }
         }
         let batch = scratch.pendings.len();
@@ -483,7 +489,9 @@ impl Batcher {
             // the worker must survive backend misbehavior
             Ok(()) if scratch.out.len() == batch * cols => {
                 for (i, p) in scratch.pendings.drain(..).enumerate() {
-                    let q = scratch.out[i * cols..(i + 1) * cols].to_vec();
+                    // length checked above; .get keeps the worker panic-free
+                    // even against a miscounted backend
+                    let q = scratch.out.get(i * cols..(i + 1) * cols).unwrap_or_default().to_vec();
                     ctx.board.sub_in_flight(ctx.core, p.env.weight);
                     p.env.reply.send(Ok(JobReply::Mac(q)));
                 }
@@ -520,7 +528,14 @@ impl Batcher {
         let env = p.env;
         let (weight, reply) = (env.weight, env.reply);
         let Job::MacBatch { xs, tile } = env.job else {
-            unreachable!("exec_batch dispatched on a non-batch job")
+            // dispatch invariant broken — answer as a backend error
+            // instead of killing the worker (panic-free policy)
+            ctx.board.sub_in_flight(ctx.core, weight);
+            reply.send(Err(ServeError::Backend(
+                "exec_batch dispatched on a non-batch job".to_string(),
+            )));
+            stats.rejected += weight as u64;
+            return;
         };
         let n = xs.len();
         scratch.x.clear();
@@ -535,8 +550,10 @@ impl Batcher {
         match res {
             // see exec_macs: mis-shaped outputs are backend failures
             Ok(()) if scratch.out.len() == n * cols => {
-                let outs: Vec<Vec<u32>> =
-                    (0..n).map(|i| scratch.out[i * cols..(i + 1) * cols].to_vec()).collect();
+                // length checked above; .get keeps the worker panic-free
+                let outs: Vec<Vec<u32>> = (0..n)
+                    .map(|i| scratch.out.get(i * cols..(i + 1) * cols).unwrap_or_default().to_vec())
+                    .collect();
                 reply.send(Ok(JobReply::MacBatch(outs)));
                 stats.requests += n as u64;
                 stats.batches += 1;
@@ -628,20 +645,21 @@ impl Batcher {
         loop {
             // republish the live statistics snapshot each dispatch round
             // (wire Stats frames read it without joining the worker)
-            *ctx.live.lock().unwrap() = stats;
+            *lock_unpoisoned(&ctx.live) = stats;
             // release the barrier once no pre-drain work remains
             let release = stash
                 .as_ref()
                 .map_or(false, |s| !queue.iter().any(|p| p.seq < s.seq));
             if release {
-                let drain = stash.take().expect("release implies a parked drain");
-                if drain.expired() {
-                    Self::expire(drain, ctx, &mut stats);
-                } else {
-                    Self::exec_drain(drain, backend, ctx);
+                if let Some(drain) = stash.take() {
+                    if drain.expired() {
+                        Self::expire(drain, ctx, &mut stats);
+                    } else {
+                        Self::exec_drain(drain, backend, ctx);
+                    }
+                    queue.extend(deferred.drain(..));
+                    gate = Self::min_drain_seq(&queue);
                 }
-                queue.extend(deferred.drain(..));
-                gate = Self::min_drain_seq(&queue);
             }
             if queue.is_empty() && stash.is_none() && deferred.is_empty() {
                 // block for the first job of a round
@@ -657,7 +675,7 @@ impl Batcher {
                         &mut stats,
                     ),
                     Err(_) => {
-                        *ctx.live.lock().unwrap() = stats;
+                        *lock_unpoisoned(&ctx.live) = stats;
                         return stats;
                     }
                 }
@@ -713,8 +731,9 @@ impl Batcher {
             // a parked drain whose own deadline has passed is answered
             // immediately and its barrier dissolves
             if stash.as_ref().is_some_and(|s| s.expired()) {
-                let drain = stash.take().expect("checked above");
-                Self::expire(drain, ctx, &mut stats);
+                if let Some(drain) = stash.take() {
+                    Self::expire(drain, ctx, &mut stats);
+                }
                 queue.extend(deferred.drain(..));
                 gate = Self::min_drain_seq(&queue);
             } else if let Some(s) = &stash {

@@ -34,9 +34,11 @@
 //!   still self-heals: the residual grows past the health band, the
 //!   `Health` probe fences the core, and the now-fenced core qualifies
 //!   for the drain that brings it back.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 
 use crate::coordinator::batcher::ServeError;
 use crate::coordinator::service::CimService;
+use crate::util::sync::lock_unpoisoned;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -122,7 +124,9 @@ impl CalibratorPolicy {
     /// Fold one residual sample into the core's trend; returns the
     /// updated EWMA.
     pub fn observe(&mut self, core: usize, residual: f64) -> f64 {
-        let st = &mut self.cores[core];
+        // an untracked core index degrades to the raw sample — the policy
+        // never panics on daemon/board disagreement about the core count
+        let Some(st) = self.cores.get_mut(core) else { return residual };
         let next = match st.ewma {
             None => residual,
             Some(e) => self.cfg.ewma_alpha * residual + (1.0 - self.cfg.ewma_alpha) * e,
@@ -133,7 +137,7 @@ impl CalibratorPolicy {
 
     /// Current trend of one core (`None` before the first sample).
     pub fn trend(&self, core: usize) -> Option<f64> {
-        self.cores[core].ewma
+        self.cores.get(core).and_then(|st| st.ewma)
     }
 
     /// Should `core` be drained now? `healthy_cores` is the count of
@@ -146,7 +150,7 @@ impl CalibratorPolicy {
         fenced: bool,
         now: Instant,
     ) -> Option<DrainReason> {
-        let st = &self.cores[core];
+        let st = self.cores.get(core)?;
         // cool-down: one drain attempt per window, success or not
         if let Some(t) = st.last_drain {
             if now < t + self.cfg.cooldown {
@@ -183,7 +187,7 @@ impl CalibratorPolicy {
         recalibrated: bool,
         residual: Option<f64>,
     ) {
-        let st = &mut self.cores[core];
+        let Some(st) = self.cores.get_mut(core) else { return };
         st.last_drain = Some(now);
         if recalibrated {
             st.last_recal = now;
@@ -229,7 +233,7 @@ impl CalibratorShared {
 
     /// Current per-core statistics.
     pub fn snapshot(&self) -> Vec<CoreCalStats> {
-        self.stats.lock().unwrap().clone()
+        lock_unpoisoned(&self.stats).clone()
     }
 
     /// Completed sampling sweeps so far.
@@ -239,11 +243,13 @@ impl CalibratorShared {
 
     /// Total completed drain→recalibrate cycles across all cores.
     pub fn total_drains(&self) -> u64 {
-        self.stats.lock().unwrap().iter().map(|s| s.drains).sum()
+        lock_unpoisoned(&self.stats).iter().map(|s| s.drains).sum()
     }
 
     fn update<F: FnOnce(&mut CoreCalStats)>(&self, core: usize, f: F) {
-        f(&mut self.stats.lock().unwrap()[core]);
+        if let Some(s) = lock_unpoisoned(&self.stats).get_mut(core) {
+            f(s);
+        }
     }
 }
 

@@ -32,6 +32,7 @@
 //! serialized on one array) lives in [`crate::coordinator::dnn`]; it
 //! ships each core a pre-folded [`TileBank`] so tile MACs are served as
 //! native `MacBatch` jobs.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 
 use crate::analog::variation::VariationSample;
 use crate::analog::{consts as c, CimAnalogModel, Folded, MacScratch};
@@ -42,6 +43,7 @@ use crate::coordinator::service::{
     CoreBoard, CoreContext, JobEnvelope, TileRef, DEFAULT_HEALTH_BAND,
 };
 use crate::util::rng::SplitMix64;
+use crate::util::sync::lock_unpoisoned;
 use std::sync::atomic::AtomicUsize;
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
@@ -222,8 +224,10 @@ impl MacBackend for ClusterCore {
         let bank = self
             .bank
             .as_ref()
+            // lint: allow(hot_path_alloc) — cold error path: allocates only when no bank is installed
             .ok_or_else(|| format!("core {} has no tile bank installed", self.id))?;
         let folded = bank.get(tile).ok_or_else(|| {
+            // lint: allow(hot_path_alloc) — cold error path: allocates only for an out-of-bank tile
             format!(
                 "core {}: tile (layer {}, {}, {}) outside the installed bank",
                 self.id, tile.layer, tile.tr, tile.tc
@@ -309,8 +313,11 @@ impl CimCluster {
     }
 
     /// Program one core (per-core weights: tile sharding, A/B testing).
+    /// An out-of-range index is a no-op.
     pub fn program_core(&mut self, core: usize, weights: &[i32]) {
-        self.cores[core].program(weights);
+        if let Some(c) = self.cores.get_mut(core) {
+            c.program(weights);
+        }
     }
 
     /// Run `f` once per core, all cores in parallel on scoped threads —
@@ -327,7 +334,11 @@ impl CimCluster {
                 .map(|core| s.spawn(move || f(core)))
                 .collect();
             for h in handles {
-                h.join().expect("cluster core worker panicked");
+                // a panicked per-core worker re-raises on the caller's
+                // thread instead of being swallowed (or double-panicking)
+                if let Err(payload) = h.join() {
+                    std::panic::resume_unwind(payload);
+                }
             }
         });
     }
@@ -466,7 +477,7 @@ impl ClusterServer {
 
     /// Current per-core statistics snapshot.
     pub fn live_stats(&self) -> Vec<BatcherStats> {
-        self.live.iter().map(|s| *s.lock().unwrap()).collect()
+        self.live.iter().map(|s| *lock_unpoisoned(s)).collect()
     }
 
     /// A cloneable service handle over all cores (every client from this
@@ -488,9 +499,14 @@ impl ClusterServer {
         let mut cores = Vec::with_capacity(self.handles.len());
         let mut stats = Vec::with_capacity(self.handles.len());
         for h in self.handles {
-            let (core, st) = h.join().expect("cluster worker panicked");
-            cores.push(core);
-            stats.push(st);
+            match h.join() {
+                Ok((core, st)) => {
+                    cores.push(core);
+                    stats.push(st);
+                }
+                // re-raise a worker panic on the joining thread
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
         }
         cores.sort_by_key(|c| c.id);
         (CimCluster { cores }, stats)

@@ -19,6 +19,7 @@
 //!   [`crate::coordinator::cluster::ClusterClient`] implement; all the
 //!   convenience entry points (`mac`, `mac_batch`, `drain`, `health`,
 //!   `mac_pipelined`) are provided methods over `submit`.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 
 use crate::coordinator::batcher::{BatcherStats, ServeError};
 use crate::coordinator::bisc::BiscEngine;
@@ -346,31 +347,43 @@ impl CoreBoard {
     }
 
     /// Jobs (weighted, see [`Job::weight`]) currently placed on `core`
-    /// and not yet answered.
+    /// and not yet answered. Out-of-range cores read as idle — every
+    /// accessor here degrades to a no-op/neutral answer instead of
+    /// panicking, keeping the board safe against wire-supplied indices.
     pub fn in_flight(&self, core: usize) -> usize {
-        self.depth[core].load(Ordering::Relaxed)
+        self.depth.get(core).map_or(0, |d| d.load(Ordering::Relaxed))
     }
 
     pub fn add_in_flight(&self, core: usize, weight: usize) {
-        self.depth[core].fetch_add(weight, Ordering::Relaxed);
+        if let Some(d) = self.depth.get(core) {
+            d.fetch_add(weight, Ordering::Relaxed);
+        }
     }
 
     pub fn sub_in_flight(&self, core: usize, weight: usize) {
-        self.depth[core].fetch_sub(weight, Ordering::Relaxed);
+        if let Some(d) = self.depth.get(core) {
+            d.fetch_sub(weight, Ordering::Relaxed);
+        }
     }
 
     /// Stop placing new jobs on `core` (pinned jobs still go through).
     pub fn fence(&self, core: usize) {
-        self.fenced[core].store(true, Ordering::Relaxed);
+        if let Some(f) = self.fenced.get(core) {
+            f.store(true, Ordering::Relaxed);
+        }
     }
 
     /// Let `core` rejoin the scheduler.
     pub fn unfence(&self, core: usize) {
-        self.fenced[core].store(false, Ordering::Relaxed);
+        if let Some(f) = self.fenced.get(core) {
+            f.store(false, Ordering::Relaxed);
+        }
     }
 
+    /// Out-of-range cores read as fenced: the scheduler must never
+    /// place on an index the board does not track.
     pub fn is_fenced(&self, core: usize) -> bool {
-        self.fenced[core].load(Ordering::Relaxed)
+        self.fenced.get(core).is_none_or(|f| f.load(Ordering::Relaxed))
     }
 
     /// Number of cores currently accepting placed jobs.
@@ -384,18 +397,22 @@ impl CoreBoard {
     /// (`CoreCorrections::epoch` in the DNN scheduler) — corrections
     /// lagging this value are stale.
     pub fn recal_epoch(&self, core: usize) -> u64 {
-        self.recal_epoch[core].load(Ordering::Relaxed)
+        self.recal_epoch.get(core).map_or(0, |e| e.load(Ordering::Relaxed))
     }
 
     /// Record a completed in-service recalibration (worker side).
     pub fn bump_recal_epoch(&self, core: usize) {
-        self.recal_epoch[core].fetch_add(1, Ordering::Relaxed);
+        if let Some(e) = self.recal_epoch.get(core) {
+            e.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     /// Catch a mirror board up to a server-observed epoch (monotonic:
     /// an older reply arriving late can never roll the epoch back).
     pub fn set_recal_epoch(&self, core: usize, epoch: u64) {
-        self.recal_epoch[core].fetch_max(epoch, Ordering::Relaxed);
+        if let Some(e) = self.recal_epoch.get(core) {
+            e.fetch_max(epoch, Ordering::Relaxed);
+        }
     }
 }
 
@@ -453,7 +470,10 @@ fn dispatch(
         weight,
         reply,
     };
-    if txs[core].send(env).is_err() {
+    // a missing channel (core index out of range) reads as a worker that
+    // already hung up — same Disconnected answer, no panic
+    let sent = txs.get(core).is_some_and(|tx| tx.send(env).is_ok());
+    if !sent {
         board.sub_in_flight(core, weight);
         return Err(ServeError::Disconnected);
     }
@@ -719,7 +739,7 @@ fn pipelined_gather<T: FromReply>(
             }
         }
         if inflight.len() >= window.max(1) {
-            let t = inflight.pop_front().expect("window bound > 0");
+            let Some(t) = inflight.pop_front() else { break };
             if let Err(e) = t.wait() {
                 first_err = Some(e);
                 break;

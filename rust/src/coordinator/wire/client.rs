@@ -18,6 +18,7 @@
 //! calibrator daemon's autonomous ones — catch the mirror up on the
 //! next local lifecycle probe (send `health` first when freshness
 //! matters).
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 
 use crate::coordinator::batcher::{BatcherStats, ServeError};
 use crate::coordinator::calibrator::CoreCalStats;
@@ -27,6 +28,7 @@ use crate::coordinator::service::{
 use crate::coordinator::wire::codec::{
     encode_frame_into, read_frame, read_frame_buf, write_frame_buf, Frame, HEADER_LEN, MAX_BODY,
 };
+use crate::util::sync::lock_unpoisoned;
 use std::collections::HashMap;
 use std::io::{self, Write};
 use std::net::{Shutdown, TcpStream, ToSocketAddrs};
@@ -58,6 +60,13 @@ struct Shared {
     alive: AtomicBool,
 }
 
+/// Remove one pending entry under its map lock. A separate function so
+/// the guard is provably released before the caller touches any channel
+/// or socket (rule `lock_across_io`).
+fn take_pending<T>(m: &Mutex<HashMap<u64, T>>, id: u64) -> Option<T> {
+    lock_unpoisoned(m).remove(&id)
+}
+
 /// The write half of the connection plus its reusable encode buffer —
 /// one mutex guards both, so every frame from any clone encodes into the
 /// same steady-state buffer (no allocation per submit).
@@ -80,7 +89,7 @@ struct Inner {
 impl Drop for Inner {
     fn drop(&mut self) {
         let _ = self.stream.shutdown(Shutdown::Both);
-        if let Some(h) = self.reader.lock().unwrap().take() {
+        if let Some(h) = lock_unpoisoned(&self.reader).take() {
             let _ = h.join();
         }
     }
@@ -147,10 +156,11 @@ impl RemoteClient {
         }
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = channel();
-        sh.pending_stats.lock().unwrap().insert(id, tx);
+        lock_unpoisoned(&sh.pending_stats).insert(id, tx);
         let sent = {
-            let mut guard = self.inner.write.lock().unwrap();
+            let mut guard = lock_unpoisoned(&self.inner.write);
             let w = &mut *guard;
+            // lint: allow(lock_across_io) — the write mutex serializes whole-frame writes; holding it across the write is its purpose
             write_frame_buf(&mut w.stream, &Frame::StatsReq { id }, &mut w.buf).is_ok()
         };
         // re-check AFTER the insert: the reader may have disconnected and
@@ -158,7 +168,7 @@ impl RemoteClient {
         // entry slipped in after that sweep, remove it ourselves so the
         // recv below can never block on a sender nobody will ever use
         if !sent || !sh.alive.load(Ordering::SeqCst) {
-            sh.pending_stats.lock().unwrap().remove(&id);
+            take_pending(&sh.pending_stats, id);
             return Err(ServeError::Disconnected);
         }
         rx.recv().map_err(|_| ServeError::Disconnected)
@@ -173,16 +183,17 @@ impl RemoteClient {
         }
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = channel();
-        sh.pending_cal.lock().unwrap().insert(id, tx);
+        lock_unpoisoned(&sh.pending_cal).insert(id, tx);
         let sent = {
-            let mut guard = self.inner.write.lock().unwrap();
+            let mut guard = lock_unpoisoned(&self.inner.write);
             let w = &mut *guard;
+            // lint: allow(lock_across_io) — the write mutex serializes whole-frame writes; holding it across the write is its purpose
             write_frame_buf(&mut w.stream, &Frame::CalStatsReq { id }, &mut w.buf).is_ok()
         };
         // same post-insert re-check as remote_stats: never block on a
         // sender the disconnected reader will never use
         if !sent || !sh.alive.load(Ordering::SeqCst) {
-            sh.pending_cal.lock().unwrap().remove(&id);
+            take_pending(&sh.pending_cal, id);
             return Err(ServeError::Disconnected);
         }
         rx.recv().map_err(|_| ServeError::Disconnected)
@@ -207,9 +218,11 @@ impl CimService for RemoteClient {
         sh.board.add_in_flight(core, weight);
         // registered BEFORE the frame is on the wire: the reply cannot
         // outrun its pending entry
-        sh.pending.lock().unwrap().insert(id, PendingJob { tx, core, weight, is_drain });
+        lock_unpoisoned(&sh.pending).insert(id, PendingJob { tx, core, weight, is_drain });
         if is_drain {
-            sh.drains[core].fetch_add(1, Ordering::SeqCst);
+            if let Some(d) = sh.drains.get(core) {
+                d.fetch_add(1, Ordering::SeqCst);
+            }
         }
         // ship the RESOLVED placement so the server's core choice always
         // matches this ticket's core and the mirror's depth accounting;
@@ -218,7 +231,7 @@ impl CimService for RemoteClient {
         let wire_opts = SubmitOpts { placement: Placement::Pinned(core), ..opts };
         let frame = Frame::Submit { id, job, opts: wire_opts };
         let (sent, oversized_body) = {
-            let mut guard = self.inner.write.lock().unwrap();
+            let mut guard = lock_unpoisoned(&self.inner.write);
             let w = &mut *guard;
             w.buf.clear();
             encode_frame_into(&frame, &mut w.buf);
@@ -230,6 +243,7 @@ impl CimService for RemoteClient {
                 w.buf = Vec::new();
                 (false, Some(body_len))
             } else {
+                // lint: allow(lock_across_io) — the write mutex serializes whole-frame writes; holding it across the write is its purpose
                 let ok = w.stream.write_all(&w.buf).and_then(|_| w.stream.flush()).is_ok();
                 // a rare huge (near-cap) submit must not pin tens of MB
                 // in the connection's steady-state buffer; ordinary
@@ -245,10 +259,12 @@ impl CimService for RemoteClient {
             // would kill the whole connection (the server's decoder
             // rejects oversized bodies), taking every in-flight job with
             // this one
-            if let Some(p) = sh.pending.lock().unwrap().remove(&id) {
+            if let Some(p) = take_pending(&sh.pending, id) {
                 sh.board.sub_in_flight(core, weight);
                 if p.is_drain {
-                    sh.drains[core].fetch_sub(1, Ordering::SeqCst);
+                    if let Some(d) = sh.drains.get(core) {
+                        d.fetch_sub(1, Ordering::SeqCst);
+                    }
                 }
             }
             return Err(ServeError::Backend(format!(
@@ -261,11 +277,13 @@ impl CimService for RemoteClient {
         // our entry would otherwise linger and this ticket's wait() would
         // block forever instead of reporting Disconnected
         if !sent || !sh.alive.load(Ordering::SeqCst) {
-            if let Some(p) = sh.pending.lock().unwrap().remove(&id) {
+            if let Some(p) = take_pending(&sh.pending, id) {
                 // still ours — the reader's sweep did not settle it
                 sh.board.sub_in_flight(core, weight);
                 if p.is_drain {
-                    sh.drains[core].fetch_sub(1, Ordering::SeqCst);
+                    if let Some(d) = sh.drains.get(core) {
+                        d.fetch_sub(1, Ordering::SeqCst);
+                    }
                 }
             }
             sh.alive.store(false, Ordering::SeqCst);
@@ -285,11 +303,12 @@ fn reader_loop(mut stream: TcpStream, sh: Arc<Shared>) {
     loop {
         match read_frame_buf(&mut stream, &mut body_buf) {
             Ok(Frame::Reply { id, core: _, result }) => {
-                let entry = sh.pending.lock().unwrap().remove(&id);
-                let Some(p) = entry else { continue };
+                let Some(p) = take_pending(&sh.pending, id) else { continue };
                 sh.board.sub_in_flight(p.core, p.weight);
                 if p.is_drain {
-                    sh.drains[p.core].fetch_sub(1, Ordering::SeqCst);
+                    if let Some(d) = sh.drains.get(p.core) {
+                        d.fetch_sub(1, Ordering::SeqCst);
+                    }
                 }
                 if let Ok(JobReply::Health(h)) = &result {
                     // lifecycle replies carry the authoritative fence and
@@ -305,7 +324,8 @@ fn reader_loop(mut stream: TcpStream, sh: Arc<Shared>) {
                         sh.board.set_recal_epoch(h.core, h.recal_epoch);
                         if h.fenced {
                             sh.board.fence(h.core);
-                        } else if sh.drains[h.core].load(Ordering::SeqCst) == 0 {
+                        } else if sh.drains.get(h.core).is_none_or(|d| d.load(Ordering::SeqCst) == 0)
+                        {
                             // a `fenced: false` measured before one of OUR
                             // drains went out is stale — keep the drain's
                             // fence until its own reply settles it
@@ -316,12 +336,12 @@ fn reader_loop(mut stream: TcpStream, sh: Arc<Shared>) {
                 let _ = p.tx.send(result);
             }
             Ok(Frame::StatsReply { id, stats }) => {
-                if let Some(tx) = sh.pending_stats.lock().unwrap().remove(&id) {
+                if let Some(tx) = take_pending(&sh.pending_stats, id) {
                     let _ = tx.send(stats);
                 }
             }
             Ok(Frame::CalStatsReply { id, stats }) => {
-                if let Some(tx) = sh.pending_cal.lock().unwrap().remove(&id) {
+                if let Some(tx) = take_pending(&sh.pending_cal, id) {
                     let _ = tx.send(stats);
                 }
             }
@@ -331,11 +351,11 @@ fn reader_loop(mut stream: TcpStream, sh: Arc<Shared>) {
         }
     }
     sh.alive.store(false, Ordering::SeqCst);
-    let mut pending = sh.pending.lock().unwrap();
+    let mut pending = lock_unpoisoned(&sh.pending);
     for (_, p) in pending.drain() {
         sh.board.sub_in_flight(p.core, p.weight);
     }
     drop(pending);
-    sh.pending_stats.lock().unwrap().clear();
-    sh.pending_cal.lock().unwrap().clear();
+    lock_unpoisoned(&sh.pending_stats).clear();
+    lock_unpoisoned(&sh.pending_cal).clear();
 }

@@ -18,6 +18,7 @@
 //!   admitted job still gets its reply.
 //!
 //! [`ReplySink::Routed`]: crate::coordinator::service::ReplySink
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 
 use crate::coordinator::batcher::{BatcherStats, ServeError};
 use crate::coordinator::calibrator::CalibratorShared;
@@ -25,6 +26,7 @@ use crate::coordinator::service::{CimService, Job, Placement, RoutedReply, Servi
 use crate::coordinator::wire::codec::{
     encode_frame_into, read_frame_buf, write_frame, write_frame_buf, Frame,
 };
+use crate::util::sync::lock_unpoisoned;
 use std::io::Write;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -98,7 +100,7 @@ impl WireServer {
     /// Safe to call from any thread, any number of times.
     pub fn request_shutdown(&self) {
         self.stop.store(true, Ordering::SeqCst);
-        for (_, s) in self.conns.lock().unwrap().iter() {
+        for (_, s) in lock_unpoisoned(&self.conns).iter() {
             let _ = s.shutdown(Shutdown::Read);
         }
     }
@@ -118,14 +120,14 @@ impl WireServer {
                     // connection we cannot register we also cannot
                     // unblock at shutdown — refuse it outright.
                     let Ok(clone) = stream.try_clone() else { continue };
-                    self.conns.lock().unwrap().push((cid, clone));
+                    lock_unpoisoned(&self.conns).push((cid, clone));
                     let svc = self.svc.clone();
                     let live = self.live.clone();
                     let cal = self.cal.clone();
                     let conns = Arc::clone(&self.conns);
                     handlers.push(std::thread::spawn(move || {
                         handle_connection(stream, svc, live, cal);
-                        conns.lock().unwrap().retain(|(id, _)| *id != cid);
+                        lock_unpoisoned(&conns).retain(|(id, _)| *id != cid);
                     }));
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -138,7 +140,7 @@ impl WireServer {
         }
         // idempotent with request_shutdown, and covers any connection
         // accepted between the flag store and the loop exit
-        for (_, s) in self.conns.lock().unwrap().iter() {
+        for (_, s) in lock_unpoisoned(&self.conns).iter() {
             let _ = s.shutdown(Shutdown::Read);
         }
         for h in handlers {
@@ -172,7 +174,8 @@ fn handle_connection(
         Ok(w) => Arc::new(Mutex::new(w)),
         Err(_) => return,
     };
-    if write_frame(&mut *write.lock().unwrap(), &Frame::Hello { cores: svc.cores() as u32 })
+    // lint: allow(lock_across_io) — serialized whole-frame writes are this mutex's purpose
+    if write_frame(&mut *lock_unpoisoned(&write), &Frame::Hello { cores: svc.cores() as u32 })
         .is_err()
     {
         return;
@@ -216,10 +219,10 @@ fn handle_connection(
                 }
             }
             Ok(Frame::StatsReq { id }) => {
-                let stats: Vec<BatcherStats> =
-                    live.iter().map(|s| *s.lock().unwrap()).collect();
+                let stats = snapshot_stats(&live);
+                // lint: allow(lock_across_io) — serialized whole-frame writes are this mutex's purpose
                 if write_frame_buf(
-                    &mut *write.lock().unwrap(),
+                    &mut *lock_unpoisoned(&write),
                     &Frame::StatsReply { id, stats },
                     &mut ctrl_buf,
                 )
@@ -230,8 +233,9 @@ fn handle_connection(
             }
             Ok(Frame::CalStatsReq { id }) => {
                 let stats = cal.as_ref().map(|c| c.snapshot()).unwrap_or_default();
+                // lint: allow(lock_across_io) — serialized whole-frame writes are this mutex's purpose
                 if write_frame_buf(
-                    &mut *write.lock().unwrap(),
+                    &mut *lock_unpoisoned(&write),
                     &Frame::CalStatsReply { id, stats },
                     &mut ctrl_buf,
                 )
@@ -252,6 +256,13 @@ fn handle_connection(
     drop(rtx);
     let _ = pump.join();
     let _ = reader.shutdown(Shutdown::Both);
+}
+
+/// Snapshot every core's live statistics. A separate function so each
+/// per-core guard is provably released before the reply hits the socket
+/// (rule `lock_across_io`).
+fn snapshot_stats(live: &[Arc<Mutex<BatcherStats>>]) -> Vec<BatcherStats> {
+    live.iter().map(|s| *lock_unpoisoned(s)).collect()
 }
 
 /// Stream routed replies onto the socket in completion order, coalescing
@@ -283,7 +294,8 @@ fn reply_pump(rrx: Receiver<RoutedReply>, write: Arc<Mutex<TcpStream>>) {
         }
         // a client that vanished mid-reply is not an error worth keeping
         // state for — keep consuming so no worker sink ever backs up
-        let mut w = write.lock().unwrap();
+        let mut w = lock_unpoisoned(&write);
+        // lint: allow(lock_across_io) — serialized whole-frame writes are this mutex's purpose
         let _ = w.write_all(&buf).and_then(|_| w.flush());
         drop(w);
         // an outsized round (giant single reply) must not pin its

@@ -22,6 +22,7 @@
 //! reproduced tables/figures.
 
 pub mod analog;
+pub mod analysis;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -184,12 +184,17 @@ impl Bencher {
 
     /// Export every recorded result as `BENCH_<bench>.json` (see
     /// [`write_bench_json`]; no-op without `ACORE_BENCH_JSON_DIR`).
+    /// Every export carries `"provenance": "measured (...)"` — these
+    /// numbers always come from an actual run of this process, which is
+    /// what arms `bench-diff --gate` (estimated baselines never gate).
     pub fn export_json(&self, bench: &str) {
         let rows: Vec<String> =
             self.results.iter().map(|r| format!("    {}", r.json())).collect();
+        let provenance = format!("measured ({} {})", std::env::consts::OS, std::env::consts::ARCH);
         let body = format!(
-            "{{\n  \"bench\": {},\n  \"results\": [\n{}\n  ]\n}}\n",
+            "{{\n  \"bench\": {},\n  \"provenance\": {},\n  \"results\": [\n{}\n  ]\n}}\n",
             json_str(bench),
+            json_str(&provenance),
             rows.join(",\n")
         );
         write_bench_json(bench, &body);

@@ -6,5 +6,6 @@ pub mod cli;
 pub mod proptest;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod table;
 pub mod json;

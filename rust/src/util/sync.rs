@@ -1,0 +1,44 @@
+//! Poison-tolerant locking for serving threads (DESIGN.md §12).
+//!
+//! `Mutex::lock().unwrap()` turns one panicked holder into a cascade:
+//! every later lock attempt panics on the poison flag, silently killing
+//! the batcher/calibrator thread that hit it. The serving modules are
+//! lint-gated panic-free (`acore-cim lint`, rule `panic_free`), so a
+//! poisoned mutex there means a panic in *test-injected* or future code
+//! — recovering the guard keeps the serving plane alive, and the
+//! protected state (stats snapshots, connection tables, write halves)
+//! is valid under torn updates: plain-old-data counters and whole-value
+//! swaps, never multi-step invariants.
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn recovers_after_a_panicked_holder() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex must actually be poisoned");
+        let mut g = lock_unpoisoned(&m);
+        assert_eq!(*g, 7);
+        *g += 1;
+        drop(g);
+        assert_eq!(*lock_unpoisoned(&m), 8);
+    }
+}

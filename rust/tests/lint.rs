@@ -1,0 +1,114 @@
+//! Integration tests for the in-repo static analysis (`acore-cim lint`,
+//! DESIGN.md §12): every rule gets at least one positive fixture (the
+//! violations ARE reported) and one negative fixture (the disciplined
+//! shape is clean), plus suppression-hygiene coverage. Fixtures live in
+//! `tests/lint_fixtures/` as text — they are never compiled — and are
+//! linted under virtual paths so scope-sensitive rules see them where
+//! they claim to be.
+
+use acore_cim::analysis::{lint_sources, LintReport, RULE_NAMES};
+
+/// A serving-scope virtual path (rule `panic_free` applies).
+const SERVING: &str = "src/coordinator/wire/fixture.rs";
+/// A non-serving virtual path (only the everywhere-rules apply).
+const ELSEWHERE: &str = "src/analog/fixture.rs";
+
+fn lint_one(path: &str, source: &str) -> LintReport {
+    lint_sources(&[(path, source)])
+}
+
+fn rule_counts(report: &LintReport) -> Vec<(&'static str, usize)> {
+    RULE_NAMES
+        .iter()
+        .map(|&r| (r, report.violations.iter().filter(|v| v.rule == r).count()))
+        .filter(|&(_, n)| n > 0)
+        .collect()
+}
+
+#[test]
+fn panic_free_positive_reports_every_site() {
+    let report = lint_one(SERVING, include_str!("lint_fixtures/panic_free_bad.rs"));
+    assert_eq!(rule_counts(&report), vec![("panic_free", 5)], "{report:?}");
+}
+
+#[test]
+fn panic_free_negative_is_clean_with_one_justified_allow() {
+    let report = lint_one(SERVING, include_str!("lint_fixtures/panic_free_ok.rs"));
+    assert!(report.clean(), "unexpected violations: {:?}", report.violations);
+    assert_eq!(report.allows_used, 1, "the one justified allow must be consumed");
+}
+
+#[test]
+fn panic_free_is_scoped_to_serving_files() {
+    // the same panic-prone source outside the serving scope only trips
+    // the everywhere-rules (none of which it violates)
+    let report = lint_one(ELSEWHERE, include_str!("lint_fixtures/panic_free_bad.rs"));
+    assert!(report.clean(), "panic_free leaked outside its scope: {:?}", report.violations);
+}
+
+#[test]
+fn hot_path_alloc_positive_reports_every_allocation() {
+    let report = lint_one(ELSEWHERE, include_str!("lint_fixtures/hot_path_alloc_bad.rs"));
+    assert_eq!(rule_counts(&report), vec![("hot_path_alloc", 5)], "{report:?}");
+}
+
+#[test]
+fn hot_path_alloc_negative_is_clean() {
+    let report = lint_one(ELSEWHERE, include_str!("lint_fixtures/hot_path_alloc_ok.rs"));
+    assert!(report.clean(), "unexpected violations: {:?}", report.violations);
+}
+
+#[test]
+fn lock_across_io_positive_reports_live_guards_and_same_statement() {
+    let report = lint_one(ELSEWHERE, include_str!("lint_fixtures/lock_across_io_bad.rs"));
+    assert_eq!(rule_counts(&report), vec![("lock_across_io", 3)], "{report:?}");
+}
+
+#[test]
+fn lock_across_io_negative_is_clean_with_one_justified_allow() {
+    let report = lint_one(ELSEWHERE, include_str!("lint_fixtures/lock_across_io_ok.rs"));
+    assert!(report.clean(), "unexpected violations: {:?}", report.violations);
+    assert_eq!(report.allows_used, 1, "the write-mutex allow must be consumed");
+}
+
+#[test]
+fn unsafe_block_positive_and_negative() {
+    let bad = lint_one(ELSEWHERE, include_str!("lint_fixtures/unsafe_block_bad.rs"));
+    assert_eq!(rule_counts(&bad), vec![("unsafe_block_safety", 1)], "{bad:?}");
+    let ok = lint_one(ELSEWHERE, include_str!("lint_fixtures/unsafe_block_ok.rs"));
+    assert!(ok.clean(), "unexpected violations: {:?}", ok.violations);
+}
+
+#[test]
+fn unjustified_or_unknown_allows_are_violations_and_suppress_nothing() {
+    let report = lint_one(SERVING, include_str!("lint_fixtures/allow_hygiene_bad.rs"));
+    assert_eq!(
+        rule_counts(&report),
+        vec![("panic_free", 1), ("lint_allow_justification", 2)],
+        "{report:?}"
+    );
+    assert_eq!(report.allows_used, 0, "a bare allow must never be consumed");
+}
+
+#[test]
+fn multi_file_report_is_sorted_and_counts_files() {
+    let report = lint_sources(&[
+        (SERVING, include_str!("lint_fixtures/panic_free_bad.rs")),
+        (ELSEWHERE, include_str!("lint_fixtures/unsafe_block_bad.rs")),
+    ]);
+    assert_eq!(report.files_scanned, 2);
+    assert_eq!(report.violations.len(), 6);
+    let order: Vec<(&str, usize)> =
+        report.violations.iter().map(|v| (v.file.as_str(), v.line)).collect();
+    let mut sorted = order.clone();
+    sorted.sort();
+    assert_eq!(order, sorted, "violations must come out sorted by (file, line)");
+}
+
+#[test]
+fn json_report_carries_every_violation() {
+    let report = lint_one(SERVING, include_str!("lint_fixtures/panic_free_bad.rs"));
+    let json = report.to_json();
+    assert!(json.contains("\"violation_count\": 5"), "{json}");
+    assert!(json.contains("\"rule\": \"panic_free\""), "{json}");
+}

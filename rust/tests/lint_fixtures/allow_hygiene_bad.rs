@@ -1,0 +1,11 @@
+//! Positive fixture for `lint_allow_justification`: a suppression must
+//! name a real rule AND carry a justification. A bare allow is itself a
+//! violation — and it suppresses nothing, so the site it hovers over
+//! still reports too.
+
+pub fn sloppy(v: &[u32], i: usize) -> u32 {
+    // lint: allow(panic_free)
+    let a = v[i]; // still reported: the allow above has no justification
+    // lint: allow(no_such_rule) — a justification cannot save an unknown rule
+    a + (i as u32)
+}

@@ -1,0 +1,13 @@
+//! Positive fixture for `hot_path_alloc`: a `_into` kernel body that
+//! allocates per call in every way the rule knows about.
+
+pub fn forward_batch_into(x: &[i32], out: &mut Vec<u32>) {
+    let mut staging = Vec::new(); // violation: Vec::new in a _into body
+    staging.extend(x.iter().map(|&v| v as u32));
+    let copied = staging.to_vec(); // violation: .to_vec()
+    let doubled: Vec<u32> = copied.iter().map(|v| v * 2).collect(); // violation: .collect()
+    let label = format!("{} lanes", doubled.len()); // violation: format!
+    let boxed = Box::new(label); // violation: Box::new
+    drop(boxed);
+    out.extend_from_slice(&doubled);
+}

@@ -1,0 +1,21 @@
+//! Negative fixture for `hot_path_alloc`: a steady-state `_into` kernel
+//! that only reuses caller-owned capacity, next to a non-kernel helper
+//! that may allocate freely (the rule scopes to `_into` bodies only).
+
+pub fn forward_batch_into(x: &[i32], scratch: &mut Vec<u32>, out: &mut Vec<u32>) {
+    scratch.clear();
+    scratch.reserve(x.len());
+    for &v in x {
+        scratch.push(v as u32);
+    }
+    out.clear();
+    out.extend_from_slice(scratch);
+}
+
+/// Not a `_into` kernel: allocation here is outside the rule's scope.
+pub fn forward_batch(x: &[i32]) -> Vec<u32> {
+    let mut out = Vec::new();
+    let mut scratch = Vec::new();
+    forward_batch_into(x, &mut scratch, &mut out);
+    out
+}

@@ -1,0 +1,13 @@
+//! Positive fixture for `lock_across_io`: a mutex guard held across
+//! socket writes, and a lock taken in the same statement as a send.
+
+pub fn guard_across_write(m: &Mutex<Stats>, w: &mut TcpStream) {
+    let guard = m.lock();
+    let _ = w.write_all(b"stats"); // violation: write while `guard` is live
+    let _ = w.flush(); // violation: `guard` is still live here
+    drop(guard);
+}
+
+pub fn lock_in_send_statement(m: &Mutex<u64>, tx: &Sender<u64>) {
+    let _ = tx.send(*lock_unpoisoned(m)); // violation: lock and send in one statement
+}

@@ -1,0 +1,28 @@
+//! Negative fixture for `lock_across_io`: the disciplined shapes —
+//! explicit drop before I/O, a scoped guard, and one deliberately
+//! justified write-mutex site (the driving test asserts
+//! `allows_used == 1`).
+
+pub fn drop_before_write(m: &Mutex<Stats>, w: &mut TcpStream) {
+    let guard = m.lock();
+    let snapshot = clone_of(&guard);
+    drop(guard);
+    let _ = w.write_all(&snapshot);
+    let _ = w.flush();
+}
+
+pub fn scope_before_write(m: &Mutex<Stats>, w: &mut TcpStream) {
+    let mut snapshot = Stats::default();
+    {
+        let guard = m.lock();
+        snapshot = clone_of(&guard);
+    }
+    let _ = w.write_all(&snapshot);
+}
+
+pub fn deliberate_write_mutex(w: &Mutex<TcpStream>, buf: &[u8]) {
+    let mut stream = lock_unpoisoned(w);
+    // lint: allow(lock_across_io) — fixture: a write mutex exists to serialize whole-frame writes
+    let _ = stream.write_all(buf);
+    drop(stream);
+}

@@ -1,0 +1,16 @@
+//! Positive fixture for `panic_free`: every marked line below must be
+//! reported when this file is linted under a serving-scope path.
+//! Never compiled — `tests/lint.rs` feeds it to the linter as text.
+
+pub fn answer(queue: &mut Vec<u32>, i: usize) -> u32 {
+    let head = queue.pop().unwrap(); // violation: .unwrap()
+    let tail = queue.pop().expect("non-empty"); // violation: .expect()
+    if head == tail {
+        panic!("head met tail"); // violation: panic!
+    }
+    match head {
+        0 => unreachable!("zero is filtered upstream"), // violation: unreachable!
+        _ => {}
+    }
+    head + queue[i] // violation: non-constant slice indexing
+}

@@ -1,0 +1,25 @@
+//! Negative fixture for `panic_free`: the same shapes written the way
+//! serving code must write them — graceful fallbacks, constant-only
+//! indexing, checked invariants, test-module exemption, and exactly one
+//! justified suppression (the driving test asserts `allows_used == 1`).
+
+pub fn answer(queue: &mut Vec<u32>, i: usize) -> u32 {
+    let head = queue.pop().unwrap_or(0);
+    let first = queue.get(i).copied().unwrap_or_default();
+    let fixed = [1u32, 2, 3];
+    let second = fixed[0] + fixed[2];
+    assert!(second > 0, "assert! states an invariant; it is not flagged");
+    // lint: allow(panic_free) — fixture: a deliberately suppressed index with a justification
+    let third = queue[i % 2];
+    head + first + second + third
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_may_unwrap_freely() {
+        let v = vec![1u32];
+        assert_eq!(*v.first().unwrap(), 1);
+        v.get(0).expect("test code is exempt from panic_free");
+    }
+}

@@ -1,0 +1,6 @@
+//! Positive fixture for `unsafe_block_safety`: an unsafe block with no
+//! `// SAFETY:` comment anywhere near it.
+
+pub fn read_register(p: *const u32) -> u32 {
+    unsafe { p.read_volatile() } // violation: no SAFETY comment
+}

@@ -1,0 +1,8 @@
+//! Negative fixture for `unsafe_block_safety`: the safety contract is
+//! stated immediately above the block.
+
+pub fn read_register(p: *const u32) -> u32 {
+    // SAFETY: fixture — the caller guarantees `p` is non-null, aligned,
+    // and points into a live MMIO mapping for the duration of the call.
+    unsafe { p.read_volatile() }
+}
