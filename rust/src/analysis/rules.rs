@@ -31,6 +31,7 @@ fn serving_scope(rel: &str) -> bool {
         || rel == "coordinator/cluster.rs"
         || rel == "coordinator/calibrator.rs"
         || rel.starts_with("coordinator/wire/")
+        || rel.starts_with("soc/ctl/")
 }
 
 /// Run every rule over one indexed file, appending to `report`.
@@ -511,7 +512,13 @@ mod tests {
     fn unwrap_flagged_only_in_serving_scope() {
         let src = "fn f(v: &[u32]) -> u32 { v.first().copied().unwrap() }\n";
         assert_eq!(rules_hit("coordinator/batcher.rs", src), vec![PANIC_FREE]);
+        assert_eq!(
+            rules_hit("soc/ctl/periph.rs", src),
+            vec![PANIC_FREE],
+            "the firmware supervisor runs on the calibrator thread: serving scope"
+        );
         assert!(rules_hit("analog/mod.rs", src).is_empty());
+        assert!(rules_hit("soc/firmware.rs", src).is_empty(), "offline soc code is out of scope");
     }
 
     #[test]

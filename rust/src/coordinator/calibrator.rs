@@ -14,8 +14,14 @@
 //! * [`CalibratorPolicy`] — the pure decision state machine (no clock,
 //!   no threads: `observe` residuals, `decide` drains against an
 //!   explicit `now`), unit-testable for every trigger and guard;
+//! * [`CalibratorBrain`] / [`HostBrain`] — the decision-maker seam: the
+//!   daemon samples health and executes drains, the brain decides.
+//!   [`HostBrain`] runs [`CalibratorPolicy`] in-process;
+//!   [`crate::soc::ctl::FirmwareBrain`] runs the same policy as RV32IM
+//!   fixed-point firmware on the simulated SoC, fed through a
+//!   memory-mapped mailbox ([`Calibrator::spawn_with`] accepts either);
 //! * [`Calibrator`] — the daemon: one background thread sampling
-//!   `Health` per core each period and executing the policy's drains
+//!   `Health` per core each period and executing the brain's drains
 //!   through the same `submit` path every other client uses (the drain
 //!   barrier, fence, bank refold, and trim refresh all come for free);
 //! * [`CalibratorShared`] / [`CoreCalStats`] — live observability: the
@@ -196,6 +202,80 @@ impl CalibratorPolicy {
     }
 }
 
+/// The decision-maker seam of the daemon. The daemon owns the service
+/// plumbing — health sampling, drain execution, stats, logging — and
+/// delegates every calibration *decision* to a brain. Implementations:
+/// [`HostBrain`] (the f64 [`CalibratorPolicy`] in-process) and
+/// [`crate::soc::ctl::FirmwareBrain`] (the same policy as RV32IM
+/// fixed-point firmware behind a memory-mapped mailbox). Remote clients
+/// see identical `CalStats` frames either way.
+pub trait CalibratorBrain {
+    /// Fold one health sample into the per-core trend. `residual` is
+    /// `None` when the service has no calibration engine; the returned
+    /// trend must be `Some` only when this sample carried a residual
+    /// (it feeds the `samples`/`trend` statistics).
+    fn observe(
+        &mut self,
+        core: usize,
+        residual: Option<f64>,
+        fenced: bool,
+        recal_epoch: u64,
+        healthy_cores: usize,
+    ) -> Option<f64>;
+
+    /// Should `core` be drained now?
+    fn decide(&mut self, core: usize, healthy_cores: usize, fenced: bool) -> Option<DrainReason>;
+
+    /// Report the outcome of a drain the daemon executed for this brain.
+    fn record_drain(&mut self, core: usize, recalibrated: bool, residual: Option<f64>);
+
+    /// Current trend of one core (`None` before the first sample).
+    fn trend(&self, core: usize) -> Option<f64>;
+
+    /// Short label for log lines; the host brain stays unlabelled so
+    /// existing log consumers (CI greps) are unaffected.
+    fn tag(&self) -> &'static str {
+        ""
+    }
+}
+
+/// The in-process decision-maker: [`CalibratorPolicy`] driven by the
+/// host monotonic clock.
+pub struct HostBrain {
+    policy: CalibratorPolicy,
+}
+
+impl HostBrain {
+    pub fn new(cfg: CalibratorConfig, cores: usize) -> Self {
+        Self { policy: CalibratorPolicy::new(cfg, cores, Instant::now()) }
+    }
+}
+
+impl CalibratorBrain for HostBrain {
+    fn observe(
+        &mut self,
+        core: usize,
+        residual: Option<f64>,
+        _fenced: bool,
+        _recal_epoch: u64,
+        _healthy_cores: usize,
+    ) -> Option<f64> {
+        residual.map(|r| self.policy.observe(core, r))
+    }
+
+    fn decide(&mut self, core: usize, healthy_cores: usize, fenced: bool) -> Option<DrainReason> {
+        self.policy.decide(core, healthy_cores, fenced, Instant::now())
+    }
+
+    fn record_drain(&mut self, core: usize, recalibrated: bool, residual: Option<f64>) {
+        self.policy.record_drain(core, Instant::now(), recalibrated, residual);
+    }
+
+    fn trend(&self, core: usize) -> Option<f64> {
+        self.policy.trend(core)
+    }
+}
+
 /// Live statistics of one core, as maintained by the daemon and served
 /// over the wire (`CalStats` frames).
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
@@ -269,12 +349,29 @@ impl Calibrator {
     /// of the service — drop/stop it before joining the cluster server,
     /// like any other client.
     pub fn spawn<S: CimService + Send + 'static>(svc: S, cfg: CalibratorConfig) -> Self {
+        let brain_cfg = cfg.clone();
+        Self::spawn_with(svc, cfg, move |cores| HostBrain::new(brain_cfg, cores))
+    }
+
+    /// Start the daemon with a custom decision-maker. `make_brain` runs
+    /// on the daemon thread (it receives the core count), so brains
+    /// built on non-`Send` state — like the firmware supervisor's
+    /// `Box<dyn BusDevice>` bus — work without threading gymnastics.
+    pub fn spawn_with<S, B, F>(svc: S, cfg: CalibratorConfig, make_brain: F) -> Self
+    where
+        S: CimService + Send + 'static,
+        B: CalibratorBrain,
+        F: FnOnce(usize) -> B + Send + 'static,
+    {
         let stop = Arc::new(AtomicBool::new(false));
         let shared = Arc::new(CalibratorShared::new(svc.cores()));
         let handle = {
             let stop = Arc::clone(&stop);
             let shared = Arc::clone(&shared);
-            std::thread::spawn(move || run(svc, cfg, &stop, &shared))
+            std::thread::spawn(move || {
+                let brain = make_brain(svc.cores());
+                run_with_brain(svc, cfg, brain, &stop, &shared);
+            })
         };
         Self { stop, shared, handle: Some(handle) }
     }
@@ -304,17 +401,25 @@ impl Drop for Calibrator {
     }
 }
 
-/// One sampling sweep + policy pass per period until stopped. Health
+/// One sampling sweep + decision pass per period until stopped. Health
 /// probes and drains go through the ordinary submit path, so they queue
 /// behind in-flight work exactly like operator-issued lifecycle jobs.
-fn run<S: CimService>(
+fn run_with_brain<S: CimService, B: CalibratorBrain>(
     svc: S,
     cfg: CalibratorConfig,
+    mut brain: B,
     stop: &AtomicBool,
     shared: &CalibratorShared,
 ) {
     let k = svc.cores();
-    let mut policy = CalibratorPolicy::new(cfg.clone(), k, Instant::now());
+    // the host brain logs as plain "calibrator" (byte-compatible with
+    // pre-split consumers); other brains are labelled, e.g.
+    // "calibrator[firmware]"
+    let who = if brain.tag().is_empty() {
+        "calibrator".to_string()
+    } else {
+        format!("calibrator[{}]", brain.tag())
+    };
     while !stop.load(Ordering::SeqCst) {
         let sweep_start = Instant::now();
         for core in 0..k {
@@ -327,7 +432,9 @@ fn run<S: CimService>(
                 Err(ServeError::Disconnected) => return,
                 Err(_) => continue,
             };
-            let trend = health.residual.map(|r| policy.observe(core, r));
+            let healthy = svc.board().healthy_cores();
+            let trend =
+                brain.observe(core, health.residual, health.fenced, health.recal_epoch, healthy);
             shared.update(core, |s| {
                 if trend.is_some() {
                     s.samples += 1;
@@ -336,14 +443,12 @@ fn run<S: CimService>(
                 s.fenced = health.fenced;
                 s.last_recal_epoch = health.recal_epoch;
             });
-            let now = Instant::now();
-            let healthy = svc.board().healthy_cores();
-            let Some(reason) = policy.decide(core, healthy, health.fenced, now) else {
+            let Some(reason) = brain.decide(core, healthy, health.fenced) else {
                 continue;
             };
-            let pre_trend = policy.trend(core).unwrap_or(f64::NAN);
+            let pre_trend = brain.trend(core).unwrap_or(f64::NAN);
             println!(
-                "calibrator: core {core} {reason} trigger (trend {pre_trend:.4}, \
+                "{who}: core {core} {reason} trigger (trend {pre_trend:.4}, \
                  threshold {:.4}) — draining",
                 cfg.threshold
             );
@@ -353,7 +458,7 @@ fn run<S: CimService>(
             });
             match svc.drain(core) {
                 Ok(h) => {
-                    policy.record_drain(core, Instant::now(), h.recalibrated, h.residual);
+                    brain.record_drain(core, h.recalibrated, h.residual);
                     shared.update(core, |s| {
                         if h.recalibrated {
                             s.drains += 1;
@@ -367,13 +472,13 @@ fn run<S: CimService>(
                     let post = h.residual.unwrap_or(f64::NAN);
                     if h.recalibrated && !h.fenced {
                         println!(
-                            "calibrator: core {core} drain -> recalibrate -> rejoin \
+                            "{who}: core {core} drain -> recalibrate -> rejoin \
                              complete (residual {pre_trend:.4} -> {post:.4}, epoch {})",
                             h.recal_epoch
                         );
                     } else {
                         println!(
-                            "calibrator: core {core} drain finished without rejoining \
+                            "{who}: core {core} drain finished without rejoining \
                              (residual {pre_trend:.4} -> {post:.4}, fenced {}, \
                              recalibrated {}, epoch {})",
                             h.fenced, h.recalibrated, h.recal_epoch
@@ -382,9 +487,9 @@ fn run<S: CimService>(
                 }
                 Err(ServeError::Disconnected) => return,
                 Err(e) => {
-                    policy.record_drain(core, Instant::now(), false, None);
+                    brain.record_drain(core, false, None);
                     shared.update(core, |s| s.drain_failures += 1);
-                    eprintln!("calibrator: core {core} drain failed: {e}");
+                    eprintln!("{who}: core {core} drain failed: {e}");
                 }
             }
         }

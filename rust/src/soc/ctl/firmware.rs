@@ -1,0 +1,285 @@
+//! The calibration supervisor firmware: `CalibratorPolicy` ported to
+//! RV32IM fixed point, assembled with the in-repo [`Asm`] builder and
+//! run to completion once per sampling sweep on the supervisor SoC.
+//!
+//! Fixed-point formats (see DESIGN.md §13):
+//! * residuals / trends / thresholds — **Q16.16** (`to_q16`): unsigned
+//!   on the wire, kept below `i32::MAX` so the EWMA delta `r - e` stays
+//!   signed-safe inside the core;
+//! * EWMA alpha — Q16 in `[1, 65536]` (65536 = track the raw residual);
+//! * time — unsigned milliseconds on a host-fed monotonic clock that
+//!   starts at supervisor birth. All comparisons are elapsed-based
+//!   (`now - t < window`), so they stay correct as the clock grows.
+//!
+//! The EWMA update is `e += (r - e) * alpha >> 16`, algebraically equal
+//! to the host's `alpha*r + (1-alpha)*e`. The 32×32 product is composed
+//! from `mul`/`mulh` so the shift sees the full 64-bit signed product —
+//! the result is the exact floor, not a truncated 32-bit approximation.
+//!
+//! Per-core policy state (EWMA, validity flags, last-recal/last-drain
+//! timestamps) lives in supervisor RAM at [`state::BASE`] and persists
+//! across sweeps; zeroed RAM is the correct initial state (no trend, no
+//! drain yet, staleness measured from clock origin = supervisor birth,
+//! matching `CalibratorPolicy::new`'s `last_recal = now`).
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
+use crate::coordinator::calibrator::CalibratorConfig;
+use crate::soc::ctl::periph::{regs, to_q16, MAGIC_VALUE, TREND_NONE};
+use crate::soc::memmap::map;
+use crate::soc::riscv::asm::Asm;
+use std::time::Duration;
+
+/// Parameter-block layout (word offsets from [`map::PARAM_BLOCK`]),
+/// written by the host before the first sweep.
+pub mod pblk {
+    /// EWMA alpha, Q16 in `[1, 65536]`
+    pub const ALPHA_Q16: u32 = 0;
+    /// drain threshold, Q16
+    pub const THRESHOLD_Q16: u32 = 1;
+    /// cool-down window, ms
+    pub const COOLDOWN_MS: u32 = 2;
+    /// staleness deadline, ms
+    pub const STALENESS_MS: u32 = 3;
+}
+
+/// Firmware-private per-core policy state in supervisor RAM. The host
+/// never writes here after boot — it is the firmware's working memory.
+pub mod state {
+    /// base address of the per-core state array
+    pub const BASE: u32 = 0x0009_0000;
+    /// bytes per core
+    pub const STRIDE: u32 = 16;
+    /// EWMA trend, Q16 (valid iff [`F_EWMA_VALID`])
+    pub const EWMA_Q16: u32 = 0;
+    /// validity flags
+    pub const FLAGS: u32 = 4;
+    /// clock of the last successful recalibration (0 = supervisor birth)
+    pub const LAST_RECAL_MS: u32 = 8;
+    /// clock of the last drain attempt (valid iff [`F_DRAIN_VALID`])
+    pub const LAST_DRAIN_MS: u32 = 12;
+
+    pub const F_EWMA_VALID: u32 = 1 << 0;
+    pub const F_DRAIN_VALID: u32 = 1 << 1;
+}
+
+/// Firmware exit code: sweep completed.
+pub const EXIT_OK: u32 = 0;
+/// Firmware exit code: the mailbox MAGIC probe failed.
+pub const EXIT_BAD_MAGIC: u32 = 1;
+
+/// Duration → saturating u32 milliseconds (the firmware clock format).
+pub fn ms_u32(d: Duration) -> u32 {
+    d.as_millis().min(u32::MAX as u128) as u32
+}
+
+/// Quantize the daemon config into the firmware parameter block.
+pub fn supervisor_param_block(cfg: &CalibratorConfig) -> [u32; 4] {
+    // NaN casts to 0 and clamps to 1: a degenerate alpha degrades to the
+    // slowest trend instead of corrupting the fixed-point blend
+    let alpha_q16 = ((cfg.ewma_alpha * 65536.0).round() as i64).clamp(1, 65536) as u32;
+    [
+        alpha_q16,
+        to_q16(cfg.threshold),
+        ms_u32(cfg.cooldown),
+        ms_u32(cfg.max_staleness),
+    ]
+}
+
+/// Step budget for one sweep over `cores` banks (the loop body is ~60
+/// instructions; the budget is a runaway backstop, not a tuning knob).
+pub fn max_steps(cores: usize) -> u64 {
+    10_000 + 1_000 * cores as u64
+}
+
+/// Assemble the supervisor sweep program. Run-to-completion: the host
+/// resets `pc` to [`map::ENTRY`] before every sweep; RAM carries the
+/// policy state across runs. One sweep = for each core bank: fold in a
+/// drain result, fold in a health sample, publish the trend, and ring
+/// the drain doorbell when the policy fires — the exact trigger/guard
+/// ladder of `CalibratorPolicy::decide`, in the same order.
+pub fn supervisor_program() -> Vec<u8> {
+    // register allocation:
+    //   x5  CTL base          x21 now_ms            x26 ewma (Q16)
+    //   x8  alpha (Q16)       x22 healthy cores     x27 state flags
+    //   x9  threshold (Q16)   x23 core index        x28-x31 scratch
+    //   x18 cooldown_ms       x24 mailbox bank addr
+    //   x19 staleness_ms      x25 state addr
+    //   x20 ncores            x6/x7 scratch
+    let mut a = Asm::new(map::ENTRY);
+    a.li(5, map::CTL_BASE as i32);
+    a.lw(6, 5, regs::MAGIC as i32);
+    a.li(7, MAGIC_VALUE as i32);
+    a.beq(6, 7, "magic_ok");
+    a.li(10, EXIT_BAD_MAGIC as i32);
+    a.exit();
+    a.label("magic_ok");
+    a.li(6, map::PARAM_BLOCK as i32);
+    a.lw(8, 6, (pblk::ALPHA_Q16 * 4) as i32);
+    a.lw(9, 6, (pblk::THRESHOLD_Q16 * 4) as i32);
+    a.lw(18, 6, (pblk::COOLDOWN_MS * 4) as i32);
+    a.lw(19, 6, (pblk::STALENESS_MS * 4) as i32);
+    a.lw(20, 5, regs::NCORES as i32);
+    a.lw(21, 5, regs::NOW_MS as i32);
+    a.lw(22, 5, regs::HEALTHY as i32);
+    a.li(23, 0);
+    a.li(24, (map::CTL_BASE + regs::CORE0) as i32);
+    a.li(25, state::BASE as i32);
+
+    a.label("core");
+    a.bge(23, 20, "done");
+    a.lw(26, 25, state::EWMA_Q16 as i32);
+    a.lw(27, 25, state::FLAGS as i32);
+
+    // (1) fold in the result of a drain the host executed for us:
+    // last_drain always, last_recal + trend re-seed when it recalibrated
+    a.lw(28, 24, regs::RESULT_FLAGS as i32);
+    a.andi(29, 28, regs::F_VALID as i32);
+    a.beq(29, 0, "no_result");
+    a.sw(24, 0, regs::RESULT_FLAGS as i32);
+    a.lw(30, 24, regs::RESULT_MS as i32);
+    a.sw(25, 30, state::LAST_DRAIN_MS as i32);
+    a.ori(27, 27, state::F_DRAIN_VALID as i32);
+    a.andi(29, 28, regs::F_RECALIBRATED as i32);
+    a.beq(29, 0, "no_result");
+    a.sw(25, 30, state::LAST_RECAL_MS as i32);
+    a.andi(29, 28, regs::F_HAS_RESIDUAL as i32);
+    a.beq(29, 0, "recal_no_residual");
+    a.lw(26, 24, regs::RESULT_Q16 as i32);
+    a.ori(27, 27, state::F_EWMA_VALID as i32);
+    a.j("no_result");
+    a.label("recal_no_residual");
+    a.andi(27, 27, !(state::F_EWMA_VALID as i32));
+    a.label("no_result");
+
+    // (2) fold in a fresh health sample: ack the valid bit (keeping
+    // fenced/has-residual for the decision ladder), seed or blend
+    a.lw(28, 24, regs::SAMPLE_FLAGS as i32);
+    a.andi(29, 28, regs::F_VALID as i32);
+    a.beq(29, 0, "no_sample");
+    a.andi(30, 28, !(regs::F_VALID as i32));
+    a.sw(24, 30, regs::SAMPLE_FLAGS as i32);
+    a.andi(29, 28, regs::F_HAS_RESIDUAL as i32);
+    a.beq(29, 0, "no_sample");
+    a.lw(28, 24, regs::RESIDUAL_Q16 as i32);
+    a.andi(29, 27, state::F_EWMA_VALID as i32);
+    a.bne(29, 0, "blend");
+    a.mv(26, 28);
+    a.ori(27, 27, state::F_EWMA_VALID as i32);
+    a.j("no_sample");
+    a.label("blend");
+    // e += (r - e) * alpha >> 16; bits [16..48) of the signed product
+    a.sub(29, 28, 26);
+    a.mul(30, 29, 8);
+    a.mulh(31, 29, 8);
+    a.srli(30, 30, 16);
+    a.slli(31, 31, 16);
+    a.or(30, 30, 31);
+    a.add(26, 26, 30);
+    a.label("no_sample");
+
+    // (3) publish the trend for host observability
+    a.andi(29, 27, state::F_EWMA_VALID as i32);
+    a.bne(29, 0, "trend_val");
+    a.li(30, TREND_NONE as i32);
+    a.sw(24, 30, regs::TREND_Q16 as i32);
+    a.j("decide");
+    a.label("trend_val");
+    a.sw(24, 26, regs::TREND_Q16 as i32);
+    a.label("decide");
+
+    // (4) the decision ladder, same order as CalibratorPolicy::decide:
+    // cool-down, availability guard, trend trigger, staleness trigger
+    a.lw(28, 24, regs::CMD as i32);
+    a.bne(28, 0, "next");
+    a.andi(29, 27, state::F_DRAIN_VALID as i32);
+    a.beq(29, 0, "no_cooldown");
+    a.lw(30, 25, state::LAST_DRAIN_MS as i32);
+    a.sub(30, 21, 30);
+    a.bltu(30, 18, "next");
+    a.label("no_cooldown");
+    a.lw(28, 24, regs::SAMPLE_FLAGS as i32);
+    a.andi(29, 28, regs::F_FENCED as i32);
+    a.bne(29, 0, "avail_ok");
+    a.li(29, 1);
+    a.bgeu(29, 22, "next");
+    a.label("avail_ok");
+    a.andi(29, 27, state::F_EWMA_VALID as i32);
+    a.beq(29, 0, "next");
+    a.bltu(9, 26, "fire_trend");
+    a.lw(30, 25, state::LAST_RECAL_MS as i32);
+    a.sub(30, 21, 30);
+    a.bltu(30, 19, "next");
+    a.li(29, regs::CMD_STALENESS as i32);
+    a.sw(24, 29, regs::CMD as i32);
+    a.j("next");
+    a.label("fire_trend");
+    a.li(29, regs::CMD_TREND as i32);
+    a.sw(24, 29, regs::CMD as i32);
+    a.label("next");
+
+    // (5) persist policy state and advance to the next bank
+    a.sw(25, 26, state::EWMA_Q16 as i32);
+    a.sw(25, 27, state::FLAGS as i32);
+    a.addi(23, 23, 1);
+    a.addi(24, 24, regs::CORE_STRIDE as i32);
+    a.addi(25, 25, state::STRIDE as i32);
+    a.j("core");
+
+    a.label("done");
+    a.lw(6, 5, regs::SWEEP as i32);
+    a.addi(6, 6, 1);
+    a.sw(5, 6, regs::SWEEP as i32);
+    a.li(10, EXIT_OK as i32);
+    a.exit();
+    a.assemble()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn program_assembles_below_the_param_block() {
+        let image = supervisor_program();
+        assert!(!image.is_empty());
+        assert_eq!(image.len() % 4, 0);
+        assert!(
+            (image.len() as u32) < map::PARAM_BLOCK,
+            "program ({} bytes) must not overlap the parameter block",
+            image.len()
+        );
+    }
+
+    #[test]
+    fn param_block_quantization() {
+        let cfg = CalibratorConfig {
+            period: Duration::from_millis(10),
+            ewma_alpha: 0.5,
+            threshold: 0.05,
+            max_staleness: Duration::from_secs(60),
+            cooldown: Duration::from_secs(5),
+        };
+        let p = supervisor_param_block(&cfg);
+        assert_eq!(p[pblk::ALPHA_Q16 as usize], 32768);
+        assert_eq!(p[pblk::THRESHOLD_Q16 as usize], 3277);
+        assert_eq!(p[pblk::COOLDOWN_MS as usize], 5_000);
+        assert_eq!(p[pblk::STALENESS_MS as usize], 60_000);
+    }
+
+    #[test]
+    fn param_block_clamps_degenerate_alpha() {
+        let mut cfg = CalibratorConfig::default();
+        cfg.ewma_alpha = 0.0;
+        assert_eq!(supervisor_param_block(&cfg)[0], 1, "alpha floors at one LSB");
+        cfg.ewma_alpha = 2.0;
+        assert_eq!(supervisor_param_block(&cfg)[0], 65536, "alpha caps at unity");
+        cfg.ewma_alpha = f64::NAN;
+        assert_eq!(supervisor_param_block(&cfg)[0], 1, "NaN degrades to the floor");
+    }
+
+    #[test]
+    fn huge_durations_saturate() {
+        assert_eq!(ms_u32(Duration::from_secs(u64::MAX)), u32::MAX);
+        assert_eq!(ms_u32(Duration::from_millis(7)), 7);
+    }
+}

@@ -1,0 +1,380 @@
+//! Firmware-native calibration control: the simulated RV32 core as the
+//! calibration decision-maker for the live cluster (the paper's
+//! *RISC-V controlled* self-calibration, in serving form).
+//!
+//! The split of responsibilities:
+//! * [`CalCtl`] (`periph`) — the memory-mapped mailbox. The only
+//!   channel between host and firmware: residual samples, the staleness
+//!   clock, the healthy-core count, and per-core drain doorbells cross
+//!   it as 32-bit bus words.
+//! * `firmware` — `CalibratorPolicy` in RV32IM fixed point, assembled
+//!   from the in-repo `Asm` builder, run to completion once per sweep.
+//! * [`SupervisorCore`] — the supervisor SoC instance (CPU + RAM +
+//!   mailbox) plus the host-side protocol driver: deposit a sample, run
+//!   a sweep, harvest doorbells, acknowledge executed drains.
+//! * [`FirmwareBrain`] — adapts [`SupervisorCore`] to the daemon's
+//!   [`CalibratorBrain`] seam; [`FirmwareCalibrator`] spawns the stock
+//!   [`Calibrator`] daemon with it, so `serve --auto-calibrate
+//!   --firmware` reuses all the host plumbing (health probes, drain
+//!   execution, `CalStats` wire frames) and remote clients cannot tell
+//!   which brain is running.
+//!
+//! A firmware fault (bad magic, step-limit, bus error) never takes
+//! serving down: the supervisor records it, the sweep yields no
+//! decisions, and the cluster keeps serving uncalibrated — identical to
+//! the policy deciding "no drain", and visible via [`SupervisorCore::faults`].
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
+pub mod firmware;
+pub mod periph;
+
+pub use periph::{from_q16, to_q16, CalCtl, MAGIC_VALUE, TREND_NONE};
+
+use crate::coordinator::calibrator::{
+    Calibrator, CalibratorBrain, CalibratorConfig, CalibratorShared, CoreCalStats, DrainReason,
+};
+use crate::coordinator::service::CimService;
+use crate::soc::bus::{Axi4LiteBus, BusDevice, Ram};
+use crate::soc::ctl::periph::regs;
+use crate::soc::memmap::map;
+use crate::soc::riscv::cpu::{Cpu, Halt};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// The supervisor SoC (RV32 CPU + private RAM + [`CalCtl`] mailbox) and
+/// its host-side protocol driver. Deterministic and clock-free: every
+/// entry point takes an explicit `now_ms`, so tests and the property
+/// harness can replay any schedule.
+pub struct SupervisorCore {
+    cpu: Cpu,
+    bus: Axi4LiteBus,
+    cores: usize,
+    max_steps: u64,
+    /// doorbells harvested from the mailbox, awaiting `take_decision`
+    pending: Vec<Option<DrainReason>>,
+    /// trends published by the firmware at the last sweep
+    trends: Vec<Option<f64>>,
+    faults: u64,
+    last_fault: Option<String>,
+}
+
+impl SupervisorCore {
+    pub fn new(cores: usize, cfg: &CalibratorConfig) -> Self {
+        let mut ram = Ram::new(map::RAM_SIZE, "ram");
+        ram.load(0, &firmware::supervisor_program());
+        for (i, &w) in firmware::supervisor_param_block(cfg).iter().enumerate() {
+            let _ = ram.write32(map::PARAM_BLOCK - map::RAM_BASE + 4 * i as u32, w);
+        }
+        let mut bus = Axi4LiteBus::new();
+        bus.map(map::RAM_BASE, Box::new(ram));
+        bus.map(map::CTL_BASE, Box::new(CalCtl::new(cores)));
+        let mut cpu = Cpu::new(map::ENTRY);
+        cpu.regs[2] = map::STACK_TOP;
+        Self {
+            cpu,
+            bus,
+            cores,
+            max_steps: firmware::max_steps(cores),
+            pending: vec![None; cores],
+            trends: vec![None; cores],
+            faults: 0,
+            last_fault: None,
+        }
+    }
+
+    fn ctl_mut(&mut self) -> Option<&mut CalCtl> {
+        self.bus.device_mut("calctl").and_then(|d| d.as_any().downcast_mut::<CalCtl>())
+    }
+
+    /// Deposit one health sample for `core`, run a firmware sweep, and
+    /// return the trend the firmware published for `core` (which folds
+    /// this sample in). Doorbells the sweep rang are parked for
+    /// [`SupervisorCore::take_decision`].
+    pub fn observe(
+        &mut self,
+        core: usize,
+        residual: Option<f64>,
+        fenced: bool,
+        recal_epoch: u64,
+        healthy_cores: usize,
+        now_ms: u32,
+    ) -> Option<f64> {
+        if let Some(ctl) = self.ctl_mut() {
+            ctl.set_clock(now_ms);
+            ctl.set_healthy(u32::try_from(healthy_cores).unwrap_or(u32::MAX));
+            ctl.post_sample(core, residual, fenced, recal_epoch);
+        }
+        self.run_sweep();
+        let n = self.cores;
+        let (cmds, trends): (Vec<u32>, Vec<Option<f64>>) = match self.ctl_mut() {
+            Some(ctl) => (0..n).map(|c| (ctl.take_cmd(c), ctl.trend(c))).unzip(),
+            None => ((0..n).map(|_| regs::CMD_NONE).collect(), vec![None; n]),
+        };
+        self.trends = trends;
+        // Overwrite only THIS core's pending slot with its own doorbell
+        // (including "none": a fresh quiet sweep supersedes any stale
+        // decision). Doorbells other cores rang during this sweep are
+        // dropped — their state is unchanged, so they re-derive the same
+        // decision when their own sample arrives.
+        if let Some(slot) = self.pending.get_mut(core) {
+            *slot = match cmds.get(core).copied().unwrap_or(regs::CMD_NONE) {
+                regs::CMD_TREND => Some(DrainReason::Trend),
+                regs::CMD_STALENESS => Some(DrainReason::Staleness),
+                _ => None,
+            };
+        }
+        self.trends.get(core).copied().flatten()
+    }
+
+    /// Take (and clear) the firmware's drain decision for `core`.
+    pub fn take_decision(&mut self, core: usize) -> Option<DrainReason> {
+        self.pending.get_mut(core).and_then(|p| p.take())
+    }
+
+    /// Acknowledge a drain the host executed: the firmware folds the
+    /// outcome into its cool-down/staleness/trend state on the next
+    /// sweep (before it consumes the next sample — same ordering as the
+    /// host policy's `record_drain` followed by `observe`).
+    pub fn record_drain(
+        &mut self,
+        core: usize,
+        recalibrated: bool,
+        residual: Option<f64>,
+        now_ms: u32,
+    ) {
+        if let Some(ctl) = self.ctl_mut() {
+            ctl.post_result(core, recalibrated, residual, now_ms);
+        }
+    }
+
+    /// Trend the firmware last published for `core`.
+    pub fn trend(&self, core: usize) -> Option<f64> {
+        self.trends.get(core).copied().flatten()
+    }
+
+    /// Completed firmware sweeps (the firmware's own liveness counter).
+    pub fn sweeps(&mut self) -> u32 {
+        self.ctl_mut().map(|c| c.sweep()).unwrap_or(0)
+    }
+
+    /// Sweeps that did not exit cleanly (bad magic, fault, step limit).
+    pub fn faults(&self) -> u64 {
+        self.faults
+    }
+
+    /// Halt description of the most recent faulted sweep.
+    pub fn last_fault(&self) -> Option<&str> {
+        self.last_fault.as_deref()
+    }
+
+    fn run_sweep(&mut self) {
+        self.cpu.pc = map::ENTRY;
+        self.cpu.regs[2] = map::STACK_TOP;
+        match self.cpu.run(&mut self.bus, self.max_steps) {
+            Halt::Exit(code) if code == firmware::EXIT_OK => {}
+            halt => {
+                self.faults += 1;
+                self.last_fault = Some(format!("{halt:?}"));
+            }
+        }
+    }
+}
+
+/// [`SupervisorCore`] behind the daemon's [`CalibratorBrain`] seam: the
+/// stock daemon samples health and executes drains, the RV32 firmware
+/// decides. Time is milliseconds since brain construction — the same
+/// origin the firmware's zeroed `last_recal` state assumes.
+pub struct FirmwareBrain {
+    core: SupervisorCore,
+    started: Instant,
+    fault_logged: bool,
+}
+
+impl FirmwareBrain {
+    pub fn new(cores: usize, cfg: &CalibratorConfig) -> Self {
+        Self { core: SupervisorCore::new(cores, cfg), started: Instant::now(), fault_logged: false }
+    }
+
+    fn now_ms(&self) -> u32 {
+        self.started.elapsed().as_millis().min(u32::MAX as u128) as u32
+    }
+
+    /// The wrapped supervisor (fault counters, sweep counter).
+    pub fn supervisor(&mut self) -> &mut SupervisorCore {
+        &mut self.core
+    }
+}
+
+impl CalibratorBrain for FirmwareBrain {
+    fn observe(
+        &mut self,
+        core: usize,
+        residual: Option<f64>,
+        fenced: bool,
+        recal_epoch: u64,
+        healthy_cores: usize,
+    ) -> Option<f64> {
+        let now = self.now_ms();
+        let trend = self.core.observe(core, residual, fenced, recal_epoch, healthy_cores, now);
+        if !self.fault_logged && self.core.faults() > 0 {
+            self.fault_logged = true;
+            eprintln!(
+                "calibrator[firmware]: supervisor firmware fault ({}); \
+                 continuing without autonomous decisions",
+                self.core.last_fault().unwrap_or("unknown halt")
+            );
+        }
+        // trend is reported only for sweeps that folded a residual in,
+        // mirroring HostBrain (it feeds the samples/trend statistics)
+        residual.and(trend)
+    }
+
+    fn decide(&mut self, core: usize, _healthy_cores: usize, _fenced: bool) -> Option<DrainReason> {
+        self.core.take_decision(core)
+    }
+
+    fn record_drain(&mut self, core: usize, recalibrated: bool, residual: Option<f64>) {
+        let now = self.now_ms();
+        self.core.record_drain(core, recalibrated, residual, now);
+    }
+
+    fn trend(&self, core: usize) -> Option<f64> {
+        self.core.trend(core)
+    }
+
+    fn tag(&self) -> &'static str {
+        "firmware"
+    }
+}
+
+/// The firmware-brained calibration daemon: drop-in for [`Calibrator`]
+/// (`serve --auto-calibrate --firmware`). The supervisor SoC is built
+/// on the daemon thread — its bus devices are not `Send` and never need
+/// to be.
+pub struct FirmwareCalibrator {
+    daemon: Calibrator,
+}
+
+impl FirmwareCalibrator {
+    pub fn spawn<S: CimService + Send + 'static>(svc: S, cfg: CalibratorConfig) -> Self {
+        let brain_cfg = cfg.clone();
+        let daemon =
+            Calibrator::spawn_with(svc, cfg, move |cores| FirmwareBrain::new(cores, &brain_cfg));
+        Self { daemon }
+    }
+
+    pub fn shared(&self) -> Arc<CalibratorShared> {
+        self.daemon.shared()
+    }
+
+    pub fn stop(self) -> Vec<CoreCalStats> {
+        self.daemon.stop()
+    }
+
+    /// Unwrap to the plain daemon handle (shared stats + stop), so the
+    /// CLI can hold either brain behind one type.
+    pub fn into_daemon(self) -> Calibrator {
+        self.daemon
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn cfg(threshold: f64, cooldown_ms: u64, staleness_ms: u64) -> CalibratorConfig {
+        CalibratorConfig {
+            period: Duration::from_millis(10),
+            ewma_alpha: 0.5,
+            threshold,
+            max_staleness: Duration::from_millis(staleness_ms),
+            cooldown: Duration::from_millis(cooldown_ms),
+        }
+    }
+
+    #[test]
+    fn firmware_seeds_and_blends_the_trend() {
+        let mut sup = SupervisorCore::new(1, &cfg(10.0, 0, 3_600_000));
+        let t = sup.observe(0, Some(0.10), false, 0, 2, 0).unwrap();
+        assert!((t - 0.10).abs() < 1e-4, "first sample seeds, got {t}");
+        let t = sup.observe(0, Some(0.20), false, 0, 2, 10).unwrap();
+        assert!((t - 0.15).abs() < 1e-4, "alpha 0.5 blend, got {t}");
+        assert_eq!(sup.take_decision(0), None, "in-band trend must not drain");
+        assert_eq!(sup.faults(), 0, "{:?}", sup.last_fault());
+        assert_eq!(sup.sweeps(), 2, "each observe runs exactly one sweep");
+    }
+
+    #[test]
+    fn trend_trigger_rings_the_doorbell() {
+        let mut sup = SupervisorCore::new(2, &cfg(0.05, 0, 3_600_000));
+        sup.observe(0, Some(0.5), false, 0, 2, 0);
+        assert_eq!(sup.take_decision(0), Some(DrainReason::Trend));
+        assert_eq!(sup.take_decision(0), None, "take must clear");
+        assert_eq!(sup.take_decision(1), None, "the quiet core stays quiet");
+        assert_eq!(sup.faults(), 0, "{:?}", sup.last_fault());
+    }
+
+    #[test]
+    fn observe_without_residual_never_decides() {
+        let mut sup = SupervisorCore::new(1, &cfg(0.05, 0, 1_000));
+        assert_eq!(sup.observe(0, None, false, 0, 2, 0), None);
+        // staleness must not fire on a core whose residual was never
+        // observable, even long past the deadline
+        assert_eq!(sup.observe(0, None, false, 0, 2, 50_000), None);
+        assert_eq!(sup.take_decision(0), None);
+    }
+
+    #[test]
+    fn cooldown_spaces_drain_attempts() {
+        let mut sup = SupervisorCore::new(2, &cfg(0.05, 5_000, 3_600_000));
+        sup.observe(0, Some(0.5), false, 0, 2, 0);
+        assert_eq!(sup.take_decision(0), Some(DrainReason::Trend));
+        sup.record_drain(0, true, Some(0.5), 100);
+        // still out of band, inside the window: quiet
+        sup.observe(0, Some(0.5), false, 1, 2, 1_000);
+        assert_eq!(sup.take_decision(0), None);
+        sup.observe(0, Some(0.5), false, 1, 2, 4_000);
+        assert_eq!(sup.take_decision(0), None);
+        // past the window the trigger re-arms
+        sup.observe(0, Some(0.5), false, 1, 2, 5_200);
+        assert_eq!(sup.take_decision(0), Some(DrainReason::Trend));
+    }
+
+    #[test]
+    fn never_drains_the_last_healthy_core() {
+        let mut sup = SupervisorCore::new(1, &cfg(0.05, 0, 3_600_000));
+        sup.observe(0, Some(0.5), false, 0, 1, 0);
+        assert_eq!(sup.take_decision(0), None, "availability beats freshness");
+        // once fenced the core serves nothing: draining it can only help
+        sup.observe(0, Some(0.5), true, 0, 0, 10);
+        assert_eq!(sup.take_decision(0), Some(DrainReason::Trend));
+    }
+
+    #[test]
+    fn staleness_fires_and_recal_resets_the_clock() {
+        let mut sup = SupervisorCore::new(2, &cfg(10.0, 0, 1_000));
+        sup.observe(0, Some(0.01), false, 0, 2, 0);
+        assert_eq!(sup.take_decision(0), None, "calibration still fresh");
+        sup.observe(0, Some(0.01), false, 0, 2, 1_500);
+        assert_eq!(sup.take_decision(0), Some(DrainReason::Staleness));
+        sup.record_drain(0, true, Some(0.01), 1_600);
+        // the deadline now measures from the recalibration, not birth
+        sup.observe(0, Some(0.01), false, 1, 2, 2_400);
+        assert_eq!(sup.take_decision(0), None);
+        sup.observe(0, Some(0.01), false, 1, 2, 2_700);
+        assert_eq!(sup.take_decision(0), Some(DrainReason::Staleness));
+    }
+
+    #[test]
+    fn recal_result_reseeds_the_trend() {
+        let mut sup = SupervisorCore::new(1, &cfg(0.05, 0, 3_600_000));
+        sup.observe(0, Some(0.5), true, 0, 0, 0);
+        assert_eq!(sup.take_decision(0), Some(DrainReason::Trend));
+        sup.record_drain(0, true, Some(0.01), 50);
+        // next sweep folds the result first, then blends the new sample
+        let t = sup.observe(0, Some(0.01), false, 1, 1, 100).unwrap();
+        assert!((t - 0.01).abs() < 1e-3, "trend re-seeds from the post-recal residual, got {t}");
+        assert_eq!(sup.take_decision(0), None, "back in band");
+    }
+}

@@ -1,0 +1,363 @@
+//! The calibration mailbox/CSR peripheral (`CalCtl`): the bus-visible
+//! surface between the serving cluster and the RV32 supervisor firmware.
+//! The host acts as the sensor DMA — it deposits per-core health samples
+//! (residual in Q16 fixed point, fence flag, recalibration epoch), the
+//! healthy-core count, and a millisecond staleness clock into the
+//! registers below; the firmware consumes them, runs the calibration
+//! policy, and raises drain commands through per-core doorbells that the
+//! host executes and acknowledges with result registers. Everything
+//! crosses this device as 32-bit words over AXI4-Lite — no Rust channel
+//! or shared struct leaks into the firmware's world.
+//!
+//! Register map (see DESIGN.md §13 for the protocol walk-through):
+//!
+//! | offset | register | access (fw) | contents |
+//! |--------|----------|-------------|----------|
+//! | 0x00 | MAGIC    | RO | [`MAGIC_VALUE`] |
+//! | 0x04 | NCORES   | RO | number of per-core banks |
+//! | 0x08 | NOW_MS   | RO | host-maintained ms clock (staleness/cool-down) |
+//! | 0x0C | HEALTHY  | RO | cores accepting placed work at last refresh |
+//! | 0x10 | SWEEP    | RW | firmware sweep counter (liveness) |
+//!
+//! Per-core bank at `CORE0 + core * CORE_STRIDE`:
+//!
+//! | +off | register | access (fw) | contents |
+//! |------|--------------|----|----------|
+//! | 0x00 | SAMPLE_FLAGS | RW | bit0 valid, bit1 fenced, bit2 has-residual |
+//! | 0x04 | RESIDUAL_Q16 | RO | latest residual sample, Q16 |
+//! | 0x08 | EPOCH        | RO | recalibration epoch (low 32 bits) |
+//! | 0x0C | CMD          | RW | drain doorbell: 0 none, 1 trend, 2 staleness |
+//! | 0x10 | RESULT_FLAGS | RW | bit0 valid, bit1 recalibrated, bit2 has-residual |
+//! | 0x14 | RESULT_Q16   | RO | post-drain residual, Q16 |
+//! | 0x18 | RESULT_MS    | RO | host clock when the drain completed |
+//! | 0x1C | TREND_Q16    | RW | firmware-published EWMA ([`TREND_NONE`] = none) |
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
+use crate::soc::bus::{BusDevice, BusResp};
+
+/// Register offsets and flag bits of the `CalCtl` device.
+pub mod regs {
+    pub const MAGIC: u32 = 0x00;
+    pub const NCORES: u32 = 0x04;
+    pub const NOW_MS: u32 = 0x08;
+    pub const HEALTHY: u32 = 0x0C;
+    pub const SWEEP: u32 = 0x10;
+    /// first per-core bank
+    pub const CORE0: u32 = 0x40;
+    /// bytes per per-core bank
+    pub const CORE_STRIDE: u32 = 0x20;
+
+    // per-core bank offsets
+    pub const SAMPLE_FLAGS: u32 = 0x00;
+    pub const RESIDUAL_Q16: u32 = 0x04;
+    pub const EPOCH: u32 = 0x08;
+    pub const CMD: u32 = 0x0C;
+    pub const RESULT_FLAGS: u32 = 0x10;
+    pub const RESULT_Q16: u32 = 0x14;
+    pub const RESULT_MS: u32 = 0x18;
+    pub const TREND_Q16: u32 = 0x1C;
+
+    /// SAMPLE_FLAGS / RESULT_FLAGS bit0: producer set it, consumer clears
+    pub const F_VALID: u32 = 1 << 0;
+    /// SAMPLE_FLAGS bit1: the core is fenced out of placement
+    pub const F_FENCED: u32 = 1 << 1;
+    /// SAMPLE_FLAGS / RESULT_FLAGS bit2: the Q16 residual register holds a
+    /// measurement (a service without an engine reports none)
+    pub const F_HAS_RESIDUAL: u32 = 1 << 2;
+    /// RESULT_FLAGS bit1: the drain ran a recalibration
+    pub const F_RECALIBRATED: u32 = 1 << 1;
+
+    /// CMD doorbell codes raised by the firmware
+    pub const CMD_NONE: u32 = 0;
+    pub const CMD_TREND: u32 = 1;
+    pub const CMD_STALENESS: u32 = 2;
+}
+
+/// `MAGIC` register value — lets firmware verify it is talking to the
+/// calibration mailbox and not an unmapped hole.
+pub const MAGIC_VALUE: u32 = 0xCA1C_0DE1;
+
+/// `TREND_Q16` sentinel for "no trend yet" (residuals are non-negative,
+/// so the all-ones pattern is unreachable as a real value).
+pub const TREND_NONE: u32 = 0xFFFF_FFFF;
+
+/// Residual (f64, non-negative) to Q16 fixed point, saturating at
+/// `i32::MAX` so firmware arithmetic stays signed-safe. NaN maps to 0.
+pub fn to_q16(v: f64) -> u32 {
+    let scaled = (v.max(0.0) * 65536.0).round();
+    if scaled >= i32::MAX as f64 {
+        i32::MAX as u32
+    } else {
+        scaled as u32
+    }
+}
+
+/// Q16 fixed point back to f64.
+pub fn from_q16(q: u32) -> f64 {
+    q as f64 / 65536.0
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct CoreBank {
+    sample_flags: u32,
+    residual_q16: u32,
+    epoch: u32,
+    cmd: u32,
+    result_flags: u32,
+    result_q16: u32,
+    result_ms: u32,
+    trend_q16: u32,
+}
+
+/// The memory-mapped calibration mailbox. Host-side code uses the typed
+/// methods; firmware uses `read32`/`write32` through the bus.
+pub struct CalCtl {
+    now_ms: u32,
+    healthy: u32,
+    sweep: u32,
+    banks: Vec<CoreBank>,
+}
+
+impl CalCtl {
+    pub fn new(cores: usize) -> Self {
+        Self {
+            now_ms: 0,
+            healthy: 0,
+            sweep: 0,
+            banks: vec![CoreBank { trend_q16: TREND_NONE, ..CoreBank::default() }; cores],
+        }
+    }
+
+    pub fn cores(&self) -> usize {
+        self.banks.len()
+    }
+
+    /// Advance the staleness/cool-down clock (host-maintained).
+    pub fn set_clock(&mut self, now_ms: u32) {
+        self.now_ms = now_ms;
+    }
+
+    /// Refresh the healthy-core count the availability guard reads.
+    pub fn set_healthy(&mut self, healthy: u32) {
+        self.healthy = healthy;
+    }
+
+    /// Deposit one health sample for `core` and raise its valid flag.
+    pub fn post_sample(&mut self, core: usize, residual: Option<f64>, fenced: bool, epoch: u64) {
+        let Some(b) = self.banks.get_mut(core) else { return };
+        let mut flags = regs::F_VALID;
+        if fenced {
+            flags |= regs::F_FENCED;
+        }
+        if let Some(r) = residual {
+            flags |= regs::F_HAS_RESIDUAL;
+            b.residual_q16 = to_q16(r);
+        } else {
+            b.residual_q16 = 0;
+        }
+        b.sample_flags = flags;
+        b.epoch = epoch as u32;
+    }
+
+    /// Read and clear the drain doorbell of `core` (`CMD_NONE` = quiet).
+    pub fn take_cmd(&mut self, core: usize) -> u32 {
+        match self.banks.get_mut(core) {
+            Some(b) => std::mem::replace(&mut b.cmd, regs::CMD_NONE),
+            None => regs::CMD_NONE,
+        }
+    }
+
+    /// Acknowledge an executed drain: the firmware folds this into its
+    /// policy state (cool-down clock, staleness reset, trend re-seed) on
+    /// its next sweep.
+    pub fn post_result(&mut self, core: usize, recalibrated: bool, residual: Option<f64>, now_ms: u32) {
+        let Some(b) = self.banks.get_mut(core) else { return };
+        let mut flags = regs::F_VALID;
+        if recalibrated {
+            flags |= regs::F_RECALIBRATED;
+        }
+        if let Some(r) = residual {
+            flags |= regs::F_HAS_RESIDUAL;
+            b.result_q16 = to_q16(r);
+        } else {
+            b.result_q16 = 0;
+        }
+        b.result_flags = flags;
+        b.result_ms = now_ms;
+    }
+
+    /// The trend the firmware last published for `core`.
+    pub fn trend(&self, core: usize) -> Option<f64> {
+        self.banks.get(core).and_then(|b| {
+            if b.trend_q16 == TREND_NONE {
+                None
+            } else {
+                Some(from_q16(b.trend_q16))
+            }
+        })
+    }
+
+    /// Completed firmware sweeps (liveness counter).
+    pub fn sweep(&self) -> u32 {
+        self.sweep
+    }
+}
+
+impl BusDevice for CalCtl {
+    fn read32(&mut self, offset: u32) -> Result<u32, BusResp> {
+        match offset {
+            regs::MAGIC => return Ok(MAGIC_VALUE),
+            regs::NCORES => return Ok(self.banks.len() as u32),
+            regs::NOW_MS => return Ok(self.now_ms),
+            regs::HEALTHY => return Ok(self.healthy),
+            regs::SWEEP => return Ok(self.sweep),
+            _ => {}
+        }
+        if offset < regs::CORE0 {
+            return Err(BusResp::SlvErr);
+        }
+        let core = ((offset - regs::CORE0) / regs::CORE_STRIDE) as usize;
+        let reg = (offset - regs::CORE0) % regs::CORE_STRIDE;
+        let Some(b) = self.banks.get(core) else { return Err(BusResp::SlvErr) };
+        match reg {
+            regs::SAMPLE_FLAGS => Ok(b.sample_flags),
+            regs::RESIDUAL_Q16 => Ok(b.residual_q16),
+            regs::EPOCH => Ok(b.epoch),
+            regs::CMD => Ok(b.cmd),
+            regs::RESULT_FLAGS => Ok(b.result_flags),
+            regs::RESULT_Q16 => Ok(b.result_q16),
+            regs::RESULT_MS => Ok(b.result_ms),
+            regs::TREND_Q16 => Ok(b.trend_q16),
+            _ => Err(BusResp::SlvErr),
+        }
+    }
+
+    fn write32(&mut self, offset: u32, value: u32) -> Result<(), BusResp> {
+        if offset == regs::SWEEP {
+            self.sweep = value;
+            return Ok(());
+        }
+        if offset < regs::CORE0 {
+            // MAGIC/NCORES/NOW_MS/HEALTHY are host-owned: read-only on the bus
+            return Err(BusResp::SlvErr);
+        }
+        let core = ((offset - regs::CORE0) / regs::CORE_STRIDE) as usize;
+        let reg = (offset - regs::CORE0) % regs::CORE_STRIDE;
+        let Some(b) = self.banks.get_mut(core) else { return Err(BusResp::SlvErr) };
+        match reg {
+            regs::SAMPLE_FLAGS => b.sample_flags = value,
+            regs::CMD => b.cmd = value,
+            regs::RESULT_FLAGS => b.result_flags = value,
+            regs::TREND_Q16 => b.trend_q16 = value,
+            // sample/result payloads are host-deposited: read-only on the bus
+            _ => return Err(BusResp::SlvErr),
+        }
+        Ok(())
+    }
+
+    fn size(&self) -> u32 {
+        regs::CORE0 + self.banks.len() as u32 * regs::CORE_STRIDE
+    }
+
+    fn name(&self) -> &str {
+        "calctl"
+    }
+
+    fn as_any(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn q16_roundtrip_and_saturation() {
+        assert_eq!(to_q16(0.0), 0);
+        assert_eq!(to_q16(1.0), 65536);
+        assert_eq!(to_q16(0.05), 3277); // round(0.05 * 65536)
+        assert_eq!(to_q16(-0.5), 0, "negative residuals clamp to zero");
+        assert_eq!(to_q16(f64::NAN), 0, "NaN clamps to zero");
+        assert_eq!(to_q16(1e9), i32::MAX as u32, "saturates signed-safe");
+        let r = 0.0371;
+        assert!((from_q16(to_q16(r)) - r).abs() < 1.0 / 65536.0);
+    }
+
+    #[test]
+    fn sample_post_and_firmware_consume() {
+        let mut ctl = CalCtl::new(2);
+        ctl.post_sample(1, Some(0.25), true, 7);
+        let bank = regs::CORE0 + regs::CORE_STRIDE;
+        let flags = ctl.read32(bank + regs::SAMPLE_FLAGS).unwrap();
+        assert_eq!(flags, regs::F_VALID | regs::F_FENCED | regs::F_HAS_RESIDUAL);
+        assert_eq!(ctl.read32(bank + regs::RESIDUAL_Q16).unwrap(), to_q16(0.25));
+        assert_eq!(ctl.read32(bank + regs::EPOCH).unwrap(), 7);
+        // firmware clears the valid bit, preserving the rest
+        ctl.write32(bank + regs::SAMPLE_FLAGS, flags & !regs::F_VALID).unwrap();
+        assert_eq!(
+            ctl.read32(bank + regs::SAMPLE_FLAGS).unwrap(),
+            regs::F_FENCED | regs::F_HAS_RESIDUAL
+        );
+        // core 0 untouched
+        assert_eq!(ctl.read32(regs::CORE0 + regs::SAMPLE_FLAGS).unwrap(), 0);
+    }
+
+    #[test]
+    fn doorbell_take_clears() {
+        let mut ctl = CalCtl::new(1);
+        assert_eq!(ctl.take_cmd(0), regs::CMD_NONE);
+        ctl.write32(regs::CORE0 + regs::CMD, regs::CMD_TREND).unwrap();
+        assert_eq!(ctl.take_cmd(0), regs::CMD_TREND);
+        assert_eq!(ctl.take_cmd(0), regs::CMD_NONE, "take must clear");
+        assert_eq!(ctl.take_cmd(9), regs::CMD_NONE, "out of range degrades quiet");
+    }
+
+    #[test]
+    fn result_ack_roundtrip() {
+        let mut ctl = CalCtl::new(1);
+        ctl.post_result(0, true, Some(0.01), 1234);
+        let flags = ctl.read32(regs::CORE0 + regs::RESULT_FLAGS).unwrap();
+        assert_eq!(flags, regs::F_VALID | regs::F_RECALIBRATED | regs::F_HAS_RESIDUAL);
+        assert_eq!(ctl.read32(regs::CORE0 + regs::RESULT_Q16).unwrap(), to_q16(0.01));
+        assert_eq!(ctl.read32(regs::CORE0 + regs::RESULT_MS).unwrap(), 1234);
+        ctl.write32(regs::CORE0 + regs::RESULT_FLAGS, 0).unwrap();
+        assert_eq!(ctl.read32(regs::CORE0 + regs::RESULT_FLAGS).unwrap(), 0);
+    }
+
+    #[test]
+    fn trend_sentinel_and_publish() {
+        let mut ctl = CalCtl::new(1);
+        assert_eq!(ctl.trend(0), None, "no trend before the firmware publishes");
+        ctl.write32(regs::CORE0 + regs::TREND_Q16, to_q16(0.125)).unwrap();
+        let t = ctl.trend(0).unwrap();
+        assert!((t - 0.125).abs() < 1e-9);
+        ctl.write32(regs::CORE0 + regs::TREND_Q16, TREND_NONE).unwrap();
+        assert_eq!(ctl.trend(0), None);
+        assert_eq!(ctl.trend(5), None, "out of range degrades to none");
+    }
+
+    #[test]
+    fn global_registers_and_write_protection() {
+        let mut ctl = CalCtl::new(3);
+        ctl.set_clock(99);
+        ctl.set_healthy(2);
+        assert_eq!(ctl.read32(regs::MAGIC).unwrap(), MAGIC_VALUE);
+        assert_eq!(ctl.read32(regs::NCORES).unwrap(), 3);
+        assert_eq!(ctl.read32(regs::NOW_MS).unwrap(), 99);
+        assert_eq!(ctl.read32(regs::HEALTHY).unwrap(), 2);
+        assert_eq!(ctl.write32(regs::NOW_MS, 5).unwrap_err(), BusResp::SlvErr);
+        assert_eq!(
+            ctl.write32(regs::CORE0 + regs::RESIDUAL_Q16, 5).unwrap_err(),
+            BusResp::SlvErr,
+            "sample payload is host-owned"
+        );
+        // sweep counter is firmware-writable
+        ctl.write32(regs::SWEEP, 41).unwrap();
+        ctl.write32(regs::SWEEP, 42).unwrap();
+        assert_eq!(ctl.sweep(), 42);
+        // size covers exactly the mapped banks
+        assert_eq!(ctl.size(), regs::CORE0 + 3 * regs::CORE_STRIDE);
+        assert_eq!(ctl.read32(ctl.size()).unwrap_err(), BusResp::SlvErr);
+    }
+}

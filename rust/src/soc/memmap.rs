@@ -14,6 +14,8 @@ pub mod map {
     pub const CIM_BASE: u32 = 0x4000_0000;
     pub const UART_BASE: u32 = 0x5000_0000;
     pub const GPIO_BASE: u32 = 0x6000_0000;
+    /// calibration mailbox (`soc::ctl::CalCtl`, supervisor SoC only)
+    pub const CTL_BASE: u32 = 0x7000_0000;
     /// firmware entry point
     pub const ENTRY: u32 = RAM_BASE;
     /// initial stack pointer (top of RAM, 16-byte aligned)

@@ -2,6 +2,7 @@
 //! memory map, peripherals, and the firmware builders (paper Section III).
 
 pub mod bus;
+pub mod ctl;
 pub mod firmware;
 pub mod memmap;
 pub mod periph;

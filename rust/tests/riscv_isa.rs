@@ -1,0 +1,573 @@
+//! ISA-level regression suite for the RV32IM core, beyond the
+//! `selftest.rs` smoke: per-instruction semantics (arithmetic wrap,
+//! set-less-than boundaries, shift-amount masking, load extension,
+//! link-register and branch behavior), M-extension edge cases
+//! (divide-by-zero, signed-overflow division, high-half multiplies
+//! cross-checked against 64/128-bit reference arithmetic), and the trap
+//! surface (misaligned access, illegal instruction, fetch/load faults,
+//! ecall/ebreak). The supervisor firmware of `soc/ctl` rides on exactly
+//! these semantics — especially `mul`/`mulh` composition and unsigned
+//! branch comparisons — so they are pinned here at the instruction level.
+
+use acore_cim::soc::bus::{Axi4LiteBus, Ram};
+use acore_cim::soc::riscv::asm::Asm;
+use acore_cim::soc::riscv::cpu::{Cpu, Halt};
+use acore_cim::util::proptest::forall;
+use acore_cim::{prop_assert, prop_assert_eq};
+
+const RAM_SIZE: u32 = 0x1_0000;
+
+/// Run a raw little-endian image at address 0 with optional CPU setup.
+fn run_image(image: &[u8], setup: impl FnOnce(&mut Cpu)) -> (Cpu, Halt) {
+    let mut bus = Axi4LiteBus::new();
+    let mut ram = Ram::new(RAM_SIZE, "ram");
+    ram.load(0, image);
+    bus.map(0, Box::new(ram));
+    let mut cpu = Cpu::new(0);
+    setup(&mut cpu);
+    let halt = cpu.run(&mut bus, 100_000);
+    (cpu, halt)
+}
+
+/// Assemble and run a program built with the `Asm` builder.
+fn run_asm(build: impl FnOnce(&mut Asm)) -> (Cpu, Halt) {
+    let mut a = Asm::new(0);
+    build(&mut a);
+    run_image(&a.assemble(), |_| {})
+}
+
+/// Run and expect a clean exit; returns the exit code (a0).
+fn exec(build: impl FnOnce(&mut Asm)) -> u32 {
+    match run_asm(build) {
+        (_, Halt::Exit(code)) => code,
+        (_, halt) => panic!("expected Exit, got {halt:?}"),
+    }
+}
+
+/// Hand-encoded R-type word (the assembler has no `mulhsu` helper).
+fn r_type(funct7: u32, rs2: u8, rs1: u8, funct3: u32, rd: u8) -> u32 {
+    (funct7 << 25)
+        | ((rs2 as u32) << 20)
+        | ((rs1 as u32) << 15)
+        | (funct3 << 12)
+        | ((rd as u32) << 7)
+        | 0b011_0011
+}
+
+const ECALL: u32 = 0x0000_0073;
+
+/// Run raw instruction words with pre-seeded registers; the word list
+/// should end in ECALL with x17 preset to 93 by `setup`.
+fn exec_raw(words: &[u32], setup: impl FnOnce(&mut Cpu)) -> (Cpu, Halt) {
+    let mut image = Vec::new();
+    for w in words {
+        image.extend_from_slice(&w.to_le_bytes());
+    }
+    run_image(&image, setup)
+}
+
+// ---- arithmetic and logic ------------------------------------------------
+
+#[test]
+fn add_sub_wrap_around() {
+    let code = exec(|a| {
+        a.li(5, i32::MAX);
+        a.addi(10, 5, 1); // MAX + 1 wraps to MIN
+        a.exit();
+    });
+    assert_eq!(code, i32::MIN as u32);
+    let code = exec(|a| {
+        a.li(5, i32::MIN);
+        a.li(6, 1);
+        a.sub(10, 5, 6); // MIN - 1 wraps to MAX
+        a.exit();
+    });
+    assert_eq!(code, i32::MAX as u32);
+}
+
+#[test]
+fn set_less_than_signedness_boundaries() {
+    // slt: -1 < 1 signed
+    assert_eq!(
+        exec(|a| {
+            a.li(5, -1);
+            a.li(6, 1);
+            a.slt(10, 5, 6);
+            a.exit();
+        }),
+        1
+    );
+    // sltu: 0xFFFF_FFFF is the LARGEST unsigned value
+    assert_eq!(
+        exec(|a| {
+            a.li(5, -1);
+            a.li(6, 1);
+            a.sltu(10, 5, 6);
+            a.exit();
+        }),
+        0
+    );
+    // slti sign-extends its immediate
+    assert_eq!(
+        exec(|a| {
+            a.li(5, -2);
+            a.slti(10, 5, -1);
+            a.exit();
+        }),
+        1
+    );
+    // sltiu compares against the sign-EXTENDED immediate as unsigned:
+    // imm -1 becomes 0xFFFF_FFFF, so anything but all-ones is below it
+    assert_eq!(
+        exec(|a| {
+            a.li(5, 7);
+            a.sltiu(10, 5, -1);
+            a.exit();
+        }),
+        1
+    );
+}
+
+#[test]
+fn logic_register_and_immediate_forms() {
+    let code = exec(|a| {
+        a.li(5, 0b1100);
+        a.li(6, 0b1010);
+        a.and(28, 5, 6); // 0b1000
+        a.or(29, 5, 6); //  0b1110
+        a.xor(30, 5, 6); // 0b0110
+        a.slli(28, 28, 8);
+        a.slli(29, 29, 4);
+        a.add(10, 28, 29);
+        a.add(10, 10, 30);
+        a.exit();
+    });
+    assert_eq!(code, (0b1000 << 8) + (0b1110 << 4) + 0b0110);
+    let code = exec(|a| {
+        a.li(5, 0xF0);
+        a.andi(28, 5, 0x3C); // 0x30
+        a.ori(29, 5, 0x0F); //  0xFF
+        a.xori(30, 5, -1); //   !0xF0
+        a.sub(10, 30, 29); //   !0xF0 - 0xFF
+        a.add(10, 10, 28);
+        a.exit();
+    });
+    assert_eq!(code, (!0xF0u32).wrapping_sub(0xFF).wrapping_add(0x30));
+}
+
+#[test]
+fn shift_amounts_mask_to_five_bits() {
+    // register-form shift by 33 must behave as shift by 1
+    let code = exec(|a| {
+        a.li(5, 0x40);
+        a.li(6, 33);
+        a.sll(10, 5, 6);
+        a.exit();
+    });
+    assert_eq!(code, 0x80);
+    let code = exec(|a| {
+        a.li(5, -8); // 0xFFFF_FFF8
+        a.li(6, 34);
+        a.sra(10, 5, 6); // arithmetic >> 2
+        a.exit();
+    });
+    assert_eq!(code, (-2i32) as u32);
+    let code = exec(|a| {
+        a.li(5, -8);
+        a.li(6, 34);
+        a.srl(10, 5, 6); // logical >> 2
+        a.exit();
+    });
+    assert_eq!(code, 0xFFFF_FFF8u32 >> 2);
+    // immediate forms at the 31 boundary
+    let code = exec(|a| {
+        a.li(5, i32::MIN);
+        a.srai(10, 5, 31);
+        a.exit();
+    });
+    assert_eq!(code, u32::MAX, "srai 31 of MIN is all-ones");
+    let code = exec(|a| {
+        a.li(5, i32::MIN);
+        a.srli(10, 5, 31);
+        a.exit();
+    });
+    assert_eq!(code, 1);
+}
+
+#[test]
+fn lui_and_auipc() {
+    let code = exec(|a| {
+        a.lui(10, 0x12345 << 12);
+        a.exit();
+    });
+    assert_eq!(code, 0x1234_5000);
+    // auipc adds to the pc OF THE INSTRUCTION; two nops put it at 8
+    let code = exec(|a| {
+        a.nop();
+        a.nop();
+        a.auipc(10, 0x1000);
+        a.exit();
+    });
+    assert_eq!(code, 0x1008);
+}
+
+#[test]
+fn x0_is_hardwired_to_zero() {
+    let code = exec(|a| {
+        a.li(5, 123);
+        a.addi(0, 5, 1); // write to x0 must be discarded
+        a.sll(0, 5, 5);
+        a.mv(10, 0);
+        a.exit();
+    });
+    assert_eq!(code, 0);
+}
+
+// ---- control flow --------------------------------------------------------
+
+#[test]
+fn jal_links_and_jalr_clears_the_low_bit() {
+    // jal: x1 = return address (pc + 4)
+    let (cpu, halt) = run_asm(|a| {
+        a.jal_label(1, "over"); // at pc 0, link = 4
+        a.nop();
+        a.label("over");
+        a.mv(10, 1);
+        a.exit();
+    });
+    assert_eq!(halt, Halt::Exit(4));
+    assert_eq!(cpu.regs[1], 4);
+    // jalr: the ODD target address must land on target & !1
+    let code = exec(|a| {
+        a.li(6, 21); //  20 | 1: "target" is the mv at byte 20
+        a.jalr(5, 6, 0); // at byte 4: link in x5 = 8
+        a.li(10, 99); // skipped on a correct (even) landing
+        a.exit();
+        a.mv(10, 5); // byte 20 (every li above is a single addi)
+        a.exit();
+    });
+    assert_eq!(code, 8, "jalr must clear bit 0 of the target and link pc+4");
+}
+
+#[test]
+fn all_branches_taken_and_not_taken() {
+    // each taken branch sets one bit; a wrong fall-through poisons 0x80
+    let code = exec(|a| {
+        a.li(5, -1);
+        a.li(6, 1);
+        a.li(10, 0);
+
+        a.beq(5, 5, "beq_t");
+        a.ori(10, 10, 0x80);
+        a.label("beq_t");
+        a.beq(5, 6, "poison");
+        a.ori(10, 10, 0x01);
+
+        a.bne(5, 6, "bne_t");
+        a.ori(10, 10, 0x80);
+        a.label("bne_t");
+        a.bne(5, 5, "poison");
+        a.ori(10, 10, 0x02);
+
+        a.blt(5, 6, "blt_t"); // -1 < 1 signed
+        a.ori(10, 10, 0x80);
+        a.label("blt_t");
+        a.blt(6, 5, "poison");
+        a.ori(10, 10, 0x04);
+
+        a.bge(6, 5, "bge_t"); // 1 >= -1 signed
+        a.ori(10, 10, 0x80);
+        a.label("bge_t");
+        a.bge(5, 6, "poison");
+        a.ori(10, 10, 0x08);
+
+        a.bltu(6, 5, "bltu_t"); // 1 < 0xFFFF_FFFF unsigned
+        a.ori(10, 10, 0x80);
+        a.label("bltu_t");
+        a.bltu(5, 6, "poison");
+        a.ori(10, 10, 0x10);
+
+        a.bgeu(5, 6, "bgeu_t"); // 0xFFFF_FFFF >= 1 unsigned
+        a.ori(10, 10, 0x80);
+        a.label("bgeu_t");
+        a.bgeu(6, 5, "poison");
+        a.ori(10, 10, 0x20);
+
+        a.exit();
+        a.label("poison");
+        a.li(10, 0x80);
+        a.exit();
+    });
+    assert_eq!(code, 0x3F, "taken/not-taken matrix: got {code:#x}");
+}
+
+// ---- loads and stores ----------------------------------------------------
+
+#[test]
+fn load_sign_and_zero_extension_at_every_byte_offset() {
+    // memory word at 0x100: bytes 01 7F FF 80 (LE)
+    let (cpu, halt) = run_asm(|a| {
+        a.li(5, 0x100);
+        a.li(6, 0x80FF_7F01u32 as i32);
+        a.sw(5, 6, 0);
+        a.lb(28, 5, 1); //  0x7F ->  127
+        a.lb(29, 5, 2); //  0xFF ->   -1
+        a.lbu(30, 5, 2); // 0xFF ->  255
+        a.lbu(31, 5, 3); // 0x80 ->  128
+        a.lh(7, 5, 2); //   0x80FF -> sign-extended
+        a.lhu(9, 5, 2); //  0x80FF -> zero-extended
+        a.lh(18, 5, 0); //  0x7F01 -> positive as-is
+        a.li(10, 0);
+        a.exit();
+    });
+    assert_eq!(halt, Halt::Exit(0));
+    assert_eq!(cpu.regs[28], 127);
+    assert_eq!(cpu.regs[29], -1i32 as u32);
+    assert_eq!(cpu.regs[30], 255);
+    assert_eq!(cpu.regs[31], 128);
+    assert_eq!(cpu.regs[7], 0xFFFF_80FF);
+    assert_eq!(cpu.regs[9], 0x0000_80FF);
+    assert_eq!(cpu.regs[18], 0x7F01);
+}
+
+#[test]
+fn byte_and_half_stores_merge_into_words() {
+    let code = exec(|a| {
+        a.li(5, 0x200);
+        a.li(6, 0x1111_1111);
+        a.sw(5, 6, 0);
+        a.li(6, 0xAB);
+        a.sb(5, 6, 2); // byte lane 2
+        a.li(6, 0xCDEF_u32 as i32);
+        a.sh(5, 6, 0); // low half
+        a.lw(10, 5, 0);
+        a.exit();
+    });
+    assert_eq!(code, 0x11AB_CDEF);
+}
+
+#[test]
+fn misaligned_accesses_fault_with_the_offender() {
+    for (name, build) in [
+        ("LW", Box::new(|a: &mut Asm| {
+            a.li(5, 0x102);
+            a.lw(6, 5, 0);
+        }) as Box<dyn Fn(&mut Asm)>),
+        ("LH", Box::new(|a: &mut Asm| {
+            a.li(5, 0x101);
+            a.lh(6, 5, 0);
+        })),
+        ("SW", Box::new(|a: &mut Asm| {
+            a.li(5, 0x102);
+            a.sw(5, 6, 0);
+        })),
+        ("SH", Box::new(|a: &mut Asm| {
+            a.li(5, 0x103);
+            a.sh(5, 6, 0);
+        })),
+    ] {
+        let (_, halt) = run_asm(|a| {
+            build(a);
+            a.exit();
+        });
+        match halt {
+            Halt::Fault(msg) => assert!(
+                msg.contains("misaligned") && msg.contains(name),
+                "{name}: fault message `{msg}` must name the misaligned op"
+            ),
+            other => panic!("{name}: expected a misalignment fault, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn unmapped_fetch_and_load_fault() {
+    let (_, halt) = run_asm(|a| {
+        a.li(5, 0x00FF_0000); // far beyond the 64 KiB RAM
+        a.lw(6, 5, 0);
+        a.exit();
+    });
+    match halt {
+        Halt::Fault(msg) => assert!(msg.contains("load fault"), "got `{msg}`"),
+        other => panic!("expected a load fault, got {other:?}"),
+    }
+    let (_, halt) = run_asm(|a| {
+        a.li(5, 0x00FF_0000);
+        a.jalr(0, 5, 0); // jump into the void
+    });
+    match halt {
+        Halt::Fault(msg) => assert!(msg.contains("fetch fault"), "got `{msg}`"),
+        other => panic!("expected a fetch fault, got {other:?}"),
+    }
+}
+
+// ---- M extension ---------------------------------------------------------
+
+#[test]
+fn division_by_zero_follows_the_spec() {
+    // div x/0 = -1, divu x/0 = 2^32-1, rem/remu x/0 = x (no trap)
+    let cases: [(fn(&mut Asm, u8, u8, u8), i32, u32); 4] = [
+        (Asm::div, 42, u32::MAX),
+        (Asm::divu, 42, u32::MAX),
+        (Asm::rem, 42, 42),
+        (Asm::remu, -7, (-7i32) as u32),
+    ];
+    for (op, dividend, want) in cases {
+        let code = exec(|a| {
+            a.li(5, dividend);
+            a.li(6, 0);
+            op(a, 10, 5, 6);
+            a.exit();
+        });
+        assert_eq!(code, want, "dividend {dividend} / 0");
+    }
+}
+
+#[test]
+fn signed_division_overflow_is_defined() {
+    // i32::MIN / -1 overflows: div = i32::MIN, rem = 0 (no trap)
+    let code = exec(|a| {
+        a.li(5, i32::MIN);
+        a.li(6, -1);
+        a.div(10, 5, 6);
+        a.exit();
+    });
+    assert_eq!(code, i32::MIN as u32);
+    let code = exec(|a| {
+        a.li(5, i32::MIN);
+        a.li(6, -1);
+        a.rem(10, 5, 6);
+        a.exit();
+    });
+    assert_eq!(code, 0);
+}
+
+#[test]
+fn multiply_family_matches_wide_reference() {
+    forall("rv32m multiply reference", 64, |rng| {
+        // bias toward boundary magnitudes where the high half matters
+        let pick = |rng: &mut acore_cim::util::rng::Rng| -> i32 {
+            match rng.int_in(0, 3) {
+                0 => rng.int_in(i32::MIN as i64, i32::MAX as i64) as i32,
+                1 => rng.int_in(-3, 3) as i32,
+                2 => i32::MIN.wrapping_add(rng.int_in(0, 2) as i32),
+                _ => i32::MAX.wrapping_sub(rng.int_in(0, 2) as i32),
+            }
+        };
+        let x = pick(rng);
+        let y = pick(rng);
+        let wide = x as i64 * y as i64;
+        let wide_u = (x as u32 as u64) * (y as u32 as u64);
+
+        let got = exec(|a| {
+            a.li(5, x);
+            a.li(6, y);
+            a.mul(10, 5, 6);
+            a.exit();
+        });
+        prop_assert_eq!(got, wide as u32);
+
+        let got = exec(|a| {
+            a.li(5, x);
+            a.li(6, y);
+            a.mulh(10, 5, 6);
+            a.exit();
+        });
+        prop_assert_eq!(got, (wide >> 32) as u32);
+
+        let got = exec(|a| {
+            a.li(5, x);
+            a.li(6, y);
+            a.mulhu(10, 5, 6);
+            a.exit();
+        });
+        prop_assert_eq!(got, (wide_u >> 32) as u32);
+        Ok(())
+    });
+}
+
+#[test]
+fn mulhsu_signed_times_unsigned() {
+    // no assembler helper: hand-encode MULHSU (funct7 1, funct3 010)
+    for (x, y) in [
+        (-1i32, u32::MAX),
+        (i32::MIN, u32::MAX),
+        (7, 0x8000_0000),
+        (-7, 0x8000_0000),
+        (0, 12345),
+    ] {
+        let want = (((x as i64 as i128) * (y as i128)) >> 32) as u32;
+        let (_, halt) = exec_raw(&[r_type(1, 6, 5, 0b010, 10), ECALL], |cpu| {
+            cpu.regs[5] = x as u32;
+            cpu.regs[6] = y;
+            cpu.regs[17] = 93;
+        });
+        assert_eq!(halt, Halt::Exit(want), "mulhsu {x} x {y}");
+    }
+}
+
+#[test]
+fn mul_div_roundtrip_property() {
+    forall("q / d * d + r == q", 64, |rng| {
+        let q = rng.int_in(i32::MIN as i64 + 1, i32::MAX as i64) as i32;
+        let d = match rng.int_in(1, 1000) as i32 {
+            d if rng.int_in(0, 1) == 0 => d,
+            d => -d,
+        };
+        let code = exec(|a| {
+            a.li(5, q);
+            a.li(6, d);
+            a.div(28, 5, 6);
+            a.rem(29, 5, 6);
+            a.mul(30, 28, 6);
+            a.add(10, 30, 29); // q/d*d + q%d must reconstruct q
+            a.exit();
+        });
+        prop_assert_eq!(code, q as u32);
+        Ok(())
+    });
+}
+
+// ---- traps and environment -----------------------------------------------
+
+#[test]
+fn non_exit_ecalls_are_logged_and_execution_continues() {
+    let (cpu, halt) = run_asm(|a| {
+        a.li(17, 5); // a7 = 5: not the exit syscall
+        a.li(10, 42);
+        a.ecall();
+        a.li(10, 7); // must still run
+        a.exit();
+    });
+    assert_eq!(halt, Halt::Exit(7));
+    assert_eq!(cpu.ecalls, vec![(5, 42)]);
+}
+
+#[test]
+fn ebreak_halts_without_advancing() {
+    let (cpu, halt) = run_asm(|a| {
+        a.nop();
+        a.ebreak();
+        a.nop();
+    });
+    assert_eq!(halt, Halt::Break);
+    assert_eq!(cpu.pc, 4, "ebreak must not advance past itself");
+}
+
+#[test]
+fn illegal_instruction_faults() {
+    let (_, halt) = exec_raw(&[0xFFFF_FFFF], |_| {});
+    match halt {
+        Halt::Fault(msg) => assert!(msg.contains("illegal"), "got `{msg}`"),
+        other => panic!("expected an illegal-instruction fault, got {other:?}"),
+    }
+}
+
+#[test]
+fn runaway_programs_hit_the_step_limit() {
+    let mut a = Asm::new(0);
+    a.label("spin");
+    a.j("spin");
+    let (_, halt) = run_image(&a.assemble(), |_| {});
+    assert_eq!(halt, Halt::StepLimit);
+}

@@ -1,0 +1,255 @@
+//! Firmware-native calibration control, end to end: the RV32IM
+//! supervisor firmware must make the SAME decisions as the host
+//! `CalibratorPolicy` on identical residual traces (property test over
+//! randomized schedules, in the spirit of the `soc_bisc.rs` 1-LSB
+//! trim-agreement gate), and a live cluster under injected drift must
+//! complete an autonomous drain → recalibrate → rejoin cycle with the
+//! decision made by the firmware, not the host daemon.
+
+use acore_cim::analog::consts as c;
+use acore_cim::config::SimConfig;
+use acore_cim::coordinator::batcher::Batcher;
+use acore_cim::coordinator::bisc::{AdcCharacterization, BiscEngine};
+use acore_cim::coordinator::calibrator::{CalibratorConfig, CalibratorPolicy, DrainReason};
+use acore_cim::coordinator::cluster::{CimCluster, ServiceConfig};
+use acore_cim::coordinator::service::CimService;
+use acore_cim::soc::ctl::{FirmwareCalibrator, SupervisorCore};
+use acore_cim::util::proptest::forall;
+use acore_cim::util::rng::Rng;
+use acore_cim::{prop_assert, prop_assert_eq};
+use std::time::{Duration, Instant};
+
+/// A residual on the exact Q16 grid in [0, cap], so the only
+/// quantization the firmware sees is its own EWMA arithmetic.
+fn grid_residual(rng: &mut Rng, cap_q16: i64) -> f64 {
+    rng.int_in(0, cap_q16) as f64 / 65536.0
+}
+
+/// Randomized-schedule agreement: for every trace of samples, fences,
+/// healthy-core counts, drain outcomes, and clock jumps, the firmware's
+/// published trend stays within fixed-point tolerance of the f64 EWMA,
+/// and its drain decisions match `CalibratorPolicy::decide` everywhere
+/// outside a narrow quantization band around the trend threshold (time
+/// triggers — staleness and cool-down — use exact integer milliseconds
+/// on both sides, so they must agree exactly).
+#[test]
+fn firmware_policy_matches_host_policy_on_random_traces() {
+    forall("firmware/host policy agreement", 48, |rng| {
+        // alpha and threshold drawn ON the Q16 grid: the param block
+        // round-trips them exactly, so reference and firmware run the
+        // same constants
+        let alpha_q = rng.int_in(3277, 65536); // 0.05 ..= 1.0
+        let alpha = alpha_q as f64 / 65536.0;
+        let thr_q = rng.int_in(655, 6554); // ~0.01 ..= ~0.1
+        let threshold = thr_q as f64 / 65536.0;
+        let cfg = CalibratorConfig {
+            period: Duration::from_millis(10),
+            ewma_alpha: alpha,
+            threshold,
+            cooldown: Duration::from_millis(rng.int_in(0, 3000) as u64),
+            max_staleness: Duration::from_millis(rng.int_in(500, 60_000) as u64),
+        };
+        let cores = rng.int_in(1, 3) as usize;
+        let base = Instant::now();
+        let mut policy = CalibratorPolicy::new(cfg.clone(), cores, base);
+        let mut fw = SupervisorCore::new(cores, &cfg);
+
+        // EWMA truncation settles within ~1/alpha LSB of the f64 value;
+        // the decision margin is doubled so a trend that close to the
+        // threshold may legitimately differ between the two
+        let tol = (2.0 / alpha + 8.0) / 65536.0;
+        let margin = 2.0 * tol;
+
+        let mut now_ms: u64 = 0;
+        let mut epoch: u64 = 0;
+        for _ in 0..30 {
+            now_ms += rng.int_in(20, 900) as u64;
+            let healthy = rng.int_in(0, cores as i64) as usize;
+            for core in 0..cores {
+                let fenced = rng.int_in(0, 9) == 0;
+                let residual =
+                    (rng.int_in(0, 9) != 0).then(|| grid_residual(rng, 13_107)); // <= 0.2
+                let t_fw = fw.observe(core, residual, fenced, epoch, healthy, now_ms as u32);
+                let t_ref = match residual {
+                    Some(r) => Some(policy.observe(core, r)),
+                    None => policy.trend(core),
+                };
+                prop_assert_eq!(t_fw.is_some(), t_ref.is_some());
+                if let (Some(f), Some(h)) = (t_fw, t_ref) {
+                    prop_assert!(
+                        (f - h).abs() <= tol,
+                        "trend diverged: fw {f:.6} vs host {h:.6} (alpha {alpha:.4})"
+                    );
+                }
+
+                let ref_now = base + Duration::from_millis(now_ms);
+                let ref_dec = policy.decide(core, healthy, fenced, ref_now);
+                let fw_dec = fw.take_decision(core);
+                let near_threshold =
+                    t_ref.is_some_and(|t| (t - threshold).abs() <= margin);
+                if !near_threshold {
+                    prop_assert!(
+                        fw_dec == ref_dec,
+                        "decision diverged at {now_ms} ms core {core}: \
+                         fw {fw_dec:?} vs host {ref_dec:?} (trend {t_ref:?}, \
+                         threshold {threshold:.6}, healthy {healthy}, fenced {fenced})"
+                    );
+                }
+                // execute the drain the REFERENCE wants, on both sides,
+                // so the two state machines stay on one schedule (a
+                // firmware-only fire inside the margin band leaves its
+                // state untouched — decisions are pure until a result
+                // is posted)
+                if ref_dec.is_some() {
+                    let recalibrated = rng.int_in(0, 3) != 0;
+                    let post = recalibrated.then(|| grid_residual(rng, 3_277)); // <= 0.05
+                    if recalibrated {
+                        epoch += 1;
+                    }
+                    policy.record_drain(core, ref_now, recalibrated, post);
+                    fw.record_drain(core, recalibrated, post, now_ms as u32);
+                }
+            }
+        }
+        prop_assert!(
+            fw.faults() == 0,
+            "firmware faulted during the trace: {:?}",
+            fw.last_fault()
+        );
+        Ok(())
+    });
+}
+
+/// Staleness and cool-down are pure integer-time triggers: replayed on
+/// a fixed schedule, firmware and host must agree exactly (no margin).
+#[test]
+fn firmware_time_triggers_agree_exactly() {
+    let cfg = CalibratorConfig {
+        period: Duration::from_millis(10),
+        ewma_alpha: 0.5,
+        threshold: 0.05,
+        cooldown: Duration::from_millis(700),
+        max_staleness: Duration::from_millis(2_000),
+    };
+    let base = Instant::now();
+    let mut policy = CalibratorPolicy::new(cfg.clone(), 1, base);
+    let mut fw = SupervisorCore::new(1, &cfg);
+    // quiet in-band residual, clock marching in uneven steps across the
+    // staleness deadline and through a cool-down window
+    let mut drains = 0;
+    for now_ms in [0u64, 450, 900, 1_350, 1_800, 2_250, 2_700, 3_150, 3_600, 4_050] {
+        let t_fw = fw.observe(0, Some(0.01), false, 0, 2, now_ms as u32);
+        policy.observe(0, 0.01);
+        assert!(t_fw.is_some());
+        let ref_now = base + Duration::from_millis(now_ms);
+        let ref_dec = policy.decide(0, 2, false, ref_now);
+        let fw_dec = fw.take_decision(0);
+        assert_eq!(fw_dec, ref_dec, "at {now_ms} ms");
+        if let Some(reason) = ref_dec {
+            assert_eq!(reason, DrainReason::Staleness);
+            drains += 1;
+            policy.record_drain(0, ref_now, true, Some(0.01));
+            fw.record_drain(0, true, Some(0.01), now_ms as u32);
+        }
+    }
+    assert!(drains >= 1, "the staleness deadline never fired on either side");
+}
+
+/// The tentpole acceptance path: a live two-core cluster under injected
+/// drift, served with the FIRMWARE calibrator — the drain →
+/// recalibrate → rejoin cycle completes with the decision made by the
+/// RV32 core, traffic never drops, and the stats surface is identical
+/// to the host daemon's.
+#[test]
+fn firmware_calibrator_autonomously_recalibrates_drifting_cores() {
+    let mut cfg = SimConfig::default();
+    cfg.sigma_noise = 0.0;
+    cfg.sigma_drift = 2e-4;
+    let mut cluster = CimCluster::new(&cfg, 2);
+    let engine = BiscEngine::from_config(&cfg, AdcCharacterization::ideal());
+    cluster.calibrate_parallel(&engine);
+    cluster.program_all(&vec![40; c::N_ROWS * c::M_COLS]);
+    // wide health band so any drain is the firmware's own decision, not
+    // the passive fence beating it to the punch
+    let server = cluster.serve_with(ServiceConfig {
+        batcher: Batcher::default(),
+        engine: Some(engine),
+        health_band: 0.5,
+    });
+    let threshold = 0.05;
+    let daemon = FirmwareCalibrator::spawn(
+        server.client(),
+        CalibratorConfig {
+            period: Duration::from_millis(10),
+            ewma_alpha: 0.5,
+            threshold,
+            max_staleness: Duration::from_secs(3600),
+            cooldown: Duration::from_millis(50),
+        },
+    );
+    let shared = daemon.shared();
+    let client = server.client();
+
+    // age the dies under real traffic until the firmware fires
+    let mut sent = 0u64;
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while shared.total_drains() == 0 {
+        assert!(
+            Instant::now() < deadline,
+            "firmware never drained after {sent} MACs: {:?}",
+            shared.snapshot()
+        );
+        for _ in 0..4 {
+            let qs = client
+                .mac_batch(vec![vec![30; c::N_ROWS]; 16])
+                .expect("traffic must keep serving through firmware-driven drains");
+            assert_eq!(qs.len(), 16);
+            sent += 16;
+        }
+        std::thread::sleep(Duration::from_millis(3));
+    }
+
+    // traffic stops, dies stop aging: every trend must settle back
+    // below the trigger threshold through firmware-driven recalibration
+    let settle = Instant::now() + Duration::from_secs(60);
+    loop {
+        let stats = shared.snapshot();
+        if stats.iter().all(|s| !s.trend.is_some_and(|t| t >= threshold)) {
+            break;
+        }
+        assert!(Instant::now() < settle, "trends never settled: {stats:?}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(shared.sweeps() > 0, "the daemon never completed a sweep");
+    let stats = daemon.stop();
+    let drains: u64 = stats.iter().map(|s| s.drains).sum();
+    let triggers: u64 = stats.iter().map(|s| s.trend_triggers + s.staleness_triggers).sum();
+    assert!(drains >= 1, "no firmware-decided drain recorded: {stats:?}");
+    assert!(triggers >= drains, "every drain needs a recorded trigger: {stats:?}");
+    assert_eq!(
+        stats.iter().map(|s| s.drain_failures).sum::<u64>(),
+        0,
+        "drains must succeed: {stats:?}"
+    );
+    for s in &stats {
+        if s.drains > 0 {
+            assert!(s.last_recal_epoch > 0, "recal epoch never advanced: {s:?}");
+            assert!(s.samples > 0, "drained without folded samples: {s:?}");
+        }
+    }
+
+    // zero dropped in-flight jobs across firmware-driven drains
+    drop(client);
+    let (cluster, wstats) = server.join();
+    let served: u64 = wstats.iter().map(|s| s.requests).sum();
+    assert!(served >= sent, "workers served {served} of {sent}");
+    assert_eq!(
+        wstats.iter().map(|s| s.rejected + s.expired).sum::<u64>(),
+        0,
+        "jobs were dropped during firmware-driven recalibration: {wstats:?}"
+    );
+    assert!(
+        cluster.cores.iter().any(|core| core.recal_count > 0),
+        "no core records an in-service recalibration"
+    );
+}

@@ -1,0 +1,83 @@
+#!/usr/bin/env bash
+# Refresh the committed bench/BENCH_perf_hotpath.{before,after}.json
+# baselines with MEASURED numbers from this machine.
+#
+# The committed files are estimated (operation-count analysis — see their
+# "provenance" field): the container that authored them had no Rust
+# toolchain. This script replaces them honestly: it benches HEAD for the
+# "after" file and a base commit (default: the merge-base with origin's
+# default branch, falling back to HEAD^) in a detached worktree for the
+# "before" file, both on THIS machine so the pair is comparable.
+#
+# Usage:
+#   tools/refresh_bench_baselines.sh [BASE_COMMIT]
+#
+# Requires: cargo (stable), git. Runs with ACORE_BENCH_FAST=1 by default;
+# export ACORE_BENCH_FAST=0 for full-length runs before committing.
+#
+# CI's bench-smoke job performs the same measurement every run and
+# uploads it as the `bench-baseline-refresh` artifact — downloading that
+# artifact and copying it over bench/ is the no-local-toolchain path.
+
+set -euo pipefail
+
+REPO_ROOT=$(git rev-parse --show-toplevel)
+cd "$REPO_ROOT"
+
+command -v cargo >/dev/null 2>&1 || {
+  echo "error: cargo not found — run this on a machine with the Rust toolchain," >&2
+  echo "or download CI's bench-baseline-refresh artifact instead." >&2
+  exit 1
+}
+
+export ACORE_BENCH_FAST="${ACORE_BENCH_FAST:-1}"
+
+BASE="${1:-}"
+if [ -z "$BASE" ]; then
+  DEFAULT_BRANCH=$(git symbolic-ref --quiet refs/remotes/origin/HEAD 2>/dev/null \
+    | sed 's@^refs/remotes/@@' || true)
+  if [ -n "$DEFAULT_BRANCH" ]; then
+    BASE=$(git merge-base "$DEFAULT_BRANCH" HEAD)
+  else
+    BASE=$(git rev-parse 'HEAD^' 2>/dev/null || true)
+  fi
+fi
+if [ -z "$BASE" ] || [ "$BASE" = "$(git rev-parse HEAD)" ]; then
+  echo "error: no distinct base commit to measure 'before' against" >&2
+  echo "       (pass one explicitly: tools/refresh_bench_baselines.sh <commit>)" >&2
+  exit 1
+fi
+
+echo "after  = HEAD  $(git log -1 --oneline HEAD)"
+echo "before = BASE  $(git log -1 --oneline "$BASE")"
+
+OUT_AFTER=$(mktemp -d)
+OUT_BEFORE=$(mktemp -d)
+WORKTREE=$(mktemp -d -u)
+cleanup() {
+  git worktree remove --force "$WORKTREE" 2>/dev/null || true
+  rm -rf "$OUT_AFTER" "$OUT_BEFORE"
+}
+trap cleanup EXIT
+
+echo "== benching HEAD =="
+ACORE_BENCH_JSON_DIR="$OUT_AFTER" cargo bench --bench perf_hotpath
+test -f "$OUT_AFTER/BENCH_perf_hotpath.json"
+
+echo "== benching base in a worktree =="
+git worktree add --detach "$WORKTREE" "$BASE"
+if ACORE_BENCH_JSON_DIR="$OUT_BEFORE" cargo bench --bench perf_hotpath \
+     --manifest-path "$WORKTREE/rust/Cargo.toml" \
+     --target-dir "$WORKTREE/target"; then
+  test -f "$OUT_BEFORE/BENCH_perf_hotpath.json"
+  cp "$OUT_BEFORE/BENCH_perf_hotpath.json" bench/BENCH_perf_hotpath.before.json
+else
+  echo "warning: base commit's bench does not build/run — leaving" >&2
+  echo "         bench/BENCH_perf_hotpath.before.json untouched" >&2
+fi
+
+cp "$OUT_AFTER/BENCH_perf_hotpath.json" bench/BENCH_perf_hotpath.after.json
+
+echo "== refreshed =="
+ls -l bench/BENCH_perf_hotpath.before.json bench/BENCH_perf_hotpath.after.json
+echo "review the diff, then commit the refreshed baselines."
