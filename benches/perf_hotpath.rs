@@ -16,6 +16,7 @@ use acore_cim::analog::{consts as c, CimAnalogModel};
 use acore_cim::config::SimConfig;
 use acore_cim::coordinator::bisc::{AdcCharacterization, BiscEngine};
 use acore_cim::coordinator::cluster::CimCluster;
+use acore_cim::coordinator::registry::deploy_uniform;
 use acore_cim::soc::memmap::{map, Soc};
 use acore_cim::soc::riscv::asm::Asm;
 use acore_cim::util::bench::Bencher;
@@ -36,7 +37,7 @@ fn cluster_throughput(
     use acore_cim::coordinator::batcher::Batcher;
     use acore_cim::coordinator::service::{CimService, SubmitOpts};
     let mut cluster = CimCluster::new(cfg, k);
-    cluster.program_all(&vec![40; c::N_ROWS * c::M_COLS]);
+    deploy_uniform(&mut cluster, "demo", vec![40; c::N_ROWS * c::M_COLS]).unwrap();
     let server = cluster.serve(Batcher::default());
     let t0 = std::time::Instant::now();
     let producers = k;
@@ -97,7 +98,7 @@ fn wire_throughput(
     use acore_cim::coordinator::wire::{RemoteClient, WireServer};
     use std::sync::Arc;
     let mut cluster = CimCluster::new(cfg, k);
-    cluster.program_all(&vec![40; c::N_ROWS * c::M_COLS]);
+    deploy_uniform(&mut cluster, "demo", vec![40; c::N_ROWS * c::M_COLS]).unwrap();
     let server = cluster.serve(Batcher::default());
     let wire = Arc::new(
         WireServer::bind(("127.0.0.1", 0), server.client(), server.live_handles())

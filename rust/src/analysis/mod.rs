@@ -14,7 +14,7 @@
 //!
 //! | rule                     | invariant pinned                                      |
 //! |--------------------------|-------------------------------------------------------|
-//! | `panic_free`             | serving threads never panic — no `unwrap`/`expect`/`panic!`/`unreachable!`/`todo!`/`unimplemented!`/`[i]`-indexing in non-test code of `coordinator/{batcher,service,cluster,calibrator}.rs` and `coordinator/wire/*`; errors flow through `ServeError`/`WireError` |
+//! | `panic_free`             | serving threads never panic — no `unwrap`/`expect`/`panic!`/`unreachable!`/`todo!`/`unimplemented!`/`[i]`-indexing in non-test code of `coordinator/{batcher,service,cluster,calibrator,registry}.rs` and `coordinator/wire/*`; errors flow through `ServeError`/`WireError` |
 //! | `hot_path_alloc`         | fold-time-specialized `*_into` kernels stay allocation-free — no `Vec::new`/`vec!`/`to_vec`/`clone`/`collect`/`format!`/`Box::new`/`to_string`/`to_owned`/`with_capacity` in their bodies (amortized `reserve`/`resize`/`push` are allowed; the runtime complement is the counting-allocator gate) |
 //! | `lock_across_io`         | no `Mutex`/`RwLock` guard live across `.send(`/`.recv(`/`write_all`/`flush`/`write_frame*` — blocking I/O under a lock serializes every peer |
 //! | `unsafe_block_safety`    | every `unsafe` block carries a `// SAFETY:` comment     |

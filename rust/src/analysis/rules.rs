@@ -30,6 +30,7 @@ fn serving_scope(rel: &str) -> bool {
         || rel == "coordinator/service.rs"
         || rel == "coordinator/cluster.rs"
         || rel == "coordinator/calibrator.rs"
+        || rel == "coordinator/registry.rs"
         || rel.starts_with("coordinator/wire/")
         || rel.starts_with("soc/ctl/")
 }

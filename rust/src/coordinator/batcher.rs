@@ -55,6 +55,13 @@ pub enum ServeError {
     DeadlineExceeded,
     /// Every core eligible under the placement policy is fenced.
     NoHealthyCore,
+    /// No core on the cluster holds the requested model (and tile, when
+    /// one was named) — `Placement::Model` against an unknown model.
+    ModelNotResident { model: u32 },
+    /// The job named a model that is not resident on the core it landed
+    /// on — a placement decision raced by a concurrent rollout, caught
+    /// at execution time instead of computing against the wrong weights.
+    WrongModel { requested: u32, resident: Option<u32> },
 }
 
 impl std::fmt::Display for ServeError {
@@ -71,6 +78,19 @@ impl std::fmt::Display for ServeError {
             ServeError::NoHealthyCore => {
                 write!(f, "no healthy core available under the placement policy")
             }
+            ServeError::ModelNotResident { model } => {
+                write!(f, "model {model} is not resident on any core")
+            }
+            ServeError::WrongModel { requested, resident } => match resident {
+                Some(r) => write!(
+                    f,
+                    "job for model {requested} landed on a core now serving model {r}"
+                ),
+                None => write!(
+                    f,
+                    "job for model {requested} landed on a core with no model resident"
+                ),
+            },
         }
     }
 }
@@ -110,6 +130,39 @@ impl BatcherStats {
         self.max_batch_seen = self.max_batch_seen.max(other.max_batch_seen);
         self.rejected += other.rejected;
         self.expired += other.expired;
+    }
+}
+
+/// Per-model serving counters of one worker, keyed by the core's resident
+/// model when the job was answered. A cluster gather merges them across
+/// cores with [`merge_model_stats`].
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ModelStats {
+    pub model: u32,
+    /// MAC evaluations answered successfully for this model
+    pub requests: u64,
+    /// requests answered with an error (malformed, failed batch,
+    /// wrong-model admission)
+    pub rejected: u64,
+    /// requests answered with [`ServeError::DeadlineExceeded`]
+    pub expired: u64,
+    /// in-service recalibrations (drains and rollouts) completed while
+    /// this model was resident; a rollout counts under the NEW model
+    pub recals: u64,
+}
+
+/// Merge per-core model counters into a cluster-wide set, by model id.
+pub fn merge_model_stats(into: &mut Vec<ModelStats>, from: &[ModelStats]) {
+    for m in from {
+        match into.iter_mut().find(|x| x.model == m.model) {
+            Some(x) => {
+                x.requests += m.requests;
+                x.rejected += m.rejected;
+                x.expired += m.expired;
+                x.recals += m.recals;
+            }
+            None => into.push(*m),
+        }
     }
 }
 
@@ -189,6 +242,13 @@ pub trait MacBackend {
     /// if unsupported.
     fn health_residual(&mut self, _engine: &BiscEngine) -> Option<f64> {
         None
+    }
+
+    /// Reprogram the die with a new model's weights (hot rollout). The
+    /// default rejects — only backends that track their workload weights
+    /// (so recalibration can restore them) support reprogramming.
+    fn program_model(&mut self, _model: u32, _weights: &[i32]) -> Result<(), String> {
+        Err("backend does not support model reprogramming".to_string())
     }
 }
 
@@ -270,7 +330,16 @@ enum JobKind {
     Mac,
     MacBatch,
     Drain,
+    Rollout,
     Health,
+}
+
+impl JobKind {
+    /// Whether this kind is a seq barrier (drain semantics): work
+    /// admitted before it completes first, work admitted after it waits.
+    fn is_barrier(self) -> bool {
+        matches!(self, JobKind::Drain | JobKind::Rollout)
+    }
 }
 
 fn kind_of(job: &Job) -> JobKind {
@@ -278,6 +347,7 @@ fn kind_of(job: &Job) -> JobKind {
         Job::Mac(_) => JobKind::Mac,
         Job::MacBatch { .. } => JobKind::MacBatch,
         Job::Drain => JobKind::Drain,
+        Job::Rollout { .. } => JobKind::Rollout,
         Job::Health => JobKind::Health,
     }
 }
@@ -326,52 +396,80 @@ impl Batcher {
         backend: &B,
         ctx: &CoreContext,
         stats: &mut BatcherStats,
+        models: &mut Vec<ModelStats>,
     ) {
         let rows = backend.rows();
-        let bad = match &env.job {
+        let (bad, expected) = match &env.job {
             Job::Mac(x) => {
                 if x.len() == rows {
-                    None
+                    (None, rows)
                 } else {
-                    Some(x.len())
+                    (Some(x.len()), rows)
                 }
             }
             Job::MacBatch { xs, .. } => {
                 if xs.is_empty() {
-                    Some(0)
+                    (Some(0), rows)
                 } else {
-                    xs.iter().find(|x| x.len() != rows).map(|x| x.len())
+                    (xs.iter().find(|x| x.len() != rows).map(|x| x.len()), rows)
                 }
             }
-            Job::Drain | Job::Health => None,
+            // a malformed rollout must not become a barrier at all
+            Job::Rollout { weights, .. } => {
+                let want = rows * backend.cols();
+                if weights.len() == want {
+                    (None, want)
+                } else {
+                    (Some(weights.len()), want)
+                }
+            }
+            Job::Drain | Job::Health => (None, rows),
         };
         if let Some(got) = bad {
             stats.rejected += env.weight as u64;
+            if let Some(s) = Self::model_slot(models, ctx.board.resident_model(ctx.core)) {
+                s.rejected += env.weight as u64;
+            }
             // release the depth reservation BEFORE replying so a client
             // that has gathered every reply observes settled gauges
             ctx.board.sub_in_flight(ctx.core, env.weight);
-            env.reply.send(Err(ServeError::BadRequest { expected: rows, got }));
+            env.reply.send(Err(ServeError::BadRequest { expected, got }));
             return;
         }
         if let Some(d) = env.deadline {
             *earliest = Some(earliest.map_or(d, |e| e.min(d)));
         }
-        // a Drain becomes a barrier the moment it is ADMITTED: jobs with
-        // a later seq must not run before it, whatever their priority
-        if kind_of(&env.job) == JobKind::Drain && gate.is_none() {
+        // a Drain/Rollout becomes a barrier the moment it is ADMITTED:
+        // jobs with a later seq must not run before it, whatever their
+        // priority
+        if kind_of(&env.job).is_barrier() && gate.is_none() {
             *gate = Some(*seq);
         }
         queue.push(Pending { seq: *seq, env });
         *seq += 1;
     }
 
-    /// Earliest drain-barrier seq among the queued jobs, if any.
+    /// Earliest barrier (drain/rollout) seq among the queued jobs, if any.
     fn min_drain_seq(queue: &BinaryHeap<Pending>) -> Option<u64> {
         queue
             .iter()
-            .filter(|p| kind_of(&p.env.job) == JobKind::Drain)
+            .filter(|p| kind_of(&p.env.job).is_barrier())
             .map(|p| p.seq)
             .min()
+    }
+
+    /// Find-or-insert the per-model counter slot for `model` (`None` —
+    /// nothing resident — counts nowhere).
+    fn model_slot(models: &mut Vec<ModelStats>, model: Option<u32>) -> Option<&mut ModelStats> {
+        let model = model?;
+        let i = match models.iter().position(|m| m.model == model) {
+            Some(i) => i,
+            None => {
+                models.push(ModelStats { model, ..ModelStats::default() });
+                models.len() - 1
+            }
+        };
+        models.get_mut(i)
     }
 
     /// Expire every waiting job whose deadline has passed — in the heap
@@ -389,6 +487,7 @@ impl Batcher {
         stash: &Option<Pending>,
         ctx: &CoreContext,
         stats: &mut BatcherStats,
+        models: &mut Vec<ModelStats>,
     ) {
         let now = Instant::now();
         if !earliest.is_some_and(|e| now >= e) {
@@ -398,8 +497,8 @@ impl Batcher {
         let mut expired_drain = false;
         let mut retain = |p: Pending, kept: &mut Vec<Pending>| {
             if p.env.deadline.is_some_and(|d| now >= d) {
-                expired_drain |= kind_of(&p.env.job) == JobKind::Drain;
-                Self::expire(p, ctx, stats);
+                expired_drain |= kind_of(&p.env.job).is_barrier();
+                Self::expire(p, ctx, stats, models);
             } else {
                 if let Some(d) = p.env.deadline {
                     next = Some(next.map_or(d, |e| e.min(d)));
@@ -438,8 +537,11 @@ impl Batcher {
     }
 
     /// Answer an expired job and release its depth reservation.
-    fn expire(p: Pending, ctx: &CoreContext, stats: &mut BatcherStats) {
+    fn expire(p: Pending, ctx: &CoreContext, stats: &mut BatcherStats, models: &mut Vec<ModelStats>) {
         stats.expired += p.env.weight as u64;
+        if let Some(s) = Self::model_slot(models, ctx.board.resident_model(ctx.core)) {
+            s.expired += p.env.weight as u64;
+        }
         ctx.board.sub_in_flight(ctx.core, p.env.weight);
         p.env.reply.send(Err(ServeError::DeadlineExceeded));
     }
@@ -457,6 +559,7 @@ impl Batcher {
         backend: &mut B,
         ctx: &CoreContext,
         stats: &mut BatcherStats,
+        models: &mut Vec<ModelStats>,
         scratch: &mut DispatchScratch,
     ) {
         let cols = backend.cols();
@@ -471,7 +574,7 @@ impl Batcher {
             }
             let Some(p) = queue.pop() else { break };
             if p.expired() {
-                Self::expire(p, ctx, stats);
+                Self::expire(p, ctx, stats, models);
             } else {
                 scratch.pendings.push(p);
             }
@@ -498,6 +601,9 @@ impl Batcher {
                 stats.requests += batch as u64;
                 stats.batches += 1;
                 stats.max_batch_seen = stats.max_batch_seen.max(batch);
+                if let Some(s) = Self::model_slot(models, ctx.board.resident_model(ctx.core)) {
+                    s.requests += batch as u64;
+                }
             }
             res => {
                 // the batch failed, the worker survives: answer every
@@ -511,6 +617,9 @@ impl Batcher {
                     p.env.reply.send(Err(ServeError::Backend(msg.clone())));
                 }
                 stats.rejected += batch as u64;
+                if let Some(s) = Self::model_slot(models, ctx.board.resident_model(ctx.core)) {
+                    s.rejected += batch as u64;
+                }
             }
         }
     }
@@ -522,12 +631,13 @@ impl Batcher {
         backend: &mut B,
         ctx: &CoreContext,
         stats: &mut BatcherStats,
+        models: &mut Vec<ModelStats>,
         scratch: &mut DispatchScratch,
     ) {
         let cols = backend.cols();
         let env = p.env;
         let (weight, reply) = (env.weight, env.reply);
-        let Job::MacBatch { xs, tile } = env.job else {
+        let Job::MacBatch { xs, tile, model } = env.job else {
             // dispatch invariant broken — answer as a backend error
             // instead of killing the worker (panic-free policy)
             ctx.board.sub_in_flight(ctx.core, weight);
@@ -537,6 +647,21 @@ impl Batcher {
             stats.rejected += weight as u64;
             return;
         };
+        // checked at EXECUTION time, not admission: a rollout can land
+        // between placement and this batch's turn on the queue — the job
+        // must then fail typed instead of computing on the wrong weights
+        let resident = ctx.board.resident_model(ctx.core);
+        if let Some(requested) = model {
+            if resident != Some(requested) {
+                ctx.board.sub_in_flight(ctx.core, weight);
+                reply.send(Err(ServeError::WrongModel { requested, resident }));
+                stats.rejected += weight as u64;
+                if let Some(s) = Self::model_slot(models, Some(requested)) {
+                    s.rejected += weight as u64;
+                }
+                return;
+            }
+        }
         let n = xs.len();
         scratch.x.clear();
         for xi in &xs {
@@ -558,6 +683,9 @@ impl Batcher {
                 stats.requests += n as u64;
                 stats.batches += 1;
                 stats.max_batch_seen = stats.max_batch_seen.max(n);
+                if let Some(s) = Self::model_slot(models, resident) {
+                    s.requests += n as u64;
+                }
             }
             res => {
                 let msg = match res {
@@ -566,6 +694,9 @@ impl Batcher {
                 };
                 reply.send(Err(ServeError::Backend(msg)));
                 stats.rejected += n as u64;
+                if let Some(s) = Self::model_slot(models, resident) {
+                    s.rejected += n as u64;
+                }
             }
         }
     }
@@ -573,7 +704,12 @@ impl Batcher {
     /// Drain lifecycle step: recalibrate the die and rejoin the scheduler
     /// if the residual is back inside the band. Control jobs are not
     /// counted in request statistics.
-    fn exec_drain<B: MacBackend>(p: Pending, backend: &mut B, ctx: &CoreContext) {
+    fn exec_drain<B: MacBackend>(
+        p: Pending,
+        backend: &mut B,
+        ctx: &CoreContext,
+        models: &mut Vec<ModelStats>,
+    ) {
         let residual = ctx.engine.as_ref().and_then(|e| backend.recalibrate(e));
         let recalibrated = residual.is_some();
         if let Some(r) = residual {
@@ -585,6 +721,9 @@ impl Batcher {
             } else {
                 ctx.board.fence(ctx.core);
             }
+            if let Some(s) = Self::model_slot(models, ctx.board.resident_model(ctx.core)) {
+                s.recals += 1;
+            }
         }
         let health = CoreHealth {
             core: ctx.core,
@@ -592,9 +731,87 @@ impl Batcher {
             fenced: ctx.board.is_fenced(ctx.core),
             recalibrated,
             recal_epoch: ctx.board.recal_epoch(ctx.core),
+            model: ctx.board.resident_model(ctx.core),
         };
         ctx.board.sub_in_flight(ctx.core, p.env.weight);
         p.env.reply.send(Ok(JobReply::Health(health)));
+    }
+
+    /// Hot rollout lifecycle step, running AFTER the barrier has drained
+    /// every pre-rollout job: reprogram the die with the new model's
+    /// weights, publish the residency, recalibrate like a drain, and
+    /// rejoin if the residual is in band. A backend that rejects the
+    /// reprogram leaves the core fenced with its old model intact.
+    fn exec_rollout<B: MacBackend>(
+        p: Pending,
+        backend: &mut B,
+        ctx: &CoreContext,
+        models: &mut Vec<ModelStats>,
+    ) {
+        let env = p.env;
+        let (weight, reply) = (env.weight, env.reply);
+        let Job::Rollout { model, weights } = env.job else {
+            // dispatch invariant broken — same degradation as exec_batch
+            ctx.board.sub_in_flight(ctx.core, weight);
+            reply.send(Err(ServeError::Backend(
+                "exec_rollout dispatched on a non-rollout job".to_string(),
+            )));
+            return;
+        };
+        if let Err(msg) = backend.program_model(model, &weights) {
+            // the old model is still programmed; the core stays fenced
+            // (the rollout convenience fenced it) until an operator acts
+            ctx.board.sub_in_flight(ctx.core, weight);
+            reply.send(Err(ServeError::Backend(msg)));
+            return;
+        }
+        // tiles become stale with the old weights; a registry deploy (or
+        // the next prepare_cluster) republishes them for the new model
+        ctx.board.set_residency(ctx.core, model, Vec::new());
+        let residual = ctx.engine.as_ref().and_then(|e| backend.recalibrate(e));
+        let recalibrated = residual.is_some();
+        match residual {
+            Some(r) => {
+                ctx.board.bump_recal_epoch(ctx.core);
+                if r <= ctx.health_band {
+                    ctx.board.unfence(ctx.core);
+                } else {
+                    ctx.board.fence(ctx.core);
+                }
+            }
+            // no calibration gate configured: the reprogram succeeded,
+            // rejoin (unlike Drain, which only reports state without an
+            // engine — a rollout's whole point is to resume serving)
+            None => ctx.board.unfence(ctx.core),
+        }
+        if let Some(s) = Self::model_slot(models, Some(model)) {
+            s.recals += 1;
+        }
+        let health = CoreHealth {
+            core: ctx.core,
+            residual,
+            fenced: ctx.board.is_fenced(ctx.core),
+            recalibrated,
+            recal_epoch: ctx.board.recal_epoch(ctx.core),
+            model: ctx.board.resident_model(ctx.core),
+        };
+        ctx.board.sub_in_flight(ctx.core, weight);
+        reply.send(Ok(JobReply::Health(health)));
+    }
+
+    /// Execute a parked/popped barrier job by its kind (drain or
+    /// rollout) — the two share the barrier machinery in `run`.
+    fn exec_barrier<B: MacBackend>(
+        p: Pending,
+        backend: &mut B,
+        ctx: &CoreContext,
+        models: &mut Vec<ModelStats>,
+    ) {
+        if kind_of(&p.env.job) == JobKind::Rollout {
+            Self::exec_rollout(p, backend, ctx, models);
+        } else {
+            Self::exec_drain(p, backend, ctx, models);
+        }
     }
 
     /// Health probe: measure the residual and fence the core if it is
@@ -612,6 +829,7 @@ impl Batcher {
             fenced: ctx.board.is_fenced(ctx.core),
             recalibrated: false,
             recal_epoch: ctx.board.recal_epoch(ctx.core),
+            model: ctx.board.resident_model(ctx.core),
         };
         ctx.board.sub_in_flight(ctx.core, p.env.weight);
         p.env.reply.send(Ok(JobReply::Health(health)));
@@ -625,6 +843,7 @@ impl Batcher {
         ctx: &CoreContext,
     ) -> BatcherStats {
         let mut stats = BatcherStats::default();
+        let mut models: Vec<ModelStats> = Vec::new();
         let mut queue: BinaryHeap<Pending> = BinaryHeap::new();
         let mut seq: u64 = 0;
         let mut earliest: Option<Instant> = None;
@@ -644,8 +863,15 @@ impl Batcher {
         let mut scratch = DispatchScratch::default();
         loop {
             // republish the live statistics snapshot each dispatch round
-            // (wire Stats frames read it without joining the worker)
+            // (wire Stats frames read it without joining the worker).
+            // clear + extend reuses the live vec's capacity: no
+            // steady-state allocation once every model has a slot
             *lock_unpoisoned(&ctx.live) = stats;
+            {
+                let mut live = lock_unpoisoned(&ctx.live_models);
+                live.clear();
+                live.extend_from_slice(&models);
+            }
             // release the barrier once no pre-drain work remains
             let release = stash
                 .as_ref()
@@ -653,9 +879,9 @@ impl Batcher {
             if release {
                 if let Some(drain) = stash.take() {
                     if drain.expired() {
-                        Self::expire(drain, ctx, &mut stats);
+                        Self::expire(drain, ctx, &mut stats, &mut models);
                     } else {
-                        Self::exec_drain(drain, backend, ctx);
+                        Self::exec_barrier(drain, backend, ctx, &mut models);
                     }
                     queue.extend(deferred.drain(..));
                     gate = Self::min_drain_seq(&queue);
@@ -673,9 +899,11 @@ impl Batcher {
                         backend,
                         ctx,
                         &mut stats,
+                        &mut models,
                     ),
                     Err(_) => {
                         *lock_unpoisoned(&ctx.live) = stats;
+                        *lock_unpoisoned(&ctx.live_models) = models;
                         return stats;
                     }
                 }
@@ -698,6 +926,7 @@ impl Batcher {
                             backend,
                             ctx,
                             &mut stats,
+                            &mut models,
                         ),
                         Err(_) => break,
                     }
@@ -716,6 +945,7 @@ impl Batcher {
                     backend,
                     ctx,
                     &mut stats,
+                    &mut models,
                 );
             }
             let gate_before = gate;
@@ -727,12 +957,13 @@ impl Batcher {
                 &stash,
                 ctx,
                 &mut stats,
+                &mut models,
             );
             // a parked drain whose own deadline has passed is answered
             // immediately and its barrier dissolves
             if stash.as_ref().is_some_and(|s| s.expired()) {
                 if let Some(drain) = stash.take() {
-                    Self::expire(drain, ctx, &mut stats);
+                    Self::expire(drain, ctx, &mut stats, &mut models);
                 }
                 queue.extend(deferred.drain(..));
                 gate = Self::min_drain_seq(&queue);
@@ -758,9 +989,9 @@ impl Batcher {
                 continue;
             }
             if top.expired() {
-                let was_drain = kind_of(&top.env.job) == JobKind::Drain;
-                Self::expire(top, ctx, &mut stats);
-                if was_drain {
+                let was_barrier = kind_of(&top.env.job).is_barrier();
+                Self::expire(top, ctx, &mut stats, &mut models);
+                if was_barrier {
                     // requeue deferred work FIRST: it may contain a later
                     // drain that must become the new barrier
                     queue.extend(deferred.drain(..));
@@ -769,17 +1000,26 @@ impl Batcher {
                 continue;
             }
             match kind_of(&top.env.job) {
-                JobKind::Mac => {
-                    self.exec_macs(top, &mut queue, gate, backend, ctx, &mut stats, &mut scratch)
+                JobKind::Mac => self.exec_macs(
+                    top,
+                    &mut queue,
+                    gate,
+                    backend,
+                    ctx,
+                    &mut stats,
+                    &mut models,
+                    &mut scratch,
+                ),
+                JobKind::MacBatch => {
+                    Self::exec_batch(top, backend, ctx, &mut stats, &mut models, &mut scratch)
                 }
-                JobKind::MacBatch => Self::exec_batch(top, backend, ctx, &mut stats, &mut scratch),
-                JobKind::Drain => {
+                JobKind::Drain | JobKind::Rollout => {
                     if queue.iter().any(|p| p.seq < top.seq) {
                         // earlier-admitted work still queued: park the
-                        // drain until it has all completed
+                        // barrier until it has all completed
                         stash = Some(top);
                     } else {
-                        Self::exec_drain(top, backend, ctx);
+                        Self::exec_barrier(top, backend, ctx, &mut models);
                         // requeue deferred work FIRST: it may contain a
                         // later drain that must become the new barrier
                         queue.extend(deferred.drain(..));
@@ -1045,6 +1285,25 @@ mod tests {
         assert_eq!(stats.requests, 5);
         assert_eq!(stats.batches, 1, "a MacBatch is one backend invocation");
         assert_eq!(stats.max_batch_seen, 5);
+    }
+
+    #[test]
+    fn rollout_without_backend_support_fails_typed_and_stays_fenced() {
+        let (client, handle) = Batcher::default().spawn_solo(programmed_model());
+        // malformed weights never become a barrier
+        let err = client.rollout(0, 1, vec![1; 3]).unwrap_err();
+        assert_eq!(err, ServeError::BadRequest { expected: c::N_ROWS * c::M_COLS, got: 3 });
+        client.unfence(0);
+        // a bare analog model cannot reprogram (it does not track its
+        // workload weights): typed Backend error, core stays fenced
+        let err = client.rollout(0, 1, vec![40; c::N_ROWS * c::M_COLS]).unwrap_err();
+        assert!(matches!(err, ServeError::Backend(_)));
+        assert!(client.is_fenced(0), "failed rollout must leave the core fenced");
+        client.unfence(0);
+        let q = client.mac(vec![5; c::N_ROWS]).unwrap();
+        assert_eq!(q.len(), c::M_COLS);
+        drop(client);
+        handle.join().unwrap();
     }
 
     /// Backend whose first evaluations block on a gate — lets tests

@@ -296,6 +296,10 @@ pub struct CoreCalStats {
     pub drain_failures: u64,
     /// Whether the core was fenced at the last sweep.
     pub fenced: bool,
+    /// Registry id of the model resident on the core at the last sweep
+    /// (`None` when nothing is resident — e.g. `program_all`-era
+    /// deployments that never recorded residency).
+    pub model: Option<u32>,
 }
 
 /// Snapshot store shared between the daemon, the wire front-end, and
@@ -442,6 +446,7 @@ fn run_with_brain<S: CimService, B: CalibratorBrain>(
                 }
                 s.fenced = health.fenced;
                 s.last_recal_epoch = health.recal_epoch;
+                s.model = health.model;
             });
             let Some(reason) = brain.decide(core, healthy, health.fenced) else {
                 continue;
@@ -468,6 +473,7 @@ fn run_with_brain<S: CimService, B: CalibratorBrain>(
                         s.trend = h.residual.or(s.trend);
                         s.fenced = h.fenced;
                         s.last_recal_epoch = h.recal_epoch;
+                        s.model = h.model;
                     });
                     let post = h.residual.unwrap_or(f64::NAN);
                     if h.recalibrated && !h.fenced {

@@ -37,10 +37,12 @@
 use crate::analog::variation::VariationSample;
 use crate::analog::{consts as c, CimAnalogModel, Folded, MacScratch};
 use crate::config::SimConfig;
-use crate::coordinator::batcher::{Batcher, BatcherStats, MacBackend};
+use crate::coordinator::batcher::{
+    merge_model_stats, Batcher, BatcherStats, MacBackend, ModelStats, ServeError,
+};
 use crate::coordinator::bisc::{AdcCharacterization, BiscEngine, BiscReport};
 use crate::coordinator::service::{
-    CoreBoard, CoreContext, JobEnvelope, TileRef, DEFAULT_HEALTH_BAND,
+    CoreBoard, CoreContext, JobEnvelope, Residency, TileRef, DEFAULT_HEALTH_BAND,
 };
 use crate::util::rng::SplitMix64;
 use crate::util::sync::lock_unpoisoned;
@@ -146,6 +148,10 @@ pub struct ClusterCore {
     /// carries trims/zero points): every in-service recalibration
     /// re-measures this core's corrections on the freshly trimmed die
     pub refresher: Option<crate::coordinator::dnn::TrimRefresher>,
+    /// model residency recorded by registry deploys / rollouts /
+    /// `prepare_cluster`; seeded onto the [`CoreBoard`] by `serve_with`
+    /// so `Placement::Model` can resolve from the first request
+    pub resident: Option<Residency>,
     /// reusable evaluation scratch for the tile fast path — steady-state
     /// tile serving runs without per-request heap allocation
     scratch: MacScratch,
@@ -262,6 +268,25 @@ impl MacBackend for ClusterCore {
         self.restore_weights();
         Some(residual)
     }
+
+    fn program_model(&mut self, model: u32, weights: &[i32]) -> Result<(), String> {
+        let want = c::N_ROWS * c::M_COLS;
+        if weights.len() != want {
+            // lint: allow(hot_path_alloc) — cold error path: rollouts are rare control jobs
+            return Err(format!(
+                "rollout weights: expected {want} codes, got {}",
+                weights.len()
+            ));
+        }
+        // the old model's folded tiles and trim refresher were measured
+        // against the old weights — they do not apply to the new model.
+        // The next prepare_cluster (or registry deploy) rebuilds them.
+        self.bank = None;
+        self.refresher = None;
+        self.program(weights);
+        self.resident = Some(Residency { model, tiles: Vec::new() });
+        Ok(())
+    }
 }
 
 /// K independent CIM cores behind one coordinator.
@@ -290,6 +315,7 @@ impl CimCluster {
                     bank: None,
                     recal_count: 0,
                     refresher: None,
+                    resident: None,
                     scratch: MacScratch::new(),
                 }
             })
@@ -305,18 +331,40 @@ impl CimCluster {
         self.cores.is_empty()
     }
 
-    /// Program the same weight matrix on every core.
+    /// Program the same weight matrix on every core WITHOUT recording
+    /// model residency — `Placement::Model` cannot resolve against cores
+    /// programmed this way.
+    #[deprecated(
+        note = "use registry::deploy_uniform (records model residency); \
+                kept as a thin wrapper for tests"
+    )]
     pub fn program_all(&mut self, weights: &[i32]) {
         for core in &mut self.cores {
             core.program(weights);
         }
     }
 
-    /// Program one core (per-core weights: tile sharding, A/B testing).
-    /// An out-of-range index is a no-op.
-    pub fn program_core(&mut self, core: usize, weights: &[i32]) {
+    /// Program one core (per-core weights: model sharding, A/B testing).
+    /// An out-of-range index is a typed error, not a silent no-op.
+    pub fn program_core(&mut self, core: usize, weights: &[i32]) -> Result<(), ServeError> {
+        let k = self.cores.len();
+        match self.cores.get_mut(core) {
+            Some(c) => {
+                c.program(weights);
+                Ok(())
+            }
+            None => Err(ServeError::Backend(format!(
+                "core {core} out of range (cluster has {k} cores)"
+            ))),
+        }
+    }
+
+    /// Record `core`'s model residency (registry deploys); picked up by
+    /// [`CimCluster::serve_with`] when serving starts. Out of range is a
+    /// no-op — deploys validate the index through `program_core` first.
+    pub fn set_resident(&mut self, core: usize, model: u32) {
         if let Some(c) = self.cores.get_mut(core) {
-            c.program(weights);
+            c.resident = Some(Residency { model, tiles: Vec::new() });
         }
     }
 
@@ -402,6 +450,7 @@ impl CimCluster {
         let mut txs = Vec::with_capacity(self.cores.len());
         let mut handles = Vec::with_capacity(self.cores.len());
         let mut live = Vec::with_capacity(self.cores.len());
+        let mut live_models = Vec::with_capacity(self.cores.len());
         for mut core in self.cores {
             let (tx, rx) = channel::<JobEnvelope>();
             // the board's epoch continues the die's own recalibration
@@ -410,13 +459,21 @@ impl CimCluster {
             // generation can neither pass as fresh after a new drain nor
             // be refused while still matching the die's trims)
             board.set_recal_epoch(core.id, core.recal_count);
+            // ...and the board's residency continues the core's: a
+            // registry deploy (or prepare_cluster) before serving makes
+            // Placement::Model resolvable from the first request
+            if let Some(res) = &core.resident {
+                board.set_residency(core.id, res.model, res.tiles.clone());
+            }
             let slot = Arc::new(Mutex::new(BatcherStats::default()));
+            let model_slot = Arc::new(Mutex::new(Vec::new()));
             let ctx = CoreContext {
                 core: core.id,
                 board: Arc::clone(&board),
                 engine: svc.engine.clone(),
                 health_band: svc.health_band,
                 live: Arc::clone(&slot),
+                live_models: Arc::clone(&model_slot),
             };
             let batcher = svc.batcher;
             handles.push(std::thread::spawn(move || {
@@ -425,8 +482,16 @@ impl CimCluster {
             }));
             txs.push(tx);
             live.push(slot);
+            live_models.push(model_slot);
         }
-        ClusterServer { txs, handles, board, rr: Arc::new(AtomicUsize::new(0)), live }
+        ClusterServer {
+            txs,
+            handles,
+            board,
+            rr: Arc::new(AtomicUsize::new(0)),
+            live,
+            live_models,
+        }
     }
 }
 
@@ -456,6 +521,7 @@ pub struct ClusterServer {
     board: Arc<CoreBoard>,
     rr: Arc<AtomicUsize>,
     live: Vec<Arc<Mutex<BatcherStats>>>,
+    live_models: Vec<Arc<Mutex<Vec<ModelStats>>>>,
 }
 
 impl ClusterServer {
@@ -478,6 +544,24 @@ impl ClusterServer {
     /// Current per-core statistics snapshot.
     pub fn live_stats(&self) -> Vec<BatcherStats> {
         self.live.iter().map(|s| *lock_unpoisoned(s)).collect()
+    }
+
+    /// Handles on the per-core live per-model counters (each worker
+    /// republishes its [`ModelStats`] every dispatch round) — the wire
+    /// front-end's `ModelStats` frames read them without joining.
+    pub fn model_stats_handles(&self) -> Vec<Arc<Mutex<Vec<ModelStats>>>> {
+        self.live_models.clone()
+    }
+
+    /// Cluster-wide per-model counters: every core's live snapshot
+    /// merged by model id.
+    pub fn live_model_stats(&self) -> Vec<ModelStats> {
+        let mut out: Vec<ModelStats> = Vec::new();
+        for slot in &self.live_models {
+            let per_core = lock_unpoisoned(slot).clone();
+            merge_model_stats(&mut out, &per_core);
+        }
+        out
     }
 
     /// A cloneable service handle over all cores (every client from this
@@ -585,7 +669,12 @@ mod tests {
     fn serve_round_robin_answers_everything() {
         let cfg = ideal_cfg();
         let mut cluster = CimCluster::new(&cfg, 4);
-        cluster.program_all(&vec![40; c::N_ROWS * c::M_COLS]);
+        crate::coordinator::registry::deploy_uniform(
+            &mut cluster,
+            "demo",
+            vec![40; c::N_ROWS * c::M_COLS],
+        )
+        .unwrap();
         let server = cluster.serve(Batcher::default());
         let client = server.client();
         // ideal dies, same weights: every core returns the same answer
@@ -612,6 +701,24 @@ mod tests {
         for (k, s) in stats.iter().enumerate() {
             assert!(s.requests > 0, "core {k} served nothing");
         }
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn program_all_wrapper_still_programs_every_core() {
+        let cfg = ideal_cfg();
+        let mut cluster = CimCluster::new(&cfg, 2);
+        cluster.program_all(&vec![21; c::N_ROWS * c::M_COLS]);
+        for core in &cluster.cores {
+            assert_eq!(core.weights.as_ref().map(|w| w[0]), Some(21));
+            // the raw wrapper records no residency — that is the point
+            // of deprecating it in favor of registry deploys
+            assert!(core.resident.is_none());
+        }
+        // out-of-range program_core is a typed error now, not a no-op
+        assert!(cluster.program_core(9, &vec![1; c::N_ROWS * c::M_COLS]).is_err());
+        cluster.program_core(1, &vec![30; c::N_ROWS * c::M_COLS]).unwrap();
+        assert_eq!(cluster.cores[1].weights.as_ref().map(|w| w[0]), Some(30));
     }
 
     #[test]

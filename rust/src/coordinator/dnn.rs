@@ -8,7 +8,10 @@ use crate::analog::{consts as c, CimAnalogModel, MacScratch};
 use crate::config::SimConfig;
 use crate::coordinator::batcher::ServeError;
 use crate::coordinator::cluster::TileBank;
-use crate::coordinator::service::{gather, CimService, Job, SubmitOpts, Ticket, TileRef};
+use crate::coordinator::registry::DEFAULT_MODEL;
+use crate::coordinator::service::{
+    gather, CimService, Job, Placement, Residency, SubmitOpts, Ticket, TileRef,
+};
 use crate::data::mlp::{argmax, QuantMlp, HIDDEN};
 use crate::data::synth::{Dataset, IMG_PIXELS, NUM_CLASSES};
 use std::sync::{Arc, Mutex};
@@ -625,6 +628,11 @@ pub type SharedCorrections = Arc<Vec<Mutex<CoreCorrections>>>;
 /// lag its recal epoch or a recalibration lands mid-inference.
 pub struct ClusterSchedule {
     corrections: SharedCorrections,
+    /// the registry model id this schedule serves — tile jobs are placed
+    /// with `Placement::Model { model, tile }` and carry the id so the
+    /// worker refuses them if a rollout swapped the core's model between
+    /// placement and execution
+    model: u32,
     /// per-schedule serving scratch pool: gather-side accumulators and
     /// requantized hidden codes reused across `infer_batch_service`
     /// invocations (§Perf; DESIGN.md §11). Each batch TAKES the scratch
@@ -648,6 +656,11 @@ struct ServeScratch {
 impl ClusterSchedule {
     pub fn cores(&self) -> usize {
         self.corrections.len()
+    }
+
+    /// The registry model id this schedule's tile jobs are placed under.
+    pub fn model(&self) -> u32 {
+        self.model
     }
 
     /// Snapshot one core's current corrections (operator tooling/tests).
@@ -826,24 +839,49 @@ impl CimMlp {
             }),
             corrections: Arc::clone(&corrections),
         });
+        // every core now holds the FULL folded bank for both layers:
+        // record that residency (model + tile list) so `serve_with` seeds
+        // the board and `Placement::Model { model, tile }` can resolve
+        // "any healthy core holding this tile". The DNN path registers
+        // its workload under the default model id; multi-model serving
+        // layers distinct banks via the registry instead.
+        let mut tiles: Vec<TileRef> = Vec::with_capacity(
+            self.layer1.row_tiles() * self.layer1.col_tiles()
+                + self.layer2.row_tiles() * self.layer2.col_tiles(),
+        );
+        for (li, layer) in [&self.layer1, &self.layer2].into_iter().enumerate() {
+            for tr in 0..layer.row_tiles() {
+                for tc in 0..layer.col_tiles() {
+                    tiles.push(TileRef { layer: li, tr, tc });
+                }
+            }
+        }
         for core in cluster.cores.iter_mut() {
             core.refresher = refresher.clone();
+            core.resident = Some(Residency { model: DEFAULT_MODEL, tiles: tiles.clone() });
         }
-        ClusterSchedule { corrections, scratch: Mutex::new(ServeScratch::default()) }
+        ClusterSchedule {
+            corrections,
+            model: DEFAULT_MODEL,
+            scratch: Mutex::new(ServeScratch::default()),
+        }
     }
 
     /// One layer through the serving engine: each tile becomes one
     /// [`Job::MacBatch`] over the whole image batch (one channel
-    /// round-trip per tile), pinned to the `ti % H`-th HEALTHY core —
-    /// the deterministic tile-to-core map (exactly `ti % K` when nothing
-    /// is fenced), so the same seed and fence state reproduce the same
-    /// tile→die assignment (and therefore the same corrected logits) on
-    /// every run, while a fenced out-of-band die serves no tiles. Every
-    /// core holds the full folded bank for its own die, so callers that
-    /// prefer load-awareness over reproducibility could place these jobs
-    /// `LeastLoaded` instead. The gather side applies the SERVING core's
-    /// digital corrections (trim > zp > nominal, as in the single-array
-    /// paths) and accumulates partial sums in deterministic tile order.
+    /// round-trip per tile), placed with `Placement::Model { model,
+    /// tile }` — the scheduler resolves "any healthy core holding this
+    /// tile of this model" via the deterministic `tile_slot` hash over
+    /// the healthy holders, so the same residency and fence state
+    /// reproduce the same tile→die assignment (and therefore the same
+    /// corrected logits) on every run, while a fenced out-of-band die
+    /// serves no tiles. Each job also CARRIES the model id, so a core
+    /// whose model was swapped by a rollout between placement and
+    /// execution refuses the job typed (`WrongModel`) instead of
+    /// computing against the wrong weights. The gather side applies the
+    /// SERVING core's digital corrections (trim > zp > nominal, as in
+    /// the single-array paths) and accumulates partial sums in
+    /// deterministic tile order.
     fn layer_forward_service<S: CimService>(
         &self,
         svc: &S,
@@ -858,17 +896,6 @@ impl CimMlp {
         let gain = c::code_gain_at(refs.0, refs.1) as f32;
         let mid = c::q_mid_at(refs.0, refs.1) as f32;
         let (rt, ct) = (layer.row_tiles(), layer.col_tiles());
-        // deterministic tile-to-core map over the cores accepting work:
-        // a fenced (out-of-band) die serves no tiles, and with nothing
-        // fenced this is exactly ti % K. The fence state is sampled once
-        // per layer — like any placement decision it is advisory for
-        // work already submitted, so a fence landing mid-layer takes
-        // effect from the next layer onward.
-        let healthy: Vec<usize> =
-            (0..svc.cores()).filter(|&core| !svc.board().is_fenced(core)).collect();
-        if healthy.is_empty() {
-            return Err(ServeError::NoHealthyCore);
-        }
         let mut tickets: Vec<Ticket<Vec<Vec<u32>>>> = Vec::with_capacity(rt * ct);
         for tr in 0..rt {
             // the input slice depends only on the row tile: build it once
@@ -883,11 +910,15 @@ impl CimMlp {
                 })
                 .collect();
             for tc in 0..ct {
-                let ti = tr * ct + tc;
-                let opts = SubmitOpts::pinned(healthy[ti % healthy.len()]);
+                let tile = TileRef { layer: which - 1, tr, tc };
+                let opts = SubmitOpts::default().with_placement(Placement::Model {
+                    model: sched.model,
+                    tile: Some(tile),
+                });
                 let job = Job::MacBatch {
                     xs: row_xs.clone(),
-                    tile: Some(TileRef { layer: which - 1, tr, tc }),
+                    tile: Some(tile),
+                    model: Some(sched.model),
                 };
                 match svc.submit(job, opts) {
                     Ok(t) => tickets.push(t.typed()),

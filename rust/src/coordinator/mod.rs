@@ -12,5 +12,6 @@ pub mod dnn;
 pub mod batcher;
 pub mod service;
 pub mod cluster;
+pub mod registry;
 pub mod wire;
 pub mod calibrator;

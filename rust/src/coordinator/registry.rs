@@ -1,0 +1,186 @@
+//! Model registry: named weight sets and their deployment onto cluster
+//! cores. This is the multi-model serving layer — a registry owns the
+//! weights for every model a cluster serves, hands out stable `u32` ids
+//! (the currency of [`crate::coordinator::service::Placement::Model`],
+//! wire frames, and per-model statistics), and programs cores through
+//! [`crate::coordinator::cluster::CimCluster::program_core`] while
+//! recording core→model residency so the scheduler can resolve
+//! "any healthy core holding model M" (DESIGN.md §14).
+//!
+//! Panic-free by policy, like the rest of the serving scope: a registry
+//! is driven by operator input (CLI model lists, wire rollouts) and must
+//! answer bad input with typed errors.
+
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
+use crate::analog::consts as c;
+use crate::coordinator::batcher::ServeError;
+use crate::coordinator::cluster::CimCluster;
+use crate::coordinator::service::NO_MODEL;
+
+/// The id the first registered model gets — single-model deployments
+/// (every pre-registry call site) serve this model.
+pub const DEFAULT_MODEL: u32 = 0;
+
+/// One named weight set.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelSpec {
+    pub name: String,
+    /// Row-major `N_ROWS × M_COLS` conductance codes.
+    pub weights: Vec<i32>,
+}
+
+/// Registry of named models. Ids are the insertion index, stable for the
+/// registry's lifetime; names are unique.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct ModelRegistry {
+    models: Vec<ModelSpec>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        Self { models: Vec::new() }
+    }
+
+    /// Register a named weight set and return its id. Rejects a weight
+    /// matrix that does not match the array geometry, a duplicate name,
+    /// and (theoretical) id exhaustion — typed errors, never a panic.
+    pub fn register(&mut self, name: &str, weights: Vec<i32>) -> Result<u32, ServeError> {
+        let want = c::N_ROWS * c::M_COLS;
+        if weights.len() != want {
+            return Err(ServeError::BadRequest { expected: want, got: weights.len() });
+        }
+        if self.models.iter().any(|m| m.name == name) {
+            return Err(ServeError::Backend(format!("model '{name}' is already registered")));
+        }
+        let id = self.models.len();
+        if id as u64 >= NO_MODEL as u64 {
+            return Err(ServeError::Backend("model id space exhausted".to_string()));
+        }
+        self.models.push(ModelSpec { name: name.to_string(), weights });
+        Ok(id as u32)
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    /// Registered names, in id order (index == id) — the shape the wire
+    /// `Hello` frame ships so remote clients can resolve names.
+    pub fn names(&self) -> Vec<String> {
+        self.models.iter().map(|m| m.name.clone()).collect()
+    }
+
+    pub fn name_of(&self, id: u32) -> Option<&str> {
+        self.models.get(id as usize).map(|m| m.name.as_str())
+    }
+
+    pub fn id_of(&self, name: &str) -> Option<u32> {
+        self.models.iter().position(|m| m.name == name).map(|i| i as u32)
+    }
+
+    pub fn weights(&self, id: u32) -> Option<&[i32]> {
+        self.models.get(id as usize).map(|m| m.weights.as_slice())
+    }
+
+    /// Program each `(core, model)` assignment onto the cluster and
+    /// record the core's residency (picked up by `serve_with` when the
+    /// cluster starts serving). An unknown model or out-of-range core is
+    /// a typed error; earlier assignments in the slice stay applied.
+    pub fn deploy(
+        &self,
+        cluster: &mut CimCluster,
+        assignments: &[(usize, u32)],
+    ) -> Result<(), ServeError> {
+        for &(core, model) in assignments {
+            let weights = self
+                .weights(model)
+                .ok_or(ServeError::ModelNotResident { model })?
+                .to_vec();
+            cluster.program_core(core, &weights)?;
+            cluster.set_resident(core, model);
+        }
+        Ok(())
+    }
+
+    /// Spread the registry over the cluster: core `k` gets model
+    /// `k mod len` (every model lands on at least one core when the
+    /// cluster has at least as many cores as models).
+    pub fn deploy_round_robin(&self, cluster: &mut CimCluster) -> Result<(), ServeError> {
+        let n = self.models.len();
+        if n == 0 {
+            return Err(ServeError::Backend("cannot deploy an empty registry".to_string()));
+        }
+        let assignments: Vec<(usize, u32)> =
+            (0..cluster.len()).map(|k| (k, (k % n) as u32)).collect();
+        self.deploy(cluster, &assignments)
+    }
+
+    /// Program one model onto every core (the single-model case; with
+    /// more than one model registered, deploys [`DEFAULT_MODEL`]).
+    pub fn deploy_all(&self, cluster: &mut CimCluster) -> Result<(), ServeError> {
+        if self.models.is_empty() {
+            return Err(ServeError::Backend("cannot deploy an empty registry".to_string()));
+        }
+        let assignments: Vec<(usize, u32)> =
+            (0..cluster.len()).map(|k| (k, DEFAULT_MODEL)).collect();
+        self.deploy(cluster, &assignments)
+    }
+}
+
+/// One-call single-model deployment: register `name` = `weights` and
+/// program it onto every core with residency recorded — the registry-
+/// driven replacement for the deprecated `CimCluster::program_all`.
+pub fn deploy_uniform(
+    cluster: &mut CimCluster,
+    name: &str,
+    weights: Vec<i32>,
+) -> Result<ModelRegistry, ServeError> {
+    let mut reg = ModelRegistry::new();
+    reg.register(name, weights)?;
+    reg.deploy_all(cluster)?;
+    Ok(reg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_validates_geometry_names_and_ids() {
+        let mut reg = ModelRegistry::new();
+        assert_eq!(
+            reg.register("short", vec![1; 3]).unwrap_err(),
+            ServeError::BadRequest { expected: c::N_ROWS * c::M_COLS, got: 3 }
+        );
+        let a = reg.register("alpha", vec![40; c::N_ROWS * c::M_COLS]).unwrap();
+        let b = reg.register("beta", vec![33; c::N_ROWS * c::M_COLS]).unwrap();
+        assert_eq!((a, b), (0, 1));
+        assert!(matches!(
+            reg.register("alpha", vec![1; c::N_ROWS * c::M_COLS]),
+            Err(ServeError::Backend(_))
+        ));
+        assert_eq!(reg.id_of("beta"), Some(1));
+        assert_eq!(reg.name_of(0), Some("alpha"));
+        assert_eq!(reg.name_of(9), None);
+        assert_eq!(reg.names(), vec!["alpha".to_string(), "beta".to_string()]);
+        assert_eq!(reg.weights(1).map(|w| w[0]), Some(33));
+    }
+
+    #[test]
+    fn deploy_rejects_unknown_models_and_bad_cores() {
+        let mut cluster = CimCluster::new(&crate::config::SimConfig::default(), 2);
+        let mut reg = ModelRegistry::new();
+        reg.register("alpha", vec![40; c::N_ROWS * c::M_COLS]).unwrap();
+        assert_eq!(
+            reg.deploy(&mut cluster, &[(0, 7)]).unwrap_err(),
+            ServeError::ModelNotResident { model: 7 }
+        );
+        assert!(reg.deploy(&mut cluster, &[(5, 0)]).is_err());
+        reg.deploy(&mut cluster, &[(0, 0), (1, 0)]).unwrap();
+    }
+}

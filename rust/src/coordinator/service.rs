@@ -21,10 +21,11 @@
 //!   `mac_pipelined`) are provided methods over `submit`.
 #![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 
-use crate::coordinator::batcher::{BatcherStats, ServeError};
+use crate::coordinator::batcher::{BatcherStats, ModelStats, ServeError};
 use crate::coordinator::bisc::BiscEngine;
+use crate::util::sync::lock_unpoisoned;
 use std::marker::PhantomData;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -62,12 +63,23 @@ pub enum Job {
     MacBatch {
         xs: Vec<Vec<i32>>,
         tile: Option<TileRef>,
+        /// With `Some(model)`, the worker rejects the batch unless that
+        /// model is resident on the serving core at admission time
+        /// ([`ServeError::WrongModel`]) — the guard that catches a
+        /// placement decision raced by a concurrent rollout.
+        model: Option<u32>,
     },
     /// Drain-and-recalibrate lifecycle step: queued work ahead of it
     /// completes, then the worker recalibrates its die (when the service
     /// was configured with a [`BiscEngine`]) and the core rejoins the
     /// scheduler if its residual is back in band.
     Drain,
+    /// Hot model rollout: a [`Job::Drain`]-style barrier (queued work
+    /// ahead of it completes first — zero dropped jobs), then the worker
+    /// reprograms its die with `weights`, records `model` as the core's
+    /// residency on the board, recalibrates (when an engine is
+    /// configured), and rejoins if the residual lands back in band.
+    Rollout { model: u32, weights: Vec<i32> },
     /// Measure the core's BISC residual; a residual out of band fences
     /// the core (the scheduler stops placing jobs on it).
     Health,
@@ -80,7 +92,7 @@ impl Job {
         match self {
             Job::Mac(_) => 1,
             Job::MacBatch { xs, .. } => xs.len().max(1),
-            Job::Drain | Job::Health => 1,
+            Job::Drain | Job::Rollout { .. } | Job::Health => 1,
         }
     }
 }
@@ -96,6 +108,15 @@ pub enum Placement {
     /// Exactly this core — the only placement that ignores fencing
     /// (required so `Drain`/`Health` can reach a fenced core).
     Pinned(usize),
+    /// Any healthy core holding `model` (and, with `tile` set, holding
+    /// that pre-folded tile of it) per the board's residency records.
+    /// With a tile the pick is deterministic over the healthy holders
+    /// (same residency + fence state → same core); without one it
+    /// round-robins across the holders. No healthy holder resolves to
+    /// [`ServeError::ModelNotResident`] (model nowhere on the cluster)
+    /// or [`ServeError::NoHealthyCore`] (resident but all holders
+    /// fenced) — typed errors, never a panic.
+    Model { model: u32, tile: Option<TileRef> },
 }
 
 /// Per-submit options: urgency, latency budget, and placement policy.
@@ -127,16 +148,27 @@ impl SubmitOpts {
         Self { placement: Placement::LeastLoaded, ..Self::default() }
     }
 
+    /// Place on any healthy core holding `model` (and `tile` of it, when
+    /// given) — see [`Placement::Model`].
+    pub fn for_model(model: u32, tile: Option<TileRef>) -> Self {
+        Self { placement: Placement::Model { model, tile }, ..Self::default() }
+    }
+
+    /// Set the urgency ([`PRI_NORMAL`] by default); higher runs sooner
+    /// on the worker's priority queue, ties keep submission order.
     pub fn with_priority(mut self, priority: u8) -> Self {
         self.priority = priority;
         self
     }
 
+    /// Set the relative latency budget; a job still queued when it
+    /// expires is answered with [`ServeError::DeadlineExceeded`].
     pub fn with_deadline(mut self, deadline: Duration) -> Self {
         self.deadline = Some(deadline);
         self
     }
 
+    /// Set the placement policy ([`Placement::RoundRobin`] by default).
     pub fn with_placement(mut self, placement: Placement) -> Self {
         self.placement = placement;
         self
@@ -160,6 +192,10 @@ pub struct CoreHealth {
     /// remote mirror catch up on drains it never requested — e.g. the
     /// calibrator daemon recalibrating a core behind a client's back.
     pub recal_epoch: u64,
+    /// Model resident on the core AFTER this probe (`None` when nothing
+    /// is programmed). Lets a remote mirror track rollouts it never
+    /// requested, the same way `recal_epoch` tracks foreign drains.
+    pub model: Option<u32>,
 }
 
 /// The typed reply to one [`Job`].
@@ -324,12 +360,33 @@ pub fn gather<T: FromReply>(tickets: Vec<Ticket<T>>) -> Result<Vec<(usize, T)>, 
     }
 }
 
+/// Sentinel in the board's lock-free model column for "nothing resident"
+/// (never a valid [`crate::coordinator::registry::ModelRegistry`] id —
+/// the registry caps ids far below it).
+pub const NO_MODEL: u32 = u32::MAX;
+
+/// One core's model residency: which model's weights are programmed on
+/// the die and which pre-folded tiles of that model the core holds.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Residency {
+    pub model: u32,
+    pub tiles: Vec<TileRef>,
+}
+
 /// Shared scheduler state between clients and workers: per-core in-flight
-/// depth gauges, health fences, and recalibration epochs.
+/// depth gauges, health fences, recalibration epochs, and model
+/// residency.
 pub struct CoreBoard {
     depth: Vec<AtomicUsize>,
     fenced: Vec<AtomicBool>,
     recal_epoch: Vec<AtomicU64>,
+    /// Resident model per core ([`NO_MODEL`] = nothing programmed).
+    /// Lock-free so hot-path placement and per-request model accounting
+    /// never take a lock.
+    model: Vec<AtomicU32>,
+    /// Tiles of the resident model each core holds; the mutex is only
+    /// touched when a placement names a tile or residency changes.
+    tiles: Vec<Mutex<Vec<TileRef>>>,
 }
 
 impl CoreBoard {
@@ -339,6 +396,8 @@ impl CoreBoard {
             depth: (0..cores).map(|_| AtomicUsize::new(0)).collect(),
             fenced: (0..cores).map(|_| AtomicBool::new(false)).collect(),
             recal_epoch: (0..cores).map(|_| AtomicU64::new(0)).collect(),
+            model: (0..cores).map(|_| AtomicU32::new(NO_MODEL)).collect(),
+            tiles: (0..cores).map(|_| Mutex::new(Vec::new())).collect(),
         }
     }
 
@@ -414,6 +473,69 @@ impl CoreBoard {
             e.fetch_max(epoch, Ordering::Relaxed);
         }
     }
+
+    /// Record that `core` now serves `model` holding `tiles`. Tiles are
+    /// stored before the model id is published so a concurrent
+    /// [`CoreBoard::holds`] never sees the new model with stale tiles.
+    /// Out of range is a no-op, like every accessor here.
+    pub fn set_residency(&self, core: usize, model: u32, tiles: Vec<TileRef>) {
+        if let (Some(slot), Some(m)) = (self.tiles.get(core), self.model.get(core)) {
+            *lock_unpoisoned(slot) = tiles;
+            m.store(model, Ordering::Release);
+        }
+    }
+
+    /// Forget `core`'s residency (nothing programmed / decommissioned).
+    pub fn clear_residency(&self, core: usize) {
+        if let (Some(slot), Some(m)) = (self.tiles.get(core), self.model.get(core)) {
+            m.store(NO_MODEL, Ordering::Release);
+            lock_unpoisoned(slot).clear();
+        }
+    }
+
+    /// Model resident on `core` (`None`: nothing recorded, or the index
+    /// is out of range).
+    pub fn resident_model(&self, core: usize) -> Option<u32> {
+        let m = self.model.get(core)?.load(Ordering::Acquire);
+        (m != NO_MODEL).then_some(m)
+    }
+
+    /// Whether `core` holds `model` — and, when `tile` is named, that
+    /// pre-folded tile of it. Out-of-range cores hold nothing.
+    pub fn holds(&self, core: usize, model: u32, tile: Option<&TileRef>) -> bool {
+        if self.resident_model(core) != Some(model) {
+            return false;
+        }
+        match tile {
+            None => true,
+            Some(t) => self.tiles.get(core).is_some_and(|slot| lock_unpoisoned(slot).contains(t)),
+        }
+    }
+
+    /// Snapshot every core's residency (the wire `Hello` frame's shape).
+    pub fn residency_snapshot(&self) -> Vec<Option<Residency>> {
+        (0..self.cores())
+            .map(|core| {
+                self.resident_model(core).map(|model| Residency {
+                    model,
+                    tiles: self
+                        .tiles
+                        .get(core)
+                        .map(|slot| lock_unpoisoned(slot).clone())
+                        .unwrap_or_default(),
+                })
+            })
+            .collect()
+    }
+}
+
+/// Deterministic tile→slot index for [`Placement::Model`] with a tile:
+/// the same tile always maps to the same position among the healthy
+/// holders, so repeat submissions of one tile land on one core (keeping
+/// that core's folded-tile cache and digital trims hot) while distinct
+/// tiles spread across the holders.
+fn tile_slot(t: &TileRef) -> usize {
+    t.layer.wrapping_mul(131_071).wrapping_add(t.tr.wrapping_mul(511)).wrapping_add(t.tc)
 }
 
 /// Resolve a placement policy against the board. Fenced cores are skipped
@@ -448,6 +570,44 @@ pub fn place(
             .filter(|&c| !board.is_fenced(c))
             .min_by_key(|&c| board.in_flight(c))
             .ok_or(ServeError::NoHealthyCore),
+        Placement::Model { model, tile } => {
+            // two passes, no allocation: count the healthy holders, then
+            // scan to the picked one. Residency/fences can move between
+            // the passes — the fallthrough returns a typed error, and the
+            // batcher's admission check (Job::MacBatch.model) catches any
+            // placement a concurrent rollout raced.
+            let mut resident_anywhere = 0usize;
+            let mut healthy_holders = 0usize;
+            for core in 0..k {
+                if board.holds(core, model, tile.as_ref()) {
+                    resident_anywhere += 1;
+                    if !board.is_fenced(core) {
+                        healthy_holders += 1;
+                    }
+                }
+            }
+            if healthy_holders == 0 {
+                return if resident_anywhere == 0 {
+                    Err(ServeError::ModelNotResident { model })
+                } else {
+                    Err(ServeError::NoHealthyCore)
+                };
+            }
+            let pick = match tile.as_ref() {
+                Some(t) => tile_slot(t),
+                None => rr.fetch_add(1, Ordering::Relaxed),
+            } % healthy_holders;
+            let mut seen = 0usize;
+            for core in 0..k {
+                if board.holds(core, model, tile.as_ref()) && !board.is_fenced(core) {
+                    if seen == pick {
+                        return Ok(core);
+                    }
+                    seen += 1;
+                }
+            }
+            Err(ServeError::NoHealthyCore)
+        }
     }
 }
 
@@ -584,6 +744,10 @@ pub struct CoreContext {
     /// dispatch round — wire `Stats` frames and operator tooling read it
     /// without joining the worker.
     pub live: Arc<Mutex<BatcherStats>>,
+    /// Live per-model serving counters of this worker, keyed by the
+    /// core's resident model at admission time and republished alongside
+    /// `live`. Stays empty until a model is resident.
+    pub live_models: Arc<Mutex<Vec<ModelStats>>>,
 }
 
 /// Default residual band: BISC leaves well under 2% mean gain error on
@@ -601,6 +765,7 @@ impl CoreContext {
             engine: None,
             health_band: DEFAULT_HEALTH_BAND,
             live: Arc::new(Mutex::new(BatcherStats::default())),
+            live_models: Arc::new(Mutex::new(Vec::new())),
         }
     }
 }
@@ -646,7 +811,7 @@ pub trait CimService {
     /// Submit a native batch (one channel round-trip, one backend call)
     /// and wait.
     fn mac_batch(&self, xs: Vec<Vec<i32>>) -> Result<Vec<Vec<u32>>, ServeError> {
-        self.submit(Job::MacBatch { xs, tile: None }, SubmitOpts::default())?
+        self.submit(Job::MacBatch { xs, tile: None, model: None }, SubmitOpts::default())?
             .typed::<Vec<Vec<u32>>>()
             .wait()
     }
@@ -666,6 +831,19 @@ pub trait CimService {
     fn drain(&self, core: usize) -> Result<CoreHealth, ServeError> {
         self.board().fence(core);
         self.submit(Job::Drain, SubmitOpts::pinned(core))?.typed::<CoreHealth>().wait()
+    }
+
+    /// Hot model rollout on one core, through the drain barrier: the
+    /// core is fenced immediately (like [`CimService::drain`]), every
+    /// job admitted before the rollout completes first, then the worker
+    /// reprograms the die with `weights`, records `model` as the core's
+    /// residency, recalibrates, and rejoins if its residual is in band —
+    /// zero dropped jobs.
+    fn rollout(&self, core: usize, model: u32, weights: Vec<i32>) -> Result<CoreHealth, ServeError> {
+        self.board().fence(core);
+        self.submit(Job::Rollout { model, weights }, SubmitOpts::pinned(core))?
+            .typed::<CoreHealth>()
+            .wait()
     }
 
     /// Scatter `n` MACs with up to `window` in flight, gathering every
@@ -712,7 +890,7 @@ pub trait CimService {
         pipelined_gather(jobs, window, |j| {
             let xs: Vec<Vec<i32>> = (0..batch).map(|i| make(j * batch + i)).collect();
             Ok(self
-                .submit(Job::MacBatch { xs, tile: None }, opts)?
+                .submit(Job::MacBatch { xs, tile: None, model: None }, opts)?
                 .typed::<Vec<Vec<u32>>>())
         })
     }
@@ -807,8 +985,65 @@ mod tests {
     #[test]
     fn job_weight_counts_batch_members() {
         assert_eq!(Job::Mac(vec![0; 4]).weight(), 1);
-        assert_eq!(Job::MacBatch { xs: vec![vec![0; 4]; 7], tile: None }.weight(), 7);
+        assert_eq!(
+            Job::MacBatch { xs: vec![vec![0; 4]; 7], tile: None, model: None }.weight(),
+            7
+        );
         assert_eq!(Job::Drain.weight(), 1);
+        assert_eq!(Job::Rollout { model: 0, weights: vec![0; 4] }.weight(), 1);
         assert_eq!(Job::Health.weight(), 1);
+    }
+
+    #[test]
+    fn model_placement_resolves_only_to_holders() {
+        let board = CoreBoard::new(3);
+        let rr = AtomicUsize::new(0);
+        let t = TileRef { layer: 0, tr: 1, tc: 2 };
+        // nothing resident -> ModelNotResident, never a panic
+        assert_eq!(
+            place(&board, &rr, Placement::Model { model: 7, tile: None }).unwrap_err(),
+            ServeError::ModelNotResident { model: 7 }
+        );
+        board.set_residency(0, 7, vec![t]);
+        board.set_residency(1, 7, vec![]);
+        board.set_residency(2, 3, vec![t]);
+        // tile-less: rotates over the two holders of model 7
+        for _ in 0..4 {
+            let c = place(&board, &rr, Placement::Model { model: 7, tile: None }).unwrap();
+            assert!(c == 0 || c == 1);
+        }
+        // tile-scoped: only core 0 holds (7, t); core 2 holds t of model 3
+        for _ in 0..4 {
+            let c = place(&board, &rr, Placement::Model { model: 7, tile: Some(t) }).unwrap();
+            assert_eq!(c, 0);
+        }
+        // fencing the only tile holder: resident but unhealthy
+        board.fence(0);
+        assert_eq!(
+            place(&board, &rr, Placement::Model { model: 7, tile: Some(t) }).unwrap_err(),
+            ServeError::NoHealthyCore
+        );
+        // unknown tile of a resident model -> ModelNotResident
+        let missing = TileRef { layer: 9, tr: 0, tc: 0 };
+        assert_eq!(
+            place(&board, &rr, Placement::Model { model: 7, tile: Some(missing) }).unwrap_err(),
+            ServeError::ModelNotResident { model: 7 }
+        );
+    }
+
+    #[test]
+    fn residency_accessors_degrade_out_of_range() {
+        let board = CoreBoard::new(1);
+        board.set_residency(5, 1, vec![]); // no-op
+        board.clear_residency(5); // no-op
+        assert_eq!(board.resident_model(5), None);
+        assert!(!board.holds(5, 1, None));
+        board.set_residency(0, 4, vec![TileRef { layer: 0, tr: 0, tc: 0 }]);
+        assert_eq!(board.resident_model(0), Some(4));
+        let snap = board.residency_snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].as_ref().map(|r| (r.model, r.tiles.len())), Some((4, 1)));
+        board.clear_residency(0);
+        assert_eq!(board.residency_snapshot(), vec![None]);
     }
 }

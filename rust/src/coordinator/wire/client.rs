@@ -20,7 +20,7 @@
 //! matters).
 #![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 
-use crate::coordinator::batcher::{BatcherStats, ServeError};
+use crate::coordinator::batcher::{BatcherStats, ModelStats, ServeError};
 use crate::coordinator::calibrator::CoreCalStats;
 use crate::coordinator::service::{
     place, CimService, CoreBoard, Job, JobReply, Placement, SubmitOpts, Ticket,
@@ -42,20 +42,26 @@ struct PendingJob {
     tx: Sender<Result<JobReply, ServeError>>,
     core: usize,
     weight: usize,
-    is_drain: bool,
+    /// `Drain` or `Rollout`: both fence the mirror at submit and hold
+    /// that fence until their own reply settles it.
+    is_barrier: bool,
 }
 
 /// State shared with the reader thread.
 struct Shared {
     board: Arc<CoreBoard>,
+    /// Server-registered model names (id order), from the handshake.
+    models: Vec<String>,
     pending: Mutex<HashMap<u64, PendingJob>>,
     pending_stats: Mutex<HashMap<u64, Sender<Vec<BatcherStats>>>>,
     pending_cal: Mutex<HashMap<u64, Sender<Vec<CoreCalStats>>>>,
-    /// Per-core count of this client's in-flight `Drain` jobs. While one
-    /// is pending, a concurrently measured `fenced: false` Health reply
-    /// is stale — honoring it would unfence the mirror out from under
-    /// the fence `drain()` just placed, letting placed jobs pile up
-    /// behind the server-side drain barrier.
+    pending_model: Mutex<HashMap<u64, Sender<Vec<ModelStats>>>>,
+    /// Per-core count of this client's in-flight barrier (`Drain` /
+    /// `Rollout`) jobs. While one is pending, a concurrently measured
+    /// `fenced: false` Health reply is stale — honoring it would unfence
+    /// the mirror out from under the fence `drain()`/`rollout()` just
+    /// placed, letting placed jobs pile up behind the server-side
+    /// barrier.
     drains: Vec<AtomicUsize>,
     alive: AtomicBool,
 }
@@ -111,12 +117,17 @@ impl Clone for RemoteClient {
 
 impl RemoteClient {
     /// Connect and handshake: the server opens with a `Hello` frame
-    /// carrying its core count, which sizes the local board mirror.
+    /// carrying its core count (which sizes the local board mirror), its
+    /// registered model names, and every core's current residency — the
+    /// mirror starts with the server's model map, so `Placement::Model`
+    /// resolves at the edge from the first submit.
     pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<Self> {
         let mut stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
-        let cores = match read_frame(&mut stream) {
-            Ok(Frame::Hello { cores }) if cores > 0 => cores as usize,
+        let (cores, models, residency) = match read_frame(&mut stream) {
+            Ok(Frame::Hello { cores, models, residency }) if cores > 0 => {
+                (cores as usize, models, residency)
+            }
             Ok(_) | Err(_) => {
                 return Err(io::Error::new(
                     io::ErrorKind::InvalidData,
@@ -124,11 +135,21 @@ impl RemoteClient {
                 ));
             }
         };
+        let board = Arc::new(CoreBoard::new(cores));
+        // out-of-range residency entries (a lying server) degrade to
+        // no-ops inside the board accessors
+        for (core, r) in residency.into_iter().enumerate() {
+            if let Some((model, tiles)) = r {
+                board.set_residency(core, model, tiles);
+            }
+        }
         let shared = Arc::new(Shared {
-            board: Arc::new(CoreBoard::new(cores)),
+            board,
+            models,
             pending: Mutex::new(HashMap::new()),
             pending_stats: Mutex::new(HashMap::new()),
             pending_cal: Mutex::new(HashMap::new()),
+            pending_model: Mutex::new(HashMap::new()),
             drains: (0..cores).map(|_| AtomicUsize::new(0)).collect(),
             alive: AtomicBool::new(true),
         });
@@ -198,6 +219,44 @@ impl RemoteClient {
         }
         rx.recv().map_err(|_| ServeError::Disconnected)
     }
+
+    /// The server's registered model names, in id order (index == the id
+    /// [`Placement::Model`] and `Job::Rollout` speak). Empty on
+    /// registry-less servers.
+    pub fn models(&self) -> &[String] {
+        &self.inner.shared.models
+    }
+
+    /// Resolve a model name from the handshake to its registry id.
+    pub fn model_id(&self, name: &str) -> Option<u32> {
+        self.inner.shared.models.iter().position(|m| m == name).map(|i| i as u32)
+    }
+
+    /// Fetch the server's cluster-merged per-model [`ModelStats`]. An
+    /// empty vec means the server serves no model counters (or none have
+    /// been touched yet).
+    pub fn remote_model_stats(&self) -> Result<Vec<ModelStats>, ServeError> {
+        let sh = &self.inner.shared;
+        if !sh.alive.load(Ordering::SeqCst) {
+            return Err(ServeError::Disconnected);
+        }
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        lock_unpoisoned(&sh.pending_model).insert(id, tx);
+        let sent = {
+            let mut guard = lock_unpoisoned(&self.inner.write);
+            let w = &mut *guard;
+            // lint: allow(lock_across_io) — the write mutex serializes whole-frame writes; holding it across the write is its purpose
+            write_frame_buf(&mut w.stream, &Frame::ModelStatsReq { id }, &mut w.buf).is_ok()
+        };
+        // same post-insert re-check as remote_stats: never block on a
+        // sender the disconnected reader will never use
+        if !sent || !sh.alive.load(Ordering::SeqCst) {
+            take_pending(&sh.pending_model, id);
+            return Err(ServeError::Disconnected);
+        }
+        rx.recv().map_err(|_| ServeError::Disconnected)
+    }
 }
 
 impl CimService for RemoteClient {
@@ -212,14 +271,14 @@ impl CimService for RemoteClient {
         }
         let core = place(&sh.board, &self.inner.rr, opts.placement)?;
         let weight = job.weight();
-        let is_drain = matches!(job, Job::Drain);
+        let is_barrier = matches!(job, Job::Drain | Job::Rollout { .. });
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = channel();
         sh.board.add_in_flight(core, weight);
         // registered BEFORE the frame is on the wire: the reply cannot
         // outrun its pending entry
-        lock_unpoisoned(&sh.pending).insert(id, PendingJob { tx, core, weight, is_drain });
-        if is_drain {
+        lock_unpoisoned(&sh.pending).insert(id, PendingJob { tx, core, weight, is_barrier });
+        if is_barrier {
             if let Some(d) = sh.drains.get(core) {
                 d.fetch_add(1, Ordering::SeqCst);
             }
@@ -261,7 +320,7 @@ impl CimService for RemoteClient {
             // this one
             if let Some(p) = take_pending(&sh.pending, id) {
                 sh.board.sub_in_flight(core, weight);
-                if p.is_drain {
+                if p.is_barrier {
                     if let Some(d) = sh.drains.get(core) {
                         d.fetch_sub(1, Ordering::SeqCst);
                     }
@@ -280,7 +339,7 @@ impl CimService for RemoteClient {
             if let Some(p) = take_pending(&sh.pending, id) {
                 // still ours — the reader's sweep did not settle it
                 sh.board.sub_in_flight(core, weight);
-                if p.is_drain {
+                if p.is_barrier {
                     if let Some(d) = sh.drains.get(core) {
                         d.fetch_sub(1, Ordering::SeqCst);
                     }
@@ -305,7 +364,7 @@ fn reader_loop(mut stream: TcpStream, sh: Arc<Shared>) {
             Ok(Frame::Reply { id, core: _, result }) => {
                 let Some(p) = take_pending(&sh.pending, id) else { continue };
                 sh.board.sub_in_flight(p.core, p.weight);
-                if p.is_drain {
+                if p.is_barrier {
                     if let Some(d) = sh.drains.get(p.core) {
                         d.fetch_sub(1, Ordering::SeqCst);
                     }
@@ -322,13 +381,24 @@ fn reader_loop(mut stream: TcpStream, sh: Arc<Shared>) {
                         // in every Health reply, so the mirror cannot go
                         // silently stale behind autonomous recalibrations
                         sh.board.set_recal_epoch(h.core, h.recal_epoch);
+                        // residency sync: only on an actual model CHANGE
+                        // (a rollout this client, another client, or the
+                        // server itself ran) — an unchanged model must
+                        // not wipe the tile list the handshake shipped
+                        if h.model != sh.board.resident_model(h.core) {
+                            match h.model {
+                                // a fresh rollout carries no named tiles
+                                Some(m) => sh.board.set_residency(h.core, m, Vec::new()),
+                                None => sh.board.clear_residency(h.core),
+                            }
+                        }
                         if h.fenced {
                             sh.board.fence(h.core);
                         } else if sh.drains.get(h.core).is_none_or(|d| d.load(Ordering::SeqCst) == 0)
                         {
                             // a `fenced: false` measured before one of OUR
-                            // drains went out is stale — keep the drain's
-                            // fence until its own reply settles it
+                            // barriers went out is stale — keep its fence
+                            // until its own reply settles it
                             sh.board.unfence(h.core);
                         }
                     }
@@ -345,6 +415,11 @@ fn reader_loop(mut stream: TcpStream, sh: Arc<Shared>) {
                     let _ = tx.send(stats);
                 }
             }
+            Ok(Frame::ModelStatsReply { id, stats }) => {
+                if let Some(tx) = take_pending(&sh.pending_model, id) {
+                    let _ = tx.send(stats);
+                }
+            }
             // the server must not send anything else after Hello
             Ok(_) => break,
             Err(_) => break,
@@ -358,4 +433,5 @@ fn reader_loop(mut stream: TcpStream, sh: Arc<Shared>) {
     drop(pending);
     lock_unpoisoned(&sh.pending_stats).clear();
     lock_unpoisoned(&sh.pending_cal).clear();
+    lock_unpoisoned(&sh.pending_model).clear();
 }

@@ -19,7 +19,7 @@
 //! [`WireError`], never a panic and never an allocation proportional to
 //! an attacker-chosen length prefix.
 
-use crate::coordinator::batcher::{BatcherStats, ServeError};
+use crate::coordinator::batcher::{BatcherStats, ModelStats, ServeError};
 use crate::coordinator::calibrator::CoreCalStats;
 use crate::coordinator::service::{CoreHealth, Job, JobReply, Placement, SubmitOpts, TileRef};
 use std::io::{Read, Write};
@@ -31,8 +31,11 @@ pub const WIRE_MAGIC: u16 = 0xAC1E;
 /// ([`WireError::BadVersion`]): the protocol is versioned as a whole, not
 /// per frame — see DESIGN.md §9 for the compatibility rules.
 /// Version history: 1 = initial frame set; 2 = `CoreHealth` carries the
-/// server-observed recalibration epoch + the `CalStats` frame pair.
-pub const WIRE_VERSION: u8 = 2;
+/// server-observed recalibration epoch + the `CalStats` frame pair;
+/// 3 = multi-model serving — `Hello` ships model names + per-core
+/// residency, jobs/placements/health/calstats carry model ids, the
+/// `Rollout` job kind and the `ModelStats` frame pair exist.
+pub const WIRE_VERSION: u8 = 3;
 /// Frame body cap: a length prefix beyond this is rejected before any
 /// allocation ([`WireError::Oversized`]).
 pub const MAX_BODY: u32 = 1 << 26;
@@ -46,6 +49,8 @@ const TAG_STATS_REQ: u8 = 4;
 const TAG_STATS_REPLY: u8 = 5;
 const TAG_CALSTATS_REQ: u8 = 6;
 const TAG_CALSTATS_REPLY: u8 = 7;
+const TAG_MODELSTATS_REQ: u8 = 8;
+const TAG_MODELSTATS_REPLY: u8 = 9;
 
 /// Decode-side failures. `Closed` is the one non-error: a connection that
 /// ends exactly on a frame boundary.
@@ -92,21 +97,36 @@ impl std::fmt::Display for WireError {
 impl std::error::Error for WireError {}
 
 /// One decoded protocol frame. `Hello` opens every connection (server →
-/// client); `Submit` carries a job + options under a client-chosen
-/// request id; `Reply` echoes that id with the serving core and the
-/// job's result; `StatsReq`/`StatsReply` fetch the per-core live
-/// [`BatcherStats`] snapshots; `CalStatsReq`/`CalStatsReply` fetch the
-/// calibrator daemon's per-core [`CoreCalStats`] (empty when the server
-/// runs without `--auto-calibrate`).
+/// client) with the core count, the registry's model names (index ==
+/// model id) and every core's current residency, so a remote client can
+/// resolve `Placement::Model` at the edge; `Submit` carries a job +
+/// options under a client-chosen request id; `Reply` echoes that id with
+/// the serving core and the job's result; `StatsReq`/`StatsReply` fetch
+/// the per-core live [`BatcherStats`] snapshots; `CalStatsReq`/
+/// `CalStatsReply` fetch the calibrator daemon's per-core
+/// [`CoreCalStats`] (empty when the server runs without
+/// `--auto-calibrate`); `ModelStatsReq`/`ModelStatsReply` fetch the
+/// cluster-merged per-model [`ModelStats`].
 #[derive(Debug, Clone, PartialEq)]
 pub enum Frame {
-    Hello { cores: u32 },
+    Hello {
+        cores: u32,
+        /// Registered model names, in id order (empty on registry-less
+        /// servers).
+        models: Vec<String>,
+        /// Per-core residency: `None` = nothing resident, `Some((model,
+        /// tiles))` = the resident model id and its named tiles. Length
+        /// always equals `cores` when emitted by this build's server.
+        residency: Vec<Option<(u32, Vec<TileRef>)>>,
+    },
     Submit { id: u64, job: Job, opts: SubmitOpts },
     Reply { id: u64, core: u32, result: Result<JobReply, ServeError> },
     StatsReq { id: u64 },
     StatsReply { id: u64, stats: Vec<BatcherStats> },
     CalStatsReq { id: u64 },
     CalStatsReply { id: u64, stats: Vec<CoreCalStats> },
+    ModelStatsReq { id: u64 },
+    ModelStatsReply { id: u64, stats: Vec<ModelStats> },
 }
 
 // ---- encoder ------------------------------------------------------------
@@ -265,30 +285,74 @@ impl<'a> Dec<'a> {
 
 // ---- payload codecs -----------------------------------------------------
 
+fn put_tile(e: &mut Enc<'_>, t: &TileRef) {
+    e.u32(t.layer as u32);
+    e.u32(t.tr as u32);
+    e.u32(t.tc as u32);
+}
+
+fn take_tile(d: &mut Dec) -> Result<TileRef, WireError> {
+    Ok(TileRef { layer: d.u32()? as usize, tr: d.u32()? as usize, tc: d.u32()? as usize })
+}
+
+fn put_tile_opt(e: &mut Enc<'_>, t: &Option<TileRef>) {
+    match t {
+        None => e.u8(0),
+        Some(t) => {
+            e.u8(1);
+            put_tile(e, t);
+        }
+    }
+}
+
+fn take_tile_opt(d: &mut Dec) -> Result<Option<TileRef>, WireError> {
+    match d.u8()? {
+        0 => Ok(None),
+        1 => Ok(Some(take_tile(d)?)),
+        t => Err(WireError::BadPayload(format!("bad tile option tag {t}"))),
+    }
+}
+
+fn put_model_opt(e: &mut Enc<'_>, m: Option<u32>) {
+    match m {
+        None => e.u8(0),
+        Some(m) => {
+            e.u8(1);
+            e.u32(m);
+        }
+    }
+}
+
+fn take_model_opt(d: &mut Dec) -> Result<Option<u32>, WireError> {
+    match d.u8()? {
+        0 => Ok(None),
+        1 => Ok(Some(d.u32()?)),
+        t => Err(WireError::BadPayload(format!("bad model option tag {t}"))),
+    }
+}
+
 fn put_job(e: &mut Enc<'_>, job: &Job) {
     match job {
         Job::Mac(x) => {
             e.u8(0);
             e.vec_i32(x);
         }
-        Job::MacBatch { xs, tile } => {
+        Job::MacBatch { xs, tile, model } => {
             e.u8(1);
             e.u32(xs.len() as u32);
             for x in xs {
                 e.vec_i32(x);
             }
-            match tile {
-                None => e.u8(0),
-                Some(t) => {
-                    e.u8(1);
-                    e.u32(t.layer as u32);
-                    e.u32(t.tr as u32);
-                    e.u32(t.tc as u32);
-                }
-            }
+            put_tile_opt(e, tile);
+            put_model_opt(e, *model);
         }
         Job::Drain => e.u8(2),
         Job::Health => e.u8(3),
+        Job::Rollout { model, weights } => {
+            e.u8(4);
+            e.u32(*model);
+            e.vec_i32(weights);
+        }
     }
 }
 
@@ -302,19 +366,13 @@ fn take_job(d: &mut Dec) -> Result<Job, WireError> {
             for _ in 0..n {
                 xs.push(d.vec_i32()?);
             }
-            let tile = match d.u8()? {
-                0 => None,
-                1 => Some(TileRef {
-                    layer: d.u32()? as usize,
-                    tr: d.u32()? as usize,
-                    tc: d.u32()? as usize,
-                }),
-                t => return Err(WireError::BadPayload(format!("bad tile option tag {t}"))),
-            };
-            Ok(Job::MacBatch { xs, tile })
+            let tile = take_tile_opt(d)?;
+            let model = take_model_opt(d)?;
+            Ok(Job::MacBatch { xs, tile, model })
         }
         2 => Ok(Job::Drain),
         3 => Ok(Job::Health),
+        4 => Ok(Job::Rollout { model: d.u32()?, weights: d.vec_i32()? }),
         t => Err(WireError::BadPayload(format!("unknown job kind {t}"))),
     }
 }
@@ -338,6 +396,11 @@ fn put_opts(e: &mut Enc<'_>, opts: &SubmitOpts) {
             e.u8(2);
             e.u32(core as u32);
         }
+        Placement::Model { model, tile } => {
+            e.u8(3);
+            e.u32(model);
+            put_tile_opt(e, &tile);
+        }
     }
 }
 
@@ -352,6 +415,7 @@ fn take_opts(d: &mut Dec) -> Result<SubmitOpts, WireError> {
         0 => Placement::RoundRobin,
         1 => Placement::LeastLoaded,
         2 => Placement::Pinned(d.u32()? as usize),
+        3 => Placement::Model { model: d.u32()?, tile: take_tile_opt(d)? },
         t => return Err(WireError::BadPayload(format!("bad placement tag {t}"))),
     };
     Ok(SubmitOpts { priority, deadline, placement })
@@ -371,6 +435,15 @@ fn put_serve_error(e: &mut Enc<'_>, err: &ServeError) {
         ServeError::Disconnected => e.u8(2),
         ServeError::DeadlineExceeded => e.u8(3),
         ServeError::NoHealthyCore => e.u8(4),
+        ServeError::ModelNotResident { model } => {
+            e.u8(5);
+            e.u32(*model);
+        }
+        ServeError::WrongModel { requested, resident } => {
+            e.u8(6);
+            e.u32(*requested);
+            put_model_opt(e, *resident);
+        }
     }
 }
 
@@ -384,6 +457,8 @@ fn take_serve_error(d: &mut Dec) -> Result<ServeError, WireError> {
         2 => Ok(ServeError::Disconnected),
         3 => Ok(ServeError::DeadlineExceeded),
         4 => Ok(ServeError::NoHealthyCore),
+        5 => Ok(ServeError::ModelNotResident { model: d.u32()? }),
+        6 => Ok(ServeError::WrongModel { requested: d.u32()?, resident: take_model_opt(d)? }),
         t => Err(WireError::BadPayload(format!("unknown error kind {t}"))),
     }
 }
@@ -400,6 +475,7 @@ fn put_health(e: &mut Enc<'_>, h: &CoreHealth) {
     e.bool(h.fenced);
     e.bool(h.recalibrated);
     e.u64(h.recal_epoch);
+    put_model_opt(e, h.model);
 }
 
 fn take_health(d: &mut Dec) -> Result<CoreHealth, WireError> {
@@ -415,6 +491,7 @@ fn take_health(d: &mut Dec) -> Result<CoreHealth, WireError> {
         fenced: d.bool()?,
         recalibrated: d.bool()?,
         recal_epoch: d.u64()?,
+        model: take_model_opt(d)?,
     })
 }
 
@@ -493,9 +570,10 @@ fn take_stats(d: &mut Dec) -> Result<BatcherStats, WireError> {
     })
 }
 
-/// Minimum encoded size of one [`CoreCalStats`] (trend `None`): the
-/// element-size bound `CalStatsReply`'s length prefix is checked against.
-const CALSTATS_MIN_LEN: usize = 50;
+/// Minimum encoded size of one [`CoreCalStats`] (trend and model both
+/// `None`): the element-size bound `CalStatsReply`'s length prefix is
+/// checked against.
+const CALSTATS_MIN_LEN: usize = 51;
 
 fn put_calstats(e: &mut Enc<'_>, s: &CoreCalStats) {
     e.u64(s.samples);
@@ -512,6 +590,7 @@ fn put_calstats(e: &mut Enc<'_>, s: &CoreCalStats) {
     e.u64(s.drains);
     e.u64(s.drain_failures);
     e.bool(s.fenced);
+    put_model_opt(e, s.model);
 }
 
 fn take_calstats(d: &mut Dec) -> Result<CoreCalStats, WireError> {
@@ -530,6 +609,29 @@ fn take_calstats(d: &mut Dec) -> Result<CoreCalStats, WireError> {
         drains: d.u64()?,
         drain_failures: d.u64()?,
         fenced: d.bool()?,
+        model: take_model_opt(d)?,
+    })
+}
+
+/// Fixed encoded size of one [`ModelStats`]: the element-size bound
+/// `ModelStatsReply`'s length prefix is checked against.
+const MODELSTATS_LEN: usize = 36;
+
+fn put_modelstats(e: &mut Enc<'_>, s: &ModelStats) {
+    e.u32(s.model);
+    e.u64(s.requests);
+    e.u64(s.rejected);
+    e.u64(s.expired);
+    e.u64(s.recals);
+}
+
+fn take_modelstats(d: &mut Dec) -> Result<ModelStats, WireError> {
+    Ok(ModelStats {
+        model: d.u32()?,
+        requests: d.u64()?,
+        rejected: d.u64()?,
+        expired: d.u64()?,
+        recals: d.u64()?,
     })
 }
 
@@ -552,8 +654,26 @@ pub fn encode_frame_into(frame: &Frame, out: &mut Vec<u8>) {
     let (tag, id) = {
         let mut body = Enc { b: out };
         match frame {
-            Frame::Hello { cores } => {
+            Frame::Hello { cores, models, residency } => {
                 body.u32(*cores);
+                body.u32(models.len() as u32);
+                for m in models {
+                    body.str(m);
+                }
+                body.u32(residency.len() as u32);
+                for r in residency {
+                    match r {
+                        None => body.u8(0),
+                        Some((model, tiles)) => {
+                            body.u8(1);
+                            body.u32(*model);
+                            body.u32(tiles.len() as u32);
+                            for t in tiles {
+                                put_tile(&mut body, t);
+                            }
+                        }
+                    }
+                }
                 (TAG_HELLO, 0)
             }
             Frame::Submit { id, job, opts } => {
@@ -582,6 +702,14 @@ pub fn encode_frame_into(frame: &Frame, out: &mut Vec<u8>) {
                 }
                 (TAG_CALSTATS_REPLY, *id)
             }
+            Frame::ModelStatsReq { id } => (TAG_MODELSTATS_REQ, *id),
+            Frame::ModelStatsReply { id, stats } => {
+                body.u32(stats.len() as u32);
+                for s in stats {
+                    put_modelstats(&mut body, s);
+                }
+                (TAG_MODELSTATS_REPLY, *id)
+            }
         }
     };
     let body_len = (out.len() - body_at) as u32;
@@ -604,7 +732,38 @@ pub fn encode_frame(frame: &Frame) -> Vec<u8> {
 fn decode_body(tag: u8, id: u64, body: &[u8]) -> Result<Frame, WireError> {
     let mut d = Dec::new(body);
     let frame = match tag {
-        TAG_HELLO => Frame::Hello { cores: d.u32()? },
+        TAG_HELLO => {
+            let cores = d.u32()?;
+            // each model name costs at least its own 4-byte length prefix
+            let nm = d.len_prefix(4)?;
+            let mut models = Vec::with_capacity(nm);
+            for _ in 0..nm {
+                models.push(d.str()?);
+            }
+            // each residency entry costs at least its 1-byte option tag
+            let nr = d.len_prefix(1)?;
+            let mut residency = Vec::with_capacity(nr);
+            for _ in 0..nr {
+                residency.push(match d.u8()? {
+                    0 => None,
+                    1 => {
+                        let model = d.u32()?;
+                        let nt = d.len_prefix(12)?;
+                        let mut tiles = Vec::with_capacity(nt);
+                        for _ in 0..nt {
+                            tiles.push(take_tile(&mut d)?);
+                        }
+                        Some((model, tiles))
+                    }
+                    t => {
+                        return Err(WireError::BadPayload(format!(
+                            "bad residency option tag {t}"
+                        )));
+                    }
+                });
+            }
+            Frame::Hello { cores, models, residency }
+        }
         TAG_SUBMIT => {
             let opts = take_opts(&mut d)?;
             let job = take_job(&mut d)?;
@@ -632,6 +791,15 @@ fn decode_body(tag: u8, id: u64, body: &[u8]) -> Result<Frame, WireError> {
                 stats.push(take_calstats(&mut d)?);
             }
             Frame::CalStatsReply { id, stats }
+        }
+        TAG_MODELSTATS_REQ => Frame::ModelStatsReq { id },
+        TAG_MODELSTATS_REPLY => {
+            let n = d.len_prefix(MODELSTATS_LEN)?;
+            let mut stats = Vec::with_capacity(n);
+            for _ in 0..n {
+                stats.push(take_modelstats(&mut d)?);
+            }
+            Frame::ModelStatsReply { id, stats }
         }
         t => return Err(WireError::UnknownTag(t)),
     };
@@ -731,7 +899,15 @@ mod tests {
 
     #[test]
     fn every_frame_kind_roundtrips() {
-        roundtrip(Frame::Hello { cores: 4 });
+        roundtrip(Frame::Hello { cores: 4, models: Vec::new(), residency: Vec::new() });
+        roundtrip(Frame::Hello {
+            cores: 2,
+            models: vec!["alpha".to_string(), "beta".to_string()],
+            residency: vec![
+                Some((0, vec![TileRef { layer: 0, tr: 1, tc: 2 }])),
+                None,
+            ],
+        });
         roundtrip(Frame::Submit {
             id: 7,
             job: Job::Mac(vec![-3, 0, 63]),
@@ -742,15 +918,26 @@ mod tests {
             job: Job::MacBatch {
                 xs: vec![vec![1, 2], vec![-1, -2]],
                 tile: Some(TileRef { layer: 1, tr: 2, tc: 3 }),
+                model: Some(1),
             },
             opts: SubmitOpts::pinned(3)
                 .with_priority(200)
                 .with_deadline(Duration::from_micros(1500)),
         });
-        roundtrip(Frame::Submit { id: 9, job: Job::Drain, opts: SubmitOpts::least_loaded() });
-        roundtrip(Frame::Submit { id: 10, job: Job::Health, opts: SubmitOpts::default() });
+        roundtrip(Frame::Submit {
+            id: 9,
+            job: Job::MacBatch { xs: vec![vec![0]], tile: None, model: None },
+            opts: SubmitOpts::for_model(2, Some(TileRef { layer: 0, tr: 0, tc: 1 })),
+        });
+        roundtrip(Frame::Submit {
+            id: 10,
+            job: Job::Rollout { model: 3, weights: vec![40, -2, 7] },
+            opts: SubmitOpts::for_model(3, None),
+        });
+        roundtrip(Frame::Submit { id: 11, job: Job::Drain, opts: SubmitOpts::least_loaded() });
+        roundtrip(Frame::Submit { id: 12, job: Job::Health, opts: SubmitOpts::default() });
         roundtrip(Frame::Reply {
-            id: 11,
+            id: 13,
             core: 2,
             result: Ok(JobReply::Health(CoreHealth {
                 core: 2,
@@ -758,16 +945,32 @@ mod tests {
                 fenced: true,
                 recalibrated: false,
                 recal_epoch: 3,
+                model: Some(1),
             })),
         });
         roundtrip(Frame::Reply {
-            id: 12,
+            id: 14,
             core: 0,
             result: Err(ServeError::BadRequest { expected: 64, got: 3 }),
         });
-        roundtrip(Frame::StatsReq { id: 13 });
+        roundtrip(Frame::Reply {
+            id: 15,
+            core: u32::MAX,
+            result: Err(ServeError::ModelNotResident { model: 9 }),
+        });
+        roundtrip(Frame::Reply {
+            id: 16,
+            core: 1,
+            result: Err(ServeError::WrongModel { requested: 2, resident: Some(0) }),
+        });
+        roundtrip(Frame::Reply {
+            id: 17,
+            core: 1,
+            result: Err(ServeError::WrongModel { requested: 2, resident: None }),
+        });
+        roundtrip(Frame::StatsReq { id: 18 });
         roundtrip(Frame::StatsReply {
-            id: 14,
+            id: 19,
             stats: vec![BatcherStats {
                 requests: 10,
                 batches: 2,
@@ -776,9 +979,9 @@ mod tests {
                 expired: 3,
             }],
         });
-        roundtrip(Frame::CalStatsReq { id: 15 });
+        roundtrip(Frame::CalStatsReq { id: 20 });
         roundtrip(Frame::CalStatsReply {
-            id: 16,
+            id: 21,
             stats: vec![
                 CoreCalStats {
                     samples: 12,
@@ -789,8 +992,17 @@ mod tests {
                     drains: 1,
                     drain_failures: 0,
                     fenced: false,
+                    model: Some(0),
                 },
                 CoreCalStats::default(),
+            ],
+        });
+        roundtrip(Frame::ModelStatsReq { id: 22 });
+        roundtrip(Frame::ModelStatsReply {
+            id: 23,
+            stats: vec![
+                ModelStats { model: 0, requests: 5, rejected: 1, expired: 0, recals: 2 },
+                ModelStats { model: 1, requests: 9, rejected: 0, expired: 1, recals: 0 },
             ],
         });
     }
@@ -803,7 +1015,7 @@ mod tests {
         let frames = vec![
             Frame::Reply { id: 1, core: 0, result: Ok(JobReply::Mac(vec![1, 2, 3])) },
             Frame::Reply { id: 2, core: 1, result: Err(ServeError::DeadlineExceeded) },
-            Frame::Hello { cores: 8 },
+            Frame::Hello { cores: 8, models: vec!["alpha".to_string()], residency: vec![None] },
             Frame::StatsReq { id: 3 },
         ];
         let mut buf = Vec::new();
@@ -837,10 +1049,11 @@ mod tests {
         });
         roundtrip(Frame::Submit {
             id: 2,
-            job: Job::MacBatch { xs: Vec::new(), tile: None },
+            job: Job::MacBatch { xs: Vec::new(), tile: None, model: None },
             opts: SubmitOpts::default(),
         });
         roundtrip(Frame::StatsReply { id: 3, stats: Vec::new() });
         roundtrip(Frame::CalStatsReply { id: 4, stats: Vec::new() });
+        roundtrip(Frame::ModelStatsReply { id: 5, stats: Vec::new() });
     }
 }

@@ -20,9 +20,9 @@
 //! [`ReplySink::Routed`]: crate::coordinator::service::ReplySink
 #![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 
-use crate::coordinator::batcher::{BatcherStats, ServeError};
+use crate::coordinator::batcher::{merge_model_stats, BatcherStats, ModelStats, ServeError};
 use crate::coordinator::calibrator::CalibratorShared;
-use crate::coordinator::service::{CimService, Job, Placement, RoutedReply, ServiceClient};
+use crate::coordinator::service::{CimService, Job, Placement, RoutedReply, ServiceClient, TileRef};
 use crate::coordinator::wire::codec::{
     encode_frame_into, read_frame_buf, write_frame, write_frame_buf, Frame,
 };
@@ -54,6 +54,12 @@ pub struct WireServer {
     /// calibrator-daemon statistics answering `CalStats` frames; `None`
     /// (serving without `--auto-calibrate`) answers with an empty vec
     cal: Option<Arc<CalibratorShared>>,
+    /// registry model names shipped in every `Hello` (index == model id);
+    /// empty on registry-less servers
+    models: Vec<String>,
+    /// per-core live model counters answering `ModelStats` frames,
+    /// merged across cores per request
+    model_stats: Vec<Arc<Mutex<Vec<ModelStats>>>>,
     stop: Arc<AtomicBool>,
     conns: ConnRegistry,
     next_conn: AtomicU64,
@@ -76,6 +82,8 @@ impl WireServer {
             svc,
             live,
             cal: None,
+            models: Vec::new(),
+            model_stats: Vec::new(),
             stop: Arc::new(AtomicBool::new(false)),
             conns: Arc::new(Mutex::new(Vec::new())),
             next_conn: AtomicU64::new(0),
@@ -87,6 +95,21 @@ impl WireServer {
     /// answered with an empty list.
     pub fn with_calibrator(mut self, shared: Arc<CalibratorShared>) -> Self {
         self.cal = Some(shared);
+        self
+    }
+
+    /// Ship the registry's model names (id order) in every `Hello`, so
+    /// remote clients can resolve names to the ids placement speaks.
+    pub fn with_models(mut self, models: Vec<String>) -> Self {
+        self.models = models;
+        self
+    }
+
+    /// Serve cluster-merged per-model counters as `ModelStats` frames
+    /// ([`crate::coordinator::cluster::ClusterServer::model_stats_handles`]).
+    /// Without this, `ModelStatsReq` is answered with an empty list.
+    pub fn with_model_stats(mut self, handles: Vec<Arc<Mutex<Vec<ModelStats>>>>) -> Self {
+        self.model_stats = handles;
         self
     }
 
@@ -124,9 +147,11 @@ impl WireServer {
                     let svc = self.svc.clone();
                     let live = self.live.clone();
                     let cal = self.cal.clone();
+                    let models = self.models.clone();
+                    let model_stats = self.model_stats.clone();
                     let conns = Arc::clone(&self.conns);
                     handlers.push(std::thread::spawn(move || {
-                        handle_connection(stream, svc, live, cal);
+                        handle_connection(stream, svc, live, cal, models, model_stats);
                         lock_unpoisoned(&conns).retain(|(id, _)| *id != cid);
                     }));
                 }
@@ -155,6 +180,8 @@ fn handle_connection(
     svc: ServiceClient,
     live: Vec<Arc<Mutex<BatcherStats>>>,
     cal: Option<Arc<CalibratorShared>>,
+    models: Vec<String>,
+    model_stats: Vec<Arc<Mutex<Vec<ModelStats>>>>,
 ) {
     // the listener is non-blocking (its accept loop polls the stop flag)
     // and some platforms let accepted sockets inherit that — this
@@ -174,10 +201,18 @@ fn handle_connection(
         Ok(w) => Arc::new(Mutex::new(w)),
         Err(_) => return,
     };
+    // the handshake ships the registry's names and the board's CURRENT
+    // residency, so the client's mirror starts correct; later rollouts
+    // reach it through the Health replies they generate
+    let residency: Vec<Option<(u32, Vec<TileRef>)>> = svc
+        .board()
+        .residency_snapshot()
+        .into_iter()
+        .map(|r| r.map(|r| (r.model, r.tiles)))
+        .collect();
+    let hello = Frame::Hello { cores: svc.cores() as u32, models, residency };
     // lint: allow(lock_across_io) — serialized whole-frame writes are this mutex's purpose
-    if write_frame(&mut *lock_unpoisoned(&write), &Frame::Hello { cores: svc.cores() as u32 })
-        .is_err()
-    {
+    if write_frame(&mut *lock_unpoisoned(&write), &hello).is_err() {
         return;
     }
     let (rtx, rrx) = channel::<RoutedReply>();
@@ -207,10 +242,10 @@ fn handle_connection(
                         });
                         continue;
                     }
-                    // mirror CimService::drain: the fence lands before the
-                    // drain job is queued, so no placed work slips in
-                    // behind it
-                    if matches!(job, Job::Drain) {
+                    // mirror CimService::drain / rollout: the fence lands
+                    // before the barrier job is queued, so no placed work
+                    // slips in behind it
+                    if matches!(job, Job::Drain | Job::Rollout { .. }) {
                         svc.board().fence(core);
                     }
                 }
@@ -244,6 +279,19 @@ fn handle_connection(
                     break;
                 }
             }
+            Ok(Frame::ModelStatsReq { id }) => {
+                let stats = snapshot_model_stats(&model_stats);
+                // lint: allow(lock_across_io) — serialized whole-frame writes are this mutex's purpose
+                if write_frame_buf(
+                    &mut *lock_unpoisoned(&write),
+                    &Frame::ModelStatsReply { id, stats },
+                    &mut ctrl_buf,
+                )
+                .is_err()
+                {
+                    break;
+                }
+            }
             // clients must not send server-side frames; drop the
             // connection rather than guess
             Ok(_) => break,
@@ -263,6 +311,17 @@ fn handle_connection(
 /// (rule `lock_across_io`).
 fn snapshot_stats(live: &[Arc<Mutex<BatcherStats>>]) -> Vec<BatcherStats> {
     live.iter().map(|s| *lock_unpoisoned(s)).collect()
+}
+
+/// Merge every core's live model counters into one cluster-wide set. A
+/// separate function so each per-core guard is provably released before
+/// the reply hits the socket (rule `lock_across_io`).
+fn snapshot_model_stats(handles: &[Arc<Mutex<Vec<ModelStats>>>]) -> Vec<ModelStats> {
+    let mut merged = Vec::new();
+    for h in handles {
+        merge_model_stats(&mut merged, lock_unpoisoned(h).as_slice());
+    }
+    merged
 }
 
 /// Stream routed replies onto the socket in completion order, coalescing

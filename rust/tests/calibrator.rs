@@ -13,6 +13,7 @@ use acore_cim::coordinator::batcher::{Batcher, ServeError};
 use acore_cim::coordinator::bisc::{AdcCharacterization, BiscEngine};
 use acore_cim::coordinator::calibrator::{Calibrator, CalibratorConfig};
 use acore_cim::coordinator::cluster::{CimCluster, ServiceConfig};
+use acore_cim::coordinator::registry::deploy_uniform;
 use acore_cim::coordinator::dnn::CimMlp;
 use acore_cim::coordinator::service::CimService;
 use acore_cim::data::mlp::{train, Mlp, QuantMlp, TrainConfig};
@@ -55,7 +56,7 @@ fn calibrator_autonomously_recalibrates_drifting_cores() {
     let mut cluster = CimCluster::new(&cfg, 2);
     let engine = BiscEngine::from_config(&cfg, AdcCharacterization::ideal());
     cluster.calibrate_parallel(&engine);
-    cluster.program_all(&vec![40; c::N_ROWS * c::M_COLS]);
+    deploy_uniform(&mut cluster, "demo", vec![40; c::N_ROWS * c::M_COLS]).unwrap();
     // wide health band so the passive fence never beats the daemon to
     // it: any drain that happens is the daemon's own decision
     let server = cluster.serve_with(ServiceConfig {
@@ -159,7 +160,7 @@ fn in_service_drain_refreshes_gather_side_trims() {
     let mut cluster = CimCluster::new(&cfg, 2);
     let engine = BiscEngine::from_config(&cfg, AdcCharacterization::ideal());
     cluster.calibrate_parallel(&engine);
-    cluster.program_all(&vec![40; c::N_ROWS * c::M_COLS]);
+    deploy_uniform(&mut cluster, "demo", vec![40; c::N_ROWS * c::M_COLS]).unwrap();
     let sched = cim_mlp.prepare_cluster(&mut cluster, Some(&cfg));
     assert!(sched.core_corrections(0).has_any(), "schedule must carry trims");
     assert_eq!(sched.core_corrections(0).epoch, 0);
@@ -206,7 +207,7 @@ fn single_core_deployment_self_heals_through_the_fence() {
     let mut cluster = CimCluster::new(&cfg, 1);
     let engine = BiscEngine::from_config(&cfg, AdcCharacterization::ideal());
     cluster.calibrate_parallel(&engine);
-    cluster.program_all(&vec![40; c::N_ROWS * c::M_COLS]);
+    deploy_uniform(&mut cluster, "demo", vec![40; c::N_ROWS * c::M_COLS]).unwrap();
     let band = 0.10;
     let server = cluster.serve_with(ServiceConfig {
         batcher: Batcher::default(),

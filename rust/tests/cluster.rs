@@ -8,6 +8,7 @@ use acore_cim::config::SimConfig;
 use acore_cim::coordinator::batcher::{Batcher, ServeError};
 use acore_cim::coordinator::bisc::{AdcCharacterization, BiscEngine};
 use acore_cim::coordinator::cluster::CimCluster;
+use acore_cim::coordinator::registry::deploy_uniform;
 use acore_cim::coordinator::service::{CimService, Job, SubmitOpts, Ticket};
 use acore_cim::util::proptest::forall;
 use acore_cim::util::rng::Rng;
@@ -77,7 +78,7 @@ fn round_robin_scatter_delivers_every_reply() {
     let k = 4;
     let n = 500;
     let mut cluster = CimCluster::new(&ideal_cfg(), k);
-    cluster.program_all(&vec![40; c::N_ROWS * c::M_COLS]);
+    deploy_uniform(&mut cluster, "demo", vec![40; c::N_ROWS * c::M_COLS]).unwrap();
     let server = cluster.serve(Batcher::default());
     let client = server.client();
     let expect = reference(40, &vec![30; c::N_ROWS]);
@@ -111,7 +112,7 @@ fn round_robin_scatter_delivers_every_reply() {
 #[test]
 fn cluster_rejects_bad_requests_per_request() {
     let mut cluster = CimCluster::new(&ideal_cfg(), 2);
-    cluster.program_all(&vec![40; c::N_ROWS * c::M_COLS]);
+    deploy_uniform(&mut cluster, "demo", vec![40; c::N_ROWS * c::M_COLS]).unwrap();
     let server = cluster.serve(Batcher::default());
     let client = server.client();
     let err = client.mac(vec![1; 5]).unwrap_err();

@@ -1,0 +1,322 @@
+//! Multi-model serving: `Placement::Model` resolution properties over
+//! randomized residency/fencing boards, the in-process hot-rollout
+//! lifecycle (drain barrier → reprogram → recalibrate → rejoin with
+//! zero lost requests), and the loopback wire e2e — two models served
+//! concurrently over TCP, a live rollout under traffic, and per-model
+//! stats split by model id.
+
+use acore_cim::analog::consts as c;
+use acore_cim::config::SimConfig;
+use acore_cim::coordinator::batcher::{Batcher, ModelStats, ServeError};
+use acore_cim::coordinator::bisc::{AdcCharacterization, BiscEngine};
+use acore_cim::coordinator::cluster::{CimCluster, ClusterServer, ServiceConfig};
+use acore_cim::coordinator::registry::ModelRegistry;
+use acore_cim::coordinator::service::{
+    place, CimService, CoreBoard, Job, Placement, SubmitOpts, TileRef,
+};
+use acore_cim::coordinator::wire::{RemoteClient, WireServer};
+use acore_cim::util::proptest::forall;
+use acore_cim::util::rng::Rng;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+fn ideal_cfg() -> SimConfig {
+    let mut cfg = SimConfig::default().scaled(0.0);
+    cfg.sigma_noise = 0.0;
+    cfg
+}
+
+fn rand_tile(rng: &mut Rng) -> TileRef {
+    TileRef {
+        layer: rng.int_in(0, 1) as usize,
+        tr: rng.int_in(0, 2) as usize,
+        tc: rng.int_in(0, 2) as usize,
+    }
+}
+
+/// `Placement::Model` never resolves to a core that does not hold the
+/// requested (model, tile) or that is fenced — including boards where
+/// every holder is fenced — and the two error cases are exactly:
+/// `ModelNotResident` iff no core holds it at all, `NoHealthyCore` iff
+/// holders exist but every one is fenced.
+#[test]
+fn placement_model_never_lands_on_a_non_holder() {
+    forall("Placement::Model resolves only to healthy holders", 512, |rng| {
+        let k = rng.int_in(1, 6) as usize;
+        let board = CoreBoard::new(k);
+        for core in 0..k {
+            if rng.int_in(0, 3) > 0 {
+                let model = rng.int_in(0, 2) as u32;
+                let tiles: Vec<TileRef> =
+                    (0..rng.int_in(0, 4)).map(|_| rand_tile(rng)).collect();
+                board.set_residency(core, model, tiles);
+            }
+            if rng.int_in(0, 3) == 0 {
+                board.fence(core);
+            }
+        }
+        let model = rng.int_in(0, 3) as u32;
+        let tile = if rng.int_in(0, 1) == 1 { Some(rand_tile(rng)) } else { None };
+        let holders: Vec<usize> =
+            (0..k).filter(|&core| board.holds(core, model, tile.as_ref())).collect();
+        let healthy: Vec<usize> =
+            holders.iter().copied().filter(|&core| !board.is_fenced(core)).collect();
+
+        let rr = AtomicUsize::new(rng.int_in(0, 1000) as usize);
+        match place(&board, &rr, Placement::Model { model, tile }) {
+            Ok(core) => {
+                if !healthy.contains(&core) {
+                    return Err(format!(
+                        "placed model {model} tile {tile:?} on core {core}, \
+                         but healthy holders are {healthy:?}"
+                    ));
+                }
+                // a named tile maps deterministically: repeat placement
+                // sticks to the same core (folded-tile caches stay hot)
+                if tile.is_some() {
+                    let again = place(&board, &rr, Placement::Model { model, tile });
+                    if again != Ok(core) {
+                        return Err(format!("tiled placement moved: {core} then {again:?}"));
+                    }
+                }
+                Ok(())
+            }
+            Err(ServeError::ModelNotResident { model: m }) => {
+                if m != model {
+                    return Err(format!("error names model {m}, requested {model}"));
+                }
+                if !holders.is_empty() {
+                    return Err(format!(
+                        "ModelNotResident but cores {holders:?} hold model {model}"
+                    ));
+                }
+                Ok(())
+            }
+            Err(ServeError::NoHealthyCore) => {
+                if holders.is_empty() {
+                    return Err("NoHealthyCore but nothing is resident \
+                                (expected ModelNotResident)"
+                        .to_string());
+                }
+                if !healthy.is_empty() {
+                    return Err(format!(
+                        "NoHealthyCore but healthy holders exist: {healthy:?}"
+                    ));
+                }
+                Ok(())
+            }
+            Err(other) => Err(format!("unexpected placement error: {other:?}")),
+        }
+    });
+}
+
+/// Serve one model-targeted batch and wait. A raced `WrongModel` (the
+/// placement resolved a holder that a concurrent rollout reprogrammed
+/// before the job reached the head of its queue) is the protocol's
+/// retryable answer — retry once; anything else is a dropped request.
+fn serve_one<S: CimService>(
+    svc: &S,
+    model: u32,
+    retried: &AtomicUsize,
+) -> Result<(), ServeError> {
+    let xs = vec![vec![10; c::N_ROWS]];
+    for attempt in 0..2 {
+        let job = Job::MacBatch { xs: clone_xs(&xs), tile: None, model: Some(model) };
+        match svc.submit(job, SubmitOpts::for_model(model, None))?.typed::<Vec<Vec<u32>>>().wait()
+        {
+            Ok(_) => return Ok(()),
+            Err(ServeError::WrongModel { .. }) if attempt == 0 => {
+                retried.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Err(ServeError::NoHealthyCore)
+}
+
+fn clone_xs(xs: &[Vec<i32>]) -> Vec<Vec<i32>> {
+    xs.to_vec()
+}
+
+fn requests_for(stats: &[ModelStats], model: u32) -> u64 {
+    stats.iter().find(|s| s.model == model).map_or(0, |s| s.requests)
+}
+
+/// In-process hot rollout: alpha serves on cores {0,1}, beta on {2};
+/// beta rolls onto core 1 through the drain barrier while both models
+/// take continuous traffic. Nothing is dropped, residency flips, and
+/// the per-model counters split by id.
+/// alpha on cores {0,1}, beta on {2}, served with a recalibration
+/// engine and a band generous enough that an ideal die always rejoins.
+fn two_model_server() -> (ClusterServer, ModelRegistry, u32, u32) {
+    let cfg = ideal_cfg();
+    let mut cluster = CimCluster::new(&cfg, 3);
+    let mut reg = ModelRegistry::new();
+    let alpha = reg.register("alpha", vec![40; c::N_ROWS * c::M_COLS]).unwrap();
+    let beta = reg.register("beta", vec![33; c::N_ROWS * c::M_COLS]).unwrap();
+    reg.deploy(&mut cluster, &[(0, alpha), (1, alpha), (2, beta)]).unwrap();
+    let server = cluster.serve_with(ServiceConfig {
+        batcher: Batcher::default(),
+        engine: Some(BiscEngine::from_config(&cfg, AdcCharacterization::ideal())),
+        health_band: 1.0,
+    });
+    (server, reg, alpha, beta)
+}
+
+#[test]
+fn hot_rollout_through_the_drain_barrier_drops_nothing() {
+    let (server, reg, alpha, beta) = two_model_server();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let retried = Arc::new(AtomicUsize::new(0));
+    let producers: Vec<_> = [alpha, beta]
+        .into_iter()
+        .map(|model| {
+            let client = server.client();
+            let stop = Arc::clone(&stop);
+            let retried = Arc::clone(&retried);
+            std::thread::spawn(move || {
+                let mut served = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    serve_one(&client, model, &retried).unwrap_or_else(|e| {
+                        panic!("model {model} request dropped mid-rollout: {e:?}")
+                    });
+                    served += 1;
+                }
+                served
+            })
+        })
+        .collect();
+
+    // let traffic build, then roll beta onto core 1 live
+    std::thread::sleep(std::time::Duration::from_millis(30));
+    let client = server.client();
+    let health = client.rollout(1, beta, reg.weights(beta).unwrap().to_vec()).unwrap();
+    assert_eq!(health.core, 1);
+    assert_eq!(health.model, Some(beta));
+    assert!(health.recalibrated, "rollout must recalibrate the reprogrammed die");
+    std::thread::sleep(std::time::Duration::from_millis(30));
+    stop.store(true, Ordering::Relaxed);
+    let mut served = 0u64;
+    for p in producers {
+        served += p.join().expect("producer panicked (a request was dropped)");
+    }
+    assert!(served > 0, "producers never served a request");
+
+    // residency flipped on the board and core 1 rejoined the scheduler
+    assert_eq!(client.board().resident_model(1), Some(beta));
+    assert!(!client.board().is_fenced(1), "core 1 must rejoin after rollout");
+    // alpha now resolves only to core 0; beta spreads over {1, 2}
+    for _ in 0..8 {
+        let t = client
+            .submit(
+                Job::MacBatch { xs: vec![vec![1; c::N_ROWS]], tile: None, model: Some(alpha) },
+                SubmitOpts::for_model(alpha, None),
+            )
+            .unwrap();
+        assert_eq!(t.core(), 0, "core 1 no longer holds alpha");
+        t.typed::<Vec<Vec<u32>>>().wait().unwrap();
+    }
+    // a model nobody holds is a typed error, never a panic
+    match client.submit(
+        Job::MacBatch { xs: vec![vec![1; c::N_ROWS]], tile: None, model: Some(77) },
+        SubmitOpts::for_model(77, None),
+    ) {
+        Err(ServeError::ModelNotResident { model: 77 }) => {}
+        other => panic!("expected ModelNotResident, got {other:?}"),
+    }
+
+    // per-model counters split by id: both models took traffic, and the
+    // rollout recorded a recalibration against beta on core 1
+    let stats = server.live_model_stats();
+    assert!(requests_for(&stats, alpha) > 0, "no alpha requests counted: {stats:?}");
+    assert!(requests_for(&stats, beta) > 0, "no beta requests counted: {stats:?}");
+    assert!(
+        stats.iter().any(|s| s.model == beta && s.recals > 0),
+        "rollout must count a recal against beta: {stats:?}"
+    );
+    server.join();
+}
+
+/// Loopback wire e2e: two models served concurrently over TCP, a live
+/// rollout under remote traffic with zero drops, the client's mirror
+/// residency tracking the flip, and `ModelStatsReq` splitting counters
+/// by model id.
+#[test]
+fn wire_serves_two_models_and_rolls_out_live() {
+    let (server, reg, alpha, beta) = two_model_server();
+    let wire = Arc::new(
+        WireServer::bind(("127.0.0.1", 0), server.client(), server.live_handles())
+            .expect("bind ephemeral loopback port")
+            .with_models(reg.names())
+            .with_model_stats(server.model_stats_handles()),
+    );
+    let addr = wire.local_addr().unwrap();
+    let acceptor = {
+        let wire = Arc::clone(&wire);
+        std::thread::spawn(move || wire.serve())
+    };
+
+    let client = Arc::new(RemoteClient::connect(addr).expect("connect loopback"));
+    // the Hello carried the registry names and the residency map
+    assert_eq!(client.model_id("alpha"), Some(alpha));
+    assert_eq!(client.model_id("beta"), Some(beta));
+    assert_eq!(client.model_id("gamma"), None);
+    assert_eq!(client.board().resident_model(0), Some(alpha));
+    assert_eq!(client.board().resident_model(2), Some(beta));
+
+    // both models serve concurrently over one connection
+    let retried = Arc::new(AtomicUsize::new(0));
+    for _ in 0..4 {
+        serve_one(client.as_ref(), alpha, &retried).unwrap();
+        serve_one(client.as_ref(), beta, &retried).unwrap();
+    }
+    // edge placement fails typed on a model nobody holds — before any
+    // bytes hit the wire
+    match client.submit(
+        Job::MacBatch { xs: vec![vec![1; c::N_ROWS]], tile: None, model: Some(9) },
+        SubmitOpts::for_model(9, None),
+    ) {
+        Err(ServeError::ModelNotResident { model: 9 }) => {}
+        other => panic!("expected ModelNotResident, got {other:?}"),
+    }
+
+    // live rollout under remote traffic: zero dropped requests
+    let stop = Arc::new(AtomicBool::new(false));
+    let producer = {
+        let client = Arc::clone(&client);
+        let stop = Arc::clone(&stop);
+        let retried = Arc::clone(&retried);
+        std::thread::spawn(move || {
+            let mut served = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                serve_one(client.as_ref(), alpha, &retried).unwrap_or_else(|e| {
+                    panic!("remote alpha request dropped mid-rollout: {e:?}")
+                });
+                served += 1;
+            }
+            served
+        })
+    };
+    std::thread::sleep(std::time::Duration::from_millis(20));
+    let health = client.rollout(1, beta, reg.weights(beta).unwrap().to_vec()).unwrap();
+    assert_eq!(health.model, Some(beta));
+    stop.store(true, Ordering::Relaxed);
+    let served = producer.join().expect("producer panicked (a request was dropped)");
+    assert!(served > 0, "remote producer never served a request");
+
+    // the mirror board tracked the flip from the rollout's Health reply
+    assert_eq!(client.board().resident_model(1), Some(beta));
+    assert!(!client.board().is_fenced(1), "mirror must unfence core 1 after rollout");
+
+    // per-model counters arrive split by id over the wire
+    let stats = client.remote_model_stats().expect("ModelStats round-trip");
+    assert!(requests_for(&stats, alpha) > 0, "no alpha requests counted: {stats:?}");
+    assert!(requests_for(&stats, beta) > 0, "no beta requests counted: {stats:?}");
+
+    drop(client);
+    wire.request_shutdown();
+    acceptor.join().unwrap();
+    drop(wire);
+    server.join();
+}

@@ -8,6 +8,7 @@ use acore_cim::config::SimConfig;
 use acore_cim::coordinator::batcher::Batcher;
 use acore_cim::coordinator::bisc::{AdcCharacterization, BiscEngine};
 use acore_cim::coordinator::cluster::{core_seed, CimCluster, ServiceConfig};
+use acore_cim::coordinator::registry::deploy_uniform;
 use acore_cim::coordinator::service::{gather, CimService, Job, SubmitOpts, Ticket};
 
 fn ideal_cfg() -> SimConfig {
@@ -19,7 +20,7 @@ fn ideal_cfg() -> SimConfig {
 #[test]
 fn least_loaded_placement_follows_the_depth_gauges() {
     let mut cluster = CimCluster::new(&ideal_cfg(), 2);
-    cluster.program_all(&vec![40; c::N_ROWS * c::M_COLS]);
+    deploy_uniform(&mut cluster, "demo", vec![40; c::N_ROWS * c::M_COLS]).unwrap();
     let server = cluster.serve(Batcher::default());
     let client = server.client();
     // pile pinned work onto core 0 without waiting for any reply: four
@@ -29,7 +30,7 @@ fn least_loaded_placement_follows_the_depth_gauges() {
         .map(|_| {
             let xs: Vec<Vec<i32>> = (0..256).map(|_| vec![10; c::N_ROWS]).collect();
             client
-                .submit(Job::MacBatch { xs, tile: None }, SubmitOpts::pinned(0))
+                .submit(Job::MacBatch { xs, tile: None, model: None }, SubmitOpts::pinned(0))
                 .unwrap()
                 .typed()
         })
@@ -69,7 +70,7 @@ fn out_of_band_core_is_fenced_then_rejoins_after_drain() {
     let mut cfg = SimConfig::default();
     cfg.sigma_noise = 0.0;
     let mut cluster = CimCluster::new(&cfg, 2);
-    cluster.program_all(&vec![40; c::N_ROWS * c::M_COLS]);
+    deploy_uniform(&mut cluster, "demo", vec![40; c::N_ROWS * c::M_COLS]).unwrap();
     let engine = BiscEngine::from_config(&cfg, AdcCharacterization::ideal());
 
     // pre-measure the residuals on a twin of core 1 (same seed, same
@@ -148,7 +149,7 @@ fn out_of_band_core_is_fenced_then_rejoins_after_drain() {
 #[test]
 fn drain_without_engine_reports_without_recalibrating() {
     let mut cluster = CimCluster::new(&ideal_cfg(), 2);
-    cluster.program_all(&vec![40; c::N_ROWS * c::M_COLS]);
+    deploy_uniform(&mut cluster, "demo", vec![40; c::N_ROWS * c::M_COLS]).unwrap();
     // default serve(): no engine, lifecycle jobs degrade to state reports
     let server = cluster.serve(Batcher::default());
     let client = server.client();

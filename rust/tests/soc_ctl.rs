@@ -12,6 +12,7 @@ use acore_cim::coordinator::batcher::Batcher;
 use acore_cim::coordinator::bisc::{AdcCharacterization, BiscEngine};
 use acore_cim::coordinator::calibrator::{CalibratorConfig, CalibratorPolicy, DrainReason};
 use acore_cim::coordinator::cluster::{CimCluster, ServiceConfig};
+use acore_cim::coordinator::registry::deploy_uniform;
 use acore_cim::coordinator::service::CimService;
 use acore_cim::soc::ctl::{FirmwareCalibrator, SupervisorCore};
 use acore_cim::util::proptest::forall;
@@ -168,7 +169,7 @@ fn firmware_calibrator_autonomously_recalibrates_drifting_cores() {
     let mut cluster = CimCluster::new(&cfg, 2);
     let engine = BiscEngine::from_config(&cfg, AdcCharacterization::ideal());
     cluster.calibrate_parallel(&engine);
-    cluster.program_all(&vec![40; c::N_ROWS * c::M_COLS]);
+    deploy_uniform(&mut cluster, "demo", vec![40; c::N_ROWS * c::M_COLS]).unwrap();
     // wide health band so any drain is the firmware's own decision, not
     // the passive fence beating it to the punch
     let server = cluster.serve_with(ServiceConfig {

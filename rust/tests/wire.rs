@@ -7,10 +7,11 @@
 
 use acore_cim::analog::{consts as c, CimAnalogModel};
 use acore_cim::config::SimConfig;
-use acore_cim::coordinator::batcher::{Batcher, BatcherStats, ServeError};
+use acore_cim::coordinator::batcher::{Batcher, BatcherStats, ModelStats, ServeError};
 use acore_cim::coordinator::bisc::{AdcCharacterization, BiscEngine};
 use acore_cim::coordinator::calibrator::CoreCalStats;
 use acore_cim::coordinator::cluster::{core_seed, CimCluster, ServiceConfig};
+use acore_cim::coordinator::registry::deploy_uniform;
 use acore_cim::coordinator::service::{
     gather, CimService, CoreHealth, Job, JobReply, Placement, SubmitOpts, Ticket, TileRef,
 };
@@ -33,8 +34,16 @@ fn rand_vec_u32(rng: &mut Rng, max_len: i64) -> Vec<u32> {
     (0..rng.int_in(0, max_len)).map(|_| rng.next_u64() as u32).collect()
 }
 
+fn rand_model(rng: &mut Rng) -> Option<u32> {
+    if rng.int_in(0, 1) == 1 {
+        Some(rng.int_in(0, 9000) as u32)
+    } else {
+        None
+    }
+}
+
 fn rand_job(rng: &mut Rng) -> Job {
-    match rng.int_in(0, 3) {
+    match rng.int_in(0, 4) {
         0 => Job::Mac(rand_vec_i32(rng, 40)),
         1 => {
             let n = rng.int_in(0, 6);
@@ -48,18 +57,34 @@ fn rand_job(rng: &mut Rng) -> Job {
             } else {
                 None
             };
-            Job::MacBatch { xs, tile }
+            Job::MacBatch { xs, tile, model: rand_model(rng) }
         }
         2 => Job::Drain,
+        3 => Job::Rollout {
+            model: rng.int_in(0, 9000) as u32,
+            weights: rand_vec_i32(rng, 24),
+        },
         _ => Job::Health,
     }
 }
 
 fn rand_opts(rng: &mut Rng) -> SubmitOpts {
-    let placement = match rng.int_in(0, 2) {
+    let placement = match rng.int_in(0, 3) {
         0 => Placement::RoundRobin,
         1 => Placement::LeastLoaded,
-        _ => Placement::Pinned(rng.int_in(0, 15) as usize),
+        2 => Placement::Pinned(rng.int_in(0, 15) as usize),
+        _ => Placement::Model {
+            model: rng.int_in(0, 9000) as u32,
+            tile: if rng.int_in(0, 1) == 1 {
+                Some(TileRef {
+                    layer: rng.int_in(0, 3) as usize,
+                    tr: rng.int_in(0, 7) as usize,
+                    tc: rng.int_in(0, 7) as usize,
+                })
+            } else {
+                None
+            },
+        },
     };
     SubmitOpts {
         priority: rng.int_in(0, 255) as u8,
@@ -73,7 +98,7 @@ fn rand_opts(rng: &mut Rng) -> SubmitOpts {
 }
 
 fn rand_serve_error(rng: &mut Rng) -> ServeError {
-    match rng.int_in(0, 4) {
+    match rng.int_in(0, 6) {
         0 => ServeError::BadRequest {
             expected: rng.int_in(0, 1024) as usize,
             got: rng.int_in(0, 1024) as usize,
@@ -81,6 +106,11 @@ fn rand_serve_error(rng: &mut Rng) -> ServeError {
         1 => ServeError::Backend(format!("backend error #{} — ünïcode", rng.int_in(0, 999))),
         2 => ServeError::Disconnected,
         3 => ServeError::DeadlineExceeded,
+        4 => ServeError::ModelNotResident { model: rng.int_in(0, 9000) as u32 },
+        5 => ServeError::WrongModel {
+            requested: rng.int_in(0, 9000) as u32,
+            resident: rand_model(rng),
+        },
         _ => ServeError::NoHealthyCore,
     }
 }
@@ -98,6 +128,7 @@ fn rand_reply(rng: &mut Rng) -> JobReply {
             fenced: rng.int_in(0, 1) == 1,
             recalibrated: rng.int_in(0, 1) == 1,
             recal_epoch: rng.next_u64(),
+            model: rand_model(rng),
         }),
     }
 }
@@ -122,12 +153,47 @@ fn rand_calstats(rng: &mut Rng) -> CoreCalStats {
         drains: rng.next_u64(),
         drain_failures: rng.next_u64(),
         fenced: rng.int_in(0, 1) == 1,
+        model: rand_model(rng),
     }
 }
 
+fn rand_modelstats(rng: &mut Rng) -> ModelStats {
+    ModelStats {
+        model: rng.int_in(0, 9000) as u32,
+        requests: rng.next_u64(),
+        rejected: rng.next_u64(),
+        expired: rng.next_u64(),
+        recals: rng.next_u64(),
+    }
+}
+
+fn rand_hello(rng: &mut Rng) -> Frame {
+    let cores = rng.int_in(1, 8) as u32;
+    let models = (0..rng.int_in(0, 4))
+        .map(|i| format!("model-{i}"))
+        .collect();
+    let residency = (0..cores as usize)
+        .map(|_| {
+            if rng.int_in(0, 1) == 1 {
+                let tiles = (0..rng.int_in(0, 4))
+                    .map(|_| TileRef {
+                        layer: rng.int_in(0, 3) as usize,
+                        tr: rng.int_in(0, 7) as usize,
+                        tc: rng.int_in(0, 7) as usize,
+                    })
+                    .collect();
+                Some((rng.int_in(0, 9000) as u32, tiles))
+            } else {
+                None
+            }
+        })
+        .collect();
+    Frame::Hello { cores, models, residency }
+}
+
 fn rand_frame(rng: &mut Rng) -> Frame {
-    match rng.int_in(0, 6) {
-        0 => Frame::Hello { cores: rng.int_in(1, 64) as u32 },
+    match rng.int_in(0, 8) {
+        0 => rand_hello(rng),
         1 => Frame::Submit { id: rng.next_u64(), job: rand_job(rng), opts: rand_opts(rng) },
         2 => {
             let result = if rng.int_in(0, 1) == 1 {
@@ -146,11 +212,19 @@ fn rand_frame(rng: &mut Rng) -> Frame {
             }
         }
         5 => Frame::CalStatsReq { id: rng.next_u64() },
-        _ => {
+        6 => {
             let n = rng.int_in(0, 8);
             Frame::CalStatsReply {
                 id: rng.next_u64(),
                 stats: (0..n).map(|_| rand_calstats(rng)).collect(),
+            }
+        }
+        7 => Frame::ModelStatsReq { id: rng.next_u64() },
+        _ => {
+            let n = rng.int_in(0, 8);
+            Frame::ModelStatsReply {
+                id: rng.next_u64(),
+                stats: (0..n).map(|_| rand_modelstats(rng)).collect(),
             }
         }
     }
@@ -181,7 +255,7 @@ fn back_to_back_frames_decode_in_order() {
     // a stream is frames laid end to end; each decode must consume
     // exactly one frame
     let frames = vec![
-        Frame::Hello { cores: 3 },
+        Frame::Hello { cores: 3, models: vec!["demo".to_string()], residency: vec![None; 3] },
         Frame::Submit { id: 1, job: Job::Mac(vec![1, 2, 3]), opts: SubmitOpts::default() },
         Frame::Reply { id: 1, core: 0, result: Ok(JobReply::Mac(vec![9, 8])) },
         Frame::StatsReq { id: 2 },
@@ -203,7 +277,7 @@ fn back_to_back_frames_decode_in_order() {
 fn truncated_frames_error_at_every_cut_point() {
     let frame = encode_frame(&Frame::Submit {
         id: 42,
-        job: Job::MacBatch { xs: vec![vec![1, 2], vec![3, 4]], tile: None },
+        job: Job::MacBatch { xs: vec![vec![1, 2], vec![3, 4]], tile: None, model: None },
         opts: SubmitOpts::default().with_deadline(Duration::from_millis(5)),
     });
     for cut in 1..frame.len() {
@@ -291,7 +365,9 @@ fn spawn_wire(
 ) -> (Arc<WireServer>, std::net::SocketAddr, std::thread::JoinHandle<()>) {
     let wire = Arc::new(
         WireServer::bind(("127.0.0.1", 0), server.client(), server.live_handles())
-            .expect("bind ephemeral loopback port"),
+            .expect("bind ephemeral loopback port")
+            .with_models(vec!["demo".to_string()])
+            .with_model_stats(server.model_stats_handles()),
     );
     let addr = wire.local_addr().expect("bound listener has an address");
     let acceptor = {
@@ -305,7 +381,7 @@ fn spawn_wire(
 fn loopback_round_trip_through_the_cim_service_trait() {
     let cfg = ideal_cfg();
     let mut cluster = CimCluster::new(&cfg, 2);
-    cluster.program_all(&vec![40; c::N_ROWS * c::M_COLS]);
+    deploy_uniform(&mut cluster, "demo", vec![40; c::N_ROWS * c::M_COLS]).unwrap();
     let server = cluster.serve(Batcher::default());
     let (wire, addr, acceptor) = spawn_wire(&server);
     let client = RemoteClient::connect(addr).expect("connect loopback");
@@ -328,7 +404,7 @@ fn loopback_round_trip_through_the_cim_service_trait() {
         .map(|_| {
             let xs: Vec<Vec<i32>> = (0..8).map(|_| x.clone()).collect();
             client
-                .submit(Job::MacBatch { xs, tile: None }, SubmitOpts::least_loaded())
+                .submit(Job::MacBatch { xs, tile: None, model: None }, SubmitOpts::least_loaded())
                 .unwrap()
                 .typed()
         })
@@ -403,7 +479,7 @@ fn remote_drain_recalibrates_and_post_drain_health_is_in_band() {
     let mut cfg = SimConfig::default();
     cfg.sigma_noise = 0.0;
     let mut cluster = CimCluster::new(&cfg, 2);
-    cluster.program_all(&vec![40; c::N_ROWS * c::M_COLS]);
+    deploy_uniform(&mut cluster, "demo", vec![40; c::N_ROWS * c::M_COLS]).unwrap();
     let engine = BiscEngine::from_config(&cfg, AdcCharacterization::ideal());
     let mut cfg1 = cfg.clone();
     cfg1.seed = core_seed(cfg.seed, 1);
@@ -480,7 +556,7 @@ fn remote_mirror_syncs_epochs_from_drains_it_never_requested() {
     let mut cfg = SimConfig::default();
     cfg.sigma_noise = 0.0;
     let mut cluster = CimCluster::new(&cfg, 2);
-    cluster.program_all(&vec![40; c::N_ROWS * c::M_COLS]);
+    deploy_uniform(&mut cluster, "demo", vec![40; c::N_ROWS * c::M_COLS]).unwrap();
     let engine = BiscEngine::from_config(&cfg, AdcCharacterization::ideal());
     let server = cluster.serve_with(ServiceConfig {
         batcher: Batcher::default(),
@@ -525,7 +601,7 @@ fn calstats_over_the_wire_report_the_daemon() {
 
     let cfg = ideal_cfg();
     let mut cluster = CimCluster::new(&cfg, 2);
-    cluster.program_all(&vec![40; c::N_ROWS * c::M_COLS]);
+    deploy_uniform(&mut cluster, "demo", vec![40; c::N_ROWS * c::M_COLS]).unwrap();
     let engine = BiscEngine::from_config(&cfg, AdcCharacterization::ideal());
     let server = cluster.serve_with(ServiceConfig {
         batcher: Batcher::default(),
@@ -582,7 +658,7 @@ fn calstats_over_the_wire_report_the_daemon() {
 fn pinned_core_out_of_range_is_a_wire_error_not_a_crash() {
     let cfg = ideal_cfg();
     let mut cluster = CimCluster::new(&cfg, 1);
-    cluster.program_all(&vec![40; c::N_ROWS * c::M_COLS]);
+    deploy_uniform(&mut cluster, "demo", vec![40; c::N_ROWS * c::M_COLS]).unwrap();
     let server = cluster.serve(Batcher::default());
     let (wire, addr, acceptor) = spawn_wire(&server);
     let client = RemoteClient::connect(addr).expect("connect loopback");
@@ -594,7 +670,14 @@ fn pinned_core_out_of_range_is_a_wire_error_not_a_crash() {
     use std::net::TcpStream;
     let mut raw = TcpStream::connect(addr).unwrap();
     let hello = read_frame(&mut raw).unwrap();
-    assert_eq!(hello, Frame::Hello { cores: 1 });
+    match hello {
+        Frame::Hello { cores, ref models, ref residency } => {
+            assert_eq!(cores, 1);
+            assert_eq!(models.as_slice(), ["demo".to_string()]);
+            assert_eq!(residency.len(), 1);
+        }
+        ref other => panic!("expected a Hello frame, got {other:?}"),
+    }
     write_frame(
         &mut raw,
         &Frame::Submit {
