@@ -154,6 +154,53 @@ fn wire_throughput(
     total as f64 / dt
 }
 
+/// Aggregate throughput with `conns` CONCURRENT connections, each its
+/// own socket + pipelined Mac stream — the scaling axis the event-driven
+/// front-end exists for (one poller thread owns every socket; the old
+/// design spent two OS threads per connection). Connects happen inside
+/// the producer threads, so the accept storm is part of the measured
+/// span.
+fn wire_concurrency_throughput(cfg: &SimConfig, k: usize, conns: usize, per_conn: usize) -> f64 {
+    use acore_cim::coordinator::batcher::Batcher;
+    use acore_cim::coordinator::service::{CimService, SubmitOpts};
+    use acore_cim::coordinator::wire::{RemoteClient, WireServer};
+    use std::sync::Arc;
+    let mut cluster = CimCluster::new(cfg, k);
+    deploy_uniform(&mut cluster, "demo", vec![40; c::N_ROWS * c::M_COLS]).unwrap();
+    let server = cluster.serve(Batcher::default());
+    let wire = Arc::new(
+        WireServer::bind(("127.0.0.1", 0), server.client(), server.live_handles())
+            .expect("bind ephemeral loopback port"),
+    );
+    let addr = wire.local_addr().expect("bound listener has an address");
+    let acceptor = {
+        let wire = Arc::clone(&wire);
+        std::thread::spawn(move || wire.serve())
+    };
+    let t0 = std::time::Instant::now();
+    let mut joins = Vec::new();
+    for p in 0..conns {
+        joins.push(std::thread::spawn(move || {
+            let client = RemoteClient::connect(addr).expect("connect loopback");
+            let make = |i: usize| vec![((p + i) % 63) as i32 - 31; c::N_ROWS];
+            client
+                .mac_pipelined_with(per_conn, 64, SubmitOpts::default(), make)
+                .expect("wire serving failed");
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    wire.request_shutdown();
+    acceptor.join().unwrap();
+    drop(wire);
+    let (_cluster, stats) = server.join();
+    let total: u64 = stats.iter().map(|s| s.requests).sum();
+    assert_eq!(total as usize, conns * per_conn, "lost requests across connections");
+    total as f64 / dt
+}
+
 /// PJRT artifact throughput (only with `--features pjrt` + artifacts).
 #[cfg(feature = "pjrt")]
 fn pjrt_bench(
@@ -412,6 +459,20 @@ fn main() {
             b.note_rate(&format!("wire K={k} {} loopback-tcp req/s", label.trim()), tcp);
         }
     }
+
+    println!("\n== wire front-end: concurrent-connection scaling ==");
+    // the event-loop axis: many sockets, few requests each — the cost
+    // here is readiness dispatch + per-connection buffers, not framing
+    // (EXPERIMENTS.md §Perf documents the methodology)
+    let conns = 256;
+    let per_conn = if fast { 40 } else { 160 };
+    let rps = wire_concurrency_throughput(&cfg, 4, conns, per_conn);
+    println!(
+        "C = {conns} concurrent connections on K = 4: {rps:>10.0} req/s aggregate \
+         ({} requests per connection, accept storm included)",
+        per_conn
+    );
+    b.note_rate(&format!("wire C={conns} concurrent connections aggregate req/s"), rps);
 
     // CI bench artifact (no-op unless ACORE_BENCH_JSON_DIR is set)
     b.export_json("perf_hotpath");

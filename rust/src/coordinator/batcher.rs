@@ -62,6 +62,12 @@ pub enum ServeError {
     /// on — a placement decision raced by a concurrent rollout, caught
     /// at execution time instead of computing against the wrong weights.
     WrongModel { requested: u32, resident: Option<u32> },
+    /// The front-end refused the job at admission: either this
+    /// connection's in-flight ceiling or the cluster-wide shedding
+    /// threshold was exceeded. Retry after in-flight work drains —
+    /// queuing past the ceiling would only convert the overload into
+    /// [`ServeError::DeadlineExceeded`] later.
+    Overloaded { in_flight: usize, limit: usize },
 }
 
 impl std::fmt::Display for ServeError {
@@ -91,6 +97,10 @@ impl std::fmt::Display for ServeError {
                     "job for model {requested} landed on a core with no model resident"
                 ),
             },
+            ServeError::Overloaded { in_flight, limit } => write!(
+                f,
+                "overloaded: {in_flight} jobs in flight against a limit of {limit}; retry later"
+            ),
         }
     }
 }

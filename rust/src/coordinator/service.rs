@@ -262,6 +262,39 @@ pub struct RoutedReply {
     pub result: Result<JobReply, ServeError>,
 }
 
+/// The routed-reply sender a wire connection hands to workers: the
+/// fan-in channel plus an optional poller wakeup. Workers finishing a
+/// job send the reply and then nudge the event loop (which sleeps in
+/// `poll(2)` and cannot watch an mpsc channel) so the reply flushes to
+/// the socket promptly instead of on the next poll timeout.
+#[derive(Clone)]
+pub struct RoutedTx {
+    tx: Sender<RoutedReply>,
+    waker: Option<crate::util::wake::WakeHandle>,
+}
+
+impl RoutedTx {
+    /// A sender with no waker — for callers that drain the receiver from
+    /// a dedicated thread (blocking `recv`) rather than an event loop.
+    pub fn new(tx: Sender<RoutedReply>) -> Self {
+        Self { tx, waker: None }
+    }
+
+    /// A sender that nudges `waker` after every delivery.
+    pub fn with_waker(tx: Sender<RoutedReply>, waker: crate::util::wake::WakeHandle) -> Self {
+        Self { tx, waker: Some(waker) }
+    }
+
+    /// Deliver one routed reply. A receiver that has gone away is not an
+    /// error for the worker — the job was already executed either way.
+    pub fn send(&self, reply: RoutedReply) {
+        let _ = self.tx.send(reply);
+        if let Some(w) = &self.waker {
+            w.wake();
+        }
+    }
+}
+
 /// Where a worker delivers one job's reply. `Channel` is the in-process
 /// form ([`Ticket`] holds the other end); `Routed` fans many jobs into
 /// one shared channel with request-id correlation, so a wire connection
@@ -271,7 +304,7 @@ pub enum ReplySink {
     Routed {
         id: u64,
         core: usize,
-        tx: Sender<RoutedReply>,
+        tx: RoutedTx,
     },
 }
 
@@ -284,7 +317,7 @@ impl ReplySink {
                 let _ = tx.send(result);
             }
             ReplySink::Routed { id, core, tx } => {
-                let _ = tx.send(RoutedReply { id, core, result });
+                tx.send(RoutedReply { id, core, result });
             }
         }
     }
@@ -666,7 +699,7 @@ pub fn submit_routed_to(
     job: Job,
     opts: SubmitOpts,
     id: u64,
-    tx: &Sender<RoutedReply>,
+    tx: &RoutedTx,
 ) -> Result<usize, ServeError> {
     let core = place(board, rr, opts.placement)?;
     dispatch(txs, board, core, job, opts, ReplySink::Routed { id, core, tx: tx.clone() })?;
@@ -723,7 +756,7 @@ impl ServiceClient {
         job: Job,
         opts: SubmitOpts,
         id: u64,
-        tx: &Sender<RoutedReply>,
+        tx: &RoutedTx,
     ) -> Result<usize, ServeError> {
         submit_routed_to(&self.txs, &self.board, &self.rr, job, opts, id, tx)
     }

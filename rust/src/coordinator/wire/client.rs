@@ -16,8 +16,16 @@
 //! epoch rides in every such reply as the SERVER-observed value, so even
 //! drains this client never requested — another client's, or the
 //! calibrator daemon's autonomous ones — catch the mirror up on the
-//! next local lifecycle probe (send `health` first when freshness
-//! matters).
+//! next local lifecycle probe. Connections that [`RemoteClient::subscribe`]
+//! get the server-pushed control plane (wire v4): fence, epoch,
+//! residency, and calibrator deltas stream in without any local probe.
+//!
+//! Flow control (wire v4): the handshake grants a credit window — the
+//! maximum number of unanswered `Submit`s — and `Credit` frames return
+//! slots as replies flush. `submit` BLOCKS while the window is empty,
+//! so a client can never bury a slow server (or be buried by its own
+//! replies); control requests (`stats`/`calstats`/`modelstats`) ride
+//! outside the window.
 #![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 
 use crate::coordinator::batcher::{BatcherStats, ModelStats, ServeError};
@@ -34,7 +42,7 @@ use std::io::{self, Write};
 use std::net::{Shutdown, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// One in-flight job: where its reply goes and what the mirror gauges
 /// reserved for it.
@@ -63,7 +71,41 @@ struct Shared {
     /// placed, letting placed jobs pile up behind the server-side
     /// barrier.
     drains: Vec<AtomicUsize>,
+    /// Submit-window slots currently available (wire v4 flow control):
+    /// seeded by the `Hello` window, spent one per `Submit`, refilled by
+    /// `Credit` grants. `submit` blocks on the condvar while empty.
+    credits: Mutex<u64>,
+    credit_cv: Condvar,
+    /// Last `CalStatsPush` snapshot (subscribed connections only).
+    pushed_cal: Mutex<Vec<CoreCalStats>>,
     alive: AtomicBool,
+}
+
+impl Shared {
+    /// Take one submit-window slot, blocking while the window is empty.
+    /// Returns `false` if the connection died first (or was already
+    /// dead) — the waiters are woken by `Credit` grants and by the
+    /// reader's exit sweep.
+    fn acquire_credit(&self) -> bool {
+        let mut avail = lock_unpoisoned(&self.credits);
+        while *avail == 0 {
+            if !self.alive.load(Ordering::SeqCst) {
+                return false;
+            }
+            avail = match self.credit_cv.wait(avail) {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+        }
+        *avail -= 1;
+        true
+    }
+
+    /// Return one slot (a submit that failed before reaching the wire).
+    fn refund_credit(&self) {
+        *lock_unpoisoned(&self.credits) += 1;
+        self.credit_cv.notify_one();
+    }
 }
 
 /// Remove one pending entry under its map lock. A separate function so
@@ -94,6 +136,8 @@ struct Inner {
 
 impl Drop for Inner {
     fn drop(&mut self) {
+        // teardown: shutdown unblocks the reader (already-closed is
+        // fine), and a reader that panicked has nothing left to clean up
         let _ = self.stream.shutdown(Shutdown::Both);
         if let Some(h) = lock_unpoisoned(&self.reader).take() {
             let _ = h.join();
@@ -124,9 +168,11 @@ impl RemoteClient {
     pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<Self> {
         let mut stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
-        let (cores, models, residency) = match read_frame(&mut stream) {
-            Ok(Frame::Hello { cores, models, residency }) if cores > 0 => {
-                (cores as usize, models, residency)
+        let (cores, window, models, residency) = match read_frame(&mut stream) {
+            Ok(Frame::Hello { cores, window, models, residency }) if cores > 0 => {
+                // a zero window would deadlock every submit forever; treat
+                // a lying server as granting the minimum useful window
+                (cores as usize, u64::from(window.max(1)), models, residency)
             }
             Ok(_) | Err(_) => {
                 return Err(io::Error::new(
@@ -151,6 +197,9 @@ impl RemoteClient {
             pending_cal: Mutex::new(HashMap::new()),
             pending_model: Mutex::new(HashMap::new()),
             drains: (0..cores).map(|_| AtomicUsize::new(0)).collect(),
+            credits: Mutex::new(window),
+            credit_cv: Condvar::new(),
+            pushed_cal: Mutex::new(Vec::new()),
             alive: AtomicBool::new(true),
         });
         let write = stream.try_clone()?;
@@ -232,6 +281,36 @@ impl RemoteClient {
         self.inner.shared.models.iter().position(|m| m == name).map(|i| i as u32)
     }
 
+    /// Opt into the server-pushed control plane: after this, the server
+    /// streams fence flips, recalibration epochs, residency changes, and
+    /// calibrator snapshots as they happen — the board mirror stays
+    /// current WITHOUT submitting anything. The subscription opens with
+    /// an initial sync (current epochs, fences, calibrator state), so an
+    /// idle observer starts from truth, not from silence.
+    pub fn subscribe(&self) -> Result<(), ServeError> {
+        let sh = &self.inner.shared;
+        if !sh.alive.load(Ordering::SeqCst) {
+            return Err(ServeError::Disconnected);
+        }
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let sent = {
+            let mut guard = lock_unpoisoned(&self.inner.write);
+            let w = &mut *guard;
+            // lint: allow(lock_across_io) — the write mutex serializes whole-frame writes; holding it across the write is its purpose
+            write_frame_buf(&mut w.stream, &Frame::Subscribe { id }, &mut w.buf).is_ok()
+        };
+        if !sent {
+            return Err(ServeError::Disconnected);
+        }
+        Ok(())
+    }
+
+    /// The latest server-pushed calibrator snapshot (empty until a
+    /// [`RemoteClient::subscribe`]d connection has received one).
+    pub fn pushed_calibrator_stats(&self) -> Vec<CoreCalStats> {
+        lock_unpoisoned(&self.inner.shared.pushed_cal).clone()
+    }
+
     /// Fetch the server's cluster-merged per-model [`ModelStats`]. An
     /// empty vec means the server serves no model counters (or none have
     /// been touched yet).
@@ -270,6 +349,13 @@ impl CimService for RemoteClient {
             return Err(ServeError::Disconnected);
         }
         let core = place(&sh.board, &self.inner.rr, opts.placement)?;
+        // one window slot per submit — blocks while the window is empty,
+        // so this client can never run further ahead of the server than
+        // the handshake's credit grant (the slot comes back as a `Credit`
+        // frame once the reply has been queued)
+        if !sh.acquire_credit() {
+            return Err(ServeError::Disconnected);
+        }
         let weight = job.weight();
         let is_barrier = matches!(job, Job::Drain | Job::Rollout { .. });
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
@@ -326,6 +412,9 @@ impl CimService for RemoteClient {
                     }
                 }
             }
+            // the frame never reached the wire, so the server will never
+            // grant this slot back — return it locally
+            sh.refund_credit();
             return Err(ServeError::Backend(format!(
                 "job encodes to {body_len} body bytes, over the {MAX_BODY}-byte frame cap — \
                  split the batch"
@@ -420,6 +509,36 @@ fn reader_loop(mut stream: TcpStream, sh: Arc<Shared>) {
                     let _ = tx.send(stats);
                 }
             }
+            Ok(Frame::Credit { grant }) => {
+                // flow-control slots coming back: wake blocked submitters
+                let mut avail = lock_unpoisoned(&sh.credits);
+                *avail = avail.saturating_add(u64::from(grant));
+                drop(avail);
+                sh.credit_cv.notify_all();
+            }
+            Ok(Frame::FencePush { core, fenced }) => {
+                let core = core as usize;
+                if fenced {
+                    sh.board.fence(core);
+                } else if sh.drains.get(core).is_none_or(|d| d.load(Ordering::SeqCst) == 0) {
+                    // same staleness rule as Health replies: while one of
+                    // OUR barriers is in flight, a pushed unfence is
+                    // ordered before it server-side — keep our fence
+                    sh.board.unfence(core);
+                }
+            }
+            Ok(Frame::RecalEpochPush { core, epoch }) => {
+                // fetch_max inside: a pushed epoch can never move the
+                // mirror backwards past a fresher Health reply
+                sh.board.set_recal_epoch(core as usize, epoch);
+            }
+            Ok(Frame::ResidencyPush { core, residency }) => match residency {
+                Some((model, tiles)) => sh.board.set_residency(core as usize, model, tiles),
+                None => sh.board.clear_residency(core as usize),
+            },
+            Ok(Frame::CalStatsPush { stats }) => {
+                *lock_unpoisoned(&sh.pushed_cal) = stats;
+            }
             // the server must not send anything else after Hello
             Ok(_) => break,
             Err(_) => break,
@@ -434,4 +553,7 @@ fn reader_loop(mut stream: TcpStream, sh: Arc<Shared>) {
     lock_unpoisoned(&sh.pending_stats).clear();
     lock_unpoisoned(&sh.pending_cal).clear();
     lock_unpoisoned(&sh.pending_model).clear();
+    // submitters parked on an empty credit window must observe the death,
+    // not wait for a grant that will never come
+    sh.credit_cv.notify_all();
 }

@@ -34,8 +34,14 @@ pub const WIRE_MAGIC: u16 = 0xAC1E;
 /// server-observed recalibration epoch + the `CalStats` frame pair;
 /// 3 = multi-model serving — `Hello` ships model names + per-core
 /// residency, jobs/placements/health/calstats carry model ids, the
-/// `Rollout` job kind and the `ModelStats` frame pair exist.
-pub const WIRE_VERSION: u8 = 3;
+/// `Rollout` job kind and the `ModelStats` frame pair exist;
+/// 4 = event-driven front-end — `Hello` carries the initial credit
+/// window, `Credit` grants replace the write timeout (wire-level flow
+/// control), `Subscribe` + the `FencePush`/`RecalEpochPush`/
+/// `ResidencyPush`/`CalStatsPush` server-initiated frames push control-
+/// plane deltas, and `ServeError::Overloaded` is the typed admission-
+/// control answer.
+pub const WIRE_VERSION: u8 = 4;
 /// Frame body cap: a length prefix beyond this is rejected before any
 /// allocation ([`WireError::Oversized`]).
 pub const MAX_BODY: u32 = 1 << 26;
@@ -51,6 +57,12 @@ const TAG_CALSTATS_REQ: u8 = 6;
 const TAG_CALSTATS_REPLY: u8 = 7;
 const TAG_MODELSTATS_REQ: u8 = 8;
 const TAG_MODELSTATS_REPLY: u8 = 9;
+const TAG_SUBSCRIBE: u8 = 10;
+const TAG_CREDIT: u8 = 11;
+const TAG_FENCE_PUSH: u8 = 12;
+const TAG_RECAL_EPOCH_PUSH: u8 = 13;
+const TAG_RESIDENCY_PUSH: u8 = 14;
+const TAG_CALSTATS_PUSH: u8 = 15;
 
 /// Decode-side failures. `Closed` is the one non-error: a connection that
 /// ends exactly on a frame boundary.
@@ -97,20 +109,32 @@ impl std::fmt::Display for WireError {
 impl std::error::Error for WireError {}
 
 /// One decoded protocol frame. `Hello` opens every connection (server →
-/// client) with the core count, the registry's model names (index ==
-/// model id) and every core's current residency, so a remote client can
-/// resolve `Placement::Model` at the edge; `Submit` carries a job +
-/// options under a client-chosen request id; `Reply` echoes that id with
-/// the serving core and the job's result; `StatsReq`/`StatsReply` fetch
-/// the per-core live [`BatcherStats`] snapshots; `CalStatsReq`/
-/// `CalStatsReply` fetch the calibrator daemon's per-core
-/// [`CoreCalStats`] (empty when the server runs without
-/// `--auto-calibrate`); `ModelStatsReq`/`ModelStatsReply` fetch the
-/// cluster-merged per-model [`ModelStats`].
+/// client) with the core count, the initial credit window, the
+/// registry's model names (index == model id) and every core's current
+/// residency, so a remote client can resolve `Placement::Model` at the
+/// edge; `Submit` carries a job + options under a client-chosen request
+/// id; `Reply` echoes that id with the serving core and the job's
+/// result; `StatsReq`/`StatsReply` fetch the per-core live
+/// [`BatcherStats`] snapshots; `CalStatsReq`/`CalStatsReply` fetch the
+/// calibrator daemon's per-core [`CoreCalStats`] (empty when the server
+/// runs without `--auto-calibrate`); `ModelStatsReq`/`ModelStatsReply`
+/// fetch the cluster-merged per-model [`ModelStats`].
+///
+/// Wire v4 adds flow control and a server-initiated control plane:
+/// `Credit` returns submit window slots as replies flush (the client
+/// must not have more than `window` unanswered `Submit`s in flight);
+/// `Subscribe` opts a connection into the push frames, and `FencePush`/
+/// `RecalEpochPush`/`ResidencyPush`/`CalStatsPush` stream fence, epoch,
+/// residency, and calibrator deltas to subscribers without the client
+/// asking (DESIGN.md §15).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Frame {
     Hello {
         cores: u32,
+        /// Initial credit window: the maximum number of unanswered
+        /// `Submit` frames the client may have in flight. Replenished by
+        /// `Credit` grants as replies flush.
+        window: u32,
         /// Registered model names, in id order (empty on registry-less
         /// servers).
         models: Vec<String>,
@@ -127,6 +151,21 @@ pub enum Frame {
     CalStatsReply { id: u64, stats: Vec<CoreCalStats> },
     ModelStatsReq { id: u64 },
     ModelStatsReply { id: u64, stats: Vec<ModelStats> },
+    /// Client → server: opt this connection into the push frames below.
+    Subscribe { id: u64 },
+    /// Server → client: return `grant` submit-window slots (one per
+    /// flushed reply, coalesced).
+    Credit { grant: u32 },
+    /// Server → subscriber: core fence state changed.
+    FencePush { core: u32, fenced: bool },
+    /// Server → subscriber: core recalibration epoch advanced (monotonic
+    /// — apply with `fetch_max`, a late push can never roll back).
+    RecalEpochPush { core: u32, epoch: u64 },
+    /// Server → subscriber: core residency changed (`None` = cleared).
+    ResidencyPush { core: u32, residency: Option<(u32, Vec<TileRef>)> },
+    /// Server → subscriber: fresh calibrator snapshot (sent when a recal
+    /// epoch advances and a calibrator daemon is attached).
+    CalStatsPush { stats: Vec<CoreCalStats> },
 }
 
 // ---- encoder ------------------------------------------------------------
@@ -444,6 +483,11 @@ fn put_serve_error(e: &mut Enc<'_>, err: &ServeError) {
             e.u32(*requested);
             put_model_opt(e, *resident);
         }
+        ServeError::Overloaded { in_flight, limit } => {
+            e.u8(7);
+            e.u32(*in_flight as u32);
+            e.u32(*limit as u32);
+        }
     }
 }
 
@@ -459,6 +503,10 @@ fn take_serve_error(d: &mut Dec) -> Result<ServeError, WireError> {
         4 => Ok(ServeError::NoHealthyCore),
         5 => Ok(ServeError::ModelNotResident { model: d.u32()? }),
         6 => Ok(ServeError::WrongModel { requested: d.u32()?, resident: take_model_opt(d)? }),
+        7 => Ok(ServeError::Overloaded {
+            in_flight: d.u32()? as usize,
+            limit: d.u32()? as usize,
+        }),
         t => Err(WireError::BadPayload(format!("unknown error kind {t}"))),
     }
 }
@@ -635,6 +683,38 @@ fn take_modelstats(d: &mut Dec) -> Result<ModelStats, WireError> {
     })
 }
 
+/// One core's optional residency — the element type of `Hello`'s
+/// residency vector and the payload of `ResidencyPush`.
+fn put_residency_opt(e: &mut Enc<'_>, r: &Option<(u32, Vec<TileRef>)>) {
+    match r {
+        None => e.u8(0),
+        Some((model, tiles)) => {
+            e.u8(1);
+            e.u32(*model);
+            e.u32(tiles.len() as u32);
+            for t in tiles {
+                put_tile(e, t);
+            }
+        }
+    }
+}
+
+fn take_residency_opt(d: &mut Dec) -> Result<Option<(u32, Vec<TileRef>)>, WireError> {
+    match d.u8()? {
+        0 => Ok(None),
+        1 => {
+            let model = d.u32()?;
+            let nt = d.len_prefix(12)?;
+            let mut tiles = Vec::with_capacity(nt);
+            for _ in 0..nt {
+                tiles.push(take_tile(d)?);
+            }
+            Ok(Some((model, tiles)))
+        }
+        t => Err(WireError::BadPayload(format!("bad residency option tag {t}"))),
+    }
+}
+
 // ---- frame assembly -----------------------------------------------------
 
 /// Encode one frame (header + body), APPENDING to `out` — the tag, id,
@@ -654,25 +734,16 @@ pub fn encode_frame_into(frame: &Frame, out: &mut Vec<u8>) {
     let (tag, id) = {
         let mut body = Enc { b: out };
         match frame {
-            Frame::Hello { cores, models, residency } => {
+            Frame::Hello { cores, window, models, residency } => {
                 body.u32(*cores);
+                body.u32(*window);
                 body.u32(models.len() as u32);
                 for m in models {
                     body.str(m);
                 }
                 body.u32(residency.len() as u32);
                 for r in residency {
-                    match r {
-                        None => body.u8(0),
-                        Some((model, tiles)) => {
-                            body.u8(1);
-                            body.u32(*model);
-                            body.u32(tiles.len() as u32);
-                            for t in tiles {
-                                put_tile(&mut body, t);
-                            }
-                        }
-                    }
+                    put_residency_opt(&mut body, r);
                 }
                 (TAG_HELLO, 0)
             }
@@ -710,6 +781,33 @@ pub fn encode_frame_into(frame: &Frame, out: &mut Vec<u8>) {
                 }
                 (TAG_MODELSTATS_REPLY, *id)
             }
+            Frame::Subscribe { id } => (TAG_SUBSCRIBE, *id),
+            Frame::Credit { grant } => {
+                body.u32(*grant);
+                (TAG_CREDIT, 0)
+            }
+            Frame::FencePush { core, fenced } => {
+                body.u32(*core);
+                body.bool(*fenced);
+                (TAG_FENCE_PUSH, 0)
+            }
+            Frame::RecalEpochPush { core, epoch } => {
+                body.u32(*core);
+                body.u64(*epoch);
+                (TAG_RECAL_EPOCH_PUSH, 0)
+            }
+            Frame::ResidencyPush { core, residency } => {
+                body.u32(*core);
+                put_residency_opt(&mut body, residency);
+                (TAG_RESIDENCY_PUSH, 0)
+            }
+            Frame::CalStatsPush { stats } => {
+                body.u32(stats.len() as u32);
+                for s in stats {
+                    put_calstats(&mut body, s);
+                }
+                (TAG_CALSTATS_PUSH, 0)
+            }
         }
     };
     let body_len = (out.len() - body_at) as u32;
@@ -729,11 +827,16 @@ pub fn encode_frame(frame: &Frame) -> Vec<u8> {
     out
 }
 
-fn decode_body(tag: u8, id: u64, body: &[u8]) -> Result<Frame, WireError> {
+/// Decode one frame body given its already-parsed header fields. Public
+/// so the event-loop server can parse frames incrementally out of a
+/// connection's read buffer ([`decode_header`] + `decode_body`) instead
+/// of through a blocking reader.
+pub fn decode_body(tag: u8, id: u64, body: &[u8]) -> Result<Frame, WireError> {
     let mut d = Dec::new(body);
     let frame = match tag {
         TAG_HELLO => {
             let cores = d.u32()?;
+            let window = d.u32()?;
             // each model name costs at least its own 4-byte length prefix
             let nm = d.len_prefix(4)?;
             let mut models = Vec::with_capacity(nm);
@@ -744,25 +847,9 @@ fn decode_body(tag: u8, id: u64, body: &[u8]) -> Result<Frame, WireError> {
             let nr = d.len_prefix(1)?;
             let mut residency = Vec::with_capacity(nr);
             for _ in 0..nr {
-                residency.push(match d.u8()? {
-                    0 => None,
-                    1 => {
-                        let model = d.u32()?;
-                        let nt = d.len_prefix(12)?;
-                        let mut tiles = Vec::with_capacity(nt);
-                        for _ in 0..nt {
-                            tiles.push(take_tile(&mut d)?);
-                        }
-                        Some((model, tiles))
-                    }
-                    t => {
-                        return Err(WireError::BadPayload(format!(
-                            "bad residency option tag {t}"
-                        )));
-                    }
-                });
+                residency.push(take_residency_opt(&mut d)?);
             }
-            Frame::Hello { cores, models, residency }
+            Frame::Hello { cores, window, models, residency }
         }
         TAG_SUBMIT => {
             let opts = take_opts(&mut d)?;
@@ -801,6 +888,21 @@ fn decode_body(tag: u8, id: u64, body: &[u8]) -> Result<Frame, WireError> {
             }
             Frame::ModelStatsReply { id, stats }
         }
+        TAG_SUBSCRIBE => Frame::Subscribe { id },
+        TAG_CREDIT => Frame::Credit { grant: d.u32()? },
+        TAG_FENCE_PUSH => Frame::FencePush { core: d.u32()?, fenced: d.bool()? },
+        TAG_RECAL_EPOCH_PUSH => Frame::RecalEpochPush { core: d.u32()?, epoch: d.u64()? },
+        TAG_RESIDENCY_PUSH => {
+            Frame::ResidencyPush { core: d.u32()?, residency: take_residency_opt(&mut d)? }
+        }
+        TAG_CALSTATS_PUSH => {
+            let n = d.len_prefix(CALSTATS_MIN_LEN)?;
+            let mut stats = Vec::with_capacity(n);
+            for _ in 0..n {
+                stats.push(take_calstats(&mut d)?);
+            }
+            Frame::CalStatsPush { stats }
+        }
         t => return Err(WireError::UnknownTag(t)),
     };
     d.finish()?;
@@ -836,14 +938,20 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
     read_frame_buf(r, &mut body)
 }
 
-/// `read_frame` through a caller-owned body buffer, reused across frames
-/// — a long-lived connection's read loop stops allocating once the
-/// buffer has grown to the largest body seen. The [`MAX_BODY`] check
-/// still runs before the buffer is sized, so an adversarial length
-/// prefix can never drive an allocation.
-pub fn read_frame_buf<R: Read>(r: &mut R, body: &mut Vec<u8>) -> Result<Frame, WireError> {
-    let mut header = [0u8; HEADER_LEN];
-    read_full(r, &mut header, true)?;
+/// The validated header fields of one frame — what [`decode_header`]
+/// returns before the body has arrived.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameHeader {
+    pub tag: u8,
+    pub id: u64,
+    /// Body length in bytes (already checked against [`MAX_BODY`]).
+    pub body_len: usize,
+}
+
+/// Validate one 16-byte frame header: magic, version, and the
+/// [`MAX_BODY`] cap. Public (with [`decode_body`]) so a non-blocking
+/// reader can parse frames incrementally out of its receive buffer.
+pub fn decode_header(header: &[u8; HEADER_LEN]) -> Result<FrameHeader, WireError> {
     let magic = u16::from_le_bytes([header[0], header[1]]);
     if magic != WIRE_MAGIC {
         return Err(WireError::BadMagic(magic));
@@ -860,10 +968,22 @@ pub fn read_frame_buf<R: Read>(r: &mut R, body: &mut Vec<u8>) -> Result<Frame, W
     if len > MAX_BODY {
         return Err(WireError::Oversized { len, max: MAX_BODY });
     }
+    Ok(FrameHeader { tag, id, body_len: len as usize })
+}
+
+/// `read_frame` through a caller-owned body buffer, reused across frames
+/// — a long-lived connection's read loop stops allocating once the
+/// buffer has grown to the largest body seen. The [`MAX_BODY`] check
+/// still runs before the buffer is sized, so an adversarial length
+/// prefix can never drive an allocation.
+pub fn read_frame_buf<R: Read>(r: &mut R, body: &mut Vec<u8>) -> Result<Frame, WireError> {
+    let mut header = [0u8; HEADER_LEN];
+    read_full(r, &mut header, true)?;
+    let h = decode_header(&header)?;
     body.clear();
-    body.resize(len as usize, 0);
+    body.resize(h.body_len, 0);
     read_full(r, body, false)?;
-    decode_body(tag, id, body)
+    decode_body(h.tag, h.id, body)
 }
 
 /// Encode and write one frame, flushing so it hits the socket now.
@@ -899,9 +1019,15 @@ mod tests {
 
     #[test]
     fn every_frame_kind_roundtrips() {
-        roundtrip(Frame::Hello { cores: 4, models: Vec::new(), residency: Vec::new() });
+        roundtrip(Frame::Hello {
+            cores: 4,
+            window: 1024,
+            models: Vec::new(),
+            residency: Vec::new(),
+        });
         roundtrip(Frame::Hello {
             cores: 2,
+            window: 1,
             models: vec!["alpha".to_string(), "beta".to_string()],
             residency: vec![
                 Some((0, vec![TileRef { layer: 0, tr: 1, tc: 2 }])),
@@ -1005,17 +1131,59 @@ mod tests {
                 ModelStats { model: 1, requests: 9, rejected: 0, expired: 1, recals: 0 },
             ],
         });
+        roundtrip(Frame::Reply {
+            id: 24,
+            core: 3,
+            result: Err(ServeError::Overloaded { in_flight: 4096, limit: 1024 }),
+        });
+        roundtrip(Frame::Subscribe { id: 25 });
+        roundtrip(Frame::Credit { grant: 17 });
+        roundtrip(Frame::FencePush { core: 2, fenced: true });
+        roundtrip(Frame::FencePush { core: 0, fenced: false });
+        roundtrip(Frame::RecalEpochPush { core: 1, epoch: u64::MAX });
+        roundtrip(Frame::ResidencyPush { core: 3, residency: None });
+        roundtrip(Frame::ResidencyPush {
+            core: 0,
+            residency: Some((7, vec![TileRef { layer: 1, tr: 0, tc: 2 }])),
+        });
+        roundtrip(Frame::CalStatsPush { stats: vec![CoreCalStats::default()] });
+        roundtrip(Frame::CalStatsPush { stats: Vec::new() });
+    }
+
+    /// Incremental parsing (the event-loop read path): `decode_header`
+    /// validates the fixed header, `decode_body` finishes the frame.
+    #[test]
+    fn header_plus_body_decode_matches_read_frame() {
+        let frame = Frame::Submit {
+            id: 99,
+            job: Job::Mac(vec![1, -2, 3]),
+            opts: SubmitOpts::least_loaded(),
+        };
+        let bytes = encode_frame(&frame);
+        let mut header = [0u8; HEADER_LEN];
+        header.copy_from_slice(&bytes[..HEADER_LEN]);
+        let h = decode_header(&header).expect("valid header");
+        assert_eq!(h.id, 99);
+        assert_eq!(h.body_len, bytes.len() - HEADER_LEN);
+        let decoded = decode_body(h.tag, h.id, &bytes[HEADER_LEN..]).expect("valid body");
+        assert_eq!(decoded, frame);
     }
 
     /// `encode_frame_into` appends, so several frames coalesce into one
-    /// buffer and decode back out one by one — the server's reply-pump
-    /// write path. The read side reuses one body buffer throughout.
+    /// buffer and decode back out one by one — the event loop's
+    /// outbound-buffer write path. The read side reuses one body buffer
+    /// throughout.
     #[test]
     fn coalesced_frames_roundtrip_through_shared_buffers() {
         let frames = vec![
             Frame::Reply { id: 1, core: 0, result: Ok(JobReply::Mac(vec![1, 2, 3])) },
             Frame::Reply { id: 2, core: 1, result: Err(ServeError::DeadlineExceeded) },
-            Frame::Hello { cores: 8, models: vec!["alpha".to_string()], residency: vec![None] },
+            Frame::Hello {
+                cores: 8,
+                window: 256,
+                models: vec!["alpha".to_string()],
+                residency: vec![None],
+            },
             Frame::StatsReq { id: 3 },
         ];
         let mut buf = Vec::new();

@@ -4,27 +4,36 @@
 //! from an external host over a standard control interface, not by
 //! in-process calls.
 //!
-//! Three layers, each usable alone:
+//! Four layers, each usable alone:
 //! * [`codec`] — the versioned, length-prefixed binary frame codec
 //!   (DESIGN.md §9 documents the layout); zero dependencies, total
 //!   decoding (`WireError`, never a panic);
-//! * [`server`] — [`WireServer`], the threaded TCP acceptor over a
-//!   running cluster's `ServiceClient`, streaming replies in completion
-//!   order with request-id correlation; optionally serves the
-//!   calibrator daemon's live statistics as `CalStats` frames
-//!   ([`WireServer::with_calibrator`]);
+//! * [`poller`] — a minimal `poll(2)` readiness wrapper (no libc; the
+//!   one syscall is declared directly, DESIGN.md §15);
+//! * [`server`] — [`WireServer`], a single-threaded event loop over a
+//!   running cluster's `ServiceClient`: non-blocking reads feed the
+//!   shared submit path, per-connection outbound buffers are bounded by
+//!   wire-level `Credit` flow control (a slow reader backpressures only
+//!   itself), admission control answers overload with the typed
+//!   `ServeError::Overloaded`, and subscribed connections receive
+//!   server-pushed fence/epoch/residency/calibrator deltas; optionally
+//!   serves the calibrator daemon's live statistics as `CalStats`
+//!   frames ([`WireServer::with_calibrator`]);
 //! * [`client`] — [`RemoteClient`], the full
 //!   [`crate::coordinator::service::CimService`] trait over one socket:
 //!   DNN serving, pipelined benches, and lifecycle (drain/health) jobs
-//!   run unchanged against a remote cluster.
+//!   run unchanged against a remote cluster, with submits blocking on
+//!   the server's credit window.
 
 pub mod client;
 pub mod codec;
+pub mod poller;
 pub mod server;
 
 pub use client::RemoteClient;
 pub use codec::{
-    encode_frame, encode_frame_into, read_frame, read_frame_buf, write_frame, write_frame_buf,
-    Frame, WireError, HEADER_LEN, MAX_BODY, WIRE_MAGIC, WIRE_VERSION,
+    decode_body, decode_header, encode_frame, encode_frame_into, read_frame, read_frame_buf,
+    write_frame, write_frame_buf, Frame, FrameHeader, WireError, HEADER_LEN, MAX_BODY, WIRE_MAGIC,
+    WIRE_VERSION,
 };
-pub use server::WireServer;
+pub use server::{WireServer, DEFAULT_WINDOW};

@@ -1,0 +1,156 @@
+//! Minimal readiness poller over POSIX `poll(2)` — the zero-dependency
+//! substrate under the event-driven wire front-end (DESIGN.md §15).
+//!
+//! libc is not vendored, so the one syscall is declared directly, the
+//! same way `main.rs` declares `signal(2)` for the SIGINT handler.
+//! `poll` was chosen over `epoll` deliberately: the front-end tracks at
+//! most a few hundred sockets, the fd set is rebuilt per iteration
+//! anyway (interest flips with buffer occupancy), and `poll`'s stateless
+//! contract has no registration lifecycle to get wrong.
+//!
+//! On non-unix targets the module degrades to a timed tick that reports
+//! every fd ready; the callers' sockets are non-blocking, so spurious
+//! readiness resolves as `WouldBlock` — correct, just less efficient.
+
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
+/// Readable readiness (or a pending accept on a listener).
+pub const POLLIN: i16 = 0x001;
+/// Writable readiness.
+pub const POLLOUT: i16 = 0x004;
+/// Error condition (revents only).
+pub const POLLERR: i16 = 0x008;
+/// Peer hung up (revents only).
+pub const POLLHUP: i16 = 0x010;
+
+/// One slot in the poll set, layout-compatible with `struct pollfd`.
+#[repr(C)]
+#[derive(Debug, Clone, Copy)]
+pub struct PollFd {
+    fd: i32,
+    events: i16,
+    revents: i16,
+}
+
+impl PollFd {
+    /// Watch `fd` for `events` (a bitwise OR of [`POLLIN`]/[`POLLOUT`]).
+    pub fn new(fd: i32, events: i16) -> Self {
+        Self { fd, events, revents: 0 }
+    }
+
+    /// The fd this slot watches.
+    pub fn fd(&self) -> i32 {
+        self.fd
+    }
+
+    /// Whether the kernel reported `flag` (a `POLL*` bit) on this slot.
+    /// [`POLLERR`]/[`POLLHUP`] can be reported even when not requested.
+    pub fn is(&self, flag: i16) -> bool {
+        self.revents & flag != 0
+    }
+
+    /// Whether anything at all was reported — readiness or error.
+    pub fn ready(&self) -> bool {
+        self.revents != 0
+    }
+}
+
+#[cfg(unix)]
+mod imp {
+    use super::PollFd;
+
+    extern "C" {
+        // int poll(struct pollfd *fds, nfds_t nfds, int timeout);
+        fn poll(fds: *mut PollFd, nfds: std::ffi::c_ulong, timeout: std::ffi::c_int) -> i32;
+    }
+
+    /// Block until at least one slot is ready or `timeout_ms` elapses
+    /// (negative blocks indefinitely). Returns the number of ready
+    /// slots; 0 on timeout. `EINTR` reads as a zero-event wakeup — the
+    /// caller's loop re-evaluates its world either way.
+    pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> std::io::Result<usize> {
+        for f in fds.iter_mut() {
+            f.revents = 0;
+        }
+        // SAFETY: `fds` is a live, exclusively borrowed slice of
+        // #[repr(C)] PollFd (layout-compatible with struct pollfd), and
+        // the length passed is exactly the slice length, so the kernel
+        // writes only inside the borrow.
+        let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as std::ffi::c_ulong, timeout_ms) };
+        if rc < 0 {
+            let err = std::io::Error::last_os_error();
+            if err.kind() == std::io::ErrorKind::Interrupted {
+                return Ok(0);
+            }
+            return Err(err);
+        }
+        Ok(rc as usize)
+    }
+}
+
+#[cfg(not(unix))]
+mod imp {
+    use super::PollFd;
+
+    /// Portable fallback: tick after a short sleep and report every slot
+    /// ready for what it asked. Non-blocking I/O turns the spurious
+    /// readiness into `WouldBlock`, so callers stay correct.
+    pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> std::io::Result<usize> {
+        let ms = if timeout_ms < 0 { 10 } else { timeout_ms.min(10) as u64 };
+        std::thread::sleep(std::time::Duration::from_millis(ms.max(1)));
+        for f in fds.iter_mut() {
+            f.revents = f.events;
+        }
+        Ok(fds.len())
+    }
+}
+
+pub use imp::poll_fds;
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn times_out_with_nothing_ready() {
+        let (_a, b) = std::os::unix::net::UnixStream::pair().unwrap();
+        use std::os::unix::io::AsRawFd;
+        let mut fds = [PollFd::new(b.as_raw_fd(), POLLIN)];
+        let n = poll_fds(&mut fds, 20).unwrap();
+        assert_eq!(n, 0, "no bytes pending: poll must time out");
+        assert!(!fds[0].ready());
+    }
+
+    #[test]
+    fn reports_readable_after_a_write() {
+        use std::os::unix::io::AsRawFd;
+        let (mut a, b) = std::os::unix::net::UnixStream::pair().unwrap();
+        a.write_all(&[7]).unwrap();
+        let mut fds = [PollFd::new(b.as_raw_fd(), POLLIN)];
+        let n = poll_fds(&mut fds, 1000).unwrap();
+        assert_eq!(n, 1);
+        assert!(fds[0].is(POLLIN));
+    }
+
+    #[test]
+    fn reports_writable_on_an_open_socket() {
+        use std::os::unix::io::AsRawFd;
+        let (a, _b) = std::os::unix::net::UnixStream::pair().unwrap();
+        let mut fds = [PollFd::new(a.as_raw_fd(), POLLOUT)];
+        let n = poll_fds(&mut fds, 1000).unwrap();
+        assert_eq!(n, 1);
+        assert!(fds[0].is(POLLOUT));
+    }
+
+    #[test]
+    fn reports_hup_when_the_peer_closes() {
+        use std::os::unix::io::AsRawFd;
+        let (a, b) = std::os::unix::net::UnixStream::pair().unwrap();
+        drop(b);
+        let mut fds = [PollFd::new(a.as_raw_fd(), POLLIN)];
+        let n = poll_fds(&mut fds, 1000).unwrap();
+        assert_eq!(n, 1);
+        assert!(fds[0].is(POLLHUP) || fds[0].is(POLLIN), "close must surface");
+    }
+}

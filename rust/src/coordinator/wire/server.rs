@@ -1,49 +1,79 @@
-//! Threaded TCP front-end over a [`ServiceClient`]: accepts connections,
-//! decodes [`Frame::Submit`]s, pushes them through the shared
-//! `submit_routed` path, and streams replies back in COMPLETION order
-//! with request-id correlation — one connection can keep hundreds of
-//! jobs in flight without a waiter thread per job.
+//! Event-driven TCP front-end over a [`ServiceClient`]: ONE poller
+//! thread owns every socket (readiness via [`super::poller`], wire v4
+//! flow control via `Credit` frames), decodes [`Frame::Submit`]s
+//! incrementally out of per-connection read buffers, pushes them through
+//! the shared `submit_routed` path, and streams replies back in
+//! COMPLETION order with request-id correlation — hundreds of
+//! connections, each with hundreds of jobs in flight, without a thread
+//! pair per connection (DESIGN.md §15).
 //!
-//! Per connection:
-//! * the handler thread owns the read half: it decodes frames and
-//!   submits, so admission control (geometry, placement, fencing) runs
-//!   on the server's own board;
-//! * every submitted job carries a [`ReplySink::Routed`] clone of one
-//!   shared fan-in channel; a writer thread drains that channel onto the
-//!   socket. When the handler stops reading (client EOF, protocol error,
-//!   or shutdown) it drops its sender — the channel then closes exactly
-//!   when the last in-flight job has replied, so the writer drains all
-//!   outstanding work before the socket closes. That is the graceful-
-//!   shutdown path: ctrl-c stops accepts and unblocks readers, but every
-//!   admitted job still gets its reply.
+//! Flow control and isolation: every connection's outbound bytes live in
+//! its own buffer, written only when `poll` reports the socket writable
+//! — a stalled reader backpressures exactly itself. The buffer is
+//! structurally bounded: a client may have at most `window` unanswered
+//! `Submit`s (granted in `Hello`, replenished by `Credit` frames that
+//! ride the stream BEHIND the replies they account for), so a peer that
+//! stops reading also stops earning the right to generate replies.
 //!
-//! [`ReplySink::Routed`]: crate::coordinator::service::ReplySink
+//! Admission control: a `Submit` past the connection's window, or past
+//! the cluster-wide shed threshold, is answered immediately with
+//! [`ServeError::Overloaded`] — a typed, retryable rejection instead of
+//! queueing the job toward a deadline it will miss.
+//!
+//! Control plane: connections that send `Subscribe` get server-initiated
+//! `FencePush`/`RecalEpochPush`/`ResidencyPush`/`CalStatsPush` frames
+//! whenever the board state changes, so remote mirrors no longer depend
+//! on lifecycle replies happening to ride past (the staleness class the
+//! epoch fetch-max in `CoreBoard::set_recal_epoch` used to paper over).
+//!
+//! Graceful shutdown: [`WireServer::request_shutdown`] wakes the loop;
+//! it stops accepting, every admitted job still gets its reply, every
+//! flushable byte is flushed, and only then do the sockets close (with a
+//! grace deadline so one wedged peer cannot hold the process hostage).
 #![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 
 use crate::coordinator::batcher::{merge_model_stats, BatcherStats, ModelStats, ServeError};
 use crate::coordinator::calibrator::CalibratorShared;
-use crate::coordinator::service::{CimService, Job, Placement, RoutedReply, ServiceClient, TileRef};
-use crate::coordinator::wire::codec::{
-    encode_frame_into, read_frame_buf, write_frame, write_frame_buf, Frame,
+use crate::coordinator::service::{
+    CimService, Job, JobReply, Placement, Residency, RoutedReply, RoutedTx, ServiceClient, TileRef,
 };
+use crate::coordinator::wire::codec::{
+    decode_body, decode_header, encode_frame_into, Frame, HEADER_LEN,
+};
+use crate::coordinator::wire::poller::{poll_fds, PollFd, POLLERR, POLLHUP, POLLIN, POLLOUT};
 use crate::util::sync::lock_unpoisoned;
-use std::io::Write;
+use crate::util::wake::{wake_pair, WakeHandle, WakeReceiver};
+use std::io::{Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, TryRecvError};
 use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Sentinel `RoutedReply::core` for replies that never reached a worker
 /// (placement failed); encoded as `u32::MAX` on the wire.
 const NO_CORE: usize = usize::MAX;
 
-/// Live-connection registry: one cloned stream per open connection so
-/// [`WireServer::request_shutdown`] can unblock every parked reader.
-/// Handlers remove their own entry on exit — a long-running server must
-/// not leak one descriptor per connection it has ever served.
-type ConnRegistry = Arc<Mutex<Vec<(u64, TcpStream)>>>;
+/// Default per-connection credit window (max unanswered `Submit`s).
+pub const DEFAULT_WINDOW: u32 = 1024;
+
+/// Poll tick: bounds push-delta latency and the stop-flag poll interval.
+const TICK_MS: i32 = 25;
+
+/// Per-iteration cap on bytes read from one socket — keeps one firehose
+/// connection from starving the rest of the loop; the kernel buffer
+/// holds the remainder and `POLLIN` stays set.
+const READ_QUANTUM: usize = 256 * 1024;
+
+/// Stop parsing new frames from a connection whose outbound buffer has
+/// backed up past this (its reader is slow); reading resumes once the
+/// buffer drains. Submit-driven growth is already credit-bounded — this
+/// caps control-frame spam (e.g. `StatsReq` floods) the same way.
+const OUT_HIGH_WATER: usize = 4 << 20;
+
+/// How long a draining connection (peer EOF or server shutdown) may
+/// take to accept its remaining replies before it is dropped anyway.
+const DRAIN_GRACE: Duration = Duration::from_secs(10);
 
 /// The TCP front-end. Bind it over a running cluster's client, then call
 /// [`WireServer::serve`] (blocks until [`WireServer::request_shutdown`]).
@@ -61,8 +91,15 @@ pub struct WireServer {
     /// merged across cores per request
     model_stats: Vec<Arc<Mutex<Vec<ModelStats>>>>,
     stop: Arc<AtomicBool>,
-    conns: ConnRegistry,
-    next_conn: AtomicU64,
+    /// wakes the poller from worker threads and `request_shutdown`
+    waker: WakeHandle,
+    /// taken (once) by `serve`
+    wake_rx: Mutex<Option<WakeReceiver>>,
+    /// per-connection credit window advertised in `Hello`
+    window: u32,
+    /// cluster-wide shed threshold over the summed depth gauges; `None`
+    /// disables shedding
+    shed_threshold: Option<usize>,
 }
 
 impl WireServer {
@@ -75,8 +112,9 @@ impl WireServer {
         live: Vec<Arc<Mutex<BatcherStats>>>,
     ) -> std::io::Result<Self> {
         let listener = TcpListener::bind(addr)?;
-        // non-blocking accept so the serve loop can poll the stop flag
+        // non-blocking accept: the poller owns this fd like any other
         listener.set_nonblocking(true)?;
+        let (waker, wake_rx) = wake_pair()?;
         Ok(Self {
             listener,
             svc,
@@ -85,8 +123,10 @@ impl WireServer {
             models: Vec::new(),
             model_stats: Vec::new(),
             stop: Arc::new(AtomicBool::new(false)),
-            conns: Arc::new(Mutex::new(Vec::new())),
-            next_conn: AtomicU64::new(0),
+            waker,
+            wake_rx: Mutex::new(Some(wake_rx)),
+            window: DEFAULT_WINDOW,
+            shed_threshold: None,
         })
     }
 
@@ -113,201 +153,568 @@ impl WireServer {
         self
     }
 
+    /// Set the admission limits: `window` is the per-connection credit
+    /// window (max unanswered `Submit`s, [`DEFAULT_WINDOW`] by default;
+    /// clamped to at least 1), `shed_threshold` the cluster-wide
+    /// in-flight depth beyond which new submits are answered with
+    /// [`ServeError::Overloaded`] (`None` disables shedding).
+    pub fn with_admission(mut self, window: u32, shed_threshold: Option<usize>) -> Self {
+        self.window = window.max(1);
+        self.shed_threshold = shed_threshold;
+        self
+    }
+
     /// The bound address (port 0 resolves to an ephemeral port).
     pub fn local_addr(&self) -> std::io::Result<SocketAddr> {
         self.listener.local_addr()
     }
 
-    /// Stop accepting connections and unblock every connection reader;
-    /// [`WireServer::serve`] then drains in-flight replies and returns.
-    /// Safe to call from any thread, any number of times.
+    /// Stop accepting connections and begin the drain: every admitted
+    /// job is still answered and flushed before its socket closes, then
+    /// [`WireServer::serve`] returns. Safe to call from any thread, any
+    /// number of times.
     pub fn request_shutdown(&self) {
         self.stop.store(true, Ordering::SeqCst);
-        for (_, s) in lock_unpoisoned(&self.conns).iter() {
-            let _ = s.shutdown(Shutdown::Read);
+        self.waker.wake();
+    }
+
+    /// Run the event loop: accept, read, submit, flush — until shutdown
+    /// is requested, then drain every connection's in-flight replies and
+    /// return. One thread, all sockets.
+    pub fn serve(&self) {
+        let Some(mut wake_rx) = lock_unpoisoned(&self.wake_rx).take() else {
+            // serve() was already called once; a second call has no
+            // event sources and nothing to do
+            return;
+        };
+        let listener_fd = listener_fd(&self.listener);
+        let mut conns: Vec<Conn> = Vec::new();
+        let mut push_state = PushState::snapshot(&self.svc);
+        let mut stop_since: Option<Instant> = None;
+        let mut fds: Vec<PollFd> = Vec::new();
+        loop {
+            let stopping = self.stop.load(Ordering::SeqCst);
+            if stopping && stop_since.is_none() {
+                stop_since = Some(Instant::now());
+                for c in conns.iter_mut() {
+                    c.begin_drain();
+                }
+            }
+
+            // ---- wait for readiness -------------------------------------
+            fds.clear();
+            fds.push(PollFd::new(wake_rx.raw_fd(), POLLIN));
+            let listener_slot = if stopping {
+                None
+            } else {
+                fds.push(PollFd::new(listener_fd, POLLIN));
+                Some(1)
+            };
+            let conn_base = fds.len();
+            for c in conns.iter() {
+                fds.push(PollFd::new(c.fd, c.poll_events()));
+            }
+            if poll_fds(&mut fds, TICK_MS).is_err() {
+                // poll itself failing is unrecoverable for the loop;
+                // treat it as a shutdown request so we drain and exit
+                self.stop.store(true, Ordering::SeqCst);
+            }
+            wake_rx.drain();
+
+            // ---- accept -------------------------------------------------
+            if listener_slot.and_then(|i| fds.get(i)).is_some_and(|s| s.ready()) {
+                self.accept_ready(&mut conns);
+            }
+
+            // ---- read + parse -------------------------------------------
+            for (i, c) in conns.iter_mut().enumerate() {
+                let ready = fds
+                    .get(conn_base + i)
+                    .map(|s| s.is(POLLIN) || s.is(POLLHUP) || s.is(POLLERR))
+                    .unwrap_or(false);
+                if ready && c.wants_read() {
+                    self.read_and_parse(c);
+                }
+            }
+
+            // ---- worker replies -----------------------------------------
+            for c in conns.iter_mut() {
+                c.drain_worker_replies();
+            }
+
+            // ---- control-plane pushes -----------------------------------
+            let pushes = push_state.diff(&self.svc, self.cal.as_deref());
+            if !pushes.is_empty() {
+                for c in conns.iter_mut().filter(|c| c.subscribed && !c.dead) {
+                    for f in &pushes {
+                        c.queue_frame(f);
+                    }
+                }
+            }
+
+            // ---- coalesced credit grants --------------------------------
+            for c in conns.iter_mut() {
+                c.grant_credit();
+            }
+
+            // ---- flush --------------------------------------------------
+            for c in conns.iter_mut() {
+                c.flush();
+            }
+
+            // ---- reap ---------------------------------------------------
+            conns.retain_mut(|c| {
+                if c.dead || c.drain_complete() || c.drain_expired() {
+                    c.close();
+                    false
+                } else {
+                    true
+                }
+            });
+
+            if stopping && conns.is_empty() {
+                break;
+            }
+            if stop_since.is_some_and(|t| t.elapsed() > DRAIN_GRACE) {
+                // one or more peers never accepted their drain; cut them
+                for c in conns.iter_mut() {
+                    c.close();
+                }
+                break;
+            }
         }
     }
 
-    /// Accept and serve connections until shutdown is requested, then
-    /// drain: every connection's in-flight jobs are answered before their
-    /// sockets close, and every handler thread is joined before this
-    /// returns.
-    pub fn serve(&self) {
-        let mut handlers: Vec<JoinHandle<()>> = Vec::new();
-        while !self.stop.load(Ordering::SeqCst) {
+    /// Accept every pending connection (the listener is non-blocking).
+    fn accept_ready(&self, conns: &mut Vec<Conn>) {
+        loop {
             match self.listener.accept() {
                 Ok((stream, _peer)) => {
-                    let cid = self.next_conn.fetch_add(1, Ordering::Relaxed);
-                    // registered so request_shutdown can unblock the
-                    // reader; the handler deregisters itself on exit. A
-                    // connection we cannot register we also cannot
-                    // unblock at shutdown — refuse it outright.
-                    let Ok(clone) = stream.try_clone() else { continue };
-                    lock_unpoisoned(&self.conns).push((cid, clone));
-                    let svc = self.svc.clone();
-                    let live = self.live.clone();
-                    let cal = self.cal.clone();
-                    let models = self.models.clone();
-                    let model_stats = self.model_stats.clone();
-                    let conns = Arc::clone(&self.conns);
-                    handlers.push(std::thread::spawn(move || {
-                        handle_connection(stream, svc, live, cal, models, model_stats);
-                        lock_unpoisoned(&conns).retain(|(id, _)| *id != cid);
-                    }));
+                    if let Some(mut c) = Conn::new(stream, &self.waker) {
+                        // the handshake ships the registry's names, the
+                        // credit window, and the board's CURRENT
+                        // residency, so the client's mirror starts
+                        // correct; later deltas reach subscribers as
+                        // ResidencyPush frames
+                        let residency: Vec<Option<(u32, Vec<TileRef>)>> = self
+                            .svc
+                            .board()
+                            .residency_snapshot()
+                            .into_iter()
+                            .map(|r| r.map(|r| (r.model, r.tiles)))
+                            .collect();
+                        c.queue_frame(&Frame::Hello {
+                            cores: self.svc.cores() as u32,
+                            window: self.window,
+                            models: self.models.clone(),
+                            residency,
+                        });
+                        conns.push(c);
+                    }
                 }
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(Duration::from_millis(10));
-                }
-                Err(_) => std::thread::sleep(Duration::from_millis(10)),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(_) => break,
             }
-            // completed handlers need no join; keep the list short-lived
-            handlers.retain(|h| !h.is_finished());
         }
-        // idempotent with request_shutdown, and covers any connection
-        // accepted between the flag store and the loop exit
-        for (_, s) in lock_unpoisoned(&self.conns).iter() {
-            let _ = s.shutdown(Shutdown::Read);
+    }
+
+    /// Pull whatever the socket has (up to the read quantum), then parse
+    /// and handle every complete frame in the buffer.
+    fn read_and_parse(&self, c: &mut Conn) {
+        let mut tmp = [0u8; 16 * 1024];
+        let mut taken = 0usize;
+        loop {
+            match c.sock.read(&mut tmp) {
+                Ok(0) => {
+                    // peer EOF: no more requests, but every admitted job
+                    // still gets its reply before the socket closes
+                    c.begin_drain();
+                    break;
+                }
+                Ok(n) => {
+                    if let Some(chunk) = tmp.get(..n) {
+                        c.rbuf.extend_from_slice(chunk);
+                    }
+                    taken += n;
+                    if taken >= READ_QUANTUM {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    c.dead = true;
+                    return;
+                }
+            }
         }
-        for h in handlers {
-            let _ = h.join();
+        self.parse_frames(c);
+    }
+
+    /// Decode every complete frame sitting in the connection's read
+    /// buffer. A malformed header or body is a protocol error — the
+    /// connection is dropped rather than resynchronized (there is no
+    /// reliable way back into frame alignment).
+    fn parse_frames(&self, c: &mut Conn) {
+        let mut consumed = 0usize;
+        loop {
+            let Some(header) = c.rbuf.get(consumed..consumed + HEADER_LEN) else { break };
+            let Ok(header) = <&[u8; HEADER_LEN]>::try_from(header) else { break };
+            let Ok(h) = decode_header(header) else {
+                c.dead = true;
+                break;
+            };
+            let body_at = consumed + HEADER_LEN;
+            let Some(body) = c.rbuf.get(body_at..body_at + h.body_len) else { break };
+            match decode_body(h.tag, h.id, body) {
+                Ok(frame) => {
+                    consumed = body_at + h.body_len;
+                    if !self.handle_frame(c, frame) {
+                        c.dead = true;
+                        break;
+                    }
+                }
+                Err(_) => {
+                    c.dead = true;
+                    break;
+                }
+            }
+        }
+        if consumed > 0 {
+            c.rbuf.drain(..consumed);
+        }
+    }
+
+    /// Serve one inbound frame. Returns `false` on a protocol violation
+    /// (a frame only the server may send).
+    fn handle_frame(&self, c: &mut Conn, frame: Frame) -> bool {
+        match frame {
+            Frame::Submit { id, job, opts } => {
+                self.handle_submit(c, id, job, opts);
+                true
+            }
+            Frame::StatsReq { id } => {
+                let stats = snapshot_stats(&self.live);
+                c.queue_frame(&Frame::StatsReply { id, stats });
+                true
+            }
+            Frame::CalStatsReq { id } => {
+                let stats = self.cal.as_ref().map(|s| s.snapshot()).unwrap_or_default();
+                c.queue_frame(&Frame::CalStatsReply { id, stats });
+                true
+            }
+            Frame::ModelStatsReq { id } => {
+                let stats = snapshot_model_stats(&self.model_stats);
+                c.queue_frame(&Frame::ModelStatsReply { id, stats });
+                true
+            }
+            Frame::Subscribe { .. } => {
+                c.subscribed = true;
+                // initial sync: the Hello carried residency but not
+                // epochs or fences — push the current values so an idle
+                // subscriber starts from truth, not from zero
+                let board = self.svc.board();
+                for core in 0..board.cores() {
+                    let epoch = board.recal_epoch(core);
+                    if epoch > 0 {
+                        c.queue_frame(&Frame::RecalEpochPush { core: core as u32, epoch });
+                    }
+                    if board.is_fenced(core) {
+                        c.queue_frame(&Frame::FencePush { core: core as u32, fenced: true });
+                    }
+                }
+                if let Some(cal) = &self.cal {
+                    c.queue_frame(&Frame::CalStatsPush { stats: cal.snapshot() });
+                }
+                true
+            }
+            // everything else is server → client only; a peer sending
+            // one is broken — drop the connection rather than guess
+            _ => false,
+        }
+    }
+
+    /// Admission control + submit: window ceiling, cluster-wide shed,
+    /// pinned-range validation, then the shared `submit_routed` path.
+    fn handle_submit(&self, c: &mut Conn, id: u64, job: Job, opts: crate::coordinator::service::SubmitOpts) {
+        let window = self.window as usize;
+        if c.in_flight >= window {
+            // the client overran its credit window (a well-behaved one
+            // blocks for Credit); answer typed, keep serving
+            c.queue_reply(id, NO_CORE, Err(ServeError::Overloaded {
+                in_flight: c.in_flight,
+                limit: window,
+            }));
+            return;
+        }
+        if let Some(shed) = self.shed_threshold {
+            let board = self.svc.board();
+            let total: usize = (0..board.cores()).map(|k| board.in_flight(k)).sum();
+            if total >= shed {
+                c.queue_reply(id, NO_CORE, Err(ServeError::Overloaded {
+                    in_flight: total,
+                    limit: shed,
+                }));
+                return;
+            }
+        }
+        let cores = self.svc.cores();
+        if let Placement::Pinned(core) = opts.placement {
+            if core >= cores {
+                // a remote peer must not be able to panic the loop
+                // through an out-of-range pin
+                c.queue_reply(id, NO_CORE, Err(ServeError::Backend(format!(
+                    "pinned core {core} out of range (cluster has {cores} cores)"
+                ))));
+                return;
+            }
+            // mirror CimService::drain / rollout: the fence lands before
+            // the barrier job is queued, so no placed work slips in
+            // behind it
+            if matches!(job, Job::Drain | Job::Rollout { .. }) {
+                self.svc.board().fence(core);
+            }
+        }
+        match self.svc.submit_routed(job, opts, id, &c.rtx) {
+            Ok(_core) => c.in_flight += 1,
+            Err(e) => c.queue_reply(id, NO_CORE, Err(e)),
         }
     }
 }
 
-/// Serve one connection: read frames until EOF/shutdown, stream replies.
-fn handle_connection(
-    stream: TcpStream,
-    svc: ServiceClient,
-    live: Vec<Arc<Mutex<BatcherStats>>>,
-    cal: Option<Arc<CalibratorShared>>,
-    models: Vec<String>,
-    model_stats: Vec<Arc<Mutex<Vec<ModelStats>>>>,
-) {
-    // the listener is non-blocking (its accept loop polls the stop flag)
-    // and some platforms let accepted sockets inherit that — this
-    // connection's frame reads must block
-    let _ = stream.set_nonblocking(false);
-    let _ = stream.set_nodelay(true);
-    // a peer that stops READING must not park the reply pump forever —
-    // that would wedge the graceful shutdown behind its socket buffer.
-    // After the timeout the write errors, the pump keeps draining (its
-    // writes are best-effort), and shutdown completes. A stream that hit
-    // the timeout may be mid-frame and is useless afterwards, but that
-    // peer was already gone for practical purposes.
-    let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
-    // one write guard shared by the reply pump and control-plane frames,
-    // so concurrent frame writes never interleave
-    let write = match stream.try_clone() {
-        Ok(w) => Arc::new(Mutex::new(w)),
-        Err(_) => return,
-    };
-    // the handshake ships the registry's names and the board's CURRENT
-    // residency, so the client's mirror starts correct; later rollouts
-    // reach it through the Health replies they generate
-    let residency: Vec<Option<(u32, Vec<TileRef>)>> = svc
-        .board()
-        .residency_snapshot()
-        .into_iter()
-        .map(|r| r.map(|r| (r.model, r.tiles)))
-        .collect();
-    let hello = Frame::Hello { cores: svc.cores() as u32, models, residency };
-    // lint: allow(lock_across_io) — serialized whole-frame writes are this mutex's purpose
-    if write_frame(&mut *lock_unpoisoned(&write), &hello).is_err() {
-        return;
+/// Everything the loop tracks for one connection.
+struct Conn {
+    sock: TcpStream,
+    fd: i32,
+    /// unparsed inbound bytes (grows to one read quantum at most per
+    /// iteration; complete frames are consumed immediately)
+    rbuf: Vec<u8>,
+    /// encoded outbound bytes not yet accepted by the kernel
+    out: Vec<u8>,
+    /// prefix of `out` already written
+    out_pos: usize,
+    /// the routed sink handed to workers (wakes the poller on delivery)
+    rtx: RoutedTx,
+    /// worker-reply fan-in for this connection (content bounded by the
+    /// credit window: at most `window` jobs can be unanswered)
+    rrx: Receiver<RoutedReply>,
+    /// submits handed to workers whose replies have not come back yet
+    in_flight: usize,
+    /// reply frames encoded since the last `Credit` grant
+    credit_owed: u32,
+    subscribed: bool,
+    /// no more requests will be read (peer EOF or server shutdown);
+    /// close once `in_flight` is 0 and `out` has flushed
+    draining: Option<Instant>,
+    dead: bool,
+}
+
+impl Conn {
+    fn new(sock: TcpStream, waker: &WakeHandle) -> Option<Self> {
+        // some platforms have accepted sockets inherit the listener's
+        // non-blocking flag, others not — set it explicitly either way
+        if sock.set_nonblocking(true).is_err() {
+            return None;
+        }
+        // best-effort latency hint: a platform refusing TCP_NODELAY
+        // changes timing, never correctness
+        let _ = sock.set_nodelay(true);
+        let fd = stream_fd(&sock);
+        let (tx, rrx) = channel::<RoutedReply>();
+        Some(Self {
+            sock,
+            fd,
+            rbuf: Vec::new(),
+            out: Vec::new(),
+            out_pos: 0,
+            rtx: RoutedTx::with_waker(tx, waker.clone()),
+            rrx,
+            in_flight: 0,
+            credit_owed: 0,
+            subscribed: false,
+            draining: None,
+            dead: false,
+        })
     }
-    let (rtx, rrx) = channel::<RoutedReply>();
-    let pump = {
-        let write = Arc::clone(&write);
-        std::thread::spawn(move || reply_pump(rrx, write))
-    };
-    let mut reader = stream;
-    // per-connection reusable buffers: frame bodies in, control-plane
-    // frames out (the submit path's replies reuse the pump's buffer)
-    let mut body_buf: Vec<u8> = Vec::new();
-    let mut ctrl_buf: Vec<u8> = Vec::new();
-    loop {
-        match read_frame_buf(&mut reader, &mut body_buf) {
-            Ok(Frame::Submit { id, job, opts }) => {
-                let cores = svc.cores();
-                if let Placement::Pinned(core) = opts.placement {
-                    if core >= cores {
-                        // a remote peer must not be able to panic the
-                        // handler through an out-of-range pin
-                        let _ = rtx.send(RoutedReply {
-                            id,
-                            core: NO_CORE,
-                            result: Err(ServeError::Backend(format!(
-                                "pinned core {core} out of range (cluster has {cores} cores)"
-                            ))),
-                        });
-                        continue;
-                    }
-                    // mirror CimService::drain / rollout: the fence lands
-                    // before the barrier job is queued, so no placed work
-                    // slips in behind it
-                    if matches!(job, Job::Drain | Job::Rollout { .. }) {
-                        svc.board().fence(core);
-                    }
+
+    /// Readiness interest for the next poll round.
+    fn poll_events(&self) -> i16 {
+        let mut ev = 0i16;
+        if self.wants_read() {
+            ev |= POLLIN;
+        }
+        if self.out_pos < self.out.len() {
+            ev |= POLLOUT;
+        }
+        ev
+    }
+
+    /// Whether the loop should read this socket: not draining, and the
+    /// peer is keeping up with its replies (high-water backpressure).
+    fn wants_read(&self) -> bool {
+        !self.dead
+            && self.draining.is_none()
+            && self.out.len() - self.out_pos < OUT_HIGH_WATER
+    }
+
+    /// Append one frame to the outbound buffer.
+    fn queue_frame(&mut self, f: &Frame) {
+        encode_frame_into(f, &mut self.out);
+    }
+
+    /// Append one `Reply` frame; every reply earns the client one credit
+    /// (granted coalesced, in-stream behind the replies).
+    fn queue_reply(&mut self, id: u64, core: usize, result: Result<JobReply, ServeError>) {
+        let core = if core == NO_CORE { u32::MAX } else { core as u32 };
+        encode_frame_into(&Frame::Reply { id, core, result }, &mut self.out);
+        self.credit_owed += 1;
+    }
+
+    /// Move every completed job's reply from the worker fan-in channel
+    /// into the outbound buffer.
+    fn drain_worker_replies(&mut self) {
+        loop {
+            match self.rrx.try_recv() {
+                Ok(r) => {
+                    self.in_flight = self.in_flight.saturating_sub(1);
+                    self.queue_reply(r.id, r.core, r.result);
                 }
-                if let Err(e) = svc.submit_routed(job, opts, id, &rtx) {
-                    let _ = rtx.send(RoutedReply { id, core: NO_CORE, result: Err(e) });
-                }
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
             }
-            Ok(Frame::StatsReq { id }) => {
-                let stats = snapshot_stats(&live);
-                // lint: allow(lock_across_io) — serialized whole-frame writes are this mutex's purpose
-                if write_frame_buf(
-                    &mut *lock_unpoisoned(&write),
-                    &Frame::StatsReply { id, stats },
-                    &mut ctrl_buf,
-                )
-                .is_err()
-                {
-                    break;
-                }
-            }
-            Ok(Frame::CalStatsReq { id }) => {
-                let stats = cal.as_ref().map(|c| c.snapshot()).unwrap_or_default();
-                // lint: allow(lock_across_io) — serialized whole-frame writes are this mutex's purpose
-                if write_frame_buf(
-                    &mut *lock_unpoisoned(&write),
-                    &Frame::CalStatsReply { id, stats },
-                    &mut ctrl_buf,
-                )
-                .is_err()
-                {
-                    break;
-                }
-            }
-            Ok(Frame::ModelStatsReq { id }) => {
-                let stats = snapshot_model_stats(&model_stats);
-                // lint: allow(lock_across_io) — serialized whole-frame writes are this mutex's purpose
-                if write_frame_buf(
-                    &mut *lock_unpoisoned(&write),
-                    &Frame::ModelStatsReply { id, stats },
-                    &mut ctrl_buf,
-                )
-                .is_err()
-                {
-                    break;
-                }
-            }
-            // clients must not send server-side frames; drop the
-            // connection rather than guess
-            Ok(_) => break,
-            Err(_) => break,
         }
     }
-    // the submit path holds sink clones for every in-flight job; dropping
-    // ours closes the channel exactly when the last of them has replied,
-    // so the pump drains all outstanding work before the socket closes
-    drop(rtx);
-    let _ = pump.join();
-    let _ = reader.shutdown(Shutdown::Both);
+
+    /// Emit the coalesced `Credit` grant for every reply encoded since
+    /// the last one.
+    fn grant_credit(&mut self) {
+        if self.credit_owed > 0 && !self.dead {
+            let grant = self.credit_owed;
+            self.credit_owed = 0;
+            self.queue_frame(&Frame::Credit { grant });
+        }
+    }
+
+    /// Write as much of the outbound buffer as the kernel accepts.
+    fn flush(&mut self) {
+        if self.dead {
+            return;
+        }
+        while self.out_pos < self.out.len() {
+            let Some(pending) = self.out.get(self.out_pos..) else { break };
+            match self.sock.write(pending) {
+                Ok(0) => {
+                    self.dead = true;
+                    break;
+                }
+                Ok(n) => self.out_pos += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        if self.out_pos == self.out.len() && self.out_pos > 0 {
+            self.out.clear();
+            self.out_pos = 0;
+            // an outsized round (giant MacBatch replies) must not pin
+            // its capacity for the connection's remaining lifetime
+            if self.out.capacity() > 2 * OUT_HIGH_WATER {
+                self.out = Vec::new();
+            }
+        }
+    }
+
+    /// Stop reading requests; the connection closes once every admitted
+    /// job has replied and flushed.
+    fn begin_drain(&mut self) {
+        if self.draining.is_none() {
+            self.draining = Some(Instant::now());
+        }
+    }
+
+    /// Drained clean: nothing in flight, nothing left to flush.
+    fn drain_complete(&self) -> bool {
+        self.draining.is_some() && self.in_flight == 0 && self.out_pos >= self.out.len()
+    }
+
+    /// Draining but the peer never took its replies within the grace
+    /// period — cut it loose rather than leak the connection.
+    fn drain_expired(&self) -> bool {
+        self.draining.is_some_and(|t| t.elapsed() > DRAIN_GRACE)
+    }
+
+    fn close(&mut self) {
+        // teardown of a connection already counted dead: a failure here
+        // means the peer is gone, which is the outcome we wanted
+        let _ = self.sock.shutdown(Shutdown::Both);
+    }
+}
+
+/// Last-pushed control-plane state; diffed against the live board every
+/// loop iteration to generate push frames for subscribers.
+struct PushState {
+    fenced: Vec<bool>,
+    epochs: Vec<u64>,
+    residency: Vec<Option<Residency>>,
+}
+
+impl PushState {
+    fn snapshot(svc: &ServiceClient) -> Self {
+        let board = svc.board();
+        Self {
+            fenced: (0..board.cores()).map(|k| board.is_fenced(k)).collect(),
+            epochs: (0..board.cores()).map(|k| board.recal_epoch(k)).collect(),
+            residency: board.residency_snapshot(),
+        }
+    }
+
+    /// Compare against the live board; returns the push frames for every
+    /// delta (empty when nothing changed — the common case) and adopts
+    /// the new state.
+    fn diff(&mut self, svc: &ServiceClient, cal: Option<&CalibratorShared>) -> Vec<Frame> {
+        let board = svc.board();
+        let mut out = Vec::new();
+        let mut epoch_moved = false;
+        for core in 0..board.cores() {
+            let fenced = board.is_fenced(core);
+            if self.fenced.get(core).copied() != Some(fenced) {
+                if let Some(slot) = self.fenced.get_mut(core) {
+                    *slot = fenced;
+                }
+                out.push(Frame::FencePush { core: core as u32, fenced });
+            }
+            let epoch = board.recal_epoch(core);
+            if self.epochs.get(core).copied() != Some(epoch) {
+                if let Some(slot) = self.epochs.get_mut(core) {
+                    *slot = epoch;
+                }
+                epoch_moved = true;
+                out.push(Frame::RecalEpochPush { core: core as u32, epoch });
+            }
+        }
+        let residency = board.residency_snapshot();
+        for (core, r) in residency.iter().enumerate() {
+            if self.residency.get(core) != Some(r) {
+                out.push(Frame::ResidencyPush {
+                    core: core as u32,
+                    residency: r.as_ref().map(|r| (r.model, r.tiles.clone())),
+                });
+            }
+        }
+        self.residency = residency;
+        if epoch_moved {
+            if let Some(cal) = cal {
+                out.push(Frame::CalStatsPush { stats: cal.snapshot() });
+            }
+        }
+        out
+    }
 }
 
 /// Snapshot every core's live statistics. A separate function so each
-/// per-core guard is provably released before the reply hits the socket
+/// per-core guard is provably released before the reply is encoded
 /// (rule `lock_across_io`).
 fn snapshot_stats(live: &[Arc<Mutex<BatcherStats>>]) -> Vec<BatcherStats> {
     live.iter().map(|s| *lock_unpoisoned(s)).collect()
@@ -315,7 +722,7 @@ fn snapshot_stats(live: &[Arc<Mutex<BatcherStats>>]) -> Vec<BatcherStats> {
 
 /// Merge every core's live model counters into one cluster-wide set. A
 /// separate function so each per-core guard is provably released before
-/// the reply hits the socket (rule `lock_across_io`).
+/// the reply is encoded (rule `lock_across_io`).
 fn snapshot_model_stats(handles: &[Arc<Mutex<Vec<ModelStats>>>]) -> Vec<ModelStats> {
     let mut merged = Vec::new();
     for h in handles {
@@ -324,49 +731,24 @@ fn snapshot_model_stats(handles: &[Arc<Mutex<Vec<ModelStats>>>]) -> Vec<ModelSta
     merged
 }
 
-/// Stream routed replies onto the socket in completion order, coalescing
-/// every reply already waiting at each wakeup into ONE `write_all` +
-/// `flush` — under load the framing/syscall cost amortizes across the
-/// whole dispatch round instead of being paid per reply. The coalesce
-/// run is bounded so a slow reader caps the buffer, not the heap.
-fn reply_pump(rrx: Receiver<RoutedReply>, write: Arc<Mutex<TcpStream>>) {
-    /// Replies coalesced into one socket write, at most.
-    const MAX_COALESCED: usize = 256;
-    /// Byte budget per coalesced write: stop coalescing once the buffer
-    /// passes this, so many large `MacBatch` replies cannot pile into
-    /// one multi-gigabyte write (a single reply can still exceed it —
-    /// one frame must be contiguous — but never several together).
-    const MAX_COALESCED_BYTES: usize = 1 << 20;
-    let mut buf: Vec<u8> = Vec::new();
-    while let Ok(first) = rrx.recv() {
-        buf.clear();
-        encode_reply(first, &mut buf);
-        let mut coalesced = 1;
-        while coalesced < MAX_COALESCED && buf.len() < MAX_COALESCED_BYTES {
-            match rrx.try_recv() {
-                Ok(r) => {
-                    encode_reply(r, &mut buf);
-                    coalesced += 1;
-                }
-                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
-            }
-        }
-        // a client that vanished mid-reply is not an error worth keeping
-        // state for — keep consuming so no worker sink ever backs up
-        let mut w = lock_unpoisoned(&write);
-        // lint: allow(lock_across_io) — serialized whole-frame writes are this mutex's purpose
-        let _ = w.write_all(&buf).and_then(|_| w.flush());
-        drop(w);
-        // an outsized round (giant single reply) must not pin its
-        // capacity for the connection's remaining lifetime
-        if buf.capacity() > 2 * MAX_COALESCED_BYTES {
-            buf = Vec::new();
-        }
-    }
+#[cfg(unix)]
+fn stream_fd(s: &TcpStream) -> i32 {
+    use std::os::unix::io::AsRawFd;
+    s.as_raw_fd()
 }
 
-/// Append one routed reply to the coalesce buffer as a `Reply` frame.
-fn encode_reply(r: RoutedReply, buf: &mut Vec<u8>) {
-    let core = if r.core == NO_CORE { u32::MAX } else { r.core as u32 };
-    encode_frame_into(&Frame::Reply { id: r.id, core, result: r.result }, buf);
+#[cfg(not(unix))]
+fn stream_fd(_s: &TcpStream) -> i32 {
+    -1
+}
+
+#[cfg(unix)]
+fn listener_fd(l: &TcpListener) -> i32 {
+    use std::os::unix::io::AsRawFd;
+    l.as_raw_fd()
+}
+
+#[cfg(not(unix))]
+fn listener_fd(_l: &TcpListener) -> i32 {
+    -1
 }

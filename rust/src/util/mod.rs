@@ -9,3 +9,4 @@ pub mod stats;
 pub mod sync;
 pub mod table;
 pub mod json;
+pub mod wake;

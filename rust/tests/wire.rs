@@ -98,7 +98,7 @@ fn rand_opts(rng: &mut Rng) -> SubmitOpts {
 }
 
 fn rand_serve_error(rng: &mut Rng) -> ServeError {
-    match rng.int_in(0, 6) {
+    match rng.int_in(0, 7) {
         0 => ServeError::BadRequest {
             expected: rng.int_in(0, 1024) as usize,
             got: rng.int_in(0, 1024) as usize,
@@ -110,6 +110,10 @@ fn rand_serve_error(rng: &mut Rng) -> ServeError {
         5 => ServeError::WrongModel {
             requested: rng.int_in(0, 9000) as u32,
             resident: rand_model(rng),
+        },
+        6 => ServeError::Overloaded {
+            in_flight: rng.int_in(0, 1 << 20) as usize,
+            limit: rng.int_in(0, 1 << 20) as usize,
         },
         _ => ServeError::NoHealthyCore,
     }
@@ -188,11 +192,26 @@ fn rand_hello(rng: &mut Rng) -> Frame {
             }
         })
         .collect();
-    Frame::Hello { cores, models, residency }
+    Frame::Hello { cores, window: rng.int_in(1, 1 << 16) as u32, models, residency }
+}
+
+fn rand_residency(rng: &mut Rng) -> Option<(u32, Vec<TileRef>)> {
+    if rng.int_in(0, 1) == 1 {
+        let tiles = (0..rng.int_in(0, 4))
+            .map(|_| TileRef {
+                layer: rng.int_in(0, 3) as usize,
+                tr: rng.int_in(0, 7) as usize,
+                tc: rng.int_in(0, 7) as usize,
+            })
+            .collect();
+        Some((rng.int_in(0, 9000) as u32, tiles))
+    } else {
+        None
+    }
 }
 
 fn rand_frame(rng: &mut Rng) -> Frame {
-    match rng.int_in(0, 8) {
+    match rng.int_in(0, 14) {
         0 => rand_hello(rng),
         1 => Frame::Submit { id: rng.next_u64(), job: rand_job(rng), opts: rand_opts(rng) },
         2 => {
@@ -220,13 +239,25 @@ fn rand_frame(rng: &mut Rng) -> Frame {
             }
         }
         7 => Frame::ModelStatsReq { id: rng.next_u64() },
-        _ => {
-            let n = rng.int_in(0, 8);
-            Frame::ModelStatsReply {
-                id: rng.next_u64(),
-                stats: (0..n).map(|_| rand_modelstats(rng)).collect(),
-            }
-        }
+        8 => Frame::ModelStatsReply {
+            id: rng.next_u64(),
+            stats: (0..rng.int_in(0, 8)).map(|_| rand_modelstats(rng)).collect(),
+        },
+        // wire v4: flow control + the server-pushed control plane
+        9 => Frame::Subscribe { id: rng.next_u64() },
+        10 => Frame::Credit { grant: rng.next_u64() as u32 },
+        11 => Frame::FencePush {
+            core: rng.int_in(0, 64) as u32,
+            fenced: rng.int_in(0, 1) == 1,
+        },
+        12 => Frame::RecalEpochPush { core: rng.int_in(0, 64) as u32, epoch: rng.next_u64() },
+        13 => Frame::ResidencyPush {
+            core: rng.int_in(0, 64) as u32,
+            residency: rand_residency(rng),
+        },
+        _ => Frame::CalStatsPush {
+            stats: (0..rng.int_in(0, 8)).map(|_| rand_calstats(rng)).collect(),
+        },
     }
 }
 
@@ -255,7 +286,12 @@ fn back_to_back_frames_decode_in_order() {
     // a stream is frames laid end to end; each decode must consume
     // exactly one frame
     let frames = vec![
-        Frame::Hello { cores: 3, models: vec!["demo".to_string()], residency: vec![None; 3] },
+        Frame::Hello {
+            cores: 3,
+            window: 1024,
+            models: vec!["demo".to_string()],
+            residency: vec![None; 3],
+        },
         Frame::Submit { id: 1, job: Job::Mac(vec![1, 2, 3]), opts: SubmitOpts::default() },
         Frame::Reply { id: 1, core: 0, result: Ok(JobReply::Mac(vec![9, 8])) },
         Frame::StatsReq { id: 2 },
@@ -655,6 +691,213 @@ fn calstats_over_the_wire_report_the_daemon() {
 }
 
 #[test]
+fn a_stalled_reader_cannot_stall_other_connections() {
+    // the event-loop isolation property: a peer that submits a burst and
+    // then never reads a byte parks its replies in ITS outbound buffer
+    // only — a second connection keeps round-tripping. Under the old
+    // thread-per-connection design the stalled socket blocked its writer
+    // thread for a 10s timeout per reply; here the healthy client's
+    // round-trips below complete (or the whole test times out).
+    use std::io::Write as _;
+    use std::net::TcpStream;
+
+    let cfg = ideal_cfg();
+    let mut cluster = CimCluster::new(&cfg, 2);
+    deploy_uniform(&mut cluster, "demo", vec![40; c::N_ROWS * c::M_COLS]).unwrap();
+    let server = cluster.serve(Batcher::default());
+    let (wire, addr, acceptor) = spawn_wire(&server);
+
+    let mut stalled = TcpStream::connect(addr).unwrap();
+    let hello = read_frame(&mut stalled).unwrap();
+    assert!(matches!(hello, Frame::Hello { .. }));
+    let x = vec![30; c::N_ROWS];
+    let mut burst = Vec::new();
+    for id in 1..=64u64 {
+        burst.extend_from_slice(&encode_frame(&Frame::Submit {
+            id,
+            job: Job::Mac(x.clone()),
+            opts: SubmitOpts::default(),
+        }));
+    }
+    stalled.write_all(&burst).unwrap();
+    // ... and from here the stalled peer reads nothing
+
+    let client = RemoteClient::connect(addr).expect("connect healthy client");
+    for _ in 0..32 {
+        assert_eq!(client.mac(x.clone()).unwrap().len(), c::M_COLS);
+    }
+
+    // no reply was dropped: once the stalled peer resumes reading, all
+    // 64 are sitting there in completion order, plus its credit grants
+    let mut seen = 0;
+    while seen < 64 {
+        match read_frame(&mut stalled).unwrap() {
+            Frame::Reply { result, .. } => {
+                result.unwrap();
+                seen += 1;
+            }
+            Frame::Credit { .. } => {}
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+
+    drop(stalled);
+    drop(client);
+    wire.request_shutdown();
+    acceptor.join().unwrap();
+    drop(wire);
+    server.join();
+}
+
+#[test]
+fn an_idle_subscriber_observes_pushed_recal_epochs() {
+    // the control-plane push: client B subscribes and then NEVER submits
+    // or probes — client A's drain must still reach B's board mirror,
+    // carried entirely by server-initiated push frames
+    let mut cfg = SimConfig::default();
+    cfg.sigma_noise = 0.0;
+    let mut cluster = CimCluster::new(&cfg, 2);
+    deploy_uniform(&mut cluster, "demo", vec![40; c::N_ROWS * c::M_COLS]).unwrap();
+    let engine = BiscEngine::from_config(&cfg, AdcCharacterization::ideal());
+    let server = cluster.serve_with(ServiceConfig {
+        batcher: Batcher::default(),
+        engine: Some(engine),
+        ..ServiceConfig::default()
+    });
+    let (wire, addr, acceptor) = spawn_wire(&server);
+    let a = RemoteClient::connect(addr).expect("connect client A");
+    let b = RemoteClient::connect(addr).expect("connect client B");
+    b.subscribe().expect("subscribe B");
+    assert_eq!(b.board().recal_epoch(1), 0);
+
+    let h = a.drain(1).unwrap();
+    assert!(h.recal_epoch > 0, "drain reply must carry the server epoch");
+
+    // B stays idle; poll only ITS OWN mirror for the pushed delta
+    let mut synced = false;
+    for _ in 0..400 {
+        if b.board().recal_epoch(1) == h.recal_epoch && !b.is_fenced(1) {
+            synced = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(synced, "pushed recal epoch never reached the idle subscriber's mirror");
+
+    drop(a);
+    drop(b);
+    wire.request_shutdown();
+    acceptor.join().unwrap();
+    drop(wire);
+    server.join();
+}
+
+#[test]
+fn a_window_overrun_is_answered_with_a_typed_overload() {
+    // admission control: with a 1-deep window, a burst of submits behind
+    // a slow barrier job must be shed with the typed, retryable
+    // `Overloaded` — and the connection must survive the rejection
+    use acore_cim::coordinator::wire::write_frame;
+    use std::io::Write as _;
+    use std::net::TcpStream;
+
+    let mut cfg = SimConfig::default();
+    cfg.sigma_noise = 0.0;
+    let mut cluster = CimCluster::new(&cfg, 1);
+    deploy_uniform(&mut cluster, "demo", vec![40; c::N_ROWS * c::M_COLS]).unwrap();
+    let engine = BiscEngine::from_config(&cfg, AdcCharacterization::ideal());
+    let server = cluster.serve_with(ServiceConfig {
+        batcher: Batcher::default(),
+        engine: Some(engine),
+        ..ServiceConfig::default()
+    });
+    let wire = Arc::new(
+        WireServer::bind(("127.0.0.1", 0), server.client(), server.live_handles())
+            .expect("bind ephemeral loopback port")
+            .with_admission(1, None),
+    );
+    let addr = wire.local_addr().expect("bound listener has an address");
+    let acceptor = {
+        let wire = Arc::clone(&wire);
+        std::thread::spawn(move || wire.serve())
+    };
+
+    let mut raw = TcpStream::connect(addr).unwrap();
+    match read_frame(&mut raw).unwrap() {
+        Frame::Hello { window, .. } => assert_eq!(window, 1, "Hello must advertise the window"),
+        other => panic!("expected Hello, got {other:?}"),
+    }
+    // one write: a Drain (slow — it recalibrates) followed by Macs that
+    // arrive while it is still in flight
+    let x = vec![30; c::N_ROWS];
+    let mut burst = encode_frame(&Frame::Submit {
+        id: 1,
+        job: Job::Drain,
+        opts: SubmitOpts::default(),
+    });
+    for id in 2..=4u64 {
+        burst.extend_from_slice(&encode_frame(&Frame::Submit {
+            id,
+            job: Job::Mac(x.clone()),
+            opts: SubmitOpts::default(),
+        }));
+    }
+    raw.write_all(&burst).unwrap();
+
+    let mut drained = false;
+    let mut overloaded = 0usize;
+    let mut seen = 0usize;
+    while seen < 4 {
+        match read_frame(&mut raw).unwrap() {
+            Frame::Reply { id, result, .. } => {
+                seen += 1;
+                if id == 1 {
+                    assert!(matches!(result, Ok(JobReply::Health(_))), "got {result:?}");
+                    drained = true;
+                } else {
+                    match result {
+                        Err(ServeError::Overloaded { in_flight, limit }) => {
+                            assert_eq!(limit, 1);
+                            assert!(in_flight >= limit);
+                            overloaded += 1;
+                        }
+                        other => panic!("expected Overloaded, got {other:?}"),
+                    }
+                }
+            }
+            Frame::Credit { .. } => {}
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+    assert!(drained, "the admitted barrier job must still serve");
+    assert_eq!(overloaded, 3, "every submit past the window must shed");
+
+    // a well-paced submit after the rejection round-trips fine
+    write_frame(
+        &mut raw,
+        &Frame::Submit { id: 99, job: Job::Mac(x), opts: SubmitOpts::default() },
+    )
+    .unwrap();
+    loop {
+        match read_frame(&mut raw).unwrap() {
+            Frame::Reply { id, result, .. } => {
+                assert_eq!(id, 99);
+                result.unwrap();
+                break;
+            }
+            Frame::Credit { .. } => {}
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+
+    drop(raw);
+    wire.request_shutdown();
+    acceptor.join().unwrap();
+    drop(wire);
+    server.join();
+}
+
+#[test]
 fn pinned_core_out_of_range_is_a_wire_error_not_a_crash() {
     let cfg = ideal_cfg();
     let mut cluster = CimCluster::new(&cfg, 1);
@@ -671,8 +914,9 @@ fn pinned_core_out_of_range_is_a_wire_error_not_a_crash() {
     let mut raw = TcpStream::connect(addr).unwrap();
     let hello = read_frame(&mut raw).unwrap();
     match hello {
-        Frame::Hello { cores, ref models, ref residency } => {
+        Frame::Hello { cores, window, ref models, ref residency } => {
             assert_eq!(cores, 1);
+            assert!(window >= 1, "the handshake must grant a usable submit window");
             assert_eq!(models.as_slice(), ["demo".to_string()]);
             assert_eq!(residency.len(), 1);
         }
