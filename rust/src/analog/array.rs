@@ -11,12 +11,16 @@
 //! Cell-level mismatch (effect 6) lives in each `Mwc::delta`.
 
 use super::consts as c;
+use super::faults::{CellFault, StuckLevel};
 use super::mwc::{Line, Mwc};
 
 #[derive(Debug, Clone)]
 pub struct CrossbarArray {
     /// row-major cells\[r * M + c\]
     cells: Vec<Mwc>,
+    /// welded cells (hard faults): forced into `cells` now and re-forced
+    /// after every reprogram — writing the SRAM does not fix silicon
+    faults: Vec<CellFault>,
     pub kappa_in: f64,
     pub kappa_reg: f64,
 }
@@ -25,6 +29,7 @@ impl CrossbarArray {
     pub fn new(kappa_in: f64, kappa_reg: f64) -> Self {
         Self {
             cells: vec![Mwc::default(); c::N_ROWS * c::M_COLS],
+            faults: Vec::new(),
             kappa_in,
             kappa_reg,
         }
@@ -50,6 +55,7 @@ impl CrossbarArray {
             let delta = cell.delta;
             *cell = Mwc::program(w).with_delta(delta);
         }
+        self.reapply_faults();
     }
 
     /// Program a single column (used by the BISC characterization, which
@@ -59,6 +65,40 @@ impl CrossbarArray {
         for (r, &w) in weights.iter().enumerate() {
             let delta = self.cell(r, col).delta;
             *self.cell_mut(r, col) = Mwc::program(w).with_delta(delta);
+        }
+        self.reapply_faults();
+    }
+
+    /// Weld one cell (hard fault): forced immediately and after every
+    /// subsequent program — the fault is in the ladder/switches, not the
+    /// SRAM, so reprogramming cannot clear it.
+    pub fn inject_cell_fault(&mut self, fault: CellFault) {
+        if fault.row >= c::N_ROWS || fault.col >= c::M_COLS {
+            return;
+        }
+        self.faults.push(fault);
+        self.force(fault);
+    }
+
+    /// The welds installed so far.
+    pub fn cell_faults(&self) -> &[CellFault] {
+        &self.faults
+    }
+
+    fn force(&mut self, fault: CellFault) {
+        let cell = self.cell_mut(fault.row, fault.col);
+        let delta = cell.delta;
+        *cell = match fault.level {
+            StuckLevel::G0 => Mwc::program(0),
+            StuckLevel::Gmax => Mwc::program(c::CODE_MAX),
+        }
+        .with_delta(delta);
+    }
+
+    fn reapply_faults(&mut self) {
+        for i in 0..self.faults.len() {
+            let f = self.faults[i];
+            self.force(f);
         }
     }
 
@@ -198,6 +238,22 @@ mod tests {
         assert_eq!(arr.cell(0, 5).signed_code(), -63);
         assert_eq!(arr.cell(0, 4).signed_code(), 7);
         assert_eq!(arr.cell(c::N_ROWS - 1, 6).signed_code(), 7);
+    }
+
+    #[test]
+    fn welded_cells_survive_reprogramming() {
+        let mut arr = CrossbarArray::ideal();
+        arr.inject_cell_fault(CellFault { row: 2, col: 3, level: StuckLevel::G0 });
+        arr.inject_cell_fault(CellFault { row: 4, col: 5, level: StuckLevel::Gmax });
+        arr.program(&vec![17; c::N_ROWS * c::M_COLS]);
+        assert_eq!(arr.cell(2, 3).signed_code(), 0);
+        assert_eq!(arr.cell(4, 5).signed_code(), c::CODE_MAX);
+        arr.program_column(3, &vec![-9; c::N_ROWS]);
+        assert_eq!(arr.cell(2, 3).signed_code(), 0, "column rewrite cannot heal a weld");
+        assert_eq!(arr.cell(0, 3).signed_code(), -9, "healthy cells in the column reprogram");
+        // out-of-range welds are ignored, not panics
+        arr.inject_cell_fault(CellFault { row: 99, col: 0, level: StuckLevel::G0 });
+        assert_eq!(arr.cell_faults().len(), 2);
     }
 
     #[test]

@@ -1,0 +1,426 @@
+//! Hard-fault model for the CIM core — ROADMAP item 5 (degraded-mode
+//! serving).
+//!
+//! The variation/drift machinery models *soft* analog error: everything it
+//! produces is correctable by a BISC recalibration pass. Real resistive
+//! arrays also fail *hard* — SRAM bits weld a cell's R-2R ladder to zero or
+//! full conductance, a row driver or summation line opens, a summing
+//! amplifier rails, an ADC comparator wedges one output code. These faults
+//! are permanent and un-calibratable; the serving stack must detect them
+//! (see the classifier in `coordinator`), retire the die, and place work
+//! around it.
+//!
+//! This module holds the *description* of hard faults:
+//!   * [`FaultMap`] — the set of faults present on one die,
+//!   * [`FaultPlan`] — a deterministic injection schedule (which core,
+//!     after how many served MACs, which faults), parseable from the
+//!     compact spec strings used by `serve --faults` and the
+//!     `acore-cim faults` subcommand.
+//!
+//! Application happens in the physical layers: stuck cells force the
+//! stored [`super::mwc::Mwc`] state in [`super::array::CrossbarArray`]
+//! (and are re-forced on every reprogram — silicon stays broken no matter
+//! what is written), a stuck SA rails [`super::samp::SummingAmp::output`],
+//! and stuck ADC codes override the quantizer output per column. All three
+//! are visible to both the golden path and the folded fast path (the fold
+//! bakes them in), so serving pays nothing for fault support.
+
+use super::consts as c;
+use crate::util::rng::Rng;
+
+/// Conductance level a faulty cell is welded to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StuckLevel {
+    /// Open: the cell contributes no current regardless of stored code.
+    G0,
+    /// Shorted to full scale: behaves as a permanently programmed
+    /// +CODE_MAX cell on the positive line.
+    Gmax,
+}
+
+/// One welded MWC.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CellFault {
+    pub row: usize,
+    pub col: usize,
+    pub level: StuckLevel,
+}
+
+/// The hard faults present on one die.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultMap {
+    /// individually welded cells
+    pub cells: Vec<CellFault>,
+    /// rows whose driver is open — every cell in the row reads G0
+    pub dead_rows: Vec<usize>,
+    /// columns whose summation line is open — every cell reads G0
+    pub dead_cols: Vec<usize>,
+    /// summing amps railed to a constant output voltage: (col, volts)
+    pub stuck_sa: Vec<(usize, f64)>,
+    /// ADC slices wedged to one output code: (col, code)
+    pub stuck_adc: Vec<(usize, u32)>,
+}
+
+impl FaultMap {
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+            && self.dead_rows.is_empty()
+            && self.dead_cols.is_empty()
+            && self.stuck_sa.is_empty()
+            && self.stuck_adc.is_empty()
+    }
+
+    /// Fold another map's faults into this one.
+    pub fn merge(&mut self, other: &FaultMap) {
+        self.cells.extend_from_slice(&other.cells);
+        self.dead_rows.extend_from_slice(&other.dead_rows);
+        self.dead_cols.extend_from_slice(&other.dead_cols);
+        self.stuck_sa.extend_from_slice(&other.stuck_sa);
+        self.stuck_adc.extend_from_slice(&other.stuck_adc);
+    }
+
+    /// Expand dead rows/columns into per-cell G0 welds and append the
+    /// explicit cell faults — the flat list the crossbar consumes.
+    pub fn cell_faults(&self) -> Vec<CellFault> {
+        let mut out = Vec::new();
+        for &row in &self.dead_rows {
+            for col in 0..c::M_COLS {
+                out.push(CellFault { row, col, level: StuckLevel::G0 });
+            }
+        }
+        for &col in &self.dead_cols {
+            for row in 0..c::N_ROWS {
+                out.push(CellFault { row, col, level: StuckLevel::G0 });
+            }
+        }
+        out.extend_from_slice(&self.cells);
+        out
+    }
+
+    /// Ground-truth bitmask of columns touched by any fault (bit `col`).
+    /// The serving stack never reads this — it measures its own mask via
+    /// the BISC classifier — but tests compare the two.
+    pub fn column_mask(&self) -> u32 {
+        let mut mask = 0u32;
+        for f in &self.cells {
+            mask |= col_bit(f.col);
+        }
+        if !self.dead_rows.is_empty() {
+            // an open row touches every column
+            mask = ((1u64 << c::M_COLS) - 1) as u32;
+        }
+        for &col in &self.dead_cols {
+            mask |= col_bit(col);
+        }
+        for &(col, _) in &self.stuck_sa {
+            mask |= col_bit(col);
+        }
+        for &(col, _) in &self.stuck_adc {
+            mask |= col_bit(col);
+        }
+        mask
+    }
+}
+
+fn col_bit(col: usize) -> u32 {
+    if col < c::M_COLS {
+        1u32 << col
+    } else {
+        0
+    }
+}
+
+/// One scheduled injection: after `at_macs` MACs served by core `core`,
+/// apply `map`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultEvent {
+    pub core: usize,
+    /// MACs the target core must have served before the fault strikes
+    /// (0 = immediately on arrival of the plan).
+    pub at_macs: u64,
+    pub map: FaultMap,
+}
+
+/// A deterministic, seeded fault-injection schedule.
+///
+/// Compact spec grammar (whitespace-free; see `acore-cim faults --help`):
+///
+/// ```text
+/// plan  := event (';' event)*
+/// event := spec (',' spec)*
+/// spec  := 'core=' K              target core of this event (default 0)
+///        | 'at=' N               inject after N served MACs (default 0)
+///        | 'col=' C              dead column C
+///        | 'row=' R              dead row R
+///        | 'cell=' R ':' C ':' ('g0'|'gmax')   welded cell
+///        | 'sa=' C ':' V         SA railed to V volts on column C
+///        | 'adc=' C ':' Q        ADC wedged to code Q on column C
+///        | 'rand=' N ':' SEED    N seeded random welded cells
+/// ```
+///
+/// Example: `core=1,at=5000,col=7,cell=3:9:gmax;core=2,adc=0:17`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Parse a compact spec string. The empty string is the empty plan.
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let mut events = Vec::new();
+        for part in spec.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            events.push(parse_event(part)?);
+        }
+        Ok(Self { events })
+    }
+
+    /// Re-serialize into the compact spec grammar (wire transport and
+    /// round-trip tests). `rand=` specs are serialized expanded, so the
+    /// result is deterministic without carrying the seed.
+    pub fn to_spec(&self) -> String {
+        let mut out = String::new();
+        for (i, ev) in self.events.iter().enumerate() {
+            if i > 0 {
+                out.push(';');
+            }
+            let mut specs: Vec<String> = Vec::new();
+            if ev.core != 0 {
+                specs.push(format!("core={}", ev.core));
+            }
+            if ev.at_macs != 0 {
+                specs.push(format!("at={}", ev.at_macs));
+            }
+            for &col in &ev.map.dead_cols {
+                specs.push(format!("col={col}"));
+            }
+            for &row in &ev.map.dead_rows {
+                specs.push(format!("row={row}"));
+            }
+            for f in &ev.map.cells {
+                let level = match f.level {
+                    StuckLevel::G0 => "g0",
+                    StuckLevel::Gmax => "gmax",
+                };
+                specs.push(format!("cell={}:{}:{level}", f.row, f.col));
+            }
+            for &(col, v) in &ev.map.stuck_sa {
+                specs.push(format!("sa={col}:{v}"));
+            }
+            for &(col, q) in &ev.map.stuck_adc {
+                specs.push(format!("adc={col}:{q}"));
+            }
+            out.push_str(&specs.join(","));
+        }
+        out
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.iter().all(|e| e.map.is_empty())
+    }
+
+    /// The events targeting one core.
+    pub fn events_for(&self, core: usize) -> impl Iterator<Item = &FaultEvent> {
+        self.events.iter().filter(move |e| e.core == core)
+    }
+
+    /// Highest core index any event targets (plan validation at serve
+    /// startup).
+    pub fn max_core(&self) -> Option<usize> {
+        self.events.iter().map(|e| e.core).max()
+    }
+}
+
+fn parse_event(part: &str) -> Result<FaultEvent, String> {
+    let mut ev = FaultEvent::default();
+    for spec in part.split(',') {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            continue;
+        }
+        let (key, val) = spec
+            .split_once('=')
+            .ok_or_else(|| format!("fault spec `{spec}`: expected key=value"))?;
+        match key {
+            "core" => ev.core = parse_num(val, "core", usize::MAX)?,
+            "at" => ev.at_macs = parse_num(val, "at", u64::MAX as usize)? as u64,
+            "col" => ev.map.dead_cols.push(parse_num(val, "col", c::M_COLS - 1)?),
+            "row" => ev.map.dead_rows.push(parse_num(val, "row", c::N_ROWS - 1)?),
+            "cell" => {
+                let (row, rest) = val
+                    .split_once(':')
+                    .ok_or_else(|| format!("cell spec `{val}`: expected R:C:g0|gmax"))?;
+                let (col, level) = rest
+                    .split_once(':')
+                    .ok_or_else(|| format!("cell spec `{val}`: expected R:C:g0|gmax"))?;
+                let level = match level {
+                    "g0" => StuckLevel::G0,
+                    "gmax" => StuckLevel::Gmax,
+                    other => return Err(format!("cell level `{other}`: expected g0 or gmax")),
+                };
+                ev.map.cells.push(CellFault {
+                    row: parse_num(row, "cell row", c::N_ROWS - 1)?,
+                    col: parse_num(col, "cell col", c::M_COLS - 1)?,
+                    level,
+                });
+            }
+            "sa" => {
+                let (col, volts) = val
+                    .split_once(':')
+                    .ok_or_else(|| format!("sa spec `{val}`: expected COL:VOLTS"))?;
+                let v: f64 = volts
+                    .parse()
+                    .map_err(|_| format!("sa voltage `{volts}`: not a number"))?;
+                if !v.is_finite() {
+                    return Err(format!("sa voltage `{volts}`: not finite"));
+                }
+                ev.map.stuck_sa.push((parse_num(col, "sa col", c::M_COLS - 1)?, v));
+            }
+            "adc" => {
+                let (col, code) = val
+                    .split_once(':')
+                    .ok_or_else(|| format!("adc spec `{val}`: expected COL:CODE"))?;
+                ev.map.stuck_adc.push((
+                    parse_num(col, "adc col", c::M_COLS - 1)?,
+                    parse_num(code, "adc code", c::ADC_MAX as usize)? as u32,
+                ));
+            }
+            "rand" => {
+                let (n, seed) = val
+                    .split_once(':')
+                    .ok_or_else(|| format!("rand spec `{val}`: expected N:SEED"))?;
+                let n: usize = parse_num(n, "rand count", c::N_ROWS * c::M_COLS)?;
+                let seed: u64 = seed
+                    .parse()
+                    .map_err(|_| format!("rand seed `{seed}`: not an integer"))?;
+                ev.map.cells.extend(random_cells(n, seed));
+            }
+            other => return Err(format!("unknown fault spec key `{other}`")),
+        }
+    }
+    Ok(ev)
+}
+
+fn parse_num(s: &str, what: &str, max: usize) -> Result<usize, String> {
+    let n: usize = s.parse().map_err(|_| format!("{what} `{s}`: not an integer"))?;
+    if n > max {
+        return Err(format!("{what} {n} out of range (max {max})"));
+    }
+    Ok(n)
+}
+
+/// Deterministic seeded weld draw: `n` distinct cells, alternating
+/// G0/Gmax. The same (n, seed) always yields the same faults, so a plan
+/// using `rand=` replays bit-for-bit like everything else in the repo.
+fn random_cells(n: usize, seed: u64) -> Vec<CellFault> {
+    let mut rng = Rng::new(seed ^ 0xFA_017_5EED);
+    let mut taken = vec![false; c::N_ROWS * c::M_COLS];
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n.min(c::N_ROWS * c::M_COLS) {
+        let row = rng.int_in(0, c::N_ROWS as i64 - 1) as usize;
+        let col = rng.int_in(0, c::M_COLS as i64 - 1) as usize;
+        if taken[row * c::M_COLS + col] {
+            continue;
+        }
+        taken[row * c::M_COLS + col] = true;
+        let level = if out.len() % 2 == 0 { StuckLevel::G0 } else { StuckLevel::Gmax };
+        out.push(CellFault { row, col, level });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_and_whitespace_specs_parse_to_empty_plan() {
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse(" ; ; ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn full_grammar_roundtrips() {
+        let spec = "core=1,at=5000,col=7,row=2,cell=3:9:gmax,sa=4:0.45,adc=0:17;core=2,cell=0:0:g0";
+        let plan = FaultPlan::parse(spec).unwrap();
+        assert_eq!(plan.events.len(), 2);
+        let ev = &plan.events[0];
+        assert_eq!((ev.core, ev.at_macs), (1, 5000));
+        assert_eq!(ev.map.dead_cols, vec![7]);
+        assert_eq!(ev.map.dead_rows, vec![2]);
+        assert_eq!(ev.map.cells, vec![CellFault { row: 3, col: 9, level: StuckLevel::Gmax }]);
+        assert_eq!(ev.map.stuck_sa, vec![(4, 0.45)]);
+        assert_eq!(ev.map.stuck_adc, vec![(0, 17)]);
+        assert_eq!(plan.events[1].core, 2);
+        // re-serialize -> re-parse is identity
+        let again = FaultPlan::parse(&plan.to_spec()).unwrap();
+        assert_eq!(again, plan);
+        assert_eq!(plan.max_core(), Some(2));
+    }
+
+    #[test]
+    fn out_of_range_and_malformed_specs_are_rejected() {
+        for bad in [
+            "col=32",
+            "row=36",
+            "cell=0:0:weird",
+            "cell=0:32:g0",
+            "adc=0:64",
+            "adc=33:1",
+            "sa=0:abc",
+            "sa=0:inf",
+            "frob=1",
+            "col",
+            "rand=3",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+    }
+
+    #[test]
+    fn seeded_random_cells_are_deterministic_and_distinct() {
+        let a = FaultPlan::parse("rand=8:42").unwrap();
+        let b = FaultPlan::parse("rand=8:42").unwrap();
+        assert_eq!(a, b);
+        let cells = &a.events[0].map.cells;
+        assert_eq!(cells.len(), 8);
+        for (i, x) in cells.iter().enumerate() {
+            for y in &cells[i + 1..] {
+                assert!((x.row, x.col) != (y.row, y.col), "duplicate weld");
+            }
+        }
+        let c2 = FaultPlan::parse("rand=8:43").unwrap();
+        assert_ne!(a, c2, "different seed, different welds");
+    }
+
+    #[test]
+    fn column_mask_covers_every_fault_kind() {
+        let plan = FaultPlan::parse("col=3,cell=0:5:g0,sa=7:0.4,adc=9:0").unwrap();
+        let mask = plan.events[0].map.column_mask();
+        assert_eq!(mask, (1 << 3) | (1 << 5) | (1 << 7) | (1 << 9));
+        let dead_row = FaultPlan::parse("row=0").unwrap();
+        assert_eq!(dead_row.events[0].map.column_mask(), u32::MAX);
+    }
+
+    #[test]
+    fn cell_fault_expansion_covers_dead_lines() {
+        let plan = FaultPlan::parse("col=1,row=2,cell=3:4:gmax").unwrap();
+        let cells = plan.events[0].map.cell_faults();
+        // one dead row (M cells) + one dead column (N cells) + 1 weld
+        assert_eq!(cells.len(), crate::analog::consts::M_COLS + crate::analog::consts::N_ROWS + 1);
+        assert!(cells
+            .iter()
+            .any(|f| f.row == 3 && f.col == 4 && f.level == StuckLevel::Gmax));
+        assert!(cells.iter().filter(|f| f.col == 1).count() >= crate::analog::consts::N_ROWS);
+    }
+
+    #[test]
+    fn events_for_filters_by_core() {
+        let plan = FaultPlan::parse("core=1,col=0;core=2,col=1;core=1,row=0").unwrap();
+        assert_eq!(plan.events_for(1).count(), 2);
+        assert_eq!(plan.events_for(0).count(), 0);
+    }
+}

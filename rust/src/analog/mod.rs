@@ -12,6 +12,7 @@
 pub mod adc;
 pub mod array;
 pub mod consts;
+pub mod faults;
 pub mod mwc;
 pub mod noise;
 pub mod power;
@@ -22,6 +23,7 @@ pub mod variation;
 use adc::FlashAdc;
 use array::CrossbarArray;
 use consts as c;
+use faults::FaultMap;
 use noise::NoiseModel;
 use rdac::{InputCode, InputDac};
 use samp::SummingAmp;
@@ -39,6 +41,10 @@ pub struct CimAnalogModel {
     /// temporal drift of the SA gains/offsets (`None` = frozen die);
     /// advanced by [`CimAnalogModel::advance_drift`] as traffic ages it
     drift: Option<DriftState>,
+    /// per-column hard-fault ADC overrides: a wedged slice always emits
+    /// this code (applied after quantization on the golden path, baked
+    /// into the fold on the fast path)
+    stuck_adc: Vec<Option<u32>>,
     /// folded fast-path state (rebuilt lazily after programming/trimming)
     folded: Option<Folded>,
     /// reusable evaluation scratch for the `&mut self` fast-path entry
@@ -184,6 +190,7 @@ impl CimAnalogModel {
             adc,
             noise,
             drift: DriftState::draw(cfg),
+            stuck_adc: vec![None; c::M_COLS],
             folded: None,
             scratch: MacScratch::new(),
         }
@@ -225,6 +232,49 @@ impl CimAnalogModel {
         self.adc.v_l = v_l;
         self.adc.v_h = v_h;
         self.folded = None;
+    }
+
+    /// Strike the die with hard faults (see [`faults`]): stuck cells weld
+    /// into the crossbar (and re-weld on every reprogram), railed SAs and
+    /// wedged ADC slices override their columns. Permanent — there is no
+    /// undo, matching silicon — and visible to the golden path, the BISC
+    /// characterization reads, and the folded fast path alike.
+    pub fn apply_faults(&mut self, map: &FaultMap) {
+        for f in map.cell_faults() {
+            self.array.inject_cell_fault(f);
+        }
+        for &(col, v) in &map.stuck_sa {
+            if let Some(amp) = self.amps.get_mut(col) {
+                amp.stuck = Some(v);
+            }
+        }
+        for &(col, code) in &map.stuck_adc {
+            if let Some(slot) = self.stuck_adc.get_mut(col) {
+                *slot = Some(code.min(c::ADC_MAX));
+            }
+        }
+        self.folded = None;
+    }
+
+    /// Ground-truth bitmask of columns carrying any hard fault (bit
+    /// `col`). Test oracle — the serving stack measures its own mask via
+    /// the BISC fault classifier instead of peeking at this.
+    pub fn fault_column_mask(&self) -> u32 {
+        let mut mask = 0u32;
+        for f in self.array.cell_faults() {
+            mask |= 1u32 << f.col;
+        }
+        for (col, amp) in self.amps.iter().enumerate() {
+            if amp.stuck.is_some() {
+                mask |= 1u32 << col;
+            }
+        }
+        for (col, s) in self.stuck_adc.iter().enumerate() {
+            if s.is_some() {
+                mask |= 1u32 << col;
+            }
+        }
+        mask
     }
 
     /// Whether this die carries a drift model (`sigma_drift > 0`).
@@ -287,7 +337,11 @@ impl CimAnalogModel {
         for v in v_sa.iter_mut() {
             *v += self.noise.sample();
         }
-        v_sa.iter().map(|&v| self.adc.quantize(v)).collect()
+        let adc = &self.adc;
+        v_sa.iter()
+            .zip(&self.stuck_adc)
+            .map(|(&v, stuck)| stuck.unwrap_or_else(|| adc.quantize(v)))
+            .collect()
     }
 
     /// Golden path with per-read averaging (BISC characterization reads).
@@ -307,6 +361,11 @@ impl CimAnalogModel {
             }
         }
         acc.iter_mut().for_each(|a| *a /= reads as f64);
+        for (a, stuck) in acc.iter_mut().zip(&self.stuck_adc) {
+            if let Some(code) = stuck {
+                *a = *code as f64;
+            }
+        }
         acc
     }
 
@@ -328,6 +387,16 @@ impl CimAnalogModel {
             // cubic distortion in code units (see python model.fold_params)
             qd[col] = (amp.gamma3 / (a * a)) as f32;
             qm[col] = (a * (c::V_BIAS - self.adc.v_l) + self.adc.beta_d) as f32;
+            // hard faults: a wedged ADC slice or railed SA makes the
+            // column a constant — zero its conductances and pin the
+            // epilogue to the stuck code (ADC wins, it is downstream)
+            let sa_code = amp.stuck.map(|v| self.adc.transfer(v) as f32);
+            if let Some(code) = self.stuck_adc[col].map(|q| q as f32).or(sa_code) {
+                qa[col] = 0.0;
+                qb[col] = 0.0;
+                qc[col] = code;
+                qd[col] = 0.0;
+            }
         }
         // single-GEMM fold: the positive/negative line split collapses
         // because qa/qb are per-column constants
@@ -525,6 +594,46 @@ mod tests {
             m.forward_folded_into(&tile, &x, batch, &mut scratch, &mut out);
             assert_eq!(out, q_tile, "round {round}: forward_folded_into drifted");
         }
+    }
+
+    #[test]
+    fn hard_faults_hit_both_paths_and_survive_reprogramming() {
+        let mut cfg = SimConfig::default();
+        cfg.sigma_noise = 0.0;
+        let sample = VariationSample::draw(&cfg);
+        let mut m = CimAnalogModel::from_sample(&cfg, &sample);
+        let mut rng = Rng::new(21);
+        let w = random_weights(&mut rng);
+        m.program(&w);
+        let plan = faults::FaultPlan::parse("col=3,adc=7:11,sa=9:0.45,cell=0:1:gmax").unwrap();
+        m.apply_faults(&plan.events[0].map);
+        assert_eq!(m.fault_column_mask(), plan.events[0].map.column_mask());
+        let batch = 8;
+        let x = random_inputs(&mut rng, batch);
+        let fast = m.forward_batch(&x, batch);
+        for b in 0..batch {
+            let golden = m.forward_golden(&x[b * c::N_ROWS..(b + 1) * c::N_ROWS]);
+            // a wedged ADC slice emits its code on both paths, exactly
+            assert_eq!(golden[7], 11);
+            assert_eq!(fast[b * c::M_COLS + 7], 11);
+            // a dead column and a railed SA are input-independent constants
+            assert_eq!(fast[b * c::M_COLS + 3], fast[3]);
+            assert_eq!(fast[b * c::M_COLS + 9], fast[9]);
+            // the two paths stay in lock-step under faults
+            for col in 0..c::M_COLS {
+                let f = fast[b * c::M_COLS + col] as i64;
+                assert!((f - golden[col] as i64).abs() <= 1, "b={b} col={col}");
+            }
+        }
+        // characterization reads see the wedge too (classifier input)
+        let avg = m.forward_averaged(&x[..c::N_ROWS], 4);
+        assert_eq!(avg[7], 11.0);
+        // reprogramming cannot heal silicon: every fault persists
+        m.program(&random_weights(&mut rng));
+        let fast2 = m.forward_batch(&x, batch);
+        assert_eq!(fast2[3], fast[3]);
+        assert_eq!(fast2[7], 11);
+        assert_eq!(fast2[9], fast[9]);
     }
 
     #[test]

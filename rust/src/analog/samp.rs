@@ -68,6 +68,10 @@ pub struct SummingAmp {
     pub pot_p: u32,
     pub pot_n: u32,
     pub cal: u32,
+    /// hard fault: output railed to a constant voltage [V] regardless of
+    /// input currents or trims (amp latch-up / broken feedback). `None`
+    /// for a healthy amp.
+    pub stuck: Option<f64>,
 }
 
 impl Default for SummingAmp {
@@ -80,6 +84,7 @@ impl Default for SummingAmp {
             pot_p: rsa_to_pot(c::R_SA_NOM),
             pot_n: rsa_to_pot(c::R_SA_NOM),
             cal: vcal_to_cal(c::V_CAL_NOM),
+            stuck: None,
         }
     }
 }
@@ -98,8 +103,12 @@ impl SummingAmp {
     }
 
     /// Eq. (4) with per-line gains plus cubic distortion: the actual SA
-    /// output voltage.
+    /// output voltage. A railed amp returns its stuck voltage no matter
+    /// what flows in.
     pub fn output(&self, i_pos: f64, i_neg: f64) -> f64 {
+        if let Some(v) = self.stuck {
+            return v;
+        }
         let v_lin = self.vcal() + self.alpha_p * self.rsa_p() * i_pos
             - self.alpha_n * self.rsa_n() * i_neg
             + self.beta;
@@ -172,6 +181,15 @@ mod tests {
         assert!(above > sa.vcal() && below < sa.vcal());
         // symmetric for equal currents with ideal gains
         assert!(((above - sa.vcal()) + (below - sa.vcal())).abs() < 1e-15);
+    }
+
+    #[test]
+    fn stuck_amp_rails_output() {
+        let sa = SummingAmp { stuck: Some(0.42), ..Default::default() };
+        assert_eq!(sa.output(5e-6, 0.0), 0.42);
+        assert_eq!(sa.output(0.0, 9e-6), 0.42);
+        let healthy = SummingAmp::default();
+        assert_ne!(healthy.output(5e-6, 0.0), healthy.output(0.0, 9e-6));
     }
 
     #[test]

@@ -117,6 +117,11 @@ pub struct SimConfig {
     /// becomes a moving target and periodic recalibration (the
     /// calibrator daemon) becomes load-bearing.
     pub sigma_drift: f64,
+    /// hard-fault injection plan (compact spec string, see
+    /// `analog::faults::FaultPlan::parse`). `None` = healthy silicon.
+    /// Threaded into each `ClusterCore`, which applies the events
+    /// targeting its own id — immediately or at the scheduled MAC count.
+    pub faults: Option<String>,
     /// BISC: number of characterization test vectors (Z, Section VI-C)
     pub bisc_test_points: usize,
     /// BISC: averaging reads per test point
@@ -141,6 +146,7 @@ impl Default for SimConfig {
             kappa_reg: crate::analog::consts::KAPPA_REG_DEFAULT,
             sigma_noise: 0.0005,
             sigma_drift: 0.0,
+            faults: None,
             bisc_test_points: 8,
             bisc_averages: 4,
             bisc_ref_margin: 0.08,
@@ -165,6 +171,7 @@ impl SimConfig {
             kappa_reg: raw.get_f64("parasitics.kappa_reg", d.kappa_reg),
             sigma_noise: raw.get_f64("noise.sigma_v", d.sigma_noise),
             sigma_drift: raw.get_f64("drift.sigma_v", d.sigma_drift),
+            faults: Some(raw.get_str("faults.plan", "")).filter(|s| !s.is_empty()),
             bisc_test_points: raw.get_u64("bisc.test_points", d.bisc_test_points as u64) as usize,
             bisc_averages: raw.get_u64("bisc.averages", d.bisc_averages as u64) as usize,
             bisc_ref_margin: raw.get_f64("bisc.ref_margin", d.bisc_ref_margin),
@@ -216,6 +223,16 @@ mod tests {
         let d = SimConfig::default();
         assert_eq!(cfg.sigma_cell, d.sigma_cell);
         assert_eq!(cfg.bisc_test_points, d.bisc_test_points);
+    }
+
+    #[test]
+    fn fault_plan_key_flows_through() {
+        let raw = RawConfig::parse("[faults]\nplan = \"core=1,col=7\"\n").unwrap();
+        let cfg = SimConfig::from_raw(&raw);
+        assert_eq!(cfg.faults.as_deref(), Some("core=1,col=7"));
+        assert_eq!(SimConfig::from_raw(&RawConfig::parse("").unwrap()).faults, None);
+        // the plan survives the sigma-scaling ablation knob
+        assert_eq!(cfg.scaled(0.5).faults.as_deref(), Some("core=1,col=7"));
     }
 
     #[test]

@@ -260,6 +260,25 @@ pub trait MacBackend {
     fn program_model(&mut self, _model: u32, _weights: &[i32]) -> Result<(), String> {
         Err("backend does not support model reprogramming".to_string())
     }
+
+    /// Strike the die with a hard-fault plan (chaos drills /
+    /// degraded-mode testing): parse `plan` (see
+    /// `crate::analog::faults::FaultPlan::parse`) and apply the events
+    /// targeting this backend's core — immediately, or armed to fire at
+    /// a future served-MAC count. The default rejects — only backends
+    /// that model physical silicon can be wounded.
+    fn inject_faults(&mut self, _plan: &str) -> Result<(), String> {
+        Err("backend does not support fault injection".to_string())
+    }
+
+    /// Classify per-column permanent faults AFTER a recalibration
+    /// attempt: `Some(mask)` with bit `col` set for every column whose
+    /// transfer stays broken with fresh trims (dead/railed — calibration
+    /// cannot help), or `None` if unsupported. `Some(0)`: classified,
+    /// healthy.
+    fn classify_faults(&mut self, _engine: &BiscEngine) -> Option<u32> {
+        None
+    }
 }
 
 // NOTE: the lifecycle methods stay at their `None` defaults here — BISC
@@ -342,13 +361,17 @@ enum JobKind {
     Drain,
     Rollout,
     Health,
+    Faults,
 }
 
 impl JobKind {
     /// Whether this kind is a seq barrier (drain semantics): work
     /// admitted before it completes first, work admitted after it waits.
+    /// Fault injection is a barrier so every job admitted before it is
+    /// answered from healthy silicon — the wound lands at a
+    /// deterministic point in the job stream.
     fn is_barrier(self) -> bool {
-        matches!(self, JobKind::Drain | JobKind::Rollout)
+        matches!(self, JobKind::Drain | JobKind::Rollout | JobKind::Faults)
     }
 }
 
@@ -359,6 +382,7 @@ fn kind_of(job: &Job) -> JobKind {
         Job::Drain => JobKind::Drain,
         Job::Rollout { .. } => JobKind::Rollout,
         Job::Health => JobKind::Health,
+        Job::Faults(_) => JobKind::Faults,
     }
 }
 
@@ -433,7 +457,7 @@ impl Batcher {
                     (Some(weights.len()), want)
                 }
             }
-            Job::Drain | Job::Health => (None, rows),
+            Job::Drain | Job::Health | Job::Faults(_) => (None, rows),
         };
         if let Some(got) = bad {
             stats.rejected += env.weight as u64;
@@ -711,9 +735,10 @@ impl Batcher {
         }
     }
 
-    /// Drain lifecycle step: recalibrate the die and rejoin the scheduler
-    /// if the residual is back inside the band. Control jobs are not
-    /// counted in request statistics.
+    /// Drain lifecycle step: recalibrate the die, classify what the
+    /// trims could NOT fix, and either retire (permanent faults), rejoin
+    /// (residual back inside the band), or stay fenced. Control jobs are
+    /// not counted in request statistics.
     fn exec_drain<B: MacBackend>(
         p: Pending,
         backend: &mut B,
@@ -726,7 +751,19 @@ impl Batcher {
             // the die's trims changed: gather-side schedules holding
             // corrections measured against the old trims can detect it
             ctx.board.bump_recal_epoch(ctx.core);
-            if r <= ctx.health_band {
+            // transient vs permanent: calibration just ran, so a column
+            // whose transfer is STILL broken is a hard fault. Checked
+            // regardless of the band — one dead column is only 2 lines
+            // of 2*M in the MEAN residual and can hide inside it.
+            let mask = ctx.engine.as_ref().and_then(|e| backend.classify_faults(e)).unwrap_or(0);
+            if mask != 0 {
+                ctx.board.retire(ctx.core, mask);
+                println!(
+                    "core {} retired: permanent fault columns {mask:#010x} \
+                     survive recalibration (residual {r:.4}) — fenced for good",
+                    ctx.core
+                );
+            } else if r <= ctx.health_band {
                 ctx.board.unfence(ctx.core);
             } else {
                 ctx.board.fence(ctx.core);
@@ -742,6 +779,8 @@ impl Batcher {
             recalibrated,
             recal_epoch: ctx.board.recal_epoch(ctx.core),
             model: ctx.board.resident_model(ctx.core),
+            retired: ctx.board.is_retired(ctx.core),
+            fault_mask: ctx.board.fault_mask(ctx.core),
         };
         ctx.board.sub_in_flight(ctx.core, p.env.weight);
         p.env.reply.send(Ok(JobReply::Health(health)));
@@ -804,23 +843,61 @@ impl Batcher {
             recalibrated,
             recal_epoch: ctx.board.recal_epoch(ctx.core),
             model: ctx.board.resident_model(ctx.core),
+            retired: ctx.board.is_retired(ctx.core),
+            fault_mask: ctx.board.fault_mask(ctx.core),
         };
         ctx.board.sub_in_flight(ctx.core, weight);
         reply.send(Ok(JobReply::Health(health)));
     }
 
-    /// Execute a parked/popped barrier job by its kind (drain or
-    /// rollout) — the two share the barrier machinery in `run`.
+    /// Fault-injection lifecycle step, running AFTER the barrier has
+    /// drained every pre-injection job: hand the plan to the backend and
+    /// keep serving on the wounded die. The core is deliberately NOT
+    /// fenced — the point of a chaos drill is to watch the health loop
+    /// (probe → drain → classify → retire) catch the damage on its own.
+    fn exec_faults<B: MacBackend>(p: Pending, backend: &mut B, ctx: &CoreContext) {
+        let env = p.env;
+        let (weight, reply) = (env.weight, env.reply);
+        let Job::Faults(plan) = env.job else {
+            // dispatch invariant broken — same degradation as exec_batch
+            ctx.board.sub_in_flight(ctx.core, weight);
+            reply.send(Err(ServeError::Backend(
+                "exec_faults dispatched on a non-faults job".to_string(),
+            )));
+            return;
+        };
+        if let Err(msg) = backend.inject_faults(&plan) {
+            ctx.board.sub_in_flight(ctx.core, weight);
+            reply.send(Err(ServeError::Backend(msg)));
+            return;
+        }
+        let health = CoreHealth {
+            core: ctx.core,
+            residual: None,
+            fenced: ctx.board.is_fenced(ctx.core),
+            recalibrated: false,
+            recal_epoch: ctx.board.recal_epoch(ctx.core),
+            model: ctx.board.resident_model(ctx.core),
+            retired: ctx.board.is_retired(ctx.core),
+            fault_mask: ctx.board.fault_mask(ctx.core),
+        };
+        ctx.board.sub_in_flight(ctx.core, weight);
+        reply.send(Ok(JobReply::Health(health)));
+    }
+
+    /// Execute a parked/popped barrier job by its kind (drain, rollout,
+    /// or fault injection) — the three share the barrier machinery in
+    /// `run`.
     fn exec_barrier<B: MacBackend>(
         p: Pending,
         backend: &mut B,
         ctx: &CoreContext,
         models: &mut Vec<ModelStats>,
     ) {
-        if kind_of(&p.env.job) == JobKind::Rollout {
-            Self::exec_rollout(p, backend, ctx, models);
-        } else {
-            Self::exec_drain(p, backend, ctx, models);
+        match kind_of(&p.env.job) {
+            JobKind::Rollout => Self::exec_rollout(p, backend, ctx, models),
+            JobKind::Faults => Self::exec_faults(p, backend, ctx),
+            _ => Self::exec_drain(p, backend, ctx, models),
         }
     }
 
@@ -840,6 +917,8 @@ impl Batcher {
             recalibrated: false,
             recal_epoch: ctx.board.recal_epoch(ctx.core),
             model: ctx.board.resident_model(ctx.core),
+            retired: ctx.board.is_retired(ctx.core),
+            fault_mask: ctx.board.fault_mask(ctx.core),
         };
         ctx.board.sub_in_flight(ctx.core, p.env.weight);
         p.env.reply.send(Ok(JobReply::Health(health)));
@@ -1023,7 +1102,7 @@ impl Batcher {
                 JobKind::MacBatch => {
                     Self::exec_batch(top, backend, ctx, &mut stats, &mut models, &mut scratch)
                 }
-                JobKind::Drain | JobKind::Rollout => {
+                JobKind::Drain | JobKind::Rollout | JobKind::Faults => {
                     if queue.iter().any(|p| p.seq < top.seq) {
                         // earlier-admitted work still queued: park the
                         // barrier until it has all completed
@@ -1089,6 +1168,21 @@ mod tests {
         let mut model = programmed_model();
         let direct = model.forward_batch(&vec![30; c::N_ROWS], 1);
         assert_eq!(q, direct);
+        drop(client);
+        let (_backend, stats) = handle.join().unwrap();
+        assert_eq!(stats.requests, 1);
+    }
+
+    #[test]
+    fn faults_job_on_plain_backend_rejects_and_worker_survives() {
+        // a bare analog model cannot be wounded (no MAC counter, no
+        // restore path) — the job must answer a typed Backend error and
+        // the worker must keep serving
+        let (client, handle) = Batcher::default().spawn_solo(programmed_model());
+        let err = client.inject_faults(0, "core=0,col=3").unwrap_err();
+        assert!(matches!(err, ServeError::Backend(_)), "got {err:?}");
+        assert_eq!(client.mac(vec![30; c::N_ROWS]).unwrap().len(), c::M_COLS);
+        assert_eq!(client.board().in_flight(0), 0, "depth gauge leaked");
         drop(client);
         let (_backend, stats) = handle.join().unwrap();
         assert_eq!(stats.requests, 1);

@@ -357,12 +357,52 @@ impl BiscEngine {
     /// drifted die sits far above it (see
     /// [`crate::coordinator::service::CoreContext::health_band`]).
     pub fn residual_gain_error(&self, model: &mut CimAnalogModel) -> f64 {
-        let fits = self.characterize_only(model);
-        fits.iter()
-            .map(|(p, n)| 0.5 * ((p.g_tot - 1.0).abs() + (n.g_tot - 1.0).abs()))
-            .sum::<f64>()
-            / fits.len() as f64
+        residual_from_fits(&self.characterize_only(model))
     }
+}
+
+/// Mean per-line |g_tot - 1| of an existing characterization — the metric
+/// of [`BiscEngine::residual_gain_error`] without re-measuring. The
+/// serving layer keeps the fits from its last health characterization and
+/// feeds them to both this and [`permanent_fault_mask`], so fault
+/// classification costs no extra reads.
+pub fn residual_from_fits(fits: &[(LineFit, LineFit)]) -> f64 {
+    if fits.is_empty() {
+        return 0.0;
+    }
+    fits.iter()
+        .map(|(p, n)| 0.5 * ((p.g_tot - 1.0).abs() + (n.g_tot - 1.0).abs()))
+        .sum::<f64>()
+        / fits.len() as f64
+}
+
+/// A line whose fitted gain magnitude sits below this is *flat* — the
+/// column does not respond to its inputs at all (dead column, railed SA,
+/// wedged ADC slice).
+pub const FAULT_DEAD_GAIN: f64 = 0.25;
+/// A post-calibration per-line gain error beyond this is outside anything
+/// the potentiometer trim range can produce on healthy silicon.
+pub const FAULT_GAIN_ERROR: f64 = 0.5;
+
+/// Per-column transient-vs-permanent fault classifier (DESIGN.md §16).
+///
+/// Call on a characterization taken AFTER a recalibration attempt: soft
+/// error (variation, drift) calibrates out, so a healthy column's line
+/// gains return to ~1 and clear both thresholds. A hard-faulted column
+/// cannot be pulled in — its transfer is flat or its gain error exceeds
+/// the trim range — and earns a bit in the returned mask. A nonzero mask
+/// means the residual floor is permanent: the drain barrier retires the
+/// core instead of rejoining it.
+pub fn permanent_fault_mask(fits: &[(LineFit, LineFit)]) -> u32 {
+    let mut mask = 0u32;
+    for (col, (p, n)) in fits.iter().enumerate().take(c::M_COLS) {
+        let worst = (p.g_tot - 1.0).abs().max((n.g_tot - 1.0).abs());
+        let flat = p.g_tot.abs() < FAULT_DEAD_GAIN || n.g_tot.abs() < FAULT_DEAD_GAIN;
+        if flat || worst > FAULT_GAIN_ERROR {
+            mask |= 1u32 << col;
+        }
+    }
+    mask
 }
 
 #[cfg(test)]
@@ -531,6 +571,27 @@ mod tests {
     fn latency_accounting() {
         let e = engine();
         assert_eq!(e.latency_sh_periods(), 8 * 4 * 2 * 32);
+    }
+
+    #[test]
+    fn classifier_flags_hard_faults_and_clears_soft_error() {
+        let mut m = noisy_model(31);
+        let e = engine();
+        // soft error calibrates out: zero permanent bits after a recal
+        e.calibrate(&mut m);
+        let fits = e.characterize_only(&mut m);
+        assert_eq!(permanent_fault_mask(&fits), 0, "soft error must classify transient");
+        assert!(residual_from_fits(&fits) < 0.05);
+        // hard faults persist across the next recal attempt
+        let plan =
+            crate::analog::faults::FaultPlan::parse("col=5,adc=11:40,sa=19:0.52").unwrap();
+        m.apply_faults(&plan.events[0].map);
+        e.calibrate(&mut m);
+        let fits = e.characterize_only(&mut m);
+        let mask = permanent_fault_mask(&fits);
+        assert_eq!(mask, (1 << 5) | (1 << 11) | (1 << 19), "mask {mask:#010x}");
+        // healthy columns still classify clean under the same fits
+        assert_eq!(mask & (1 << 0), 0);
     }
 
     #[test]

@@ -296,9 +296,13 @@ pub struct CoreCalStats {
     pub drain_failures: u64,
     /// Whether the core was fenced at the last sweep.
     pub fenced: bool,
+    /// Whether the core is RETIRED: the drain barrier's fault classifier
+    /// found permanent hard faults, the fence is final, and the daemon
+    /// no longer spends drains on it (a retired core can never rejoin).
+    pub retired: bool,
     /// Registry id of the model resident on the core at the last sweep
-    /// (`None` when nothing is resident — e.g. `program_all`-era
-    /// deployments that never recorded residency).
+    /// (`None` when nothing is resident — e.g. a core programmed
+    /// directly without a registry deploy recording residency).
     pub model: Option<u32>,
 }
 
@@ -436,6 +440,19 @@ fn run_with_brain<S: CimService, B: CalibratorBrain>(
                 Err(ServeError::Disconnected) => return,
                 Err(_) => continue,
             };
+            // a retired core is permanently fenced by the fault
+            // classifier: recalibration cannot pull a hard fault back in
+            // band, so spending drains (and characterization reads) on it
+            // would be a storm with no exit — record it and move on
+            if health.retired {
+                shared.update(core, |s| {
+                    s.retired = true;
+                    s.fenced = health.fenced;
+                    s.last_recal_epoch = health.recal_epoch;
+                    s.model = health.model;
+                });
+                continue;
+            }
             let healthy = svc.board().healthy_cores();
             let trend =
                 brain.observe(core, health.residual, health.fenced, health.recal_epoch, healthy);
@@ -445,6 +462,7 @@ fn run_with_brain<S: CimService, B: CalibratorBrain>(
                     s.trend = trend;
                 }
                 s.fenced = health.fenced;
+                s.retired = false;
                 s.last_recal_epoch = health.recal_epoch;
                 s.model = health.model;
             });
@@ -472,6 +490,7 @@ fn run_with_brain<S: CimService, B: CalibratorBrain>(
                         }
                         s.trend = h.residual.or(s.trend);
                         s.fenced = h.fenced;
+                        s.retired = h.retired;
                         s.last_recal_epoch = h.recal_epoch;
                         s.model = h.model;
                     });
@@ -630,5 +649,98 @@ mod tests {
             p.decide(0, 2, false, t0 + Duration::from_secs(71)),
             Some(DrainReason::Staleness)
         );
+    }
+
+    use crate::coordinator::service::{
+        CoreBoard, CoreHealth, Job, JobReply, Placement, SubmitOpts, Ticket,
+    };
+    use std::cell::{Cell, RefCell};
+    use std::rc::Rc;
+
+    /// A hand-cranked service: core 0 reports an out-of-band residual,
+    /// core 1 is clean, core 2 is RETIRED on the board. Disconnects
+    /// after a fixed submit budget so `run_with_brain` returns on its
+    /// own (the daemon treats `Disconnected` as "service gone").
+    struct RetiredFleet {
+        board: Arc<CoreBoard>,
+        drained: Rc<RefCell<Vec<usize>>>,
+        submits: Cell<u32>,
+    }
+
+    impl CimService for RetiredFleet {
+        fn board(&self) -> &CoreBoard {
+            &self.board
+        }
+
+        fn submit(&self, job: Job, opts: SubmitOpts) -> Result<Ticket<JobReply>, ServeError> {
+            let n = self.submits.get();
+            self.submits.set(n + 1);
+            if n >= 20 {
+                return Err(ServeError::Disconnected);
+            }
+            let core = match opts.placement {
+                Placement::Pinned(k) => k,
+                _ => 0,
+            };
+            let health = |residual: f64, recalibrated: bool| CoreHealth {
+                core,
+                residual: Some(residual),
+                fenced: self.board.is_fenced(core),
+                recalibrated,
+                recal_epoch: 0,
+                model: None,
+                retired: self.board.is_retired(core),
+                fault_mask: self.board.fault_mask(core),
+            };
+            let reply = match job {
+                Job::Health => health(if core == 0 { 0.5 } else { 0.01 }, false),
+                Job::Drain => {
+                    self.drained.borrow_mut().push(core);
+                    // the mock worker recalibrates clean and rejoins
+                    self.board.unfence(core);
+                    health(0.01, true)
+                }
+                other => unreachable!("daemon submitted {other:?}"),
+            };
+            let (tx, rx) = std::sync::mpsc::channel();
+            let _ = tx.send(Ok(JobReply::Health(reply)));
+            Ok(Ticket::new(rx, core))
+        }
+    }
+
+    #[test]
+    fn a_retired_core_is_never_drained_or_rejoined() {
+        let board = Arc::new(CoreBoard::new(3));
+        board.retire(2, 0b0000_0100);
+        let drained = Rc::new(RefCell::new(Vec::new()));
+        let svc = RetiredFleet {
+            board: Arc::clone(&board),
+            drained: Rc::clone(&drained),
+            submits: Cell::new(0),
+        };
+        let cfg = CalibratorConfig { period: Duration::from_millis(1), ..cfg() };
+        let brain = HostBrain::new(cfg.clone(), 3);
+        let stop = AtomicBool::new(false);
+        let shared = CalibratorShared::new(3);
+        run_with_brain(svc, cfg, brain, &stop, &shared);
+
+        // the out-of-band live core drains exactly once (cool-down holds
+        // afterwards); the retired core is never selected
+        assert_eq!(*drained.borrow(), vec![0], "only the out-of-band live core may drain");
+
+        let stats = shared.snapshot();
+        assert!(stats[2].retired, "the daemon must report the retirement");
+        assert!(stats[2].fenced, "retirement keeps the permanent fence visible");
+        assert_eq!(stats[2].samples, 0, "no residual samples are spent on a retired core");
+        assert_eq!(stats[2].trend, None);
+        assert_eq!(stats[2].drains + stats[2].drain_failures, 0);
+        assert_eq!(stats[0].drains, 1, "the live out-of-band core recalibrated");
+        assert!(!stats[0].retired);
+
+        // and nothing can rejoin it: the board refuses to unfence a
+        // retired core, so placement never sees it again
+        board.unfence(2);
+        assert!(board.is_fenced(2), "a retired core must never rejoin placement");
+        assert!(board.is_retired(2));
     }
 }

@@ -34,13 +34,17 @@
 //! native `MacBatch` jobs.
 #![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 
+use crate::analog::faults::{FaultMap, FaultPlan};
 use crate::analog::variation::VariationSample;
 use crate::analog::{consts as c, CimAnalogModel, Folded, MacScratch};
 use crate::config::SimConfig;
 use crate::coordinator::batcher::{
     merge_model_stats, Batcher, BatcherStats, MacBackend, ModelStats, ServeError,
 };
-use crate::coordinator::bisc::{AdcCharacterization, BiscEngine, BiscReport};
+use crate::coordinator::bisc::{
+    permanent_fault_mask, residual_from_fits, AdcCharacterization, BiscEngine, BiscReport, LineFit,
+};
+use crate::coordinator::dnn::ColumnPlan;
 use crate::coordinator::service::{
     CoreBoard, CoreContext, JobEnvelope, Residency, TileRef, DEFAULT_HEALTH_BAND,
 };
@@ -70,6 +74,12 @@ pub fn core_seed(base: u64, core: usize) -> u64 {
 /// re-folded after a recalibration changes the die's trims.
 pub struct TileBank {
     layers: Vec<BankLayer>,
+    /// variance-aware column placement ([`ColumnPlan`], DESIGN.md §16):
+    /// when present, every tile is folded with its columns permuted so
+    /// logical column `l` is served by physical column `plan.perm[l]`,
+    /// and [`MacBackend::forward_tile_into`] un-permutes the outputs —
+    /// callers always see logical column order.
+    plan: Option<ColumnPlan>,
 }
 
 /// One bank layer spec: the layer's ADC window plus its row-major
@@ -89,25 +99,52 @@ impl TileBank {
     /// model's ADC refs at the defaults; the array holds the last folded
     /// tile's weights.
     pub fn build(model: &mut CimAnalogModel, layers: Vec<BankLayerSpec>) -> Self {
+        Self::build_planned(model, layers, None)
+    }
+
+    /// [`TileBank::build`] with an optional variance-aware [`ColumnPlan`]:
+    /// tiles are folded column-permuted so high-importance logical columns
+    /// land on the die's healthiest physical columns.
+    pub fn build_planned(
+        model: &mut CimAnalogModel,
+        layers: Vec<BankLayerSpec>,
+        plan: Option<ColumnPlan>,
+    ) -> Self {
         let mut bank = Self {
             layers: layers
                 .into_iter()
                 .map(|(refs, raw)| BankLayer { refs, raw, folded: Vec::new() })
                 .collect(),
+            plan,
         };
         bank.refold(model);
         bank
     }
 
+    /// The installed column placement plan, if any.
+    pub fn plan(&self) -> Option<&ColumnPlan> {
+        self.plan.as_ref()
+    }
+
     /// Re-fold every tile under the model's CURRENT trims (required after
-    /// recalibration — folded coefficients bake the trims in).
+    /// recalibration — folded coefficients bake the trims in). The raw
+    /// tiles stay in logical column order; a [`ColumnPlan`] is applied
+    /// here, at fold time, so a wounded die's refold keeps the placement.
     pub fn refold(&mut self, model: &mut CimAnalogModel) {
+        let plan = &self.plan;
         for layer in &mut self.layers {
             model.set_adc_refs(layer.refs.0, layer.refs.1);
             layer.folded = layer
                 .raw
                 .iter()
-                .map(|row| row.iter().map(|t| model.fold_tile(t)).collect())
+                .map(|row| {
+                    row.iter()
+                        .map(|t| match plan {
+                            Some(p) => model.fold_tile(&p.permute_tile(t)),
+                            None => model.fold_tile(t),
+                        })
+                        .collect()
+                })
                 .collect();
         }
         model.set_adc_refs(c::V_ADC_L, c::V_ADC_H);
@@ -152,9 +189,23 @@ pub struct ClusterCore {
     /// `prepare_cluster`; seeded onto the [`CoreBoard`] by `serve_with`
     /// so `Placement::Model` can resolve from the first request
     pub resident: Option<Residency>,
+    /// scheduled hard-fault injections `(due_at_macs, map)` — welded into
+    /// the die by the forward paths once `macs_done` reaches the due
+    /// count ([`ClusterCore::schedule_faults`])
+    pending_faults: Vec<(u64, FaultMap)>,
+    /// MACs this core has served — the deterministic clock scheduled
+    /// fault injections fire against
+    pub macs_done: u64,
+    /// per-line fits from the most recent characterization (captured by
+    /// `recalibrate`), so the drain barrier's fault classifier
+    /// ([`MacBackend::classify_faults`]) costs no extra reads
+    last_fits: Option<Vec<(LineFit, LineFit)>>,
     /// reusable evaluation scratch for the tile fast path — steady-state
     /// tile serving runs without per-request heap allocation
     scratch: MacScratch,
+    /// reusable scratch for un-permuting planned tile outputs back to
+    /// logical column order
+    unperm: Vec<u32>,
 }
 
 impl ClusterCore {
@@ -177,6 +228,59 @@ impl ClusterCore {
             self.model.program(w);
         }
     }
+
+    /// Weld a fault map into the die NOW and re-derive every downstream
+    /// serving artifact: folded tiles bake the (now wounded) column
+    /// transfers in, so the bank is re-folded, and the workload weights
+    /// are restored over the refold's tile programming. The welds
+    /// themselves survive any future reprogram — silicon stays broken.
+    pub fn apply_fault_map(&mut self, map: &FaultMap) {
+        self.model.apply_faults(map);
+        if let Some(mut bank) = self.bank.take() {
+            bank.refold(&mut self.model);
+            self.bank = Some(bank);
+        }
+        self.restore_weights();
+    }
+
+    /// Schedule this core's share of a fault plan: events with `at=0`
+    /// strike immediately, the rest arm against the core's served-MAC
+    /// clock (`at` MACs from now) and strike inside the forward paths —
+    /// deterministic mid-run injection.
+    pub fn schedule_faults(&mut self, plan: &FaultPlan) {
+        for ev in plan.events_for(self.id) {
+            if ev.map.is_empty() {
+                continue;
+            }
+            if ev.at_macs == 0 {
+                self.apply_fault_map(&ev.map);
+            } else {
+                self.pending_faults.push((self.macs_done + ev.at_macs, ev.map.clone()));
+            }
+        }
+    }
+
+    /// Fire every scheduled fault whose due MAC count has been reached.
+    /// Called at the top of the forward paths; the fast-path cost when
+    /// nothing is scheduled is one `is_empty` check.
+    fn strike_due_faults(&mut self) {
+        if self.pending_faults.is_empty() {
+            return;
+        }
+        let now = self.macs_done;
+        let mut due: Vec<FaultMap> = Vec::new();
+        self.pending_faults.retain(|(at, map)| {
+            if *at <= now {
+                due.push(map.clone());
+                false
+            } else {
+                true
+            }
+        });
+        for map in &due {
+            self.apply_fault_map(map);
+        }
+    }
 }
 
 /// The cluster core is the serving backend: MACs run on the programmed
@@ -196,10 +300,15 @@ impl MacBackend for ClusterCore {
         batch: usize,
         out: &mut Vec<u32>,
     ) -> Result<(), String> {
+        // scheduled hard faults strike at a deterministic point in the
+        // served-MAC stream: requests admitted before the due count are
+        // answered by healthy silicon, everything after by the wound
+        self.strike_due_faults();
         // served traffic is the drift clock: every MAC read ages the die
         // (no-op on a frozen die, so the hot path stays free by default)
         self.model.advance_drift(batch as u64);
         self.model.forward_batch_into(x, batch, out);
+        self.macs_done += batch as u64;
         Ok(())
     }
 
@@ -221,6 +330,7 @@ impl MacBackend for ClusterCore {
         batch: usize,
         out: &mut Vec<u32>,
     ) -> Result<(), String> {
+        self.strike_due_faults();
         // tile reads age the die too; the pre-folded tile itself bakes
         // the coefficients of the trims it was folded under, so a
         // drifted die serves increasingly stale tile math until the next
@@ -240,12 +350,32 @@ impl MacBackend for ClusterCore {
             )
         })?;
         self.model.forward_folded_into(folded, x, batch, &mut self.scratch, out);
+        if let Some(plan) = bank.plan() {
+            // a planned bank serves logical column `l` on physical
+            // column `perm[l]` — un-permute each row's outputs so the
+            // physical placement is invisible to the gather side
+            self.unperm.clear();
+            self.unperm.extend_from_slice(out);
+            out.clear();
+            for r in 0..batch {
+                let base = r * c::M_COLS;
+                for &p in &plan.perm {
+                    out.push(self.unperm.get(base + p).copied().unwrap_or(0));
+                }
+            }
+        }
+        self.macs_done += batch as u64;
         Ok(())
     }
 
     fn recalibrate(&mut self, engine: &BiscEngine) -> Option<f64> {
         self.report = Some(engine.calibrate(&mut self.model));
-        let residual = engine.residual_gain_error(&mut self.model);
+        // one post-calibration characterization feeds both the residual
+        // and (kept in `last_fits`) the hard-fault classifier the drain
+        // barrier runs next — classification costs no extra reads
+        let fits = engine.characterize_only(&mut self.model);
+        let residual = residual_from_fits(&fits);
+        self.last_fits = Some(fits);
         // the trims changed: folded tiles bake trims in, so re-fold; the
         // gather-side digital corrections bake the OLD trims too, so the
         // refresher (when a schedule is installed) re-measures and
@@ -264,9 +394,33 @@ impl MacBackend for ClusterCore {
     }
 
     fn health_residual(&mut self, engine: &BiscEngine) -> Option<f64> {
-        let residual = engine.residual_gain_error(&mut self.model);
+        let fits = engine.characterize_only(&mut self.model);
+        let residual = residual_from_fits(&fits);
+        self.last_fits = Some(fits);
         self.restore_weights();
         Some(residual)
+    }
+
+    fn inject_faults(&mut self, plan: &str) -> Result<(), String> {
+        let plan = FaultPlan::parse(plan)?;
+        self.schedule_faults(&plan);
+        Ok(())
+    }
+
+    fn classify_faults(&mut self, engine: &BiscEngine) -> Option<u32> {
+        // classify on the fits the preceding recalibrate/health pass
+        // already measured; re-characterize only if none are on hand
+        let fits = match self.last_fits.take() {
+            Some(fits) => fits,
+            None => {
+                let fits = engine.characterize_only(&mut self.model);
+                self.restore_weights();
+                fits
+            }
+        };
+        let mask = permanent_fault_mask(&fits);
+        self.last_fits = Some(fits);
+        Some(mask)
     }
 
     fn program_model(&mut self, model: u32, weights: &[i32]) -> Result<(), String> {
@@ -316,7 +470,11 @@ impl CimCluster {
                     recal_count: 0,
                     refresher: None,
                     resident: None,
+                    pending_faults: Vec::new(),
+                    macs_done: 0,
+                    last_fits: None,
                     scratch: MacScratch::new(),
+                    unperm: Vec::new(),
                 }
             })
             .collect();
@@ -331,17 +489,34 @@ impl CimCluster {
         self.cores.is_empty()
     }
 
-    /// Program the same weight matrix on every core WITHOUT recording
-    /// model residency — `Placement::Model` cannot resolve against cores
-    /// programmed this way.
-    #[deprecated(
-        note = "use registry::deploy_uniform (records model residency); \
-                kept as a thin wrapper for tests"
-    )]
-    pub fn program_all(&mut self, weights: &[i32]) {
+    /// Schedule a fault plan's events on every core (each core takes the
+    /// events targeting its own id) — the `serve --faults` /
+    /// `acore-cim faults` injection entry point at the cluster level.
+    pub fn schedule_faults(&mut self, plan: &FaultPlan) {
         for core in &mut self.cores {
-            core.program(weights);
+            core.schedule_faults(plan);
         }
+    }
+
+    /// Parse and schedule the config's `faults.plan` spec, if any. A
+    /// malformed spec or an event targeting a core this cluster does not
+    /// have is an error — callers surface it instead of silently serving
+    /// a different chaos drill than the one asked for.
+    pub fn schedule_config_faults(&mut self, cfg: &SimConfig) -> Result<(), String> {
+        let Some(spec) = &cfg.faults else {
+            return Ok(());
+        };
+        let plan = FaultPlan::parse(spec)?;
+        if let Some(max) = plan.max_core() {
+            if max >= self.cores.len() {
+                return Err(format!(
+                    "fault plan targets core {max} but the cluster has {} cores",
+                    self.cores.len()
+                ));
+            }
+        }
+        self.schedule_faults(&plan);
+        Ok(())
     }
 
     /// Program one core (per-core weights: model sharding, A/B testing).
@@ -704,21 +879,123 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn program_all_wrapper_still_programs_every_core() {
+    fn program_core_is_typed_and_per_core() {
         let cfg = ideal_cfg();
         let mut cluster = CimCluster::new(&cfg, 2);
-        cluster.program_all(&vec![21; c::N_ROWS * c::M_COLS]);
-        for core in &cluster.cores {
-            assert_eq!(core.weights.as_ref().map(|w| w[0]), Some(21));
-            // the raw wrapper records no residency — that is the point
-            // of deprecating it in favor of registry deploys
-            assert!(core.resident.is_none());
-        }
-        // out-of-range program_core is a typed error now, not a no-op
+        // out-of-range program_core is a typed error, not a no-op
         assert!(cluster.program_core(9, &vec![1; c::N_ROWS * c::M_COLS]).is_err());
         cluster.program_core(1, &vec![30; c::N_ROWS * c::M_COLS]).unwrap();
         assert_eq!(cluster.cores[1].weights.as_ref().map(|w| w[0]), Some(30));
+        // the untouched core keeps no weights (per-core, not broadcast)
+        assert!(cluster.cores[0].weights.is_none());
+    }
+
+    #[test]
+    fn fault_plan_strikes_immediately_and_at_mac_count() {
+        let cfg = ideal_cfg();
+        let mut cluster = CimCluster::new(&cfg, 2);
+        let weights = vec![40; c::N_ROWS * c::M_COLS];
+        cluster.program_core(0, &weights).unwrap();
+        cluster.program_core(1, &weights).unwrap();
+
+        let mut reference = CimAnalogModel::ideal();
+        reference.program(&weights);
+        let x = vec![30; c::N_ROWS];
+        let healthy = reference.forward_batch(&x, 1);
+
+        // one immediate dead column, one SA rail armed 4 MACs out
+        let plan = FaultPlan::parse("core=0,col=3;core=0,at=4,sa=5:0.0").unwrap();
+        cluster.schedule_faults(&plan);
+
+        let q = cluster.cores[0].forward_batch(&x, 1).unwrap();
+        assert_ne!(q[3], healthy[3], "dead column should strike immediately");
+        assert_eq!(q[5], healthy[5], "scheduled fault must not strike early");
+        for _ in 0..3 {
+            cluster.cores[0].forward_batch(&x, 1).unwrap();
+        }
+        // macs_done reached the due count: the next forward strikes first
+        let q = cluster.cores[0].forward_batch(&x, 1).unwrap();
+        assert_ne!(q[5], healthy[5], "armed fault should strike at its MAC count");
+        assert_ne!(q[3], healthy[3], "welds are permanent");
+        // the other core's silicon is untouched
+        assert_eq!(cluster.cores[1].forward_batch(&x, 1).unwrap(), healthy);
+    }
+
+    #[test]
+    fn recalibration_classifies_permanent_faults() {
+        let cfg = ideal_cfg();
+        let mut cluster = CimCluster::new(&cfg, 1);
+        cluster.program_core(0, &vec![40; c::N_ROWS * c::M_COLS]).unwrap();
+        let engine = BiscEngine::from_config(&cfg, AdcCharacterization::ideal());
+        let core = &mut cluster.cores[0];
+
+        // healthy die: recal leaves no permanent mask
+        let r0 = core.recalibrate(&engine).unwrap();
+        assert!(r0 < 0.05, "ideal die residual {r0}");
+        assert_eq!(core.classify_faults(&engine), Some(0));
+
+        // weld a column dead via the MacBackend injection hook, then
+        // recalibrate: the residual floor persists and the classifier
+        // pins it on exactly the dead column
+        core.inject_faults("core=0,col=7").unwrap();
+        let r1 = core.recalibrate(&engine).unwrap();
+        assert!(r1 > r0, "a dead column must raise the post-recal residual");
+        assert_eq!(core.classify_faults(&engine), Some(1 << 7));
+        // a malformed plan is a typed error
+        assert!(core.inject_faults("col=99").is_err());
+    }
+
+    #[test]
+    fn config_fault_plans_are_validated_against_the_cluster() {
+        let mut cfg = ideal_cfg();
+        let mut cluster = CimCluster::new(&cfg, 2);
+        cfg.faults = Some("core=1,col=0".into());
+        assert!(cluster.schedule_config_faults(&cfg).is_ok());
+        cfg.faults = Some("core=5,col=0".into());
+        let err = cluster.schedule_config_faults(&cfg).unwrap_err();
+        assert!(err.contains("core 5"), "unexpected error: {err}");
+        cfg.faults = Some("col=banana".into());
+        assert!(cluster.schedule_config_faults(&cfg).is_err());
+        cfg.faults = None;
+        assert!(cluster.schedule_config_faults(&cfg).is_ok());
+    }
+
+    #[test]
+    fn planned_bank_unpermutes_outputs_to_logical_order() {
+        let cfg = ideal_cfg();
+        let mut cluster = CimCluster::new(&cfg, 1);
+        let mut weights = vec![0i32; c::N_ROWS * c::M_COLS];
+        for r in 0..c::N_ROWS {
+            for col in 0..c::M_COLS {
+                // distinct per-column weights so a permutation shows
+                weights[r * c::M_COLS + col] = col as i32;
+            }
+        }
+        let x = vec![12; c::N_ROWS];
+        let mut reference = CimAnalogModel::ideal();
+        let folded = reference.fold_tile(&weights);
+        let expect = reference.forward_folded(&folded, &x, 1);
+
+        // a column-reversing plan: logical l served by physical M-1-l
+        let plan = ColumnPlan::from_perm((0..c::M_COLS).rev().collect());
+        let core = &mut cluster.cores[0];
+        let bank = TileBank::build_planned(
+            &mut core.model,
+            vec![((c::V_ADC_L, c::V_ADC_H), Arc::new(vec![vec![weights.clone()]]))],
+            Some(plan),
+        );
+        assert!(bank.plan().is_some());
+        core.install_bank(bank);
+        let tile = TileRef { layer: 0, tr: 0, tc: 0 };
+        // on an ideal die the physical placement is invisible: the
+        // un-permuted outputs match the unplanned reference exactly
+        let q = core.forward_tile(&tile, &x, 1).unwrap();
+        assert_eq!(q, expect);
+        // batch of 2 rows un-permutes per row
+        let x2: Vec<i32> = x.iter().chain(x.iter()).copied().collect();
+        let q2 = core.forward_tile(&tile, &x2, 2).unwrap();
+        assert_eq!(&q2[..c::M_COLS], &expect[..]);
+        assert_eq!(&q2[c::M_COLS..], &expect[..]);
     }
 
     #[test]

@@ -7,6 +7,7 @@
 use crate::analog::{consts as c, CimAnalogModel, MacScratch};
 use crate::config::SimConfig;
 use crate::coordinator::batcher::ServeError;
+use crate::coordinator::bisc::{LineFit, FAULT_DEAD_GAIN};
 use crate::coordinator::cluster::TileBank;
 use crate::coordinator::registry::DEFAULT_MODEL;
 use crate::coordinator::service::{
@@ -89,6 +90,145 @@ pub struct CimMlp {
 pub struct LayerTrim {
     pub g: Vec<f64>,
     pub eps: Vec<f64>,
+}
+
+/// Variance-aware column placement for one core (DESIGN.md §16):
+/// `perm[l] = p` maps logical tile column `l` onto physical array column
+/// `p`; `inv` is the inverse map. The core's
+/// [`TileBank`] folds tiles with the permutation applied and the worker
+/// un-permutes every tile reply, so the gather side always sees logical
+/// column order — a plan only decides WHICH physical column serves each
+/// logical one. Built per core by [`ColumnPlan::from_scores`]: the most
+/// important logical columns (by aggregate weight magnitude) land on the
+/// lowest-variance healthy physical columns, and — under hard faults —
+/// the least-loaded logical columns (zero padding, weak hidden units)
+/// soak up the dead silicon.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ColumnPlan {
+    /// `perm[logical] = physical`
+    pub perm: Vec<usize>,
+    /// `inv[physical] = logical`
+    pub inv: Vec<usize>,
+}
+
+impl ColumnPlan {
+    /// The identity placement (logical column l served by physical l).
+    pub fn identity() -> Self {
+        Self::from_perm((0..c::M_COLS).collect())
+    }
+
+    /// Build from an explicit permutation (`perm[logical] = physical`).
+    /// Panics unless `perm` is a permutation of `0..M_COLS`.
+    pub fn from_perm(perm: Vec<usize>) -> Self {
+        assert_eq!(perm.len(), c::M_COLS, "plan must cover every column");
+        let mut inv = vec![usize::MAX; c::M_COLS];
+        for (l, &p) in perm.iter().enumerate() {
+            assert!(p < c::M_COLS && inv[p] == usize::MAX, "not a permutation");
+            inv[p] = l;
+        }
+        Self { perm, inv }
+    }
+
+    /// Pair the most important logical columns (descending `importance`)
+    /// with the healthiest physical columns (ascending variance `score`;
+    /// a faulty column scores `f64::INFINITY`). Ties break on column
+    /// index so the plan is deterministic.
+    pub fn from_scores(scores: &[f64], importance: &[f64]) -> Self {
+        let at = |v: &[f64], i: usize, d: f64| v.get(i).copied().unwrap_or(d);
+        let mut phys: Vec<usize> = (0..c::M_COLS).collect();
+        phys.sort_by(|&a, &b| {
+            at(scores, a, f64::INFINITY)
+                .total_cmp(&at(scores, b, f64::INFINITY))
+                .then(a.cmp(&b))
+        });
+        let mut logical: Vec<usize> = (0..c::M_COLS).collect();
+        logical.sort_by(|&a, &b| {
+            at(importance, b, 0.0).total_cmp(&at(importance, a, 0.0)).then(a.cmp(&b))
+        });
+        let mut perm = vec![0usize; c::M_COLS];
+        for (rank, &l) in logical.iter().enumerate() {
+            perm[l] = phys[rank];
+        }
+        Self::from_perm(perm)
+    }
+
+    /// Whether this is the identity placement.
+    pub fn is_identity(&self) -> bool {
+        self.perm.iter().enumerate().all(|(l, &p)| l == p)
+    }
+
+    /// Apply the placement to a row-major N*M tile: logical column `l`'s
+    /// weights move to physical column `perm[l]`.
+    pub fn permute_tile(&self, tile: &[i32]) -> Vec<i32> {
+        let rows = tile.len() / c::M_COLS;
+        let mut out = vec![0i32; tile.len()];
+        for r in 0..rows {
+            let base = r * c::M_COLS;
+            for (l, &p) in self.perm.iter().enumerate() {
+                out[base + p] = tile[base + l];
+            }
+        }
+        out
+    }
+
+    /// Reorder a physically indexed per-column vector into logical order
+    /// (`out[l] = vals[perm[l]]`). Corrections are measured per PHYSICAL
+    /// column but the gather side indexes them by logical column (the
+    /// worker un-permutes tile outputs before replying), so every
+    /// correction vector passes through here before publication.
+    pub fn to_logical(&self, vals: &[f64]) -> Vec<f64> {
+        self.perm.iter().map(|&p| vals.get(p).copied().unwrap_or(0.0)).collect()
+    }
+
+    fn reorder_trim(&self, trim: &LayerTrim) -> LayerTrim {
+        LayerTrim { g: self.to_logical(&trim.g), eps: self.to_logical(&trim.eps) }
+    }
+}
+
+/// How [`CimMlp::prepare_cluster_with`] places tile columns onto the
+/// physical array columns of each core.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TilePlacement {
+    /// logical column l on physical column l — placement-blind
+    #[default]
+    Naive,
+    /// measure per-column variance on every core and permute columns so
+    /// high-magnitude weights land on low-variance healthy columns
+    VarianceAware,
+}
+
+/// Per-physical-column placement score from a characterization: the worst
+/// line's |g_tot - 1| (the calibrated variance estimate), forced to
+/// infinity for flat lines so a hard-faulted column always ranks last.
+fn fault_aware_scores(fits: &[(LineFit, LineFit)]) -> Vec<f64> {
+    fits.iter()
+        .map(|(p, n)| {
+            if p.g_tot.abs() < FAULT_DEAD_GAIN || n.g_tot.abs() < FAULT_DEAD_GAIN {
+                f64::INFINITY
+            } else {
+                (p.g_tot - 1.0).abs().max((n.g_tot - 1.0).abs())
+            }
+        })
+        .collect()
+}
+
+/// Aggregate |weight| landing on each tile-local column across every tile
+/// of both layers — the logical-column importance
+/// [`ColumnPlan::from_scores`] ranks by. A column that is zero padding in
+/// every tile scores 0 and soaks up the faultiest silicon; class columns
+/// (used by every layer-2 tile) rank near the top and get the healthiest.
+fn tile_column_importance(layers: [&TiledLayer; 2]) -> Vec<f64> {
+    let mut imp = vec![0.0f64; c::M_COLS];
+    for layer in layers {
+        for row in &layer.tiles {
+            for tile in row {
+                for (i, &w) in tile.iter().enumerate() {
+                    imp[i % c::M_COLS] += w.unsigned_abs() as f64;
+                }
+            }
+        }
+    }
+    imp
 }
 
 /// Execution statistics of one inference.
@@ -686,6 +826,10 @@ pub struct TrimRefresher {
     refs2: (f64, f64),
     /// `Some` => re-measure the per-layer zero points on these tiles
     zp_tiles: Option<(Vec<i32>, Vec<i32>)>,
+    /// this core's column placement: zero points are measured on the
+    /// permuted tile and every correction vector is re-published in
+    /// logical order, matching the un-permuted tile replies
+    plan: Option<ColumnPlan>,
     corrections: SharedCorrections,
 }
 
@@ -696,16 +840,28 @@ impl TrimRefresher {
     /// exactly like the other lifecycle steps.
     pub fn refresh(&self, core: usize, model: &mut CimAnalogModel, epoch: u64) {
         let trims = self.cfg.as_ref().map(|cfg| {
-            (
-                measure_layer_trim(model, cfg, self.refs1),
-                measure_layer_trim(model, cfg, self.refs2),
-            )
+            let t1 = measure_layer_trim(model, cfg, self.refs1);
+            let t2 = measure_layer_trim(model, cfg, self.refs2);
+            match &self.plan {
+                Some(p) => (p.reorder_trim(&t1), p.reorder_trim(&t2)),
+                None => (t1, t2),
+            }
         });
         let zps = self.zp_tiles.as_ref().map(|(t1, t2)| {
-            (
-                measure_zero_point_at(model, self.refs1, t1),
-                measure_zero_point_at(model, self.refs2, t2),
-            )
+            let (z1, z2) = match &self.plan {
+                Some(p) => (
+                    measure_zero_point_at(model, self.refs1, &p.permute_tile(t1)),
+                    measure_zero_point_at(model, self.refs2, &p.permute_tile(t2)),
+                ),
+                None => (
+                    measure_zero_point_at(model, self.refs1, t1),
+                    measure_zero_point_at(model, self.refs2, t2),
+                ),
+            };
+            match &self.plan {
+                Some(p) => (p.to_logical(&z1), p.to_logical(&z2)),
+                None => (z1, z2),
+            }
         });
         model.set_adc_refs(c::V_ADC_L, c::V_ADC_H);
         let mut slot = self.corrections[core].lock().unwrap();
@@ -744,12 +900,35 @@ impl CimMlp {
         cluster: &mut crate::coordinator::cluster::CimCluster,
         cfg: Option<&crate::config::SimConfig>,
     ) -> ClusterSchedule {
+        self.prepare_cluster_with(cluster, cfg, TilePlacement::Naive)
+    }
+
+    /// [`CimMlp::prepare_cluster`] with an explicit column placement
+    /// policy. Under [`TilePlacement::VarianceAware`] every core first
+    /// characterizes its die, ranks physical columns by the calibrated
+    /// variance estimate (hard-faulted columns rank last at infinite
+    /// score), and folds its bank through a [`ColumnPlan`] that lands the
+    /// highest-|weight| logical columns on the healthiest silicon — the
+    /// degraded-mode placement that keeps a wounded-but-serving die close
+    /// to its pre-fault accuracy (DESIGN.md §16, EXPERIMENTS.md).
+    pub fn prepare_cluster_with(
+        &self,
+        cluster: &mut crate::coordinator::cluster::CimCluster,
+        cfg: Option<&crate::config::SimConfig>,
+        placement: TilePlacement,
+    ) -> ClusterSchedule {
         type CoreResult = (
             usize,
             Option<(LayerTrim, LayerTrim)>,
             Option<(Vec<f64>, Vec<f64>)>,
+            Option<ColumnPlan>,
         );
         let want_zp = self.zp1.is_some() || self.zp2.is_some();
+        // logical-column importance is a property of the WEIGHTS, shared
+        // by every core; the per-core part is the physical column scores
+        let importance = (placement == TilePlacement::VarianceAware)
+            .then(|| tile_column_importance([&self.layer1, &self.layer2]));
+        let importance = &importance;
         // one shared copy of each layer's immutable raw tile grid: every
         // core folds the same tiles, only the folded coefficients are
         // per-core
@@ -763,30 +942,61 @@ impl CimMlp {
                     let raw1 = std::sync::Arc::clone(&raw1);
                     let raw2 = std::sync::Arc::clone(&raw2);
                     s.spawn(move || {
+                        // variance-aware: score THIS die's columns and
+                        // derive its placement before anything is folded
+                        // or measured against it
+                        let plan = importance.as_ref().map(|imp| {
+                            use crate::coordinator::bisc::{AdcCharacterization, BiscEngine};
+                            let score_cfg = cfg.cloned().unwrap_or_default();
+                            let engine =
+                                BiscEngine::from_config(&score_cfg, AdcCharacterization::ideal());
+                            let fits = engine.characterize_only(&mut core.model);
+                            ColumnPlan::from_scores(&fault_aware_scores(&fits), imp)
+                        });
                         let trims = cfg.map(|cc| {
-                            (
-                                self.digital_trim_at(&mut core.model, cc, self.refs1),
-                                self.digital_trim_at(&mut core.model, cc, self.refs2),
-                            )
+                            let t1 = self.digital_trim_at(&mut core.model, cc, self.refs1);
+                            let t2 = self.digital_trim_at(&mut core.model, cc, self.refs2);
+                            // trims are measured per physical column; the
+                            // gather side indexes them logically
+                            match &plan {
+                                Some(p) => (p.reorder_trim(&t1), p.reorder_trim(&t2)),
+                                None => (t1, t2),
+                            }
                         });
                         // the CimMlp carries a zero-point correction: this
-                        // core is a different die, re-measure its own
-                        let zps = want_zp.then(|| {
-                            (
+                        // core is a different die, re-measure its own (on
+                        // the PERMUTED tile when a plan is installed, so
+                        // the zero points match the columns as served)
+                        let zps = want_zp.then(|| match &plan {
+                            Some(p) => {
+                                let z1 = measure_zero_point_at(
+                                    &mut core.model,
+                                    self.refs1,
+                                    &p.permute_tile(&self.layer1.tiles[0][0]),
+                                );
+                                let z2 = measure_zero_point_at(
+                                    &mut core.model,
+                                    self.refs2,
+                                    &p.permute_tile(&self.layer2.tiles[0][0]),
+                                );
+                                (p.to_logical(&z1), p.to_logical(&z2))
+                            }
+                            None => (
                                 self.zero_point_at(&mut core.model, self.refs1, 1),
                                 self.zero_point_at(&mut core.model, self.refs2, 2),
-                            )
+                            ),
                         });
-                        let bank = TileBank::build(
+                        let bank = TileBank::build_planned(
                             &mut core.model,
                             vec![(self.refs1, raw1), (self.refs2, raw2)],
+                            plan.clone(),
                         );
                         core.install_bank(bank);
                         // trim measurement + folding programmed test and
                         // tile weights over the array; put the workload
                         // weights back so plain Mac jobs stay correct
                         core.restore_weights();
-                        (core.id, trims, zps)
+                        (core.id, trims, zps, plan)
                     })
                 })
                 .collect();
@@ -796,6 +1006,7 @@ impl CimMlp {
                 .collect()
         });
         results.sort_by_key(|r| r.0);
+        let plans: Vec<Option<ColumnPlan>> = results.iter().map(|r| r.3.clone()).collect();
         // corrections were measured NOW, against the die's current
         // trims: stamp each with the die's recalibration clock
         // (`ClusterCore::recal_count`, which the serving board's epochs
@@ -805,7 +1016,7 @@ impl CimMlp {
             results
                 .into_iter()
                 .zip(&cluster.cores)
-                .map(|((_, t, z), core)| {
+                .map(|((_, t, z, _), core)| {
                     let (trim1, trim2) = match t {
                         Some((t1, t2)) => (Some(t1), Some(t2)),
                         None => (None, None),
@@ -837,6 +1048,7 @@ impl CimMlp {
             zp_tiles: want_zp.then(|| {
                 (self.layer1.tiles[0][0].clone(), self.layer2.tiles[0][0].clone())
             }),
+            plan: None,
             corrections: Arc::clone(&corrections),
         });
         // every core now holds the FULL folded bank for both layers:
@@ -856,8 +1068,14 @@ impl CimMlp {
                 }
             }
         }
-        for core in cluster.cores.iter_mut() {
-            core.refresher = refresher.clone();
+        for (core, plan) in cluster.cores.iter_mut().zip(plans) {
+            // each core's refresher carries that core's own column plan,
+            // so post-drain corrections stay in logical order
+            core.refresher = refresher.as_ref().map(|r| {
+                let mut r = r.clone();
+                r.plan = plan;
+                r
+            });
             core.resident = Some(Residency { model: DEFAULT_MODEL, tiles: tiles.clone() });
         }
         ClusterSchedule {
@@ -1121,6 +1339,93 @@ mod tests {
     fn tile_counts_match_paper_mapping() {
         assert_eq!(tile_counts(784, 72), (22, 3));
         assert_eq!(tile_counts(72, 10), (2, 1));
+    }
+
+    #[test]
+    fn column_plan_ranks_faulty_columns_last() {
+        // physical col 5 is dead (infinite score), col 2 is the
+        // healthiest; logical col 0 matters most, col 31 not at all
+        let mut scores = vec![0.05; c::M_COLS];
+        scores[5] = f64::INFINITY;
+        scores[2] = 0.001;
+        let importance: Vec<f64> = (0..c::M_COLS).map(|l| (c::M_COLS - l) as f64).collect();
+        let plan = ColumnPlan::from_scores(&scores, &importance);
+        assert_eq!(plan.perm[0], 2, "most important logical -> healthiest physical");
+        assert_eq!(plan.perm[31], 5, "least important logical -> dead physical");
+        // perm and inv are inverse
+        for l in 0..c::M_COLS {
+            assert_eq!(plan.inv[plan.perm[l]], l);
+        }
+        assert!(ColumnPlan::identity().is_identity());
+        assert!(!plan.is_identity());
+    }
+
+    #[test]
+    fn column_plan_permutes_tiles_and_corrections_consistently() {
+        let plan = ColumnPlan::from_perm((0..c::M_COLS).rev().collect());
+        let tile: Vec<i32> = (0..(c::N_ROWS * c::M_COLS) as i32).collect();
+        let permuted = plan.permute_tile(&tile);
+        for r in 0..c::N_ROWS {
+            for l in 0..c::M_COLS {
+                // logical l lives on physical perm[l]
+                assert_eq!(
+                    permuted[r * c::M_COLS + plan.perm[l]],
+                    tile[r * c::M_COLS + l]
+                );
+            }
+        }
+        // a physically indexed measurement comes back logical:
+        // to_logical(vals)[l] == vals[perm[l]]
+        let vals: Vec<f64> = (0..c::M_COLS).map(|p| p as f64).collect();
+        let logical = plan.to_logical(&vals);
+        for l in 0..c::M_COLS {
+            assert_eq!(logical[l], plan.perm[l] as f64);
+        }
+    }
+
+    #[test]
+    fn importance_counts_weight_mass_per_tile_column() {
+        // layer with cols < M_COLS: the padding columns weigh 0
+        let w = vec![3i32; 4 * 2]; // 4 rows x 2 cols
+        let layer = TiledLayer::new(&w, 4, 2);
+        let imp = tile_column_importance([&layer, &layer]);
+        assert_eq!(imp[0], 2.0 * 4.0 * 3.0);
+        assert_eq!(imp[1], 2.0 * 4.0 * 3.0);
+        for col in 2..c::M_COLS {
+            assert_eq!(imp[col], 0.0, "padding column {col} must weigh nothing");
+        }
+    }
+
+    #[test]
+    fn variance_aware_placement_matches_naive_on_ideal_dies() {
+        use crate::coordinator::batcher::Batcher;
+        let (cim_mlp, test_ds) = pipeline();
+        let mut cfg = SimConfig::default().scaled(0.0);
+        cfg.sigma_noise = 0.0;
+        // naive baseline
+        let mut cluster = crate::coordinator::cluster::CimCluster::new(&cfg, 1);
+        let sched = cim_mlp.prepare_cluster(&mut cluster, None);
+        let server = cluster.serve(Batcher::default());
+        let client = server.client();
+        let imgs: Vec<&[f32]> = (0..8).map(|i| test_ds.image(i)).collect();
+        let mut st = InferenceStats::default();
+        let naive = cim_mlp.infer_batch_service(&client, &sched, &imgs, &mut st).unwrap();
+        drop(client);
+        server.join();
+        // variance-aware on an identical ideal die: the permutation is
+        // invisible (identical columns), logits match exactly
+        let mut cluster = crate::coordinator::cluster::CimCluster::new(&cfg, 1);
+        let sched =
+            cim_mlp.prepare_cluster_with(&mut cluster, None, TilePlacement::VarianceAware);
+        let server = cluster.serve(Batcher::default());
+        let client = server.client();
+        let mut st = InferenceStats::default();
+        let planned = cim_mlp.infer_batch_service(&client, &sched, &imgs, &mut st).unwrap();
+        for (a, b) in naive.iter().flatten().zip(planned.iter().flatten()) {
+            assert!((a - b).abs() < 1e-3, "placement changed ideal-die logits: {a} vs {b}");
+        }
+        drop(client);
+        server.join();
     }
 
     #[test]

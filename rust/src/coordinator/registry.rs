@@ -133,8 +133,8 @@ impl ModelRegistry {
 }
 
 /// One-call single-model deployment: register `name` = `weights` and
-/// program it onto every core with residency recorded — the registry-
-/// driven replacement for the deprecated `CimCluster::program_all`.
+/// program it onto every core with residency recorded, so model-aware
+/// placement and the rollout guards work from the first job.
 pub fn deploy_uniform(
     cluster: &mut CimCluster,
     name: &str,

@@ -83,6 +83,13 @@ pub enum Job {
     /// Measure the core's BISC residual; a residual out of band fences
     /// the core (the scheduler stops placing jobs on it).
     Health,
+    /// Hard-fault injection (chaos testing / degraded-mode drills): a
+    /// [`Job::Drain`]-style barrier — queued work ahead of it completes
+    /// untouched — then the worker strikes its die with the compact
+    /// fault-plan spec (see `analog::faults::FaultPlan::parse`). Events
+    /// scheduled at a MAC count arm against the core's served-MAC
+    /// counter; immediate events weld before the next job runs.
+    Faults(String),
 }
 
 impl Job {
@@ -92,7 +99,7 @@ impl Job {
         match self {
             Job::Mac(_) => 1,
             Job::MacBatch { xs, .. } => xs.len().max(1),
-            Job::Drain | Job::Rollout { .. } | Job::Health => 1,
+            Job::Drain | Job::Rollout { .. } | Job::Health | Job::Faults(_) => 1,
         }
     }
 }
@@ -196,6 +203,13 @@ pub struct CoreHealth {
     /// is programmed). Lets a remote mirror track rollouts it never
     /// requested, the same way `recal_epoch` tracks foreign drains.
     pub model: Option<u32>,
+    /// Whether the core is retired: the drain barrier's fault classifier
+    /// found permanent (un-calibratable) hard faults, so the core is
+    /// fenced for good and can never rejoin ([`CoreBoard::retire`]).
+    pub retired: bool,
+    /// Per-column permanent-fault bitmask measured by the classifier
+    /// (bit `col`); 0 on a healthy core.
+    pub fault_mask: u32,
 }
 
 /// The typed reply to one [`Job`].
@@ -412,6 +426,13 @@ pub struct Residency {
 pub struct CoreBoard {
     depth: Vec<AtomicUsize>,
     fenced: Vec<AtomicBool>,
+    /// Permanently fenced: the drain barrier's fault classifier found
+    /// hard faults calibration cannot trim out. A retired core stays
+    /// fenced forever — [`CoreBoard::unfence`] refuses to clear it.
+    retired: Vec<AtomicBool>,
+    /// Per-column permanent-fault bitmask (bit `col`) measured by the
+    /// classifier when the core was retired; 0 on a healthy core.
+    fault_mask: Vec<AtomicU32>,
     recal_epoch: Vec<AtomicU64>,
     /// Resident model per core ([`NO_MODEL`] = nothing programmed).
     /// Lock-free so hot-path placement and per-request model accounting
@@ -428,6 +449,8 @@ impl CoreBoard {
         Self {
             depth: (0..cores).map(|_| AtomicUsize::new(0)).collect(),
             fenced: (0..cores).map(|_| AtomicBool::new(false)).collect(),
+            retired: (0..cores).map(|_| AtomicBool::new(false)).collect(),
+            fault_mask: (0..cores).map(|_| AtomicU32::new(0)).collect(),
             recal_epoch: (0..cores).map(|_| AtomicU64::new(0)).collect(),
             model: (0..cores).map(|_| AtomicU32::new(NO_MODEL)).collect(),
             tiles: (0..cores).map(|_| Mutex::new(Vec::new())).collect(),
@@ -465,8 +488,12 @@ impl CoreBoard {
         }
     }
 
-    /// Let `core` rejoin the scheduler.
+    /// Let `core` rejoin the scheduler. A retired core never rejoins —
+    /// its fence is permanent and this call is a no-op.
     pub fn unfence(&self, core: usize) {
+        if self.is_retired(core) {
+            return;
+        }
         if let Some(f) = self.fenced.get(core) {
             f.store(false, Ordering::Relaxed);
         }
@@ -476,6 +503,33 @@ impl CoreBoard {
     /// place on an index the board does not track.
     pub fn is_fenced(&self, core: usize) -> bool {
         self.fenced.get(core).is_none_or(|f| f.load(Ordering::Relaxed))
+    }
+
+    /// Permanently fence `core`: record the classifier's per-column
+    /// fault mask, mark it retired, and fence it. [`CoreBoard::unfence`]
+    /// refuses retired cores, so after this call no placement policy
+    /// ever selects `core` again; [`place`] resolves `Placement::Model`
+    /// around it via the surviving healthy holders, which is how DNN
+    /// tiles remap off a dying die.
+    pub fn retire(&self, core: usize, mask: u32) {
+        if let Some(m) = self.fault_mask.get(core) {
+            m.store(mask, Ordering::Relaxed);
+        }
+        if let Some(r) = self.retired.get(core) {
+            r.store(true, Ordering::Relaxed);
+        }
+        self.fence(core);
+    }
+
+    /// Out-of-range cores read as retired, mirroring [`CoreBoard::is_fenced`].
+    pub fn is_retired(&self, core: usize) -> bool {
+        self.retired.get(core).is_none_or(|r| r.load(Ordering::Relaxed))
+    }
+
+    /// The per-column permanent-fault bitmask recorded at retirement
+    /// (0: healthy, unclassified, or out of range).
+    pub fn fault_mask(&self, core: usize) -> u32 {
+        self.fault_mask.get(core).map_or(0, |m| m.load(Ordering::Relaxed))
     }
 
     /// Number of cores currently accepting placed jobs.
@@ -879,6 +933,19 @@ pub trait CimService {
             .wait()
     }
 
+    /// Inject a hard-fault plan on one core through the drain-style
+    /// barrier: every job admitted before it completes on healthy
+    /// silicon, then the worker strikes the die with the events of
+    /// `plan` that target this core (immediately or armed at a future
+    /// served-MAC count) and keeps serving — degraded — until the
+    /// calibrator notices. The core is NOT fenced: chaos drills measure
+    /// how the health loop reacts, so the wound must stay live.
+    fn inject_faults(&self, core: usize, plan: &str) -> Result<CoreHealth, ServeError> {
+        self.submit(Job::Faults(plan.to_string()), SubmitOpts::pinned(core))?
+            .typed::<CoreHealth>()
+            .wait()
+    }
+
     /// Scatter `n` MACs with up to `window` in flight, gathering every
     /// reply. On error the remaining in-flight tickets are still drained
     /// before the first error is returned.
@@ -1025,6 +1092,50 @@ mod tests {
         assert_eq!(Job::Drain.weight(), 1);
         assert_eq!(Job::Rollout { model: 0, weights: vec![0; 4] }.weight(), 1);
         assert_eq!(Job::Health.weight(), 1);
+        assert_eq!(Job::Faults("core=0,col=3".into()).weight(), 1);
+    }
+
+    #[test]
+    fn retirement_is_a_permanent_fence() {
+        let board = CoreBoard::new(3);
+        let rr = AtomicUsize::new(0);
+        assert!(!board.is_retired(1));
+        assert_eq!(board.fault_mask(1), 0);
+        board.retire(1, 0b1000_0010);
+        assert!(board.is_retired(1));
+        assert!(board.is_fenced(1));
+        assert_eq!(board.fault_mask(1), 0b1000_0010);
+        assert_eq!(board.healthy_cores(), 2);
+        // the drain barrier's rejoin path cannot resurrect a retired core
+        board.unfence(1);
+        assert!(board.is_fenced(1), "unfence resurrected a retired core");
+        // placement never selects it again
+        for _ in 0..6 {
+            assert_ne!(place(&board, &rr, Placement::RoundRobin).unwrap(), 1);
+        }
+        assert_ne!(place(&board, &rr, Placement::LeastLoaded).unwrap(), 1);
+        // a merely-fenced core still rejoins — retirement is the special case
+        board.fence(0);
+        board.unfence(0);
+        assert!(!board.is_fenced(0));
+        // out-of-range degrades like is_fenced: retired, mask 0
+        assert!(board.is_retired(99));
+        assert_eq!(board.fault_mask(99), 0);
+        board.retire(99, 0xFF); // no-op, no panic
+    }
+
+    #[test]
+    fn model_placement_remaps_tiles_off_a_retired_core() {
+        let board = CoreBoard::new(2);
+        let rr = AtomicUsize::new(0);
+        let t = TileRef { layer: 0, tr: 0, tc: 0 };
+        board.set_residency(0, 7, vec![t]);
+        board.set_residency(1, 7, vec![t]);
+        board.retire(0, 1 << 4);
+        // both cores hold the tile; only the surviving one is ever picked
+        for _ in 0..4 {
+            assert_eq!(place(&board, &rr, Placement::Model { model: 7, tile: Some(t) }).unwrap(), 1);
+        }
     }
 
     #[test]

@@ -357,7 +357,7 @@ impl CimService for RemoteClient {
             return Err(ServeError::Disconnected);
         }
         let weight = job.weight();
-        let is_barrier = matches!(job, Job::Drain | Job::Rollout { .. });
+        let is_barrier = matches!(job, Job::Drain | Job::Rollout { .. } | Job::Faults(_));
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = channel();
         sh.board.add_in_flight(core, weight);
@@ -481,7 +481,13 @@ fn reader_loop(mut stream: TcpStream, sh: Arc<Shared>) {
                                 None => sh.board.clear_residency(h.core),
                             }
                         }
-                        if h.fenced {
+                        if h.retired {
+                            // permanent retirement is terminal: mirror the
+                            // fault mask and fence for good (unfence
+                            // refuses retired cores, so no later frame can
+                            // resurrect it)
+                            sh.board.retire(h.core, h.fault_mask);
+                        } else if h.fenced {
                             sh.board.fence(h.core);
                         } else if sh.drains.get(h.core).is_none_or(|d| d.load(Ordering::SeqCst) == 0)
                         {
@@ -538,6 +544,12 @@ fn reader_loop(mut stream: TcpStream, sh: Arc<Shared>) {
             },
             Ok(Frame::CalStatsPush { stats }) => {
                 *lock_unpoisoned(&sh.pushed_cal) = stats;
+            }
+            Ok(Frame::RetirePush { core, mask }) => {
+                // terminal by construction: retire fences and pins the
+                // fault mask, and the board refuses to unfence a retired
+                // core — placement routes around it from here on
+                sh.board.retire(core as usize, mask);
             }
             // the server must not send anything else after Hello
             Ok(_) => break,

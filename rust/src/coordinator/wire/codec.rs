@@ -40,8 +40,13 @@ pub const WIRE_MAGIC: u16 = 0xAC1E;
 /// control), `Subscribe` + the `FencePush`/`RecalEpochPush`/
 /// `ResidencyPush`/`CalStatsPush` server-initiated frames push control-
 /// plane deltas, and `ServeError::Overloaded` is the typed admission-
-/// control answer.
-pub const WIRE_VERSION: u8 = 4;
+/// control answer;
+/// 5 = degraded-mode serving — the `Faults` job kind injects a hard-
+/// fault plan mid-run, `CoreHealth` carries the permanent-retirement
+/// flag + per-column fault mask, `CoreCalStats` mirrors the retired
+/// flag, and the `RetirePush` server-initiated frame announces a core
+/// leaving service for good.
+pub const WIRE_VERSION: u8 = 5;
 /// Frame body cap: a length prefix beyond this is rejected before any
 /// allocation ([`WireError::Oversized`]).
 pub const MAX_BODY: u32 = 1 << 26;
@@ -63,6 +68,7 @@ const TAG_FENCE_PUSH: u8 = 12;
 const TAG_RECAL_EPOCH_PUSH: u8 = 13;
 const TAG_RESIDENCY_PUSH: u8 = 14;
 const TAG_CALSTATS_PUSH: u8 = 15;
+const TAG_RETIRE_PUSH: u8 = 16;
 
 /// Decode-side failures. `Closed` is the one non-error: a connection that
 /// ends exactly on a frame boundary.
@@ -166,6 +172,11 @@ pub enum Frame {
     /// Server → subscriber: fresh calibrator snapshot (sent when a recal
     /// epoch advances and a calibrator daemon is attached).
     CalStatsPush { stats: Vec<CoreCalStats> },
+    /// Server → subscriber: a core was permanently retired — its fault
+    /// mask names the physical columns whose damage survived
+    /// recalibration. Terminal: a retired core never rejoins, so a
+    /// client can drop it from placement bookkeeping on receipt.
+    RetirePush { core: u32, mask: u32 },
 }
 
 // ---- encoder ------------------------------------------------------------
@@ -392,6 +403,10 @@ fn put_job(e: &mut Enc<'_>, job: &Job) {
             e.u32(*model);
             e.vec_i32(weights);
         }
+        Job::Faults(plan) => {
+            e.u8(5);
+            e.str(plan);
+        }
     }
 }
 
@@ -412,6 +427,7 @@ fn take_job(d: &mut Dec) -> Result<Job, WireError> {
         2 => Ok(Job::Drain),
         3 => Ok(Job::Health),
         4 => Ok(Job::Rollout { model: d.u32()?, weights: d.vec_i32()? }),
+        5 => Ok(Job::Faults(d.str()?)),
         t => Err(WireError::BadPayload(format!("unknown job kind {t}"))),
     }
 }
@@ -524,6 +540,8 @@ fn put_health(e: &mut Enc<'_>, h: &CoreHealth) {
     e.bool(h.recalibrated);
     e.u64(h.recal_epoch);
     put_model_opt(e, h.model);
+    e.bool(h.retired);
+    e.u32(h.fault_mask);
 }
 
 fn take_health(d: &mut Dec) -> Result<CoreHealth, WireError> {
@@ -540,6 +558,8 @@ fn take_health(d: &mut Dec) -> Result<CoreHealth, WireError> {
         recalibrated: d.bool()?,
         recal_epoch: d.u64()?,
         model: take_model_opt(d)?,
+        retired: d.bool()?,
+        fault_mask: d.u32()?,
     })
 }
 
@@ -621,7 +641,7 @@ fn take_stats(d: &mut Dec) -> Result<BatcherStats, WireError> {
 /// Minimum encoded size of one [`CoreCalStats`] (trend and model both
 /// `None`): the element-size bound `CalStatsReply`'s length prefix is
 /// checked against.
-const CALSTATS_MIN_LEN: usize = 51;
+const CALSTATS_MIN_LEN: usize = 52;
 
 fn put_calstats(e: &mut Enc<'_>, s: &CoreCalStats) {
     e.u64(s.samples);
@@ -639,6 +659,7 @@ fn put_calstats(e: &mut Enc<'_>, s: &CoreCalStats) {
     e.u64(s.drain_failures);
     e.bool(s.fenced);
     put_model_opt(e, s.model);
+    e.bool(s.retired);
 }
 
 fn take_calstats(d: &mut Dec) -> Result<CoreCalStats, WireError> {
@@ -658,6 +679,7 @@ fn take_calstats(d: &mut Dec) -> Result<CoreCalStats, WireError> {
         drain_failures: d.u64()?,
         fenced: d.bool()?,
         model: take_model_opt(d)?,
+        retired: d.bool()?,
     })
 }
 
@@ -808,6 +830,11 @@ pub fn encode_frame_into(frame: &Frame, out: &mut Vec<u8>) {
                 }
                 (TAG_CALSTATS_PUSH, 0)
             }
+            Frame::RetirePush { core, mask } => {
+                body.u32(*core);
+                body.u32(*mask);
+                (TAG_RETIRE_PUSH, 0)
+            }
         }
     };
     let body_len = (out.len() - body_at) as u32;
@@ -903,6 +930,7 @@ pub fn decode_body(tag: u8, id: u64, body: &[u8]) -> Result<Frame, WireError> {
             }
             Frame::CalStatsPush { stats }
         }
+        TAG_RETIRE_PUSH => Frame::RetirePush { core: d.u32()?, mask: d.u32()? },
         t => return Err(WireError::UnknownTag(t)),
     };
     d.finish()?;
@@ -1062,6 +1090,16 @@ mod tests {
         });
         roundtrip(Frame::Submit { id: 11, job: Job::Drain, opts: SubmitOpts::least_loaded() });
         roundtrip(Frame::Submit { id: 12, job: Job::Health, opts: SubmitOpts::default() });
+        roundtrip(Frame::Submit {
+            id: 26,
+            job: Job::Faults("core=1,col=3;core=0,at=500,sa=5:0.0".to_string()),
+            opts: SubmitOpts::pinned(1),
+        });
+        roundtrip(Frame::Submit {
+            id: 27,
+            job: Job::Faults(String::new()),
+            opts: SubmitOpts::default(),
+        });
         roundtrip(Frame::Reply {
             id: 13,
             core: 2,
@@ -1072,6 +1110,8 @@ mod tests {
                 recalibrated: false,
                 recal_epoch: 3,
                 model: Some(1),
+                retired: true,
+                fault_mask: 0x0000_0088,
             })),
         });
         roundtrip(Frame::Reply {
@@ -1119,6 +1159,7 @@ mod tests {
                     drain_failures: 0,
                     fenced: false,
                     model: Some(0),
+                    retired: true,
                 },
                 CoreCalStats::default(),
             ],
@@ -1148,6 +1189,8 @@ mod tests {
         });
         roundtrip(Frame::CalStatsPush { stats: vec![CoreCalStats::default()] });
         roundtrip(Frame::CalStatsPush { stats: Vec::new() });
+        roundtrip(Frame::RetirePush { core: 1, mask: 0x8000_0004 });
+        roundtrip(Frame::RetirePush { core: 0, mask: 0 });
     }
 
     /// Incremental parsing (the event-loop read path): `decode_header`

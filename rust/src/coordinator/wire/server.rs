@@ -21,8 +21,9 @@
 //! queueing the job toward a deadline it will miss.
 //!
 //! Control plane: connections that send `Subscribe` get server-initiated
-//! `FencePush`/`RecalEpochPush`/`ResidencyPush`/`CalStatsPush` frames
-//! whenever the board state changes, so remote mirrors no longer depend
+//! `FencePush`/`RecalEpochPush`/`ResidencyPush`/`CalStatsPush`/
+//! `RetirePush` frames whenever the board state changes, so remote
+//! mirrors no longer depend
 //! on lifecycle replies happening to ride past (the staleness class the
 //! epoch fetch-max in `CoreBoard::set_recal_epoch` used to paper over).
 //!
@@ -422,6 +423,12 @@ impl WireServer {
                     if board.is_fenced(core) {
                         c.queue_frame(&Frame::FencePush { core: core as u32, fenced: true });
                     }
+                    if board.is_retired(core) {
+                        c.queue_frame(&Frame::RetirePush {
+                            core: core as u32,
+                            mask: board.fault_mask(core),
+                        });
+                    }
                 }
                 if let Some(cal) = &self.cal {
                     c.queue_frame(&Frame::CalStatsPush { stats: cal.snapshot() });
@@ -470,7 +477,10 @@ impl WireServer {
             }
             // mirror CimService::drain / rollout: the fence lands before
             // the barrier job is queued, so no placed work slips in
-            // behind it
+            // behind it. Job::Faults is deliberately NOT here — fault
+            // injection mirrors CimService::inject_faults, which leaves
+            // the wounded core serving so chaos drills can watch the
+            // health loop catch the damage
             if matches!(job, Job::Drain | Job::Rollout { .. }) {
                 self.svc.board().fence(core);
             }
@@ -658,6 +668,7 @@ struct PushState {
     fenced: Vec<bool>,
     epochs: Vec<u64>,
     residency: Vec<Option<Residency>>,
+    retired: Vec<bool>,
 }
 
 impl PushState {
@@ -667,6 +678,7 @@ impl PushState {
             fenced: (0..board.cores()).map(|k| board.is_fenced(k)).collect(),
             epochs: (0..board.cores()).map(|k| board.recal_epoch(k)).collect(),
             residency: board.residency_snapshot(),
+            retired: (0..board.cores()).map(|k| board.is_retired(k)).collect(),
         }
     }
 
@@ -692,6 +704,15 @@ impl PushState {
                 }
                 epoch_moved = true;
                 out.push(Frame::RecalEpochPush { core: core as u32, epoch });
+            }
+            // retirement is one-way (the board never clears it), so only
+            // the false → true edge can appear
+            let retired = board.is_retired(core);
+            if retired && self.retired.get(core).copied() == Some(false) {
+                if let Some(slot) = self.retired.get_mut(core) {
+                    *slot = true;
+                }
+                out.push(Frame::RetirePush { core: core as u32, mask: board.fault_mask(core) });
             }
         }
         let residency = board.residency_snapshot();

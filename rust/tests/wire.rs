@@ -43,7 +43,7 @@ fn rand_model(rng: &mut Rng) -> Option<u32> {
 }
 
 fn rand_job(rng: &mut Rng) -> Job {
-    match rng.int_in(0, 4) {
+    match rng.int_in(0, 5) {
         0 => Job::Mac(rand_vec_i32(rng, 40)),
         1 => {
             let n = rng.int_in(0, 6);
@@ -64,6 +64,20 @@ fn rand_job(rng: &mut Rng) -> Job {
             model: rng.int_in(0, 9000) as u32,
             weights: rand_vec_i32(rng, 24),
         },
+        4 => Job::Faults(match rng.int_in(0, 2) {
+            // the codec carries the plan as an opaque string — exercise
+            // empty, well-formed, and junk specs alike
+            0 => String::new(),
+            1 => format!(
+                "core={},col={};core={},at={},sa={}:0.0",
+                rng.int_in(0, 7),
+                rng.int_in(0, 31),
+                rng.int_in(0, 7),
+                rng.next_u64() % 100_000,
+                rng.int_in(0, 31),
+            ),
+            _ => format!("not a plan at all #{} — ünïcode", rng.int_in(0, 999)),
+        }),
         _ => Job::Health,
     }
 }
@@ -133,6 +147,8 @@ fn rand_reply(rng: &mut Rng) -> JobReply {
             recalibrated: rng.int_in(0, 1) == 1,
             recal_epoch: rng.next_u64(),
             model: rand_model(rng),
+            retired: rng.int_in(0, 1) == 1,
+            fault_mask: rng.next_u64() as u32,
         }),
     }
 }
@@ -158,6 +174,7 @@ fn rand_calstats(rng: &mut Rng) -> CoreCalStats {
         drain_failures: rng.next_u64(),
         fenced: rng.int_in(0, 1) == 1,
         model: rand_model(rng),
+        retired: rng.int_in(0, 1) == 1,
     }
 }
 
@@ -211,7 +228,7 @@ fn rand_residency(rng: &mut Rng) -> Option<(u32, Vec<TileRef>)> {
 }
 
 fn rand_frame(rng: &mut Rng) -> Frame {
-    match rng.int_in(0, 14) {
+    match rng.int_in(0, 15) {
         0 => rand_hello(rng),
         1 => Frame::Submit { id: rng.next_u64(), job: rand_job(rng), opts: rand_opts(rng) },
         2 => {
@@ -254,6 +271,11 @@ fn rand_frame(rng: &mut Rng) -> Frame {
         13 => Frame::ResidencyPush {
             core: rng.int_in(0, 64) as u32,
             residency: rand_residency(rng),
+        },
+        // wire v5: permanent retirement
+        14 => Frame::RetirePush {
+            core: rng.int_in(0, 64) as u32,
+            mask: rng.next_u64() as u32,
         },
         _ => Frame::CalStatsPush {
             stats: (0..rng.int_in(0, 8)).map(|_| rand_calstats(rng)).collect(),
@@ -384,6 +406,52 @@ fn trailing_bytes_after_the_body_are_rejected() {
     bad[12..16].copy_from_slice(&1u32.to_le_bytes());
     let mut slice: &[u8] = &bad;
     assert!(matches!(read_frame(&mut slice), Err(WireError::BadPayload(_))));
+}
+
+#[test]
+fn hostile_interior_fault_and_retirement_bytes_are_typed_errors() {
+    // wire v5 adversarial decodes: every new byte position must fail as a
+    // typed WireError, never a panic or a silent mis-decode.
+
+    // a Faults plan whose string bytes are not UTF-8
+    let mut bad = encode_frame(&Frame::Submit {
+        id: 5,
+        job: Job::Faults("core=0,col=1".to_string()),
+        opts: SubmitOpts::default(),
+    });
+    let n = bad.len();
+    bad[n - 1] = 0xFF; // 0xFF is invalid in any UTF-8 position
+    let mut slice: &[u8] = &bad;
+    assert!(matches!(read_frame(&mut slice), Err(WireError::BadPayload(_))));
+
+    // a Health reply whose retired flag is neither 0 nor 1
+    let mut bad = encode_frame(&Frame::Reply {
+        id: 6,
+        core: 0,
+        result: Ok(JobReply::Health(CoreHealth {
+            core: 0,
+            residual: None,
+            fenced: true,
+            recalibrated: false,
+            recal_epoch: 3,
+            model: None,
+            retired: true,
+            fault_mask: 0x0000_0088,
+        })),
+    });
+    let n = bad.len();
+    // the retired bool sits immediately before the trailing 4-byte fault mask
+    bad[n - 5] = 7;
+    let mut slice: &[u8] = &bad;
+    assert!(matches!(read_frame(&mut slice), Err(WireError::BadPayload(_))));
+
+    // a RetirePush cut short inside its fault mask
+    let full = encode_frame(&Frame::RetirePush { core: 1, mask: 0xDEAD_BEEF });
+    let body_len = (full.len() - HEADER_LEN - 2) as u32;
+    let mut bad = full[..full.len() - 2].to_vec();
+    bad[12..16].copy_from_slice(&body_len.to_le_bytes());
+    let mut slice: &[u8] = &bad;
+    assert_eq!(read_frame(&mut slice), Err(WireError::Truncated));
 }
 
 // ---- loopback integration ------------------------------------------------
